@@ -1,0 +1,44 @@
+//! Capacity planner: given a row power budget and a workload mix, report
+//! how many servers each policy can safely deploy — the operator-facing
+//! use of POLCA's result (more servers per datacenter, fewer datacenters).
+//!
+//! Run with: cargo run --release --example capacity_planner [budget_servers]
+
+use polca::policy::engine::PolicyKind;
+use polca::simulation::{run_with_impact, SimConfig};
+
+fn deployable(kind: PolicyKind, baseline: usize, weeks: f64) -> (usize, f64) {
+    // March the deployment up until SLOs (incl. zero brakes) break.
+    let mut best = baseline;
+    for added_pct in [0, 5, 10, 15, 20, 25, 30, 35, 40] {
+        let deployed = baseline + baseline * added_pct / 100;
+        let mut cfg = SimConfig::default();
+        cfg.weeks = weeks;
+        cfg.policy_kind = kind;
+        cfg.exp.row.num_servers = baseline;
+        cfg.deployed_servers = deployed;
+        cfg.exp.seed = 11;
+        let (_, impact) = run_with_impact(&cfg);
+        if impact.meets_slo(&cfg.exp.slo) {
+            best = deployed;
+        } else {
+            break;
+        }
+    }
+    (best, best as f64 / baseline as f64 - 1.0)
+}
+
+fn main() {
+    let baseline: usize = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(40);
+    let weeks = 0.3;
+    println!("# capacity planning for a {baseline}-server power budget (Table-4 mix, BLOOM-176B)");
+    println!("{:<18} {:>10} {:>12}", "policy", "deployable", "extra");
+    for kind in PolicyKind::all() {
+        let (n, extra) = deployable(kind, baseline, weeks);
+        println!("{:<18} {:>10} {:>11.1}%", kind.name(), n, extra * 100.0);
+    }
+    println!(
+        "\nevery +10% deployable servers ≈ one datacenter avoided per ten \
+         (paper §1: cost + carbon + time-to-capacity)"
+    );
+}

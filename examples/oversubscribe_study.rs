@@ -1,0 +1,55 @@
+//! Fig-13-style oversubscription study on a fresh synthetic trace:
+//! sweep added-server levels under POLCA and find where SLOs break,
+//! then compare the T1-T2 combinations the paper examines.
+//!
+//! Run with: cargo run --release --example oversubscribe_study [weeks]
+
+use polca::policy::tuner::{evaluate_point, tune_thresholds};
+use polca::simulation::SimConfig;
+
+fn main() {
+    let weeks: f64 = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(0.5);
+    let mut base = SimConfig::default();
+    base.weeks = weeks;
+    base.exp.seed = 2026;
+
+    println!("# oversubscription frontier (POLCA, T1=80 T2=89, {weeks} weeks)");
+    println!("{:<8} {:>8} {:>8} {:>8} {:>8} {:>7}  SLO", "added", "HP p99", "LP p50", "LP p99", "LP thr", "brakes");
+    for added in [0.0, 0.10, 0.20, 0.30, 0.40, 0.50] {
+        let p = evaluate_point(&base, 0.80, 0.89, added, &base.exp.slo);
+        println!(
+            "{:<8} {:>7.2}% {:>7.2}% {:>7.2}% {:>8} {:>7}  {}",
+            format!("+{:.0}%", added * 100.0),
+            p.hp_p99 * 100.0,
+            p.lp_p50 * 100.0,
+            p.lp_p99 * 100.0,
+            "-",
+            p.brakes,
+            if p.meets_slo { "ok" } else { "VIOLATED" }
+        );
+    }
+
+    println!("\n# threshold combinations (paper Fig 13)");
+    let combos = [(0.75, 0.85), (0.80, 0.89), (0.85, 0.95)];
+    let outcome = tune_thresholds(&base, &combos, &[0.25, 0.30, 0.35], &base.exp.slo);
+    for p in &outcome.points {
+        println!(
+            "T1-T2 {:.0}-{:.0} +{:>4.1}% | LP p99 {:>6.2}% | brakes {} | {}",
+            p.t1 * 100.0,
+            p.t2 * 100.0,
+            p.added_frac * 100.0,
+            p.lp_p99 * 100.0,
+            p.brakes,
+            if p.meets_slo { "ok" } else { "VIOLATED" }
+        );
+    }
+    if let Some((t1, t2, added)) = outcome.best {
+        println!(
+            "\nbest: T1={:.0}% T2={:.0}% supports +{:.0}% servers within SLOs \
+             (paper: 80-89 at +30%)",
+            t1 * 100.0,
+            t2 * 100.0,
+            added * 100.0
+        );
+    }
+}

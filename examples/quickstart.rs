@@ -1,0 +1,85 @@
+//! Quickstart: the 60-second tour of the POLCA reproduction.
+//!
+//! 1. Load the AOT-compiled GPT artifacts and generate a few tokens from
+//!    Rust (no Python on this path).
+//! 2. Show the two-phase power structure the paper characterizes
+//!    (prompt spike vs token plateau) for BLOOM-176B.
+//! 3. Run a one-day cluster simulation with POLCA at +30% servers.
+//!
+//! Run with: cargo run --release --example quickstart
+
+use polca::characterize::catalog::find;
+use polca::cluster::hierarchy::Priority;
+use polca::coordinator::{Coordinator, Request};
+use polca::policy::engine::PolicyKind;
+use polca::runtime::Engine;
+use polca::simulation::{run_with_impact, SimConfig};
+use std::path::PathBuf;
+
+fn main() -> anyhow::Result<()> {
+    // --- 1. real compute through the PJRT runtime ------------------------
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.json").exists() {
+        println!("## 1. serving a real (small) GPT from Rust via PJRT");
+        let engine = Engine::load(&dir)?;
+        println!(
+            "   model: {} params, {} layers, d={}, {} KV slots, prompt buckets {:?}",
+            engine.manifest.model.num_params,
+            engine.manifest.model.n_layers,
+            engine.manifest.model.d_model,
+            engine.manifest.model.batch_slots,
+            engine.buckets(),
+        );
+        let mut coord = Coordinator::new(engine)?;
+        coord.submit(Request {
+            id: 0,
+            prompt: vec![11, 42, 7, 100, 3],
+            max_new_tokens: 8,
+            priority: Priority::High,
+        });
+        let done = coord.run_to_completion()?;
+        println!(
+            "   generated: {:?} (prefill {:.1} ms, decode {:.1} ms)",
+            &done[0].tokens[5..],
+            done[0].prefill_s * 1e3,
+            done[0].decode_s * 1e3
+        );
+    } else {
+        println!("## 1. [skipped] run `make artifacts` to enable the serving demo");
+    }
+
+    // --- 2. the phase asymmetry (paper Fig 4) ----------------------------
+    println!("\n## 2. BLOOM-176B power phases (paper §2.3)");
+    let bloom = find("BLOOM-176B").unwrap();
+    let prompt_peak = bloom.power.prompt_peak_frac(2048.0);
+    let token_mean = bloom.power.token_mean_frac(1.0);
+    println!(
+        "   prompt spike: {:.0}% of GPU TDP for {:.2}s | token phase: {:.0}% for {:.1}s",
+        prompt_peak * 100.0,
+        bloom.prompt_time_s(2048.0, 1.0),
+        token_mean * 100.0,
+        bloom.token_time_s(256.0, 1.0),
+    );
+    println!("   -> spikes are short and uncorrelated across servers: rows have headroom");
+
+    // --- 3. POLCA at +30% servers ----------------------------------------
+    println!("\n## 3. one simulated day: POLCA at +30% servers on a 40-server budget");
+    let mut cfg = SimConfig::default();
+    cfg.weeks = 1.0 / 7.0;
+    cfg.policy_kind = PolicyKind::Polca;
+    cfg.deployed_servers = 52;
+    cfg.exp.seed = 7;
+    let (mut report, impact) = run_with_impact(&cfg);
+    println!("   {}", report.summary());
+    println!(
+        "   impact vs uncapped: HP p99 {:.2}%, LP p99 {:.2}%, brakes {}",
+        impact.hp_p99 * 100.0,
+        impact.lp_p99 * 100.0,
+        impact.brake_events
+    );
+    println!(
+        "   SLO (Table 5): {}",
+        if impact.meets_slo(&cfg.exp.slo) { "OK" } else { "VIOLATED" }
+    );
+    Ok(())
+}

@@ -1,0 +1,248 @@
+"""AOT compile path: lower the L2 model (with L1 Pallas kernels) to HLO text.
+
+Run once at build time (``make artifacts``); the Rust runtime loads the
+emitted ``artifacts/*.hlo.txt`` via the `xla` crate's HLO text parser and
+executes them on the PJRT CPU client. Python is never on the request path.
+
+Why HLO *text* and not ``lowered.compile()`` / serialized protos: jax >= 0.5
+emits HloModuleProto with 64-bit instruction ids which xla_extension 0.5.1
+(the version the published `xla` 0.1.6 crate binds) rejects
+(``proto.id() <= INT_MAX``). The text parser reassigns ids, so text
+round-trips cleanly. See /opt/xla-example/README.md.
+
+Emitted bundle (consumed by rust/src/runtime/artifacts.rs):
+  artifacts/
+    manifest.json        — model config, parameter table, artifact arg specs,
+                           analytic FLOPs, L1 kernel VMEM/MXU report
+    weights.bin          — all parameters, f32 little-endian, canonical order
+    prefill_s{S}.hlo.txt — one prefill executable per sequence bucket
+    decode.hlo.txt       — batched single-token decode executable
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from compile import model as model_lib
+from compile.kernels import attention as attn_kernel
+from compile.kernels import decode as decode_kernel
+
+# Prompt-length buckets compiled AOT. The coordinator pads each prompt up to
+# the smallest bucket that fits (static shapes: one PJRT executable per
+# bucket, mirroring production serving systems' shape bucketing).
+PREFILL_BUCKETS = (16, 64)
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (the interchange format)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def build_manifest(config: model_lib.ModelConfig, artifacts, params_table) -> dict:
+    kv = config.kv_shape()
+    return {
+        "format_version": 1,
+        "model": {
+            "vocab": config.vocab,
+            "d_model": config.d_model,
+            "n_heads": config.n_heads,
+            "n_layers": config.n_layers,
+            "d_ff": config.d_ff,
+            "max_seq": config.max_seq,
+            "batch_slots": config.batch_slots,
+            "d_head": config.d_head,
+            "num_params": int(sum(p["elems"] for p in params_table)),
+        },
+        "kv_shape": list(kv),
+        "weights_file": "weights.bin",
+        "params": params_table,
+        "artifacts": artifacts,
+        "flops": {
+            **{f"prefill_s{s}": config.prefill_flops(s) for s in PREFILL_BUCKETS},
+            "decode_per_step": config.decode_flops(config.batch_slots, config.max_seq),
+        },
+        "kernel_report": [
+            attn_kernel.vmem_report(config.max_seq, config.d_head,
+                                    config.block_q, config.block_k),
+            decode_kernel.vmem_report(config.max_seq, config.d_head),
+        ],
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--report", action="store_true",
+                    help="print the L1 kernel VMEM/MXU report and exit")
+    args = ap.parse_args()
+
+    config = model_lib.ModelConfig()
+    if args.report:
+        print(json.dumps(build_manifest(config, [], [])["kernel_report"], indent=2))
+        return
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    params = model_lib.init_params(config, seed=args.seed)
+    specs = config.param_specs()
+
+    # --- weights.bin + parameter table -----------------------------------
+    params_table = []
+    offset = 0
+    with open(os.path.join(args.out_dir, "weights.bin"), "wb") as f:
+        for (name, shape), value in zip(specs, params):
+            raw = np.asarray(value, dtype="<f4").tobytes()
+            f.write(raw)
+            params_table.append({
+                "name": name,
+                "shape": list(shape),
+                "elems": int(np.prod(shape)),
+                "byte_offset": offset,
+                "byte_len": len(raw),
+            })
+            offset += len(raw)
+
+    kv = config.kv_shape()
+    param_specs = [_spec(shape) for _, shape in specs]
+    artifacts = []
+
+    # KV-cache arguments are donated: XLA emits input_output_alias so the
+    # multi-MB cache is updated in place instead of copied through every
+    # dynamic-update-slice — measured ~30% off the decode step
+    # (EXPERIMENTS.md §Perf). The aliasing survives the HLO-text path.
+    n_params = len(specs)
+    donate = (n_params, n_params + 1)
+
+    # --- prefill, one bucket per compiled shape ---------------------------
+    for seq in PREFILL_BUCKETS:
+        fn = model_lib.make_prefill_fn(config, seq)
+        lowered = jax.jit(fn, donate_argnums=donate).lower(
+            *param_specs,
+            _spec(kv), _spec(kv),
+            _spec((seq,), jnp.int32),   # tokens (padded)
+            _spec((), jnp.int32),       # length
+            _spec((), jnp.int32),       # slot
+        )
+        name = f"prefill_s{seq}"
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        text = to_hlo_text(lowered)
+        with open(path, "w") as f:
+            f.write(text)
+        artifacts.append({
+            "name": name,
+            "file": f"{name}.hlo.txt",
+            "kind": "prefill",
+            "seq": seq,
+            "extra_args": [
+                {"role": "kv_k", "shape": list(kv), "dtype": "f32"},
+                {"role": "kv_v", "shape": list(kv), "dtype": "f32"},
+                {"role": "tokens", "shape": [seq], "dtype": "i32"},
+                {"role": "length", "shape": [], "dtype": "i32"},
+                {"role": "slot", "shape": [], "dtype": "i32"},
+            ],
+            "outputs": [
+                {"role": "logits", "shape": [config.vocab], "dtype": "f32"},
+                {"role": "kv_k", "shape": list(kv), "dtype": "f32"},
+                {"role": "kv_v", "shape": list(kv), "dtype": "f32"},
+            ],
+        })
+        print(f"wrote {path} ({len(text)} chars)", file=sys.stderr)
+
+    # --- decode ------------------------------------------------------------
+    fn = model_lib.make_decode_fn(config)
+    lowered = jax.jit(fn, donate_argnums=donate).lower(
+        *param_specs,
+        _spec(kv), _spec(kv),
+        _spec((config.batch_slots,), jnp.int32),  # tokens
+        _spec((config.batch_slots,), jnp.int32),  # pos
+    )
+    path = os.path.join(args.out_dir, "decode.hlo.txt")
+    text = to_hlo_text(lowered)
+    with open(path, "w") as f:
+        f.write(text)
+    artifacts.append({
+        "name": "decode",
+        "file": "decode.hlo.txt",
+        "kind": "decode",
+        "seq": 1,
+        "extra_args": [
+            {"role": "kv_k", "shape": list(kv), "dtype": "f32"},
+            {"role": "kv_v", "shape": list(kv), "dtype": "f32"},
+            {"role": "tokens", "shape": [config.batch_slots], "dtype": "i32"},
+            {"role": "pos", "shape": [config.batch_slots], "dtype": "i32"},
+        ],
+        "outputs": [
+            {"role": "logits", "shape": [config.batch_slots, config.vocab], "dtype": "f32"},
+            {"role": "kv_k", "shape": list(kv), "dtype": "f32"},
+            {"role": "kv_v", "shape": list(kv), "dtype": "f32"},
+        ],
+    })
+    print(f"wrote {path} ({len(text)} chars)", file=sys.stderr)
+
+    manifest = build_manifest(config, artifacts, params_table)
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {args.out_dir}/manifest.json "
+          f"({manifest['model']['num_params']} params)", file=sys.stderr)
+
+    # --- golden outputs: the Rust runtime asserts bit-compatible numerics
+    # (within float tolerance) for one prefill + one decode step.
+    golden = make_golden(config, params)
+    with open(os.path.join(args.out_dir, "golden.json"), "w") as f:
+        json.dump(golden, f, indent=2)
+    print(f"wrote {args.out_dir}/golden.json", file=sys.stderr)
+
+
+def make_golden(config: model_lib.ModelConfig, params) -> dict:
+    """Reference I/O pair for the Rust runtime round-trip test."""
+    seq = PREFILL_BUCKETS[0]
+    kv = config.kv_shape()
+    rng = np.random.RandomState(1234)
+    length = 10
+    tokens = np.zeros(seq, dtype=np.int32)
+    tokens[:length] = rng.randint(0, config.vocab, size=length)
+    kv_k = jnp.zeros(kv, jnp.float32)
+    kv_v = jnp.zeros(kv, jnp.float32)
+    slot = 1
+    logits, kv_k, kv_v = model_lib.prefill(
+        config, params, kv_k, kv_v, jnp.asarray(tokens),
+        jnp.int32(length), jnp.int32(slot))
+    next_tok = int(jnp.argmax(logits))
+    d_tokens = np.zeros(config.batch_slots, dtype=np.int32)
+    d_pos = np.zeros(config.batch_slots, dtype=np.int32)
+    d_tokens[slot] = next_tok
+    d_pos[slot] = length
+    d_logits, _, _ = model_lib.decode_step(
+        config, params, kv_k, kv_v, jnp.asarray(d_tokens), jnp.asarray(d_pos))
+    return {
+        "prefill_bucket": seq,
+        "tokens": tokens.tolist(),
+        "length": length,
+        "slot": slot,
+        "prefill_logits_head": np.asarray(logits[:8]).astype(float).tolist(),
+        "prefill_argmax": next_tok,
+        "decode_tokens": d_tokens.tolist(),
+        "decode_pos": d_pos.tolist(),
+        "decode_logits_head": np.asarray(d_logits[slot, :8]).astype(float).tolist(),
+        "decode_argmax": int(jnp.argmax(d_logits[slot])),
+    }
+
+
+if __name__ == "__main__":
+    main()

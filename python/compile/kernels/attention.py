@@ -1,0 +1,138 @@
+"""L1 Pallas kernel: blocked flash-attention for the *prefill* (prompt) phase.
+
+This is the prompt-phase hot-spot the paper characterizes (POLCA §2.3): all
+prompt tokens are processed in parallel, producing a large, MXU-saturating
+matmul burst — the source of the >TDP power spikes in Fig. 4.
+
+TPU adaptation of the classic CUDA flash-attention schedule (DESIGN.md
+§Hardware-Adaptation):
+  * the CUDA threadblock/SMEM tiling becomes a BlockSpec HBM->VMEM schedule:
+    the grid iterates (head, q_block); each program holds one [BQ, DH] query
+    tile plus streamed [BK, DH] key/value tiles in VMEM,
+  * the tensor-core WMMA inner product becomes an MXU matmul (`q @ k.T`),
+  * softmax is computed online (running max / normalizer) so no [S, S]
+    score matrix ever materializes — VMEM footprint is O(BQ*DH + BK*DH).
+
+Kernels are lowered with ``interpret=True``: on the CPU PJRT plugin this
+becomes plain HLO (loops + dots) that the Rust runtime can execute; a real
+TPU build would emit a Mosaic custom-call instead. Numerics are validated
+against ``ref.py`` by pytest/hypothesis.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default tile sizes. On a real TPU these would be multiples of the MXU/VPU
+# native tile (128 lanes); in interpret mode any divisor works and tests
+# sweep several. VMEM estimate for the defaults (f32, DH=32):
+#   q tile 16*32*4 = 2 KiB, k/v tiles 2*16*32*4 = 4 KiB, acc 2 KiB -> ~8 KiB
+# far below the ~16 MiB VMEM budget; larger models scale BQ/BK up.
+DEFAULT_BLOCK_Q = 16
+DEFAULT_BLOCK_K = 16
+
+_NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, *, block_k: int, scale: float):
+    """One (head, q_block) grid step of causal flash attention.
+
+    q_ref: [BQ, DH] VMEM tile of queries (head dim already selected).
+    k_ref, v_ref: [S, DH] for the current head; streamed in [BK, DH] tiles.
+    o_ref: [BQ, DH] output tile.
+    """
+    q = q_ref[...].astype(jnp.float32) * scale
+    seq_len = k_ref.shape[0]
+    block_q, head_dim = q.shape
+    iq = pl.program_id(1)
+    # Global positions of the query rows in this tile (column vector).
+    q_pos = iq * block_q + jax.lax.broadcasted_iota(jnp.int32, (block_q, 1), 0)
+
+    m0 = jnp.full((block_q, 1), _NEG_INF, jnp.float32)
+    l0 = jnp.zeros((block_q, 1), jnp.float32)
+    acc0 = jnp.zeros((block_q, head_dim), jnp.float32)
+
+    def body(i, carry):
+        m, l, acc = carry
+        k = k_ref[pl.dslice(i * block_k, block_k), :].astype(jnp.float32)
+        v = v_ref[pl.dslice(i * block_k, block_k), :].astype(jnp.float32)
+        s = q @ k.T  # [BQ, BK] — MXU matmul
+        k_pos = i * block_k + jax.lax.broadcasted_iota(jnp.int32, (1, block_k), 1)
+        s = jnp.where(q_pos >= k_pos, s, _NEG_INF)  # causal mask
+        m_new = jnp.maximum(m, s.max(axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m - m_new)
+        l_new = l * alpha + p.sum(axis=-1, keepdims=True)
+        acc_new = acc * alpha + p @ v
+        return m_new, l_new, acc_new
+
+    # Causality: the query tile iq only needs KV tiles up to its own end.
+    num_k_blocks = (iq + 1) * block_q // block_k
+    m, l, acc = jax.lax.fori_loop(0, num_k_blocks, body, (m0, l0, acc0))
+    o_ref[...] = (acc / l).astype(o_ref.dtype)
+
+
+def flash_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    block_q: int = DEFAULT_BLOCK_Q,
+    block_k: int = DEFAULT_BLOCK_K,
+    interpret: bool = True,
+) -> jax.Array:
+    """Causal multi-head flash attention over [H, S, DH] arrays.
+
+    Requires S % block_q == 0, S % block_k == 0 and block_q % block_k == 0
+    (the causal KV-tile skip assumes query tiles cover whole KV tiles).
+    """
+    num_heads, seq_len, head_dim = q.shape
+    if seq_len % block_q or seq_len % block_k:
+        raise ValueError(f"seq_len {seq_len} not divisible by blocks ({block_q},{block_k})")
+    if block_q % block_k:
+        raise ValueError(f"block_q {block_q} must be a multiple of block_k {block_k}")
+    scale = 1.0 / math.sqrt(head_dim)
+    kernel = functools.partial(_flash_kernel, block_k=block_k, scale=scale)
+    return pl.pallas_call(
+        kernel,
+        grid=(num_heads, seq_len // block_q),
+        in_specs=[
+            pl.BlockSpec((None, block_q, head_dim), lambda h, iq: (h, iq, 0)),
+            pl.BlockSpec((None, seq_len, head_dim), lambda h, iq: (h, 0, 0)),
+            pl.BlockSpec((None, seq_len, head_dim), lambda h, iq: (h, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, block_q, head_dim), lambda h, iq: (h, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((num_heads, seq_len, head_dim), q.dtype),
+        interpret=interpret,
+    )(q, k, v)
+
+
+def vmem_report(seq_len: int, head_dim: int, block_q: int = DEFAULT_BLOCK_Q,
+                block_k: int = DEFAULT_BLOCK_K, itemsize: int = 4) -> dict:
+    """Static VMEM-footprint / MXU-work estimate for the prefill kernel.
+
+    interpret=True gives no hardware counters, so the §Perf story for L1 is
+    structural: bytes resident per grid step and MXU MAC count per step.
+    """
+    q_tile = block_q * head_dim * itemsize
+    kv_tiles = 2 * block_k * head_dim * itemsize
+    acc = block_q * head_dim * 4 + 2 * block_q * 4  # f32 accumulators + m/l
+    scores = block_q * block_k * 4
+    vmem_bytes = q_tile + kv_tiles + acc + scores
+    # MACs per grid step: s = q@k.T and acc += p@v over all visited KV tiles.
+    kv_steps = seq_len // block_k
+    macs = 2 * block_q * block_k * head_dim * kv_steps
+    return {
+        "kernel": "flash_prefill",
+        "block_q": block_q,
+        "block_k": block_k,
+        "vmem_bytes_per_step": vmem_bytes,
+        "vmem_budget_fraction": vmem_bytes / (16 * 1024 * 1024),
+        "macs_per_grid_step": macs,
+        "arithmetic_intensity": macs / max(1, vmem_bytes),
+    }

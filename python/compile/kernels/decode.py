@@ -1,0 +1,96 @@
+"""L1 Pallas kernel: single-token KV-cache attention for the *decode* phase.
+
+This is the token-sampling hot-spot (POLCA §2.3): one query vector per
+sequence attends to the cached keys/values. The shape is a batched
+matvec — memory-bandwidth-bound, low MXU occupancy — which is exactly why
+the paper's token phase draws stable, *low* power and why frequency caps
+barely hurt it (Fig. 5/7 mechanism; see DESIGN.md §Hardware-Adaptation).
+
+The grid iterates (batch, head); each program streams the [S_max, DH] cache
+rows for one (b, h) through VMEM and masks positions beyond the sequence's
+current length.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+_NEG_INF = -1e30
+
+
+def _decode_kernel(q_ref, k_ref, v_ref, pos_ref, o_ref, *, scale: float):
+    """One (batch, head) grid step.
+
+    q_ref: [DH] query for this (b, h).
+    k_ref, v_ref: [S_max, DH] cache rows for this (b, h).
+    pos_ref: [1] int32 — index of the current token; attend to [0, pos].
+    o_ref: [DH] output.
+    """
+    q = q_ref[...].astype(jnp.float32) * scale
+    k = k_ref[...].astype(jnp.float32)
+    v = v_ref[...].astype(jnp.float32)
+    pos = pos_ref[0]
+    s_max = k.shape[0]
+    scores = k @ q  # [S_max] — matvec: memory-bound, the token-phase shape
+    idx = jax.lax.broadcasted_iota(jnp.int32, (s_max,), 0)
+    scores = jnp.where(idx <= pos, scores, _NEG_INF)
+    m = scores.max()
+    p = jnp.exp(scores - m)
+    l = p.sum()
+    o_ref[...] = ((p @ v) / l).astype(o_ref.dtype)
+
+
+def decode_attention(
+    q: jax.Array,
+    k_cache: jax.Array,
+    v_cache: jax.Array,
+    pos: jax.Array,
+    *,
+    interpret: bool = True,
+) -> jax.Array:
+    """Batched single-token attention.
+
+    q:        [B, H, DH]   query for the token currently being generated.
+    k_cache:  [B, H, S_max, DH] keys, valid at positions <= pos[b].
+    v_cache:  [B, H, S_max, DH] values.
+    pos:      [B] int32 — current token index per sequence (its KV must
+              already be written at this index).
+    returns:  [B, H, DH] attention output.
+    """
+    batch, num_heads, s_max, head_dim = k_cache.shape
+    scale = 1.0 / math.sqrt(head_dim)
+    kernel = functools.partial(_decode_kernel, scale=scale)
+    return pl.pallas_call(
+        kernel,
+        grid=(batch, num_heads),
+        in_specs=[
+            pl.BlockSpec((None, None, head_dim), lambda b, h: (b, h, 0)),
+            pl.BlockSpec((None, None, s_max, head_dim), lambda b, h: (b, h, 0, 0)),
+            pl.BlockSpec((None, None, s_max, head_dim), lambda b, h: (b, h, 0, 0)),
+            pl.BlockSpec((1,), lambda b, h: (b,)),
+        ],
+        out_specs=pl.BlockSpec((None, None, head_dim), lambda b, h: (b, h, 0)),
+        out_shape=jax.ShapeDtypeStruct((batch, num_heads, head_dim), q.dtype),
+        interpret=interpret,
+    )(q, k_cache, v_cache, pos)
+
+
+def vmem_report(s_max: int, head_dim: int, itemsize: int = 4) -> dict:
+    """Static VMEM/bandwidth estimate for the decode kernel (see §Perf)."""
+    kv_bytes = 2 * s_max * head_dim * itemsize
+    q_bytes = head_dim * itemsize
+    macs = 2 * s_max * head_dim  # k@q + p@v
+    return {
+        "kernel": "decode_step",
+        "vmem_bytes_per_step": kv_bytes + q_bytes + s_max * 4,
+        "bytes_moved_per_step": kv_bytes,
+        "macs_per_grid_step": macs,
+        # ~1 MAC per 4 bytes moved: firmly bandwidth-bound (vs prefill's
+        # O(block) reuse) — the structural root of the paper's low token power.
+        "arithmetic_intensity": macs / max(1, kv_bytes),
+    }

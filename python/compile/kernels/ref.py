@@ -1,0 +1,53 @@
+"""Pure-jnp oracles for the Pallas kernels and the transformer blocks.
+
+These are the CORE correctness signal: pytest asserts the Pallas kernels
+(attention.py, decode.py) match these references to tight tolerances across
+hypothesis-driven shape sweeps, and that the full model built on the kernels
+matches the model built on these references.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def causal_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array) -> jax.Array:
+    """Reference causal multi-head attention over [H, S, DH]."""
+    _, seq_len, head_dim = q.shape
+    scale = 1.0 / math.sqrt(head_dim)
+    scores = jnp.einsum("hqd,hkd->hqk", q.astype(jnp.float32), k.astype(jnp.float32)) * scale
+    mask = jnp.tril(jnp.ones((seq_len, seq_len), bool))
+    scores = jnp.where(mask[None, :, :], scores, -jnp.inf)
+    probs = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("hqk,hkd->hqd", probs, v.astype(jnp.float32)).astype(q.dtype)
+
+
+def decode_attention_ref(
+    q: jax.Array, k_cache: jax.Array, v_cache: jax.Array, pos: jax.Array
+) -> jax.Array:
+    """Reference batched single-token attention over the KV cache.
+
+    q [B,H,DH], caches [B,H,S,DH], pos [B]; attends to positions <= pos[b].
+    """
+    _, _, s_max, head_dim = k_cache.shape
+    scale = 1.0 / math.sqrt(head_dim)
+    scores = jnp.einsum(
+        "bhd,bhsd->bhs", q.astype(jnp.float32), k_cache.astype(jnp.float32)
+    ) * scale
+    idx = jnp.arange(s_max)[None, None, :]
+    scores = jnp.where(idx <= pos[:, None, None], scores, -jnp.inf)
+    probs = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bhs,bhsd->bhd", probs, v_cache.astype(jnp.float32)).astype(q.dtype)
+
+
+def layer_norm_ref(x: jax.Array, scale: jax.Array, bias: jax.Array, eps: float = 1e-5):
+    mean = x.mean(axis=-1, keepdims=True)
+    var = ((x - mean) ** 2).mean(axis=-1, keepdims=True)
+    return (x - mean) / jnp.sqrt(var + eps) * scale + bias
+
+
+def mlp_ref(x: jax.Array, w1: jax.Array, b1: jax.Array, w2: jax.Array, b2: jax.Array):
+    return jax.nn.gelu(x @ w1 + b1) @ w2 + b2

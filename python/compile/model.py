@@ -1,0 +1,240 @@
+"""L2: GPT-style transformer (prefill + decode) built on the Pallas kernels.
+
+This is the *workload* layer of the POLCA reproduction: a decoder-only
+transformer with the two execution phases the paper characterizes —
+
+  * ``prefill``      — parallel prompt processing (compute-bound, the power
+                       spike in Fig. 4), implemented on the flash-attention
+                       Pallas kernel,
+  * ``decode_step``  — autoregressive token sampling against a static-shaped
+                       KV cache (memory-bound, the stable low-power phase),
+                       implemented on the decode Pallas kernel.
+
+Both functions are pure and static-shaped so ``aot.py`` can lower each to a
+single HLO-text artifact that the Rust coordinator loads once and executes
+for every request (Python never on the request path).
+
+KV-cache protocol (shared with rust/src/coordinator/kv.rs):
+  caches are [L, B, H, S_max, DH]; a request owns one batch *slot*.
+  prefill writes positions [0, S) of its slot and returns logits for the
+  last valid prompt token (``length - 1``); decode writes position
+  ``pos[b]`` and attends to [0, pos[b]]. Positions beyond the valid range
+  may contain stale data but are provably never attended (causal mask in
+  prefill, pos mask in decode).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Callable, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import attention as attn_kernel
+from compile.kernels import decode as decode_kernel
+from compile.kernels import ref as ref_kernel
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Static model hyper-parameters (baked into each AOT artifact)."""
+
+    vocab: int = 512
+    d_model: int = 128
+    n_heads: int = 4
+    n_layers: int = 4
+    d_ff: int = 512
+    max_seq: int = 160
+    batch_slots: int = 4  # decode batch width B (one KV slot per request)
+    block_q: int = 16
+    block_k: int = 16
+
+    @property
+    def d_head(self) -> int:
+        return self.d_model // self.n_heads
+
+    def param_specs(self) -> List[Tuple[str, Tuple[int, ...]]]:
+        """Canonical (name, shape) list — the wire order for artifacts."""
+        d, f, v, s = self.d_model, self.d_ff, self.vocab, self.max_seq
+        specs: List[Tuple[str, Tuple[int, ...]]] = [
+            ("tok_emb", (v, d)),
+            ("pos_emb", (s, d)),
+        ]
+        for l in range(self.n_layers):
+            specs += [
+                (f"l{l}.ln1_s", (d,)), (f"l{l}.ln1_b", (d,)),
+                (f"l{l}.wq", (d, d)), (f"l{l}.wk", (d, d)),
+                (f"l{l}.wv", (d, d)), (f"l{l}.wo", (d, d)),
+                (f"l{l}.ln2_s", (d,)), (f"l{l}.ln2_b", (d,)),
+                (f"l{l}.w1", (d, f)), (f"l{l}.b1", (f,)),
+                (f"l{l}.w2", (f, d)), (f"l{l}.b2", (d,)),
+            ]
+        specs += [("lnf_s", (d,)), ("lnf_b", (d,))]
+        return specs
+
+    def num_params(self) -> int:
+        return sum(int(jnp.prod(jnp.array(s))) for _, s in self.param_specs())
+
+    def kv_shape(self) -> Tuple[int, int, int, int, int]:
+        return (self.n_layers, self.batch_slots, self.n_heads, self.max_seq, self.d_head)
+
+    # --- analytic FLOPs (consumed by the Rust power/perf models) ---------
+    def prefill_flops(self, seq: int) -> int:
+        d, f, h = self.d_model, self.d_ff, self.n_heads
+        per_tok = 2 * d * (4 * d + 2 * f)           # qkvo projections + MLP
+        attn = 2 * 2 * h * seq * seq * self.d_head  # scores + weighted sum
+        return self.n_layers * (seq * per_tok + attn) + 2 * seq * d * self.vocab
+
+    def decode_flops(self, batch: int, ctx: int) -> int:
+        d, f, h = self.d_model, self.d_ff, self.n_heads
+        per_tok = 2 * d * (4 * d + 2 * f)
+        attn = 2 * 2 * h * ctx * self.d_head
+        return self.n_layers * batch * (per_tok + attn) + 2 * batch * d * self.vocab
+
+
+# Small, deterministic init — quality of the language model is irrelevant
+# here; what matters is real compute with the right phase structure.
+def init_params(config: ModelConfig, seed: int = 0) -> List[jax.Array]:
+    key = jax.random.PRNGKey(seed)
+    params = []
+    for name, shape in config.param_specs():
+        key, sub = jax.random.split(key)
+        if name.endswith(("_s",)):
+            params.append(jnp.ones(shape, jnp.float32))
+        elif name.endswith(("_b", ".b1", ".b2")):
+            params.append(jnp.zeros(shape, jnp.float32))
+        else:
+            fan_in = shape[0] if len(shape) > 1 else 1
+            params.append(
+                jax.random.normal(sub, shape, jnp.float32) / jnp.sqrt(jnp.float32(fan_in))
+            )
+    return params
+
+
+class _P:
+    """Name-addressed view over the flat parameter list."""
+
+    def __init__(self, config: ModelConfig, flat: Sequence[jax.Array]):
+        names = [n for n, _ in config.param_specs()]
+        assert len(names) == len(flat), (len(names), len(flat))
+        self._d = dict(zip(names, flat))
+
+    def __getitem__(self, name: str) -> jax.Array:
+        return self._d[name]
+
+
+def _layer_norm(x, scale, bias, eps=1e-5):
+    mean = x.mean(axis=-1, keepdims=True)
+    var = ((x - mean) ** 2).mean(axis=-1, keepdims=True)
+    return (x - mean) / jnp.sqrt(var + eps) * scale + bias
+
+
+def prefill(
+    config: ModelConfig,
+    params: Sequence[jax.Array],
+    kv_k: jax.Array,
+    kv_v: jax.Array,
+    tokens: jax.Array,   # [S] int32, padded to the artifact's bucket size
+    length: jax.Array,   # scalar int32, number of valid tokens (<= S)
+    slot: jax.Array,     # scalar int32, KV batch slot owned by this request
+    *,
+    use_pallas: bool = True,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Process a prompt; returns (next-token logits [V], kv_k', kv_v')."""
+    p = _P(config, params)
+    seq = tokens.shape[0]
+    h, dh = config.n_heads, config.d_head
+
+    x = p["tok_emb"][tokens] + p["pos_emb"][:seq]
+    for l in range(config.n_layers):
+        y = _layer_norm(x, p[f"l{l}.ln1_s"], p[f"l{l}.ln1_b"])
+        q = (y @ p[f"l{l}.wq"]).reshape(seq, h, dh).transpose(1, 0, 2)
+        k = (y @ p[f"l{l}.wk"]).reshape(seq, h, dh).transpose(1, 0, 2)
+        v = (y @ p[f"l{l}.wv"]).reshape(seq, h, dh).transpose(1, 0, 2)
+        if use_pallas:
+            o = attn_kernel.flash_attention(
+                q, k, v, block_q=config.block_q, block_k=config.block_k
+            )
+        else:
+            o = ref_kernel.causal_attention_ref(q, k, v)
+        x = x + o.transpose(1, 0, 2).reshape(seq, config.d_model) @ p[f"l{l}.wo"]
+        y = _layer_norm(x, p[f"l{l}.ln2_s"], p[f"l{l}.ln2_b"])
+        x = x + jax.nn.gelu(y @ p[f"l{l}.w1"] + p[f"l{l}.b1"]) @ p[f"l{l}.w2"] + p[f"l{l}.b2"]
+        # Persist this layer's KV into the request's slot, positions [0, S).
+        kv_k = jax.lax.dynamic_update_slice(kv_k, k[None, None], (l, slot, 0, 0, 0))
+        kv_v = jax.lax.dynamic_update_slice(kv_v, v[None, None], (l, slot, 0, 0, 0))
+
+    x_last = jax.lax.dynamic_slice(x, (length - 1, 0), (1, config.d_model))[0]
+    x_last = _layer_norm(x_last, p["lnf_s"], p["lnf_b"])
+    logits = x_last @ p["tok_emb"].T
+    return logits, kv_k, kv_v
+
+
+def _write_kv_slot(cache_l: jax.Array, new: jax.Array, pos: jax.Array) -> jax.Array:
+    """Write new [B,H,DH] into cache_l [B,H,S,DH] at per-sequence positions."""
+    def one(c, kb, pp):  # c [H,S,DH], kb [H,DH]
+        return jax.lax.dynamic_update_slice(c, kb[:, None, :], (0, pp, 0))
+    return jax.vmap(one)(cache_l, new, pos)
+
+
+def decode_step(
+    config: ModelConfig,
+    params: Sequence[jax.Array],
+    kv_k: jax.Array,
+    kv_v: jax.Array,
+    tokens: jax.Array,  # [B] int32 — token generated at the previous step
+    pos: jax.Array,     # [B] int32 — position this token occupies
+    *,
+    use_pallas: bool = True,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """One autoregressive step for all batch slots; returns ([B,V], kv', kv')."""
+    p = _P(config, params)
+    h, dh = config.n_heads, config.d_head
+
+    x = p["tok_emb"][tokens] + p["pos_emb"][pos]  # [B, D]
+    for l in range(config.n_layers):
+        y = _layer_norm(x, p[f"l{l}.ln1_s"], p[f"l{l}.ln1_b"])
+        q = (y @ p[f"l{l}.wq"]).reshape(-1, h, dh)
+        k = (y @ p[f"l{l}.wk"]).reshape(-1, h, dh)
+        v = (y @ p[f"l{l}.wv"]).reshape(-1, h, dh)
+        kv_k = kv_k.at[l].set(_write_kv_slot(kv_k[l], k, pos))
+        kv_v = kv_v.at[l].set(_write_kv_slot(kv_v[l], v, pos))
+        if use_pallas:
+            o = decode_kernel.decode_attention(q, kv_k[l], kv_v[l], pos)
+        else:
+            o = ref_kernel.decode_attention_ref(q, kv_k[l], kv_v[l], pos)
+        x = x + o.reshape(-1, config.d_model) @ p[f"l{l}.wo"]
+        y = _layer_norm(x, p[f"l{l}.ln2_s"], p[f"l{l}.ln2_b"])
+        x = x + jax.nn.gelu(y @ p[f"l{l}.w1"] + p[f"l{l}.b1"]) @ p[f"l{l}.w2"] + p[f"l{l}.b2"]
+
+    x = _layer_norm(x, p["lnf_s"], p["lnf_b"])
+    logits = x @ p["tok_emb"].T  # [B, V]
+    return logits, kv_k, kv_v
+
+
+def make_prefill_fn(config: ModelConfig, seq: int, *, use_pallas: bool = True) -> Callable:
+    """Flat-args prefill for AOT lowering: (params..., kv_k, kv_v, tokens, length, slot)."""
+    n = len(config.param_specs())
+
+    def fn(*args):
+        params, (kv_k, kv_v, tokens, length, slot) = args[:n], args[n:]
+        return prefill(config, params, kv_k, kv_v, tokens, length, slot,
+                       use_pallas=use_pallas)
+
+    fn.__name__ = f"prefill_s{seq}"
+    return fn
+
+
+def make_decode_fn(config: ModelConfig, *, use_pallas: bool = True) -> Callable:
+    """Flat-args decode for AOT lowering: (params..., kv_k, kv_v, tokens, pos)."""
+    n = len(config.param_specs())
+
+    def fn(*args):
+        params, (kv_k, kv_v, tokens, pos) = args[:n], args[n:]
+        return decode_step(config, params, kv_k, kv_v, tokens, pos,
+                           use_pallas=use_pallas)
+
+    fn.__name__ = "decode"
+    return fn

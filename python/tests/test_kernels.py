@@ -1,0 +1,175 @@
+"""L1 kernel correctness: Pallas kernels vs pure-jnp oracles (ref.py).
+
+This is the CORE correctness signal for the compute layer. hypothesis
+sweeps shapes/dtypes; fixed tests pin the exact configurations that ship
+in the AOT artifacts.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.attention import flash_attention, vmem_report as prefill_report
+from compile.kernels.decode import decode_attention, vmem_report as decode_report
+from compile.kernels.ref import causal_attention_ref, decode_attention_ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def rand(key, shape, dtype=jnp.float32):
+    return jax.random.normal(key, shape, jnp.float32).astype(dtype)
+
+
+# ---------------------------------------------------------------- prefill --
+class TestFlashAttention:
+    @pytest.mark.parametrize("seq", [16, 32, 64, 128])
+    @pytest.mark.parametrize("heads", [1, 4])
+    def test_matches_ref(self, seq, heads):
+        k1, k2, k3 = jax.random.split(jax.random.PRNGKey(seq * 7 + heads), 3)
+        q, k, v = rand(k1, (heads, seq, 32)), rand(k2, (heads, seq, 32)), rand(k3, (heads, seq, 32))
+        out = flash_attention(q, k, v)
+        ref = causal_attention_ref(q, k, v)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=3e-5, atol=3e-5)
+
+    @pytest.mark.parametrize("block_q,block_k", [(16, 16), (32, 16), (16, 8), (64, 32)])
+    def test_block_shape_invariance(self, block_q, block_k):
+        """Output must not depend on the VMEM tiling schedule."""
+        seq, heads, dh = 64, 2, 16
+        k1, k2, k3 = jax.random.split(jax.random.PRNGKey(3), 3)
+        q, k, v = rand(k1, (heads, seq, dh)), rand(k2, (heads, seq, dh)), rand(k3, (heads, seq, dh))
+        out = flash_attention(q, k, v, block_q=block_q, block_k=block_k)
+        ref = causal_attention_ref(q, k, v)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=3e-5, atol=3e-5)
+
+    def test_causality(self):
+        """Perturbing future tokens must not change earlier outputs."""
+        seq, heads, dh = 32, 2, 16
+        k1, k2, k3 = jax.random.split(jax.random.PRNGKey(4), 3)
+        q, k, v = rand(k1, (heads, seq, dh)), rand(k2, (heads, seq, dh)), rand(k3, (heads, seq, dh))
+        base = flash_attention(q, k, v)
+        k2_, v2_ = k.at[:, seq // 2:].add(10.0), v.at[:, seq // 2:].add(-5.0)
+        pert = flash_attention(q, k2_, v2_)
+        np.testing.assert_allclose(
+            np.asarray(base[:, : seq // 2]), np.asarray(pert[:, : seq // 2]),
+            rtol=1e-6, atol=1e-6,
+        )
+
+    def test_softmax_normalization(self):
+        """With v = const, attention output must be exactly that const."""
+        seq, heads, dh = 32, 1, 8
+        k1, k2 = jax.random.split(jax.random.PRNGKey(5))
+        q, k = rand(k1, (heads, seq, dh)), rand(k2, (heads, seq, dh))
+        v = jnp.full((heads, seq, dh), 3.25, jnp.float32)
+        out = flash_attention(q, k, v)
+        np.testing.assert_allclose(np.asarray(out), 3.25, rtol=1e-5)
+
+    def test_large_logits_stable(self):
+        """Online softmax must survive large score magnitudes (no inf/nan)."""
+        seq, heads, dh = 32, 1, 16
+        k1, k2, k3 = jax.random.split(jax.random.PRNGKey(6), 3)
+        q = rand(k1, (heads, seq, dh)) * 50.0
+        k = rand(k2, (heads, seq, dh)) * 50.0
+        v = rand(k3, (heads, seq, dh))
+        out = flash_attention(q, k, v)
+        assert np.isfinite(np.asarray(out)).all()
+
+    def test_bad_blocks_rejected(self):
+        q = jnp.zeros((1, 24, 8))
+        with pytest.raises(ValueError):
+            flash_attention(q, q, q, block_q=16, block_k=16)
+        with pytest.raises(ValueError):
+            flash_attention(jnp.zeros((1, 32, 8)), jnp.zeros((1, 32, 8)),
+                            jnp.zeros((1, 32, 8)), block_q=8, block_k=16)
+
+    @settings(max_examples=12, deadline=None)
+    @given(
+        heads=st.sampled_from([1, 2, 4]),
+        seq_blocks=st.integers(1, 6),
+        dh=st.sampled_from([8, 16, 32]),
+        dtype=st.sampled_from([jnp.float32]),
+        seed=st.integers(0, 2**16),
+    )
+    def test_hypothesis_shape_sweep(self, heads, seq_blocks, dh, dtype, seed):
+        seq = 16 * seq_blocks
+        k1, k2, k3 = jax.random.split(jax.random.PRNGKey(seed), 3)
+        q, k, v = (rand(kk, (heads, seq, dh), dtype) for kk in (k1, k2, k3))
+        out = flash_attention(q, k, v)
+        ref = causal_attention_ref(q, k, v)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=5e-5, atol=5e-5)
+
+
+# ----------------------------------------------------------------- decode --
+class TestDecodeAttention:
+    @pytest.mark.parametrize("batch", [1, 4])
+    @pytest.mark.parametrize("s_max", [32, 160])
+    def test_matches_ref(self, batch, s_max):
+        heads, dh = 4, 32
+        k1, k2, k3 = jax.random.split(jax.random.PRNGKey(batch * 31 + s_max), 3)
+        q = rand(k1, (batch, heads, dh))
+        kc = rand(k2, (batch, heads, s_max, dh))
+        vc = rand(k3, (batch, heads, s_max, dh))
+        pos = jnp.arange(batch, dtype=jnp.int32) * 3 + 1
+        out = decode_attention(q, kc, vc, pos)
+        ref = decode_attention_ref(q, kc, vc, pos)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=3e-5, atol=3e-5)
+
+    def test_masking_excludes_stale_cache(self):
+        """Garbage beyond pos[b] must not influence the output."""
+        batch, heads, s_max, dh = 2, 2, 16, 8
+        k1, k2, k3 = jax.random.split(jax.random.PRNGKey(9), 3)
+        q = rand(k1, (batch, heads, dh))
+        kc = rand(k2, (batch, heads, s_max, dh))
+        vc = rand(k3, (batch, heads, s_max, dh))
+        pos = jnp.array([4, 7], jnp.int32)
+        base = decode_attention(q, kc, vc, pos)
+        kc2 = kc.at[:, :, 10:].set(1e6)
+        vc2 = vc.at[:, :, 10:].set(-1e6)
+        pert = decode_attention(q, kc2, vc2, pos)
+        np.testing.assert_allclose(np.asarray(base), np.asarray(pert), rtol=1e-6)
+
+    def test_pos_zero_attends_only_first(self):
+        batch, heads, s_max, dh = 1, 1, 8, 4
+        q = jnp.ones((batch, heads, dh))
+        kc = jnp.zeros((batch, heads, s_max, dh))
+        vc = jnp.arange(s_max, dtype=jnp.float32)[None, None, :, None] * jnp.ones((1, 1, 1, dh))
+        out = decode_attention(q, kc, vc, jnp.array([0], jnp.int32))
+        np.testing.assert_allclose(np.asarray(out), 0.0, atol=1e-6)
+
+    @settings(max_examples=12, deadline=None)
+    @given(
+        batch=st.integers(1, 4),
+        heads=st.sampled_from([1, 2, 4]),
+        s_max=st.sampled_from([8, 32, 64]),
+        dh=st.sampled_from([4, 16, 32]),
+        seed=st.integers(0, 2**16),
+    )
+    def test_hypothesis_shape_sweep(self, batch, heads, s_max, dh, seed):
+        k1, k2, k3, k4 = jax.random.split(jax.random.PRNGKey(seed), 4)
+        q = rand(k1, (batch, heads, dh))
+        kc = rand(k2, (batch, heads, s_max, dh))
+        vc = rand(k3, (batch, heads, s_max, dh))
+        pos = jax.random.randint(k4, (batch,), 0, s_max, jnp.int32)
+        out = decode_attention(q, kc, vc, pos)
+        ref = decode_attention_ref(q, kc, vc, pos)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=5e-5, atol=5e-5)
+
+
+# ------------------------------------------------------------ VMEM report --
+class TestKernelReports:
+    def test_prefill_fits_vmem(self):
+        rep = prefill_report(seq_len=160, head_dim=32)
+        assert rep["vmem_bytes_per_step"] < 16 * 1024 * 1024
+        assert rep["vmem_budget_fraction"] < 0.01
+
+    def test_prefill_intensity_exceeds_decode(self):
+        """Structural check for the paper's phase asymmetry (Fig 4): the
+        prompt kernel must be far more arithmetically intense than decode."""
+        p = prefill_report(seq_len=160, head_dim=32)
+        d = decode_report(s_max=160, head_dim=32)
+        assert p["arithmetic_intensity"] > 10 * d["arithmetic_intensity"]
+
+    def test_decode_is_bandwidth_bound(self):
+        d = decode_report(s_max=160, head_dim=32)
+        assert d["arithmetic_intensity"] < 1.0

@@ -1,0 +1,24 @@
+//! End-to-end bench: time to regenerate each paper figure/table at Quick
+//! depth — one bench row per experiment, mirroring the DESIGN.md §4
+//! per-experiment index. (Also a smoke test that every generator runs.)
+
+use polca::experiments::{all_ids, run_experiment, Depth};
+use std::time::Instant;
+
+fn main() {
+    let mut total = 0.0;
+    for id in all_ids() {
+        let t = Instant::now();
+        let out = run_experiment(id, Depth::Quick, 1).expect(id);
+        let dt = t.elapsed().as_secs_f64();
+        total += dt;
+        println!(
+            "{:<8} {:>8.2}s  ({} tables, {} csvs)",
+            id,
+            dt,
+            out.tables.len(),
+            out.csvs.len()
+        );
+    }
+    println!("{:<8} {total:>8.2}s", "TOTAL");
+}

@@ -1,0 +1,40 @@
+//! L3 bench: the POLCA policy engine's per-tick cost (it runs on every
+//! telemetry sample, so it must be well under a microsecond) and the
+//! telemetry buffer's record/read path.
+
+use polca::benchkit::{bench, black_box, BenchConfig};
+use polca::cluster::telemetry::TelemetryBuffer;
+use polca::config::PolicyConfig;
+use polca::policy::engine::{PolicyEngine, PolicyKind};
+
+fn main() {
+    let cfg = BenchConfig::default();
+
+    let r = bench("policy_tick_1k_mixed_readings", &cfg, 1000.0, || {
+        let mut e = PolicyEngine::new(PolicyKind::Polca, PolicyConfig::default());
+        for i in 0..1000 {
+            // sweep through all regimes: idle, T1, T2, overload, recovery
+            let p = 0.5 + 0.6 * ((i as f64 / 120.0).sin().abs());
+            black_box(e.tick(i as f64 * 2.0, p));
+        }
+    });
+    println!("{}", r.report());
+
+    let r = bench("telemetry_record_and_visible_1k", &cfg, 1000.0, || {
+        let mut tb = TelemetryBuffer::new(2.0, 3600.0);
+        for i in 0..1000 {
+            tb.record(i as f64 * 2.0, 0.7);
+            black_box(tb.visible_at(i as f64 * 2.0));
+        }
+    });
+    println!("{}", r.report());
+
+    let r = bench("telemetry_spike_stats_1800_samples", &cfg, 1.0, || {
+        let mut tb = TelemetryBuffer::new(2.0, 3600.0);
+        for i in 0..1800 {
+            tb.record(i as f64 * 2.0, 0.7 + (i % 13) as f64 * 0.01);
+        }
+        black_box(tb.spike_stats(&[2.0, 5.0, 40.0]));
+    });
+    println!("{}", r.report());
+}

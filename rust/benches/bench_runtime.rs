@@ -1,0 +1,41 @@
+//! L2/L3 bridge bench: PJRT execution latency of the AOT artifacts —
+//! prefill per bucket and one batched decode step. These are the real
+//! request-path costs of the serving node. Skips (with a note) when
+//! artifacts are absent.
+
+use polca::benchkit::{bench, black_box, BenchConfig};
+use polca::runtime::Engine;
+use std::path::PathBuf;
+
+fn main() {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        println!("bench_runtime: artifacts/ missing — run `make artifacts` first");
+        return;
+    }
+    let engine = Engine::load(&dir).expect("engine load");
+    let cfg = BenchConfig::slow();
+
+    for bucket in engine.buckets() {
+        let tokens: Vec<i32> = (0..bucket as i32).map(|i| (i * 13 + 1) % 512).collect();
+        let r = bench(&format!("prefill_s{bucket}"), &cfg, tokens.len() as f64, || {
+            let kv = engine.empty_kv().unwrap();
+            let out = engine.prefill(kv, &tokens, tokens.len(), 0).unwrap();
+            black_box(out.0[0]);
+        });
+        println!("{}  [= prompt tok/s]", r.report());
+    }
+
+    let b = engine.manifest.model.batch_slots;
+    let tokens = vec![7i32; b];
+    let pos: Vec<i32> = (0..b as i32).map(|i| i + 4).collect();
+    let r = bench(&format!("decode_step_b{b}"), &cfg, b as f64, || {
+        // The empty_kv rebuild is part of the measured host-roundtrip
+        // story (the KV cache travels host<->device each step; see
+        // EXPERIMENTS.md §Perf).
+        let kv = engine.empty_kv().unwrap();
+        let out = engine.decode(kv, &tokens, &pos).unwrap();
+        black_box(out.0[0]);
+    });
+    println!("{}  [= output tok/s]", r.report());
+}

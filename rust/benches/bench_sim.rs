@@ -1,0 +1,42 @@
+//! L3 bench: discrete-event simulator throughput (events/s) — the §Perf
+//! headline for the evaluation vehicle — plus the DES queue in isolation.
+
+use polca::benchkit::{bench, black_box, BenchConfig};
+use polca::policy::engine::PolicyKind;
+use polca::sim::EventQueue;
+use polca::simulation::{run, SimConfig};
+
+fn main() {
+    let cfg = BenchConfig::default();
+
+    // Raw event-queue churn: schedule + pop cycles.
+    let r = bench("event_queue_schedule_pop_1k", &cfg, 1000.0, || {
+        let mut q = EventQueue::new();
+        for i in 0..1000u64 {
+            q.schedule_at(i * 7 % 997, i);
+        }
+        while let Some(x) = q.pop() {
+            black_box(x);
+        }
+    });
+    println!("{}", r.report());
+
+    // One simulated day of the full cluster model, per policy.
+    for (name, kind) in [("polca", PolicyKind::Polca), ("nocap", PolicyKind::NoCap)] {
+        let mut sim_cfg = SimConfig::default();
+        sim_cfg.weeks = 1.0 / 7.0;
+        sim_cfg.deployed_servers = 52;
+        sim_cfg.exp.seed = 3;
+        sim_cfg.policy_kind = kind;
+        let events = run(&sim_cfg).events as f64;
+        let r = bench(
+            &format!("cluster_sim_1day_52srv_{name}"),
+            &BenchConfig::slow(),
+            events,
+            || {
+                black_box(run(&sim_cfg));
+            },
+        );
+        println!("{}  [= events/s]", r.report());
+    }
+}

@@ -1,0 +1,128 @@
+//! Micro-benchmark harness (criterion is unavailable offline).
+//!
+//! Provides warmup, timed iterations, and mean/p50/p99/throughput
+//! reporting. Used by the `rust/benches/*.rs` targets (declared with
+//! `harness = false`) and by the §Perf optimization loop.
+
+use std::time::{Duration, Instant};
+
+use crate::util::stats::Percentiles;
+
+#[derive(Debug, Clone)]
+pub struct BenchConfig {
+    pub warmup: Duration,
+    pub measure: Duration,
+    pub min_iters: u32,
+    pub max_iters: u32,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        BenchConfig {
+            warmup: Duration::from_millis(300),
+            measure: Duration::from_secs(2),
+            min_iters: 10,
+            max_iters: 1_000_000,
+        }
+    }
+}
+
+/// Quick config for slow end-to-end benches.
+impl BenchConfig {
+    pub fn slow() -> Self {
+        BenchConfig {
+            warmup: Duration::from_millis(100),
+            measure: Duration::from_secs(4),
+            min_iters: 3,
+            max_iters: 10_000,
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: u32,
+    pub mean: Duration,
+    pub p50: Duration,
+    pub p99: Duration,
+    /// Optional items-per-iteration for throughput reporting.
+    pub items_per_iter: f64,
+}
+
+impl BenchResult {
+    pub fn throughput(&self) -> f64 {
+        self.items_per_iter / self.mean.as_secs_f64()
+    }
+
+    pub fn report(&self) -> String {
+        let mut s = format!(
+            "{:<42} {:>10} iters  mean {:>12?}  p50 {:>12?}  p99 {:>12?}",
+            self.name, self.iters, self.mean, self.p50, self.p99
+        );
+        if self.items_per_iter > 0.0 {
+            s.push_str(&format!("  thrpt {:>12.0}/s", self.throughput()));
+        }
+        s
+    }
+}
+
+/// Run `f` under the harness; `items` is the per-iteration work count
+/// used for throughput (pass 0.0 to omit).
+pub fn bench<F: FnMut()>(name: &str, cfg: &BenchConfig, items: f64, mut f: F) -> BenchResult {
+    // Warmup.
+    let start = Instant::now();
+    while start.elapsed() < cfg.warmup {
+        f();
+    }
+    // Measure.
+    let mut samples = Percentiles::new();
+    let mut total = Duration::ZERO;
+    let mut iters = 0u32;
+    while (total < cfg.measure || iters < cfg.min_iters) && iters < cfg.max_iters {
+        let t = Instant::now();
+        f();
+        let dt = t.elapsed();
+        samples.push(dt.as_secs_f64());
+        total += dt;
+        iters += 1;
+    }
+    let mean = total / iters.max(1);
+    BenchResult {
+        name: name.to_string(),
+        iters,
+        mean,
+        p50: Duration::from_secs_f64(samples.p50()),
+        p99: Duration::from_secs_f64(samples.p99()),
+        items_per_iter: items,
+    }
+}
+
+/// Prevent the optimizer from eliding a value (stable-rust black_box).
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_runs_and_reports() {
+        let cfg = BenchConfig {
+            warmup: Duration::from_millis(5),
+            measure: Duration::from_millis(30),
+            min_iters: 5,
+            max_iters: 100_000,
+        };
+        let mut acc = 0u64;
+        let r = bench("noop-ish", &cfg, 10.0, || {
+            acc = black_box(acc.wrapping_add(1));
+        });
+        assert!(r.iters >= 5);
+        assert!(r.mean.as_nanos() > 0);
+        assert!(r.throughput() > 0.0);
+        assert!(r.report().contains("noop-ish"));
+    }
+}

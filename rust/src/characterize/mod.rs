@@ -1,0 +1,8 @@
+//! §2 characterization substrate: the catalog of LLMs the paper measures
+//! (Fig 3) with per-model power/latency calibrations, plus the
+//! server-level power-timeseries synthesis behind Figs 4 and 8.
+
+pub mod catalog;
+pub mod timeseries;
+
+pub use catalog::{ModelArch, ModelSpec, catalog, find, inference_models, training_models, vision_models};

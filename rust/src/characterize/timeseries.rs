@@ -1,0 +1,150 @@
+//! Server-level power timeseries synthesis — reproduces the waveforms of
+//! Fig 4 (inference: spiky prompt phase, long stable token phase) and
+//! Fig 8 (training: plateau / dip / trough, under no cap, power cap, and
+//! frequency cap), sampled at the paper's 100 ms DCGM interval.
+
+use crate::characterize::catalog::ModelSpec;
+use crate::power::gpu::{CapMode, Phase};
+use crate::power::training::TrainingPowerModel;
+use crate::util::rng::Rng;
+
+/// One sampled point: (time_s, gpu_power_fraction_of_tdp).
+pub type Sample = (f64, f64);
+
+/// Synthesize the Fig 4 waveform: `n_inferences` back-to-back requests of
+/// the same prompt on a dedicated server, sampled every `dt` seconds.
+/// Small measurement noise replicates DCGM jitter.
+pub fn inference_timeseries(
+    model: &ModelSpec,
+    input: f64,
+    output: f64,
+    batch: f64,
+    n_inferences: usize,
+    dt: f64,
+    seed: u64,
+) -> Vec<Sample> {
+    let mut rng = Rng::new(seed);
+    let prompt_t = model.prompt_time_s(input, batch);
+    let token_t = model.token_time_s(output, batch);
+    let gap_t = 0.4; // scheduling gap between requests
+    let total = n_inferences as f64 * (prompt_t + token_t + gap_t);
+    let mut out = Vec::with_capacity((total / dt) as usize + 1);
+    let mut t = 0.0;
+    while t < total {
+        let cycle = prompt_t + token_t + gap_t;
+        let x = t % cycle;
+        let phase = if x < prompt_t {
+            Phase::Prompt { total_input: input * batch }
+        } else if x < prompt_t + token_t {
+            Phase::Token { batch }
+        } else {
+            Phase::Idle
+        };
+        let mut p = model.power.phase_power(phase, CapMode::None, false);
+        // DCGM-style sampling noise; spikes jitter more than steady state.
+        let noise = match phase {
+            Phase::Prompt { .. } => 0.04,
+            Phase::Token { .. } => 0.015,
+            Phase::Idle => 0.005,
+        };
+        p += rng.normal_with(0.0, noise);
+        out.push((t, p.max(0.0)));
+        t += dt;
+    }
+    out
+}
+
+/// Synthesize the Fig 8 waveform: `n_iters` training iterations under a
+/// given cap, sampled every `dt` seconds.
+pub fn training_timeseries(
+    model: &ModelSpec,
+    cap: CapMode,
+    n_iters: usize,
+    dt: f64,
+    seed: u64,
+) -> Vec<Sample> {
+    let profile = model
+        .training
+        .expect("model has no training profile");
+    let tm = TrainingPowerModel { profile, calib: model.power };
+    let mut rng = Rng::new(seed);
+    let iter_t = tm.iter_time_s(cap);
+    let total = n_iters as f64 * iter_t;
+    let mut out = Vec::with_capacity((total / dt) as usize + 1);
+    let mut t = 0.0;
+    while t < total {
+        let p = tm.power_frac_at(t % iter_t, cap) + rng.normal_with(0.0, 0.02);
+        out.push((t, p.max(0.0)));
+        t += dt;
+    }
+    out
+}
+
+/// Summary statistics of a timeseries (peak, mean, trough).
+pub fn summarize(samples: &[Sample]) -> (f64, f64, f64) {
+    let mut peak = f64::NEG_INFINITY;
+    let mut trough = f64::INFINITY;
+    let mut sum = 0.0;
+    for &(_, p) in samples {
+        peak = peak.max(p);
+        trough = trough.min(p);
+        sum += p;
+    }
+    (peak, sum / samples.len() as f64, trough)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::characterize::catalog::find;
+
+    #[test]
+    fn inference_waveform_has_spike_then_stable() {
+        let bloom = find("BLOOM-176B").unwrap();
+        let ts = inference_timeseries(&bloom, 2048.0, 256.0, 1.0, 3, 0.1, 42);
+        let (peak, mean, _) = summarize(&ts);
+        // spike well above the mean — Fig 4's signature
+        assert!(peak > mean * 1.4, "peak={peak} mean={mean}");
+        // token phase dominates time, so mean is near the token level
+        let token_level = bloom.power.token_mean_frac(1.0);
+        assert!((mean - token_level).abs() < 0.12, "mean={mean} token={token_level}");
+    }
+
+    #[test]
+    fn inference_spike_duration_is_short() {
+        // §2.3: "the resulting power spike per request generally lasts <1s"
+        let bloom = find("BLOOM-176B").unwrap();
+        let prompt_t = bloom.prompt_time_s(2048.0, 1.0);
+        assert!(prompt_t < 1.0, "prompt_t={prompt_t}");
+        // and the token phase is much longer
+        assert!(bloom.token_time_s(256.0, 1.0) > 5.0 * prompt_t);
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let m = find("GPT-NeoX-20B").unwrap();
+        let a = inference_timeseries(&m, 1024.0, 128.0, 1.0, 2, 0.1, 7);
+        let b = inference_timeseries(&m, 1024.0, 128.0, 1.0, 2, 0.1, 7);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn training_waveform_caps_reduce_peak() {
+        let flant5 = find("Flan-T5-XXL").unwrap();
+        let none = training_timeseries(&flant5, CapMode::None, 5, 0.1, 1);
+        let freq = training_timeseries(&flant5, CapMode::FreqCap { mhz: 1110.0 }, 5, 0.1, 1);
+        let (p0, _, t0) = summarize(&none);
+        let (p1, _, t1) = summarize(&freq);
+        assert!(p1 < p0 * 0.92, "freq cap should cut peak: {p0} -> {p1}");
+        // troughs (idle) barely move for Flan-T5
+        assert!((t1 - t0).abs() < 0.08, "troughs {t0} vs {t1}");
+    }
+
+    #[test]
+    fn training_iterations_stretch_under_cap() {
+        let neox = find("GPT-NeoX-20B").unwrap();
+        let none = training_timeseries(&neox, CapMode::None, 5, 0.1, 2);
+        let freq = training_timeseries(&neox, CapMode::FreqCap { mhz: 1110.0 }, 5, 0.1, 2);
+        assert!(freq.len() > none.len(), "capped run must take longer");
+    }
+}

@@ -1,0 +1,127 @@
+//! Power hierarchy: servers → racks → row (PDU breaker) → UPS (Fig 10).
+//!
+//! Power is provisioned at the row: the breaker budget equals the
+//! baseline server count × per-server provisioned power. Oversubscription
+//! adds servers *without* raising the budget — the whole point of POLCA.
+
+use crate::power::server::ServerPowerModel;
+
+/// Priority class of the workload a server hosts (§5.B).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Priority {
+    Low,
+    High,
+}
+
+/// A server slot in the row.
+#[derive(Debug, Clone)]
+pub struct Server {
+    pub id: usize,
+    pub rack: usize,
+    pub priority: Priority,
+    /// Catalog index of the model this server is dedicated to.
+    pub model_idx: usize,
+    /// Workload spec index (Table 4 row).
+    pub workload_idx: usize,
+}
+
+/// A row of racks behind one PDU breaker.
+#[derive(Debug, Clone)]
+pub struct Row {
+    pub servers: Vec<Server>,
+    pub servers_per_rack: usize,
+    pub power_model: ServerPowerModel,
+    /// Breaker budget in watts (fixed at provisioning time).
+    pub budget_w: f64,
+    /// UPS failure-tolerance deadline at worst-case load (§4.E: 10 s).
+    pub ups_deadline_s: f64,
+}
+
+impl Row {
+    /// Provision a row for `baseline_servers`, then deploy
+    /// `deployed_servers` into it (deployed > baseline = oversubscribed).
+    pub fn provision(
+        baseline_servers: usize,
+        deployed_servers: usize,
+        power_model: ServerPowerModel,
+    ) -> Row {
+        let budget_w = baseline_servers as f64 * power_model.provisioned_w();
+        let servers_per_rack = 10;
+        let servers = (0..deployed_servers)
+            .map(|id| Server {
+                id,
+                rack: id / servers_per_rack,
+                priority: Priority::Low, // assigned later by the allocator
+                model_idx: 0,
+                workload_idx: 0,
+            })
+            .collect();
+        Row { servers, servers_per_rack, power_model, budget_w, ups_deadline_s: 10.0 }
+    }
+
+    pub fn num_racks(&self) -> usize {
+        if self.servers.is_empty() {
+            0
+        } else {
+            self.servers.last().unwrap().rack + 1
+        }
+    }
+
+    /// Oversubscription ratio: deployed provisioned power / budget.
+    pub fn oversubscription(&self) -> f64 {
+        self.servers.len() as f64 * self.power_model.provisioned_w() / self.budget_w
+    }
+
+    /// Normalize a wattage to the row budget (the policy's input unit).
+    pub fn normalized(&self, watts: f64) -> f64 {
+        watts / self.budget_w
+    }
+
+    pub fn lp_servers(&self) -> impl Iterator<Item = &Server> {
+        self.servers.iter().filter(|s| s.priority == Priority::Low)
+    }
+
+    pub fn hp_servers(&self) -> impl Iterator<Item = &Server> {
+        self.servers.iter().filter(|s| s.priority == Priority::High)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn budget_fixed_by_baseline() {
+        let m = ServerPowerModel::default();
+        let per = m.provisioned_w();
+        let row = Row::provision(40, 52, m);
+        assert!((row.budget_w - 40.0 * per).abs() < 1e-6);
+        assert_eq!(row.servers.len(), 52);
+        assert!((row.oversubscription() - 1.3).abs() < 1e-9);
+    }
+
+    #[test]
+    fn racks_assigned_sequentially() {
+        let row = Row::provision(40, 25, ServerPowerModel::default());
+        assert_eq!(row.num_racks(), 3);
+        assert_eq!(row.servers[9].rack, 0);
+        assert_eq!(row.servers[10].rack, 1);
+    }
+
+    #[test]
+    fn normalization() {
+        let m = ServerPowerModel::default();
+        let row = Row::provision(40, 40, m);
+        assert!((row.normalized(row.budget_w) - 1.0).abs() < 1e-12);
+        assert!((row.normalized(row.budget_w * 0.79) - 0.79).abs() < 1e-12);
+    }
+
+    #[test]
+    fn priority_filters() {
+        let mut row = Row::provision(4, 4, ServerPowerModel::default());
+        row.servers[0].priority = Priority::High;
+        row.servers[2].priority = Priority::High;
+        assert_eq!(row.hp_servers().count(), 2);
+        assert_eq!(row.lp_servers().count(), 2);
+    }
+}

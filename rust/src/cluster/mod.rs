@@ -1,0 +1,12 @@
+//! Datacenter power-delivery substrate: the row/rack/server hierarchy
+//! (Fig 10), PDU telemetry with sampling delay, and the slow out-of-band
+//! control path (BMC / SMBPBI) with the latencies of Table 1 — the
+//! constraints that shape POLCA's double-threshold design (§4/§5).
+
+pub mod hierarchy;
+pub mod oob;
+pub mod telemetry;
+
+pub use hierarchy::{Priority, Row, Server};
+pub use oob::{OobChannel, OobCommand, PendingCommand};
+pub use telemetry::{SpikeStats, TelemetryBuffer};

@@ -1,0 +1,173 @@
+//! Out-of-band GPU control path: power-manager → rack manager → BMC →
+//! SMBPBI (§4.D/E, Fig 12). The defining property is *latency*: frequency
+//! and power caps take ~40 s to apply; only the hardware powerbrake is
+//! fast (~5 s). POLCA's two-threshold policy exists to absorb exactly
+//! this gap. The channel also models (optional) unreliability: command
+//! loss forces the policy to be idempotent and re-issued.
+
+use crate::cluster::hierarchy::Priority;
+use crate::util::rng::Rng;
+
+/// A control command addressed to a set of servers.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum OobCommand {
+    /// Cap SM frequency of every GPU on servers with the given priority.
+    FreqCap { target: Priority, mhz: f64 },
+    /// Remove the frequency cap for the given priority class.
+    Uncap { target: Priority },
+    /// Hardware powerbrake: all GPUs to near-halt (288 MHz on A100).
+    PowerBrake,
+    /// Release the powerbrake.
+    ReleaseBrake,
+}
+
+impl OobCommand {
+    /// Whether this command rides the fast (brake) path.
+    pub fn is_brake_path(&self) -> bool {
+        matches!(self, OobCommand::PowerBrake | OobCommand::ReleaseBrake)
+    }
+}
+
+/// A command in flight, to be applied at `apply_at_s`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PendingCommand {
+    pub issued_at_s: f64,
+    pub apply_at_s: f64,
+    pub cmd: OobCommand,
+}
+
+/// The OOB channel: issue commands, poll which have taken effect.
+#[derive(Debug, Clone)]
+pub struct OobChannel {
+    /// Cap/uncap apply latency (Table 1: 40 s).
+    pub cap_latency_s: f64,
+    /// Powerbrake apply latency (Table 1: 5 s).
+    pub brake_latency_s: f64,
+    /// Probability a non-brake command is silently lost (reliability
+    /// model; 0.0 in the paper's default but exercised in failure tests).
+    pub loss_prob: f64,
+    /// Latency jitter fraction (uniform ±).
+    pub jitter_frac: f64,
+    pending: Vec<PendingCommand>,
+    rng: Rng,
+}
+
+impl OobChannel {
+    pub fn new(cap_latency_s: f64, brake_latency_s: f64, seed: u64) -> Self {
+        OobChannel {
+            cap_latency_s,
+            brake_latency_s,
+            loss_prob: 0.0,
+            jitter_frac: 0.0,
+            pending: Vec::new(),
+            rng: Rng::new(seed),
+        }
+    }
+
+    pub fn with_unreliability(mut self, loss_prob: f64, jitter_frac: f64) -> Self {
+        self.loss_prob = loss_prob;
+        self.jitter_frac = jitter_frac;
+        self
+    }
+
+    /// Issue a command at time `now`; returns when it will apply, or None
+    /// if the channel dropped it. The brake path is never dropped (it is
+    /// a dedicated hardware signal, §4: "extremely reliable").
+    pub fn issue(&mut self, now_s: f64, cmd: OobCommand) -> Option<f64> {
+        if !cmd.is_brake_path() && self.loss_prob > 0.0 && self.rng.bool(self.loss_prob) {
+            return None;
+        }
+        let base = if cmd.is_brake_path() { self.brake_latency_s } else { self.cap_latency_s };
+        let jitter = if self.jitter_frac > 0.0 {
+            base * self.jitter_frac * (2.0 * self.rng.f64() - 1.0)
+        } else {
+            0.0
+        };
+        let apply_at = now_s + (base + jitter).max(0.0);
+        self.pending.push(PendingCommand { issued_at_s: now_s, apply_at_s: apply_at, cmd });
+        Some(apply_at)
+    }
+
+    /// Drain every command whose apply time has arrived, in apply order.
+    pub fn due(&mut self, now_s: f64) -> Vec<PendingCommand> {
+        let mut due: Vec<PendingCommand> =
+            self.pending.iter().copied().filter(|p| p.apply_at_s <= now_s).collect();
+        self.pending.retain(|p| p.apply_at_s > now_s);
+        due.sort_by(|a, b| a.apply_at_s.partial_cmp(&b.apply_at_s).unwrap());
+        due
+    }
+
+    /// Earliest pending apply time (for event scheduling).
+    pub fn next_apply(&self) -> Option<f64> {
+        self.pending.iter().map(|p| p.apply_at_s).fold(None, |acc, t| match acc {
+            None => Some(t),
+            Some(a) => Some(a.min(t)),
+        })
+    }
+
+    pub fn in_flight(&self) -> usize {
+        self.pending.len()
+    }
+
+    /// Is a command of this kind already in flight? (The manager avoids
+    /// spamming the slow channel with duplicates.)
+    pub fn has_pending(&self, pred: impl Fn(&OobCommand) -> bool) -> bool {
+        self.pending.iter().any(|p| pred(&p.cmd))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cap_takes_40s_brake_takes_5s() {
+        let mut ch = OobChannel::new(40.0, 5.0, 0);
+        let t_cap = ch
+            .issue(100.0, OobCommand::FreqCap { target: Priority::Low, mhz: 1275.0 })
+            .unwrap();
+        let t_brake = ch.issue(100.0, OobCommand::PowerBrake).unwrap();
+        assert_eq!(t_cap, 140.0);
+        assert_eq!(t_brake, 105.0);
+        // Nothing due yet.
+        assert!(ch.due(104.0).is_empty());
+        // Brake applies first despite being issued second.
+        let due = ch.due(141.0);
+        assert_eq!(due.len(), 2);
+        assert_eq!(due[0].cmd, OobCommand::PowerBrake);
+        assert_eq!(ch.in_flight(), 0);
+    }
+
+    #[test]
+    fn next_apply_tracks_earliest() {
+        let mut ch = OobChannel::new(40.0, 5.0, 0);
+        assert_eq!(ch.next_apply(), None);
+        ch.issue(0.0, OobCommand::FreqCap { target: Priority::High, mhz: 1305.0 });
+        ch.issue(0.0, OobCommand::PowerBrake);
+        assert_eq!(ch.next_apply(), Some(5.0));
+    }
+
+    #[test]
+    fn lossy_channel_drops_caps_not_brakes() {
+        let mut ch = OobChannel::new(40.0, 5.0, 3).with_unreliability(1.0, 0.0);
+        assert!(ch.issue(0.0, OobCommand::FreqCap { target: Priority::Low, mhz: 1110.0 }).is_none());
+        assert!(ch.issue(0.0, OobCommand::PowerBrake).is_some());
+    }
+
+    #[test]
+    fn jitter_bounded() {
+        let mut ch = OobChannel::new(40.0, 5.0, 7).with_unreliability(0.0, 0.25);
+        for _ in 0..100 {
+            let t = ch.issue(0.0, OobCommand::Uncap { target: Priority::Low }).unwrap();
+            assert!((30.0..=50.0).contains(&t), "t={t}");
+        }
+    }
+
+    #[test]
+    fn has_pending_predicate() {
+        let mut ch = OobChannel::new(40.0, 5.0, 0);
+        ch.issue(0.0, OobCommand::FreqCap { target: Priority::Low, mhz: 1275.0 });
+        assert!(ch.has_pending(|c| matches!(c, OobCommand::FreqCap { .. })));
+        assert!(!ch.has_pending(|c| matches!(c, OobCommand::PowerBrake)));
+    }
+}

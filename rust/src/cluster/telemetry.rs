@@ -1,0 +1,161 @@
+//! PDU row-power telemetry: delayed sampling (the power manager sees
+//! readings `telemetry_delay_s` late, Table 1) and the windowed spike
+//! statistics of Table 2 (max/P99/P90 power rise within 2 s / 5 s / 40 s)
+//! that POLCA's threshold choice depends on (§5.E).
+
+use std::collections::VecDeque;
+
+use crate::util::stats::{max_rise_within, Percentiles};
+
+/// Ring buffer of (time_s, normalized_row_power) samples with delayed
+/// read semantics.
+#[derive(Debug, Clone)]
+pub struct TelemetryBuffer {
+    samples: VecDeque<(f64, f64)>,
+    /// How long readings take to reach the power manager.
+    pub delay_s: f64,
+    /// Retention horizon for spike statistics.
+    pub retain_s: f64,
+}
+
+impl TelemetryBuffer {
+    pub fn new(delay_s: f64, retain_s: f64) -> Self {
+        TelemetryBuffer { samples: VecDeque::new(), delay_s, retain_s }
+    }
+
+    /// Record an instantaneous PDU reading at time `t`.
+    pub fn record(&mut self, t: f64, normalized_power: f64) {
+        debug_assert!(self.samples.back().map(|&(pt, _)| t >= pt).unwrap_or(true));
+        self.samples.push_back((t, normalized_power));
+        let horizon = t - self.retain_s;
+        while let Some(&(pt, _)) = self.samples.front() {
+            if pt < horizon && self.samples.len() > 1 {
+                self.samples.pop_front();
+            } else {
+                break;
+            }
+        }
+    }
+
+    /// What the power manager sees at time `t`: the newest sample that is
+    /// at least `delay_s` old. None until the pipeline fills.
+    pub fn visible_at(&self, t: f64) -> Option<(f64, f64)> {
+        let cutoff = t - self.delay_s;
+        self.samples.iter().rev().find(|&&(st, _)| st <= cutoff).copied()
+    }
+
+    /// Latest ground-truth sample (for the breaker/UPS, which see real
+    /// power immediately).
+    pub fn latest(&self) -> Option<(f64, f64)> {
+        self.samples.back().copied()
+    }
+
+    pub fn len(&self) -> usize {
+        self.samples.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.samples.is_empty()
+    }
+
+    /// Values in chronological order (for stats/export).
+    pub fn values(&self) -> Vec<f64> {
+        self.samples.iter().map(|&(_, p)| p).collect()
+    }
+
+    /// Sampling period estimate from the buffer.
+    fn period_s(&self) -> f64 {
+        if self.samples.len() < 2 {
+            return f64::NAN;
+        }
+        let (t0, _) = self.samples.front().unwrap();
+        let (t1, _) = self.samples.back().unwrap();
+        (t1 - t0) / (self.samples.len() - 1) as f64
+    }
+
+    /// Table 2 spike statistics over the retained window.
+    pub fn spike_stats(&self, windows_s: &[f64]) -> Vec<SpikeStats> {
+        let xs = self.values();
+        let period = self.period_s();
+        windows_s
+            .iter()
+            .map(|&w| {
+                let nsamples = if period.is_nan() { 1 } else { (w / period).round().max(1.0) as usize };
+                SpikeStats { window_s: w, max_rise: max_rise_within(&xs, nsamples) }
+            })
+            .collect()
+    }
+
+    /// Peak and percentile utilization over the retained window.
+    pub fn utilization(&self) -> (f64, f64, f64) {
+        let mut p = Percentiles::new();
+        for &(_, v) in &self.samples {
+            p.push(v);
+        }
+        (p.max(), p.p99(), p.mean())
+    }
+}
+
+/// Max power rise within a time window (normalized units).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SpikeStats {
+    pub window_s: f64,
+    pub max_rise: f64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn delayed_visibility() {
+        let mut tb = TelemetryBuffer::new(2.0, 100.0);
+        tb.record(0.0, 0.5);
+        tb.record(1.0, 0.6);
+        tb.record(2.0, 0.7);
+        tb.record(3.0, 0.8);
+        // At t=3, only samples <= 1.0 are visible.
+        assert_eq!(tb.visible_at(3.0), Some((1.0, 0.6)));
+        // Before the pipeline fills, nothing is visible.
+        assert_eq!(tb.visible_at(2.0), Some((0.0, 0.5)));
+        assert_eq!(tb.visible_at(1.5), None);
+        assert_eq!(tb.visible_at(-1.0), None);
+        // Ground truth is immediate.
+        assert_eq!(tb.latest(), Some((3.0, 0.8)));
+    }
+
+    #[test]
+    fn retention_evicts_old() {
+        let mut tb = TelemetryBuffer::new(0.0, 10.0);
+        for i in 0..100 {
+            tb.record(i as f64, 0.5);
+        }
+        assert!(tb.len() <= 12, "len={}", tb.len());
+    }
+
+    #[test]
+    fn spike_stats_windows() {
+        let mut tb = TelemetryBuffer::new(0.0, 1000.0);
+        // 2s sampling; a spike of +0.3 that takes 3 samples (6s) to build
+        let series = [0.5, 0.5, 0.5, 0.6, 0.7, 0.8, 0.5, 0.5];
+        for (i, &v) in series.iter().enumerate() {
+            tb.record(i as f64 * 2.0, v);
+        }
+        let stats = tb.spike_stats(&[2.0, 40.0]);
+        // within 2s (1 sample): max adjacent rise = 0.1
+        assert!((stats[0].max_rise - 0.1).abs() < 1e-12);
+        // within 40s (20 samples): full rise 0.3
+        assert!((stats[1].max_rise - 0.3).abs() < 1e-12);
+        assert!(stats[1].max_rise >= stats[0].max_rise);
+    }
+
+    #[test]
+    fn utilization_summary() {
+        let mut tb = TelemetryBuffer::new(0.0, 1000.0);
+        for i in 0..100 {
+            tb.record(i as f64, if i == 50 { 0.9 } else { 0.5 });
+        }
+        let (peak, _p99, mean) = tb.utilization();
+        assert!((peak - 0.9).abs() < 1e-12);
+        assert!((mean - 0.504).abs() < 1e-9);
+    }
+}

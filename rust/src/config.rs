@@ -1,0 +1,394 @@
+//! Configuration system: a TOML-subset parser plus the typed experiment
+//! configuration used across the simulator, with presets matching the
+//! paper's Tables 1, 3, 4 and 5.
+//!
+//! Supported TOML subset (enough for real deployment configs):
+//! `[section]` headers, `key = value` with strings, integers, floats,
+//! booleans, and flat arrays; `#` comments.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context};
+
+/// A parsed flat-ish TOML document: section -> key -> value.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Toml {
+    pub sections: BTreeMap<String, BTreeMap<String, TomlValue>>,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum TomlValue {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Arr(Vec<TomlValue>),
+}
+
+impl TomlValue {
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            TomlValue::Float(x) => Some(*x),
+            TomlValue::Int(x) => Some(*x as f64),
+            _ => None,
+        }
+    }
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            TomlValue::Int(x) => Some(*x),
+            _ => None,
+        }
+    }
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            TomlValue::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            TomlValue::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+}
+
+impl Toml {
+    pub fn parse(input: &str) -> anyhow::Result<Toml> {
+        let mut doc = Toml::default();
+        let mut section = String::new();
+        doc.sections.entry(section.clone()).or_default();
+        for (lineno, raw) in input.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(name) = line.strip_prefix('[') {
+                let name = name
+                    .strip_suffix(']')
+                    .with_context(|| format!("line {}: bad section header", lineno + 1))?;
+                section = name.trim().to_string();
+                doc.sections.entry(section.clone()).or_default();
+            } else if let Some((k, v)) = line.split_once('=') {
+                let value = parse_value(v.trim())
+                    .with_context(|| format!("line {}: bad value '{}'", lineno + 1, v.trim()))?;
+                doc.sections
+                    .get_mut(&section)
+                    .unwrap()
+                    .insert(k.trim().to_string(), value);
+            } else {
+                bail!("line {}: expected 'key = value' or '[section]'", lineno + 1);
+            }
+        }
+        Ok(doc)
+    }
+
+    pub fn get(&self, section: &str, key: &str) -> Option<&TomlValue> {
+        self.sections.get(section)?.get(key)
+    }
+
+    pub fn f64_or(&self, section: &str, key: &str, default: f64) -> f64 {
+        self.get(section, key).and_then(|v| v.as_f64()).unwrap_or(default)
+    }
+
+    pub fn usize_or(&self, section: &str, key: &str, default: usize) -> usize {
+        self.get(section, key).and_then(|v| v.as_i64()).map(|x| x as usize).unwrap_or(default)
+    }
+
+    pub fn bool_or(&self, section: &str, key: &str, default: bool) -> bool {
+        self.get(section, key).and_then(|v| v.as_bool()).unwrap_or(default)
+    }
+
+    pub fn str_or<'a>(&'a self, section: &str, key: &str, default: &'a str) -> &'a str {
+        self.get(section, key).and_then(|v| v.as_str()).unwrap_or(default)
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // Respect '#' inside quoted strings.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> anyhow::Result<TomlValue> {
+    if let Some(inner) = s.strip_prefix('"') {
+        let inner = inner.strip_suffix('"').context("unterminated string")?;
+        return Ok(TomlValue::Str(inner.replace("\\\"", "\"").replace("\\\\", "\\")));
+    }
+    if s == "true" {
+        return Ok(TomlValue::Bool(true));
+    }
+    if s == "false" {
+        return Ok(TomlValue::Bool(false));
+    }
+    if let Some(inner) = s.strip_prefix('[') {
+        let inner = inner.strip_suffix(']').context("unterminated array")?;
+        let mut items = Vec::new();
+        let trimmed = inner.trim();
+        if !trimmed.is_empty() {
+            for part in split_top_level(trimmed) {
+                items.push(parse_value(part.trim())?);
+            }
+        }
+        return Ok(TomlValue::Arr(items));
+    }
+    if let Ok(i) = s.parse::<i64>() {
+        return Ok(TomlValue::Int(i));
+    }
+    if let Ok(f) = s.parse::<f64>() {
+        return Ok(TomlValue::Float(f));
+    }
+    bail!("unparseable value")
+}
+
+fn split_top_level(s: &str) -> Vec<&str> {
+    let mut parts = Vec::new();
+    let mut depth = 0usize;
+    let mut in_str = false;
+    let mut start = 0usize;
+    for (i, c) in s.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '[' if !in_str => depth += 1,
+            ']' if !in_str => depth = depth.saturating_sub(1),
+            ',' if !in_str && depth == 0 => {
+                parts.push(&s[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    parts.push(&s[start..]);
+    parts
+}
+
+// ---------------------------------------------------------------------------
+// Typed cluster/simulation configuration (paper defaults).
+// ---------------------------------------------------------------------------
+
+/// Row-level parameters — paper Table 1 defaults.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RowConfig {
+    /// Baseline number of servers the row's power budget was provisioned for.
+    pub num_servers: usize,
+    /// Telemetry sampling delay (PDU -> power manager), seconds.
+    pub telemetry_delay_s: f64,
+    /// Hardware powerbrake engage latency, seconds.
+    pub power_brake_latency_s: f64,
+    /// Out-of-band (SMBPBI via BMC) cap-apply latency, seconds.
+    pub oob_latency_s: f64,
+    /// Telemetry sampling period, seconds.
+    pub telemetry_period_s: f64,
+}
+
+impl Default for RowConfig {
+    fn default() -> Self {
+        // Table 1: 40 DGX-A100 servers, 2s telemetry, 5s brake, 40s OOB.
+        RowConfig {
+            num_servers: 40,
+            telemetry_delay_s: 2.0,
+            power_brake_latency_s: 5.0,
+            oob_latency_s: 40.0,
+            telemetry_period_s: 2.0,
+        }
+    }
+}
+
+/// POLCA policy parameters — paper §5.1 / Table 3.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PolicyConfig {
+    /// Lower threshold (fraction of row budget); caps LP workloads.
+    pub t1: f64,
+    /// Upper threshold; caps LP harder, then HP.
+    pub t2: f64,
+    /// Hysteresis: uncap when power < threshold - buffer (paper: 5%).
+    pub t1_buffer: f64,
+    pub t2_buffer: f64,
+    /// LP cap at T1 (MHz): A100 base frequency.
+    pub lp_freq_t1_mhz: f64,
+    /// LP cap at T2 (MHz).
+    pub lp_freq_t2_mhz: f64,
+    /// HP cap at T2 (MHz).
+    pub hp_freq_t2_mhz: f64,
+    /// Powerbrake frequency (MHz) — near-halt.
+    pub brake_freq_mhz: f64,
+    /// Nominal max SM clock (MHz).
+    pub max_freq_mhz: f64,
+}
+
+impl Default for PolicyConfig {
+    fn default() -> Self {
+        PolicyConfig {
+            t1: 0.80,
+            t2: 0.89,
+            t1_buffer: 0.05,
+            t2_buffer: 0.05,
+            lp_freq_t1_mhz: 1275.0,
+            lp_freq_t2_mhz: 1110.0,
+            hp_freq_t2_mhz: 1305.0,
+            brake_freq_mhz: 288.0,
+            max_freq_mhz: 1410.0,
+        }
+    }
+}
+
+/// SLOs — paper Table 5.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SloConfig {
+    pub hp_p50_impact: f64,
+    pub hp_p99_impact: f64,
+    pub lp_p50_impact: f64,
+    pub lp_p99_impact: f64,
+    pub max_powerbrakes: u64,
+}
+
+impl Default for SloConfig {
+    fn default() -> Self {
+        SloConfig {
+            hp_p50_impact: 0.01,
+            hp_p99_impact: 0.05,
+            lp_p50_impact: 0.05,
+            lp_p99_impact: 0.50,
+            max_powerbrakes: 0,
+        }
+    }
+}
+
+/// Full experiment configuration.
+#[derive(Debug, Clone, Default)]
+pub struct ExperimentConfig {
+    pub row: RowConfig,
+    pub policy: PolicyConfig,
+    pub slo: SloConfig,
+    pub seed: u64,
+}
+
+impl ExperimentConfig {
+    /// Overlay values from a TOML document onto the defaults.
+    pub fn from_toml(doc: &Toml) -> ExperimentConfig {
+        let d = ExperimentConfig::default();
+        ExperimentConfig {
+            row: RowConfig {
+                num_servers: doc.usize_or("row", "num_servers", d.row.num_servers),
+                telemetry_delay_s: doc.f64_or("row", "telemetry_delay_s", d.row.telemetry_delay_s),
+                power_brake_latency_s: doc
+                    .f64_or("row", "power_brake_latency_s", d.row.power_brake_latency_s),
+                oob_latency_s: doc.f64_or("row", "oob_latency_s", d.row.oob_latency_s),
+                telemetry_period_s: doc
+                    .f64_or("row", "telemetry_period_s", d.row.telemetry_period_s),
+            },
+            policy: PolicyConfig {
+                t1: doc.f64_or("policy", "t1", d.policy.t1),
+                t2: doc.f64_or("policy", "t2", d.policy.t2),
+                t1_buffer: doc.f64_or("policy", "t1_buffer", d.policy.t1_buffer),
+                t2_buffer: doc.f64_or("policy", "t2_buffer", d.policy.t2_buffer),
+                lp_freq_t1_mhz: doc.f64_or("policy", "lp_freq_t1_mhz", d.policy.lp_freq_t1_mhz),
+                lp_freq_t2_mhz: doc.f64_or("policy", "lp_freq_t2_mhz", d.policy.lp_freq_t2_mhz),
+                hp_freq_t2_mhz: doc.f64_or("policy", "hp_freq_t2_mhz", d.policy.hp_freq_t2_mhz),
+                brake_freq_mhz: doc.f64_or("policy", "brake_freq_mhz", d.policy.brake_freq_mhz),
+                max_freq_mhz: doc.f64_or("policy", "max_freq_mhz", d.policy.max_freq_mhz),
+            },
+            slo: SloConfig {
+                hp_p50_impact: doc.f64_or("slo", "hp_p50_impact", d.slo.hp_p50_impact),
+                hp_p99_impact: doc.f64_or("slo", "hp_p99_impact", d.slo.hp_p99_impact),
+                lp_p50_impact: doc.f64_or("slo", "lp_p50_impact", d.slo.lp_p50_impact),
+                lp_p99_impact: doc.f64_or("slo", "lp_p99_impact", d.slo.lp_p99_impact),
+                max_powerbrakes: doc
+                    .get("slo", "max_powerbrakes")
+                    .and_then(|v| v.as_i64())
+                    .map(|x| x as u64)
+                    .unwrap_or(d.slo.max_powerbrakes),
+            },
+            seed: doc.get("", "seed").and_then(|v| v.as_i64()).map(|x| x as u64).unwrap_or(0),
+        }
+    }
+
+    pub fn load(path: &std::path::Path) -> anyhow::Result<ExperimentConfig> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading config {}", path.display()))?;
+        Ok(Self::from_toml(&Toml::parse(&text)?))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let doc = Toml::parse(
+            r#"
+            seed = 7
+            [row]
+            num_servers = 52         # oversubscribed
+            telemetry_delay_s = 2.5
+            [policy]
+            name = "polca"
+            freqs = [1275, 1110.5, "x"]
+            enabled = true
+            "#,
+        )
+        .unwrap();
+        assert_eq!(doc.usize_or("row", "num_servers", 0), 52);
+        assert_eq!(doc.f64_or("row", "telemetry_delay_s", 0.0), 2.5);
+        assert_eq!(doc.str_or("policy", "name", ""), "polca");
+        assert!(doc.bool_or("policy", "enabled", false));
+        let arr = doc.get("policy", "freqs").unwrap();
+        match arr {
+            TomlValue::Arr(v) => {
+                assert_eq!(v[0].as_i64(), Some(1275));
+                assert_eq!(v[1].as_f64(), Some(1110.5));
+                assert_eq!(v[2].as_str(), Some("x"));
+            }
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(Toml::parse("[unclosed").is_err());
+        assert!(Toml::parse("justakey").is_err());
+        assert!(Toml::parse("k = @@@").is_err());
+    }
+
+    #[test]
+    fn comment_inside_string_preserved() {
+        let doc = Toml::parse("k = \"a # b\"").unwrap();
+        assert_eq!(doc.str_or("", "k", ""), "a # b");
+    }
+
+    #[test]
+    fn defaults_match_paper_tables() {
+        let row = RowConfig::default();
+        assert_eq!(row.num_servers, 40); // Table 1
+        assert_eq!(row.telemetry_delay_s, 2.0);
+        assert_eq!(row.power_brake_latency_s, 5.0);
+        assert_eq!(row.oob_latency_s, 40.0);
+        let pol = PolicyConfig::default();
+        assert_eq!((pol.t1, pol.t2), (0.80, 0.89)); // §6.2 chosen thresholds
+        assert_eq!(pol.lp_freq_t1_mhz, 1275.0); // Table 3
+        assert_eq!(pol.lp_freq_t2_mhz, 1110.0);
+        assert_eq!(pol.hp_freq_t2_mhz, 1305.0);
+        assert_eq!(pol.brake_freq_mhz, 288.0);
+        let slo = SloConfig::default();
+        assert_eq!(slo.max_powerbrakes, 0); // Table 5
+        assert_eq!(slo.lp_p99_impact, 0.50);
+    }
+
+    #[test]
+    fn from_toml_overlays() {
+        let doc = Toml::parse("[policy]\nt1 = 0.75\nt2 = 0.85\n").unwrap();
+        let cfg = ExperimentConfig::from_toml(&doc);
+        assert_eq!(cfg.policy.t1, 0.75);
+        assert_eq!(cfg.policy.t2, 0.85);
+        assert_eq!(cfg.policy.lp_freq_t1_mhz, 1275.0); // default retained
+        assert_eq!(cfg.row.num_servers, 40);
+    }
+}

@@ -1,0 +1,126 @@
+//! KV-cache slot management: each in-flight request owns exactly one
+//! batch slot of the static-shaped KV cache (the protocol the L2 model
+//! defines — see python/compile/model.py docstring).
+
+/// Free-list slot allocator with occupancy tracking.
+#[derive(Debug, Clone)]
+pub struct SlotManager {
+    free: Vec<usize>,
+    total: usize,
+    in_use: Vec<bool>,
+}
+
+impl SlotManager {
+    pub fn new(total: usize) -> Self {
+        SlotManager { free: (0..total).rev().collect(), total, in_use: vec![false; total] }
+    }
+
+    pub fn total(&self) -> usize {
+        self.total
+    }
+
+    pub fn available(&self) -> usize {
+        self.free.len()
+    }
+
+    pub fn occupied(&self) -> usize {
+        self.total - self.free.len()
+    }
+
+    /// Claim a slot, if any.
+    pub fn acquire(&mut self) -> Option<usize> {
+        let slot = self.free.pop()?;
+        debug_assert!(!self.in_use[slot]);
+        self.in_use[slot] = true;
+        Some(slot)
+    }
+
+    /// Return a slot. Panics on double-free (a protocol violation the
+    /// coordinator must never commit).
+    pub fn release(&mut self, slot: usize) {
+        assert!(slot < self.total, "slot {slot} out of range");
+        assert!(self.in_use[slot], "double free of slot {slot}");
+        self.in_use[slot] = false;
+        self.free.push(slot);
+    }
+
+    pub fn is_in_use(&self, slot: usize) -> bool {
+        self.in_use[slot]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn acquire_release_cycle() {
+        let mut s = SlotManager::new(3);
+        assert_eq!(s.available(), 3);
+        let a = s.acquire().unwrap();
+        let b = s.acquire().unwrap();
+        assert_ne!(a, b);
+        assert_eq!(s.occupied(), 2);
+        s.release(a);
+        assert_eq!(s.available(), 2);
+        let c = s.acquire().unwrap();
+        let d = s.acquire().unwrap();
+        assert!(s.acquire().is_none());
+        assert_eq!(s.occupied(), 3);
+        s.release(b);
+        s.release(c);
+        s.release(d);
+        assert_eq!(s.available(), 3);
+    }
+
+    #[test]
+    #[should_panic(expected = "double free")]
+    fn double_free_panics() {
+        let mut s = SlotManager::new(2);
+        let a = s.acquire().unwrap();
+        s.release(a);
+        s.release(a);
+    }
+
+    /// Property: under any random acquire/release schedule, no slot is
+    /// ever handed out twice concurrently and occupancy accounting holds.
+    #[test]
+    fn property_no_aliasing() {
+        testing::check_default(
+            "slot-no-aliasing",
+            |r: &mut Rng| {
+                let n = r.range_usize(1, 6);
+                let ops: Vec<bool> = (0..40).map(|_| r.bool(0.6)).collect();
+                (n, ops)
+            },
+            |(n, ops)| {
+                let mut s = SlotManager::new(*n);
+                let mut held: Vec<usize> = Vec::new();
+                for &acquire in ops {
+                    if acquire {
+                        if let Some(slot) = s.acquire() {
+                            if held.contains(&slot) {
+                                return Err(format!("slot {slot} aliased"));
+                            }
+                            held.push(slot);
+                        } else if held.len() != *n {
+                            return Err("acquire failed below capacity".into());
+                        }
+                    } else if let Some(slot) = held.pop() {
+                        s.release(slot);
+                    }
+                    if s.occupied() != held.len() {
+                        return Err(format!(
+                            "occupancy {} != held {}",
+                            s.occupied(),
+                            held.len()
+                        ));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+}

@@ -1,0 +1,14 @@
+//! The serving coordinator: request router, continuous batcher over the
+//! static-slot KV cache, and the power adapter that puts POLCA in the
+//! loop of the live PJRT serving path (the end-to-end driver of
+//! `examples/serve_polca.rs`).
+
+pub mod batcher;
+pub mod kv;
+pub mod power;
+pub mod router;
+
+pub use batcher::{Completion, Coordinator, PhaseRecord, PhaseTimeline, Request};
+pub use kv::SlotManager;
+pub use power::{run_policy_over_row, timeline_power, NodePowerTrace, ServingPolicyReport};
+pub use router::{Replica, RoutePolicy, Router};

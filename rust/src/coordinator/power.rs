@@ -1,0 +1,204 @@
+//! Power adapter for the live serving path: convert an executed
+//! [`PhaseTimeline`] into the modeled power draw of the serving node, and
+//! run the POLCA policy engine over a replicated row of such nodes — the
+//! "POLCA in the loop" half of the end-to-end driver.
+//!
+//! The compute is real (PJRT); the *power* is modeled, because this
+//! testbed has no DCGM/A100 (DESIGN.md §2 substitution table). Phases map
+//! exactly: the prefill kernel's MXU burst → prompt-spike power, the
+//! decode matvec → token-phase power, idle gaps → idle power.
+
+use crate::config::PolicyConfig;
+use crate::policy::engine::{PolicyEngine, PolicyKind};
+use crate::power::gpu::{CapMode, GpuPowerCalib, Phase};
+use crate::power::server::ServerPowerModel;
+
+use super::batcher::{PhaseRecord, PhaseTimeline};
+
+/// Sampled modeled power for a node.
+#[derive(Debug, Clone)]
+pub struct NodePowerTrace {
+    pub dt_s: f64,
+    /// Fraction of the node's provisioned power per sample.
+    pub samples: Vec<f64>,
+}
+
+/// Convert a timeline into a sampled power trace.
+///
+/// `time_scale` stretches the (fast, tiny-model) wall clock onto the
+/// characteristic durations of production phases so the policy sees
+/// realistic dynamics; 1.0 uses raw wall time.
+pub fn timeline_power(
+    timeline: &PhaseTimeline,
+    model: &ServerPowerModel,
+    dt_s: f64,
+    time_scale: f64,
+) -> NodePowerTrace {
+    let end = timeline
+        .records
+        .iter()
+        .map(|r| match *r {
+            PhaseRecord::Prefill(t, d, _) | PhaseRecord::Decode(t, d, _) => (t + d) * time_scale,
+        })
+        .fold(0.0_f64, f64::max);
+    let n = (end / dt_s).ceil() as usize + 1;
+    let mut samples = vec![model.server_power_w(Phase::Idle, CapMode::None, false); n];
+    for rec in &timeline.records {
+        let (t0, d, phase) = match *rec {
+            PhaseRecord::Prefill(t, d, toks) => {
+                (t * time_scale, d * time_scale, Phase::Prompt { total_input: toks as f64 })
+            }
+            PhaseRecord::Decode(t, d, batch) => {
+                (t * time_scale, d * time_scale, Phase::Token { batch: batch as f64 })
+            }
+        };
+        let w = model.server_power_w(phase, CapMode::None, false);
+        let i0 = (t0 / dt_s) as usize;
+        let i1 = ((t0 + d) / dt_s).ceil() as usize;
+        for i in i0..i1.min(n) {
+            samples[i] = samples[i].max(w);
+        }
+    }
+    let prov = model.provisioned_w();
+    NodePowerTrace { dt_s, samples: samples.into_iter().map(|w| w / prov).collect() }
+}
+
+/// Outcome of running POLCA over a replicated row of serving nodes.
+#[derive(Debug, Clone)]
+pub struct ServingPolicyReport {
+    /// Normalized row power before policy action.
+    pub row_power: Vec<f64>,
+    /// Cap state over time: (t_s, lp_cap_mhz, hp_cap_mhz, braked).
+    pub cap_timeline: Vec<(f64, Option<f64>, Option<f64>, bool)>,
+    pub brake_events: u64,
+    /// Modeled LP/HP latency stretch if the caps had applied to the
+    /// executed phases (aggregate factor over the run).
+    pub lp_modeled_stretch: f64,
+    pub hp_modeled_stretch: f64,
+}
+
+/// Replicate one node's trace into a row of `n_replicas` (each shifted by
+/// one sample per replica — the arrival-time decorrelation of §2.3) and
+/// drive the policy engine over the aggregate.
+pub fn run_policy_over_row(
+    trace: &NodePowerTrace,
+    n_replicas: usize,
+    oversubscription: f64,
+    policy_cfg: &PolicyConfig,
+    calib: &GpuPowerCalib,
+    token_compute_frac: f64,
+    prompt_compute_frac: f64,
+) -> ServingPolicyReport {
+    let n = trace.samples.len();
+    let mut row = vec![0.0; n];
+    for r in 0..n_replicas {
+        let shift = (r * 7 + 3) % n.max(1);
+        for i in 0..n {
+            row[i] += trace.samples[(i + shift) % n];
+        }
+    }
+    // Budget provisioned for n_replicas / oversubscription nodes.
+    let budget = n_replicas as f64 / oversubscription;
+    for p in row.iter_mut() {
+        *p /= budget;
+    }
+
+    let mut engine = PolicyEngine::new(PolicyKind::Polca, policy_cfg.clone());
+    let mut cap_timeline = Vec::new();
+    let mut lp_stretch_acc = 0.0;
+    let mut hp_stretch_acc = 0.0;
+    for (i, &p) in row.iter().enumerate() {
+        let t = i as f64 * trace.dt_s;
+        let _ = engine.tick(t, p);
+        let intent = engine.intent();
+        cap_timeline.push((t, intent.lp_cap_mhz, intent.hp_cap_mhz, engine.is_braked()));
+        let stretch = |cap: Option<f64>, cf: f64| -> f64 {
+            let r = cap.map(|m| m / calib.max_freq_mhz).unwrap_or(1.0);
+            cf / r + (1.0 - cf)
+        };
+        // Weight prompt/token by their rough duty cycle in the trace.
+        let mix = 0.1 * prompt_compute_frac + 0.9 * token_compute_frac;
+        lp_stretch_acc += stretch(intent.lp_cap_mhz, mix);
+        hp_stretch_acc += stretch(intent.hp_cap_mhz, mix);
+    }
+    ServingPolicyReport {
+        row_power: row,
+        cap_timeline,
+        brake_events: engine.brake_events,
+        lp_modeled_stretch: lp_stretch_acc / n as f64,
+        hp_modeled_stretch: hp_stretch_acc / n as f64,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mini_timeline() -> PhaseTimeline {
+        PhaseTimeline {
+            records: vec![
+                PhaseRecord::Prefill(0.0, 0.2, 2048),
+                PhaseRecord::Decode(0.2, 0.1, 2),
+                PhaseRecord::Decode(0.3, 0.1, 2),
+                PhaseRecord::Prefill(0.45, 0.15, 4096),
+                PhaseRecord::Decode(0.6, 0.4, 3),
+            ],
+        }
+    }
+
+    #[test]
+    fn power_trace_shows_phase_structure() {
+        let model = ServerPowerModel::default();
+        let trace = timeline_power(&mini_timeline(), &model, 0.05, 1.0);
+        let peak = trace.samples.iter().cloned().fold(0.0_f64, f64::max);
+        let min = trace.samples.iter().cloned().fold(f64::INFINITY, f64::min);
+        assert!(peak > min * 1.5, "peak={peak} min={min}");
+        // prefill moments are the peak
+        let idx_peak = trace.samples.iter().position(|&p| p == peak).unwrap();
+        assert!(idx_peak <= (0.2 / 0.05) as usize + 1 || idx_peak >= (0.45 / 0.05) as usize);
+    }
+
+    #[test]
+    fn time_scale_stretches() {
+        let model = ServerPowerModel::default();
+        let a = timeline_power(&mini_timeline(), &model, 0.05, 1.0);
+        let b = timeline_power(&mini_timeline(), &model, 0.05, 10.0);
+        assert!(b.samples.len() > a.samples.len() * 5);
+    }
+
+    #[test]
+    fn oversubscribed_row_triggers_caps() {
+        let model = ServerPowerModel::default();
+        let trace = timeline_power(&mini_timeline(), &model, 0.05, 1.0);
+        let report = run_policy_over_row(
+            &trace,
+            40,
+            2.2, // extreme oversubscription to force T1/T2
+            &PolicyConfig::default(),
+            &model.calib,
+            0.22,
+            0.92,
+        );
+        let any_cap = report.cap_timeline.iter().any(|(_, lp, _, _)| lp.is_some());
+        assert!(any_cap, "expected LP caps under heavy oversubscription");
+        assert!(report.lp_modeled_stretch >= report.hp_modeled_stretch);
+    }
+
+    #[test]
+    fn unsubscribed_row_never_caps() {
+        let model = ServerPowerModel::default();
+        let trace = timeline_power(&mini_timeline(), &model, 0.05, 1.0);
+        let report = run_policy_over_row(
+            &trace,
+            40,
+            0.8, // under-subscribed
+            &PolicyConfig::default(),
+            &model.calib,
+            0.22,
+            0.92,
+        );
+        assert!(report.cap_timeline.iter().all(|(_, lp, hp, b)| lp.is_none() && hp.is_none() && !b));
+        assert_eq!(report.brake_events, 0);
+        assert!((report.lp_modeled_stretch - 1.0).abs() < 1e-9);
+    }
+}

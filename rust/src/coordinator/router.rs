@@ -1,0 +1,184 @@
+//! Request router: spreads incoming requests across serving replicas.
+//!
+//! Production LLM fleets put a load balancer in front of the row (§6.3's
+//! "typical load balanced setup, reducing the chance of simultaneous
+//! capping"). The router is generic over the replica handle so the same
+//! policy drives the real [`super::batcher::Coordinator`] nodes and the
+//! simulator/tests' mock nodes.
+
+use crate::cluster::hierarchy::Priority;
+
+/// Load view a router needs from a replica.
+pub trait Replica {
+    /// In-flight + queued work units.
+    fn load(&self) -> usize;
+    /// Whether the replica can accept another request at all.
+    fn accepting(&self) -> bool;
+}
+
+/// Routing decision policies.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RoutePolicy {
+    /// Pick the least-loaded accepting replica (ties → lowest index).
+    LeastLoaded,
+    /// Round-robin over accepting replicas.
+    RoundRobin,
+}
+
+/// The router: stateless except for the round-robin cursor.
+#[derive(Debug, Clone)]
+pub struct Router {
+    pub policy: RoutePolicy,
+    cursor: usize,
+    /// Routed-request counters per priority (observability).
+    pub routed_hp: u64,
+    pub routed_lp: u64,
+    pub unroutable: u64,
+}
+
+impl Router {
+    pub fn new(policy: RoutePolicy) -> Self {
+        Router { policy, cursor: 0, routed_hp: 0, routed_lp: 0, unroutable: 0 }
+    }
+
+    /// Pick a replica index for a request, or None if nobody accepts.
+    pub fn route<R: Replica>(&mut self, replicas: &[R], priority: Priority) -> Option<usize> {
+        let pick = match self.policy {
+            RoutePolicy::LeastLoaded => replicas
+                .iter()
+                .enumerate()
+                .filter(|(_, r)| r.accepting())
+                .min_by_key(|(i, r)| (r.load(), *i))
+                .map(|(i, _)| i),
+            RoutePolicy::RoundRobin => {
+                let n = replicas.len();
+                (0..n)
+                    .map(|k| (self.cursor + k) % n)
+                    .find(|&i| replicas[i].accepting())
+                    .inspect(|&i| self.cursor = (i + 1) % n)
+            }
+        };
+        match pick {
+            Some(i) => {
+                match priority {
+                    Priority::High => self.routed_hp += 1,
+                    Priority::Low => self.routed_lp += 1,
+                }
+                Some(i)
+            }
+            None => {
+                self.unroutable += 1;
+                None
+            }
+        }
+    }
+}
+
+impl Replica for super::batcher::Coordinator {
+    fn load(&self) -> usize {
+        self.pending() + self.active_count()
+    }
+    fn accepting(&self) -> bool {
+        self.pending() < self.max_queue
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing;
+    use crate::util::rng::Rng;
+
+    #[derive(Debug)]
+    struct Mock {
+        load: usize,
+        accepting: bool,
+    }
+    impl Replica for Mock {
+        fn load(&self) -> usize {
+            self.load
+        }
+        fn accepting(&self) -> bool {
+            self.accepting
+        }
+    }
+
+    #[test]
+    fn least_loaded_picks_min() {
+        let replicas = vec![
+            Mock { load: 5, accepting: true },
+            Mock { load: 2, accepting: true },
+            Mock { load: 2, accepting: false },
+            Mock { load: 9, accepting: true },
+        ];
+        let mut r = Router::new(RoutePolicy::LeastLoaded);
+        assert_eq!(r.route(&replicas, Priority::High), Some(1));
+        assert_eq!(r.routed_hp, 1);
+    }
+
+    #[test]
+    fn round_robin_skips_full() {
+        let replicas = vec![
+            Mock { load: 0, accepting: true },
+            Mock { load: 0, accepting: false },
+            Mock { load: 0, accepting: true },
+        ];
+        let mut r = Router::new(RoutePolicy::RoundRobin);
+        assert_eq!(r.route(&replicas, Priority::Low), Some(0));
+        assert_eq!(r.route(&replicas, Priority::Low), Some(2));
+        assert_eq!(r.route(&replicas, Priority::Low), Some(0));
+        assert_eq!(r.routed_lp, 3);
+    }
+
+    #[test]
+    fn nobody_accepting_counts_unroutable() {
+        let replicas = vec![Mock { load: 0, accepting: false }];
+        let mut r = Router::new(RoutePolicy::LeastLoaded);
+        assert_eq!(r.route(&replicas, Priority::High), None);
+        assert_eq!(r.unroutable, 1);
+    }
+
+    /// Property: the router never returns a non-accepting replica, and
+    /// least-loaded never returns one with load above the min accepting.
+    #[test]
+    fn property_routing_validity() {
+        testing::check_default(
+            "router-validity",
+            |r: &mut Rng| {
+                let n = r.range_usize(1, 8);
+                (0..n)
+                    .map(|_| (r.range_usize(0, 20), r.bool(0.7)))
+                    .collect::<Vec<_>>()
+            },
+            |spec| {
+                let replicas: Vec<Mock> = spec
+                    .iter()
+                    .map(|&(load, accepting)| Mock { load, accepting })
+                    .collect();
+                let mut router = Router::new(RoutePolicy::LeastLoaded);
+                match router.route(&replicas, Priority::Low) {
+                    Some(i) => {
+                        if !replicas[i].accepting {
+                            return Err(format!("routed to full replica {i}"));
+                        }
+                        let min = replicas
+                            .iter()
+                            .filter(|m| m.accepting)
+                            .map(|m| m.load)
+                            .min()
+                            .unwrap();
+                        if replicas[i].load != min {
+                            return Err("not least loaded".into());
+                        }
+                    }
+                    None => {
+                        if replicas.iter().any(|m| m.accepting) {
+                            return Err("failed to route despite capacity".into());
+                        }
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+}

@@ -1,0 +1,130 @@
+//! Reproduction harness: one generator per table/figure in the paper's
+//! evaluation (see DESIGN.md §4 for the full index). Each generator
+//! prints the paper-style rows and emits CSV/JSON under an output
+//! directory for plotting.
+
+pub mod characterization;
+pub mod evaluation;
+
+use std::path::Path;
+
+use crate::util::csv::Csv;
+use crate::util::table::Table;
+
+/// Output of one experiment generator.
+#[derive(Debug, Clone, Default)]
+pub struct FigureOutput {
+    pub id: String,
+    pub title: String,
+    pub tables: Vec<Table>,
+    pub csvs: Vec<(String, Csv)>,
+    pub notes: Vec<String>,
+}
+
+impl FigureOutput {
+    pub fn new(id: &str, title: &str) -> Self {
+        FigureOutput { id: id.into(), title: title.into(), ..Default::default() }
+    }
+
+    pub fn print(&self) {
+        println!("=== {} — {} ===", self.id, self.title);
+        for t in &self.tables {
+            println!("{}", t.render());
+        }
+        for n in &self.notes {
+            println!("note: {n}");
+        }
+    }
+
+    pub fn write(&self, out_dir: &Path) -> anyhow::Result<()> {
+        std::fs::create_dir_all(out_dir)?;
+        for (name, csv) in &self.csvs {
+            csv.write_to(&out_dir.join(name))?;
+        }
+        Ok(())
+    }
+}
+
+/// Experiment speed: `Quick` shortens simulated horizons for smoke runs;
+/// `Full` uses the paper's durations (1-week tuning, 5-week evaluation).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Depth {
+    Quick,
+    Full,
+}
+
+impl Depth {
+    pub fn weeks(&self, full: f64) -> f64 {
+        match self {
+            Depth::Quick => (full * 0.15).max(0.1),
+            Depth::Full => full,
+        }
+    }
+}
+
+/// All known experiment ids, in paper order.
+pub fn all_ids() -> Vec<&'static str> {
+    vec![
+        "table1", "fig2", "fig4", "fig5", "fig6", "fig7", "fig8", "fig9", "fig11", "table2",
+        "table3", "table4", "table5", "fig13", "fig14", "fig15a", "fig15b", "fig16", "fig17",
+        "fig18", "fig19",
+    ]
+}
+
+/// Run one experiment by id.
+pub fn run_experiment(id: &str, depth: Depth, seed: u64) -> anyhow::Result<FigureOutput> {
+    use characterization as ch;
+    use evaluation as ev;
+    Ok(match id {
+        "table1" => ch::table1(),
+        "fig2" => ch::fig2(),
+        "fig4" => ch::fig4(seed),
+        "fig5" => ch::fig5(),
+        "fig6" => ch::fig6(),
+        "fig7" => ch::fig7(),
+        "fig8" => ch::fig8(seed),
+        "fig9" => ch::fig9(),
+        "fig11" => ch::fig11(seed),
+        "fig19" => ch::fig19(),
+        "table3" => ch::table3(),
+        "table4" => ch::table4_fig(),
+        "table5" => ch::table5(),
+        "table2" => ev::table2(depth, seed),
+        "fig13" => ev::fig13(depth, seed),
+        "fig14" => ev::fig14(depth, seed),
+        "fig15a" => ev::fig15a(depth, seed),
+        "fig15b" => ev::fig15b(depth, seed),
+        "fig16" => ev::fig16(depth, seed),
+        "fig17" => ev::fig17(depth, seed),
+        "fig18" => ev::fig18(depth, seed),
+        other => anyhow::bail!("unknown experiment '{other}' (see `polca figure list`)"),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_is_complete_and_unique() {
+        let ids = all_ids();
+        assert_eq!(ids.len(), 21);
+        let mut dedup = ids.clone();
+        dedup.sort();
+        dedup.dedup();
+        assert_eq!(dedup.len(), ids.len());
+    }
+
+    #[test]
+    fn static_experiments_run() {
+        for id in ["table1", "fig2", "table3", "table4", "table5"] {
+            let out = run_experiment(id, Depth::Quick, 0).unwrap();
+            assert!(!out.tables.is_empty(), "{id} produced no tables");
+        }
+    }
+
+    #[test]
+    fn unknown_id_errors() {
+        assert!(run_experiment("fig99", Depth::Quick, 0).is_err());
+    }
+}

@@ -1,0 +1,45 @@
+//! # POLCA — Power Oversubscription in LLM Cloud Providers
+//!
+//! Full-system reproduction of the POLCA paper (Patel et al., Microsoft
+//! Azure, cs.DC 2023): an end-to-end framework for *safe power
+//! oversubscription in LLM inference clusters*.
+//!
+//! The crate is organized bottom-up (see DESIGN.md for the complete
+//! inventory and per-experiment index):
+//!
+//! * **Substrates** — [`util`] (RNG/stats/JSON/CLI, all in-tree because the
+//!   build is offline), [`config`], [`sim`] (discrete-event engine),
+//!   [`benchkit`] and [`testing`] (bench + property-test harnesses).
+//! * **Domain models** — [`power`] (GPU/server/training power, capping
+//!   semantics), [`characterize`] (the paper's §2 model catalog),
+//!   [`perfmodel`] (latency & frequency-sensitivity), [`workload`]
+//!   (Table-4 mixes, diurnal arrivals, production-trace replication),
+//!   [`cluster`] (PDU/UPS/BMC hierarchy with the paper's OOB latencies).
+//! * **The contribution** — [`policy`] (POLCA Algorithm 1 + baselines +
+//!   tuner), [`metrics`] (SLO accounting), [`simulation`] (row-level
+//!   cluster simulator, the paper's §6 evaluation vehicle).
+//! * **Serving path** — [`runtime`] (PJRT executables AOT-compiled from
+//!   JAX/Pallas), [`coordinator`] (router, batcher, KV-cache slots) — the
+//!   real-model end-to-end driver with POLCA in the loop.
+//! * **Reproduction** — [`experiments`] regenerates every table and figure
+//!   in the paper's evaluation.
+
+pub mod benchkit;
+pub mod characterize;
+pub mod cluster;
+pub mod config;
+pub mod coordinator;
+pub mod experiments;
+pub mod metrics;
+pub mod perfmodel;
+pub mod policy;
+pub mod power;
+pub mod runtime;
+pub mod sim;
+pub mod simulation;
+pub mod testing;
+pub mod util;
+pub mod workload;
+
+/// Crate-wide result alias.
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,254 @@
+//! `polca` — CLI for the POLCA reproduction.
+//!
+//! Subcommands:
+//!   figure <id|all|list> [--out-dir out] [--full] [--seed N]
+//!       Regenerate paper tables/figures (CSV + stdout).
+//!   simulate [--policy polca|1t-lp|1t-all|nocap] [--servers N]
+//!            [--added FRAC] [--weeks W] [--seed N] [--config FILE]
+//!       One cluster simulation with an impact report.
+//!   tune [--weeks W] [--seed N]
+//!       Week-one threshold search (§6.2).
+//!   calibrate [--weeks W] [--seed N]
+//!       Fit the power-scale factor to the Table-2 peak.
+//!   serve [--artifacts DIR] [--requests N] [--oversub F]
+//!       Mini end-to-end serving run (real PJRT model, POLCA in loop).
+
+use std::path::{Path, PathBuf};
+
+use polca::config::ExperimentConfig;
+use polca::experiments::{all_ids, run_experiment, Depth};
+use polca::policy::engine::PolicyKind;
+use polca::policy::tuner::tune_thresholds;
+use polca::simulation::{calibrate, run_with_impact, SimConfig};
+use polca::util::cli::Args;
+
+fn main() {
+    let args = Args::from_env();
+    let result = match args.subcommand.as_deref() {
+        Some("figure") => cmd_figure(&args),
+        Some("simulate") => cmd_simulate(&args),
+        Some("tune") => cmd_tune(&args),
+        Some("calibrate") => cmd_calibrate(&args),
+        Some("serve") => cmd_serve(&args),
+        Some(other) => {
+            eprintln!("unknown subcommand '{other}'");
+            print_help();
+            std::process::exit(2);
+        }
+        None => {
+            print_help();
+            Ok(())
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn print_help() {
+    println!(
+        "polca — Power Oversubscription in LLM Cloud Providers (reproduction)\n\n\
+         usage: polca <figure|simulate|tune|calibrate|serve> [options]\n\
+         try:   polca figure list\n       \
+                polca figure fig13 --out-dir out\n       \
+                polca simulate --policy polca --added 0.30 --weeks 1\n       \
+                polca serve --requests 16"
+    );
+}
+
+fn cmd_figure(args: &Args) -> anyhow::Result<()> {
+    let id = args.positionals.first().map(|s| s.as_str()).unwrap_or("list");
+    let depth = if args.flag("full") { Depth::Full } else { Depth::Quick };
+    let seed = args.get_u64("seed", 1);
+    let out_dir = PathBuf::from(args.get_or("out-dir", "out"));
+    match id {
+        "list" => {
+            for id in all_ids() {
+                println!("{id}");
+            }
+        }
+        "all" => {
+            for id in all_ids() {
+                let fig = run_experiment(id, depth, seed)?;
+                fig.print();
+                fig.write(&out_dir)?;
+            }
+            println!("wrote CSVs to {}", out_dir.display());
+        }
+        id => {
+            let fig = run_experiment(id, depth, seed)?;
+            fig.print();
+            fig.write(&out_dir)?;
+            println!("wrote CSVs to {}", out_dir.display());
+        }
+    }
+    Ok(())
+}
+
+fn parse_policy(s: &str) -> anyhow::Result<PolicyKind> {
+    Ok(match s {
+        "polca" => PolicyKind::Polca,
+        "1t-lp" => PolicyKind::OneThreshLowPri,
+        "1t-all" => PolicyKind::OneThreshAll,
+        "nocap" => PolicyKind::NoCap,
+        other => anyhow::bail!("unknown policy '{other}' (polca|1t-lp|1t-all|nocap)"),
+    })
+}
+
+fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
+    let mut cfg = SimConfig::default();
+    if let Some(path) = args.get("config") {
+        cfg.exp = ExperimentConfig::load(Path::new(path))?;
+    }
+    cfg.policy_kind = parse_policy(args.get_or("policy", "polca"))?;
+    cfg.weeks = args.get_f64("weeks", 1.0);
+    cfg.exp.seed = args.get_u64("seed", cfg.exp.seed);
+    let baseline_servers = args.get_usize("servers", cfg.exp.row.num_servers);
+    cfg.exp.row.num_servers = baseline_servers;
+    let added = args.get_f64("added", 0.0);
+    cfg.deployed_servers = (baseline_servers as f64 * (1.0 + added)).round() as usize;
+    cfg.workload_power_mult = args.get_f64("power-mult", 1.0);
+
+    eprintln!(
+        "simulating {} for {:.2} weeks: {} servers deployed on a {}-server budget (+{:.0}%)",
+        cfg.policy_kind.name(),
+        cfg.weeks,
+        cfg.deployed_servers,
+        baseline_servers,
+        added * 100.0
+    );
+    let t = std::time::Instant::now();
+    let (mut report, impact) = run_with_impact(&cfg);
+    let wall = t.elapsed().as_secs_f64();
+    println!("{}", report.summary());
+    println!(
+        "impact vs uncapped: HP p50/p99 = {:.2}%/{:.2}%  LP p50/p99 = {:.2}%/{:.2}%  thrpt HP/LP = {:.3}/{:.3}",
+        impact.hp_p50 * 100.0,
+        impact.hp_p99 * 100.0,
+        impact.lp_p50 * 100.0,
+        impact.lp_p99 * 100.0,
+        impact.hp_throughput,
+        impact.lp_throughput
+    );
+    let v = impact.slo_violations(&cfg.exp.slo);
+    if v.is_empty() {
+        println!("SLO: OK (Table 5)");
+    } else {
+        println!("SLO: VIOLATED — {}", v.join("; "));
+    }
+    println!(
+        "{} events in {:.1}s wall ({:.2}M events/s)",
+        report.events,
+        wall,
+        report.events as f64 / wall / 1e6
+    );
+    Ok(())
+}
+
+fn cmd_tune(args: &Args) -> anyhow::Result<()> {
+    let mut base = SimConfig::default();
+    base.weeks = args.get_f64("weeks", 1.0);
+    base.exp.seed = args.get_u64("seed", 1);
+    let combos = [(0.75, 0.85), (0.80, 0.89), (0.85, 0.95)];
+    let added = [0.0, 0.10, 0.20, 0.25, 0.30, 0.35, 0.40];
+    eprintln!("sweeping {} points ...", combos.len() * added.len());
+    let outcome = tune_thresholds(&base, &combos, &added, &base.exp.slo);
+    for p in &outcome.points {
+        println!(
+            "T1-T2 {:.0}-{:.0} +{:>4.1}% | HP p99 {:>6.2}% LP p99 {:>6.2}% | brakes {} | {}",
+            p.t1 * 100.0,
+            p.t2 * 100.0,
+            p.added_frac * 100.0,
+            p.hp_p99 * 100.0,
+            p.lp_p99 * 100.0,
+            p.brakes,
+            if p.meets_slo { "ok" } else { "VIOLATED" }
+        );
+    }
+    if let Some((t1, t2, added)) = outcome.best {
+        println!(
+            "best: T1={:.0}% T2={:.0}% supports +{:.1}% servers within SLOs",
+            t1 * 100.0,
+            t2 * 100.0,
+            added * 100.0
+        );
+    }
+    Ok(())
+}
+
+fn cmd_calibrate(args: &Args) -> anyhow::Result<()> {
+    let weeks = args.get_f64("weeks", 0.5);
+    let seed = args.get_u64("seed", 1);
+    let target = args.get_f64("target", 0.79);
+    let scale = calibrate(target, weeks, seed);
+    println!(
+        "power_scale = {:.3} pins the base 40-server row peak at {target} \
+         (current DEFAULT_POWER_SCALE = {:.3})",
+        scale * polca::simulation::DEFAULT_POWER_SCALE,
+        polca::simulation::DEFAULT_POWER_SCALE
+    );
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> anyhow::Result<()> {
+    use polca::cluster::hierarchy::Priority;
+    use polca::coordinator::{run_policy_over_row, timeline_power, Coordinator, Request};
+    use polca::runtime::Engine;
+
+    let dir = PathBuf::from(args.get_or("artifacts", "artifacts"));
+    let n_requests = args.get_usize("requests", 16);
+    let oversub = args.get_f64("oversub", 1.3);
+    eprintln!("loading artifacts from {} ...", dir.display());
+    let engine = Engine::load(&dir)?;
+    let max_new = 12.min(engine.manifest.model.max_seq / 4);
+    let mut coord = Coordinator::new(engine)?;
+    let mut rng = polca::util::rng::Rng::new(args.get_u64("seed", 1));
+    let t0 = std::time::Instant::now();
+    for i in 0..n_requests {
+        let len = rng.range_usize(4, 14);
+        let prompt: Vec<i32> = (0..len).map(|_| rng.below(512) as i32).collect();
+        let pri = if rng.bool(0.5) { Priority::High } else { Priority::Low };
+        coord.submit(Request { id: i as u64, prompt, max_new_tokens: max_new, priority: pri });
+    }
+    let done = coord.run_to_completion()?;
+    let wall = t0.elapsed().as_secs_f64();
+    let tokens: usize = done.iter().map(|d| d.tokens.len()).sum();
+    println!(
+        "served {} requests / {} tokens in {:.2}s ({:.1} tok/s, {:.1} req/s)",
+        done.len(),
+        tokens,
+        wall,
+        tokens as f64 / wall,
+        done.len() as f64 / wall
+    );
+    let mut lat = polca::util::stats::Percentiles::new();
+    for d in &done {
+        lat.push(d.queue_s + d.prefill_s + d.decode_s);
+    }
+    println!("request latency p50 {:.3}s p99 {:.3}s", lat.p50(), lat.p99());
+
+    // POLCA in the loop over a replicated row of this node.
+    let model = polca::power::server::ServerPowerModel::default();
+    let trace = timeline_power(&coord.timeline, &model, 0.5, 50.0);
+    let report = run_policy_over_row(
+        &trace,
+        40,
+        oversub,
+        &polca::config::PolicyConfig::default(),
+        &model.calib,
+        0.22,
+        0.92,
+    );
+    let caps = report.cap_timeline.iter().filter(|(_, lp, _, _)| lp.is_some()).count();
+    println!(
+        "POLCA over a 40-replica row at {oversub:.2}x oversubscription: \
+         {} / {} intervals LP-capped, {} brake events, LP/HP modeled stretch {:.3}/{:.3}",
+        caps,
+        report.cap_timeline.len(),
+        report.brake_events,
+        report.lp_modeled_stretch,
+        report.hp_modeled_stretch
+    );
+    Ok(())
+}

@@ -1,0 +1,260 @@
+//! Evaluation metrics and SLO accounting (paper Table 5).
+//!
+//! Latency **impact** is measured the way the paper uses it: the relative
+//! increase of a latency percentile under a power-management policy
+//! versus the *same* workload realization executed unthrottled (same
+//! seed → same arrivals, same token counts, no caps, no brake). This
+//! isolates the capping-attributable slowdown — per-request latency in a
+//! loaded queueing system is noisy, but paired percentiles cancel the
+//! baseline queueing behaviour.
+
+use crate::cluster::hierarchy::Priority;
+use crate::config::SloConfig;
+use crate::util::stats::Percentiles;
+
+/// Per-priority accumulators for one run.
+#[derive(Debug, Clone, Default)]
+pub struct PriorityMetrics {
+    /// End-to-end latency per request (queueing + execution), seconds.
+    pub latency: Percentiles,
+    /// Diagnostic: actual / nominal-execution − 1 per request (includes
+    /// queueing, so useful for trends, not SLO checks).
+    pub exec_impact: Percentiles,
+    pub completed: u64,
+    pub dropped: u64,
+    pub tokens_out: f64,
+    pub latency_sum: f64,
+}
+
+impl PriorityMetrics {
+    pub fn record(&mut self, actual_s: f64, nominal_s: f64, tokens: f64) {
+        self.latency.push(actual_s);
+        self.exec_impact.push(crate::perfmodel::latency_impact(actual_s, nominal_s));
+        self.completed += 1;
+        self.tokens_out += tokens;
+        self.latency_sum += actual_s;
+    }
+
+    pub fn offered(&self) -> u64 {
+        self.completed + self.dropped
+    }
+}
+
+/// Relative latency-impact summary of a policy run vs its baseline.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ImpactSummary {
+    pub hp_p50: f64,
+    pub hp_p99: f64,
+    pub lp_p50: f64,
+    pub lp_p99: f64,
+    /// Completed-request throughput ratios vs baseline (Fig 14).
+    pub hp_throughput: f64,
+    pub lp_throughput: f64,
+    pub brake_events: u64,
+}
+
+impl ImpactSummary {
+    /// Check against the Table 5 SLOs; returns all violations.
+    pub fn slo_violations(&self, slo: &SloConfig) -> Vec<String> {
+        let mut v = Vec::new();
+        let checks = [
+            ("HP P50", self.hp_p50, slo.hp_p50_impact),
+            ("HP P99", self.hp_p99, slo.hp_p99_impact),
+            ("LP P50", self.lp_p50, slo.lp_p50_impact),
+            ("LP P99", self.lp_p99, slo.lp_p99_impact),
+        ];
+        for (name, actual, limit) in checks {
+            if !actual.is_nan() && actual > limit {
+                v.push(format!(
+                    "{name} impact {:.1}% > {:.0}% SLO",
+                    actual * 100.0,
+                    limit * 100.0
+                ));
+            }
+        }
+        if self.brake_events > slo.max_powerbrakes {
+            v.push(format!(
+                "{} powerbrakes > {} allowed",
+                self.brake_events, slo.max_powerbrakes
+            ));
+        }
+        v
+    }
+
+    pub fn meets_slo(&self, slo: &SloConfig) -> bool {
+        self.slo_violations(slo).is_empty()
+    }
+}
+
+/// Relative increase, floored at zero.
+fn rel(policy: f64, baseline: f64) -> f64 {
+    if baseline <= 0.0 || policy.is_nan() || baseline.is_nan() {
+        return 0.0;
+    }
+    (policy / baseline - 1.0).max(0.0)
+}
+
+/// Everything a simulated run produces.
+#[derive(Debug, Clone, Default)]
+pub struct RunReport {
+    pub hp: PriorityMetrics,
+    pub lp: PriorityMetrics,
+    pub brake_events: u64,
+    /// Seconds with the powerbrake engaged.
+    pub brake_time_s: f64,
+    /// Normalized row power stats over the run.
+    pub power_peak: f64,
+    pub power_p99: f64,
+    pub power_mean: f64,
+    /// Max power rises within 2 s / 5 s / 40 s (Table 2).
+    pub spike_2s: f64,
+    pub spike_5s: f64,
+    pub spike_40s: f64,
+    pub duration_s: f64,
+    pub events: u64,
+    /// Downsampled row power for Fig 16-style plots.
+    pub power_series: Vec<(f64, f64)>,
+}
+
+impl RunReport {
+    pub fn by_priority(&mut self, p: Priority) -> &mut PriorityMetrics {
+        match p {
+            Priority::High => &mut self.hp,
+            Priority::Low => &mut self.lp,
+        }
+    }
+
+    /// Paired impact summary vs an unthrottled baseline run.
+    pub fn impact_vs(&mut self, baseline: &mut RunReport) -> ImpactSummary {
+        ImpactSummary {
+            hp_p50: rel(self.hp.latency.p50(), baseline.hp.latency.p50()),
+            hp_p99: rel(self.hp.latency.p99(), baseline.hp.latency.p99()),
+            lp_p50: rel(self.lp.latency.p50(), baseline.lp.latency.p50()),
+            lp_p99: rel(self.lp.latency.p99(), baseline.lp.latency.p99()),
+            hp_throughput: if baseline.hp.completed == 0 {
+                1.0
+            } else {
+                self.hp.completed as f64 / baseline.hp.completed as f64
+            },
+            lp_throughput: if baseline.lp.completed == 0 {
+                1.0
+            } else {
+                self.lp.completed as f64 / baseline.lp.completed as f64
+            },
+            brake_events: self.brake_events,
+        }
+    }
+
+    /// One-line summary for CLI output.
+    pub fn summary(&mut self) -> String {
+        format!(
+            "power peak={:.3} p99={:.3} mean={:.3} | HP p50/p99 lat={:.1}s/{:.1}s \
+             | LP p50/p99 lat={:.1}s/{:.1}s | brakes={} | done HP={} LP={} | drops={}",
+            self.power_peak,
+            self.power_p99,
+            self.power_mean,
+            self.hp.latency.p50(),
+            self.hp.latency.p99(),
+            self.lp.latency.p50(),
+            self.lp.latency.p99(),
+            self.brake_events,
+            self.hp.completed,
+            self.lp.completed,
+            self.hp.dropped + self.lp.dropped,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn report_with(hp_lat: &[f64], lp_lat: &[f64], brakes: u64) -> RunReport {
+        let mut r = RunReport::default();
+        for &l in hp_lat {
+            r.hp.record(l, l, 10.0);
+        }
+        for &l in lp_lat {
+            r.lp.record(l, l, 10.0);
+        }
+        r.brake_events = brakes;
+        r
+    }
+
+    #[test]
+    fn identical_runs_have_zero_impact() {
+        let lats: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        let mut a = report_with(&lats, &lats, 0);
+        let mut b = report_with(&lats, &lats, 0);
+        let imp = a.impact_vs(&mut b);
+        assert_eq!(imp.hp_p50, 0.0);
+        assert_eq!(imp.lp_p99, 0.0);
+        assert_eq!(imp.hp_throughput, 1.0);
+        assert!(imp.meets_slo(&SloConfig::default()));
+    }
+
+    #[test]
+    fn slowdown_shows_as_impact() {
+        let base: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        let slowed: Vec<f64> = base.iter().map(|l| l * 1.3).collect();
+        let mut a = report_with(&base, &slowed, 0);
+        let mut b = report_with(&base, &base, 0);
+        let imp = a.impact_vs(&mut b);
+        assert!(imp.hp_p99 < 1e-9);
+        assert!((imp.lp_p50 - 0.3).abs() < 1e-9);
+        assert!((imp.lp_p99 - 0.3).abs() < 1e-9);
+        // LP P50 30% > 5% SLO → violation; LP P99 30% < 50% → fine.
+        let v = imp.slo_violations(&SloConfig::default());
+        assert_eq!(v.len(), 1, "{v:?}");
+        assert!(v[0].contains("LP P50"));
+        // A gentle 3% uniform slowdown passes every SLO.
+        let gentle: Vec<f64> = base.iter().map(|l| l * 1.03).collect();
+        let mut c = report_with(&base, &gentle, 0);
+        assert!(c.impact_vs(&mut b).meets_slo(&SloConfig::default()));
+    }
+
+    #[test]
+    fn hp_violation_detected() {
+        let base: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        let slowed: Vec<f64> = base.iter().map(|l| l * 1.08).collect();
+        let mut a = report_with(&slowed, &base, 0);
+        let mut b = report_with(&base, &base, 0);
+        let v = a.impact_vs(&mut b).slo_violations(&SloConfig::default());
+        assert!(v.iter().any(|s| s.contains("HP P50")), "{v:?}");
+        assert!(v.iter().any(|s| s.contains("HP P99")), "{v:?}");
+    }
+
+    #[test]
+    fn brakes_violate() {
+        let mut a = report_with(&[1.0], &[1.0], 2);
+        let mut b = report_with(&[1.0], &[1.0], 0);
+        let v = a.impact_vs(&mut b).slo_violations(&SloConfig::default());
+        assert_eq!(v.len(), 1);
+        assert!(v[0].contains("powerbrakes"));
+    }
+
+    #[test]
+    fn speedup_is_not_negative_impact() {
+        let base = [2.0, 2.0];
+        let faster = [1.0, 1.0];
+        let mut a = report_with(&faster, &faster, 0);
+        let mut b = report_with(&base, &base, 0);
+        let imp = a.impact_vs(&mut b);
+        assert_eq!(imp.hp_p50, 0.0);
+    }
+
+    #[test]
+    fn empty_class_not_a_violation() {
+        let mut a = report_with(&[], &[1.0], 0);
+        let mut b = report_with(&[], &[1.0], 0);
+        assert!(a.impact_vs(&mut b).meets_slo(&SloConfig::default()));
+    }
+
+    #[test]
+    fn throughput_ratio() {
+        let mut a = report_with(&[1.0; 9], &[], 0);
+        let mut b = report_with(&[1.0; 10], &[], 0);
+        let imp = a.impact_vs(&mut b);
+        assert!((imp.hp_throughput - 0.9).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,205 @@
+//! Request execution / latency model under time-varying frequency caps.
+//!
+//! [`crate::characterize::ModelSpec`] gives closed-form latencies at a
+//! *fixed* frequency (Fig 5/7). The cluster simulator needs more: a
+//! request's frequency can change mid-flight when the power manager caps
+//! or uncaps its server (with 40 s OOB latency). [`RequestExec`] tracks
+//! remaining *nominal-seconds* of work per phase and converts wall time
+//! to work at the current frequency ratio, so latency composes correctly
+//! across any sequence of cap changes.
+
+use crate::characterize::catalog::ModelSpec;
+
+/// Phase of an executing request.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ExecPhase {
+    Prompt,
+    Token,
+    Done,
+}
+
+/// Work state of one in-flight request.
+#[derive(Debug, Clone)]
+pub struct RequestExec {
+    pub input: f64,
+    pub output: f64,
+    pub batch: f64,
+    /// Remaining prompt work in nominal seconds (at f_max).
+    pub prompt_remaining: f64,
+    /// Remaining token work in nominal seconds.
+    pub token_remaining: f64,
+    /// Total nominal latency (for SLO impact accounting).
+    pub nominal_latency: f64,
+}
+
+impl RequestExec {
+    pub fn new(model: &ModelSpec, input: f64, output: f64, batch: f64) -> Self {
+        let p = model.prompt_time_s(input, batch);
+        let t = model.token_time_s(output, batch);
+        RequestExec {
+            input,
+            output,
+            batch,
+            prompt_remaining: p,
+            token_remaining: t,
+            nominal_latency: p + t,
+        }
+    }
+
+    pub fn phase(&self) -> ExecPhase {
+        if self.prompt_remaining > 0.0 {
+            ExecPhase::Prompt
+        } else if self.token_remaining > 0.0 {
+            ExecPhase::Token
+        } else {
+            ExecPhase::Done
+        }
+    }
+
+    /// Work progress rate (nominal-seconds per wall-second) for the
+    /// current phase at frequency ratio `r = f/f_max`. Compute-bound
+    /// fractions stretch 1/r; memory-bound fractions are unaffected.
+    pub fn rate(&self, model: &ModelSpec, freq_ratio: f64) -> f64 {
+        let r = freq_ratio.clamp(0.01, 1.0);
+        let cf = match self.phase() {
+            ExecPhase::Prompt => model.prompt_compute_frac,
+            ExecPhase::Token => model.token_compute_frac,
+            ExecPhase::Done => return 0.0,
+        };
+        1.0 / (cf / r + (1.0 - cf))
+    }
+
+    /// Wall time needed to finish the *current phase* at a fixed ratio.
+    pub fn wall_to_phase_end(&self, model: &ModelSpec, freq_ratio: f64) -> f64 {
+        let remaining = match self.phase() {
+            ExecPhase::Prompt => self.prompt_remaining,
+            ExecPhase::Token => self.token_remaining,
+            ExecPhase::Done => return 0.0,
+        };
+        remaining / self.rate(model, freq_ratio)
+    }
+
+    /// Advance by `wall_dt` seconds at a fixed ratio; returns wall time
+    /// actually consumed (may be less if the request finished).
+    pub fn advance(&mut self, model: &ModelSpec, freq_ratio: f64, wall_dt: f64) -> f64 {
+        let mut left = wall_dt;
+        let mut consumed = 0.0;
+        while left > 1e-12 && self.phase() != ExecPhase::Done {
+            let phase_wall = self.wall_to_phase_end(model, freq_ratio);
+            let step = phase_wall.min(left);
+            let work = step * self.rate(model, freq_ratio);
+            match self.phase() {
+                ExecPhase::Prompt => {
+                    self.prompt_remaining = (self.prompt_remaining - work).max(0.0);
+                    if phase_wall <= left {
+                        self.prompt_remaining = 0.0;
+                    }
+                }
+                ExecPhase::Token => {
+                    self.token_remaining = (self.token_remaining - work).max(0.0);
+                    if phase_wall <= left {
+                        self.token_remaining = 0.0;
+                    }
+                }
+                ExecPhase::Done => {}
+            }
+            left -= step;
+            consumed += step;
+        }
+        consumed
+    }
+}
+
+/// Latency *impact* relative to nominal: `actual/nominal - 1`
+/// (the paper's SLO metric, Table 5).
+pub fn latency_impact(actual: f64, nominal: f64) -> f64 {
+    (actual / nominal - 1.0).max(0.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::characterize::catalog::find;
+
+    #[test]
+    fn uncapped_execution_matches_closed_form() {
+        let bloom = find("BLOOM-176B").unwrap();
+        let mut exec = RequestExec::new(&bloom, 2048.0, 256.0, 1.0);
+        let closed = bloom.request_latency_s(2048.0, 256.0, 1.0, 1.0);
+        let mut wall = 0.0;
+        while exec.phase() != ExecPhase::Done {
+            let step = exec.wall_to_phase_end(&bloom, 1.0);
+            exec.advance(&bloom, 1.0, step);
+            wall += step;
+        }
+        assert!((wall - closed).abs() < 1e-9, "wall={wall} closed={closed}");
+    }
+
+    #[test]
+    fn capped_execution_matches_closed_form() {
+        let bloom = find("BLOOM-176B").unwrap();
+        let r = 1110.0 / 1410.0;
+        let mut exec = RequestExec::new(&bloom, 4096.0, 128.0, 1.0);
+        let closed = bloom.request_latency_s(4096.0, 128.0, 1.0, r);
+        let mut wall = 0.0;
+        while exec.phase() != ExecPhase::Done {
+            let step = exec.wall_to_phase_end(&bloom, r);
+            exec.advance(&bloom, r, step);
+            wall += step;
+        }
+        assert!((wall - closed).abs() < 1e-9, "wall={wall} closed={closed}");
+    }
+
+    #[test]
+    fn mid_flight_cap_change_composes() {
+        // Run half the token phase uncapped, half capped; total work
+        // must be conserved (no work lost or duplicated at the switch).
+        let neox = find("GPT-NeoX-20B").unwrap();
+        let mut a = RequestExec::new(&neox, 1024.0, 512.0, 1.0);
+        // finish prompt
+        let p = a.wall_to_phase_end(&neox, 1.0);
+        a.advance(&neox, 1.0, p);
+        assert_eq!(a.phase(), ExecPhase::Token);
+        let token_nominal = a.token_remaining;
+        // half at r=1, then rest at r=0.5
+        let half_wall = a.wall_to_phase_end(&neox, 1.0) / 2.0;
+        a.advance(&neox, 1.0, half_wall);
+        let remaining_after_half = a.token_remaining;
+        assert!((remaining_after_half - token_nominal / 2.0).abs() < 1e-9);
+        let rest = a.wall_to_phase_end(&neox, 0.5);
+        a.advance(&neox, 0.5, rest);
+        assert_eq!(a.phase(), ExecPhase::Done);
+    }
+
+    #[test]
+    fn advance_stops_at_done() {
+        let m = find("Flan-T5-XXL").unwrap();
+        let mut exec = RequestExec::new(&m, 256.0, 16.0, 1.0);
+        let consumed = exec.advance(&m, 1.0, 1e9);
+        assert_eq!(exec.phase(), ExecPhase::Done);
+        assert!(consumed < 1e9);
+        assert!((consumed - exec.nominal_latency).abs() < 1e-6);
+        // further advances are no-ops
+        assert_eq!(exec.advance(&m, 1.0, 1.0), 0.0);
+    }
+
+    #[test]
+    fn token_phase_insensitive_prompt_sensitive() {
+        let neox = find("GPT-NeoX-20B").unwrap();
+        let exec = RequestExec::new(&neox, 4096.0, 512.0, 1.0);
+        // prompt rate at half frequency drops hard
+        let prompt_rate = exec.rate(&neox, 0.5);
+        assert!(prompt_rate < 0.6);
+        // token rate barely moves (memory-bound)
+        let mut token_exec = exec.clone();
+        token_exec.prompt_remaining = 0.0;
+        let token_rate = token_exec.rate(&neox, 0.5);
+        assert!(token_rate > 0.94, "token_rate={token_rate}");
+    }
+
+    #[test]
+    fn impact_metric() {
+        assert_eq!(latency_impact(1.1, 1.0), 0.10000000000000009);
+        assert_eq!(latency_impact(0.9, 1.0), 0.0); // never negative
+    }
+}

@@ -1,0 +1,405 @@
+//! The POLCA policy engine — Algorithm 1 — and the §6.3 baselines.
+//!
+//! The engine is a small deterministic state machine driven by the
+//! (delayed) normalized row-power reading at every telemetry tick. It
+//! emits [`Action`]s; the simulator (or a real rack manager) translates
+//! them into OOB commands with their latencies. The engine is
+//! deliberately decoupled from transport so the same logic drives the
+//! discrete-event evaluation *and* the live serving coordinator.
+//!
+//! Per Algorithm 1:
+//! ```text
+//! P ← NormalizedRowPowerReading
+//! if P > 1.0:        powerbrake (BMC, fast path); t1cap ← t2cap ← true
+//! elif P > T2:       first time: LP → 1110 MHz; still above: HP → 1305 MHz
+//! elif P > T1:       LP → 1275 MHz (A100 base clock)
+//! if t2cap and P < T2 − buf:  uncap HP; LP caps relax to 1275 MHz
+//! if t1cap and P < T1 − buf:  uncap LP
+//! ```
+//! The 5%-below-threshold uncap buffers implement the hysteresis that
+//! prevents cap/uncap oscillation (§5.1 "Uncapping").
+
+use crate::config::PolicyConfig;
+
+/// Which policy drives the row (paper Fig 17/18 comparison set).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PolicyKind {
+    /// POLCA dual-threshold (Algorithm 1).
+    Polca,
+    /// Single threshold at T2; caps only low-priority (to the T2 level).
+    OneThreshLowPri,
+    /// Single threshold at T2; caps everything aggressively.
+    OneThreshAll,
+    /// No proactive capping; powerbrake backstop only.
+    NoCap,
+}
+
+impl PolicyKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            PolicyKind::Polca => "POLCA",
+            PolicyKind::OneThreshLowPri => "1-Thresh-Low-Pri",
+            PolicyKind::OneThreshAll => "1-Thresh-All",
+            PolicyKind::NoCap => "No-cap",
+        }
+    }
+
+    pub fn all() -> [PolicyKind; 4] {
+        [PolicyKind::Polca, PolicyKind::OneThreshLowPri, PolicyKind::OneThreshAll, PolicyKind::NoCap]
+    }
+}
+
+/// Abstract control action emitted by the engine.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Action {
+    /// Cap all low-priority servers to the given SM clock.
+    CapLp { mhz: f64 },
+    /// Cap all high-priority servers to the given SM clock.
+    CapHp { mhz: f64 },
+    UncapLp,
+    UncapHp,
+    /// Engage the hardware powerbrake (row-wide, fast path).
+    Brake,
+    ReleaseBrake,
+}
+
+/// Cap state the engine believes it has requested (its *intent*; the
+/// fleet converges to it after the OOB latency).
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct IntentState {
+    pub lp_cap_mhz: Option<f64>,
+    pub hp_cap_mhz: Option<f64>,
+    pub brake: bool,
+}
+
+/// The policy state machine.
+#[derive(Debug, Clone)]
+pub struct PolicyEngine {
+    pub kind: PolicyKind,
+    pub cfg: PolicyConfig,
+    /// How long to wait after issuing the LP T2 cap before escalating to
+    /// HP capping — the LP cap needs the OOB apply latency (~40 s) to
+    /// show up in the power reading (Algorithm 1's "cap HP subsequently
+    /// *if needed*").
+    pub escalation_delay_s: f64,
+    t1cap: bool,
+    t2cap: bool,
+    /// Within T2: whether the escalation to HP capping has fired.
+    hp_capped: bool,
+    /// When the T2 LP cap was issued (escalation clock).
+    t2_issued_at: f64,
+    brake: bool,
+    /// Count of brake engagements (the Fig 18 metric).
+    pub brake_events: u64,
+    intent: IntentState,
+}
+
+impl PolicyEngine {
+    pub fn new(kind: PolicyKind, cfg: PolicyConfig) -> Self {
+        PolicyEngine {
+            kind,
+            cfg,
+            escalation_delay_s: 45.0,
+            t1cap: false,
+            t2cap: false,
+            hp_capped: false,
+            t2_issued_at: 0.0,
+            brake: false,
+            brake_events: 0,
+            intent: IntentState::default(),
+        }
+    }
+
+    pub fn intent(&self) -> IntentState {
+        self.intent
+    }
+
+    pub fn is_braked(&self) -> bool {
+        self.brake
+    }
+
+    /// One telemetry tick at time `now_s`: consume the (delayed)
+    /// normalized row power, emit the actions that change the fleet's
+    /// cap state.
+    pub fn tick(&mut self, now_s: f64, p: f64) -> Vec<Action> {
+        match self.kind {
+            PolicyKind::Polca => self.tick_polca(now_s, p),
+            PolicyKind::OneThreshLowPri => self.tick_single(p, /*cap_hp=*/ false),
+            PolicyKind::OneThreshAll => self.tick_single(p, /*cap_hp=*/ true),
+            PolicyKind::NoCap => self.tick_nocap(p),
+        }
+    }
+
+    // -- shared brake handling ------------------------------------------
+    fn brake_check(&mut self, p: f64, out: &mut Vec<Action>) -> bool {
+        if p > 1.0 {
+            if !self.brake {
+                self.brake = true;
+                self.brake_events += 1;
+                self.intent.brake = true;
+                out.push(Action::Brake);
+            }
+            return true;
+        }
+        false
+    }
+
+    fn maybe_release_brake(&mut self, p: f64, release_below: f64, out: &mut Vec<Action>) {
+        if self.brake && p < release_below {
+            self.brake = false;
+            self.intent.brake = false;
+            out.push(Action::ReleaseBrake);
+        }
+    }
+
+    // -- POLCA Algorithm 1 ----------------------------------------------
+    fn tick_polca(&mut self, now_s: f64, p: f64) -> Vec<Action> {
+        let c = self.cfg.clone();
+        let mut out = Vec::new();
+        if self.brake_check(p, &mut out) {
+            // Brake implies both cap levels engaged (Algorithm 1).
+            self.t1cap = true;
+            self.t2cap = true;
+            self.hp_capped = true;
+            self.set_lp(Some(c.lp_freq_t2_mhz), &mut out);
+            self.set_hp(Some(c.hp_freq_t2_mhz), &mut out);
+            return out;
+        }
+        // Release the brake once power is safely under T2.
+        self.maybe_release_brake(p, c.t2 - c.t2_buffer, &mut out);
+
+        if p > c.t2 {
+            if !self.t2cap {
+                self.t2cap = true;
+                self.t1cap = true;
+                self.t2_issued_at = now_s;
+                // Start by capping only LP for T2.
+                self.set_lp(Some(c.lp_freq_t2_mhz), &mut out);
+            } else if !self.hp_capped && now_s - self.t2_issued_at >= self.escalation_delay_s {
+                // The LP cap has had time to take effect (OOB latency)
+                // and power is still above T2: cap HP subsequently.
+                self.hp_capped = true;
+                self.set_hp(Some(c.hp_freq_t2_mhz), &mut out);
+            }
+        } else if p > c.t1 {
+            if !self.t1cap {
+                self.t1cap = true;
+                self.set_lp(Some(c.lp_freq_t1_mhz), &mut out);
+            }
+        }
+        // Hysteresis-protected uncapping.
+        if self.t2cap && p < c.t2 - c.t2_buffer {
+            self.t2cap = false;
+            self.hp_capped = false;
+            self.set_hp(None, &mut out);
+            // LP relaxes to the T1 level (still capped until below T1-buf).
+            self.set_lp(Some(c.lp_freq_t1_mhz), &mut out);
+        }
+        if self.t1cap && !self.t2cap && p < c.t1 - c.t1_buffer {
+            self.t1cap = false;
+            self.set_lp(None, &mut out);
+        }
+        out
+    }
+
+    // -- single-threshold baselines --------------------------------------
+    fn tick_single(&mut self, p: f64, cap_hp: bool) -> Vec<Action> {
+        let c = self.cfg.clone();
+        let mut out = Vec::new();
+        if self.brake_check(p, &mut out) {
+            return out;
+        }
+        self.maybe_release_brake(p, c.t2 - c.t2_buffer, &mut out);
+        if p > c.t2 && !self.t2cap {
+            self.t2cap = true;
+            // Aggressive: straight to the deep cap, no gradual step.
+            self.set_lp(Some(c.lp_freq_t2_mhz), &mut out);
+            if cap_hp {
+                self.set_hp(Some(c.lp_freq_t2_mhz), &mut out);
+            }
+        }
+        if self.t2cap && p < c.t2 - c.t2_buffer {
+            self.t2cap = false;
+            self.set_lp(None, &mut out);
+            if cap_hp {
+                self.set_hp(None, &mut out);
+            }
+        }
+        out
+    }
+
+    // -- no-cap (brake backstop only) ------------------------------------
+    fn tick_nocap(&mut self, p: f64) -> Vec<Action> {
+        let mut out = Vec::new();
+        if !self.brake_check(p, &mut out) {
+            self.maybe_release_brake(p, self.cfg.t2 - self.cfg.t2_buffer, &mut out);
+        }
+        out
+    }
+
+    // -- intent bookkeeping (dedup: only emit on change) ------------------
+    fn set_lp(&mut self, mhz: Option<f64>, out: &mut Vec<Action>) {
+        if self.intent.lp_cap_mhz != mhz {
+            self.intent.lp_cap_mhz = mhz;
+            out.push(match mhz {
+                Some(m) => Action::CapLp { mhz: m },
+                None => Action::UncapLp,
+            });
+        }
+    }
+
+    fn set_hp(&mut self, mhz: Option<f64>, out: &mut Vec<Action>) {
+        if self.intent.hp_cap_mhz != mhz {
+            self.intent.hp_cap_mhz = mhz;
+            out.push(match mhz {
+                Some(m) => Action::CapHp { mhz: m },
+                None => Action::UncapHp,
+            });
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn engine(kind: PolicyKind) -> PolicyEngine {
+        PolicyEngine::new(kind, PolicyConfig::default())
+    }
+
+    /// Test clock: each tick is one minute apart, comfortably past the
+    /// 45 s escalation delay, so consecutive ticks can escalate.
+    struct Clk(f64);
+    impl Clk {
+        fn next(&mut self) -> f64 {
+            self.0 += 60.0;
+            self.0
+        }
+    }
+
+    #[test]
+    fn polca_t1_caps_lp_to_base_clock() {
+        let mut e = engine(PolicyKind::Polca);
+        let mut c = Clk(0.0);
+        assert!(e.tick(c.next(), 0.70).is_empty());
+        let acts = e.tick(c.next(), 0.82);
+        assert_eq!(acts, vec![Action::CapLp { mhz: 1275.0 }]);
+        // steady state: no re-issue
+        assert!(e.tick(c.next(), 0.83).is_empty());
+    }
+
+    #[test]
+    fn polca_t2_escalates_lp_then_hp() {
+        let mut e = engine(PolicyKind::Polca);
+        let mut c = Clk(0.0);
+        let a1 = e.tick(c.next(), 0.90);
+        assert_eq!(a1, vec![Action::CapLp { mhz: 1110.0 }]);
+        // still above T2 on the next tick -> HP gets capped
+        let a2 = e.tick(c.next(), 0.90);
+        assert_eq!(a2, vec![Action::CapHp { mhz: 1305.0 }]);
+        // and then nothing new
+        assert!(e.tick(c.next(), 0.91).is_empty());
+        assert_eq!(e.intent().lp_cap_mhz, Some(1110.0));
+        assert_eq!(e.intent().hp_cap_mhz, Some(1305.0));
+    }
+
+    #[test]
+    fn polca_uncap_order_and_hysteresis() {
+        let mut e = engine(PolicyKind::Polca);
+        let mut c = Clk(0.0);
+        e.tick(c.next(), 0.90);
+        e.tick(c.next(), 0.90); // LP@1110, HP@1305
+        // Drop below T2 but inside the buffer: nothing changes.
+        assert!(e.tick(c.next(), 0.86).is_empty());
+        // Below T2 - 5%: HP uncaps, LP relaxes to 1275.
+        let acts = e.tick(c.next(), 0.83);
+        assert!(acts.contains(&Action::UncapHp));
+        assert!(acts.contains(&Action::CapLp { mhz: 1275.0 }));
+        // Below T1 but inside its buffer: still capped.
+        assert!(e.tick(c.next(), 0.78).is_empty());
+        // Below T1 - 5%: LP uncaps.
+        assert_eq!(e.tick(c.next(), 0.74), vec![Action::UncapLp]);
+        assert_eq!(e.intent(), IntentState::default());
+    }
+
+    #[test]
+    fn polca_brake_on_overload_and_counts() {
+        let mut e = engine(PolicyKind::Polca);
+        let mut c = Clk(0.0);
+        let acts = e.tick(c.next(), 1.02);
+        assert!(acts.contains(&Action::Brake));
+        assert!(e.is_braked());
+        assert_eq!(e.brake_events, 1);
+        // Still overloaded: no duplicate brake.
+        assert!(!e.tick(c.next(), 1.01).contains(&Action::Brake));
+        assert_eq!(e.brake_events, 1);
+        // Recovering below T2-buf releases the brake.
+        let rel = e.tick(c.next(), 0.80);
+        assert!(rel.contains(&Action::ReleaseBrake));
+        assert!(!e.is_braked());
+    }
+
+    #[test]
+    fn polca_no_oscillation_at_threshold_boundary() {
+        // Flapping around T1 must not generate cap/uncap churn.
+        let mut e = engine(PolicyKind::Polca);
+        let mut c = Clk(0.0);
+        let mut actions = 0;
+        for i in 0..100 {
+            let p = if i % 2 == 0 { 0.805 } else { 0.795 };
+            actions += e.tick(c.next(), p).len();
+        }
+        assert_eq!(actions, 1, "only the initial cap should fire");
+    }
+
+    #[test]
+    fn one_thresh_low_pri_caps_hard_immediately() {
+        let mut e = engine(PolicyKind::OneThreshLowPri);
+        let mut c = Clk(0.0);
+        assert!(e.tick(c.next(), 0.85).is_empty()); // below T2: nothing (no T1!)
+        let acts = e.tick(c.next(), 0.90);
+        assert_eq!(acts, vec![Action::CapLp { mhz: 1110.0 }]);
+        assert_eq!(e.intent().hp_cap_mhz, None);
+    }
+
+    #[test]
+    fn one_thresh_all_caps_everyone() {
+        let mut e = engine(PolicyKind::OneThreshAll);
+        let mut c = Clk(0.0);
+        let acts = e.tick(c.next(), 0.90);
+        assert!(acts.contains(&Action::CapLp { mhz: 1110.0 }));
+        assert!(acts.contains(&Action::CapHp { mhz: 1110.0 }));
+    }
+
+    #[test]
+    fn nocap_only_brakes() {
+        let mut e = engine(PolicyKind::NoCap);
+        let mut c = Clk(0.0);
+        assert!(e.tick(c.next(), 0.95).is_empty());
+        assert!(e.tick(c.next(), 0.999).is_empty());
+        let acts = e.tick(c.next(), 1.01);
+        assert_eq!(acts, vec![Action::Brake]);
+        assert_eq!(e.brake_events, 1);
+    }
+
+    #[test]
+    fn monotone_power_monotone_strictness() {
+        // Property: as the reading rises 0→1.05, the cap state only
+        // tightens (never uncaps mid-ascent).
+        let mut e = engine(PolicyKind::Polca);
+        let mut c = Clk(0.0);
+        let mut last_lp = f64::INFINITY;
+        let mut last_hp = f64::INFINITY;
+        for i in 0..=105 {
+            let p = i as f64 / 100.0;
+            e.tick(c.next(), p);
+            let lp = e.intent().lp_cap_mhz.unwrap_or(f64::INFINITY);
+            let hp = e.intent().hp_cap_mhz.unwrap_or(f64::INFINITY);
+            assert!(lp <= last_lp, "LP cap loosened on ascent at p={p}");
+            assert!(hp <= last_hp, "HP cap loosened on ascent at p={p}");
+            last_lp = lp;
+            last_hp = hp;
+        }
+        assert!(e.is_braked());
+    }
+}

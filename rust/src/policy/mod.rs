@@ -1,0 +1,9 @@
+//! Power-management policies: POLCA's dual-threshold Algorithm 1, the
+//! three baselines of §6.3 (1-Thresh-Low-Pri, 1-Thresh-All, No-cap), and
+//! the week-one threshold tuner of §6.2.
+
+pub mod engine;
+pub mod tuner;
+
+pub use engine::{Action, PolicyEngine, PolicyKind};
+pub use tuner::{tune_thresholds, TunerOutcome};

@@ -1,0 +1,120 @@
+//! Week-one threshold tuning (§6.2): search the (T1, T2) space and the
+//! oversubscription level for the configuration that maximizes added
+//! servers while meeting the Table-5 SLOs with zero powerbrakes.
+//!
+//! This is also the mechanism behind POLCA's long-term reconfigurability
+//! (§5.1 "Robustness and configurability"): re-run the tuner on fresh
+//! traces when the fleet's models change.
+
+use crate::config::SloConfig;
+use crate::policy::engine::PolicyKind;
+use crate::simulation::{run_with_impact, SimConfig};
+
+/// Result of evaluating one (T1, T2, added-servers) point.
+#[derive(Debug, Clone)]
+pub struct TunerPoint {
+    pub t1: f64,
+    pub t2: f64,
+    pub added_frac: f64,
+    pub hp_p50: f64,
+    pub hp_p99: f64,
+    pub lp_p50: f64,
+    pub lp_p99: f64,
+    pub brakes: u64,
+    pub meets_slo: bool,
+}
+
+/// Outcome of a full tuner sweep.
+#[derive(Debug, Clone)]
+pub struct TunerOutcome {
+    pub points: Vec<TunerPoint>,
+    /// Best (t1, t2, added_frac) meeting SLOs.
+    pub best: Option<(f64, f64, f64)>,
+}
+
+/// Evaluate one configuration point on a training week.
+pub fn evaluate_point(
+    base: &SimConfig,
+    t1: f64,
+    t2: f64,
+    added_frac: f64,
+    slo: &SloConfig,
+) -> TunerPoint {
+    let mut cfg = base.clone();
+    cfg.policy_kind = PolicyKind::Polca;
+    cfg.exp.policy.t1 = t1;
+    cfg.exp.policy.t2 = t2;
+    cfg.deployed_servers =
+        (base.exp.row.num_servers as f64 * (1.0 + added_frac)).round() as usize;
+    let (_, impact) = run_with_impact(&cfg);
+    TunerPoint {
+        t1,
+        t2,
+        added_frac,
+        hp_p50: impact.hp_p50,
+        hp_p99: impact.hp_p99,
+        lp_p50: impact.lp_p50,
+        lp_p99: impact.lp_p99,
+        brakes: impact.brake_events,
+        meets_slo: impact.meets_slo(slo),
+    }
+}
+
+/// Sweep (T1,T2) combos × added-server levels (the Fig 13 grid); return
+/// every point plus the best SLO-meeting configuration (max added).
+pub fn tune_thresholds(
+    base: &SimConfig,
+    combos: &[(f64, f64)],
+    added_fracs: &[f64],
+    slo: &SloConfig,
+) -> TunerOutcome {
+    let mut points = Vec::new();
+    let mut best: Option<(f64, f64, f64)> = None;
+    for &(t1, t2) in combos {
+        for &added in added_fracs {
+            let p = evaluate_point(base, t1, t2, added, slo);
+            if p.meets_slo && best.map(|(_, _, a)| added > a).unwrap_or(true) {
+                best = Some((t1, t2, added));
+            }
+            points.push(p);
+        }
+    }
+    TunerOutcome { points, best }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quick_base() -> SimConfig {
+        let mut cfg = SimConfig::default();
+        cfg.weeks = 0.05;
+        cfg.exp.row.num_servers = 12;
+        cfg.deployed_servers = 12;
+        cfg.exp.seed = 9;
+        cfg
+    }
+
+    #[test]
+    fn zero_added_meets_slo() {
+        let base = quick_base();
+        let p = evaluate_point(&base, 0.80, 0.89, 0.0, &SloConfig::default());
+        assert!(p.meets_slo, "{p:?}");
+        assert_eq!(p.brakes, 0);
+    }
+
+    #[test]
+    fn sweep_returns_grid_and_best() {
+        let base = quick_base();
+        let out = tune_thresholds(
+            &base,
+            &[(0.80, 0.89)],
+            &[0.0, 0.25],
+            &SloConfig::default(),
+        );
+        assert_eq!(out.points.len(), 2);
+        assert!(out.best.is_some());
+        let (_, _, added) = out.best.unwrap();
+        assert!(added >= 0.0);
+    }
+}

@@ -1,0 +1,252 @@
+//! Per-server GPU power model: inference phases, frequency scaling, and
+//! the reactive-vs-proactive capping semantics of §2.3 / Fig 6.
+//!
+//! All powers are expressed as a fraction of the server's aggregate GPU
+//! TDP (8 × 400 W for a DGX-A100-80GB); [`crate::power::server`] converts
+//! to watts and adds the non-GPU components.
+
+/// Execution phase of an inference server (drives its power draw).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Phase {
+    /// No request in flight.
+    Idle,
+    /// Prompt processing: `total_input` = input tokens × batch — the
+    /// parallel, compute-bound burst that produces the Fig 4 spikes.
+    Prompt { total_input: f64 },
+    /// Autoregressive token sampling at the given batch size.
+    Token { batch: f64 },
+}
+
+/// GPU frequency/power control applied to a server.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum CapMode {
+    /// No cap: GPUs run at max SM clock.
+    None,
+    /// Proactive frequency cap (the paper's chosen mechanism): bounds
+    /// power *before* it is drawn; affects all phases.
+    FreqCap { mhz: f64 },
+    /// Reactive power cap: clamps sustained power but the prompt-phase
+    /// spike escapes for the cap-reaction latency (Fig 6's key flaw).
+    PowerCap { frac_of_tdp: f64 },
+}
+
+/// Per-model power calibration (fractions of aggregate GPU TDP).
+///
+/// Interpolation anchors follow the paper's sweep axes: prompt peak vs
+/// total input tokens (Fig 5a, log2 scale 256→8192) and token-phase mean
+/// vs batch (Fig 5c, log2 scale 1→16).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct GpuPowerCalib {
+    /// Idle draw (≈20% of TDP — the Flan-T5 training trough, §2.4).
+    pub idle_frac: f64,
+    /// Prompt-phase peak at total input = 256 tokens.
+    pub prompt_peak_at_256: f64,
+    /// Prompt-phase peak at total input = 8192 tokens (may exceed 1.0:
+    /// the paper observes spikes beyond TDP).
+    pub prompt_peak_at_8192: f64,
+    /// Token-phase mean at batch 1.
+    pub token_mean_at_b1: f64,
+    /// Token-phase mean at batch 16.
+    pub token_mean_at_b16: f64,
+    /// Exponent of the dynamic-power vs frequency curve:
+    /// `P = idle + (P_nom - idle) · (f/f_max)^alpha`. Dynamic power goes
+    /// as f·V² and V scales with f on the DVFS ladder, so alpha > 1;
+    /// 1.4 calibrates a 1110 MHz cap (from 1410) to reclaim ≈15–23% of
+    /// peak power (Fig 6/7's "up to 20%" band).
+    pub power_freq_alpha: f64,
+    /// Max SM clock (A100: 1410 MHz).
+    pub max_freq_mhz: f64,
+}
+
+impl Default for GpuPowerCalib {
+    fn default() -> Self {
+        GpuPowerCalib {
+            idle_frac: 0.20,
+            prompt_peak_at_256: 0.72,
+            prompt_peak_at_8192: 1.10,
+            token_mean_at_b1: 0.45,
+            token_mean_at_b16: 0.62,
+            power_freq_alpha: 1.4,
+            max_freq_mhz: 1410.0,
+        }
+    }
+}
+
+impl GpuPowerCalib {
+    /// Prompt-phase peak power fraction at nominal frequency, as a
+    /// function of total input tokens (input × batch). Log2-linear
+    /// between the anchors, clamped outside, floored at the token level.
+    pub fn prompt_peak_frac(&self, total_input: f64) -> f64 {
+        let lo = 256.0_f64.log2();
+        let hi = 8192.0_f64.log2();
+        let x = total_input.max(1.0).log2().clamp(lo, hi);
+        let t = (x - lo) / (hi - lo);
+        let peak = self.prompt_peak_at_256 + t * (self.prompt_peak_at_8192 - self.prompt_peak_at_256);
+        peak.max(self.token_mean_at_b1)
+    }
+
+    /// Token-phase mean power fraction at nominal frequency vs batch.
+    pub fn token_mean_frac(&self, batch: f64) -> f64 {
+        let lo = 1.0_f64.log2(); // 0
+        let hi = 16.0_f64.log2();
+        let x = batch.max(1.0).log2().clamp(lo, hi);
+        let t = (x - lo) / (hi - lo);
+        self.token_mean_at_b1 + t * (self.token_mean_at_b16 - self.token_mean_at_b1)
+    }
+
+    /// Scale a nominal power fraction by a frequency cap:
+    /// dynamic component scales as (f/f_max)^alpha, idle floor unaffected.
+    pub fn apply_freq(&self, nominal_frac: f64, freq_mhz: f64) -> f64 {
+        let ratio = (freq_mhz / self.max_freq_mhz).clamp(0.0, 1.0);
+        let dynamic = (nominal_frac - self.idle_frac).max(0.0);
+        self.idle_frac + dynamic * ratio.powf(self.power_freq_alpha)
+    }
+
+    /// Nominal (uncapped) power for a phase.
+    pub fn phase_power_nominal(&self, phase: Phase) -> f64 {
+        match phase {
+            Phase::Idle => self.idle_frac,
+            Phase::Prompt { total_input } => self.prompt_peak_frac(total_input),
+            Phase::Token { batch } => self.token_mean_frac(batch),
+        }
+    }
+
+    /// Power for a phase under a cap.
+    ///
+    /// * `FreqCap` is proactive: it bounds every phase, including the
+    ///   prompt spike.
+    /// * `PowerCap` is reactive: if `spike_escaping` is true (the start of
+    ///   a prompt burst, within the cap loop's reaction latency) the draw
+    ///   passes through uncapped — Fig 6's "initial peaks go beyond the
+    ///   power cap". Sustained draw clamps to the cap.
+    pub fn phase_power(&self, phase: Phase, cap: CapMode, spike_escaping: bool) -> f64 {
+        let nominal = self.phase_power_nominal(phase);
+        match cap {
+            CapMode::None => nominal,
+            CapMode::FreqCap { mhz } => self.apply_freq(nominal, mhz),
+            CapMode::PowerCap { frac_of_tdp } => {
+                if spike_escaping && matches!(phase, Phase::Prompt { .. }) {
+                    nominal
+                } else {
+                    nominal.min(frac_of_tdp.max(self.idle_frac))
+                }
+            }
+        }
+    }
+
+    /// Effective frequency ratio a *power* cap induces once it reacts
+    /// (used for its performance impact): invert the power curve.
+    pub fn power_cap_freq_ratio(&self, phase: Phase, frac_of_tdp: f64) -> f64 {
+        let nominal = self.phase_power_nominal(phase);
+        if nominal <= frac_of_tdp {
+            return 1.0;
+        }
+        let avail = (frac_of_tdp - self.idle_frac).max(0.0);
+        let need = (nominal - self.idle_frac).max(1e-9);
+        (avail / need).powf(1.0 / self.power_freq_alpha).clamp(0.05, 1.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cal() -> GpuPowerCalib {
+        GpuPowerCalib::default()
+    }
+
+    #[test]
+    fn prompt_peak_monotonic_in_input() {
+        let c = cal();
+        let mut prev = 0.0;
+        for &inp in &[64.0, 256.0, 512.0, 1024.0, 4096.0, 8192.0, 20000.0] {
+            let p = c.prompt_peak_frac(inp);
+            assert!(p >= prev, "input={inp}");
+            prev = p;
+        }
+        // paper: spikes can exceed TDP at large inputs
+        assert!(c.prompt_peak_frac(8192.0) > 1.0);
+        // clamped outside the anchor range
+        assert_eq!(c.prompt_peak_frac(100_000.0), c.prompt_peak_frac(8192.0));
+    }
+
+    #[test]
+    fn token_mean_monotonic_in_batch() {
+        let c = cal();
+        assert!(c.token_mean_frac(1.0) < c.token_mean_frac(4.0));
+        assert!(c.token_mean_frac(4.0) < c.token_mean_frac(16.0));
+        assert_eq!(c.token_mean_frac(16.0), c.token_mean_frac(64.0));
+    }
+
+    #[test]
+    fn prompt_spike_exceeds_token_mean() {
+        // The paper's core phase asymmetry (Fig 4).
+        let c = cal();
+        assert!(c.prompt_peak_frac(2048.0) > c.token_mean_frac(16.0));
+    }
+
+    #[test]
+    fn freq_cap_reclaims_paper_range() {
+        // Fig 7: capping 1410 -> 1110 MHz reclaims roughly 13-20% of peak.
+        let c = cal();
+        let peak = c.prompt_peak_frac(8192.0);
+        let capped = c.apply_freq(peak, 1110.0);
+        let reduction = 1.0 - capped / peak;
+        assert!(
+            (0.10..=0.25).contains(&reduction),
+            "reduction {reduction} outside paper band"
+        );
+        // base-frequency cap (1275) reclaims less
+        let capped_base = c.apply_freq(peak, 1275.0);
+        assert!(capped_base > capped);
+    }
+
+    #[test]
+    fn brake_freq_brings_power_near_idle() {
+        let c = cal();
+        let braked = c.apply_freq(c.prompt_peak_frac(8192.0), 288.0);
+        assert!(braked < c.idle_frac + 0.25, "braked={braked}");
+    }
+
+    #[test]
+    fn freq_cap_is_proactive_power_cap_is_reactive() {
+        // Fig 6: the prompt spike escapes a power cap but not a freq cap.
+        let c = cal();
+        let phase = Phase::Prompt { total_input: 8192.0 };
+        let nominal = c.phase_power_nominal(phase);
+        let under_freq = c.phase_power(phase, CapMode::FreqCap { mhz: 1110.0 }, true);
+        let under_power_escaping =
+            c.phase_power(phase, CapMode::PowerCap { frac_of_tdp: 0.8 }, true);
+        let under_power_reacted =
+            c.phase_power(phase, CapMode::PowerCap { frac_of_tdp: 0.8 }, false);
+        assert!(under_freq < nominal);
+        assert_eq!(under_power_escaping, nominal); // spike escapes
+        assert!((under_power_reacted - 0.8).abs() < 1e-12); // then clamps
+    }
+
+    #[test]
+    fn token_phase_respects_power_cap_immediately() {
+        let c = cal();
+        let p = c.phase_power(Phase::Token { batch: 16.0 }, CapMode::PowerCap { frac_of_tdp: 0.3 }, true);
+        assert!((p - 0.3).abs() < 1e-12);
+    }
+
+    #[test]
+    fn power_cap_freq_ratio_inverts() {
+        let c = cal();
+        let phase = Phase::Prompt { total_input: 8192.0 };
+        // uncapped if cap above nominal
+        assert_eq!(c.power_cap_freq_ratio(phase, 1.5), 1.0);
+        let r = c.power_cap_freq_ratio(phase, 0.8);
+        assert!(r < 1.0 && r > 0.3);
+        // applying that ratio as a freq cap should land near the cap power
+        let p = c.apply_freq(c.phase_power_nominal(phase), r * c.max_freq_mhz);
+        assert!((p - 0.8).abs() < 0.02, "p={p}");
+    }
+
+    #[test]
+    fn idle_unaffected_by_freq() {
+        let c = cal();
+        assert_eq!(c.apply_freq(c.idle_frac, 288.0), c.idle_frac);
+    }
+}

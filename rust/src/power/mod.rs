@@ -1,0 +1,18 @@
+//! Power models: GPU phase/frequency power, server component breakdown,
+//! capping semantics, and training-iteration power.
+//!
+//! Calibration sources (all from the paper, since the real A100 testbed is
+//! unavailable — see DESIGN.md §2 substitution table):
+//!   * Fig 2  — server component budget (GPUs ≈ half of provisioned power),
+//!   * Fig 4/5 — prompt-spike vs token-phase magnitudes per model/config,
+//!   * Fig 6  — reactive power-cap vs proactive frequency-cap semantics,
+//!   * Fig 7/9 — frequency→power and frequency→performance sensitivity,
+//!   * Fig 8  — training iteration phase structure.
+
+pub mod gpu;
+pub mod server;
+pub mod training;
+
+pub use gpu::{CapMode, GpuPowerCalib, Phase};
+pub use server::ServerPowerModel;
+pub use training::TrainingPowerModel;

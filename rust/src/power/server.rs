@@ -1,0 +1,176 @@
+//! Server-level power: DGX-A100 component budget (Fig 2) and the
+//! GPU-fraction-of-server relationship the paper measures in production
+//! (§3.2 / Fig 11: GPUs ≈ 60% of consumed server power; peak server power
+//! highly correlated with peak GPU power).
+
+use super::gpu::{CapMode, GpuPowerCalib, Phase};
+
+/// One component of the provisioned server budget (Fig 2).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Component {
+    pub name: &'static str,
+    pub provisioned_w: f64,
+    /// Fraction of the provisioned wattage drawn when the server idles.
+    pub idle_fraction: f64,
+    /// Whether the draw scales with GPU activity (fans/PSU loss do; the
+    /// NVMe mostly does not).
+    pub tracks_gpu: bool,
+}
+
+/// DGX-A100-class server power model.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ServerPowerModel {
+    pub gpu_tdp_each_w: f64,
+    pub n_gpus: usize,
+    pub components: Vec<Component>,
+    pub calib: GpuPowerCalib,
+}
+
+impl Default for ServerPowerModel {
+    fn default() -> Self {
+        // 8×A100-80GB SXM (400 W each) + host. Totals ~6.5 kW provisioned,
+        // matching the DGX A100 max system power; GPUs ≈ 49% of the
+        // provisioned budget (Fig 2) and ≈60% of *consumed* power under
+        // load (Fig 11), because fixed components idle below provisioning.
+        ServerPowerModel {
+            gpu_tdp_each_w: 400.0,
+            n_gpus: 8,
+            components: vec![
+                Component { name: "cpus", provisioned_w: 560.0, idle_fraction: 0.35, tracks_gpu: true },
+                Component { name: "dram", provisioned_w: 380.0, idle_fraction: 0.40, tracks_gpu: true },
+                Component { name: "nvswitch", provisioned_w: 300.0, idle_fraction: 0.30, tracks_gpu: true },
+                Component { name: "nvme+nic", provisioned_w: 360.0, idle_fraction: 0.45, tracks_gpu: false },
+                Component { name: "fans", provisioned_w: 800.0, idle_fraction: 0.25, tracks_gpu: true },
+                Component { name: "psu-loss", provisioned_w: 900.0, idle_fraction: 0.20, tracks_gpu: true },
+            ],
+            calib: GpuPowerCalib::default(),
+        }
+    }
+}
+
+impl ServerPowerModel {
+    /// Aggregate GPU TDP (the denominator of all GPU power fractions).
+    pub fn gpu_tdp_w(&self) -> f64 {
+        self.gpu_tdp_each_w * self.n_gpus as f64
+    }
+
+    /// Provisioned (breaker-facing) server power.
+    pub fn provisioned_w(&self) -> f64 {
+        self.gpu_tdp_w() + self.components.iter().map(|c| c.provisioned_w).sum::<f64>()
+    }
+
+    /// GPU share of the provisioned budget (Fig 2 headline: ~half).
+    pub fn gpu_provisioned_share(&self) -> f64 {
+        self.gpu_tdp_w() / self.provisioned_w()
+    }
+
+    /// Non-GPU draw given the GPUs' current utilization level (0..~1.2).
+    fn non_gpu_w(&self, gpu_activity: f64) -> f64 {
+        self.components
+            .iter()
+            .map(|c| {
+                if c.tracks_gpu {
+                    let a = gpu_activity.clamp(0.0, 1.0);
+                    c.provisioned_w * (c.idle_fraction + (0.9 - c.idle_fraction) * a)
+                } else {
+                    c.provisioned_w * c.idle_fraction
+                }
+            })
+            .sum()
+    }
+
+    /// Non-GPU draw at an explicit GPU-activity level (0..1) — used by
+    /// the training-row model where the waveform drives the GPUs
+    /// directly (Table 2 / Fig 8 aggregation).
+    pub fn non_gpu_at(&self, activity: f64) -> f64 {
+        self.non_gpu_w(activity)
+    }
+
+    /// Total server wall power for a phase under a cap.
+    pub fn server_power_w(&self, phase: Phase, cap: CapMode, spike_escaping: bool) -> f64 {
+        let gpu_frac = self.calib.phase_power(phase, cap, spike_escaping);
+        let gpu_w = gpu_frac * self.gpu_tdp_w();
+        // GPU "activity" proxy for the tracking components: utilization
+        // above idle normalized to the idle→TDP band.
+        let activity = ((gpu_frac - self.calib.idle_frac) / (1.0 - self.calib.idle_frac)).clamp(0.0, 1.0);
+        gpu_w + self.non_gpu_w(activity)
+    }
+
+    /// GPU share of *consumed* power in a phase (paper: ~60% under load).
+    pub fn gpu_consumed_share(&self, phase: Phase) -> f64 {
+        let total = self.server_power_w(phase, CapMode::None, false);
+        let gpu_w = self.calib.phase_power_nominal(phase) * self.gpu_tdp_w();
+        gpu_w / total
+    }
+
+    /// Fig 2 rows: (component, provisioned watts, share of total).
+    pub fn breakdown(&self) -> Vec<(&'static str, f64, f64)> {
+        let total = self.provisioned_w();
+        let mut rows = vec![("gpus (8x)", self.gpu_tdp_w(), self.gpu_tdp_w() / total)];
+        for c in &self.components {
+            rows.push((c.name, c.provisioned_w, c.provisioned_w / total));
+        }
+        rows
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn provisioned_total_matches_dgx_class() {
+        let m = ServerPowerModel::default();
+        let p = m.provisioned_w();
+        assert!((6000.0..7000.0).contains(&p), "provisioned={p}");
+    }
+
+    #[test]
+    fn gpu_share_of_provisioned_near_half() {
+        // Fig 2: "GPUs make around 50% of the server power [budget]".
+        let m = ServerPowerModel::default();
+        let share = m.gpu_provisioned_share();
+        assert!((0.45..0.55).contains(&share), "share={share}");
+    }
+
+    #[test]
+    fn gpu_share_of_consumed_near_sixty_pct_loaded() {
+        // §3.2: GPUs ≈ 60% of consumed server power in production.
+        let m = ServerPowerModel::default();
+        let share = m.gpu_consumed_share(Phase::Prompt { total_input: 4096.0 });
+        assert!((0.52..0.68).contains(&share), "share={share}");
+    }
+
+    #[test]
+    fn server_power_ordering_idle_token_prompt() {
+        let m = ServerPowerModel::default();
+        let idle = m.server_power_w(Phase::Idle, CapMode::None, false);
+        let token = m.server_power_w(Phase::Token { batch: 4.0 }, CapMode::None, false);
+        let prompt = m.server_power_w(Phase::Prompt { total_input: 4096.0 }, CapMode::None, false);
+        assert!(idle < token && token < prompt, "{idle} {token} {prompt}");
+        assert!(idle > 0.15 * m.provisioned_w());
+        // peak server power can exceed provisioned GPU share but stays
+        // below total provisioned (provisioning is for worst case)
+        assert!(prompt <= m.provisioned_w() * 1.02);
+    }
+
+    #[test]
+    fn freq_cap_reduces_server_power() {
+        let m = ServerPowerModel::default();
+        let phase = Phase::Prompt { total_input: 8192.0 };
+        let uncapped = m.server_power_w(phase, CapMode::None, false);
+        let capped = m.server_power_w(phase, CapMode::FreqCap { mhz: 1110.0 }, false);
+        let red = 1.0 - capped / uncapped;
+        // server-level reduction is smaller than GPU-level (non-GPU floor)
+        assert!((0.08..0.22).contains(&red), "red={red}");
+    }
+
+    #[test]
+    fn breakdown_sums_to_provisioned() {
+        let m = ServerPowerModel::default();
+        let total: f64 = m.breakdown().iter().map(|(_, w, _)| w).sum();
+        assert!((total - m.provisioned_w()).abs() < 1e-9);
+        let share: f64 = m.breakdown().iter().map(|(_, _, s)| s).sum();
+        assert!((share - 1.0).abs() < 1e-12);
+    }
+}

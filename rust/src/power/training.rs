@@ -1,0 +1,218 @@
+//! Training-iteration power model (§2.4, Figs 8/9, Table 2 training column).
+//!
+//! Training power has a phase structure *within* each iteration:
+//!   compute (fwd) → small dip (fwd/bwd boundary sync) → compute (bwd)
+//!   → deep trough (cross-GPU gradient synchronization).
+//! The trough level is model-dependent: RoBERTa stays at ~75% of TDP,
+//! GPT-NeoX drops to ~50%, Flan-T5 falls to idle (~20%). Because large
+//! jobs synchronize *across servers*, these swings are coordinated at the
+//! row level — the paper's core argument for why training clusters offer
+//! little oversubscription headroom (max 2s swing: 37.5% of provisioned).
+
+use super::gpu::{CapMode, GpuPowerCalib};
+
+/// Phase positions inside one training iteration (fractions of iter time).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TrainingProfile {
+    /// Iteration wall time at nominal frequency, seconds.
+    pub iter_time_s: f64,
+    /// Peak compute power as fraction of GPU TDP (can exceed 1.0;
+    /// Fig 8 shows GPT-NeoX and Flan-T5 beyond TDP).
+    pub peak_frac: f64,
+    /// Power level during the fwd/bwd boundary dip.
+    pub mid_dip_frac: f64,
+    /// Power level during the end-of-iteration synchronization trough.
+    pub sync_trough_frac: f64,
+    /// Fraction of the iteration spent in the mid dip.
+    pub mid_dip_width: f64,
+    /// Fraction of the iteration spent in the sync trough.
+    pub sync_width: f64,
+    /// Fraction of iteration time that is compute-bound (scales ~1/f).
+    pub compute_time_frac: f64,
+}
+
+/// Training power model for one model on one server.
+#[derive(Debug, Clone, Copy)]
+pub struct TrainingPowerModel {
+    pub profile: TrainingProfile,
+    pub calib: GpuPowerCalib,
+}
+
+impl TrainingPowerModel {
+    pub fn new(profile: TrainingProfile) -> Self {
+        TrainingPowerModel { profile, calib: GpuPowerCalib::default() }
+    }
+
+    /// Iteration time under a frequency cap (compute part stretches 1/f).
+    pub fn iter_time_s(&self, cap: CapMode) -> f64 {
+        let ratio = match cap {
+            CapMode::None => 1.0,
+            CapMode::FreqCap { mhz } => (mhz / self.calib.max_freq_mhz).clamp(0.05, 1.0),
+            // A power cap reacts to sustained compute power; its effective
+            // slowdown uses the inverted power curve at the peak level.
+            CapMode::PowerCap { frac_of_tdp } => {
+                let avail = (frac_of_tdp - self.calib.idle_frac).max(0.0);
+                let need = (self.profile.peak_frac - self.calib.idle_frac).max(1e-9);
+                (avail / need).powf(1.0 / self.calib.power_freq_alpha).clamp(0.05, 1.0)
+            }
+        };
+        let p = &self.profile;
+        p.iter_time_s * (p.compute_time_frac / ratio + (1.0 - p.compute_time_frac))
+    }
+
+    /// Throughput (iterations/s) relative to uncapped.
+    pub fn relative_throughput(&self, cap: CapMode) -> f64 {
+        self.iter_time_s(CapMode::None) / self.iter_time_s(cap)
+    }
+
+    /// GPU power fraction at a point `t` (seconds) inside the iteration
+    /// cycle, under a cap. The waveform: compute plateau, mid dip at the
+    /// fwd/bwd boundary (~55% through), sync trough at the end.
+    pub fn power_frac_at(&self, t_in_iter_s: f64, cap: CapMode) -> f64 {
+        let p = &self.profile;
+        let iter = self.iter_time_s(cap);
+        let x = (t_in_iter_s / iter).rem_euclid(1.0);
+        let mid_start = 0.55 - p.mid_dip_width / 2.0;
+        let mid_end = 0.55 + p.mid_dip_width / 2.0;
+        let sync_start = 1.0 - p.sync_width;
+        let nominal = if x >= sync_start {
+            p.sync_trough_frac
+        } else if (mid_start..mid_end).contains(&x) {
+            p.mid_dip_frac
+        } else {
+            p.peak_frac
+        };
+        match cap {
+            CapMode::None => nominal,
+            CapMode::FreqCap { mhz } => self.calib.apply_freq(nominal, mhz),
+            // Reactive power cap clamps the sustained plateau but the
+            // compute phase briefly overshoots after each trough; the
+            // trough itself is communication-bound and unaffected.
+            CapMode::PowerCap { frac_of_tdp } => nominal.min(frac_of_tdp.max(self.calib.idle_frac)),
+        }
+    }
+
+    /// Peak power over a full iteration under a cap.
+    pub fn peak_frac(&self, cap: CapMode) -> f64 {
+        match cap {
+            CapMode::None => self.profile.peak_frac,
+            CapMode::FreqCap { mhz } => self.calib.apply_freq(self.profile.peak_frac, mhz),
+            CapMode::PowerCap { frac_of_tdp } => {
+                // Reactive: transient spikes escape by ~5% before clamping.
+                (frac_of_tdp * 1.05).min(self.profile.peak_frac)
+            }
+        }
+    }
+
+    /// Power swing (peak - trough) within one iteration — the quantity
+    /// the paper identifies as the training-side challenge (§2.4).
+    pub fn swing_frac(&self, cap: CapMode) -> f64 {
+        let trough = match cap {
+            CapMode::None => self.profile.sync_trough_frac,
+            CapMode::FreqCap { mhz } => self.calib.apply_freq(self.profile.sync_trough_frac, mhz),
+            CapMode::PowerCap { frac_of_tdp } => {
+                self.profile.sync_trough_frac.min(frac_of_tdp.max(self.calib.idle_frac))
+            }
+        };
+        (self.peak_frac(cap) - trough).max(0.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn neox_like() -> TrainingPowerModel {
+        TrainingPowerModel::new(TrainingProfile {
+            iter_time_s: 2.0,
+            peak_frac: 1.05,
+            mid_dip_frac: 0.80,
+            sync_trough_frac: 0.50,
+            mid_dip_width: 0.06,
+            sync_width: 0.15,
+            compute_time_frac: 0.80,
+        })
+    }
+
+    fn flant5_like() -> TrainingPowerModel {
+        TrainingPowerModel::new(TrainingProfile {
+            iter_time_s: 3.0,
+            peak_frac: 1.08,
+            mid_dip_frac: 0.60,
+            sync_trough_frac: 0.20,
+            mid_dip_width: 0.08,
+            sync_width: 0.20,
+            compute_time_frac: 0.75,
+        })
+    }
+
+    #[test]
+    fn waveform_has_plateau_dip_trough() {
+        let m = neox_like();
+        let plateau = m.power_frac_at(0.2, CapMode::None);
+        let dip = m.power_frac_at(0.55 * 2.0, CapMode::None);
+        let trough = m.power_frac_at(1.95, CapMode::None);
+        assert_eq!(plateau, 1.05);
+        assert_eq!(dip, 0.80);
+        assert_eq!(trough, 0.50);
+    }
+
+    #[test]
+    fn training_reaches_tdp() {
+        // §2.4 takeaway: "training can easily reach the TDP of the system".
+        assert!(neox_like().peak_frac(CapMode::None) >= 1.0);
+    }
+
+    #[test]
+    fn freq_cap_reduces_peak_but_also_trough_for_neox() {
+        // §2.4: for models with busy sync phases (RoBERTa/NeoX), capping
+        // lowers the trough too — so it does NOT fix the swing.
+        let m = neox_like();
+        let cap = CapMode::FreqCap { mhz: 1110.0 };
+        assert!(m.peak_frac(cap) < m.peak_frac(CapMode::None));
+        let swing_ratio = m.swing_frac(cap) / m.swing_frac(CapMode::None);
+        assert!(swing_ratio > 0.6, "swing should persist, got ratio {swing_ratio}");
+    }
+
+    #[test]
+    fn flant5_trough_is_idle_and_unaffected() {
+        // Flan-T5's trough is at idle; a freq cap cannot push below idle,
+        // so capping shrinks the swing from the top only — "reacting well".
+        let m = flant5_like();
+        let cap = CapMode::FreqCap { mhz: 1110.0 };
+        let trough_uncapped = m.power_frac_at(2.95, CapMode::None);
+        let trough_capped = m.power_frac_at(2.95, cap);
+        assert!((trough_capped - trough_uncapped).abs() < 1e-9);
+        assert!(m.swing_frac(cap) < m.swing_frac(CapMode::None));
+    }
+
+    #[test]
+    fn freq_cap_perf_tradeoff_matches_fig9() {
+        // Fig 9: ~22% peak power reduction for ~10% throughput loss.
+        let m = flant5_like();
+        let cap = CapMode::FreqCap { mhz: 1110.0 };
+        let peak_red = 1.0 - m.peak_frac(cap) / m.peak_frac(CapMode::None);
+        let perf_loss = 1.0 - m.relative_throughput(cap);
+        assert!((0.12..0.25).contains(&peak_red), "peak_red={peak_red}");
+        assert!((0.05..0.20).contains(&perf_loss), "perf_loss={perf_loss}");
+        assert!(peak_red > perf_loss, "capping must be superlinear");
+    }
+
+    #[test]
+    fn power_cap_lets_transients_escape() {
+        let m = neox_like();
+        let cap = CapMode::PowerCap { frac_of_tdp: 0.8 };
+        assert!(m.peak_frac(cap) > 0.8);
+        assert!(m.peak_frac(cap) <= 0.85);
+    }
+
+    #[test]
+    fn iter_time_stretches_under_caps() {
+        let m = neox_like();
+        let t0 = m.iter_time_s(CapMode::None);
+        let t1 = m.iter_time_s(CapMode::FreqCap { mhz: 1110.0 });
+        let t2 = m.iter_time_s(CapMode::FreqCap { mhz: 288.0 });
+        assert!(t0 < t1 && t1 < t2);
+        assert_eq!(t0, 2.0);
+    }
+}

@@ -1,0 +1,211 @@
+//! Artifact bundle parsing: `manifest.json`, `weights.bin`, `*.hlo.txt`.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context};
+
+use crate::util::json::{self, Json};
+
+/// Model dimensions (mirrors `ModelConfig` in python/compile/model.py).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelDims {
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_heads: usize,
+    pub n_layers: usize,
+    pub d_ff: usize,
+    pub max_seq: usize,
+    pub batch_slots: usize,
+    pub d_head: usize,
+    pub num_params: usize,
+}
+
+/// One parameter tensor in `weights.bin`.
+#[derive(Debug, Clone)]
+pub struct ParamEntry {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub byte_offset: usize,
+    pub byte_len: usize,
+}
+
+/// One compiled computation.
+#[derive(Debug, Clone)]
+pub struct ArtifactEntry {
+    pub name: String,
+    pub file: String,
+    pub kind: String, // "prefill" | "decode"
+    pub seq: usize,
+}
+
+/// The parsed artifact manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub model: ModelDims,
+    pub kv_shape: [usize; 5],
+    pub params: Vec<ParamEntry>,
+    pub artifacts: Vec<ArtifactEntry>,
+    /// Analytic FLOPs per artifact (drives the serving power model).
+    pub flops: Vec<(String, f64)>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> anyhow::Result<Manifest> {
+        let text = std::fs::read_to_string(dir.join("manifest.json"))
+            .with_context(|| format!("reading {}/manifest.json", dir.display()))?;
+        let doc = json::parse(&text).map_err(|e| anyhow::anyhow!("manifest parse: {e}"))?;
+
+        let need = |j: &Json, path: &[&str]| -> anyhow::Result<f64> {
+            j.at(path)
+                .and_then(|v| v.as_f64())
+                .with_context(|| format!("manifest missing {}", path.join(".")))
+        };
+        let m = |k: &str| need(&doc, &["model", k]).map(|x| x as usize);
+        let model = ModelDims {
+            vocab: m("vocab")?,
+            d_model: m("d_model")?,
+            n_heads: m("n_heads")?,
+            n_layers: m("n_layers")?,
+            d_ff: m("d_ff")?,
+            max_seq: m("max_seq")?,
+            batch_slots: m("batch_slots")?,
+            d_head: m("d_head")?,
+            num_params: m("num_params")?,
+        };
+
+        let kv_arr = doc
+            .get("kv_shape")
+            .and_then(|v| v.as_arr())
+            .context("manifest missing kv_shape")?;
+        if kv_arr.len() != 5 {
+            bail!("kv_shape must have 5 dims, got {}", kv_arr.len());
+        }
+        let mut kv_shape = [0usize; 5];
+        for (i, v) in kv_arr.iter().enumerate() {
+            kv_shape[i] = v.as_usize().context("bad kv dim")?;
+        }
+
+        let params = doc
+            .get("params")
+            .and_then(|v| v.as_arr())
+            .context("manifest missing params")?
+            .iter()
+            .map(|p| -> anyhow::Result<ParamEntry> {
+                Ok(ParamEntry {
+                    name: p.get("name").and_then(|v| v.as_str()).context("param name")?.to_string(),
+                    shape: p
+                        .get("shape")
+                        .and_then(|v| v.as_arr())
+                        .context("param shape")?
+                        .iter()
+                        .map(|d| d.as_usize().unwrap_or(0))
+                        .collect(),
+                    byte_offset: p.get("byte_offset").and_then(|v| v.as_usize()).context("offset")?,
+                    byte_len: p.get("byte_len").and_then(|v| v.as_usize()).context("len")?,
+                })
+            })
+            .collect::<anyhow::Result<Vec<_>>>()?;
+
+        let artifacts = doc
+            .get("artifacts")
+            .and_then(|v| v.as_arr())
+            .context("manifest missing artifacts")?
+            .iter()
+            .map(|a| -> anyhow::Result<ArtifactEntry> {
+                Ok(ArtifactEntry {
+                    name: a.get("name").and_then(|v| v.as_str()).context("name")?.to_string(),
+                    file: a.get("file").and_then(|v| v.as_str()).context("file")?.to_string(),
+                    kind: a.get("kind").and_then(|v| v.as_str()).context("kind")?.to_string(),
+                    seq: a.get("seq").and_then(|v| v.as_usize()).unwrap_or(0),
+                })
+            })
+            .collect::<anyhow::Result<Vec<_>>>()?;
+
+        let flops = match doc.get("flops") {
+            Some(Json::Obj(map)) => {
+                map.iter().filter_map(|(k, v)| v.as_f64().map(|x| (k.clone(), x))).collect()
+            }
+            _ => Vec::new(),
+        };
+
+        Ok(Manifest { dir: dir.to_path_buf(), model, kv_shape, params, artifacts, flops })
+    }
+
+    /// Read `weights.bin` and split into per-parameter f32 vectors
+    /// (little-endian on disk).
+    pub fn load_weights(&self) -> anyhow::Result<Vec<Vec<f32>>> {
+        let raw = std::fs::read(self.dir.join("weights.bin"))
+            .with_context(|| format!("reading {}/weights.bin", self.dir.display()))?;
+        let mut out = Vec::with_capacity(self.params.len());
+        for p in &self.params {
+            let end = p.byte_offset + p.byte_len;
+            if end > raw.len() {
+                bail!("weights.bin too short for {}", p.name);
+            }
+            let bytes = &raw[p.byte_offset..end];
+            let mut v = Vec::with_capacity(bytes.len() / 4);
+            for chunk in bytes.chunks_exact(4) {
+                v.push(f32::from_le_bytes([chunk[0], chunk[1], chunk[2], chunk[3]]));
+            }
+            let expected: usize = p.shape.iter().product::<usize>().max(1);
+            if v.len() != expected && !(p.shape.is_empty() && v.len() == 1) {
+                bail!("{}: {} elems, expected {}", p.name, v.len(), expected);
+            }
+            out.push(v);
+        }
+        Ok(out)
+    }
+
+    pub fn flops_of(&self, name: &str) -> Option<f64> {
+        self.flops.iter().find(|(k, _)| k == name).map(|&(_, v)| v)
+    }
+
+    pub fn kv_elems(&self) -> usize {
+        self.kv_shape.iter().product()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> Option<PathBuf> {
+        let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        dir.join("manifest.json").exists().then_some(dir)
+    }
+
+    #[test]
+    fn parses_real_manifest() {
+        let Some(dir) = artifacts_dir() else {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        };
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.model.vocab, 512);
+        assert_eq!(m.kv_shape[0], m.model.n_layers);
+        assert_eq!(m.kv_shape[1], m.model.batch_slots);
+        assert!(m.artifacts.iter().any(|a| a.kind == "decode"));
+        assert!(m.artifacts.iter().filter(|a| a.kind == "prefill").count() >= 2);
+        assert!(m.flops_of("decode_per_step").unwrap() > 0.0);
+    }
+
+    #[test]
+    fn loads_weights_consistently() {
+        let Some(dir) = artifacts_dir() else {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        };
+        let m = Manifest::load(&dir).unwrap();
+        let w = m.load_weights().unwrap();
+        assert_eq!(w.len(), m.params.len());
+        let total: usize = w.iter().map(|v| v.len()).sum();
+        assert_eq!(total, m.model.num_params);
+        // tok_emb comes first and is [vocab, d_model]
+        assert_eq!(m.params[0].name, "tok_emb");
+        assert_eq!(w[0].len(), m.model.vocab * m.model.d_model);
+        // weights are not degenerate
+        let nonzero = w[0].iter().filter(|x| **x != 0.0).count();
+        assert!(nonzero > w[0].len() / 2);
+    }
+}

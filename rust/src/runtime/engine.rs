@@ -1,0 +1,302 @@
+//! The inference engine: compiled prefill/decode executables + weights,
+//! with the KV cache round-tripping between calls.
+//!
+//! Executables are lowered with `return_tuple=True` (the proven
+//! interchange path — see /opt/xla-example/README.md), so each call
+//! returns one tuple literal that we decompose into
+//! (logits, kv_k, kv_v). The KV cache stays in host literals between
+//! steps; see EXPERIMENTS.md §Perf for the measured cost and the
+//! device-resident alternative.
+
+use std::path::Path;
+
+use anyhow::{bail, Context};
+use xla::{Literal, PjRtClient, PjRtLoadedExecutable};
+
+use super::artifacts::Manifest;
+
+/// KV cache state for the whole batch (owned by the coordinator).
+pub struct KvState {
+    pub k: Literal,
+    pub v: Literal,
+}
+
+/// A loaded model: PJRT client, compiled executables, weights.
+pub struct Engine {
+    pub manifest: Manifest,
+    client: PjRtClient,
+    /// (bucket_seq, executable), ascending by bucket.
+    prefills: Vec<(usize, PjRtLoadedExecutable)>,
+    decode: PjRtLoadedExecutable,
+    /// Parameter literals in canonical order (re-fed every call).
+    params: Vec<Literal>,
+}
+
+impl Engine {
+    /// Load + compile everything in an artifact directory.
+    pub fn load(dir: &Path) -> anyhow::Result<Engine> {
+        let manifest = Manifest::load(dir)?;
+        let client = PjRtClient::cpu().context("PJRT CPU client")?;
+
+        let weights = manifest.load_weights()?;
+        let mut params = Vec::with_capacity(weights.len());
+        for (entry, data) in manifest.params.iter().zip(&weights) {
+            let lit = Literal::vec1(data);
+            let dims: Vec<i64> = entry.shape.iter().map(|&d| d as i64).collect();
+            params.push(if dims.is_empty() { lit } else { lit.reshape(&dims)? });
+        }
+
+        let mut prefills = Vec::new();
+        let mut decode = None;
+        for art in &manifest.artifacts {
+            let path = dir.join(&art.file);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().context("non-utf8 path")?,
+            )
+            .with_context(|| format!("parsing {}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client.compile(&comp).with_context(|| format!("compiling {}", art.name))?;
+            match art.kind.as_str() {
+                "prefill" => prefills.push((art.seq, exe)),
+                "decode" => decode = Some(exe),
+                other => bail!("unknown artifact kind {other}"),
+            }
+        }
+        prefills.sort_by_key(|&(s, _)| s);
+        let decode = decode.context("no decode artifact")?;
+        Ok(Engine { manifest, client, prefills, decode, params })
+    }
+
+    pub fn client(&self) -> &PjRtClient {
+        &self.client
+    }
+
+    /// Fresh all-zero KV cache.
+    pub fn empty_kv(&self) -> anyhow::Result<KvState> {
+        let dims: Vec<i64> = self.manifest.kv_shape.iter().map(|&d| d as i64).collect();
+        let zeros = vec![0f32; self.manifest.kv_elems()];
+        Ok(KvState {
+            k: Literal::vec1(&zeros).reshape(&dims)?,
+            v: Literal::vec1(&zeros).reshape(&dims)?,
+        })
+    }
+
+    /// Smallest compiled prompt bucket that fits `len` tokens.
+    pub fn bucket_for(&self, len: usize) -> Option<usize> {
+        self.prefills.iter().map(|&(s, _)| s).find(|&s| s >= len)
+    }
+
+    pub fn buckets(&self) -> Vec<usize> {
+        self.prefills.iter().map(|&(s, _)| s).collect()
+    }
+
+    fn run_tuple3(
+        &self,
+        exe: &PjRtLoadedExecutable,
+        args: &[&Literal],
+    ) -> anyhow::Result<(Literal, Literal, Literal)> {
+        let result = exe.execute::<&Literal>(args)?;
+        let lit = result[0][0].to_literal_sync()?;
+        Ok(lit.to_tuple3()?)
+    }
+
+    /// Run prefill for one request occupying `slot`; returns next-token
+    /// logits `[vocab]` and the updated KV.
+    pub fn prefill(
+        &self,
+        kv: KvState,
+        tokens: &[i32],
+        length: usize,
+        slot: usize,
+    ) -> anyhow::Result<(Vec<f32>, KvState)> {
+        if length == 0 || length > tokens.len() {
+            bail!("bad length {length} for {} tokens", tokens.len());
+        }
+        if slot >= self.manifest.model.batch_slots {
+            bail!("slot {slot} out of range");
+        }
+        let bucket = self
+            .bucket_for(tokens.len())
+            .with_context(|| format!("prompt of {} tokens exceeds buckets", tokens.len()))?;
+        let exe = &self.prefills.iter().find(|&&(s, _)| s == bucket).unwrap().1;
+        // Pad tokens up to the bucket.
+        let mut padded = tokens.to_vec();
+        padded.resize(bucket, 0);
+        let tokens_lit = Literal::vec1(&padded);
+        let len_lit = Literal::scalar(length as i32);
+        let slot_lit = Literal::scalar(slot as i32);
+
+        let mut args: Vec<&Literal> = self.params.iter().collect();
+        args.push(&kv.k);
+        args.push(&kv.v);
+        args.push(&tokens_lit);
+        args.push(&len_lit);
+        args.push(&slot_lit);
+
+        let (logits, k, v) = self.run_tuple3(exe, &args)?;
+        Ok((logits.to_vec::<f32>()?, KvState { k, v }))
+    }
+
+    /// Run one decode step for all batch slots; `tokens[b]`/`pos[b]` are
+    /// ignored garbage for inactive slots. Returns flat logits
+    /// `[batch_slots * vocab]` and the updated KV.
+    pub fn decode(
+        &self,
+        kv: KvState,
+        tokens: &[i32],
+        pos: &[i32],
+    ) -> anyhow::Result<(Vec<f32>, KvState)> {
+        let b = self.manifest.model.batch_slots;
+        if tokens.len() != b || pos.len() != b {
+            bail!("decode arrays must have {} slots", b);
+        }
+        let tokens_lit = Literal::vec1(tokens);
+        let pos_lit = Literal::vec1(pos);
+        let mut args: Vec<&Literal> = self.params.iter().collect();
+        args.push(&kv.k);
+        args.push(&kv.v);
+        args.push(&tokens_lit);
+        args.push(&pos_lit);
+        let (logits, k, v) = self.run_tuple3(&self.decode, &args)?;
+        Ok((logits.to_vec::<f32>()?, KvState { k, v }))
+    }
+
+    /// Argmax over one slot's logits slice.
+    pub fn argmax_slot(&self, flat_logits: &[f32], slot: usize) -> i32 {
+        let v = self.manifest.model.vocab;
+        let slice = &flat_logits[slot * v..(slot + 1) * v];
+        let mut best = 0usize;
+        for (i, &x) in slice.iter().enumerate() {
+            if x > slice[best] {
+                best = i;
+            }
+        }
+        best as i32
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json;
+    use std::path::PathBuf;
+
+    fn artifacts_dir() -> Option<PathBuf> {
+        let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        dir.join("manifest.json").exists().then_some(dir)
+    }
+
+    /// Full cross-layer round trip: the Rust PJRT path must reproduce the
+    /// JAX golden outputs (prefill logits, argmax, decode logits).
+    #[test]
+    fn golden_roundtrip() {
+        let Some(dir) = artifacts_dir() else {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        };
+        let engine = Engine::load(&dir).unwrap();
+        let golden_text = std::fs::read_to_string(dir.join("golden.json")).unwrap();
+        let g = json::parse(&golden_text).unwrap();
+
+        let tokens: Vec<i32> = g
+            .get("tokens")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|v| v.as_i64().unwrap() as i32)
+            .collect();
+        let length = g.get("length").unwrap().as_usize().unwrap();
+        let slot = g.get("slot").unwrap().as_usize().unwrap();
+
+        let kv = engine.empty_kv().unwrap();
+        let (logits, kv) = engine.prefill(kv, &tokens, length, slot).unwrap();
+
+        let expect_head: Vec<f64> = g
+            .get("prefill_logits_head")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|v| v.as_f64().unwrap())
+            .collect();
+        for (i, &e) in expect_head.iter().enumerate() {
+            assert!(
+                (logits[i] as f64 - e).abs() < 1e-3,
+                "prefill logit {i}: got {} want {e}",
+                logits[i]
+            );
+        }
+        let argmax = logits
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap()
+            .0;
+        assert_eq!(argmax as i64, g.get("prefill_argmax").unwrap().as_i64().unwrap());
+
+        // decode step
+        let d_tokens: Vec<i32> = g
+            .get("decode_tokens")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|v| v.as_i64().unwrap() as i32)
+            .collect();
+        let d_pos: Vec<i32> = g
+            .get("decode_pos")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|v| v.as_i64().unwrap() as i32)
+            .collect();
+        let (dlogits, _kv) = engine.decode(kv, &d_tokens, &d_pos).unwrap();
+        let d_expect: Vec<f64> = g
+            .get("decode_logits_head")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|v| v.as_f64().unwrap())
+            .collect();
+        let vocab = engine.manifest.model.vocab;
+        for (i, &e) in d_expect.iter().enumerate() {
+            let got = dlogits[slot * vocab + i] as f64;
+            assert!((got - e).abs() < 1e-3, "decode logit {i}: got {got} want {e}");
+        }
+        assert_eq!(
+            engine.argmax_slot(&dlogits, slot) as i64,
+            g.get("decode_argmax").unwrap().as_i64().unwrap()
+        );
+    }
+
+    #[test]
+    fn bucket_selection() {
+        let Some(dir) = artifacts_dir() else {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        };
+        let engine = Engine::load(&dir).unwrap();
+        let buckets = engine.buckets();
+        assert_eq!(buckets, vec![16, 64]);
+        assert_eq!(engine.bucket_for(5), Some(16));
+        assert_eq!(engine.bucket_for(16), Some(16));
+        assert_eq!(engine.bucket_for(17), Some(64));
+        assert_eq!(engine.bucket_for(65), None);
+    }
+
+    #[test]
+    fn prefill_rejects_bad_args() {
+        let Some(dir) = artifacts_dir() else {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        };
+        let engine = Engine::load(&dir).unwrap();
+        let kv = engine.empty_kv().unwrap();
+        assert!(engine.prefill(kv, &[1, 2, 3], 0, 0).is_err());
+        let kv = engine.empty_kv().unwrap();
+        assert!(engine.prefill(kv, &[1, 2, 3], 2, 99).is_err());
+    }
+}

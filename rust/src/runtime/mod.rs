@@ -1,0 +1,12 @@
+//! PJRT runtime: load the AOT artifacts produced by `python/compile/aot.py`
+//! (HLO text + weights + manifest) and execute them from Rust.
+//!
+//! Python never runs here — this is the request path. The interchange is
+//! HLO *text* (see aot.py for why), compiled once per artifact on the
+//! PJRT CPU client at startup and cached.
+
+pub mod artifacts;
+pub mod engine;
+
+pub use artifacts::{ArtifactEntry, Manifest, ParamEntry};
+pub use engine::{Engine, KvState};

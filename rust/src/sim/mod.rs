@@ -1,0 +1,179 @@
+//! Discrete-event simulation engine.
+//!
+//! The paper evaluates POLCA with a discrete event simulator (§6.1); this
+//! module is that substrate: a deterministic event queue with stable
+//! ordering (ties broken by insertion sequence), microsecond integer time,
+//! and zero allocation per pop beyond the heap itself.
+//!
+//! The engine is generic over the event payload `E`; the domain loop lives
+//! in [`crate::simulation`].
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+/// Simulation time in integer microseconds (deterministic; no float drift).
+pub type SimTime = u64;
+
+pub const MICROS: u64 = 1;
+pub const MILLIS: u64 = 1_000;
+pub const SECONDS: u64 = 1_000_000;
+
+/// Convert seconds (f64) to SimTime.
+#[inline]
+pub fn secs(s: f64) -> SimTime {
+    debug_assert!(s >= 0.0);
+    (s * SECONDS as f64).round() as SimTime
+}
+
+/// Convert SimTime to seconds (f64).
+#[inline]
+pub fn to_secs(t: SimTime) -> f64 {
+    t as f64 / SECONDS as f64
+}
+
+#[derive(Debug, Clone, PartialEq, Eq, PartialOrd, Ord)]
+struct Entry<E> {
+    time: SimTime,
+    seq: u64,
+    event: E,
+}
+
+/// Deterministic time-ordered event queue.
+#[derive(Debug, Clone)]
+pub struct EventQueue<E> {
+    heap: BinaryHeap<Reverse<Entry<E>>>,
+    seq: u64,
+    now: SimTime,
+    popped: u64,
+}
+
+impl<E: Ord> EventQueue<E> {
+    pub fn new() -> Self {
+        EventQueue { heap: BinaryHeap::new(), seq: 0, now: 0, popped: 0 }
+    }
+
+    pub fn with_capacity(n: usize) -> Self {
+        EventQueue { heap: BinaryHeap::with_capacity(n), seq: 0, now: 0, popped: 0 }
+    }
+
+    /// Current simulation time (the timestamp of the last popped event).
+    #[inline]
+    pub fn now(&self) -> SimTime {
+        self.now
+    }
+
+    /// Total events processed so far (for the §Perf events/s metric).
+    #[inline]
+    pub fn popped(&self) -> u64 {
+        self.popped
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    /// Schedule at an absolute time. Scheduling in the past is clamped to
+    /// `now` (events fire immediately, preserving causal order).
+    pub fn schedule_at(&mut self, time: SimTime, event: E) {
+        let time = time.max(self.now);
+        self.heap.push(Reverse(Entry { time, seq: self.seq, event }));
+        self.seq += 1;
+    }
+
+    /// Schedule `delay` after the current time.
+    pub fn schedule_in(&mut self, delay: SimTime, event: E) {
+        self.schedule_at(self.now.saturating_add(delay), event);
+    }
+
+    /// Time of the next event without popping it.
+    pub fn peek_time(&self) -> Option<SimTime> {
+        self.heap.peek().map(|Reverse(e)| e.time)
+    }
+
+    /// Pop the next event, advancing `now`.
+    pub fn pop(&mut self) -> Option<(SimTime, E)> {
+        let Reverse(entry) = self.heap.pop()?;
+        debug_assert!(entry.time >= self.now, "time went backwards");
+        self.now = entry.time;
+        self.popped += 1;
+        Some((entry.time, entry.event))
+    }
+
+    /// Drop every pending event (used when ending a run at a horizon).
+    pub fn clear(&mut self) {
+        self.heap.clear();
+    }
+}
+
+impl<E: Ord> Default for EventQueue<E> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pops_in_time_order() {
+        let mut q = EventQueue::new();
+        q.schedule_at(30, "c");
+        q.schedule_at(10, "a");
+        q.schedule_at(20, "b");
+        let order: Vec<_> = std::iter::from_fn(|| q.pop()).collect();
+        assert_eq!(order, vec![(10, "a"), (20, "b"), (30, "c")]);
+    }
+
+    #[test]
+    fn ties_break_by_insertion_order() {
+        let mut q = EventQueue::new();
+        for i in 0..100u32 {
+            q.schedule_at(5, i);
+        }
+        let popped: Vec<_> = std::iter::from_fn(|| q.pop()).map(|(_, e)| e).collect();
+        assert_eq!(popped, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn now_advances_and_schedule_in_is_relative() {
+        let mut q = EventQueue::new();
+        q.schedule_at(100, 1u8);
+        assert_eq!(q.pop(), Some((100, 1)));
+        assert_eq!(q.now(), 100);
+        q.schedule_in(50, 2);
+        assert_eq!(q.pop(), Some((150, 2)));
+    }
+
+    #[test]
+    fn past_scheduling_clamps_to_now() {
+        let mut q = EventQueue::new();
+        q.schedule_at(100, 1u8);
+        q.pop();
+        q.schedule_at(10, 2); // in the past
+        assert_eq!(q.pop(), Some((100, 2)));
+    }
+
+    #[test]
+    fn secs_roundtrip() {
+        assert_eq!(secs(2.0), 2 * SECONDS);
+        assert_eq!(secs(0.0001), 100);
+        assert!((to_secs(secs(1234.5678)) - 1234.5678).abs() < 1e-6);
+    }
+
+    #[test]
+    fn popped_counter() {
+        let mut q = EventQueue::new();
+        for i in 0..10u8 {
+            q.schedule_at(i as u64, i);
+        }
+        while q.pop().is_some() {}
+        assert_eq!(q.popped(), 10);
+    }
+}

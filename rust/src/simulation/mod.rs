@@ -1,0 +1,746 @@
+//! The row-level cluster simulator — the paper's §6 evaluation vehicle.
+//!
+//! A discrete-event simulation of one datacenter row: `deployed` DGX
+//! servers behind a PDU breaker provisioned for `baseline` servers,
+//! each dedicated to a Table-4 service on BLOOM-176B (§6.1), with:
+//!
+//!   * non-homogeneous Poisson arrivals (diurnal, §3.2),
+//!   * a one-request buffer per server (§6.3 queueing model),
+//!   * per-request two-phase execution (prompt/token) whose speed follows
+//!     the current frequency cap ([`crate::perfmodel::RequestExec`]),
+//!   * instantaneous row power aggregated from per-server phase power,
+//!   * PDU telemetry with 2 s delay driving the policy engine,
+//!   * OOB cap commands with 40 s latency, powerbrake with 5 s (Table 1),
+//!   * the powerbrake backstop when real power exceeds the breaker.
+//!
+//! Power calibration: the analytic single-request server model
+//! understates the sustained draw of production serving (continuous
+//! batching, co-located services), so a scalar `power_scale` is fitted
+//! once so the *base* row (no oversubscription, no capping) peaks at the
+//! published Table-2 inference utilization (79%) — the same
+//! trace-replication step the paper performs in §6.1.
+
+use crate::characterize::catalog::{self, ModelSpec};
+use crate::cluster::hierarchy::{Priority, Row};
+use crate::cluster::oob::{OobChannel, OobCommand};
+use crate::cluster::telemetry::TelemetryBuffer;
+use crate::config::ExperimentConfig;
+use crate::metrics::RunReport;
+use crate::perfmodel::{ExecPhase, RequestExec};
+use crate::policy::engine::{Action, PolicyEngine, PolicyKind};
+use crate::power::gpu::{CapMode, Phase};
+use crate::sim::{secs, to_secs, EventQueue, SimTime};
+use crate::util::rng::Rng;
+use crate::workload::arrivals::ArrivalProcess;
+use crate::workload::spec::{assign_servers, sample_request, WorkloadSpec};
+
+/// Simulation parameters for one run.
+#[derive(Debug, Clone)]
+pub struct SimConfig {
+    pub exp: ExperimentConfig,
+    pub policy_kind: PolicyKind,
+    /// Servers actually deployed (baseline = exp.row.num_servers;
+    /// more = oversubscribed).
+    pub deployed_servers: usize,
+    pub weeks: f64,
+    pub model_name: String,
+    /// Override the global LP share (Fig 15b sweep).
+    pub lp_fraction_override: Option<f64>,
+    /// Row-power calibration factor (see module docs / [`calibrate`]).
+    pub power_scale: f64,
+    /// Multiplier on per-workload power (Fig 17 "+5%" robustness study).
+    pub workload_power_mult: f64,
+    /// Target server busy fraction at the diurnal peak (drives arrivals).
+    pub peak_utilization: f64,
+    /// Sample the power series every this many seconds (0 = off).
+    pub series_sample_s: f64,
+    /// OOB unreliability (loss probability, jitter fraction).
+    pub oob_loss_prob: f64,
+    pub oob_jitter_frac: f64,
+    /// When false, the power manager is disconnected entirely (no caps,
+    /// no brake): the unthrottled counterfactual used as the latency
+    /// baseline for impact measurement (see [`crate::metrics`]).
+    pub protection: bool,
+}
+
+impl Default for SimConfig {
+    fn default() -> Self {
+        SimConfig {
+            exp: ExperimentConfig::default(),
+            policy_kind: PolicyKind::Polca,
+            deployed_servers: 40,
+            weeks: 1.0,
+            model_name: "BLOOM-176B".to_string(),
+            lp_fraction_override: None,
+            power_scale: DEFAULT_POWER_SCALE,
+            workload_power_mult: 1.0,
+            peak_utilization: 0.85,
+            series_sample_s: 0.0,
+            oob_loss_prob: 0.0,
+            oob_jitter_frac: 0.0,
+            protection: true,
+        }
+    }
+}
+
+impl SimConfig {
+    /// The unthrottled counterfactual of this configuration: identical
+    /// workload realization (same seed), power manager disconnected.
+    pub fn baseline(&self) -> SimConfig {
+        let mut b = self.clone();
+        b.protection = false;
+        b.policy_kind = PolicyKind::NoCap;
+        b.series_sample_s = 0.0;
+        b
+    }
+}
+
+/// Run a policy config and its paired baseline; return (report, impact).
+pub fn run_with_impact(cfg: &SimConfig) -> (RunReport, crate::metrics::ImpactSummary) {
+    let mut report = run(cfg);
+    let mut base = run(&cfg.baseline());
+    let impact = report.impact_vs(&mut base);
+    (report, impact)
+}
+
+/// Fitted once via [`calibrate`] with the default config; pins the base
+/// row's diurnal peak at the Table-2 inference utilization (≈0.79).
+pub const DEFAULT_POWER_SCALE: f64 = 1.74;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+enum Ev {
+    /// A request arrives at a server.
+    Arrival { server: u32 },
+    /// The current phase of the server's in-flight request completes
+    /// (valid only if `gen` matches the server's generation counter).
+    PhaseEnd { server: u32, gen: u32 },
+    /// PDU sample + policy tick.
+    Telemetry,
+    /// An OOB command becomes effective.
+    OobApply,
+    /// Record a point of the downsampled power series.
+    SampleSeries,
+    End,
+}
+
+#[derive(Debug, Clone)]
+struct InFlight {
+    exec: RequestExec,
+    arrived_s: f64,
+    priority: Priority,
+}
+
+#[derive(Debug, Clone)]
+struct QueuedReq {
+    input: f64,
+    output: f64,
+    arrived_s: f64,
+}
+
+struct ServerState {
+    priority: Priority,
+    workload_idx: usize,
+    freq_cap_mhz: Option<f64>,
+    current: Option<InFlight>,
+    queued: Option<QueuedReq>,
+    arrivals: ArrivalProcess,
+    rng: Rng,
+    /// Generation counter invalidating stale PhaseEnd events.
+    gen: u32,
+    /// Time work was last advanced (for mid-flight cap changes).
+    last_advance_s: f64,
+    /// Current power draw in watts (cached for incremental row sum).
+    power_w: f64,
+}
+
+/// Run one simulation; returns the report.
+pub fn run(cfg: &SimConfig) -> RunReport {
+    Sim::new(cfg).run()
+}
+
+struct Sim<'a> {
+    cfg: &'a SimConfig,
+    model: ModelSpec,
+    specs: Vec<WorkloadSpec>,
+    row: Row,
+    servers: Vec<ServerState>,
+    queue: EventQueue<Ev>,
+    policy: PolicyEngine,
+    oob: OobChannel,
+    telemetry: TelemetryBuffer,
+    braked: bool,
+    brake_engaged_at: f64,
+    row_power_w: f64,
+    /// Energy accumulator for window-averaged PDU readings: real PDU
+    /// meters report power averaged over the sampling period, not
+    /// instantaneous draw — sub-second prompt-spike alignments are
+    /// smoothed by the meter (and are harmless physically: the UPS
+    /// tolerates 133% load for 10 s, §4.E). Table 2's spike statistics
+    /// are computed on these averaged readings.
+    energy_acc_ws: f64,
+    last_power_change_s: f64,
+    last_telemetry_s: f64,
+    /// Simulation "now" (set by the event loop before each handler), so
+    /// power changes can settle the energy accumulator.
+    now_s: f64,
+    report: RunReport,
+    horizon: SimTime,
+}
+
+impl<'a> Sim<'a> {
+    fn new(cfg: &'a SimConfig) -> Self {
+        let mut model = catalog::find(&cfg.model_name).expect("model not in catalog");
+        // Fig 17 robustness knob: workloads draw more than profiled.
+        if cfg.workload_power_mult != 1.0 {
+            model.power.prompt_peak_at_256 *= cfg.workload_power_mult;
+            model.power.prompt_peak_at_8192 *= cfg.workload_power_mult;
+            model.power.token_mean_at_b1 *= cfg.workload_power_mult;
+            model.power.token_mean_at_b16 *= cfg.workload_power_mult;
+        }
+        let mut root_rng = Rng::new(cfg.exp.seed ^ 0x9E3779B97F4A7C15);
+        let mut row = Row::provision(
+            cfg.exp.row.num_servers,
+            cfg.deployed_servers,
+            crate::power::server::ServerPowerModel { calib: model.power, ..Default::default() },
+        );
+        let specs = crate::workload::spec::table4();
+        assign_servers(&mut row, &specs, 0, cfg.lp_fraction_override, &mut root_rng);
+
+        // Per-workload peak arrival rate from the target utilization:
+        // rate = utilization / E[nominal service time of that workload].
+        let mut mean_service: Vec<f64> = Vec::new();
+        let mut est_rng = root_rng.fork(77);
+        for spec in &specs {
+            let mut acc = 0.0;
+            let n = 400;
+            for _ in 0..n {
+                let (i, o) = sample_request(spec, &mut est_rng);
+                acc += model.request_latency_s(i, o, 1.0, 1.0);
+            }
+            mean_service.push(acc / n as f64);
+        }
+
+        let servers = row
+            .servers
+            .iter()
+            .map(|s| {
+                let rate = cfg.peak_utilization / mean_service[s.workload_idx];
+                ServerState {
+                    priority: s.priority,
+                    workload_idx: s.workload_idx,
+                    freq_cap_mhz: None,
+                    current: None,
+                    queued: None,
+                    arrivals: ArrivalProcess::new(rate, root_rng.fork(1000 + s.id as u64)),
+                    rng: root_rng.fork(2000 + s.id as u64),
+                    gen: 0,
+                    last_advance_s: 0.0,
+                    power_w: 0.0,
+                }
+            })
+            .collect();
+
+        let policy = PolicyEngine::new(cfg.policy_kind, cfg.exp.policy.clone());
+        let oob = OobChannel::new(
+            cfg.exp.row.oob_latency_s,
+            cfg.exp.row.power_brake_latency_s,
+            cfg.exp.seed ^ 0xBEEF,
+        )
+        .with_unreliability(cfg.oob_loss_prob, cfg.oob_jitter_frac);
+        let horizon = secs(cfg.weeks * 7.0 * 86_400.0);
+        let telemetry = TelemetryBuffer::new(
+            cfg.exp.row.telemetry_delay_s,
+            cfg.weeks * 7.0 * 86_400.0 + 1.0, // retain everything for Table 2 stats
+        );
+
+        Sim {
+            cfg,
+            model,
+            specs,
+            row,
+            servers,
+            queue: EventQueue::with_capacity(1024),
+            policy,
+            oob,
+            telemetry,
+            braked: false,
+            brake_engaged_at: 0.0,
+            row_power_w: 0.0,
+            energy_acc_ws: 0.0,
+            last_power_change_s: 0.0,
+            last_telemetry_s: 0.0,
+            now_s: 0.0,
+            report: RunReport::default(),
+            horizon,
+        }
+    }
+
+    // ---- power bookkeeping ------------------------------------------------
+
+    fn freq_ratio(&self, idx: usize) -> f64 {
+        if self.braked {
+            return self.cfg.exp.policy.brake_freq_mhz / self.cfg.exp.policy.max_freq_mhz;
+        }
+        match self.servers[idx].freq_cap_mhz {
+            Some(mhz) => mhz / self.cfg.exp.policy.max_freq_mhz,
+            None => 1.0,
+        }
+    }
+
+    fn cap_mode(&self, idx: usize) -> CapMode {
+        if self.braked {
+            CapMode::FreqCap { mhz: self.cfg.exp.policy.brake_freq_mhz }
+        } else {
+            match self.servers[idx].freq_cap_mhz {
+                Some(mhz) => CapMode::FreqCap { mhz },
+                None => CapMode::None,
+            }
+        }
+    }
+
+    fn server_phase(&self, idx: usize) -> Phase {
+        match &self.servers[idx].current {
+            None => Phase::Idle,
+            Some(inf) => match inf.exec.phase() {
+                ExecPhase::Prompt => Phase::Prompt { total_input: inf.exec.input * inf.exec.batch },
+                ExecPhase::Token | ExecPhase::Done => Phase::Token { batch: inf.exec.batch },
+            },
+        }
+    }
+
+    /// Settle the energy accumulator up to the current event time (must
+    /// run before any change to `row_power_w`).
+    fn settle_energy(&mut self) {
+        let dt = (self.now_s - self.last_power_change_s).max(0.0);
+        self.energy_acc_ws += self.row_power_w * dt;
+        self.last_power_change_s = self.now_s;
+    }
+
+    /// Recompute one server's power and update the row aggregate.
+    fn refresh_power(&mut self, idx: usize) {
+        self.settle_energy();
+        let phase = self.server_phase(idx);
+        let cap = self.cap_mode(idx);
+        let w = self.row.power_model.server_power_w(phase, cap, false);
+        let s = &mut self.servers[idx];
+        self.row_power_w += w - s.power_w;
+        s.power_w = w;
+    }
+
+    /// Window-averaged normalized power since the last telemetry sample —
+    /// what the PDU meter actually reports.
+    fn averaged_row_power(&mut self) -> f64 {
+        self.settle_energy();
+        let window = (self.now_s - self.last_telemetry_s).max(1e-9);
+        let avg_w = self.energy_acc_ws / window;
+        self.energy_acc_ws = 0.0;
+        self.last_telemetry_s = self.now_s;
+        self.cfg.power_scale * avg_w / self.row.budget_w
+    }
+
+    fn normalized_row_power(&self) -> f64 {
+        self.cfg.power_scale * self.row_power_w / self.row.budget_w
+    }
+
+    // ---- request lifecycle --------------------------------------------
+
+    fn start_request(&mut self, idx: usize, input: f64, output: f64, arrived_s: f64, now_s: f64) {
+        let exec = RequestExec::new(&self.model, input, output, 1.0);
+        self.servers[idx].current = Some(InFlight {
+            exec,
+            arrived_s,
+            priority: self.servers[idx].priority,
+        });
+        self.servers[idx].last_advance_s = now_s;
+        self.servers[idx].gen = self.servers[idx].gen.wrapping_add(1);
+        self.refresh_power(idx);
+        self.schedule_phase_end(idx, now_s);
+    }
+
+    fn schedule_phase_end(&mut self, idx: usize, now_s: f64) {
+        let ratio = self.freq_ratio(idx);
+        let wall = match &self.servers[idx].current {
+            Some(inf) if inf.exec.phase() != ExecPhase::Done => {
+                inf.exec.wall_to_phase_end(&self.model, ratio)
+            }
+            _ => return,
+        };
+        let gen = self.servers[idx].gen;
+        // +1 µs guard: `secs` rounds to integer microseconds, which can
+        // land *before* the true phase end and loop the event at the same
+        // timestamp. Overshooting by a microsecond guarantees progress.
+        self.queue.schedule_at(secs(now_s + wall) + 1, Ev::PhaseEnd { server: idx as u32, gen });
+    }
+
+    /// Advance the in-flight request's work to `now` at the *current*
+    /// ratio (call BEFORE changing the ratio).
+    fn advance_work(&mut self, idx: usize, now_s: f64) {
+        let ratio = self.freq_ratio(idx);
+        let last = self.servers[idx].last_advance_s;
+        if let Some(inf) = &mut self.servers[idx].current {
+            let dt = (now_s - last).max(0.0);
+            if dt > 0.0 {
+                inf.exec.advance(&self.model, ratio, dt);
+            }
+        }
+        self.servers[idx].last_advance_s = now_s;
+    }
+
+    /// Apply a frequency change to one server (work-conserving).
+    fn set_server_cap(&mut self, idx: usize, cap: Option<f64>, now_s: f64) {
+        if self.servers[idx].freq_cap_mhz == cap {
+            return;
+        }
+        self.advance_work(idx, now_s);
+        self.servers[idx].freq_cap_mhz = cap;
+        self.servers[idx].gen = self.servers[idx].gen.wrapping_add(1);
+        self.refresh_power(idx);
+        self.schedule_phase_end(idx, now_s);
+    }
+
+    fn set_brake(&mut self, on: bool, now_s: f64) {
+        if self.braked == on {
+            return;
+        }
+        // Advance all running work at the old ratios first.
+        for idx in 0..self.servers.len() {
+            self.advance_work(idx, now_s);
+        }
+        self.braked = on;
+        if on {
+            self.brake_engaged_at = now_s;
+        } else {
+            self.report.brake_time_s += now_s - self.brake_engaged_at;
+        }
+        for idx in 0..self.servers.len() {
+            self.servers[idx].gen = self.servers[idx].gen.wrapping_add(1);
+            self.refresh_power(idx);
+            self.schedule_phase_end(idx, now_s);
+        }
+    }
+
+    // ---- event handlers -------------------------------------------------
+
+    fn on_arrival(&mut self, idx: usize, now_s: f64) {
+        // Schedule the next arrival for this server.
+        let next = self.servers[idx].arrivals.next_after(now_s);
+        self.queue.schedule_at(secs(next), Ev::Arrival { server: idx as u32 });
+
+        let spec = &self.specs[self.servers[idx].workload_idx];
+        let (input, output) = sample_request(spec, &mut self.servers[idx].rng);
+        if self.servers[idx].current.is_none() {
+            self.start_request(idx, input, output, now_s, now_s);
+        } else if self.servers[idx].queued.is_none() {
+            self.servers[idx].queued = Some(QueuedReq { input, output, arrived_s: now_s });
+        } else {
+            // Buffer full: request is rejected (load-balancer would retry
+            // elsewhere; within this row it counts against throughput).
+            let pri = self.servers[idx].priority;
+            self.report.by_priority(pri).dropped += 1;
+        }
+    }
+
+    fn on_phase_end(&mut self, idx: usize, gen: u32, now_s: f64) {
+        if self.servers[idx].gen != gen {
+            return; // stale (frequency changed; a new event is scheduled)
+        }
+        self.advance_work(idx, now_s);
+        let phase = self.servers[idx].current.as_ref().map(|i| i.exec.phase());
+        match phase {
+            Some(ExecPhase::Token) => {
+                // Prompt just finished; token phase begins.
+                self.servers[idx].gen = self.servers[idx].gen.wrapping_add(1);
+                self.refresh_power(idx);
+                self.schedule_phase_end(idx, now_s);
+            }
+            Some(ExecPhase::Done) => {
+                let inf = self.servers[idx].current.take().unwrap();
+                let actual = now_s - inf.arrived_s;
+                self.report.by_priority(inf.priority).record(
+                    actual,
+                    inf.exec.nominal_latency,
+                    inf.exec.output,
+                );
+                self.servers[idx].gen = self.servers[idx].gen.wrapping_add(1);
+                // Pull the buffered request, if any.
+                if let Some(q) = self.servers[idx].queued.take() {
+                    self.start_request(idx, q.input, q.output, q.arrived_s, now_s);
+                } else {
+                    self.refresh_power(idx);
+                }
+            }
+            Some(ExecPhase::Prompt) | None => {
+                // Numerical residue: reschedule to finish the phase.
+                self.refresh_power(idx);
+                self.schedule_phase_end(idx, now_s);
+            }
+        }
+    }
+
+    fn on_telemetry(&mut self, now_s: f64) {
+        self.queue.schedule_in(secs(self.cfg.exp.row.telemetry_period_s), Ev::Telemetry);
+        let p = self.averaged_row_power();
+        if now_s == 0.0 {
+            return; // no averaging window yet — first real sample comes next tick
+        }
+        self.telemetry.record(now_s, p);
+        if !self.cfg.protection {
+            return;
+        }
+        let Some((_, visible)) = self.telemetry.visible_at(now_s) else {
+            return;
+        };
+        let actions = self.policy.tick(now_s, visible);
+        for act in actions {
+            let cmd = match act {
+                Action::CapLp { mhz } => OobCommand::FreqCap { target: Priority::Low, mhz },
+                Action::CapHp { mhz } => OobCommand::FreqCap { target: Priority::High, mhz },
+                Action::UncapLp => OobCommand::Uncap { target: Priority::Low },
+                Action::UncapHp => OobCommand::Uncap { target: Priority::High },
+                Action::Brake => OobCommand::PowerBrake,
+                Action::ReleaseBrake => OobCommand::ReleaseBrake,
+            };
+            if let Some(apply_at) = self.oob.issue(now_s, cmd) {
+                self.queue.schedule_at(secs(apply_at), Ev::OobApply);
+            }
+        }
+    }
+
+    fn on_oob_apply(&mut self, now_s: f64) {
+        for pending in self.oob.due(now_s) {
+            match pending.cmd {
+                OobCommand::FreqCap { target, mhz } => {
+                    for idx in 0..self.servers.len() {
+                        if self.servers[idx].priority == target {
+                            self.set_server_cap(idx, Some(mhz), now_s);
+                        }
+                    }
+                }
+                OobCommand::Uncap { target } => {
+                    for idx in 0..self.servers.len() {
+                        if self.servers[idx].priority == target {
+                            self.set_server_cap(idx, None, now_s);
+                        }
+                    }
+                }
+                OobCommand::PowerBrake => self.set_brake(true, now_s),
+                OobCommand::ReleaseBrake => self.set_brake(false, now_s),
+            }
+        }
+    }
+
+    // ---- main loop -------------------------------------------------------
+
+    fn run(mut self) -> RunReport {
+        // Initial power state.
+        for idx in 0..self.servers.len() {
+            self.refresh_power(idx);
+        }
+        // Seed events.
+        for idx in 0..self.servers.len() {
+            let t = self.servers[idx].arrivals.next_after(0.0);
+            self.queue.schedule_at(secs(t), Ev::Arrival { server: idx as u32 });
+        }
+        self.queue.schedule_at(0, Ev::Telemetry);
+        if self.cfg.series_sample_s > 0.0 {
+            self.queue.schedule_at(0, Ev::SampleSeries);
+        }
+        self.queue.schedule_at(self.horizon, Ev::End);
+
+        while let Some((t, ev)) = self.queue.pop() {
+            let now_s = to_secs(t);
+            self.now_s = now_s;
+            match ev {
+                Ev::Arrival { server } => self.on_arrival(server as usize, now_s),
+                Ev::PhaseEnd { server, gen } => self.on_phase_end(server as usize, gen, now_s),
+                Ev::Telemetry => self.on_telemetry(now_s),
+                Ev::OobApply => self.on_oob_apply(now_s),
+                Ev::SampleSeries => {
+                    self.report.power_series.push((now_s, self.normalized_row_power()));
+                    self.queue.schedule_in(secs(self.cfg.series_sample_s), Ev::SampleSeries);
+                }
+                Ev::End => break,
+            }
+            if t >= self.horizon {
+                break;
+            }
+        }
+
+        // Finalize.
+        if self.braked {
+            self.report.brake_time_s += to_secs(self.horizon) - self.brake_engaged_at;
+        }
+        self.report.brake_events = self.policy.brake_events;
+        self.report.duration_s = to_secs(self.horizon);
+        self.report.events = self.queue.popped();
+        let (peak, p99, mean) = self.telemetry.utilization();
+        self.report.power_peak = peak;
+        self.report.power_p99 = p99;
+        self.report.power_mean = mean;
+        let spikes = self.telemetry.spike_stats(&[2.0, 5.0, 40.0]);
+        self.report.spike_2s = spikes[0].max_rise;
+        self.report.spike_5s = spikes[1].max_rise;
+        self.report.spike_40s = spikes[2].max_rise;
+        self.report
+    }
+}
+
+/// Fit `power_scale` so the base row (baseline servers, no capping)
+/// peaks at `target_peak` (Table 2 inference: 0.79). Returns the scale.
+pub fn calibrate(target_peak: f64, weeks: f64, seed: u64) -> f64 {
+    let mut cfg = SimConfig {
+        policy_kind: PolicyKind::NoCap,
+        weeks,
+        power_scale: 1.0,
+        ..Default::default()
+    };
+    cfg.exp.seed = seed;
+    let report = run(&cfg);
+    target_peak / report.power_peak
+}
+
+/// The telemetry-visible power series of a run (for trace MAPE checks).
+pub fn power_series_of(cfg: &SimConfig) -> Vec<(f64, f64)> {
+    let mut c = cfg.clone();
+    c.series_sample_s = if c.series_sample_s > 0.0 { c.series_sample_s } else { 60.0 };
+    run(&c).power_series
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quick_cfg() -> SimConfig {
+        let mut cfg = SimConfig::default();
+        cfg.weeks = 0.05; // ~8.4 hours
+        cfg.deployed_servers = 12;
+        cfg.exp.row.num_servers = 12;
+        cfg.exp.seed = 42;
+        // Small rows multiplex fewer prompt spikes, so their relative
+        // variance is higher; calibrate the 12-server test row separately
+        // (production rows are 40+, using DEFAULT_POWER_SCALE).
+        cfg.power_scale = 1.35;
+        cfg
+    }
+
+    #[test]
+    fn base_run_completes_requests_without_brakes() {
+        let mut cfg = quick_cfg();
+        cfg.weeks = 0.1;
+        let report = run(&cfg);
+        assert!(report.hp.completed > 50, "hp completed = {}", report.hp.completed);
+        assert!(report.lp.completed > 50);
+        assert_eq!(report.brake_events, 0);
+        assert!(report.power_peak > 0.3 && report.power_peak < 1.0, "peak={}", report.power_peak);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let cfg = quick_cfg();
+        let mut a = run(&cfg);
+        let mut b = run(&cfg);
+        assert_eq!(a.hp.completed, b.hp.completed);
+        assert_eq!(a.lp.completed, b.lp.completed);
+        assert_eq!(a.brake_events, b.brake_events);
+        assert!((a.power_peak - b.power_peak).abs() < 1e-12);
+        assert!((a.hp.latency.p99() - b.hp.latency.p99()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn oversubscription_raises_power() {
+        let base = run(&quick_cfg());
+        let mut over_cfg = quick_cfg();
+        over_cfg.deployed_servers = 16; // +33%
+        let over = run(&over_cfg);
+        assert!(over.power_mean > base.power_mean * 1.15,
+            "base={} over={}", base.power_mean, over.power_mean);
+    }
+
+    #[test]
+    fn heavy_oversubscription_nocap_brakes_polca_does_not() {
+        let mut nocap = quick_cfg();
+        nocap.policy_kind = PolicyKind::NoCap;
+        nocap.deployed_servers = 22; // +83%: pushes past the breaker
+        nocap.weeks = 0.08;
+        let r_nocap = run(&nocap);
+        assert!(r_nocap.brake_events > 0, "no-cap at +83% must brake");
+
+        let mut polca = nocap.clone();
+        polca.policy_kind = PolicyKind::Polca;
+        let r_polca = run(&polca);
+        assert!(
+            r_polca.brake_events <= r_nocap.brake_events,
+            "POLCA ({}) must brake no more than No-cap ({})",
+            r_polca.brake_events,
+            r_nocap.brake_events
+        );
+        // POLCA's caps must push P99 power below No-cap's.
+        assert!(r_polca.power_p99 <= r_nocap.power_p99 + 0.02);
+    }
+
+    #[test]
+    fn polca_caps_impact_lp_more_than_hp() {
+        let mut cfg = quick_cfg();
+        cfg.deployed_servers = 18; // +50%: capping definitely active
+        cfg.weeks = 0.08;
+        let (_, impact) = run_with_impact(&cfg);
+        assert!(
+            impact.lp_p99 >= impact.hp_p99 - 0.02,
+            "LP p99 {} should be >= HP p99 {}",
+            impact.lp_p99,
+            impact.hp_p99
+        );
+    }
+
+    #[test]
+    fn baseline_has_zero_impact_on_itself() {
+        let cfg = quick_cfg().baseline();
+        let (_, impact) = run_with_impact(&cfg);
+        assert!(impact.hp_p50 < 1e-9 && impact.lp_p99 < 1e-9);
+        assert_eq!(impact.brake_events, 0);
+    }
+
+    #[test]
+    fn no_oversubscription_meets_slo() {
+        let mut cfg = quick_cfg();
+        cfg.weeks = 0.08;
+        let (_, impact) = run_with_impact(&cfg);
+        assert!(
+            impact.meets_slo(&cfg.exp.slo),
+            "{:?}",
+            impact.slo_violations(&cfg.exp.slo)
+        );
+    }
+
+    #[test]
+    fn work_conservation_under_caps() {
+        // Every arrival is eventually completed or dropped or in flight:
+        // completed + dropped <= arrivals, and nothing is double counted.
+        let mut cfg = quick_cfg();
+        cfg.deployed_servers = 16;
+        let report = run(&cfg);
+        let total = report.hp.completed + report.lp.completed
+            + report.hp.dropped + report.lp.dropped;
+        assert!(total > 100);
+        // All recorded latencies are >= nominal (impact >= 0) by metric
+        // construction; peak power must never be absurd.
+        assert!(report.power_peak < 2.0);
+    }
+
+    #[test]
+    fn calibration_hits_target_peak() {
+        let mut cfg = SimConfig::default();
+        cfg.weeks = 0.15;
+        cfg.deployed_servers = 40;
+        cfg.policy_kind = PolicyKind::NoCap;
+        cfg.exp.seed = 7;
+        let report = run(&cfg);
+        // With the shipped DEFAULT_POWER_SCALE the base row should peak
+        // near the Table-2 inference utilization.
+        assert!(
+            (0.70..=0.88).contains(&report.power_peak),
+            "peak={} (rescale DEFAULT_POWER_SCALE?)",
+            report.power_peak
+        );
+    }
+}

@@ -1,0 +1,78 @@
+//! Property-based testing helper (proptest is unavailable offline).
+//!
+//! A thin, seeded harness: generate N random cases from a generator
+//! closure, run the property, and on failure report the case index, the
+//! seed, and a Debug rendering of the failing input so the case can be
+//! replayed deterministically. Used by the coordinator/policy invariant
+//! tests (DESIGN.md §6).
+
+use crate::util::rng::Rng;
+
+/// Number of cases per property (kept moderate: single-core CI budget).
+pub const DEFAULT_CASES: u32 = 256;
+
+/// Run `prop` over `cases` random inputs drawn by `gen`.
+///
+/// Panics with a replayable report on the first failure. The property
+/// returns `Result<(), String>` so failures carry a domain message.
+pub fn check<T, G, P>(name: &str, seed: u64, cases: u32, mut gen: G, mut prop: P)
+where
+    T: std::fmt::Debug,
+    G: FnMut(&mut Rng) -> T,
+    P: FnMut(&T) -> Result<(), String>,
+{
+    let mut rng = Rng::new(seed);
+    for case in 0..cases {
+        let mut case_rng = rng.fork(case as u64);
+        let input = gen(&mut case_rng);
+        if let Err(msg) = prop(&input) {
+            panic!(
+                "property '{name}' failed\n  case:  {case}/{cases}\n  seed:  {seed}\n  \
+                 error: {msg}\n  input: {input:#?}\n  replay: check(\"{name}\", {seed}, ..)"
+            );
+        }
+    }
+}
+
+/// Convenience: property with the default case count.
+pub fn check_default<T, G, P>(name: &str, gen: G, prop: P)
+where
+    T: std::fmt::Debug,
+    G: FnMut(&mut Rng) -> T,
+    P: FnMut(&T) -> Result<(), String>,
+{
+    check(name, 0xC0FFEE, DEFAULT_CASES, gen, prop)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check("add-commutes", 1, 64, |r| (r.below(100), r.below(100)), |&(a, b)| {
+            if a + b == b + a { Ok(()) } else { Err("math broke".into()) }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-fails' failed")]
+    fn failing_property_reports() {
+        check("always-fails", 2, 8, |r| r.below(10), |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn cases_are_deterministic_per_seed() {
+        let mut seen_a = Vec::new();
+        check("collect-a", 7, 16, |r| r.next_u64(), |&x| {
+            seen_a.push(x);
+            Ok(())
+        });
+        let mut seen_b = Vec::new();
+        check("collect-b", 7, 16, |r| r.next_u64(), |&x| {
+            seen_b.push(x);
+            Ok(())
+        });
+        assert_eq!(seen_a, seen_b);
+    }
+}

@@ -1,0 +1,85 @@
+//! Tiny CSV writer for figure/bench data emission.
+
+use std::fmt::Display;
+use std::fs;
+use std::io::Write as _;
+use std::path::Path;
+
+/// In-memory CSV builder with a fixed header.
+#[derive(Debug, Clone)]
+pub struct Csv {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Csv {
+    pub fn new(header: &[&str]) -> Self {
+        Csv { header: header.iter().map(|s| s.to_string()).collect(), rows: Vec::new() }
+    }
+
+    pub fn row<D: Display>(&mut self, cells: &[D]) {
+        assert_eq!(cells.len(), self.header.len(), "row width != header width");
+        self.rows.push(cells.iter().map(|c| escape(&c.to_string())).collect());
+    }
+
+    /// Push a row of heterogeneous, already-formatted cells.
+    pub fn row_strs(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.header.len(), "row width != header width");
+        self.rows.push(cells.iter().map(|c| escape(c)).collect());
+    }
+
+    pub fn len(&self) -> usize {
+        self.rows.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+
+    pub fn to_string(&self) -> String {
+        let mut s = self.header.join(",");
+        s.push('\n');
+        for row in &self.rows {
+            s.push_str(&row.join(","));
+            s.push('\n');
+        }
+        s
+    }
+
+    pub fn write_to(&self, path: &Path) -> std::io::Result<()> {
+        if let Some(parent) = path.parent() {
+            fs::create_dir_all(parent)?;
+        }
+        let mut f = fs::File::create(path)?;
+        f.write_all(self.to_string().as_bytes())
+    }
+}
+
+fn escape(s: &str) -> String {
+    if s.contains(',') || s.contains('"') || s.contains('\n') {
+        format!("\"{}\"", s.replace('"', "\"\""))
+    } else {
+        s.to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn basic_csv() {
+        let mut c = Csv::new(&["a", "b"]);
+        c.row(&[1.0, 2.5]);
+        c.row_strs(&["x,y".into(), "q\"z".into()]);
+        let s = c.to_string();
+        assert_eq!(s, "a,b\n1,2.5\n\"x,y\",\"q\"\"z\"\n");
+        assert_eq!(c.len(), 2);
+    }
+
+    #[test]
+    #[should_panic]
+    fn width_mismatch_panics() {
+        let mut c = Csv::new(&["a"]);
+        c.row(&[1, 2]);
+    }
+}

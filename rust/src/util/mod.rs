@@ -1,0 +1,14 @@
+//! General-purpose substrates written in-tree.
+//!
+//! The build environment is fully offline and the vendored registry only
+//! carries the `xla` crate's dependency closure, so the usual ecosystem
+//! crates (`rand`, `serde`, `clap`, `criterion`, `proptest`) are not
+//! available. Everything the system needs from them is implemented here,
+//! scoped to exactly what the reproduction requires.
+
+pub mod cli;
+pub mod csv;
+pub mod json;
+pub mod rng;
+pub mod stats;
+pub mod table;

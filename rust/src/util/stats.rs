@@ -1,0 +1,310 @@
+//! Statistics primitives used throughout the evaluation: streaming moments,
+//! exact percentiles, histograms, sliding-window spike statistics (the
+//! paper's "max power spike in 2s/5s/40s", Table 2) and MAPE (the paper's
+//! trace-replication fidelity metric, §6.1).
+
+/// Streaming mean/variance/min/max (Welford).
+#[derive(Debug, Clone, Default)]
+pub struct Running {
+    n: u64,
+    mean: f64,
+    m2: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Running {
+    pub fn new() -> Self {
+        Running { n: 0, mean: 0.0, m2: 0.0, min: f64::INFINITY, max: f64::NEG_INFINITY }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+    pub fn mean(&self) -> f64 {
+        if self.n == 0 { f64::NAN } else { self.mean }
+    }
+    pub fn var(&self) -> f64 {
+        if self.n < 2 { 0.0 } else { self.m2 / (self.n - 1) as f64 }
+    }
+    pub fn std(&self) -> f64 {
+        self.var().sqrt()
+    }
+    pub fn min(&self) -> f64 {
+        self.min
+    }
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+}
+
+/// Exact percentile over a sample set (collects values; fine for the
+/// per-request metrics this crate produces — a few 1e6 points max).
+#[derive(Debug, Clone, Default)]
+pub struct Percentiles {
+    xs: Vec<f64>,
+    sorted: bool,
+}
+
+impl Percentiles {
+    pub fn new() -> Self {
+        Percentiles { xs: Vec::new(), sorted: true }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.xs.push(x);
+        self.sorted = false;
+    }
+
+    pub fn len(&self) -> usize {
+        self.xs.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.xs.is_empty()
+    }
+
+    fn ensure_sorted(&mut self) {
+        if !self.sorted {
+            self.xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            self.sorted = true;
+        }
+    }
+
+    /// p in [0, 100]; linear interpolation between order statistics.
+    pub fn percentile(&mut self, p: f64) -> f64 {
+        if self.xs.is_empty() {
+            return f64::NAN;
+        }
+        self.ensure_sorted();
+        let n = self.xs.len();
+        if n == 1 {
+            return self.xs[0];
+        }
+        let rank = (p / 100.0) * (n - 1) as f64;
+        let lo = rank.floor() as usize;
+        let hi = rank.ceil() as usize;
+        let frac = rank - lo as f64;
+        self.xs[lo] * (1.0 - frac) + self.xs[hi.min(n - 1)] * frac
+    }
+
+    pub fn p50(&mut self) -> f64 {
+        self.percentile(50.0)
+    }
+    pub fn p90(&mut self) -> f64 {
+        self.percentile(90.0)
+    }
+    pub fn p99(&mut self) -> f64 {
+        self.percentile(99.0)
+    }
+    pub fn max(&mut self) -> f64 {
+        self.percentile(100.0)
+    }
+    pub fn mean(&self) -> f64 {
+        if self.xs.is_empty() {
+            f64::NAN
+        } else {
+            self.xs.iter().sum::<f64>() / self.xs.len() as f64
+        }
+    }
+}
+
+/// Fixed-bin histogram over [lo, hi); out-of-range values clamp to the
+/// edge bins. Used for power-distribution figures.
+#[derive(Debug, Clone)]
+pub struct Histogram {
+    lo: f64,
+    hi: f64,
+    bins: Vec<u64>,
+}
+
+impl Histogram {
+    pub fn new(lo: f64, hi: f64, nbins: usize) -> Self {
+        assert!(hi > lo && nbins > 0);
+        Histogram { lo, hi, bins: vec![0; nbins] }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        let n = self.bins.len();
+        let t = ((x - self.lo) / (self.hi - self.lo) * n as f64).floor();
+        let idx = (t.max(0.0) as usize).min(n - 1);
+        self.bins[idx] += 1;
+    }
+
+    pub fn bins(&self) -> &[u64] {
+        &self.bins
+    }
+
+    pub fn bin_center(&self, i: usize) -> f64 {
+        self.lo + (i as f64 + 0.5) / self.bins.len() as f64 * (self.hi - self.lo)
+    }
+
+    pub fn total(&self) -> u64 {
+        self.bins.iter().sum()
+    }
+}
+
+/// Mean Absolute Percentage Error between two equally-sampled series —
+/// the paper reports MAPE < 3% between the synthetic and original power
+/// timeseries (§6.1).
+pub fn mape(actual: &[f64], predicted: &[f64]) -> f64 {
+    assert_eq!(actual.len(), predicted.len());
+    let mut sum = 0.0;
+    let mut n = 0u64;
+    for (&a, &p) in actual.iter().zip(predicted) {
+        if a.abs() > 1e-12 {
+            sum += ((a - p) / a).abs();
+            n += 1;
+        }
+    }
+    if n == 0 { f64::NAN } else { 100.0 * sum / n as f64 }
+}
+
+/// Max *rise* of a series within any window of `window` samples:
+/// max over i of (max(x[i..i+window]) - x[i]), expressed in the series'
+/// units. This is Table 2's "max power spike in Ns" statistic.
+pub fn max_rise_within(xs: &[f64], window: usize) -> f64 {
+    if xs.len() < 2 || window == 0 {
+        return 0.0;
+    }
+    // O(n * window); windows here are small (40s at 2s sampling = 20).
+    let mut best = 0.0f64;
+    for i in 0..xs.len() - 1 {
+        let end = (i + window).min(xs.len() - 1);
+        let mut mx = f64::NEG_INFINITY;
+        for &x in &xs[i + 1..=end] {
+            mx = mx.max(x);
+        }
+        best = best.max(mx - xs[i]);
+    }
+    best
+}
+
+/// Time-weighted average of a step function given (time, value) change
+/// points, over [t0, t1]. Values hold until the next change point.
+pub fn time_weighted_mean(points: &[(f64, f64)], t0: f64, t1: f64) -> f64 {
+    assert!(t1 > t0);
+    if points.is_empty() {
+        return f64::NAN;
+    }
+    let mut acc = 0.0;
+    let mut cur_val = points[0].1;
+    let mut cur_t = t0;
+    for &(t, v) in points {
+        if t <= t0 {
+            cur_val = v;
+            continue;
+        }
+        if t >= t1 {
+            break;
+        }
+        acc += cur_val * (t - cur_t);
+        cur_t = t;
+        cur_val = v;
+    }
+    acc += cur_val * (t1 - cur_t);
+    acc / (t1 - t0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn running_moments() {
+        let mut r = Running::new();
+        for x in [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0] {
+            r.push(x);
+        }
+        assert_eq!(r.count(), 8);
+        assert!((r.mean() - 5.0).abs() < 1e-12);
+        assert!((r.std() - 2.138089935299395).abs() < 1e-9);
+        assert_eq!(r.min(), 2.0);
+        assert_eq!(r.max(), 9.0);
+    }
+
+    #[test]
+    fn percentiles_basic() {
+        let mut p = Percentiles::new();
+        for i in 1..=100 {
+            p.push(i as f64);
+        }
+        assert!((p.p50() - 50.5).abs() < 1e-9);
+        assert!((p.percentile(0.0) - 1.0).abs() < 1e-12);
+        assert!((p.max() - 100.0).abs() < 1e-12);
+        assert!((p.p99() - 99.01).abs() < 0.02);
+    }
+
+    #[test]
+    fn percentiles_single_and_empty() {
+        let mut p = Percentiles::new();
+        assert!(p.p50().is_nan());
+        p.push(3.0);
+        assert_eq!(p.p50(), 3.0);
+        assert_eq!(p.p99(), 3.0);
+    }
+
+    #[test]
+    fn histogram_clamps() {
+        let mut h = Histogram::new(0.0, 10.0, 10);
+        h.push(-5.0);
+        h.push(0.5);
+        h.push(9.9);
+        h.push(50.0);
+        assert_eq!(h.bins()[0], 2);
+        assert_eq!(h.bins()[9], 2);
+        assert_eq!(h.total(), 4);
+        assert!((h.bin_center(0) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn mape_exact_and_offset() {
+        let a = vec![1.0, 2.0, 4.0];
+        assert_eq!(mape(&a, &a), 0.0);
+        let b = vec![1.1, 2.2, 4.4];
+        assert!((mape(&a, &b) - 10.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn max_rise_finds_spike() {
+        // flat, then a spike of +0.5 three samples later
+        let xs = vec![0.5, 0.5, 0.5, 0.5, 1.0, 0.5, 0.5];
+        assert!((max_rise_within(&xs, 4) - 0.5).abs() < 1e-12);
+        // window of 1: only adjacent rises
+        let xs2 = vec![0.0, 0.2, 0.5, 0.6];
+        assert!((max_rise_within(&xs2, 1) - 0.3).abs() < 1e-12);
+    }
+
+    #[test]
+    fn max_rise_monotone_in_window() {
+        let mut rng = crate::util::rng::Rng::new(5);
+        let xs: Vec<f64> = (0..500).map(|_| rng.f64()).collect();
+        let r1 = max_rise_within(&xs, 2);
+        let r2 = max_rise_within(&xs, 10);
+        let r3 = max_rise_within(&xs, 100);
+        assert!(r1 <= r2 + 1e-12 && r2 <= r3 + 1e-12, "{r1} {r2} {r3}");
+    }
+
+    #[test]
+    fn max_rise_ignores_falls() {
+        let xs = vec![1.0, 0.8, 0.6, 0.4];
+        assert_eq!(max_rise_within(&xs, 3), 0.0);
+    }
+
+    #[test]
+    fn time_weighted_mean_step() {
+        // value 1.0 on [0,5), 3.0 on [5,10) -> mean 2.0
+        let pts = vec![(0.0, 1.0), (5.0, 3.0)];
+        assert!((time_weighted_mean(&pts, 0.0, 10.0) - 2.0).abs() < 1e-12);
+        // window entirely after last change point
+        assert!((time_weighted_mean(&pts, 6.0, 8.0) - 3.0).abs() < 1e-12);
+    }
+}

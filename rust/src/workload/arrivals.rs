@@ -1,0 +1,109 @@
+//! Arrival processes for interactive inference: non-homogeneous Poisson
+//! with a diurnal rate profile (Table 2: "inference power consumption
+//! shows a diurnal pattern since it is an interactive workload").
+
+use crate::util::rng::Rng;
+
+/// Diurnal rate multiplier at time `t_s` (seconds since trace start).
+///
+/// Shape: interactive traffic — overnight trough (~0.45×), morning ramp,
+/// afternoon peak (~1.0×), evening shoulder; weekends ~12% lighter.
+/// Mean over a week ≈ 0.75. Deterministic (noise is added by the Poisson
+/// sampling itself and by the per-request randomness).
+pub fn diurnal_multiplier(t_s: f64) -> f64 {
+    let day_s = 86_400.0;
+    let hour = (t_s / 3600.0).rem_euclid(24.0);
+    let day = (t_s / day_s).floor() as i64 % 7;
+    // Two-harmonic daily curve peaking ~15:00, trough ~04:00.
+    let x = (hour - 15.0) / 24.0 * std::f64::consts::TAU;
+    let base = 0.725 + 0.24 * x.cos() + 0.035 * (2.0 * x).cos();
+    let weekend = if day >= 5 { 0.88 } else { 1.0 };
+    (base * weekend).max(0.05)
+}
+
+/// Per-server non-homogeneous Poisson arrival stream, sampled by
+/// thinning against the diurnal envelope.
+#[derive(Debug, Clone)]
+pub struct ArrivalProcess {
+    /// Peak arrival rate (requests/s) — the rate at diurnal multiplier 1.
+    pub peak_rate: f64,
+    rng: Rng,
+}
+
+impl ArrivalProcess {
+    pub fn new(peak_rate: f64, rng: Rng) -> Self {
+        ArrivalProcess { peak_rate, rng }
+    }
+
+    /// Next arrival time strictly after `t_s` (thinning algorithm).
+    pub fn next_after(&mut self, t_s: f64) -> f64 {
+        let lambda_max = self.peak_rate.max(1e-12);
+        let mut t = t_s;
+        loop {
+            t += self.rng.exp(lambda_max);
+            let accept = diurnal_multiplier(t);
+            if self.rng.f64() < accept {
+                return t;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn diurnal_peak_and_trough() {
+        // Peak mid-afternoon on a weekday, trough overnight.
+        let peak = diurnal_multiplier(15.0 * 3600.0);
+        let trough = diurnal_multiplier(4.0 * 3600.0);
+        assert!(peak > 0.95, "peak={peak}");
+        assert!(trough < 0.55, "trough={trough}");
+        assert!(peak / trough > 1.8);
+    }
+
+    #[test]
+    fn weekend_lighter() {
+        let weekday = diurnal_multiplier(15.0 * 3600.0); // day 0
+        let weekend = diurnal_multiplier((5.0 * 24.0 + 15.0) * 3600.0); // day 5
+        assert!(weekend < weekday);
+    }
+
+    #[test]
+    fn weekly_mean_near_three_quarters() {
+        let n = 7 * 24 * 12;
+        let mean: f64 =
+            (0..n).map(|i| diurnal_multiplier(i as f64 * 300.0)).sum::<f64>() / n as f64;
+        assert!((0.65..0.80).contains(&mean), "mean={mean}");
+    }
+
+    #[test]
+    fn arrivals_track_rate() {
+        // Count arrivals in a flat-ish window and compare to expectation.
+        let mut ap = ArrivalProcess::new(0.1, Rng::new(5));
+        let start = 14.0 * 3600.0; // near peak, multiplier ~0.95-1.0
+        let mut t = start;
+        let mut count = 0;
+        while t < start + 20_000.0 {
+            t = ap.next_after(t);
+            count += 1;
+        }
+        let expected = 0.1 * diurnal_multiplier(start + 10_000.0) * 20_000.0;
+        assert!(
+            (count as f64 - expected).abs() < expected * 0.15,
+            "count={count} expected={expected}"
+        );
+    }
+
+    #[test]
+    fn arrivals_strictly_increasing() {
+        let mut ap = ArrivalProcess::new(0.5, Rng::new(6));
+        let mut t = 0.0;
+        for _ in 0..1000 {
+            let nt = ap.next_after(t);
+            assert!(nt > t);
+            t = nt;
+        }
+    }
+}

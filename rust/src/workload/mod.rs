@@ -1,0 +1,11 @@
+//! Workloads: the Table-4 service mix (Summarize / Search / Chat on
+//! BLOOM-176B), diurnal interactive arrival processes, and the synthetic
+//! production-trace replication of §6.1.
+
+pub mod arrivals;
+pub mod spec;
+pub mod tracegen;
+
+pub use arrivals::{diurnal_multiplier, ArrivalProcess};
+pub use spec::{assign_servers, sample_request, table4, WorkloadSpec};
+pub use tracegen::{target_power_profile, TraceTarget};

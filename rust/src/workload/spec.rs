@@ -1,0 +1,180 @@
+//! Table 4: the workload distribution POLCA is evaluated on. All services
+//! run BLOOM-176B (the paper's worst case for capping sensitivity, §6.1)
+//! on dedicated DGX-A100 servers.
+
+use crate::cluster::hierarchy::{Priority, Row};
+use crate::util::rng::Rng;
+
+/// One service class (a Table 4 row).
+#[derive(Debug, Clone)]
+pub struct WorkloadSpec {
+    pub name: &'static str,
+    /// Prompt size range in tokens (inclusive, log-uniform sampling).
+    pub prompt_range: (u32, u32),
+    /// Output size range in tokens.
+    pub output_range: (u32, u32),
+    /// Share of the row's servers running this service.
+    pub ratio: f64,
+    /// Fraction of this service's servers that are high priority.
+    pub hp_fraction: f64,
+}
+
+/// The paper's Table 4.
+pub fn table4() -> Vec<WorkloadSpec> {
+    vec![
+        WorkloadSpec {
+            name: "Summarize",
+            prompt_range: (2048, 8192),
+            output_range: (256, 512),
+            ratio: 0.25,
+            hp_fraction: 0.0, // Low priority
+        },
+        WorkloadSpec {
+            name: "Search",
+            prompt_range: (512, 2048),
+            output_range: (1024, 2048),
+            ratio: 0.25,
+            hp_fraction: 1.0, // High priority
+        },
+        WorkloadSpec {
+            name: "Chat",
+            prompt_range: (2048, 4096),
+            output_range: (128, 2048),
+            ratio: 0.50,
+            hp_fraction: 0.5, // 50:50
+        },
+    ]
+}
+
+/// Sample (input_tokens, output_tokens) for a service. Log-uniform:
+/// interactive token-length distributions are heavy on the short side.
+pub fn sample_request(spec: &WorkloadSpec, rng: &mut Rng) -> (f64, f64) {
+    let logu = |lo: u32, hi: u32, rng: &mut Rng| {
+        let (l, h) = ((lo as f64).ln(), (hi as f64).ln());
+        rng.range_f64(l, h).exp().round().clamp(lo as f64, hi as f64)
+    };
+    (
+        logu(spec.prompt_range.0, spec.prompt_range.1, rng),
+        logu(spec.output_range.0, spec.output_range.1, rng),
+    )
+}
+
+/// The oversubscription-aware allocator (§5.B): assign every server in a
+/// row a service and a priority so each rack carries a good HP/LP mix.
+/// `lp_fraction_override` rescales the LP share for the Fig 15b sweep.
+pub fn assign_servers(
+    row: &mut Row,
+    specs: &[WorkloadSpec],
+    model_idx: usize,
+    lp_fraction_override: Option<f64>,
+    rng: &mut Rng,
+) {
+    let n = row.servers.len();
+    // Deterministic counts per service from ratios (largest remainder).
+    let mut counts: Vec<usize> = specs.iter().map(|s| (s.ratio * n as f64).floor() as usize).collect();
+    let mut assigned: usize = counts.iter().sum();
+    let mut i = 0;
+    while assigned < n {
+        counts[i % specs.len()] += 1;
+        assigned += 1;
+        i += 1;
+    }
+    // Build the assignment list, then shuffle across racks for mixing.
+    let mut slots: Vec<(usize, Priority)> = Vec::with_capacity(n);
+    for (w, &count) in counts.iter().enumerate() {
+        let hp_frac = match lp_fraction_override {
+            Some(lp) => {
+                // Rescale the global LP share while keeping the service
+                // structure: services become HP with prob (1 - lp).
+                1.0 - lp
+            }
+            None => specs[w].hp_fraction,
+        };
+        let hp_count = (hp_frac * count as f64).round() as usize;
+        for j in 0..count {
+            let pri = if j < hp_count { Priority::High } else { Priority::Low };
+            slots.push((w, pri));
+        }
+    }
+    rng.shuffle(&mut slots);
+    for (server, (w, pri)) in row.servers.iter_mut().zip(slots) {
+        server.workload_idx = w;
+        server.priority = pri;
+        server.model_idx = model_idx;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::power::server::ServerPowerModel;
+
+    #[test]
+    fn table4_matches_paper() {
+        let t = table4();
+        assert_eq!(t.len(), 3);
+        assert!((t.iter().map(|w| w.ratio).sum::<f64>() - 1.0).abs() < 1e-12);
+        let chat = &t[2];
+        assert_eq!(chat.name, "Chat");
+        assert_eq!(chat.prompt_range, (2048, 4096));
+        assert_eq!(chat.output_range, (128, 2048));
+        assert_eq!(chat.hp_fraction, 0.5);
+        assert_eq!(t[0].hp_fraction, 0.0); // Summarize: Low
+        assert_eq!(t[1].hp_fraction, 1.0); // Search: High
+    }
+
+    #[test]
+    fn samples_stay_in_range() {
+        let t = table4();
+        let mut rng = Rng::new(1);
+        for spec in &t {
+            for _ in 0..500 {
+                let (i, o) = sample_request(spec, &mut rng);
+                assert!(i >= spec.prompt_range.0 as f64 && i <= spec.prompt_range.1 as f64);
+                assert!(o >= spec.output_range.0 as f64 && o <= spec.output_range.1 as f64);
+            }
+        }
+    }
+
+    #[test]
+    fn log_uniform_is_short_heavy() {
+        let spec = &table4()[2]; // Chat outputs 128..2048
+        let mut rng = Rng::new(2);
+        let n = 20_000;
+        let below_mid = (0..n)
+            .filter(|_| sample_request(spec, &mut rng).1 < (128.0 + 2048.0) / 2.0)
+            .count();
+        assert!(below_mid as f64 / n as f64 > 0.65);
+    }
+
+    #[test]
+    fn allocator_respects_ratios_and_priorities() {
+        let mut row = Row::provision(40, 40, ServerPowerModel::default());
+        let specs = table4();
+        let mut rng = Rng::new(3);
+        assign_servers(&mut row, &specs, 3, None, &mut rng);
+        let count = |w: usize| row.servers.iter().filter(|s| s.workload_idx == w).count();
+        assert_eq!(count(0), 10);
+        assert_eq!(count(1), 10);
+        assert_eq!(count(2), 20);
+        // LP total = summarize 10 + half of chat 10 = 20
+        assert_eq!(row.lp_servers().count(), 20);
+        assert_eq!(row.hp_servers().count(), 20);
+        // every Search server is HP
+        assert!(row
+            .servers
+            .iter()
+            .filter(|s| s.workload_idx == 1)
+            .all(|s| s.priority == Priority::High));
+    }
+
+    #[test]
+    fn lp_override_rescales() {
+        let mut row = Row::provision(40, 40, ServerPowerModel::default());
+        let specs = table4();
+        let mut rng = Rng::new(4);
+        assign_servers(&mut row, &specs, 0, Some(0.25), &mut rng);
+        let lp = row.lp_servers().count();
+        assert!((9..=11).contains(&lp), "lp={lp}");
+    }
+}

@@ -1,0 +1,152 @@
+//! Production-trace replication (§6.1).
+//!
+//! The paper takes a six-week power trace from a production inference
+//! cluster (June 21 – Aug 2, 2023) and generates a synthetic request
+//! trace whose simulated power matches it within 3% MAPE. We have no
+//! production trace, so we replicate the *replication*: the "production"
+//! target is synthesized from the published statistics (Table 2: 79%
+//! peak utilization, ≤9% 2 s spike, 11.8% 40 s spike, diurnal shape),
+//! and the simulator's load is calibrated against that target
+//! ([`crate::simulation::calibrate`]), closing the same loop with the
+//! same fidelity metric.
+
+use crate::util::rng::Rng;
+use crate::util::stats::mape;
+use crate::workload::arrivals::diurnal_multiplier;
+
+/// The "production" target: a normalized row-power profile.
+#[derive(Debug, Clone)]
+pub struct TraceTarget {
+    /// Sampling period, seconds.
+    pub dt_s: f64,
+    /// Normalized row power (fraction of provisioned budget).
+    pub power: Vec<f64>,
+    /// Statistics the synthesis is anchored to (Table 2 inference column).
+    pub peak_util: f64,
+}
+
+/// Synthesize the six-week production-like power profile.
+///
+/// `floor_util` is the row power when every server idles; `peak_util`
+/// the diurnal peak (Table 2: 0.79). Short-term variation (Table 2:
+/// ≤9% over 2 s) comes from an AR(1) jitter plus prompt-burst shot noise.
+pub fn target_power_profile(
+    weeks: f64,
+    dt_s: f64,
+    floor_util: f64,
+    peak_util: f64,
+    seed: u64,
+) -> TraceTarget {
+    let total_s = weeks * 7.0 * 86_400.0;
+    let n = (total_s / dt_s) as usize;
+    let mut rng = Rng::new(seed);
+    let mut power = Vec::with_capacity(n);
+    // Diurnal multiplier spans [~0.40, 1.0] → map onto [floor..peak].
+    let (dmin, dmax) = (0.40, 1.0);
+    let mut ar = 0.0; // AR(1) short-term state
+    let rho = 0.7_f64;
+    let sigma = 0.013;
+    for i in 0..n {
+        let t = i as f64 * dt_s;
+        let d = ((diurnal_multiplier(t) - dmin) / (dmax - dmin)).clamp(0.0, 1.0);
+        let base = floor_util + d * (peak_util - floor_util) * 0.97;
+        ar = rho * ar + rng.normal_with(0.0, sigma);
+        // Occasional correlated prompt bursts (uncorrelated across
+        // endpoints, so small at row level: ≤ ~2%).
+        let burst = if rng.bool(0.01) { rng.range_f64(0.005, 0.02) } else { 0.0 };
+        power.push((base + ar + burst).clamp(0.05, 1.0));
+    }
+    // Rescale so the realized peak lands exactly on the published figure
+    // (Table 2: the statistic the synthesis is anchored to).
+    let realized = power.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+    for p in power.iter_mut() {
+        *p *= peak_util / realized;
+    }
+    TraceTarget { dt_s, power, peak_util }
+}
+
+impl TraceTarget {
+    /// Daily profile: mean power per time-of-day bucket (for MAPE
+    /// comparison against a simulated run, mirroring §6.1).
+    pub fn daily_profile(&self, buckets: usize) -> Vec<f64> {
+        daily_profile_of(&self.power, self.dt_s, buckets)
+    }
+
+    /// Peak utilization of the synthesized profile.
+    pub fn peak(&self) -> f64 {
+        self.power.iter().cloned().fold(f64::NEG_INFINITY, f64::max)
+    }
+
+    /// MAPE between this target's daily profile and another power series'.
+    pub fn mape_daily(&self, other: &[f64], other_dt_s: f64, buckets: usize) -> f64 {
+        let a = self.daily_profile(buckets);
+        let b = daily_profile_of(other, other_dt_s, buckets);
+        mape(&a, &b)
+    }
+}
+
+/// Average a power series into `buckets` time-of-day bins.
+pub fn daily_profile_of(power: &[f64], dt_s: f64, buckets: usize) -> Vec<f64> {
+    let mut sums = vec![0.0; buckets];
+    let mut counts = vec![0u64; buckets];
+    for (i, &p) in power.iter().enumerate() {
+        let tod = (i as f64 * dt_s).rem_euclid(86_400.0);
+        let b = ((tod / 86_400.0) * buckets as f64) as usize % buckets;
+        sums[b] += p;
+        counts[b] += 1;
+    }
+    sums.iter().zip(&counts).map(|(&s, &c)| if c > 0 { s / c as f64 } else { 0.0 }).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::stats::max_rise_within;
+
+    fn week_target() -> TraceTarget {
+        target_power_profile(1.0, 2.0, 0.42, 0.79, 11)
+    }
+
+    #[test]
+    fn peak_matches_table2() {
+        let t = week_target();
+        let peak = t.peak();
+        assert!((peak - 0.79).abs() < 1e-9, "peak={peak}");
+    }
+
+    #[test]
+    fn short_term_spikes_match_table2() {
+        // Table 2 inference: max 2 s spike ≈ 9%, 40 s spike ≈ 11.8%.
+        let t = week_target();
+        let spike_2s = max_rise_within(&t.power, 1); // dt = 2 s
+        let spike_40s = max_rise_within(&t.power, 20);
+        assert!((0.04..=0.12).contains(&spike_2s), "2s spike {spike_2s}");
+        assert!((0.06..=0.16).contains(&spike_40s), "40s spike {spike_40s}");
+        assert!(spike_40s >= spike_2s);
+    }
+
+    #[test]
+    fn diurnal_shape_present() {
+        let t = week_target();
+        let daily = t.daily_profile(24);
+        let peak_hour = daily.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        let trough_hour = daily.iter().cloned().fold(f64::INFINITY, f64::min);
+        assert!(peak_hour / trough_hour > 1.4, "{peak_hour} / {trough_hour}");
+    }
+
+    #[test]
+    fn self_mape_is_zero_and_shifted_is_not() {
+        let t = week_target();
+        assert!(t.mape_daily(&t.power, t.dt_s, 48) < 1e-9);
+        let shifted: Vec<f64> = t.power.iter().map(|p| p * 1.10).collect();
+        let m = t.mape_daily(&shifted, t.dt_s, 48);
+        assert!((9.0..11.0).contains(&m), "mape={m}");
+    }
+
+    #[test]
+    fn deterministic() {
+        let a = target_power_profile(0.1, 2.0, 0.4, 0.79, 3);
+        let b = target_power_profile(0.1, 2.0, 0.4, 0.79, 3);
+        assert_eq!(a.power, b.power);
+    }
+}

@@ -1,0 +1,131 @@
+//! Integration tests across sim + cluster + policy + metrics: the
+//! system-level invariants the paper's design depends on.
+
+use polca::config::SloConfig;
+use polca::policy::engine::PolicyKind;
+use polca::policy::tuner::evaluate_point;
+use polca::simulation::{run, run_with_impact, SimConfig};
+
+fn cfg(seed: u64) -> SimConfig {
+    let mut c = SimConfig::default();
+    c.weeks = 0.08; // ~13.4 hours, covers a diurnal peak
+    c.exp.row.num_servers = 16;
+    c.deployed_servers = 16;
+    c.exp.seed = seed;
+    c.power_scale = 1.45; // small-row calibration (see simulation tests)
+    c
+}
+
+/// The headline pipeline: base row has headroom; +30% under POLCA holds
+/// SLOs; +30% without protection trips the breaker at the peak.
+#[test]
+fn headline_oversubscription_story() {
+    let base = run(&cfg(1));
+    assert!(base.power_peak < 0.9, "base peak {}", base.power_peak);
+    assert_eq!(base.brake_events, 0);
+
+    let mut polca30 = cfg(1);
+    polca30.deployed_servers = 21; // +31%
+    let (report, impact) = run_with_impact(&polca30);
+    assert!(
+        impact.meets_slo(&polca30.exp.slo),
+        "POLCA +30% violated SLOs: {:?} | {:?}",
+        impact.slo_violations(&polca30.exp.slo),
+        impact
+    );
+    assert!(report.power_peak <= 1.0 + 1e-9);
+
+    let mut nocap30 = cfg(1);
+    nocap30.deployed_servers = 24; // +50% unprotected: must overload
+    nocap30.policy_kind = PolicyKind::NoCap;
+    let r = run(&nocap30);
+    assert!(r.brake_events > 0, "unprotected +50% row should brake");
+}
+
+/// Capping must bite LP before HP across seeds (priority ordering).
+#[test]
+fn lp_absorbs_capping_before_hp() {
+    for seed in [2, 3, 4] {
+        let mut c = cfg(seed);
+        c.deployed_servers = 22;
+        let (_, impact) = run_with_impact(&c);
+        assert!(
+            impact.lp_p99 + 1e-6 >= impact.hp_p99,
+            "seed {seed}: HP p99 {} > LP p99 {}",
+            impact.hp_p99,
+            impact.lp_p99
+        );
+    }
+}
+
+/// The telemetry/OOB latency chain must not break safety: even with a
+/// lossy, jittery OOB channel, the brake path still bounds the damage.
+#[test]
+fn unreliable_oob_still_protected() {
+    let mut c = cfg(5);
+    c.deployed_servers = 22;
+    c.oob_loss_prob = 0.3;
+    c.oob_jitter_frac = 0.25;
+    let r = run(&c);
+    // The run completes and the row spends almost no time above budget:
+    // any overload is cut by the (reliable) brake path within ~7s.
+    assert!(r.power_peak < 1.15, "runaway power {}", r.power_peak);
+    let over_budget_time = r.brake_time_s;
+    assert!(over_budget_time < r.duration_s * 0.05);
+}
+
+/// Tuner: more added servers never *reduces* LP impact (monotone load),
+/// and the zero-added point is SLO-clean.
+#[test]
+fn tuner_monotonicity() {
+    let base = cfg(6);
+    let slo = SloConfig::default();
+    let p0 = evaluate_point(&base, 0.80, 0.89, 0.0, &slo);
+    let p30 = evaluate_point(&base, 0.80, 0.89, 0.30, &slo);
+    assert!(p0.meets_slo, "{p0:?}");
+    assert!(p30.lp_p99 + 1e-9 >= p0.lp_p99, "{} vs {}", p30.lp_p99, p0.lp_p99);
+}
+
+/// Determinism across the whole stack: same seed, same report.
+#[test]
+fn full_stack_determinism() {
+    let c = cfg(7);
+    let (mut a, ia) = run_with_impact(&c);
+    let (mut b, ib) = run_with_impact(&c);
+    assert_eq!(a.hp.completed, b.hp.completed);
+    assert_eq!(a.brake_events, b.brake_events);
+    assert!((a.hp.latency.p99() - b.hp.latency.p99()).abs() < 1e-12);
+    assert!((ia.lp_p99 - ib.lp_p99).abs() < 1e-12);
+}
+
+/// Seed sensitivity: the headline must not be a fluke of one seed.
+#[test]
+fn polca_zero_brakes_across_seeds() {
+    for seed in [11, 13, 17] {
+        let mut c = cfg(seed);
+        c.deployed_servers = 21;
+        let r = run(&c);
+        assert_eq!(r.brake_events, 0, "seed {seed} braked");
+    }
+}
+
+/// Fig 15b mechanism: shrinking the LP pool shifts pain to HP.
+#[test]
+fn small_lp_pool_hurts_hp() {
+    let mut lots_lp = cfg(8);
+    lots_lp.deployed_servers = 22;
+    lots_lp.lp_fraction_override = Some(0.75);
+    let (_, imp_lots) = run_with_impact(&lots_lp);
+
+    let mut few_lp = cfg(8);
+    few_lp.deployed_servers = 22;
+    few_lp.lp_fraction_override = Some(0.10);
+    let (_, imp_few) = run_with_impact(&few_lp);
+
+    assert!(
+        imp_few.hp_p99 + 1e-9 >= imp_lots.hp_p99,
+        "HP impact should grow as LP pool shrinks: {} vs {}",
+        imp_few.hp_p99,
+        imp_lots.hp_p99
+    );
+}

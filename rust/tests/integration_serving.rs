@@ -1,0 +1,101 @@
+//! Integration tests for the real serving path: runtime + coordinator +
+//! power adapter over the AOT artifacts. Skips gracefully when
+//! artifacts/ has not been built.
+
+use polca::cluster::hierarchy::Priority;
+use polca::config::PolicyConfig;
+use polca::coordinator::{run_policy_over_row, timeline_power, Coordinator, Request};
+use polca::power::server::ServerPowerModel;
+use polca::runtime::Engine;
+use polca::util::rng::Rng;
+use std::path::PathBuf;
+
+fn engine() -> Option<Engine> {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: run `make artifacts` first");
+        return None;
+    }
+    Some(Engine::load(&dir).unwrap())
+}
+
+/// Greedy generation is deterministic end to end: two identical request
+/// streams produce identical token sequences.
+#[test]
+fn serving_is_deterministic() {
+    let Some(e1) = engine() else { return };
+    let Some(e2) = engine() else { return };
+    let make = |engine: Engine| -> Vec<Vec<i32>> {
+        let mut c = Coordinator::new(engine).unwrap();
+        let mut rng = Rng::new(99);
+        for id in 0..6u64 {
+            let len = rng.range_usize(4, 12);
+            let prompt: Vec<i32> = (0..len).map(|_| rng.below(512) as i32).collect();
+            c.submit(Request { id, prompt, max_new_tokens: 5, priority: Priority::Low });
+        }
+        let mut done = c.run_to_completion().unwrap();
+        done.sort_by_key(|d| d.id);
+        done.into_iter().map(|d| d.tokens).collect()
+    };
+    assert_eq!(make(e1), make(e2));
+}
+
+/// Requests interleaved across slots must not contaminate each other:
+/// the same request served alone and served alongside others produces
+/// the same tokens (KV slot isolation at the serving level).
+#[test]
+fn slot_isolation_under_batching() {
+    let Some(e_alone) = engine() else { return };
+    let probe = Request {
+        id: 0,
+        prompt: vec![17, 300, 45, 9, 222, 8],
+        max_new_tokens: 6,
+        priority: Priority::High,
+    };
+    let mut c = Coordinator::new(e_alone).unwrap();
+    c.submit(probe.clone());
+    let alone = c.run_to_completion().unwrap()[0].tokens.clone();
+
+    let Some(e_batch) = engine() else { return };
+    let mut c = Coordinator::new(e_batch).unwrap();
+    let mut rng = Rng::new(5);
+    c.submit(probe);
+    for id in 1..5u64 {
+        let len = rng.range_usize(4, 12);
+        let prompt: Vec<i32> = (0..len).map(|_| rng.below(512) as i32).collect();
+        c.submit(Request { id, prompt, max_new_tokens: 7, priority: Priority::Low });
+    }
+    let mut done = c.run_to_completion().unwrap();
+    done.sort_by_key(|d| d.id);
+    assert_eq!(done[0].tokens, alone, "batching changed request 0's output");
+}
+
+/// The executed timeline drives POLCA sensibly: more oversubscription
+/// can only increase capped time, never decrease it.
+#[test]
+fn policy_monotone_in_oversubscription() {
+    let Some(engine) = engine() else { return };
+    let mut c = Coordinator::new(engine).unwrap();
+    let mut rng = Rng::new(7);
+    for id in 0..10u64 {
+        let len = rng.range_usize(8, 14);
+        let prompt: Vec<i32> = (0..len).map(|_| rng.below(512) as i32).collect();
+        c.submit(Request { id, prompt, max_new_tokens: 8, priority: Priority::Low });
+    }
+    c.run_to_completion().unwrap();
+    let model = ServerPowerModel::default();
+    let trace = timeline_power(&c.timeline, &model, 0.5, 50.0);
+    let mut last_capped = 0usize;
+    for oversub in [1.0, 1.4, 1.8, 2.2] {
+        let report = run_policy_over_row(
+            &trace, 40, oversub, &PolicyConfig::default(), &model.calib, 0.22, 0.92,
+        );
+        let capped = report.cap_timeline.iter().filter(|(_, lp, _, _)| lp.is_some()).count();
+        assert!(
+            capped >= last_capped,
+            "capped ticks decreased: {capped} < {last_capped} at {oversub}"
+        );
+        last_capped = capped;
+    }
+    assert!(last_capped > 0, "extreme oversubscription must cap");
+}
