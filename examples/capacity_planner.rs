@@ -1,41 +1,59 @@
-//! Capacity planner: given a row power budget and a workload mix, report
-//! how many servers each policy can safely deploy — the operator-facing
-//! use of POLCA's result (more servers per datacenter, fewer datacenters).
+//! Capacity planner: given a site's substation budget and workload mix,
+//! report how many servers each policy can safely deploy — the
+//! operator-facing use of POLCA's result (more servers per datacenter,
+//! fewer datacenters), lifted to the site level via `polca::fleet`.
 //!
-//! Run with: cargo run --release --example capacity_planner [budget_servers]
+//! The site is heterogeneous (A100, H100, and mixed-generation clusters
+//! with staggered diurnal peaks); the planner binary-searches the max
+//! added-server fraction per policy such that every cluster holds its
+//! Table-5 SLOs with zero powerbrakes and the composed site trace stays
+//! under every feed and the substation budget.
+//!
+//! Run with: cargo run --release --example capacity_planner [n_clusters]
 
-use polca::policy::engine::PolicyKind;
-use polca::simulation::{run_with_impact, SimConfig};
-
-fn deployable(kind: PolicyKind, baseline: usize, weeks: f64) -> (usize, f64) {
-    // March the deployment up until SLOs (incl. zero brakes) break.
-    let mut best = baseline;
-    for added_pct in [0, 5, 10, 15, 20, 25, 30, 35, 40] {
-        let deployed = baseline + baseline * added_pct / 100;
-        let mut cfg = SimConfig::default();
-        cfg.weeks = weeks;
-        cfg.policy_kind = kind;
-        cfg.exp.row.num_servers = baseline;
-        cfg.deployed_servers = deployed;
-        cfg.exp.seed = 11;
-        let (_, impact) = run_with_impact(&cfg);
-        if impact.meets_slo(&cfg.exp.slo) {
-            best = deployed;
-        } else {
-            break;
-        }
-    }
-    (best, best as f64 / baseline as f64 - 1.0)
-}
+use polca::fleet::planner::{plan_all, PlannerConfig};
+use polca::fleet::site::SiteSpec;
 
 fn main() {
-    let baseline: usize = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(40);
-    let weeks = 0.3;
-    println!("# capacity planning for a {baseline}-server power budget (Table-4 mix, BLOOM-176B)");
-    println!("{:<18} {:>10} {:>12}", "policy", "deployable", "extra");
-    for kind in PolicyKind::all() {
-        let (n, extra) = deployable(kind, baseline, weeks);
-        println!("{:<18} {:>10} {:>11.1}%", kind.name(), n, extra * 100.0);
+    let n_clusters: usize =
+        std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(4);
+    let site = SiteSpec::demo(n_clusters);
+    let mut pc = PlannerConfig::default();
+    pc.weeks = 0.1;
+    pc.step_pct = 5;
+
+    println!(
+        "# capacity planning for site '{}': {} clusters, {} baseline servers, \
+         {:.0} kW substation budget",
+        site.name,
+        site.clusters.len(),
+        site.baseline_servers(),
+        site.substation_budget_w / 1e3
+    );
+    for c in &site.clusters {
+        println!(
+            "#   {:<16} {:<10} {:>3} servers  {:>7.0} kW  +{:.0}h diurnal phase",
+            c.name,
+            c.sku.name,
+            c.baseline_servers,
+            c.budget_w() / 1e3,
+            c.phase_offset_s / 3600.0
+        );
+    }
+    println!(
+        "{:<18} {:>10} {:>8} {:>10} {:>8} {:>9}",
+        "policy", "deployable", "extra", "site peak", "brakes", "caps/day"
+    );
+    for plan in plan_all(&site, &pc) {
+        println!(
+            "{:<18} {:>10} {:>7.1}% {:>9.1}% {:>8} {:>9.1}",
+            plan.policy.name(),
+            if plan.feasible { plan.deployable_servers.to_string() } else { "—".into() },
+            plan.added_pct as f64,
+            plan.site_peak_w / plan.substation_budget_w * 100.0,
+            plan.brake_events,
+            plan.cap_events_per_day
+        );
     }
     println!(
         "\nevery +10% deployable servers ≈ one datacenter avoided per ten \

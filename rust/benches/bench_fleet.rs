@@ -1,0 +1,38 @@
+//! Fleet bench: parallel vs serial site evaluation — the speedup that
+//! makes the capacity planner's binary search practical at 16 clusters.
+
+use std::time::Duration;
+
+use polca::benchkit::{bench, black_box, BenchConfig};
+use polca::fleet::parallel::{run_site, SiteRunConfig};
+use polca::fleet::site::SiteSpec;
+use polca::policy::engine::PolicyKind;
+
+fn main() {
+    let cfg = BenchConfig {
+        warmup: Duration::from_millis(0),
+        measure: Duration::from_secs(6),
+        min_iters: 2,
+        max_iters: 1000,
+    };
+
+    for n_clusters in [4usize, 16] {
+        let site = SiteSpec::demo(n_clusters);
+        let mut results = Vec::new();
+        for (name, parallel) in [("serial", false), ("parallel", true)] {
+            let rc = SiteRunConfig { weeks: 0.01, seed: 3, sample_s: 120.0, parallel };
+            let r = bench(
+                &format!("site_{n_clusters}cluster_polca_{name}"),
+                &cfg,
+                n_clusters as f64,
+                || {
+                    black_box(run_site(&site, PolicyKind::Polca, &rc));
+                },
+            );
+            println!("{}  [= clusters/s]", r.report());
+            results.push(r);
+        }
+        let speedup = results[0].mean.as_secs_f64() / results[1].mean.as_secs_f64();
+        println!("site_{n_clusters}cluster speedup parallel/serial: {speedup:.2}x");
+    }
+}

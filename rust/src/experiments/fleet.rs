@@ -1,0 +1,72 @@
+//! Beyond-paper experiment: site-level headroom table (see
+//! [`crate::fleet`]). POLCA's Fig 13/17 answer "how many servers fit in
+//! one row"; this table answers the infrastructure-planning version —
+//! how many fit under one substation when heterogeneous clusters with
+//! staggered diurnal peaks share the budget.
+
+use crate::fleet::planner::{plan_all, PlannerConfig};
+use crate::fleet::site::SiteSpec;
+use crate::util::csv::Csv;
+use crate::util::table::{f, pct, Table};
+
+use super::{Depth, FigureOutput};
+
+/// `site-headroom`: per-policy deployable servers for a demo 4-cluster
+/// heterogeneous site.
+pub fn site_headroom(depth: Depth, seed: u64) -> FigureOutput {
+    let mut out = FigureOutput::new(
+        "site-headroom",
+        "Site-level deployable servers under a shared substation budget",
+    );
+    let site = SiteSpec::demo(4);
+    let mut pc = PlannerConfig::default();
+    pc.seed = seed;
+    pc.weeks = depth.weeks(1.0);
+    pc.step_pct = match depth {
+        Depth::Quick => 5,
+        Depth::Full => 2,
+    };
+    let plans = plan_all(&site, &pc);
+
+    let mut t = Table::new(
+        "Site headroom",
+        &["policy", "deployable", "added", "site peak", "brakes", "caps/day", "HP p99", "LP p99"],
+    );
+    let mut csv = Csv::new(&[
+        "policy", "deployable", "added_frac", "site_peak_norm", "brakes", "caps_per_day",
+        "worst_hp_p99", "worst_lp_p99", "feasible",
+    ]);
+    for p in &plans {
+        t.row(vec![
+            p.policy.name().to_string(),
+            if p.feasible { p.deployable_servers.to_string() } else { "—".into() },
+            pct(p.added_pct as f64 / 100.0, 0),
+            pct(p.site_peak_w / p.substation_budget_w, 1),
+            p.brake_events.to_string(),
+            f(p.cap_events_per_day, 1),
+            pct(p.worst_hp_p99, 2),
+            pct(p.worst_lp_p99, 2),
+        ]);
+        csv.row_strs(&[
+            p.policy.name().to_string(),
+            p.deployable_servers.to_string(),
+            f(p.added_pct as f64 / 100.0, 2),
+            f(p.site_peak_w / p.substation_budget_w, 4),
+            p.brake_events.to_string(),
+            f(p.cap_events_per_day, 2),
+            f(p.worst_hp_p99, 4),
+            f(p.worst_lp_p99, 4),
+            (p.feasible as u8).to_string(),
+        ]);
+    }
+    out.tables.push(t);
+    out.csvs.push(("site_headroom.csv".into(), csv));
+    out.notes.push(format!(
+        "{} clusters ({} baseline servers, {:.0} kW substation); deployable = SLOs held, \
+         zero brakes, feeds and substation within budget. Row-level paper headline: +30%.",
+        site.clusters.len(),
+        site.baseline_servers(),
+        site.substation_budget_w / 1e3
+    ));
+    out
+}

@@ -1,0 +1,31 @@
+//! Fleet layer: from one cluster to a datacenter site.
+//!
+//! The paper evaluates POLCA one row (cluster) at a time; the deployment
+//! decision providers face is site-level — many heterogeneous clusters
+//! behind shared feeds, a UPS, and one substation. This subsystem
+//! composes the existing per-cluster simulator into that picture:
+//!
+//! * [`sku`] — GPU/server SKU registry (A100/H100-class and a
+//!   mixed-generation chassis) layered over
+//!   [`crate::power::gpu::GpuPowerCalib`], so clusters can differ in
+//!   silicon while sharing the paper's workload-shape calibration.
+//! * [`site`] — site topology (clusters → feeds → UPS → substation) and
+//!   compositional trace aggregation with per-cluster diurnal phase
+//!   offsets (site trace == sum of cluster traces at zero offset).
+//! * [`parallel`] — concurrent site evaluation on scoped threads with
+//!   deterministic per-cluster seeds (bit-identical to serial).
+//! * [`planner`] — per-policy binary search for the max deployable
+//!   servers under the substation budget, reporting headroom, cap-event
+//!   rates, and SLO impact via [`crate::metrics::ImpactSummary`].
+//!
+//! CLI: `polca fleet [plan|sweep|trace] --clusters N --policy polca`.
+
+pub mod parallel;
+pub mod planner;
+pub mod site;
+pub mod sku;
+
+pub use parallel::{run_site, ClusterOutcome, SiteOutcome, SiteRunConfig};
+pub use planner::{plan_all, plan_site, PlannerConfig, PolicyPlan};
+pub use site::{compose, ClusterSpec, Feed, SiteSpec, SiteTrace};
+pub use sku::SkuSpec;

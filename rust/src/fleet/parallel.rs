@@ -1,0 +1,189 @@
+//! Parallel site execution: the per-cluster simulations of one site are
+//! independent discrete-event runs, so a site evaluation fans out one
+//! scoped thread per cluster and joins — near-linear speedup on the
+//! planner's inner loop (see `benches/bench_fleet.rs`).
+//!
+//! Determinism contract: per-cluster seeds are derived *serially* from
+//! the site seed with [`crate::util::rng::Rng::fork`] before any thread
+//! is spawned, and each thread writes only its own pre-allocated slot —
+//! the result is bit-identical to the serial path regardless of
+//! scheduling (tested in `tests/integration_fleet.rs`).
+
+use std::thread;
+
+use crate::config::SloConfig;
+use crate::metrics::{ImpactSummary, RunReport};
+use crate::policy::engine::PolicyKind;
+use crate::simulation::run_with_impact;
+use crate::util::rng::Rng;
+
+use super::site::{compose, SiteSpec, SiteTrace};
+
+/// How to execute one site evaluation.
+#[derive(Debug, Clone, Copy)]
+pub struct SiteRunConfig {
+    pub weeks: f64,
+    pub seed: u64,
+    /// Power-series sampling period for trace composition, seconds.
+    pub sample_s: f64,
+    /// Run clusters on scoped threads (false = serial reference path).
+    pub parallel: bool,
+}
+
+impl Default for SiteRunConfig {
+    fn default() -> Self {
+        SiteRunConfig { weeks: 0.1, seed: 1, sample_s: 60.0, parallel: true }
+    }
+}
+
+/// One cluster's result within a site run.
+#[derive(Debug, Clone)]
+pub struct ClusterOutcome {
+    pub name: String,
+    pub seed: u64,
+    pub budget_w: f64,
+    pub report: RunReport,
+    pub impact: ImpactSummary,
+}
+
+/// A full site evaluation: per-cluster outcomes + the composed trace.
+#[derive(Debug, Clone)]
+pub struct SiteOutcome {
+    pub clusters: Vec<ClusterOutcome>,
+    pub trace: SiteTrace,
+    /// Peak site draw seen at the substation (W), after UPS losses.
+    pub substation_peak_w: f64,
+    pub substation_budget_w: f64,
+    /// Per feed: (name, peak draw W, capacity W).
+    pub feed_peaks_w: Vec<(String, f64, f64)>,
+}
+
+impl SiteOutcome {
+    /// Every electrical level within budget (feeds and substation).
+    pub fn within_power_budget(&self) -> bool {
+        self.substation_peak_w <= self.substation_budget_w
+            && self.feed_peaks_w.iter().all(|(_, peak, cap)| peak <= cap)
+    }
+
+    /// Every cluster's latency/brake impact within the SLOs.
+    pub fn meets_slos(&self, slo: &SloConfig) -> bool {
+        self.clusters.iter().all(|c| c.impact.meets_slo(slo))
+    }
+
+    /// Deployable means both electrically safe and SLO-clean.
+    pub fn feasible(&self, slo: &SloConfig) -> bool {
+        self.within_power_budget() && self.meets_slos(slo)
+    }
+
+    pub fn total_brakes(&self) -> u64 {
+        self.clusters.iter().map(|c| c.report.brake_events).sum()
+    }
+
+    pub fn total_cap_commands(&self) -> u64 {
+        self.clusters.iter().map(|c| c.report.cap_commands).sum()
+    }
+
+    pub fn worst_hp_p99(&self) -> f64 {
+        self.clusters.iter().map(|c| c.impact.hp_p99).fold(0.0, f64::max)
+    }
+
+    pub fn worst_lp_p99(&self) -> f64 {
+        self.clusters.iter().map(|c| c.impact.lp_p99).fold(0.0, f64::max)
+    }
+
+    /// Cap engagements per simulated day across the site.
+    pub fn cap_events_per_day(&self) -> f64 {
+        let dur_s = self.clusters.first().map(|c| c.report.duration_s).unwrap_or(0.0);
+        if dur_s <= 0.0 {
+            return 0.0;
+        }
+        self.total_cap_commands() as f64 / (dur_s / 86_400.0)
+    }
+}
+
+/// Deterministic per-cluster seeds, derived serially from the site seed.
+pub fn cluster_seeds(site_seed: u64, n: usize) -> Vec<u64> {
+    let mut root = Rng::new(site_seed ^ 0xF1EE_7C1D_5EED_0001);
+    (0..n).map(|i| root.fork(i as u64).next_u64()).collect()
+}
+
+/// Evaluate a site under one policy: run every cluster (concurrently if
+/// asked), then compose the site trace and check the topology budgets.
+pub fn run_site(site: &SiteSpec, policy: PolicyKind, rc: &SiteRunConfig) -> SiteOutcome {
+    let n = site.clusters.len();
+    let seeds = cluster_seeds(rc.seed, n);
+    let sims: Vec<_> = site
+        .clusters
+        .iter()
+        .zip(&seeds)
+        .map(|(c, &seed)| c.sim_config(policy, rc.weeks, seed, rc.sample_s))
+        .collect();
+
+    let mut results: Vec<Option<(RunReport, ImpactSummary)>> = (0..n).map(|_| None).collect();
+    if rc.parallel {
+        thread::scope(|s| {
+            for (sim, slot) in sims.iter().zip(results.iter_mut()) {
+                s.spawn(move || {
+                    *slot = Some(run_with_impact(sim));
+                });
+            }
+        });
+    } else {
+        for (sim, slot) in sims.iter().zip(results.iter_mut()) {
+            *slot = Some(run_with_impact(sim));
+        }
+    }
+
+    let budgets: Vec<f64> = site.clusters.iter().map(|c| c.budget_w()).collect();
+    // Phase offsets were realized inside each cluster's arrival process
+    // (sim_config sets diurnal_phase_s), so the traces are already in
+    // site time — compose without rotation.
+    let offsets = vec![0.0; n];
+    let mut clusters = Vec::with_capacity(n);
+    let mut series = Vec::with_capacity(n);
+    for (i, r) in results.into_iter().enumerate() {
+        let (report, impact) = r.expect("cluster thread completed");
+        series.push(report.power_series.clone());
+        clusters.push(ClusterOutcome {
+            name: site.clusters[i].name.clone(),
+            seed: seeds[i],
+            budget_w: budgets[i],
+            report,
+            impact,
+        });
+    }
+    let trace = compose(&series, &budgets, &offsets, rc.sample_s);
+    let substation_peak_w = trace.peak_w() / site.ups_efficiency;
+    let feed_peaks_w = site
+        .feeds
+        .iter()
+        .map(|f| (f.name.clone(), trace.peak_of(&f.clusters), f.capacity_w))
+        .collect();
+    SiteOutcome {
+        clusters,
+        trace,
+        substation_peak_w,
+        substation_budget_w: site.substation_budget_w,
+        feed_peaks_w,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn seeds_are_deterministic_and_distinct() {
+        let a = cluster_seeds(42, 8);
+        let b = cluster_seeds(42, 8);
+        assert_eq!(a, b);
+        let mut dedup = a.clone();
+        dedup.sort();
+        dedup.dedup();
+        assert_eq!(dedup.len(), a.len(), "colliding cluster seeds: {a:?}");
+        // longer derivations share the common prefix
+        let c = cluster_seeds(42, 4);
+        assert_eq!(&a[..4], &c[..]);
+        assert_ne!(cluster_seeds(43, 4), c);
+    }
+}

@@ -1,0 +1,215 @@
+//! Site-level capacity planner: how many servers fit under a shared
+//! substation budget, per power-management policy?
+//!
+//! This is the operator-facing question POLCA answers ("30% more servers
+//! in the same cluster") lifted to the deployment decision providers
+//! actually face: a site of heterogeneous clusters behind one substation.
+//! For each [`PolicyKind`] the planner binary-searches the largest
+//! uniform added-server fraction for which the site is *deployable*:
+//!
+//!   * every cluster meets the Table-5 SLOs (incl. zero powerbrakes),
+//!   * the composed site trace stays under every feed capacity and the
+//!     substation budget (after UPS losses).
+//!
+//! Feasibility is monotone in load to numerical noise (more servers →
+//! more power and more capping), which is what makes the binary search
+//! sound; the step resolution bounds how much non-monotonicity at the
+//! SLO edge can matter.
+//!
+//! Cost note: each probe pairs every cluster's policy run with its
+//! unprotected baseline (`run_with_impact`), and the baseline depends
+//! only on the load level, not the policy — so `plan_all` recomputes
+//! identical baselines across policies at shared probe points (0 and
+//! `max_added_pct` always). A cross-policy baseline memo would roughly
+//! halve full-depth planning time; deferred to a perf pass.
+
+use crate::config::SloConfig;
+use crate::policy::engine::PolicyKind;
+
+use super::parallel::{run_site, SiteOutcome, SiteRunConfig};
+use super::site::SiteSpec;
+
+/// Planner search parameters.
+#[derive(Debug, Clone)]
+pub struct PlannerConfig {
+    pub weeks: f64,
+    pub seed: u64,
+    pub sample_s: f64,
+    pub parallel: bool,
+    /// Search ceiling for the added fraction, in percent.
+    pub max_added_pct: u32,
+    /// Search resolution, in percentage points (≥ 1).
+    pub step_pct: u32,
+    pub slo: SloConfig,
+}
+
+impl Default for PlannerConfig {
+    fn default() -> Self {
+        PlannerConfig {
+            weeks: 0.08,
+            seed: 1,
+            sample_s: 60.0,
+            parallel: true,
+            max_added_pct: 50,
+            step_pct: 2,
+            slo: SloConfig::default(),
+        }
+    }
+}
+
+/// The planner's answer for one policy.
+#[derive(Debug, Clone)]
+pub struct PolicyPlan {
+    pub policy: PolicyKind,
+    /// Largest added fraction (percent) found deployable; 0 with
+    /// `feasible == false` means even the baseline failed.
+    pub added_pct: u32,
+    pub feasible: bool,
+    pub baseline_servers: usize,
+    pub deployable_servers: usize,
+    /// Site peak at the substation at the chosen point (W).
+    pub site_peak_w: f64,
+    pub substation_budget_w: f64,
+    /// Substation headroom remaining at the chosen point.
+    pub headroom_frac: f64,
+    pub brake_events: u64,
+    pub cap_events_per_day: f64,
+    pub worst_hp_p99: f64,
+    pub worst_lp_p99: f64,
+    /// The full evaluation at the chosen point.
+    pub outcome: SiteOutcome,
+}
+
+/// Evaluate the site at one uniform added level (percent).
+pub fn evaluate_added(
+    site: &SiteSpec,
+    policy: PolicyKind,
+    added_pct: u32,
+    pc: &PlannerConfig,
+) -> SiteOutcome {
+    let scaled = site.with_added(added_pct as f64 / 100.0);
+    let rc = SiteRunConfig {
+        weeks: pc.weeks,
+        seed: pc.seed,
+        sample_s: pc.sample_s,
+        parallel: pc.parallel,
+    };
+    run_site(&scaled, policy, &rc)
+}
+
+fn plan_from(
+    site: &SiteSpec,
+    policy: PolicyKind,
+    added_pct: u32,
+    feasible: bool,
+    outcome: SiteOutcome,
+) -> PolicyPlan {
+    let scaled = site.with_added(added_pct as f64 / 100.0);
+    PolicyPlan {
+        policy,
+        added_pct,
+        feasible,
+        baseline_servers: site.baseline_servers(),
+        deployable_servers: scaled.deployed_servers(),
+        site_peak_w: outcome.substation_peak_w,
+        substation_budget_w: outcome.substation_budget_w,
+        headroom_frac: 1.0 - outcome.substation_peak_w / outcome.substation_budget_w,
+        brake_events: outcome.total_brakes(),
+        cap_events_per_day: outcome.cap_events_per_day(),
+        worst_hp_p99: outcome.worst_hp_p99(),
+        worst_lp_p99: outcome.worst_lp_p99(),
+        outcome,
+    }
+}
+
+/// Binary-search the max deployable added fraction for one policy.
+pub fn plan_site(site: &SiteSpec, policy: PolicyKind, pc: &PlannerConfig) -> PolicyPlan {
+    let step = pc.step_pct.max(1);
+    let o0 = evaluate_added(site, policy, 0, pc);
+    if !o0.feasible(&pc.slo) {
+        return plan_from(site, policy, 0, false, o0);
+    }
+    let o_hi = evaluate_added(site, policy, pc.max_added_pct, pc);
+    if o_hi.feasible(&pc.slo) {
+        return plan_from(site, policy, pc.max_added_pct, true, o_hi);
+    }
+    // Invariant: lo feasible (outcome kept), hi infeasible.
+    let mut lo = 0u32;
+    let mut lo_outcome = o0;
+    let mut hi = pc.max_added_pct;
+    while hi - lo > step {
+        let mid = lo + (hi - lo) / 2;
+        let o = evaluate_added(site, policy, mid, pc);
+        if o.feasible(&pc.slo) {
+            lo = mid;
+            lo_outcome = o;
+        } else {
+            hi = mid;
+        }
+    }
+    plan_from(site, policy, lo, true, lo_outcome)
+}
+
+/// Plan every policy (the Fig 17/18 comparison set, site-level).
+pub fn plan_all(site: &SiteSpec, pc: &PlannerConfig) -> Vec<PolicyPlan> {
+    PolicyKind::all().iter().map(|&p| plan_site(site, p, pc)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fleet::site::{ClusterSpec, Feed, SiteSpec};
+    use crate::fleet::sku;
+
+    /// A one-cluster site small enough for unit-test budgets.
+    fn tiny_site() -> SiteSpec {
+        let c = ClusterSpec::new("c0", sku::find("dgx-a100").unwrap(), 12);
+        let budget = c.budget_w();
+        SiteSpec {
+            name: "tiny".into(),
+            clusters: vec![c],
+            feeds: vec![Feed { name: "feed0".into(), clusters: vec![0], capacity_w: budget }],
+            ups_efficiency: 0.94,
+            substation_budget_w: budget / 0.94,
+        }
+    }
+
+    fn tiny_pc() -> PlannerConfig {
+        PlannerConfig {
+            weeks: 0.02,
+            seed: 3,
+            sample_s: 120.0,
+            parallel: false,
+            max_added_pct: 20,
+            step_pct: 10,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn plan_is_structurally_consistent() {
+        let site = tiny_site();
+        let pc = tiny_pc();
+        let plan = plan_site(&site, PolicyKind::Polca, &pc);
+        assert!(plan.added_pct <= pc.max_added_pct);
+        assert_eq!(plan.baseline_servers, 12);
+        assert!(plan.deployable_servers >= 12 || !plan.feasible);
+        assert!(plan.site_peak_w > 0.0);
+        assert_eq!(plan.outcome.clusters.len(), 1);
+        if plan.feasible {
+            assert!(plan.outcome.feasible(&pc.slo));
+            assert!(plan.headroom_frac >= 0.0, "headroom {}", plan.headroom_frac);
+        }
+    }
+
+    #[test]
+    fn evaluate_added_scales_deployment() {
+        let site = tiny_site();
+        let pc = tiny_pc();
+        let o = evaluate_added(&site, PolicyKind::NoCap, 0, &pc);
+        // baseline 12-server cluster must complete work and stay sane
+        assert!(o.clusters[0].report.hp.completed + o.clusters[0].report.lp.completed > 0);
+        assert!(o.substation_peak_w < o.substation_budget_w * 1.5);
+        assert!(!o.trace.site_w.is_empty());
+    }
+}

@@ -1,0 +1,380 @@
+//! Site topology and compositional power-trace aggregation.
+//!
+//! Extends [`crate::cluster::hierarchy`] *upward*: the paper provisions
+//! power at the row (cluster) breaker; a site feeds many clusters from
+//! shared feeds, a UPS, and one substation ("From Servers to Sites":
+//! infrastructure planning needs the *composed* trace, not per-cluster
+//! maxima). The key physical effect this captures is diversity: cluster
+//! peaks that do not align in time sum to less than the sum of peaks,
+//! which is exactly the headroom a site-level planner can sell.
+//!
+//! Composition model: each cluster produces a fixed-period normalized
+//! power series from its own simulation (`power_series`); the site trace
+//! converts each to watts against the cluster's breaker budget and sums
+//! sample-wise — the site trace is exactly the sample-wise sum of the
+//! cluster traces (tested invariant). Diurnal phase offsets between
+//! clusters (time-zone / tenant-mix shifts) are *physical*: a cluster's
+//! [`ClusterSpec::phase_offset_s`] shifts its arrival-process clock
+//! ([`crate::workload::arrivals::ArrivalProcess::with_phase`]), so the
+//! staggered peaks the planner exploits come out of the simulation, not
+//! from post-hoc trace surgery. [`compose`] additionally supports
+//! rotating externally supplied traces, which is only meaningful when a
+//! trace covers whole diurnal periods.
+
+use crate::characterize::catalog;
+use crate::policy::engine::PolicyKind;
+use crate::simulation::{SimConfig, DEFAULT_POWER_SCALE};
+
+use super::sku::{self, SkuSpec};
+
+/// One cluster (a paper "row"): a breaker-budgeted pool of one SKU.
+#[derive(Debug, Clone)]
+pub struct ClusterSpec {
+    pub name: String,
+    pub sku: SkuSpec,
+    /// Servers the breaker budget was provisioned for.
+    pub baseline_servers: usize,
+    /// Oversubscription: deployed = baseline × (1 + added_frac).
+    pub added_frac: f64,
+    /// Diurnal phase offset of this cluster's load vs site time, seconds
+    /// (e.g. a cluster serving a region 6 h east sees its afternoon peak
+    /// 6 h earlier). Applied to the cluster's arrival-process clock.
+    pub phase_offset_s: f64,
+    /// Override the low-priority share (None = Table-4 mix).
+    pub lp_fraction_override: Option<f64>,
+    /// Row-power calibration factor; small rows multiplex fewer prompt
+    /// spikes and need a smaller scale (see [`crate::simulation`] docs).
+    pub power_scale: f64,
+    /// Catalog model every server is dedicated to.
+    pub model_name: String,
+}
+
+impl ClusterSpec {
+    pub fn new(name: &str, sku: SkuSpec, baseline_servers: usize) -> ClusterSpec {
+        let power_scale = if baseline_servers >= 40 {
+            DEFAULT_POWER_SCALE
+        } else if baseline_servers >= 16 {
+            1.45
+        } else {
+            1.35
+        };
+        ClusterSpec {
+            name: name.to_string(),
+            sku,
+            baseline_servers,
+            added_frac: 0.0,
+            phase_offset_s: 0.0,
+            lp_fraction_override: None,
+            power_scale,
+            model_name: "BLOOM-176B".to_string(),
+        }
+    }
+
+    /// Servers actually deployed at the current oversubscription level.
+    pub fn deployed(&self) -> usize {
+        (self.baseline_servers as f64 * (1.0 + self.added_frac)).round() as usize
+    }
+
+    /// Breaker budget in watts (baseline × per-server provisioned power).
+    pub fn budget_w(&self) -> f64 {
+        let base = catalog::find(&self.model_name).expect("model not in catalog").power;
+        self.baseline_servers as f64 * self.sku.provisioned_w(base)
+    }
+
+    /// Build the per-cluster simulation config for one site run.
+    pub fn sim_config(
+        &self,
+        policy: PolicyKind,
+        weeks: f64,
+        seed: u64,
+        sample_s: f64,
+    ) -> SimConfig {
+        let base = catalog::find(&self.model_name).expect("model not in catalog").power;
+        let mut cfg = SimConfig::default();
+        cfg.policy_kind = policy;
+        cfg.weeks = weeks;
+        cfg.exp.seed = seed;
+        cfg.exp.row.num_servers = self.baseline_servers;
+        cfg.deployed_servers = self.deployed();
+        cfg.model_name = self.model_name.clone();
+        cfg.lp_fraction_override = self.lp_fraction_override;
+        cfg.power_scale = self.power_scale;
+        cfg.series_sample_s = sample_s;
+        cfg.server_model = Some(self.sku.server_model(base));
+        cfg.perf_mult = self.sku.perf_mult;
+        cfg.diurnal_phase_s = self.phase_offset_s;
+        self.sku.scale_policy(&mut cfg.exp.policy);
+        cfg
+    }
+}
+
+/// A feed: a shared distribution branch carrying a subset of clusters.
+#[derive(Debug, Clone)]
+pub struct Feed {
+    pub name: String,
+    /// Indices into `SiteSpec::clusters`.
+    pub clusters: Vec<usize>,
+    pub capacity_w: f64,
+}
+
+/// A site: clusters → feeds → UPS → substation.
+#[derive(Debug, Clone)]
+pub struct SiteSpec {
+    pub name: String,
+    pub clusters: Vec<ClusterSpec>,
+    pub feeds: Vec<Feed>,
+    /// UPS/distribution efficiency: substation draw = cluster sum / eff.
+    pub ups_efficiency: f64,
+    /// Substation budget in watts.
+    pub substation_budget_w: f64,
+}
+
+impl SiteSpec {
+    /// Sum of cluster breaker budgets (the provisioned load).
+    pub fn baseline_budget_w(&self) -> f64 {
+        self.clusters.iter().map(|c| c.budget_w()).sum()
+    }
+
+    pub fn baseline_servers(&self) -> usize {
+        self.clusters.iter().map(|c| c.baseline_servers).sum()
+    }
+
+    pub fn deployed_servers(&self) -> usize {
+        self.clusters.iter().map(|c| c.deployed()).sum()
+    }
+
+    /// Site-level oversubscription: deployed provisioned power / budget.
+    pub fn oversubscription(&self) -> f64 {
+        let base_w = self.baseline_budget_w();
+        let deployed_w: f64 = self
+            .clusters
+            .iter()
+            .map(|c| c.budget_w() * c.deployed() as f64 / c.baseline_servers.max(1) as f64)
+            .sum();
+        deployed_w / base_w
+    }
+
+    /// A copy of the site with every cluster at the given added fraction
+    /// (the planner's uniform-scaling knob).
+    pub fn with_added(&self, added_frac: f64) -> SiteSpec {
+        let mut s = self.clone();
+        for c in &mut s.clusters {
+            c.added_frac = added_frac;
+        }
+        s
+    }
+
+    /// A demo heterogeneous site: `n` clusters cycling through the SKU
+    /// registry, 16-server baselines, diurnal peaks staggered 3 h apart,
+    /// paired onto feeds, substation provisioned exactly for the
+    /// baseline load through the UPS.
+    pub fn demo(n: usize) -> SiteSpec {
+        let skus = sku::registry();
+        let clusters: Vec<ClusterSpec> = (0..n)
+            .map(|i| {
+                let sku = skus[i % skus.len()];
+                let mut c = ClusterSpec::new(&format!("c{i}-{}", sku.name), sku, 16);
+                c.phase_offset_s = i as f64 * 3.0 * 3600.0;
+                c
+            })
+            .collect();
+        let feeds: Vec<Feed> = clusters
+            .chunks(2)
+            .enumerate()
+            .map(|(f, chunk)| {
+                let idxs: Vec<usize> = (f * 2..f * 2 + chunk.len()).collect();
+                let capacity_w: f64 = chunk.iter().map(|c| c.budget_w()).sum();
+                Feed { name: format!("feed{f}"), clusters: idxs, capacity_w }
+            })
+            .collect();
+        let ups_efficiency = 0.94;
+        let substation_budget_w =
+            clusters.iter().map(|c| c.budget_w()).sum::<f64>() / ups_efficiency;
+        SiteSpec {
+            name: format!("demo-site-{n}"),
+            clusters,
+            feeds,
+            ups_efficiency,
+            substation_budget_w,
+        }
+    }
+}
+
+/// A composed site power trace, aligned to site time.
+#[derive(Debug, Clone)]
+pub struct SiteTrace {
+    pub period_s: f64,
+    /// Per-cluster power in watts per sample (offset-aligned).
+    pub cluster_w: Vec<Vec<f64>>,
+    /// Site total per sample (= sample-wise sum of `cluster_w`).
+    pub site_w: Vec<f64>,
+}
+
+impl SiteTrace {
+    pub fn peak_w(&self) -> f64 {
+        self.site_w.iter().cloned().fold(0.0, f64::max)
+    }
+
+    pub fn mean_w(&self) -> f64 {
+        if self.site_w.is_empty() {
+            return 0.0;
+        }
+        self.site_w.iter().sum::<f64>() / self.site_w.len() as f64
+    }
+
+    /// Peak of a subset of clusters (a feed's view of the trace).
+    pub fn peak_of(&self, cluster_idxs: &[usize]) -> f64 {
+        let n = self.site_w.len();
+        let mut peak = 0.0f64;
+        for j in 0..n {
+            let s: f64 = cluster_idxs.iter().map(|&i| self.cluster_w[i][j]).sum();
+            peak = peak.max(s);
+        }
+        peak
+    }
+}
+
+/// Compose per-cluster normalized series into a site trace.
+///
+/// `series[i]` is cluster `i`'s `(t, normalized_power)` samples at a
+/// fixed `period_s`; `budgets_w[i]` converts to watts; `offsets_s[i]`
+/// rotates the trace forward in site time by a whole number of samples.
+/// All series are truncated to the shortest.
+///
+/// Rotation is for composing *externally supplied* periodic traces
+/// (what-if alignment studies) and is only physically meaningful when a
+/// trace spans whole diurnal periods; simulated site runs realize phase
+/// offsets in the arrival process instead and pass zero offsets here.
+pub fn compose(
+    series: &[Vec<(f64, f64)>],
+    budgets_w: &[f64],
+    offsets_s: &[f64],
+    period_s: f64,
+) -> SiteTrace {
+    assert_eq!(series.len(), budgets_w.len());
+    assert_eq!(series.len(), offsets_s.len());
+    let n = series.iter().map(|s| s.len()).min().unwrap_or(0);
+    let mut cluster_w = Vec::with_capacity(series.len());
+    for (i, s) in series.iter().enumerate() {
+        let shift = if n == 0 {
+            0
+        } else {
+            ((offsets_s[i] / period_s).round() as i64).rem_euclid(n as i64) as usize
+        };
+        let mut w = vec![0.0; n];
+        for (j, slot) in w.iter_mut().enumerate() {
+            // Cluster-local sample `src` lands at site time `j = src + shift`.
+            let src = (j + n - shift) % n;
+            *slot = s[src].1 * budgets_w[i];
+        }
+        cluster_w.push(w);
+    }
+    let mut site_w = vec![0.0; n];
+    for w in &cluster_w {
+        for (j, x) in w.iter().enumerate() {
+            site_w[j] += x;
+        }
+    }
+    SiteTrace { period_s, cluster_w, site_w }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn series_of(vals: &[f64], period: f64) -> Vec<(f64, f64)> {
+        vals.iter().enumerate().map(|(i, &v)| (i as f64 * period, v)).collect()
+    }
+
+    #[test]
+    fn zero_offsets_site_is_exact_sum() {
+        let a = series_of(&[0.5, 0.6, 0.7, 0.6], 60.0);
+        let b = series_of(&[0.2, 0.3, 0.2, 0.1], 60.0);
+        let t = compose(&[a.clone(), b.clone()], &[100.0, 200.0], &[0.0, 0.0], 60.0);
+        for j in 0..4 {
+            let expect = a[j].1 * 100.0 + b[j].1 * 200.0;
+            assert_eq!(t.site_w[j], expect, "sample {j}");
+        }
+    }
+
+    #[test]
+    fn offset_rotates_and_preserves_mean() {
+        let a = series_of(&[1.0, 2.0, 3.0, 4.0], 60.0);
+        let t0 = compose(&[a.clone()], &[1.0], &[0.0], 60.0);
+        let t1 = compose(&[a.clone()], &[1.0], &[60.0], 60.0);
+        // one-sample forward rotation
+        assert_eq!(t1.site_w, vec![4.0, 1.0, 2.0, 3.0]);
+        assert!((t0.mean_w() - t1.mean_w()).abs() < 1e-12);
+        // offsets wrap modulo the series length
+        let t5 = compose(&[a], &[1.0], &[5.0 * 60.0], 60.0);
+        assert_eq!(t5.site_w, t1.site_w);
+    }
+
+    #[test]
+    fn staggered_peaks_reduce_site_peak() {
+        // Two identical single-peak traces: aligned they stack, staggered
+        // they don't — the diversity effect the site planner exploits.
+        let peaky = series_of(&[0.2, 1.0, 0.2, 0.2], 60.0);
+        let aligned =
+            compose(&[peaky.clone(), peaky.clone()], &[1.0, 1.0], &[0.0, 0.0], 60.0);
+        let staggered =
+            compose(&[peaky.clone(), peaky], &[1.0, 1.0], &[0.0, 120.0], 60.0);
+        assert!((aligned.peak_w() - 2.0).abs() < 1e-12);
+        assert!((staggered.peak_w() - 1.2).abs() < 1e-12);
+        assert!((aligned.mean_w() - staggered.mean_w()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn feed_peak_never_exceeds_site_peak_sum() {
+        let a = series_of(&[0.5, 0.9, 0.4], 60.0);
+        let b = series_of(&[0.7, 0.2, 0.8], 60.0);
+        let t = compose(&[a, b], &[10.0, 10.0], &[0.0, 0.0], 60.0);
+        assert!(t.peak_of(&[0]) <= t.peak_w() + 1e-12);
+        assert!(t.peak_of(&[1]) <= t.peak_w() + 1e-12);
+        assert!((t.peak_of(&[0, 1]) - t.peak_w()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn truncates_to_shortest_series() {
+        let a = series_of(&[1.0, 1.0, 1.0, 1.0, 1.0], 60.0);
+        let b = series_of(&[2.0, 2.0, 2.0], 60.0);
+        let t = compose(&[a, b], &[1.0, 1.0], &[0.0, 0.0], 60.0);
+        assert_eq!(t.site_w.len(), 3);
+        assert_eq!(t.site_w, vec![3.0, 3.0, 3.0]);
+    }
+
+    #[test]
+    fn cluster_spec_budget_and_deploy() {
+        let sku = sku::find("dgx-a100").unwrap();
+        let mut c = ClusterSpec::new("c0", sku, 40);
+        assert_eq!(c.deployed(), 40);
+        c.added_frac = 0.30;
+        assert_eq!(c.deployed(), 52);
+        // 40 DGX-A100 ≈ 40 × 6.5 kW
+        assert!((250_000.0..270_000.0).contains(&c.budget_w()), "{}", c.budget_w());
+    }
+
+    #[test]
+    fn demo_site_is_heterogeneous_and_feed_covered() {
+        let site = SiteSpec::demo(4);
+        assert_eq!(site.clusters.len(), 4);
+        // at least two distinct SKUs
+        let mut names: Vec<_> = site.clusters.iter().map(|c| c.sku.name).collect();
+        names.sort();
+        names.dedup();
+        assert!(names.len() >= 2);
+        // every cluster appears on exactly one feed
+        let mut covered = vec![0u32; 4];
+        for f in &site.feeds {
+            for &i in &f.clusters {
+                covered[i] += 1;
+            }
+        }
+        assert_eq!(covered, vec![1, 1, 1, 1]);
+        assert!(site.substation_budget_w > site.baseline_budget_w());
+        // uniform scaling knob
+        let over = site.with_added(0.25);
+        assert!(over.deployed_servers() > site.deployed_servers());
+        assert!((over.oversubscription() - 1.25).abs() < 0.01);
+    }
+}

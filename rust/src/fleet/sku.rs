@@ -1,0 +1,213 @@
+//! GPU/server SKU registry: heterogeneous hardware generations layered
+//! over [`GpuPowerCalib`] and [`ServerPowerModel`].
+//!
+//! The paper's testbed is homogeneous (DGX-A100-80GB). Real sites mix
+//! generations — A100 rows bought in one budget cycle next to H100 rows
+//! from the next ("Hybrid Heterogeneous Clusters Can Lower the Energy
+//! Consumption of LLM Inference Workloads"). A [`SkuSpec`] captures what
+//! changes between generations while reusing the paper's *shape*
+//! calibration (prompt-spike vs token-plateau anchors are properties of
+//! the model/workload, expressed as fractions of aggregate GPU TDP):
+//!
+//!   * aggregate GPU TDP (A100 SXM: 8×400 W; H100 SXM: 8×700 W),
+//!   * max SM clock (A100: 1410 MHz; H100: 1980 MHz) — the policy's
+//!     absolute cap setpoints (Table 3) scale with it,
+//!   * a throughput multiplier vs the A100 latency anchors,
+//!   * host power growth (denser CPUs/fans/PSUs on newer hosts),
+//!   * idle fraction (newer parts idle slightly leaner).
+
+use crate::config::PolicyConfig;
+use crate::power::gpu::GpuPowerCalib;
+use crate::power::server::ServerPowerModel;
+
+/// The A100 max SM clock every Table-3 setpoint is expressed against.
+pub const A100_MAX_FREQ_MHZ: f64 = 1410.0;
+
+/// One server SKU (GPU generation + host).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SkuSpec {
+    pub name: &'static str,
+    pub gpu: &'static str,
+    /// TDP per GPU, watts.
+    pub gpu_tdp_each_w: f64,
+    pub n_gpus: usize,
+    /// Max SM clock, MHz.
+    pub max_freq_mhz: f64,
+    /// Serving-throughput multiplier vs the A100 latency anchors.
+    pub perf_mult: f64,
+    /// Multiplier on the non-GPU component budget (Fig 2 rows).
+    pub host_power_mult: f64,
+    /// Idle draw as a fraction of aggregate GPU TDP.
+    pub idle_frac: f64,
+}
+
+impl SkuSpec {
+    /// Clock scale vs the A100 reference (policy setpoints multiply by this).
+    pub fn freq_scale(&self) -> f64 {
+        self.max_freq_mhz / A100_MAX_FREQ_MHZ
+    }
+
+    /// The SKU's power calibration: the workload's shape anchors with
+    /// this generation's idle floor and clock ceiling.
+    pub fn calib(&self, base: GpuPowerCalib) -> GpuPowerCalib {
+        GpuPowerCalib { idle_frac: self.idle_frac, max_freq_mhz: self.max_freq_mhz, ..base }
+    }
+
+    /// Full server power model for this SKU.
+    pub fn server_model(&self, base: GpuPowerCalib) -> ServerPowerModel {
+        let mut m = ServerPowerModel::default();
+        m.gpu_tdp_each_w = self.gpu_tdp_each_w;
+        m.n_gpus = self.n_gpus;
+        for c in &mut m.components {
+            c.provisioned_w *= self.host_power_mult;
+        }
+        m.calib = self.calib(base);
+        m
+    }
+
+    /// Provisioned (breaker-facing) watts per server of this SKU.
+    pub fn provisioned_w(&self, base: GpuPowerCalib) -> f64 {
+        self.server_model(base).provisioned_w()
+    }
+
+    /// Rescale a policy's absolute SM-clock setpoints (expressed for the
+    /// A100 in Table 3) to this SKU's clock domain, preserving ratios —
+    /// a 1110/1410 cap on an A100 row becomes 1559/1980 on an H100 row.
+    pub fn scale_policy(&self, p: &mut PolicyConfig) {
+        let s = self.freq_scale();
+        p.lp_freq_t1_mhz *= s;
+        p.lp_freq_t2_mhz *= s;
+        p.hp_freq_t2_mhz *= s;
+        p.brake_freq_mhz *= s;
+        p.max_freq_mhz *= s;
+    }
+}
+
+/// All known SKUs. `dgx-a100` reproduces the paper's testbed exactly;
+/// `hgx-mixed` models a retrofit chassis carrying both generations
+/// (homogenized per-GPU averages — coarse, but it keeps the row-level
+/// power envelope right, which is what provisioning sees).
+pub fn registry() -> Vec<SkuSpec> {
+    vec![
+        SkuSpec {
+            name: "dgx-a100",
+            gpu: "A100-SXM-80GB",
+            gpu_tdp_each_w: 400.0,
+            n_gpus: 8,
+            max_freq_mhz: 1410.0,
+            perf_mult: 1.0,
+            host_power_mult: 1.0,
+            idle_frac: 0.20,
+        },
+        SkuSpec {
+            name: "hgx-h100",
+            gpu: "H100-SXM",
+            gpu_tdp_each_w: 700.0,
+            n_gpus: 8,
+            max_freq_mhz: 1980.0,
+            perf_mult: 2.3,
+            host_power_mult: 1.18,
+            idle_frac: 0.17,
+        },
+        SkuSpec {
+            name: "hgx-mixed",
+            gpu: "4xA100 + 4xH100",
+            gpu_tdp_each_w: 550.0,
+            n_gpus: 8,
+            max_freq_mhz: 1695.0,
+            perf_mult: 1.6,
+            host_power_mult: 1.10,
+            idle_frac: 0.185,
+        },
+    ]
+}
+
+/// Look a SKU up by name.
+pub fn find(name: &str) -> Option<SkuSpec> {
+    registry().into_iter().find(|s| s.name == name)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::power::gpu::{CapMode, Phase};
+
+    fn base() -> GpuPowerCalib {
+        GpuPowerCalib::default()
+    }
+
+    #[test]
+    fn registry_names_unique_and_findable() {
+        let names: Vec<_> = registry().iter().map(|s| s.name).collect();
+        let mut dedup = names.clone();
+        dedup.sort();
+        dedup.dedup();
+        assert_eq!(dedup.len(), names.len());
+        for n in names {
+            assert!(find(n).is_some(), "{n}");
+        }
+        assert!(find("dgx-h200").is_none());
+    }
+
+    #[test]
+    fn a100_sku_matches_paper_server_model() {
+        // The reference SKU must reproduce the seed ServerPowerModel.
+        let m = find("dgx-a100").unwrap().server_model(base());
+        let d = ServerPowerModel::default();
+        assert_eq!(m, d);
+    }
+
+    #[test]
+    fn h100_draws_more_and_runs_faster() {
+        let a = find("dgx-a100").unwrap();
+        let h = find("hgx-h100").unwrap();
+        assert!(h.provisioned_w(base()) > a.provisioned_w(base()) * 1.3);
+        assert!(h.perf_mult > 2.0);
+        // per-watt efficiency still improves: perf grows faster than power
+        let power_ratio = h.provisioned_w(base()) / a.provisioned_w(base());
+        assert!(h.perf_mult > power_ratio, "H100 must win on perf/W");
+    }
+
+    #[test]
+    fn policy_scaling_preserves_cap_ratios() {
+        let h = find("hgx-h100").unwrap();
+        let mut p = PolicyConfig::default();
+        let lp_t2_ratio = p.lp_freq_t2_mhz / p.max_freq_mhz;
+        h.scale_policy(&mut p);
+        assert_eq!(p.max_freq_mhz, h.max_freq_mhz);
+        assert!((p.lp_freq_t2_mhz / p.max_freq_mhz - lp_t2_ratio).abs() < 1e-12);
+    }
+
+    #[test]
+    fn scaled_cap_reclaims_same_power_fraction() {
+        // A T2 LP cap must shave the same fraction of peak GPU power on
+        // every SKU: the calibration is ratio-based, so capping to
+        // 1110/1410 of max on H100 equals capping 1110 MHz on A100.
+        let base_c = base();
+        let phase_peak = base_c.prompt_peak_frac(8192.0);
+        let mut reductions = Vec::new();
+        for sku in registry() {
+            let c = sku.calib(base_c);
+            let mut p = PolicyConfig::default();
+            sku.scale_policy(&mut p);
+            let capped = c.apply_freq(phase_peak, p.lp_freq_t2_mhz);
+            reductions.push(1.0 - capped / phase_peak);
+        }
+        for r in &reductions[1..] {
+            // idle floors differ slightly between SKUs, so allow 2%
+            assert!((r - reductions[0]).abs() < 0.02, "{reductions:?}");
+        }
+    }
+
+    #[test]
+    fn sku_server_power_ordering_holds() {
+        for sku in registry() {
+            let m = sku.server_model(base());
+            let idle = m.server_power_w(Phase::Idle, CapMode::None, false);
+            let prompt =
+                m.server_power_w(Phase::Prompt { total_input: 4096.0 }, CapMode::None, false);
+            assert!(idle < prompt, "{}", sku.name);
+            assert!(prompt <= m.provisioned_w() * 1.02, "{}", sku.name);
+        }
+    }
+}

@@ -18,6 +18,10 @@
 //! * **The contribution** — [`policy`] (POLCA Algorithm 1 + baselines +
 //!   tuner), [`metrics`] (SLO accounting), [`simulation`] (row-level
 //!   cluster simulator, the paper's §6 evaluation vehicle).
+//! * **Fleet layer** — [`fleet`] (heterogeneous SKU registry, site
+//!   topology with compositional power traces, parallel multi-cluster
+//!   execution, and the site-level capacity planner behind
+//!   `polca fleet`).
 //! * **Serving path** — [`runtime`] (PJRT executables AOT-compiled from
 //!   JAX/Pallas), [`coordinator`] (router, batcher, KV-cache slots) — the
 //!   real-model end-to-end driver with POLCA in the loop.
@@ -30,6 +34,7 @@ pub mod cluster;
 pub mod config;
 pub mod coordinator;
 pub mod experiments;
+pub mod fleet;
 pub mod metrics;
 pub mod perfmodel;
 pub mod policy;

@@ -12,6 +12,9 @@
 //!       Fit the power-scale factor to the Table-2 peak.
 //!   serve [--artifacts DIR] [--requests N] [--oversub F]
 //!       Mini end-to-end serving run (real PJRT model, POLCA in loop).
+//!   fleet [plan|sweep|trace] [--clusters N] [--policy polca|all]
+//!         [--added PCT] [--weeks W] [--seed N] [--serial] [--out-dir out]
+//!       Site-level planning over a heterogeneous multi-cluster site.
 
 use std::path::{Path, PathBuf};
 
@@ -30,6 +33,7 @@ fn main() {
         Some("tune") => cmd_tune(&args),
         Some("calibrate") => cmd_calibrate(&args),
         Some("serve") => cmd_serve(&args),
+        Some("fleet") => cmd_fleet(&args),
         Some(other) => {
             eprintln!("unknown subcommand '{other}'");
             print_help();
@@ -49,10 +53,11 @@ fn main() {
 fn print_help() {
     println!(
         "polca — Power Oversubscription in LLM Cloud Providers (reproduction)\n\n\
-         usage: polca <figure|simulate|tune|calibrate|serve> [options]\n\
+         usage: polca <figure|simulate|tune|calibrate|serve|fleet> [options]\n\
          try:   polca figure list\n       \
                 polca figure fig13 --out-dir out\n       \
                 polca simulate --policy polca --added 0.30 --weeks 1\n       \
+                polca fleet --clusters 4 --policy polca\n       \
                 polca serve --requests 16"
     );
 }
@@ -188,6 +193,150 @@ fn cmd_calibrate(args: &Args) -> anyhow::Result<()> {
         scale * polca::simulation::DEFAULT_POWER_SCALE,
         polca::simulation::DEFAULT_POWER_SCALE
     );
+    Ok(())
+}
+
+fn cmd_fleet(args: &Args) -> anyhow::Result<()> {
+    use polca::fleet::planner::{evaluate_added, plan_site, PlannerConfig};
+    use polca::fleet::site::SiteSpec;
+    use polca::util::csv::Csv;
+    use polca::util::table::{f, pct, Table};
+
+    let mode = args.positionals.first().map(|s| s.as_str()).unwrap_or("plan");
+    let n_clusters = args.get_usize("clusters", 4);
+    let site = SiteSpec::demo(n_clusters);
+    let mut pc = PlannerConfig::default();
+    pc.weeks = args.get_f64("weeks", pc.weeks);
+    pc.seed = args.get_u64("seed", pc.seed);
+    pc.parallel = !args.flag("serial");
+    pc.max_added_pct = args.get_usize("max-added", pc.max_added_pct as usize) as u32;
+    pc.step_pct = args.get_usize("step", pc.step_pct as usize) as u32;
+
+    let policy_arg = args.get_or("policy", "all");
+    let policies: Vec<PolicyKind> = if policy_arg == "all" {
+        PolicyKind::all().to_vec()
+    } else {
+        vec![parse_policy(policy_arg)?]
+    };
+
+    eprintln!(
+        "site '{}': {} clusters / {} baseline servers / {:.0} kW substation budget ({})",
+        site.name,
+        site.clusters.len(),
+        site.baseline_servers(),
+        site.substation_budget_w / 1e3,
+        if pc.parallel { "parallel" } else { "serial" }
+    );
+    for c in &site.clusters {
+        eprintln!(
+            "  {:<16} {:<10} {:>3} servers  {:>7.0} kW budget  +{:.0}h phase",
+            c.name,
+            c.sku.name,
+            c.baseline_servers,
+            c.budget_w() / 1e3,
+            c.phase_offset_s / 3600.0
+        );
+    }
+
+    match mode {
+        "plan" => {
+            let mut t = Table::new(
+                "Site capacity plan",
+                &["policy", "deployable", "added", "site peak", "headroom", "brakes",
+                  "caps/day", "HP p99", "LP p99"],
+            );
+            let plans: Vec<_> = policies.iter().map(|&p| plan_site(&site, p, &pc)).collect();
+            for p in &plans {
+                t.row(vec![
+                    p.policy.name().to_string(),
+                    if p.feasible { p.deployable_servers.to_string() } else { "—".into() },
+                    pct(p.added_pct as f64 / 100.0, 0),
+                    pct(p.site_peak_w / p.substation_budget_w, 1),
+                    pct(p.headroom_frac, 1),
+                    p.brake_events.to_string(),
+                    f(p.cap_events_per_day, 1),
+                    pct(p.worst_hp_p99, 2),
+                    pct(p.worst_lp_p99, 2),
+                ]);
+            }
+            println!("{}", t.render());
+            println!(
+                "baseline {} servers; deployable = max servers with SLOs held, zero brakes, \
+                 and every feed + the substation within budget",
+                site.baseline_servers()
+            );
+        }
+        "sweep" => {
+            let mut t = Table::new(
+                "Site oversubscription sweep",
+                &["policy", "added", "site peak", "brakes", "HP p99", "LP p99", "deployable"],
+            );
+            for &policy in &policies {
+                for added in [0u32, 10, 20, 30, 40] {
+                    if added > pc.max_added_pct {
+                        continue;
+                    }
+                    let o = evaluate_added(&site, policy, added, &pc);
+                    t.row(vec![
+                        policy.name().to_string(),
+                        pct(added as f64 / 100.0, 0),
+                        pct(o.substation_peak_w / o.substation_budget_w, 1),
+                        o.total_brakes().to_string(),
+                        pct(o.worst_hp_p99(), 2),
+                        pct(o.worst_lp_p99(), 2),
+                        if o.feasible(&pc.slo) { "yes".into() } else { "no".into() },
+                    ]);
+                }
+            }
+            println!("{}", t.render());
+        }
+        "trace" => {
+            let added = args.get_usize("added", 0) as u32;
+            // Trace emits one composed trace; default to POLCA rather
+            // than silently dropping the rest of a multi-policy set.
+            let policy = if policy_arg == "all" { PolicyKind::Polca } else { policies[0] };
+            if policy_arg == "all" {
+                eprintln!("tracing {} (pass --policy to trace another)", policy.name());
+            }
+            let o = evaluate_added(&site, policy, added, &pc);
+            let mut header: Vec<String> = vec!["t_s".into(), "site_w".into(), "site_norm".into()];
+            for c in &o.clusters {
+                header.push(format!("{}_w", c.name));
+            }
+            let refs: Vec<&str> = header.iter().map(|s| s.as_str()).collect();
+            let mut csv = Csv::new(&refs);
+            let base_w = site.baseline_budget_w();
+            // Use the simulator's recorded sample times rather than
+            // reconstructing them from the period.
+            let times = o.clusters.first().map(|c| &c.report.power_series);
+            for (j, &w) in o.trace.site_w.iter().enumerate() {
+                let t_s = times
+                    .and_then(|s| s.get(j).map(|p| p.0))
+                    .unwrap_or(j as f64 * o.trace.period_s);
+                let mut row = vec![f(t_s, 0), f(w, 1), f(w / base_w, 4)];
+                for cw in &o.trace.cluster_w {
+                    row.push(f(cw[j], 1));
+                }
+                csv.row_strs(&row);
+            }
+            let out_dir = PathBuf::from(args.get_or("out-dir", "out"));
+            std::fs::create_dir_all(&out_dir)?;
+            let path = out_dir.join(format!("site_trace_{}_{added}pct.csv", policy.name()));
+            csv.write_to(&path)?;
+            println!(
+                "{} at +{added}%: site peak {:.0} kW / budget {:.0} kW ({}), {} brakes, \
+                 {} samples -> {}",
+                policy.name(),
+                o.substation_peak_w / 1e3,
+                o.substation_budget_w / 1e3,
+                if o.within_power_budget() { "within budget" } else { "OVER BUDGET" },
+                o.total_brakes(),
+                o.trace.site_w.len(),
+                path.display()
+            );
+        }
+        other => anyhow::bail!("unknown fleet mode '{other}' (plan|sweep|trace)"),
+    }
     Ok(())
 }
 

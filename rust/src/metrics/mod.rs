@@ -100,6 +100,9 @@ pub struct RunReport {
     pub hp: PriorityMetrics,
     pub lp: PriorityMetrics,
     pub brake_events: u64,
+    /// OOB frequency-cap commands that took effect (cap engagements;
+    /// uncaps not counted) — the fleet planner's cap-event-rate input.
+    pub cap_commands: u64,
     /// Seconds with the powerbrake engaged.
     pub brake_time_s: f64,
     /// Normalized row power stats over the run.

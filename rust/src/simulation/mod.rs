@@ -61,6 +61,18 @@ pub struct SimConfig {
     /// no brake): the unthrottled counterfactual used as the latency
     /// baseline for impact measurement (see [`crate::metrics`]).
     pub protection: bool,
+    /// Override the server power model (heterogeneous SKUs — see
+    /// [`crate::fleet::sku`]). `None` derives the DGX-A100 default from
+    /// the catalog calibration, as the paper does.
+    pub server_model: Option<crate::power::server::ServerPowerModel>,
+    /// Throughput multiplier applied to the model's latency anchors
+    /// (prompt/decode tokens-per-second). Faster SKUs (H100-class) serve
+    /// the same model at a multiple of the A100 anchors.
+    pub perf_mult: f64,
+    /// Diurnal phase offset (s) applied to every arrival stream: this
+    /// row serves a region whose traffic peaks earlier/later than site
+    /// time (fleet layer staggers cluster peaks with this).
+    pub diurnal_phase_s: f64,
 }
 
 impl Default for SimConfig {
@@ -79,6 +91,9 @@ impl Default for SimConfig {
             oob_loss_prob: 0.0,
             oob_jitter_frac: 0.0,
             protection: true,
+            server_model: None,
+            perf_mult: 1.0,
+            diurnal_phase_s: 0.0,
         }
     }
 }
@@ -197,12 +212,26 @@ impl<'a> Sim<'a> {
             model.power.token_mean_at_b1 *= cfg.workload_power_mult;
             model.power.token_mean_at_b16 *= cfg.workload_power_mult;
         }
+        // Fleet SKU knob: faster silicon shifts the latency anchors.
+        if cfg.perf_mult != 1.0 {
+            model.prompt_tokens_per_s *= cfg.perf_mult;
+            model.decode_tokens_per_s *= cfg.perf_mult;
+        }
+        let mut power_model = cfg.server_model.clone().unwrap_or_else(|| {
+            crate::power::server::ServerPowerModel { calib: model.power, ..Default::default() }
+        });
+        // An explicit server model carries its own calibration, so the
+        // Fig-17 robustness multiplier must be applied to it directly
+        // (the scaling above only touched the catalog-derived default).
+        if cfg.server_model.is_some() && cfg.workload_power_mult != 1.0 {
+            let c = &mut power_model.calib;
+            c.prompt_peak_at_256 *= cfg.workload_power_mult;
+            c.prompt_peak_at_8192 *= cfg.workload_power_mult;
+            c.token_mean_at_b1 *= cfg.workload_power_mult;
+            c.token_mean_at_b16 *= cfg.workload_power_mult;
+        }
         let mut root_rng = Rng::new(cfg.exp.seed ^ 0x9E3779B97F4A7C15);
-        let mut row = Row::provision(
-            cfg.exp.row.num_servers,
-            cfg.deployed_servers,
-            crate::power::server::ServerPowerModel { calib: model.power, ..Default::default() },
-        );
+        let mut row = Row::provision(cfg.exp.row.num_servers, cfg.deployed_servers, power_model);
         let specs = crate::workload::spec::table4();
         assign_servers(&mut row, &specs, 0, cfg.lp_fraction_override, &mut root_rng);
 
@@ -231,7 +260,8 @@ impl<'a> Sim<'a> {
                     freq_cap_mhz: None,
                     current: None,
                     queued: None,
-                    arrivals: ArrivalProcess::new(rate, root_rng.fork(1000 + s.id as u64)),
+                    arrivals: ArrivalProcess::new(rate, root_rng.fork(1000 + s.id as u64))
+                        .with_phase(cfg.diurnal_phase_s),
                     rng: root_rng.fork(2000 + s.id as u64),
                     gen: 0,
                     last_advance_s: 0.0,
@@ -510,6 +540,7 @@ impl<'a> Sim<'a> {
         for pending in self.oob.due(now_s) {
             match pending.cmd {
                 OobCommand::FreqCap { target, mhz } => {
+                    self.report.cap_commands += 1;
                     for idx in 0..self.servers.len() {
                         if self.servers[idx].priority == target {
                             self.set_server_cap(idx, Some(mhz), now_s);

@@ -27,12 +27,23 @@ pub fn diurnal_multiplier(t_s: f64) -> f64 {
 pub struct ArrivalProcess {
     /// Peak arrival rate (requests/s) — the rate at diurnal multiplier 1.
     pub peak_rate: f64,
+    /// Diurnal phase offset (s): the envelope is evaluated at `t + phase`,
+    /// so a +6 h phase makes this stream peak 6 h *earlier* in sim time —
+    /// it serves a region whose afternoon arrives sooner. Used by the
+    /// fleet layer to stagger cluster peaks within a site.
+    pub phase_s: f64,
     rng: Rng,
 }
 
 impl ArrivalProcess {
     pub fn new(peak_rate: f64, rng: Rng) -> Self {
-        ArrivalProcess { peak_rate, rng }
+        ArrivalProcess { peak_rate, phase_s: 0.0, rng }
+    }
+
+    /// Set the diurnal phase offset (builder style).
+    pub fn with_phase(mut self, phase_s: f64) -> Self {
+        self.phase_s = phase_s;
+        self
     }
 
     /// Next arrival time strictly after `t_s` (thinning algorithm).
@@ -41,7 +52,7 @@ impl ArrivalProcess {
         let mut t = t_s;
         loop {
             t += self.rng.exp(lambda_max);
-            let accept = diurnal_multiplier(t);
+            let accept = diurnal_multiplier(t + self.phase_s);
             if self.rng.f64() < accept {
                 return t;
             }
@@ -93,6 +104,32 @@ mod tests {
         assert!(
             (count as f64 - expected).abs() < expected * 0.15,
             "count={count} expected={expected}"
+        );
+    }
+
+    #[test]
+    fn phase_shift_moves_the_peak() {
+        // Over 04:00-06:00 sim time (envelope ≈ 0.47) a +11 h phase sees
+        // 15:00-17:00 (≈ 0.97): the shifted stream must arrive roughly
+        // twice as fast. The window stays inside the trough/peak plateaus
+        // so the expected ratio (~2.05) clears the 1.5 bar by > 5 sigma.
+        let window = 7_200.0;
+        let count_at = |phase: f64, seed: u64| {
+            let mut ap = ArrivalProcess::new(0.1, Rng::new(seed)).with_phase(phase);
+            let start = 4.0 * 3600.0;
+            let mut t = start;
+            let mut count = 0u32;
+            while t < start + window {
+                t = ap.next_after(t);
+                count += 1;
+            }
+            count
+        };
+        let trough = count_at(0.0, 8);
+        let peak = count_at(11.0 * 3600.0, 8);
+        assert!(
+            peak as f64 > trough as f64 * 1.5,
+            "peak-phased {peak} vs trough {trough}"
         );
     }
 

