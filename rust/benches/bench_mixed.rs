@@ -1,0 +1,28 @@
+//! Mixed-row bench: event throughput of the training-job driver vs the
+//! inference-only simulator, and the colocation mix in between. The
+//! training driver schedules one event per waveform phase per *job*
+//! (not per server), so pure-training rows should push more simulated
+//! seconds per wall second than inference rows despite the synchronized
+//! per-server power refreshes.
+
+use polca::benchkit::{bench, black_box, BenchConfig};
+use polca::policy::engine::PolicyKind;
+use polca::simulation::{run, MixedRowConfig, SimConfig};
+
+fn main() {
+    let cfg = BenchConfig::slow();
+
+    for (name, frac) in [("inference", 0.0), ("half-training", 0.5), ("training", 1.0)] {
+        let mut sim_cfg = SimConfig::default();
+        sim_cfg.weeks = 1.0 / 7.0; // one simulated day
+        sim_cfg.deployed_servers = 40;
+        sim_cfg.exp.seed = 3;
+        sim_cfg.policy_kind = PolicyKind::Polca;
+        sim_cfg.mixed = Some(MixedRowConfig { training_fraction: frac, ..Default::default() });
+        let events = run(&sim_cfg).events as f64;
+        let r = bench(&format!("mixed_row_1day_40srv_{name}"), &cfg, events, || {
+            black_box(run(&sim_cfg));
+        });
+        println!("{}  [= events/s]", r.report());
+    }
+}

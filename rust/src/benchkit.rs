@@ -8,11 +8,16 @@ use std::time::{Duration, Instant};
 
 use crate::util::stats::Percentiles;
 
+/// Harness parameters for one benchmark.
 #[derive(Debug, Clone)]
 pub struct BenchConfig {
+    /// Untimed warmup budget before measurement starts.
     pub warmup: Duration,
+    /// Measurement budget (at least `min_iters` iterations run).
     pub measure: Duration,
+    /// Minimum timed iterations regardless of budget.
     pub min_iters: u32,
+    /// Hard iteration cap.
     pub max_iters: u32,
 }
 
@@ -27,8 +32,8 @@ impl Default for BenchConfig {
     }
 }
 
-/// Quick config for slow end-to-end benches.
 impl BenchConfig {
+    /// Quick config for slow end-to-end benches.
     pub fn slow() -> Self {
         BenchConfig {
             warmup: Duration::from_millis(100),
@@ -39,22 +44,30 @@ impl BenchConfig {
     }
 }
 
+/// Timing summary of one benchmark.
 #[derive(Debug, Clone)]
 pub struct BenchResult {
+    /// Benchmark name.
     pub name: String,
+    /// Timed iterations executed.
     pub iters: u32,
+    /// Mean per-iteration wall time.
     pub mean: Duration,
+    /// Median per-iteration wall time.
     pub p50: Duration,
+    /// P99 per-iteration wall time.
     pub p99: Duration,
     /// Optional items-per-iteration for throughput reporting.
     pub items_per_iter: f64,
 }
 
 impl BenchResult {
+    /// Items per second at the mean iteration time.
     pub fn throughput(&self) -> f64 {
         self.items_per_iter / self.mean.as_secs_f64()
     }
 
+    /// One-line human-readable report.
     pub fn report(&self) -> String {
         let mut s = format!(
             "{:<42} {:>10} iters  mean {:>12?}  p50 {:>12?}  p99 {:>12?}",

@@ -13,23 +13,33 @@
 use crate::power::gpu::GpuPowerCalib;
 use crate::power::training::TrainingProfile;
 
+/// Model architecture class (Fig 3 taxonomy).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum ModelArch {
+    /// Encoder-only (RoBERTa-class).
     Encoder,
+    /// Decoder-only autoregressive (GPT-class).
     Decoder,
+    /// Encoder–decoder (T5-class).
     EncoderDecoder,
+    /// Vision model (§7 / Fig 19).
     Vision,
+    /// Multi-modal model (§7 / Fig 19).
     Multimodal,
 }
 
 /// One catalog entry.
 #[derive(Debug, Clone)]
 pub struct ModelSpec {
+    /// Model name (catalog key).
     pub name: &'static str,
+    /// Architecture class.
     pub arch: ModelArch,
+    /// Parameter count, billions.
     pub params_b: f64,
     /// GPUs used for inference serving (tensor parallel degree).
     pub infer_gpus: usize,
+    /// Measured power-shape calibration (Fig 5 anchors).
     pub power: GpuPowerCalib,
     /// Fraction of prompt-phase time that is compute-bound (scales 1/f).
     pub prompt_compute_frac: f64,
@@ -270,10 +280,12 @@ pub fn catalog() -> Vec<ModelSpec> {
     ]
 }
 
+/// Look a model up by name.
 pub fn find(name: &str) -> Option<ModelSpec> {
     catalog().into_iter().find(|m| m.name == name)
 }
 
+/// The language models the paper evaluates for inference.
 pub fn inference_models() -> Vec<ModelSpec> {
     catalog()
         .into_iter()
@@ -281,6 +293,7 @@ pub fn inference_models() -> Vec<ModelSpec> {
         .collect()
 }
 
+/// The language models the paper trains (Fig 8 profiles).
 pub fn training_models() -> Vec<ModelSpec> {
     catalog()
         .into_iter()
@@ -288,6 +301,7 @@ pub fn training_models() -> Vec<ModelSpec> {
         .collect()
 }
 
+/// The §7 vision/multimodal entries (Fig 19).
 pub fn vision_models() -> Vec<ModelSpec> {
     catalog()
         .into_iter()

@@ -9,16 +9,48 @@ use crate::power::server::ServerPowerModel;
 /// Priority class of the workload a server hosts (§5.B).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum Priority {
+    /// Cappable first (Algorithm 1's T1/T2 first line of defense).
     Low,
+    /// Capped only after LP capping proves insufficient at T2.
     High,
+}
+
+/// What a server slot is running: an inference service or a slice of a
+/// synchronized training job (the §2.4/§7 mixed-row axis).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub enum JobKind {
+    /// Interactive inference serving (the paper's Table-4 services).
+    #[default]
+    Inference,
+    /// A synchronized training job: iteration-structured power with
+    /// cross-server coordination (§2.4).
+    Training,
+}
+
+impl JobKind {
+    /// The priority class this job kind is pinned to, if any. Training
+    /// jobs are always low-priority cappable (§7: capping costs them
+    /// only iteration time, never an interactive SLO), so the policy
+    /// engine may throttle them on every T1 crossing.
+    pub fn fixed_priority(self) -> Option<Priority> {
+        match self {
+            JobKind::Inference => None,
+            JobKind::Training => Some(Priority::Low),
+        }
+    }
 }
 
 /// A server slot in the row.
 #[derive(Debug, Clone)]
 pub struct Server {
+    /// Slot index within the row (stable across the run).
     pub id: usize,
+    /// Rack index ([`Row::servers_per_rack`] slots per rack).
     pub rack: usize,
+    /// Priority class the power policy caps by.
     pub priority: Priority,
+    /// What this slot runs (inference service vs training-job slice).
+    pub job: JobKind,
     /// Catalog index of the model this server is dedicated to.
     pub model_idx: usize,
     /// Workload spec index (Table 4 row).
@@ -28,8 +60,11 @@ pub struct Server {
 /// A row of racks behind one PDU breaker.
 #[derive(Debug, Clone)]
 pub struct Row {
+    /// Every deployed server slot, in id order.
     pub servers: Vec<Server>,
+    /// Rack granularity (10 DGX-class servers per rack).
     pub servers_per_rack: usize,
+    /// Shared per-server power model (one SKU per row).
     pub power_model: ServerPowerModel,
     /// Breaker budget in watts (fixed at provisioning time).
     pub budget_w: f64,
@@ -52,6 +87,7 @@ impl Row {
                 id,
                 rack: id / servers_per_rack,
                 priority: Priority::Low, // assigned later by the allocator
+                job: JobKind::Inference,
                 model_idx: 0,
                 workload_idx: 0,
             })
@@ -59,6 +95,7 @@ impl Row {
         Row { servers, servers_per_rack, power_model, budget_w, ups_deadline_s: 10.0 }
     }
 
+    /// Number of racks the deployed servers occupy.
     pub fn num_racks(&self) -> usize {
         if self.servers.is_empty() {
             0
@@ -77,12 +114,19 @@ impl Row {
         watts / self.budget_w
     }
 
+    /// Low-priority servers (the T1 capping set).
     pub fn lp_servers(&self) -> impl Iterator<Item = &Server> {
         self.servers.iter().filter(|s| s.priority == Priority::Low)
     }
 
+    /// High-priority servers (capped only above T2).
     pub fn hp_servers(&self) -> impl Iterator<Item = &Server> {
         self.servers.iter().filter(|s| s.priority == Priority::High)
+    }
+
+    /// Servers running training-job slices (the §7 colocation set).
+    pub fn training_servers(&self) -> impl Iterator<Item = &Server> {
+        self.servers.iter().filter(|s| s.job == JobKind::Training)
     }
 }
 
@@ -114,6 +158,24 @@ mod tests {
         let row = Row::provision(40, 40, m);
         assert!((row.normalized(row.budget_w) - 1.0).abs() < 1e-12);
         assert!((row.normalized(row.budget_w * 0.79) - 0.79).abs() < 1e-12);
+    }
+
+    #[test]
+    fn training_is_always_low_priority_cappable() {
+        // §7: training never rides the HP class — it is the always-
+        // throttleable ballast the mixed-row policy relies on.
+        assert_eq!(JobKind::Training.fixed_priority(), Some(Priority::Low));
+        assert_eq!(JobKind::Inference.fixed_priority(), None);
+        assert_eq!(JobKind::default(), JobKind::Inference);
+    }
+
+    #[test]
+    fn training_server_filter() {
+        let mut row = Row::provision(4, 4, ServerPowerModel::default());
+        row.servers[1].job = JobKind::Training;
+        row.servers[3].job = JobKind::Training;
+        assert_eq!(row.training_servers().count(), 2);
+        assert!(row.training_servers().all(|s| s.job == JobKind::Training));
     }
 
     #[test]

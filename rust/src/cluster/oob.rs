@@ -31,8 +31,11 @@ impl OobCommand {
 /// A command in flight, to be applied at `apply_at_s`.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct PendingCommand {
+    /// When the command entered the channel.
     pub issued_at_s: f64,
+    /// When it takes effect (issue time + path latency + jitter).
     pub apply_at_s: f64,
+    /// The command itself.
     pub cmd: OobCommand,
 }
 
@@ -53,6 +56,7 @@ pub struct OobChannel {
 }
 
 impl OobChannel {
+    /// A reliable channel with the given path latencies (Table 1).
     pub fn new(cap_latency_s: f64, brake_latency_s: f64, seed: u64) -> Self {
         OobChannel {
             cap_latency_s,
@@ -64,6 +68,7 @@ impl OobChannel {
         }
     }
 
+    /// Add command loss and latency jitter (failure-mode studies).
     pub fn with_unreliability(mut self, loss_prob: f64, jitter_frac: f64) -> Self {
         self.loss_prob = loss_prob;
         self.jitter_frac = jitter_frac;
@@ -105,6 +110,7 @@ impl OobChannel {
         })
     }
 
+    /// Commands issued but not yet applied.
     pub fn in_flight(&self) -> usize {
         self.pending.len()
     }

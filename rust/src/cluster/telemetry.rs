@@ -19,6 +19,7 @@ pub struct TelemetryBuffer {
 }
 
 impl TelemetryBuffer {
+    /// Empty buffer with the given read delay and retention horizon.
     pub fn new(delay_s: f64, retain_s: f64) -> Self {
         TelemetryBuffer { samples: VecDeque::new(), delay_s, retain_s }
     }
@@ -50,9 +51,11 @@ impl TelemetryBuffer {
         self.samples.back().copied()
     }
 
+    /// Retained sample count.
     pub fn len(&self) -> usize {
         self.samples.len()
     }
+    /// Whether no samples are retained.
     pub fn is_empty(&self) -> bool {
         self.samples.is_empty()
     }
@@ -98,7 +101,9 @@ impl TelemetryBuffer {
 /// Max power rise within a time window (normalized units).
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct SpikeStats {
+    /// The window the rise was measured over, seconds.
     pub window_s: f64,
+    /// Largest power rise observed within the window.
     pub max_rise: f64,
 }
 

@@ -13,19 +13,27 @@ use anyhow::{bail, Context};
 /// A parsed flat-ish TOML document: section -> key -> value.
 #[derive(Debug, Clone, Default, PartialEq)]
 pub struct Toml {
+    /// Section name ("" = top level) → key → value.
     pub sections: BTreeMap<String, BTreeMap<String, TomlValue>>,
 }
 
+/// One TOML value (the supported subset).
 #[derive(Debug, Clone, PartialEq)]
 pub enum TomlValue {
+    /// A quoted string.
     Str(String),
+    /// An integer.
     Int(i64),
+    /// A float.
     Float(f64),
+    /// A boolean.
     Bool(bool),
+    /// A flat array.
     Arr(Vec<TomlValue>),
 }
 
 impl TomlValue {
+    /// Numeric view (floats and integers).
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             TomlValue::Float(x) => Some(*x),
@@ -33,18 +41,21 @@ impl TomlValue {
             _ => None,
         }
     }
+    /// Integer view.
     pub fn as_i64(&self) -> Option<i64> {
         match self {
             TomlValue::Int(x) => Some(*x),
             _ => None,
         }
     }
+    /// String view.
     pub fn as_str(&self) -> Option<&str> {
         match self {
             TomlValue::Str(s) => Some(s),
             _ => None,
         }
     }
+    /// Boolean view.
     pub fn as_bool(&self) -> Option<bool> {
         match self {
             TomlValue::Bool(b) => Some(*b),
@@ -54,6 +65,7 @@ impl TomlValue {
 }
 
 impl Toml {
+    /// Parse the supported TOML subset (see module docs).
     pub fn parse(input: &str) -> anyhow::Result<Toml> {
         let mut doc = Toml::default();
         let mut section = String::new();
@@ -83,22 +95,27 @@ impl Toml {
         Ok(doc)
     }
 
+    /// Raw value at `[section] key`, if present.
     pub fn get(&self, section: &str, key: &str) -> Option<&TomlValue> {
         self.sections.get(section)?.get(key)
     }
 
+    /// Float at `[section] key`, or `default`.
     pub fn f64_or(&self, section: &str, key: &str, default: f64) -> f64 {
         self.get(section, key).and_then(|v| v.as_f64()).unwrap_or(default)
     }
 
+    /// Unsigned integer at `[section] key`, or `default`.
     pub fn usize_or(&self, section: &str, key: &str, default: usize) -> usize {
         self.get(section, key).and_then(|v| v.as_i64()).map(|x| x as usize).unwrap_or(default)
     }
 
+    /// Boolean at `[section] key`, or `default`.
     pub fn bool_or(&self, section: &str, key: &str, default: bool) -> bool {
         self.get(section, key).and_then(|v| v.as_bool()).unwrap_or(default)
     }
 
+    /// String at `[section] key`, or `default`.
     pub fn str_or<'a>(&'a self, section: &str, key: &str, default: &'a str) -> &'a str {
         self.get(section, key).and_then(|v| v.as_str()).unwrap_or(default)
     }
@@ -208,8 +225,9 @@ pub struct PolicyConfig {
     pub t1: f64,
     /// Upper threshold; caps LP harder, then HP.
     pub t2: f64,
-    /// Hysteresis: uncap when power < threshold - buffer (paper: 5%).
+    /// T1 hysteresis: uncap when power < T1 - buffer (paper: 5%).
     pub t1_buffer: f64,
+    /// T2 hysteresis: uncap HP when power < T2 - buffer.
     pub t2_buffer: f64,
     /// LP cap at T1 (MHz): A100 base frequency.
     pub lp_freq_t1_mhz: f64,
@@ -242,10 +260,15 @@ impl Default for PolicyConfig {
 /// SLOs — paper Table 5.
 #[derive(Debug, Clone, PartialEq)]
 pub struct SloConfig {
+    /// Max HP P50 latency impact (paper: 1%).
     pub hp_p50_impact: f64,
+    /// Max HP P99 latency impact (paper: 5%).
     pub hp_p99_impact: f64,
+    /// Max LP P50 latency impact (paper: 5%).
     pub lp_p50_impact: f64,
+    /// Max LP P99 latency impact (paper: 50%).
     pub lp_p99_impact: f64,
+    /// Powerbrake engagements allowed (paper: zero).
     pub max_powerbrakes: u64,
 }
 
@@ -264,9 +287,13 @@ impl Default for SloConfig {
 /// Full experiment configuration.
 #[derive(Debug, Clone, Default)]
 pub struct ExperimentConfig {
+    /// Row topology and control-path latencies (Table 1).
     pub row: RowConfig,
+    /// Policy thresholds and cap setpoints (Table 3).
     pub policy: PolicyConfig,
+    /// Latency/brake SLOs (Table 5).
     pub slo: SloConfig,
+    /// Root seed for the run's random streams.
     pub seed: u64,
 }
 
@@ -310,6 +337,7 @@ impl ExperimentConfig {
         }
     }
 
+    /// Load a TOML config file and overlay it onto the defaults.
     pub fn load(path: &std::path::Path) -> anyhow::Result<ExperimentConfig> {
         let text = std::fs::read_to_string(path)
             .with_context(|| format!("reading config {}", path.display()))?;

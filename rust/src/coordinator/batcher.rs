@@ -26,17 +26,24 @@ use super::kv::SlotManager;
 /// A generation request.
 #[derive(Debug, Clone)]
 pub struct Request {
+    /// Caller-chosen request id (echoed on the completion).
     pub id: u64,
+    /// Prompt token ids.
     pub prompt: Vec<i32>,
+    /// Decode budget.
     pub max_new_tokens: usize,
+    /// Priority class (drives modeled capping impact).
     pub priority: Priority,
 }
 
 /// A finished request.
 #[derive(Debug, Clone)]
 pub struct Completion {
+    /// The request's id.
     pub id: u64,
+    /// Generated token ids.
     pub tokens: Vec<i32>,
+    /// The request's priority class.
     pub priority: Priority,
     /// Wall seconds spent queued before prefill started.
     pub queue_s: f64,
@@ -58,6 +65,7 @@ pub enum PhaseRecord {
 /// Timeline of executed phases (monotone in start time).
 #[derive(Debug, Clone, Default)]
 pub struct PhaseTimeline {
+    /// Executed phases in start-time order.
     pub records: Vec<PhaseRecord>,
 }
 
@@ -75,20 +83,25 @@ struct Active {
 
 /// The per-node coordinator: queue → slots → engine.
 pub struct Coordinator {
+    /// The loaded model (compiled executables + weights).
     pub engine: Engine,
     slots: SlotManager,
     queue: VecDeque<(Request, f64)>,
     active: Vec<Option<Active>>,
     kv: Option<KvState>,
     clock: std::time::Instant,
+    /// Executed-phase record for power modeling.
     pub timeline: PhaseTimeline,
+    /// Finished requests, in completion order.
     pub completions: Vec<Completion>,
+    /// Requests rejected at submit (full queue / oversized prompt).
     pub rejected: u64,
     /// Maximum queue length before rejecting (load-shedding).
     pub max_queue: usize,
 }
 
 impl Coordinator {
+    /// Coordinator over a loaded engine, with an empty KV cache.
     pub fn new(engine: Engine) -> anyhow::Result<Self> {
         let b = engine.manifest.model.batch_slots;
         let kv = engine.empty_kv()?;
@@ -124,14 +137,17 @@ impl Coordinator {
         true
     }
 
+    /// Requests waiting in the queue.
     pub fn pending(&self) -> usize {
         self.queue.len()
     }
 
+    /// Requests currently holding a batch slot.
     pub fn active_count(&self) -> usize {
         self.slots.occupied()
     }
 
+    /// Whether any request is queued or in flight.
     pub fn has_work(&self) -> bool {
         !self.queue.is_empty() || self.slots.occupied() > 0
     }

@@ -11,18 +11,22 @@ pub struct SlotManager {
 }
 
 impl SlotManager {
+    /// Allocator over `total` slots, all free.
     pub fn new(total: usize) -> Self {
         SlotManager { free: (0..total).rev().collect(), total, in_use: vec![false; total] }
     }
 
+    /// Total slot count.
     pub fn total(&self) -> usize {
         self.total
     }
 
+    /// Free slots remaining.
     pub fn available(&self) -> usize {
         self.free.len()
     }
 
+    /// Slots currently claimed.
     pub fn occupied(&self) -> usize {
         self.total - self.free.len()
     }
@@ -44,6 +48,7 @@ impl SlotManager {
         self.free.push(slot);
     }
 
+    /// Whether `slot` is currently claimed.
     pub fn is_in_use(&self, slot: usize) -> bool {
         self.in_use[slot]
     }

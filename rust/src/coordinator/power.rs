@@ -18,6 +18,7 @@ use super::batcher::{PhaseRecord, PhaseTimeline};
 /// Sampled modeled power for a node.
 #[derive(Debug, Clone)]
 pub struct NodePowerTrace {
+    /// Sampling period, seconds.
     pub dt_s: f64,
     /// Fraction of the node's provisioned power per sample.
     pub samples: Vec<f64>,
@@ -70,10 +71,12 @@ pub struct ServingPolicyReport {
     pub row_power: Vec<f64>,
     /// Cap state over time: (t_s, lp_cap_mhz, hp_cap_mhz, braked).
     pub cap_timeline: Vec<(f64, Option<f64>, Option<f64>, bool)>,
+    /// Powerbrake engagements over the replayed trace.
     pub brake_events: u64,
-    /// Modeled LP/HP latency stretch if the caps had applied to the
+    /// Modeled LP latency stretch if the caps had applied to the
     /// executed phases (aggregate factor over the run).
     pub lp_modeled_stretch: f64,
+    /// Modeled HP latency stretch (aggregate factor over the run).
     pub hp_modeled_stretch: f64,
 }
 

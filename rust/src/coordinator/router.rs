@@ -28,15 +28,19 @@ pub enum RoutePolicy {
 /// The router: stateless except for the round-robin cursor.
 #[derive(Debug, Clone)]
 pub struct Router {
+    /// The active routing policy.
     pub policy: RoutePolicy,
     cursor: usize,
-    /// Routed-request counters per priority (observability).
+    /// High-priority requests routed (observability).
     pub routed_hp: u64,
+    /// Low-priority requests routed.
     pub routed_lp: u64,
+    /// Requests no replica would accept.
     pub unroutable: u64,
 }
 
 impl Router {
+    /// Router with zeroed counters.
     pub fn new(policy: RoutePolicy) -> Self {
         Router { policy, cursor: 0, routed_hp: 0, routed_lp: 0, unroutable: 0 }
     }

@@ -51,10 +51,7 @@ pub fn table2(depth: Depth, seed: u64) -> FigureOutput {
             .map(|&j| {
                 // Training waveform drives the GPUs; the host tracks GPU
                 // activity (same non-GPU model as the server power model).
-                let gpu = tm.power_frac_at(t + j, CapMode::None);
-                let activity = ((gpu - tm.calib.idle_frac) / (1.0 - tm.calib.idle_frac))
-                    .clamp(0.0, 1.0);
-                gpu * srv.gpu_tdp_w() + srv.non_gpu_at(activity)
+                srv.training_power_w(tm.power_frac_at(t + j, CapMode::None))
             })
             .sum();
         series.push(total / budget);

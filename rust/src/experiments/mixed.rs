@@ -1,0 +1,266 @@
+//! Beyond-paper experiment: the §2.4 training-vs-inference headroom
+//! contrast driven end-to-end through the discrete-event simulator.
+//!
+//! The paper's headline asymmetry — inference rows leave capping
+//! headroom (79% mean peak utilization, Table 2) while training rows
+//! synchronize row-level swings and idle near TDP (max 2 s swing ≈
+//! 37.5% of provisioned) — is reproduced here as a *sweep over the
+//! training fraction* of one row: 0% (the paper's inference row),
+//! 100% (a training row), and the colocation mixes §7 proposes in
+//! between. Headroom must interpolate monotonically between the two
+//! regimes for mixing to be a usable planning knob.
+
+use crate::policy::engine::PolicyKind;
+use crate::simulation::{run, MixedRowConfig, SimConfig};
+use crate::util::csv::Csv;
+use crate::util::table::{f, pct, Table};
+
+use super::{Depth, FigureOutput};
+
+/// One row of the sweep: the observables at a single training fraction.
+#[derive(Debug, Clone)]
+pub struct MixPoint {
+    /// Fraction of deployed servers running training.
+    pub training_fraction: f64,
+    /// Peak normalized row power.
+    pub power_peak: f64,
+    /// Mean normalized row power.
+    pub power_mean: f64,
+    /// Max 2 s power rise (the §2.4 swing observable).
+    pub spike_2s: f64,
+    /// Oversubscription headroom: 1 − peak.
+    pub headroom: f64,
+    /// Training iterations completed.
+    pub train_iters: u64,
+    /// Iteration-time inflation vs nominal.
+    pub train_inflation: f64,
+    /// Inference requests completed (HP + LP).
+    pub completed: u64,
+}
+
+/// Row parameters shared by `polca figure mixed-row`, `polca mixed
+/// sweep`, and `polca mixed run` — [`SweepConfig::sim_config`] is the
+/// single place the oversubscription/mixed wiring happens, so the
+/// modes cannot diverge and no CLI knob is silently ignored.
+#[derive(Debug, Clone)]
+pub struct SweepConfig {
+    /// Power-management policy driving the row.
+    pub policy: PolicyKind,
+    /// Simulated horizon, weeks.
+    pub weeks: f64,
+    /// Seed (shared across fractions: one workload realization).
+    pub seed: u64,
+    /// Baseline (budget) server count of the row.
+    pub servers: usize,
+    /// Added-server fraction (oversubscription).
+    pub added: f64,
+    /// Template mixed config; `training_fraction` is overwritten per
+    /// sweep point, the job structure (size/stagger/profile) is kept.
+    pub mixed: MixedRowConfig,
+}
+
+impl Default for SweepConfig {
+    fn default() -> Self {
+        SweepConfig {
+            policy: PolicyKind::NoCap,
+            weeks: 0.3,
+            seed: 1,
+            servers: 40,
+            added: 0.0,
+            mixed: MixedRowConfig::default(),
+        }
+    }
+}
+
+impl SweepConfig {
+    /// The simulation config for one training fraction — shared by the
+    /// sweep and by `polca mixed run`, so rounding/oversubscription
+    /// semantics live in exactly one place.
+    pub fn sim_config(&self, training_fraction: f64) -> SimConfig {
+        let mut cfg = SimConfig::default();
+        cfg.policy_kind = self.policy;
+        cfg.weeks = self.weeks;
+        cfg.exp.seed = self.seed;
+        cfg.exp.row.num_servers = self.servers;
+        cfg.deployed_servers = (self.servers as f64 * (1.0 + self.added)).round() as usize;
+        let mut mixed = self.mixed.clone();
+        mixed.training_fraction = training_fraction;
+        cfg.mixed = Some(mixed);
+        cfg
+    }
+}
+
+/// Sweep the training fraction of one row. All fractions share the
+/// same inference workload realization (training servers are carved
+/// off the tail), so the points are directly comparable.
+pub fn sweep_training_fractions(fractions: &[f64], sc: &SweepConfig) -> Vec<MixPoint> {
+    fractions
+        .iter()
+        .map(|&frac| {
+            let report = run(&sc.sim_config(frac));
+            MixPoint {
+                training_fraction: frac,
+                power_peak: report.power_peak,
+                power_mean: report.power_mean,
+                spike_2s: report.spike_2s,
+                headroom: 1.0 - report.power_peak,
+                train_iters: report.train.iters,
+                train_inflation: report.train.inflation(),
+                completed: report.hp.completed + report.lp.completed,
+            }
+        })
+        .collect()
+}
+
+/// The §2.4 bound the pure-training endpoint is checked against: the
+/// paper's "max 2 s swing is 37.5% of provisioned power" — a training
+/// row's only short-horizon slack, hence the ceiling on any headroom
+/// an oversubscription planner may claim from it.
+pub const TRAINING_HEADROOM_BOUND: f64 = 0.375;
+
+/// The §2.4-contrast verdict over a sweep — one definition shared by
+/// `polca figure mixed-row` and `polca mixed sweep`, so both surfaces
+/// always agree on the bounds and the monotonicity tolerance.
+#[derive(Debug, Clone, Copy)]
+pub struct ContrastVerdict {
+    /// Headroom of the highest-training-fraction point.
+    pub train_headroom: f64,
+    /// Row-level 2 s swing of that point — the §2.4 observable itself
+    /// (the paper reports ≈37.5% of provisioned for training rows).
+    pub train_swing_2s: f64,
+    /// Peak of the pure-inference point.
+    pub inference_peak: f64,
+    /// Headroom of the pure-inference point.
+    pub inference_headroom: f64,
+    /// Whether the training endpoint's headroom obeys
+    /// [`TRAINING_HEADROOM_BOUND`] (the ISSUE acceptance criterion —
+    /// a loose bound, since training rows idle near TDP).
+    pub bound_ok: bool,
+    /// Whether the training endpoint's 2 s swing is of the paper's
+    /// order (coordinated troughs actually visible at row level) —
+    /// the check that would catch a de-synchronized-swing regression
+    /// the headroom bound cannot. Only meaningful on uncapped sweeps;
+    /// caps legitimately shave the swing.
+    pub swing_ok: bool,
+    /// Whether headroom decreases monotonically across the sweep
+    /// (within a 1-point sampling tolerance).
+    pub monotone: bool,
+}
+
+/// Evaluate the contrast checks over a fraction-ascending sweep.
+pub fn contrast_verdict(points: &[MixPoint]) -> ContrastVerdict {
+    let first = points.first().expect("non-empty sweep");
+    let last = points.last().expect("non-empty sweep");
+    ContrastVerdict {
+        train_headroom: last.headroom,
+        train_swing_2s: last.spike_2s,
+        inference_peak: first.power_peak,
+        inference_headroom: first.headroom,
+        bound_ok: last.headroom <= TRAINING_HEADROOM_BOUND,
+        // Same order as the paper's 37.5%: well above inference's ~9%
+        // 2 s spikes, below the full idle-to-peak range.
+        swing_ok: (0.25..=0.55).contains(&last.spike_2s),
+        monotone: points.windows(2).all(|w| w[1].headroom <= w[0].headroom + 0.01),
+    }
+}
+
+/// Rendered sweep table — shared by the experiment and the CLI.
+pub fn sweep_table(points: &[MixPoint]) -> Table {
+    let mut t = Table::new(
+        "Training-fraction sweep",
+        &["training", "peak", "mean", "2s swing", "headroom", "iters", "inflation", "done reqs"],
+    );
+    for p in points {
+        t.row(vec![
+            pct(p.training_fraction, 0),
+            pct(p.power_peak, 1),
+            pct(p.power_mean, 1),
+            pct(p.spike_2s, 1),
+            pct(p.headroom, 1),
+            p.train_iters.to_string(),
+            pct(p.train_inflation, 1),
+            p.completed.to_string(),
+        ]);
+    }
+    t
+}
+
+/// `mixed-row`: training-fraction sweep of one 40-server row (NoCap, so
+/// the raw power envelope is observed, as in Table 2's measurement).
+pub fn mixed_row(depth: Depth, seed: u64) -> FigureOutput {
+    let mut out = FigureOutput::new(
+        "mixed-row",
+        "Mixed-workload row: training-vs-inference headroom contrast (§2.4)",
+    );
+    let fractions = [0.0, 0.25, 0.50, 0.75, 1.0];
+    let sc = SweepConfig { weeks: depth.weeks(1.0), seed, ..Default::default() };
+    let points = sweep_training_fractions(&fractions, &sc);
+
+    let mut csv = Csv::new(&[
+        "training_fraction", "power_peak", "power_mean", "spike_2s", "headroom",
+        "train_iters", "train_inflation", "completed",
+    ]);
+    for p in &points {
+        csv.row_strs(&[
+            f(p.training_fraction, 2),
+            f(p.power_peak, 4),
+            f(p.power_mean, 4),
+            f(p.spike_2s, 4),
+            f(p.headroom, 4),
+            p.train_iters.to_string(),
+            f(p.train_inflation, 4),
+            p.completed.to_string(),
+        ]);
+    }
+    out.tables.push(sweep_table(&points));
+    out.csvs.push(("mixed_row_sweep.csv".into(), csv));
+
+    let v = contrast_verdict(&points);
+    out.notes.push(format!(
+        "pure-training headroom {:.1}% (bound: <= {:.1}% of provisioned, §2.4): {}; \
+         pure-inference peak {:.1}% (paper: 79% mean peak); \
+         headroom interpolates monotonically: {}",
+        v.train_headroom * 100.0,
+        TRAINING_HEADROOM_BOUND * 100.0,
+        if v.bound_ok { "ok" } else { "VIOLATED" },
+        v.inference_peak * 100.0,
+        if v.monotone { "yes" } else { "NO" }
+    ));
+    out.notes.push(format!(
+        "pure-training 2 s row swing {:.1}% — the §2.4 observable (paper: ≈37.5%; one \
+         synchronized job, troughs compose at row level): {}",
+        v.train_swing_2s * 100.0,
+        if v.swing_ok { "in band" } else { "OUT OF BAND" }
+    ));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sweep_reproduces_the_headroom_contrast() {
+        // The acceptance shape of the PR: pure training bounded by the
+        // §2.4 swing bound, pure inference at the PR-1 headroom, and a
+        // monotone interpolation between them.
+        let sc = SweepConfig { weeks: 0.05, seed: 3, ..Default::default() };
+        let points = sweep_training_fractions(&[0.0, 0.5, 1.0], &sc);
+        let v = contrast_verdict(&points);
+        assert!(v.bound_ok, "training headroom {} above the §2.4 bound", v.train_headroom);
+        assert!(
+            v.swing_ok,
+            "pure-training 2 s swing {} must be of the paper's ~37.5% order \
+             (a de-synchronized waveform would flatten it)",
+            v.train_swing_2s
+        );
+        assert!(
+            v.inference_headroom > v.train_headroom + 0.05,
+            "contrast must be visible: {v:?}"
+        );
+        assert!(v.monotone, "{points:?}");
+        assert_eq!(points[0].train_iters, 0);
+        assert!(points[2].train_iters > 0);
+        assert_eq!(points[2].completed, 0);
+    }
+}

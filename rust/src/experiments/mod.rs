@@ -6,6 +6,7 @@
 pub mod characterization;
 pub mod evaluation;
 pub mod fleet;
+pub mod mixed;
 
 use std::path::Path;
 
@@ -15,18 +16,25 @@ use crate::util::table::Table;
 /// Output of one experiment generator.
 #[derive(Debug, Clone, Default)]
 pub struct FigureOutput {
+    /// Experiment id (the `polca figure` key).
     pub id: String,
+    /// Human-readable title.
     pub title: String,
+    /// Paper-style tables to print.
     pub tables: Vec<Table>,
+    /// CSV artifacts: (file name, contents).
     pub csvs: Vec<(String, Csv)>,
+    /// Free-form commentary lines (paper-value comparisons etc.).
     pub notes: Vec<String>,
 }
 
 impl FigureOutput {
+    /// Empty output with an id and title.
     pub fn new(id: &str, title: &str) -> Self {
         FigureOutput { id: id.into(), title: title.into(), ..Default::default() }
     }
 
+    /// Print tables and notes to stdout.
     pub fn print(&self) {
         println!("=== {} — {} ===", self.id, self.title);
         for t in &self.tables {
@@ -37,6 +45,7 @@ impl FigureOutput {
         }
     }
 
+    /// Write every CSV artifact under `out_dir`.
     pub fn write(&self, out_dir: &Path) -> anyhow::Result<()> {
         std::fs::create_dir_all(out_dir)?;
         for (name, csv) in &self.csvs {
@@ -50,11 +59,14 @@ impl FigureOutput {
 /// `Full` uses the paper's durations (1-week tuning, 5-week evaluation).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Depth {
+    /// Shortened horizons for smoke runs.
     Quick,
+    /// The paper's durations.
     Full,
 }
 
 impl Depth {
+    /// The simulated horizon to use given the paper's full duration.
     pub fn weeks(&self, full: f64) -> f64 {
         match self {
             Depth::Quick => (full * 0.15).max(0.1),
@@ -68,7 +80,7 @@ pub fn all_ids() -> Vec<&'static str> {
     vec![
         "table1", "fig2", "fig4", "fig5", "fig6", "fig7", "fig8", "fig9", "fig11", "table2",
         "table3", "table4", "table5", "fig13", "fig14", "fig15a", "fig15b", "fig16", "fig17",
-        "fig18", "fig19", "site-headroom",
+        "fig18", "fig19", "site-headroom", "mixed-row",
     ]
 }
 
@@ -99,6 +111,7 @@ pub fn run_experiment(id: &str, depth: Depth, seed: u64) -> anyhow::Result<Figur
         "fig17" => ev::fig17(depth, seed),
         "fig18" => ev::fig18(depth, seed),
         "site-headroom" => fleet::site_headroom(depth, seed),
+        "mixed-row" => mixed::mixed_row(depth, seed),
         other => anyhow::bail!("unknown experiment '{other}' (see `polca figure list`)"),
     })
 }
@@ -110,7 +123,7 @@ mod tests {
     #[test]
     fn registry_is_complete_and_unique() {
         let ids = all_ids();
-        assert_eq!(ids.len(), 22);
+        assert_eq!(ids.len(), 23);
         let mut dedup = ids.clone();
         dedup.sort();
         dedup.dedup();

@@ -18,7 +18,18 @@
 //!   servers under the substation budget, reporting headroom, cap-event
 //!   rates, and SLO impact via [`crate::metrics::ImpactSummary`].
 //!
-//! CLI: `polca fleet [plan|sweep|trace] --clusters N --policy polca`.
+//! Mixed workloads thread through every layer: a cluster can colocate a
+//! training fraction ([`site::ClusterSpec::training_fraction`],
+//! [`site::SiteSpec::with_training`]); the SKU's calibration reaches
+//! the training waveform through the cluster's server model (the
+//! simulator binds the waveform to `server_model.calib` —
+//! [`sku::SkuSpec::training_model`] is the standalone form of that same
+//! binding for offline analysis); and the planner answers "how many
+//! servers fit if X% of the row is training?" via
+//! [`planner::plan_site_with_training`].
+//!
+//! CLI: `polca fleet [plan|sweep|trace] --clusters N --policy polca
+//! [--training FRAC]`.
 
 pub mod parallel;
 pub mod planner;
@@ -26,6 +37,6 @@ pub mod site;
 pub mod sku;
 
 pub use parallel::{run_site, ClusterOutcome, SiteOutcome, SiteRunConfig};
-pub use planner::{plan_all, plan_site, PlannerConfig, PolicyPlan};
+pub use planner::{plan_all, plan_site, plan_site_with_training, PlannerConfig, PolicyPlan};
 pub use site::{compose, ClusterSpec, Feed, SiteSpec, SiteTrace};
 pub use sku::SkuSpec;

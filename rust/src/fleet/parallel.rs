@@ -22,7 +22,9 @@ use super::site::{compose, SiteSpec, SiteTrace};
 /// How to execute one site evaluation.
 #[derive(Debug, Clone, Copy)]
 pub struct SiteRunConfig {
+    /// Simulated horizon in weeks.
     pub weeks: f64,
+    /// Site seed; per-cluster seeds derive via [`cluster_seeds`].
     pub seed: u64,
     /// Power-series sampling period for trace composition, seconds.
     pub sample_s: f64,
@@ -39,20 +41,28 @@ impl Default for SiteRunConfig {
 /// One cluster's result within a site run.
 #[derive(Debug, Clone)]
 pub struct ClusterOutcome {
+    /// Cluster name (from its [`crate::fleet::site::ClusterSpec`]).
     pub name: String,
+    /// The derived seed this cluster ran with.
     pub seed: u64,
+    /// Breaker budget, watts.
     pub budget_w: f64,
+    /// The cluster simulation's full report.
     pub report: RunReport,
+    /// Latency/brake impact vs the cluster's unthrottled baseline.
     pub impact: ImpactSummary,
 }
 
 /// A full site evaluation: per-cluster outcomes + the composed trace.
 #[derive(Debug, Clone)]
 pub struct SiteOutcome {
+    /// Per-cluster outcomes, in site order.
     pub clusters: Vec<ClusterOutcome>,
+    /// The composed site power trace.
     pub trace: SiteTrace,
     /// Peak site draw seen at the substation (W), after UPS losses.
     pub substation_peak_w: f64,
+    /// Substation budget (W).
     pub substation_budget_w: f64,
     /// Per feed: (name, peak draw W, capacity W).
     pub feed_peaks_w: Vec<(String, f64, f64)>,
@@ -75,18 +85,22 @@ impl SiteOutcome {
         self.within_power_budget() && self.meets_slos(slo)
     }
 
+    /// Brake engagements summed across clusters.
     pub fn total_brakes(&self) -> u64 {
         self.clusters.iter().map(|c| c.report.brake_events).sum()
     }
 
+    /// Slow-path cap engagements summed across clusters.
     pub fn total_cap_commands(&self) -> u64 {
         self.clusters.iter().map(|c| c.report.cap_commands).sum()
     }
 
+    /// Worst per-cluster HP P99 latency impact.
     pub fn worst_hp_p99(&self) -> f64 {
         self.clusters.iter().map(|c| c.impact.hp_p99).fold(0.0, f64::max)
     }
 
+    /// Worst per-cluster LP P99 latency impact.
     pub fn worst_lp_p99(&self) -> f64 {
         self.clusters.iter().map(|c| c.impact.lp_p99).fold(0.0, f64::max)
     }

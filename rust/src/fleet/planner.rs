@@ -32,14 +32,19 @@ use super::site::SiteSpec;
 /// Planner search parameters.
 #[derive(Debug, Clone)]
 pub struct PlannerConfig {
+    /// Simulated horizon per probe, weeks.
     pub weeks: f64,
+    /// Site seed (per-cluster seeds derive from it).
     pub seed: u64,
+    /// Power-series sampling period for trace composition, seconds.
     pub sample_s: f64,
+    /// Fan clusters out on scoped threads.
     pub parallel: bool,
     /// Search ceiling for the added fraction, in percent.
     pub max_added_pct: u32,
     /// Search resolution, in percentage points (≥ 1).
     pub step_pct: u32,
+    /// SLOs each probe must hold to count as deployable.
     pub slo: SloConfig,
 }
 
@@ -60,21 +65,30 @@ impl Default for PlannerConfig {
 /// The planner's answer for one policy.
 #[derive(Debug, Clone)]
 pub struct PolicyPlan {
+    /// The policy this plan was searched under.
     pub policy: PolicyKind,
     /// Largest added fraction (percent) found deployable; 0 with
     /// `feasible == false` means even the baseline failed.
     pub added_pct: u32,
+    /// Whether any probed point was deployable at all.
     pub feasible: bool,
+    /// Provisioned server count of the site.
     pub baseline_servers: usize,
+    /// Deployed servers at the chosen point.
     pub deployable_servers: usize,
     /// Site peak at the substation at the chosen point (W).
     pub site_peak_w: f64,
+    /// Substation budget (W).
     pub substation_budget_w: f64,
     /// Substation headroom remaining at the chosen point.
     pub headroom_frac: f64,
+    /// Brake engagements across the site at the chosen point.
     pub brake_events: u64,
+    /// Slow-path cap engagements per simulated day at the chosen point.
     pub cap_events_per_day: f64,
+    /// Worst per-cluster HP P99 latency impact at the chosen point.
     pub worst_hp_p99: f64,
+    /// Worst per-cluster LP P99 latency impact at the chosen point.
     pub worst_lp_p99: f64,
     /// The full evaluation at the chosen point.
     pub outcome: SiteOutcome,
@@ -155,6 +169,22 @@ pub fn plan_all(site: &SiteSpec, pc: &PlannerConfig) -> Vec<PolicyPlan> {
     PolicyKind::all().iter().map(|&p| plan_site(site, p, pc)).collect()
 }
 
+/// Plan a site where every cluster colocates `training_fraction` of its
+/// servers as synchronized training jobs — the capacity-planning form
+/// of "how many servers fit if X% of the row is training?" (§7).
+/// Training rows idle near TDP with coordinated swings (§2.4), so
+/// deployable oversubscription shrinks as the fraction rises; the
+/// binary search itself is unchanged because training only *raises*
+/// load, preserving the feasibility monotonicity the search relies on.
+pub fn plan_site_with_training(
+    site: &SiteSpec,
+    training_fraction: f64,
+    policy: PolicyKind,
+    pc: &PlannerConfig,
+) -> PolicyPlan {
+    plan_site(&site.with_training(training_fraction), policy, pc)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -199,6 +229,28 @@ mod tests {
         if plan.feasible {
             assert!(plan.outcome.feasible(&pc.slo));
             assert!(plan.headroom_frac >= 0.0, "headroom {}", plan.headroom_frac);
+        }
+    }
+
+    #[test]
+    fn training_rows_shrink_deployable_capacity() {
+        // The §7 planning question: a site that is part training cannot
+        // oversubscribe as far as a pure-inference site, because
+        // training rows idle near TDP. Compare the planner's answers.
+        let site = tiny_site();
+        let pc = tiny_pc();
+        let inference = plan_site(&site, PolicyKind::Polca, &pc);
+        let mixed = plan_site_with_training(&site, 1.0, PolicyKind::Polca, &pc);
+        assert!(
+            mixed.added_pct <= inference.added_pct,
+            "pure training ({}) must not out-deploy pure inference ({})",
+            mixed.added_pct,
+            inference.added_pct
+        );
+        if mixed.feasible {
+            // The chosen point still reports a consistent evaluation.
+            assert!(mixed.outcome.feasible(&pc.slo));
+            assert!(mixed.outcome.clusters[0].report.train.iters > 0);
         }
     }
 

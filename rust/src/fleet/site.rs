@@ -30,12 +30,18 @@ use super::sku::{self, SkuSpec};
 /// One cluster (a paper "row"): a breaker-budgeted pool of one SKU.
 #[derive(Debug, Clone)]
 pub struct ClusterSpec {
+    /// Cluster name (for tables and traces).
     pub name: String,
+    /// Server SKU every slot in this cluster runs.
     pub sku: SkuSpec,
     /// Servers the breaker budget was provisioned for.
     pub baseline_servers: usize,
     /// Oversubscription: deployed = baseline × (1 + added_frac).
     pub added_frac: f64,
+    /// Fraction of deployed servers running synchronized training jobs
+    /// (§7 colocation; 0.0 = the paper's inference-only row). Flows
+    /// into [`crate::simulation::MixedRowConfig`] per cluster.
+    pub training_fraction: f64,
     /// Diurnal phase offset of this cluster's load vs site time, seconds
     /// (e.g. a cluster serving a region 6 h east sees its afternoon peak
     /// 6 h earlier). Applied to the cluster's arrival-process clock.
@@ -50,6 +56,8 @@ pub struct ClusterSpec {
 }
 
 impl ClusterSpec {
+    /// A cluster of `baseline_servers` slots of `sku`, inference-only,
+    /// with the row-size-appropriate power calibration.
     pub fn new(name: &str, sku: SkuSpec, baseline_servers: usize) -> ClusterSpec {
         let power_scale = if baseline_servers >= 40 {
             DEFAULT_POWER_SCALE
@@ -63,6 +71,7 @@ impl ClusterSpec {
             sku,
             baseline_servers,
             added_frac: 0.0,
+            training_fraction: 0.0,
             phase_offset_s: 0.0,
             lp_fraction_override: None,
             power_scale,
@@ -103,6 +112,14 @@ impl ClusterSpec {
         cfg.server_model = Some(self.sku.server_model(base));
         cfg.perf_mult = self.sku.perf_mult;
         cfg.diurnal_phase_s = self.phase_offset_s;
+        // Mixed rows: keep `None` at zero training so the inference-only
+        // fast path stays literally the paper's configuration.
+        if self.training_fraction > 0.0 {
+            cfg.mixed = Some(crate::simulation::MixedRowConfig {
+                training_fraction: self.training_fraction,
+                ..Default::default()
+            });
+        }
         self.sku.scale_policy(&mut cfg.exp.policy);
         cfg
     }
@@ -111,17 +128,22 @@ impl ClusterSpec {
 /// A feed: a shared distribution branch carrying a subset of clusters.
 #[derive(Debug, Clone)]
 pub struct Feed {
+    /// Feed name (for budget-violation reporting).
     pub name: String,
     /// Indices into `SiteSpec::clusters`.
     pub clusters: Vec<usize>,
+    /// Branch capacity in watts.
     pub capacity_w: f64,
 }
 
 /// A site: clusters → feeds → UPS → substation.
 #[derive(Debug, Clone)]
 pub struct SiteSpec {
+    /// Site name.
     pub name: String,
+    /// The clusters sharing this site's infrastructure.
     pub clusters: Vec<ClusterSpec>,
+    /// Distribution branches (each cluster on exactly one feed).
     pub feeds: Vec<Feed>,
     /// UPS/distribution efficiency: substation draw = cluster sum / eff.
     pub ups_efficiency: f64,
@@ -135,10 +157,12 @@ impl SiteSpec {
         self.clusters.iter().map(|c| c.budget_w()).sum()
     }
 
+    /// Total provisioned server count across clusters.
     pub fn baseline_servers(&self) -> usize {
         self.clusters.iter().map(|c| c.baseline_servers).sum()
     }
 
+    /// Total deployed server count at current oversubscription levels.
     pub fn deployed_servers(&self) -> usize {
         self.clusters.iter().map(|c| c.deployed()).sum()
     }
@@ -160,6 +184,19 @@ impl SiteSpec {
         let mut s = self.clone();
         for c in &mut s.clusters {
             c.added_frac = added_frac;
+        }
+        s
+    }
+
+    /// A copy of the site with every cluster colocating the given
+    /// fraction of its servers as synchronized training jobs — the
+    /// knob behind "how many servers fit if X% of the row is training?"
+    /// (plan the returned site, e.g. via
+    /// [`crate::fleet::planner::plan_site`]).
+    pub fn with_training(&self, training_fraction: f64) -> SiteSpec {
+        let mut s = self.clone();
+        for c in &mut s.clusters {
+            c.training_fraction = training_fraction.clamp(0.0, 1.0);
         }
         s
     }
@@ -203,6 +240,7 @@ impl SiteSpec {
 /// A composed site power trace, aligned to site time.
 #[derive(Debug, Clone)]
 pub struct SiteTrace {
+    /// Sampling period, seconds.
     pub period_s: f64,
     /// Per-cluster power in watts per sample (offset-aligned).
     pub cluster_w: Vec<Vec<f64>>,
@@ -211,10 +249,12 @@ pub struct SiteTrace {
 }
 
 impl SiteTrace {
+    /// Peak site draw over the trace, watts.
     pub fn peak_w(&self) -> f64 {
         self.site_w.iter().cloned().fold(0.0, f64::max)
     }
 
+    /// Mean site draw over the trace, watts.
     pub fn mean_w(&self) -> f64 {
         if self.site_w.is_empty() {
             return 0.0;
@@ -352,6 +392,21 @@ mod tests {
         assert_eq!(c.deployed(), 52);
         // 40 DGX-A100 ≈ 40 × 6.5 kW
         assert!((250_000.0..270_000.0).contains(&c.budget_w()), "{}", c.budget_w());
+    }
+
+    #[test]
+    fn with_training_flows_into_sim_config() {
+        use crate::policy::engine::PolicyKind;
+        let site = SiteSpec::demo(2).with_training(0.25);
+        assert!(site.clusters.iter().all(|c| c.training_fraction == 0.25));
+        let cfg = site.clusters[0].sim_config(PolicyKind::Polca, 0.01, 1, 60.0);
+        let mixed = cfg.mixed.expect("training fraction must produce a mixed config");
+        assert_eq!(mixed.training_fraction, 0.25);
+        // Zero training keeps the inference-only fast path (mixed: None).
+        let plain = SiteSpec::demo(2).clusters[0].sim_config(PolicyKind::Polca, 0.01, 1, 60.0);
+        assert!(plain.mixed.is_none());
+        // The knob clamps to a sane fraction.
+        assert_eq!(site.with_training(1.7).clusters[0].training_fraction, 1.0);
     }
 
     #[test]

@@ -19,6 +19,7 @@
 use crate::config::PolicyConfig;
 use crate::power::gpu::GpuPowerCalib;
 use crate::power::server::ServerPowerModel;
+use crate::power::training::{TrainingPowerModel, TrainingProfile};
 
 /// The A100 max SM clock every Table-3 setpoint is expressed against.
 pub const A100_MAX_FREQ_MHZ: f64 = 1410.0;
@@ -26,10 +27,13 @@ pub const A100_MAX_FREQ_MHZ: f64 = 1410.0;
 /// One server SKU (GPU generation + host).
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct SkuSpec {
+    /// SKU name (registry key).
     pub name: &'static str,
+    /// GPU part this SKU carries.
     pub gpu: &'static str,
     /// TDP per GPU, watts.
     pub gpu_tdp_each_w: f64,
+    /// GPUs per server.
     pub n_gpus: usize,
     /// Max SM clock, MHz.
     pub max_freq_mhz: f64,
@@ -68,6 +72,26 @@ impl SkuSpec {
     /// Provisioned (breaker-facing) watts per server of this SKU.
     pub fn provisioned_w(&self, base: GpuPowerCalib) -> f64 {
         self.server_model(base).provisioned_w()
+    }
+
+    /// Training power model for this SKU: the §2.4 iteration waveform
+    /// driven through this generation's calibration, so cap setpoints
+    /// (scaled by [`Self::scale_policy`]) reclaim the same *fraction*
+    /// of training power on every SKU and iteration-time stretch stays
+    /// ratio-consistent across a heterogeneous site.
+    ///
+    /// This is the standalone (offline-analysis) form of the binding
+    /// the simulator performs itself: a mixed-row simulation attaches
+    /// the waveform to its server model's calibration, which for fleet
+    /// clusters *is* [`Self::calib`] via
+    /// [`crate::fleet::site::ClusterSpec::sim_config`] — the
+    /// calibration-equality invariant is pinned by this module's tests.
+    pub fn training_model(
+        &self,
+        base: GpuPowerCalib,
+        profile: TrainingProfile,
+    ) -> TrainingPowerModel {
+        TrainingPowerModel::with_calib(profile, self.calib(base))
     }
 
     /// Rescale a policy's absolute SM-clock setpoints (expressed for the
@@ -196,6 +220,38 @@ mod tests {
         for r in &reductions[1..] {
             // idle floors differ slightly between SKUs, so allow 2%
             assert!((r - reductions[0]).abs() < 0.02, "{reductions:?}");
+        }
+    }
+
+    #[test]
+    fn training_stretch_is_ratio_consistent_across_skus() {
+        // A scaled T2 cap must stretch a training iteration by the same
+        // factor on every generation (caps preserve clock ratios).
+        let profile = TrainingProfile::large_llm();
+        let mut stretches = Vec::new();
+        for sku in registry() {
+            let tm = sku.training_model(base(), profile);
+            let mut p = PolicyConfig::default();
+            sku.scale_policy(&mut p);
+            let stretched = tm.iter_time_s(CapMode::FreqCap { mhz: p.lp_freq_t2_mhz });
+            stretches.push(stretched / tm.iter_time_s(CapMode::None));
+        }
+        for s in &stretches[1..] {
+            assert!((s - stretches[0]).abs() < 1e-9, "{stretches:?}");
+        }
+        assert!(stretches[0] > 1.1, "T2 cap must visibly stretch iterations");
+    }
+
+    #[test]
+    fn training_model_calib_matches_simulator_binding() {
+        // The simulator builds its training model from the cluster's
+        // server-model calibration; training_model must be the same
+        // binding, or offline analysis would diverge from simulation.
+        let profile = TrainingProfile::large_llm();
+        for sku in registry() {
+            let tm = sku.training_model(base(), profile);
+            assert_eq!(tm.calib, sku.server_model(base()).calib, "{}", sku.name);
+            assert_eq!(tm.profile, profile);
         }
     }
 

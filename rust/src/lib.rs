@@ -27,6 +27,11 @@
 //!   real-model end-to-end driver with POLCA in the loop.
 //! * **Reproduction** — [`experiments`] regenerates every table and figure
 //!   in the paper's evaluation.
+//!
+//! A paper-section → module map with the control-loop dataflow lives in
+//! `docs/ARCHITECTURE.md`.
+
+#![warn(missing_docs)]
 
 pub mod benchkit;
 pub mod characterize;

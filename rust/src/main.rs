@@ -13,8 +13,14 @@
 //!   serve [--artifacts DIR] [--requests N] [--oversub F]
 //!       Mini end-to-end serving run (real PJRT model, POLCA in loop).
 //!   fleet [plan|sweep|trace] [--clusters N] [--policy polca|all]
-//!         [--added PCT] [--weeks W] [--seed N] [--serial] [--out-dir out]
+//!         [--added PCT] [--training FRAC] [--weeks W] [--seed N]
+//!         [--serial] [--out-dir out]
 //!       Site-level planning over a heterogeneous multi-cluster site.
+//!   mixed [run|sweep] [--training FRAC] [--policy polca|nocap|...]
+//!         [--servers N] [--added FRAC] [--weeks W] [--seed N]
+//!         [--servers-per-job N] [--stagger S] [--step PCT]
+//!       Mixed-workload rows: colocate synchronized training jobs with
+//!       inference and reproduce the §2.4 headroom contrast.
 
 use std::path::{Path, PathBuf};
 
@@ -34,6 +40,7 @@ fn main() {
         Some("calibrate") => cmd_calibrate(&args),
         Some("serve") => cmd_serve(&args),
         Some("fleet") => cmd_fleet(&args),
+        Some("mixed") => cmd_mixed(&args),
         Some(other) => {
             eprintln!("unknown subcommand '{other}'");
             print_help();
@@ -53,11 +60,13 @@ fn main() {
 fn print_help() {
     println!(
         "polca — Power Oversubscription in LLM Cloud Providers (reproduction)\n\n\
-         usage: polca <figure|simulate|tune|calibrate|serve|fleet> [options]\n\
+         usage: polca <figure|simulate|tune|calibrate|serve|fleet|mixed> [options]\n\
          try:   polca figure list\n       \
                 polca figure fig13 --out-dir out\n       \
                 polca simulate --policy polca --added 0.30 --weeks 1\n       \
                 polca fleet --clusters 4 --policy polca\n       \
+                polca mixed sweep --weeks 0.3\n       \
+                polca mixed run --training 0.5 --policy polca\n       \
                 polca serve --requests 16"
     );
 }
@@ -196,6 +205,111 @@ fn cmd_calibrate(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
+fn cmd_mixed(args: &Args) -> anyhow::Result<()> {
+    use polca::experiments::mixed::{
+        contrast_verdict, sweep_table, sweep_training_fractions, SweepConfig,
+        TRAINING_HEADROOM_BOUND,
+    };
+
+    let mode = args.positionals.first().map(|s| s.as_str()).unwrap_or("sweep");
+    match mode {
+        "run" => {
+            let mut sc = SweepConfig::default();
+            sc.policy = parse_policy(args.get_or("policy", "polca"))?;
+            sc.weeks = args.get_f64("weeks", 0.25);
+            sc.seed = args.get_u64("seed", sc.seed);
+            sc.servers = args.get_usize("servers", sc.servers);
+            sc.added = args.get_f64("added", 0.0);
+            sc.mixed.servers_per_job = args.get_usize("servers-per-job", 0);
+            sc.mixed.job_stagger_s = args.get_f64("stagger", 0.0);
+            let frac = args.get_f64("training", 0.5).clamp(0.0, 1.0);
+            let cfg = sc.sim_config(frac);
+            eprintln!(
+                "mixed row: {} with {:.0}% training, {} servers deployed on a {}-server \
+                 budget (+{:.0}%), {:.2} weeks",
+                cfg.policy_kind.name(),
+                frac * 100.0,
+                cfg.deployed_servers,
+                sc.servers,
+                sc.added * 100.0,
+                cfg.weeks
+            );
+            let (mut report, impact) = run_with_impact(&cfg);
+            println!("{}", report.summary());
+            println!(
+                "inference impact vs uncapped: HP p50/p99 = {:.2}%/{:.2}%  \
+                 LP p50/p99 = {:.2}%/{:.2}%",
+                impact.hp_p50 * 100.0,
+                impact.hp_p99 * 100.0,
+                impact.lp_p50 * 100.0,
+                impact.lp_p99 * 100.0
+            );
+            println!(
+                "training: {} iterations, mean {:.3}s vs nominal {:.3}s (inflation {:.1}%)",
+                report.train.iters,
+                report.train.mean_iter_s(),
+                report.train.nominal_iter_s,
+                report.train.inflation() * 100.0
+            );
+            let v = impact.slo_violations(&cfg.exp.slo);
+            if v.is_empty() {
+                println!("SLO: OK (Table 5; training pays in iteration time, not SLOs)");
+            } else {
+                println!("SLO: VIOLATED — {}", v.join("; "));
+            }
+        }
+        "sweep" => {
+            let mut sc = SweepConfig::default();
+            sc.policy = parse_policy(args.get_or("policy", "nocap"))?;
+            sc.weeks = args.get_f64("weeks", sc.weeks);
+            sc.seed = args.get_u64("seed", sc.seed);
+            sc.servers = args.get_usize("servers", sc.servers);
+            sc.added = args.get_f64("added", sc.added);
+            sc.mixed.servers_per_job = args.get_usize("servers-per-job", 0);
+            sc.mixed.job_stagger_s = args.get_f64("stagger", 0.0);
+            let step = args.get_usize("step", 25).clamp(1, 100);
+            let mut fractions = Vec::new();
+            let mut p = 0usize;
+            while p < 100 {
+                fractions.push(p as f64 / 100.0);
+                p += step;
+            }
+            fractions.push(1.0);
+            eprintln!(
+                "sweeping {} training fractions under {} for {:.2} weeks ...",
+                fractions.len(),
+                sc.policy.name(),
+                sc.weeks
+            );
+            let points = sweep_training_fractions(&fractions, &sc);
+            println!("{}", sweep_table(&points).render());
+            let v = contrast_verdict(&points);
+            println!(
+                "pure-training headroom {:.1}% <= §2.4 bound {:.1}%: {}",
+                v.train_headroom * 100.0,
+                TRAINING_HEADROOM_BOUND * 100.0,
+                if v.bound_ok { "ok" } else { "FAIL" }
+            );
+            println!(
+                "pure-training 2s row swing {:.1}% (§2.4 observable, paper ≈37.5%): {}",
+                v.train_swing_2s * 100.0,
+                if v.swing_ok { "in band" } else { "out of band (capped or de-synchronized)" }
+            );
+            println!(
+                "pure-inference peak {:.1}% / headroom {:.1}% (paper Table 2: 79% mean peak)",
+                v.inference_peak * 100.0,
+                v.inference_headroom * 100.0
+            );
+            println!(
+                "headroom interpolates monotonically across mixes: {}",
+                if v.monotone { "ok" } else { "FAIL" }
+            );
+        }
+        other => anyhow::bail!("unknown mixed mode '{other}' (run|sweep)"),
+    }
+    Ok(())
+}
+
 fn cmd_fleet(args: &Args) -> anyhow::Result<()> {
     use polca::fleet::planner::{evaluate_added, plan_site, PlannerConfig};
     use polca::fleet::site::SiteSpec;
@@ -204,7 +318,15 @@ fn cmd_fleet(args: &Args) -> anyhow::Result<()> {
 
     let mode = args.positionals.first().map(|s| s.as_str()).unwrap_or("plan");
     let n_clusters = args.get_usize("clusters", 4);
-    let site = SiteSpec::demo(n_clusters);
+    let training = args.get_f64("training", 0.0).clamp(0.0, 1.0);
+    let site = if training > 0.0 {
+        SiteSpec::demo(n_clusters).with_training(training)
+    } else {
+        SiteSpec::demo(n_clusters)
+    };
+    if training > 0.0 {
+        eprintln!("every cluster colocates {:.0}% training servers", training * 100.0);
+    }
     let mut pc = PlannerConfig::default();
     pc.weeks = args.get_f64("weeks", pc.weeks);
     pc.seed = args.get_u64("seed", pc.seed);

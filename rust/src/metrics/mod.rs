@@ -20,13 +20,18 @@ pub struct PriorityMetrics {
     /// Diagnostic: actual / nominal-execution − 1 per request (includes
     /// queueing, so useful for trends, not SLO checks).
     pub exec_impact: Percentiles,
+    /// Requests completed.
     pub completed: u64,
+    /// Requests rejected at a full buffer.
     pub dropped: u64,
+    /// Output tokens produced (throughput accounting).
     pub tokens_out: f64,
+    /// Sum of end-to-end latencies (for the mean).
     pub latency_sum: f64,
 }
 
 impl PriorityMetrics {
+    /// Record one completed request.
     pub fn record(&mut self, actual_s: f64, nominal_s: f64, tokens: f64) {
         self.latency.push(actual_s);
         self.exec_impact.push(crate::perfmodel::latency_impact(actual_s, nominal_s));
@@ -35,21 +40,85 @@ impl PriorityMetrics {
         self.latency_sum += actual_s;
     }
 
+    /// Requests offered to this class (completed + dropped).
     pub fn offered(&self) -> u64 {
         self.completed + self.dropped
+    }
+}
+
+/// Training-side accumulators for one mixed-row run (§2.4 / §7).
+///
+/// Capping a training job costs *iteration time*, not request latency:
+/// a frequency cap stretches the compute-bound fraction of every
+/// iteration ([`crate::power::training::TrainingPowerModel::iter_time_s`]),
+/// which this struct reports as inflation over the nominal iteration —
+/// the §7 argument for why training is the safe thing to throttle.
+#[derive(Debug, Clone, Default)]
+pub struct TrainingMetrics {
+    /// Completed training iterations across all jobs.
+    pub iters: u64,
+    /// Wall time per completed iteration, seconds.
+    pub iter_time: Percentiles,
+    /// Sum of iteration wall times (for the mean).
+    pub iter_time_sum_s: f64,
+    /// Iteration wall time at nominal frequency (0 when no training ran).
+    pub nominal_iter_s: f64,
+}
+
+impl TrainingMetrics {
+    /// Record one completed iteration.
+    pub fn record(&mut self, wall_s: f64) {
+        self.iters += 1;
+        self.iter_time.push(wall_s);
+        self.iter_time_sum_s += wall_s;
+    }
+
+    /// Mean iteration wall time over the run (0 when no training ran).
+    pub fn mean_iter_s(&self) -> f64 {
+        if self.iters == 0 {
+            0.0
+        } else {
+            self.iter_time_sum_s / self.iters as f64
+        }
+    }
+
+    /// Iteration-time inflation vs nominal, floored at zero — the
+    /// training analogue of request-latency impact.
+    pub fn inflation(&self) -> f64 {
+        if self.iters == 0 || self.nominal_iter_s <= 0.0 {
+            return 0.0;
+        }
+        (self.mean_iter_s() / self.nominal_iter_s - 1.0).max(0.0)
+    }
+
+    /// P99 iteration wall time — the tail a training-job owner sees
+    /// when caps engage only around diurnal inference peaks (0 when no
+    /// training ran).
+    pub fn p99_iter_s(&mut self) -> f64 {
+        if self.iters == 0 {
+            0.0
+        } else {
+            self.iter_time.p99()
+        }
     }
 }
 
 /// Relative latency-impact summary of a policy run vs its baseline.
 #[derive(Debug, Clone, Copy, Default)]
 pub struct ImpactSummary {
+    /// High-priority P50 latency impact (relative increase vs baseline).
     pub hp_p50: f64,
+    /// High-priority P99 latency impact.
     pub hp_p99: f64,
+    /// Low-priority P50 latency impact.
     pub lp_p50: f64,
+    /// Low-priority P99 latency impact.
     pub lp_p99: f64,
-    /// Completed-request throughput ratios vs baseline (Fig 14).
+    /// Completed-request HP throughput ratio vs baseline (Fig 14).
     pub hp_throughput: f64,
+    /// Completed-request LP throughput ratio vs baseline.
     pub lp_throughput: f64,
+    /// Powerbrake engagements in the policy run (SLO: zero).
     pub brake_events: u64,
 }
 
@@ -81,6 +150,7 @@ impl ImpactSummary {
         v
     }
 
+    /// Whether every Table 5 SLO holds.
     pub fn meets_slo(&self, slo: &SloConfig) -> bool {
         self.slo_violations(slo).is_empty()
     }
@@ -95,31 +165,58 @@ fn rel(policy: f64, baseline: f64) -> f64 {
 }
 
 /// Everything a simulated run produces.
+///
+/// The control-plane counters keep the paper's two command paths
+/// distinct (Table 1): `cap_commands`/`uncap_commands` count *slow-path*
+/// OOB frequency commands (~40 s apply latency), while `brake_commands`
+/// counts *fast-path* powerbrake engagements (~5 s, BMC hardware
+/// signal). `brake_events` is the policy's intent-side count of brake
+/// decisions; `brake_commands` is what the channel actually delivered.
+/// The two differ only when a run ends with a brake still in flight:
+/// the brake path is a dedicated hardware signal that the lossy-channel
+/// model never drops (§4, [`crate::cluster::oob::OobChannel::issue`]),
+/// so unlike cap commands, no brake decision can go missing mid-run.
 #[derive(Debug, Clone, Default)]
 pub struct RunReport {
+    /// High-priority request metrics.
     pub hp: PriorityMetrics,
+    /// Low-priority request metrics.
     pub lp: PriorityMetrics,
+    /// Training-iteration metrics (mixed rows; empty otherwise).
+    pub train: TrainingMetrics,
+    /// Powerbrake engagements decided by the policy (the Fig 18 metric).
     pub brake_events: u64,
-    /// OOB frequency-cap commands that took effect (cap engagements;
-    /// uncaps not counted) — the fleet planner's cap-event-rate input.
+    /// Slow-path OOB frequency-cap commands that took effect (cap
+    /// engagements) — the fleet planner's cap-event-rate input.
     pub cap_commands: u64,
+    /// Slow-path OOB uncap commands that took effect.
+    pub uncap_commands: u64,
+    /// Fast-path powerbrake commands delivered through the BMC channel.
+    pub brake_commands: u64,
     /// Seconds with the powerbrake engaged.
     pub brake_time_s: f64,
-    /// Normalized row power stats over the run.
+    /// Peak normalized row power over the run.
     pub power_peak: f64,
+    /// P99 of the normalized row-power samples.
     pub power_p99: f64,
+    /// Mean normalized row power.
     pub power_mean: f64,
-    /// Max power rises within 2 s / 5 s / 40 s (Table 2).
+    /// Max power rise within 2 s (Table 2).
     pub spike_2s: f64,
+    /// Max power rise within 5 s (Table 2).
     pub spike_5s: f64,
+    /// Max power rise within 40 s (Table 2).
     pub spike_40s: f64,
+    /// Simulated duration in seconds.
     pub duration_s: f64,
+    /// Discrete events processed (the §Perf events/s numerator).
     pub events: u64,
     /// Downsampled row power for Fig 16-style plots.
     pub power_series: Vec<(f64, f64)>,
 }
 
 impl RunReport {
+    /// The per-priority accumulator for `p`.
     pub fn by_priority(&mut self, p: Priority) -> &mut PriorityMetrics {
         match p {
             Priority::High => &mut self.hp,
@@ -148,23 +245,46 @@ impl RunReport {
         }
     }
 
-    /// One-line summary for CLI output.
+    /// One-line summary for CLI output. Reports the fast path (brakes)
+    /// and the slow path (OOB caps/uncaps) separately, plus a training
+    /// clause when the row ran mixed workloads. A priority class that
+    /// served nothing (e.g. a pure-training row) prints `-` instead of
+    /// NaN percentiles.
     pub fn summary(&mut self) -> String {
-        format!(
-            "power peak={:.3} p99={:.3} mean={:.3} | HP p50/p99 lat={:.1}s/{:.1}s \
-             | LP p50/p99 lat={:.1}s/{:.1}s | brakes={} | done HP={} LP={} | drops={}",
+        let lat = |p: &mut PriorityMetrics| {
+            if p.latency.is_empty() {
+                "-".to_string()
+            } else {
+                format!("{:.1}s/{:.1}s", p.latency.p50(), p.latency.p99())
+            }
+        };
+        let hp_lat = lat(&mut self.hp);
+        let lp_lat = lat(&mut self.lp);
+        let mut s = format!(
+            "power peak={:.3} p99={:.3} mean={:.3} | HP p50/p99 lat={hp_lat} \
+             | LP p50/p99 lat={lp_lat} | brakes={} (fast-path cmds {}) \
+             | oob caps/uncaps={}/{} | done HP={} LP={} | drops={}",
             self.power_peak,
             self.power_p99,
             self.power_mean,
-            self.hp.latency.p50(),
-            self.hp.latency.p99(),
-            self.lp.latency.p50(),
-            self.lp.latency.p99(),
             self.brake_events,
+            self.brake_commands,
+            self.cap_commands,
+            self.uncap_commands,
             self.hp.completed,
             self.lp.completed,
             self.hp.dropped + self.lp.dropped,
-        )
+        );
+        if self.train.iters > 0 {
+            s.push_str(&format!(
+                " | train iters={} mean/p99 iter={:.2}s/{:.2}s inflation={:.1}%",
+                self.train.iters,
+                self.train.mean_iter_s(),
+                self.train.p99_iter_s(),
+                self.train.inflation() * 100.0
+            ));
+        }
+        s
     }
 }
 
@@ -251,6 +371,43 @@ mod tests {
         let mut a = report_with(&[], &[1.0], 0);
         let mut b = report_with(&[], &[1.0], 0);
         assert!(a.impact_vs(&mut b).meets_slo(&SloConfig::default()));
+    }
+
+    #[test]
+    fn training_inflation_vs_nominal() {
+        let mut t = TrainingMetrics::default();
+        assert_eq!(t.inflation(), 0.0); // no training ran
+        t.nominal_iter_s = 2.0;
+        t.record(2.0);
+        t.record(2.0);
+        assert_eq!(t.iters, 2);
+        assert!(t.inflation() < 1e-12, "uncapped training has no inflation");
+        t.record(3.0); // one capped iteration
+        assert!((t.mean_iter_s() - 7.0 / 3.0).abs() < 1e-12);
+        assert!((t.inflation() - (7.0 / 6.0 - 1.0)).abs() < 1e-12);
+        assert!(t.p99_iter_s() > 2.9, "tail must reflect the capped iteration");
+    }
+
+    #[test]
+    fn summary_separates_fast_and_slow_paths() {
+        let mut r = report_with(&[1.0], &[1.0], 3);
+        r.cap_commands = 7;
+        r.uncap_commands = 5;
+        r.brake_commands = 2;
+        let s = r.summary();
+        assert!(s.contains("brakes=3 (fast-path cmds 2)"), "{s}");
+        assert!(s.contains("oob caps/uncaps=7/5"), "{s}");
+        assert!(!s.contains("train iters"), "no training clause: {s}");
+        r.train.nominal_iter_s = 2.0;
+        r.train.record(2.2);
+        let s2 = r.summary();
+        assert!(s2.contains("train iters=1"), "{s2}");
+        // A class that served nothing prints '-' instead of NaN
+        // (reachable via `polca mixed run --training 1.0`).
+        let mut empty = RunReport::default();
+        let s3 = empty.summary();
+        assert!(!s3.contains("NaN"), "{s3}");
+        assert!(s3.contains("HP p50/p99 lat=-"), "{s3}");
     }
 
     #[test]

@@ -13,16 +13,22 @@ use crate::characterize::catalog::ModelSpec;
 /// Phase of an executing request.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum ExecPhase {
+    /// Prompt processing (compute-bound burst).
     Prompt,
+    /// Autoregressive token generation (mostly memory-bound).
     Token,
+    /// All work finished.
     Done,
 }
 
 /// Work state of one in-flight request.
 #[derive(Debug, Clone)]
 pub struct RequestExec {
+    /// Input (prompt) tokens.
     pub input: f64,
+    /// Output tokens to generate.
     pub output: f64,
+    /// Batch size the request runs at.
     pub batch: f64,
     /// Remaining prompt work in nominal seconds (at f_max).
     pub prompt_remaining: f64,
@@ -33,6 +39,7 @@ pub struct RequestExec {
 }
 
 impl RequestExec {
+    /// Fresh request with full nominal work remaining in both phases.
     pub fn new(model: &ModelSpec, input: f64, output: f64, batch: f64) -> Self {
         let p = model.prompt_time_s(input, batch);
         let t = model.token_time_s(output, batch);
@@ -46,6 +53,7 @@ impl RequestExec {
         }
     }
 
+    /// The phase the request is currently in.
     pub fn phase(&self) -> ExecPhase {
         if self.prompt_remaining > 0.0 {
             ExecPhase::Prompt

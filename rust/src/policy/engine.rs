@@ -18,6 +18,15 @@
 //! ```
 //! The 5%-below-threshold uncap buffers implement the hysteresis that
 //! prevents cap/uncap oscillation (§5.1 "Uncapping").
+//!
+//! Mixed rows (§7): the engine addresses servers by
+//! [`crate::cluster::hierarchy::Priority`] class only, and training
+//! jobs are *pinned* to the low-priority class
+//! ([`crate::cluster::hierarchy::JobKind::fixed_priority`]) — so every
+//! T1 crossing throttles the row's training ballast first, by
+//! construction, and capping it costs iteration time instead of an
+//! interactive SLO. No training-specific action is needed here; the
+//! priority pinning is the §7 policy.
 
 use crate::config::PolicyConfig;
 
@@ -35,6 +44,7 @@ pub enum PolicyKind {
 }
 
 impl PolicyKind {
+    /// Display name (matches the paper's figure legends).
     pub fn name(&self) -> &'static str {
         match self {
             PolicyKind::Polca => "POLCA",
@@ -44,6 +54,7 @@ impl PolicyKind {
         }
     }
 
+    /// The full comparison set, in paper order.
     pub fn all() -> [PolicyKind; 4] {
         [PolicyKind::Polca, PolicyKind::OneThreshLowPri, PolicyKind::OneThreshAll, PolicyKind::NoCap]
     }
@@ -56,10 +67,13 @@ pub enum Action {
     CapLp { mhz: f64 },
     /// Cap all high-priority servers to the given SM clock.
     CapHp { mhz: f64 },
+    /// Remove the low-priority frequency cap.
     UncapLp,
+    /// Remove the high-priority frequency cap.
     UncapHp,
     /// Engage the hardware powerbrake (row-wide, fast path).
     Brake,
+    /// Release the powerbrake.
     ReleaseBrake,
 }
 
@@ -67,15 +81,20 @@ pub enum Action {
 /// fleet converges to it after the OOB latency).
 #[derive(Debug, Clone, Copy, PartialEq, Default)]
 pub struct IntentState {
+    /// Requested low-priority cap (None = uncapped).
     pub lp_cap_mhz: Option<f64>,
+    /// Requested high-priority cap (None = uncapped).
     pub hp_cap_mhz: Option<f64>,
+    /// Whether the powerbrake is requested.
     pub brake: bool,
 }
 
 /// The policy state machine.
 #[derive(Debug, Clone)]
 pub struct PolicyEngine {
+    /// Which policy variant this engine runs.
     pub kind: PolicyKind,
+    /// Threshold/setpoint configuration (Table 3).
     pub cfg: PolicyConfig,
     /// How long to wait after issuing the LP T2 cap before escalating to
     /// HP capping — the LP cap needs the OOB apply latency (~40 s) to
@@ -95,6 +114,7 @@ pub struct PolicyEngine {
 }
 
 impl PolicyEngine {
+    /// A fresh engine with no caps engaged.
     pub fn new(kind: PolicyKind, cfg: PolicyConfig) -> Self {
         PolicyEngine {
             kind,
@@ -110,10 +130,12 @@ impl PolicyEngine {
         }
     }
 
+    /// The cap state the engine currently intends the fleet to hold.
     pub fn intent(&self) -> IntentState {
         self.intent
     }
 
+    /// Whether the engine believes the powerbrake is engaged.
     pub fn is_braked(&self) -> bool {
         self.brake
     }

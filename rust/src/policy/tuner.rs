@@ -13,20 +13,30 @@ use crate::simulation::{run_with_impact, SimConfig};
 /// Result of evaluating one (T1, T2, added-servers) point.
 #[derive(Debug, Clone)]
 pub struct TunerPoint {
+    /// Lower capping threshold evaluated.
     pub t1: f64,
+    /// Upper capping threshold evaluated.
     pub t2: f64,
+    /// Added-server fraction evaluated.
     pub added_frac: f64,
+    /// HP P50 latency impact at this point.
     pub hp_p50: f64,
+    /// HP P99 latency impact.
     pub hp_p99: f64,
+    /// LP P50 latency impact.
     pub lp_p50: f64,
+    /// LP P99 latency impact.
     pub lp_p99: f64,
+    /// Powerbrake engagements at this point.
     pub brakes: u64,
+    /// Whether every Table 5 SLO held.
     pub meets_slo: bool,
 }
 
 /// Outcome of a full tuner sweep.
 #[derive(Debug, Clone)]
 pub struct TunerOutcome {
+    /// Every evaluated point, in sweep order.
     pub points: Vec<TunerPoint>,
     /// Best (t1, t2, added_frac) meeting SLOs.
     pub best: Option<(f64, f64, f64)>,

@@ -134,6 +134,20 @@ impl GpuPowerCalib {
         }
     }
 
+    /// Apply a cap to a phase-constant nominal power level: a frequency
+    /// cap scales the dynamic component ([`Self::apply_freq`]); a
+    /// reactive power cap clamps to the cap (floored at idle). This is
+    /// the level-based form of [`Self::phase_power`] used by waveform
+    /// consumers (the training model and the discrete-event training
+    /// driver) that hold one nominal level per phase.
+    pub fn capped_level(&self, nominal: f64, cap: CapMode) -> f64 {
+        match cap {
+            CapMode::None => nominal,
+            CapMode::FreqCap { mhz } => self.apply_freq(nominal, mhz),
+            CapMode::PowerCap { frac_of_tdp } => nominal.min(frac_of_tdp.max(self.idle_frac)),
+        }
+    }
+
     /// Effective frequency ratio a *power* cap induces once it reacts
     /// (used for its performance impact): invert the power curve.
     pub fn power_cap_freq_ratio(&self, phase: Phase, frac_of_tdp: f64) -> f64 {
@@ -229,6 +243,23 @@ mod tests {
         let c = cal();
         let p = c.phase_power(Phase::Token { batch: 16.0 }, CapMode::PowerCap { frac_of_tdp: 0.3 }, true);
         assert!((p - 0.3).abs() < 1e-12);
+    }
+
+    #[test]
+    fn capped_level_semantics() {
+        let c = cal();
+        let nominal = c.token_mean_frac(16.0);
+        assert_eq!(c.capped_level(nominal, CapMode::None), nominal);
+        assert_eq!(
+            c.capped_level(nominal, CapMode::FreqCap { mhz: 1110.0 }),
+            c.apply_freq(nominal, 1110.0)
+        );
+        assert_eq!(c.capped_level(nominal, CapMode::PowerCap { frac_of_tdp: 0.3 }), 0.3);
+        // a power cap never pushes below the idle floor
+        assert_eq!(
+            c.capped_level(nominal, CapMode::PowerCap { frac_of_tdp: 0.05 }),
+            c.idle_frac
+        );
     }
 
     #[test]

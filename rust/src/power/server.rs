@@ -8,7 +8,9 @@ use super::gpu::{CapMode, GpuPowerCalib, Phase};
 /// One component of the provisioned server budget (Fig 2).
 #[derive(Debug, Clone, PartialEq)]
 pub struct Component {
+    /// Component label (Fig 2 row name).
     pub name: &'static str,
+    /// Provisioned (worst-case) wattage of this component.
     pub provisioned_w: f64,
     /// Fraction of the provisioned wattage drawn when the server idles.
     pub idle_fraction: f64,
@@ -20,9 +22,13 @@ pub struct Component {
 /// DGX-A100-class server power model.
 #[derive(Debug, Clone, PartialEq)]
 pub struct ServerPowerModel {
+    /// TDP of each GPU, watts.
     pub gpu_tdp_each_w: f64,
+    /// Number of GPUs in the server (8 for DGX/HGX chassis).
     pub n_gpus: usize,
+    /// Non-GPU component budget (Fig 2 rows).
     pub components: Vec<Component>,
+    /// GPU power calibration (phase anchors, idle floor, clock ceiling).
     pub calib: GpuPowerCalib,
 }
 
@@ -96,6 +102,17 @@ impl ServerPowerModel {
         gpu_w + self.non_gpu_w(activity)
     }
 
+    /// Total server wall power when the GPUs draw `gpu_frac` of their
+    /// aggregate TDP directly — the entry point for the training
+    /// waveform ([`crate::power::training`]), whose §2.4 phase levels
+    /// drive the GPUs without an inference phase in between. Tracking
+    /// components follow GPU activity exactly as under serving.
+    pub fn training_power_w(&self, gpu_frac: f64) -> f64 {
+        let activity =
+            ((gpu_frac - self.calib.idle_frac) / (1.0 - self.calib.idle_frac)).clamp(0.0, 1.0);
+        gpu_frac * self.gpu_tdp_w() + self.non_gpu_at(activity)
+    }
+
     /// GPU share of *consumed* power in a phase (paper: ~60% under load).
     pub fn gpu_consumed_share(&self, phase: Phase) -> f64 {
         let total = self.server_power_w(phase, CapMode::None, false);
@@ -163,6 +180,19 @@ mod tests {
         let red = 1.0 - capped / uncapped;
         // server-level reduction is smaller than GPU-level (non-GPU floor)
         assert!((0.08..0.22).contains(&red), "red={red}");
+    }
+
+    #[test]
+    fn training_power_spans_idle_to_above_tdp() {
+        let m = ServerPowerModel::default();
+        let idle = m.training_power_w(m.calib.idle_frac);
+        let trough = m.training_power_w(0.50);
+        let peak = m.training_power_w(1.05);
+        assert!(idle < trough && trough < peak, "{idle} {trough} {peak}");
+        // At TDP-level GPU draw the server approaches its provisioned
+        // budget (§2.4: "training can easily reach the TDP").
+        assert!(m.training_power_w(1.0) > 0.85 * m.provisioned_w());
+        assert!(peak < 1.1 * m.provisioned_w());
     }
 
     #[test]

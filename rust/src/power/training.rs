@@ -31,16 +31,65 @@ pub struct TrainingProfile {
     pub compute_time_frac: f64,
 }
 
+impl TrainingProfile {
+    /// A large-LLM training job: GPT-NeoX-like power levels (§2.4) on a
+    /// multi-second iteration, the shape of the frontier-scale jobs the
+    /// §7 colocation discussion mixes into inference rows. The long
+    /// iteration matters operationally: its 2 s synchronization trough
+    /// survives PDU window averaging, so the row-level telemetry sees
+    /// the coordinated swing the paper warns about.
+    pub fn large_llm() -> TrainingProfile {
+        TrainingProfile {
+            iter_time_s: 6.0,
+            peak_frac: 1.0,
+            mid_dip_frac: 0.78,
+            sync_trough_frac: 0.50,
+            mid_dip_width: 0.05,
+            sync_width: 1.0 / 3.0,
+            compute_time_frac: 0.80,
+        }
+    }
+
+    /// Waveform phase boundaries as fractions of the (possibly
+    /// stretched) iteration time: `[start, mid-dip start, mid-dip end,
+    /// sync-trough start, end]`. The mid dip sits ~55% through the
+    /// iteration (the fwd/bwd boundary) and is clamped so it never
+    /// overlaps the end-of-iteration trough.
+    pub fn phase_bounds(&self) -> [f64; 5] {
+        let sync_start = (1.0 - self.sync_width).clamp(0.0, 1.0);
+        let mid_start = (0.55 - self.mid_dip_width / 2.0).clamp(0.0, sync_start);
+        let mid_end = (0.55 + self.mid_dip_width / 2.0).clamp(mid_start, sync_start);
+        [0.0, mid_start, mid_end, sync_start, 1.0]
+    }
+
+    /// Nominal GPU power level (fraction of TDP) of each of the four
+    /// waveform phases delimited by [`Self::phase_bounds`]: compute
+    /// plateau, mid dip, compute plateau, synchronization trough.
+    pub fn phase_levels(&self) -> [f64; 4] {
+        [self.peak_frac, self.mid_dip_frac, self.peak_frac, self.sync_trough_frac]
+    }
+}
+
 /// Training power model for one model on one server.
 #[derive(Debug, Clone, Copy)]
 pub struct TrainingPowerModel {
+    /// The iteration waveform (§2.4 phase structure).
     pub profile: TrainingProfile,
+    /// GPU calibration supplying the idle floor, clock ceiling, and
+    /// power–frequency curve (per SKU in heterogeneous fleets).
     pub calib: GpuPowerCalib,
 }
 
 impl TrainingPowerModel {
+    /// Model with the default (DGX-A100) calibration.
     pub fn new(profile: TrainingProfile) -> Self {
         TrainingPowerModel { profile, calib: GpuPowerCalib::default() }
+    }
+
+    /// Model with an explicit per-SKU calibration (see
+    /// [`crate::fleet::sku::SkuSpec::training_model`]).
+    pub fn with_calib(profile: TrainingProfile, calib: GpuPowerCalib) -> Self {
+        TrainingPowerModel { profile, calib }
     }
 
     /// Iteration time under a frequency cap (compute part stretches 1/f).
@@ -72,24 +121,27 @@ impl TrainingPowerModel {
         let p = &self.profile;
         let iter = self.iter_time_s(cap);
         let x = (t_in_iter_s / iter).rem_euclid(1.0);
-        let mid_start = 0.55 - p.mid_dip_width / 2.0;
-        let mid_end = 0.55 + p.mid_dip_width / 2.0;
-        let sync_start = 1.0 - p.sync_width;
-        let nominal = if x >= sync_start {
-            p.sync_trough_frac
-        } else if (mid_start..mid_end).contains(&x) {
-            p.mid_dip_frac
+        let b = p.phase_bounds();
+        let l = p.phase_levels();
+        let nominal = if x >= b[3] {
+            l[3]
+        } else if x >= b[2] {
+            l[2]
+        } else if x >= b[1] {
+            l[1]
         } else {
-            p.peak_frac
+            l[0]
         };
-        match cap {
-            CapMode::None => nominal,
-            CapMode::FreqCap { mhz } => self.calib.apply_freq(nominal, mhz),
-            // Reactive power cap clamps the sustained plateau but the
-            // compute phase briefly overshoots after each trough; the
-            // trough itself is communication-bound and unaffected.
-            CapMode::PowerCap { frac_of_tdp } => nominal.min(frac_of_tdp.max(self.calib.idle_frac)),
-        }
+        self.capped_level(nominal, cap)
+    }
+
+    /// Apply a cap to a nominal waveform level — the per-phase form of
+    /// [`Self::power_frac_at`]. Delegates to
+    /// [`GpuPowerCalib::capped_level`], the single definition of
+    /// cap-on-level semantics shared with the discrete-event training
+    /// driver.
+    pub fn capped_level(&self, nominal: f64, cap: CapMode) -> f64 {
+        self.calib.capped_level(nominal, cap)
     }
 
     /// Peak power over a full iteration under a cap.
@@ -204,6 +256,44 @@ mod tests {
         let cap = CapMode::PowerCap { frac_of_tdp: 0.8 };
         assert!(m.peak_frac(cap) > 0.8);
         assert!(m.peak_frac(cap) <= 0.85);
+    }
+
+    #[test]
+    fn phase_bounds_consistent_with_waveform() {
+        // The event-driven phase decomposition must agree with the
+        // continuous waveform at every phase midpoint.
+        for m in [neox_like(), flant5_like(), TrainingPowerModel::new(TrainingProfile::large_llm())]
+        {
+            let b = m.profile.phase_bounds();
+            let l = m.profile.phase_levels();
+            assert!(b.windows(2).all(|w| w[0] <= w[1]), "{b:?}");
+            for k in 0..4 {
+                let mid = (b[k] + b[k + 1]) / 2.0;
+                let t = mid * m.profile.iter_time_s;
+                assert_eq!(m.power_frac_at(t, CapMode::None), l[k], "phase {k}");
+            }
+        }
+    }
+
+    #[test]
+    fn capped_level_matches_waveform_cap() {
+        let m = neox_like();
+        let cap = CapMode::FreqCap { mhz: 1110.0 };
+        let t_plateau = 0.2;
+        assert_eq!(
+            m.power_frac_at(t_plateau, cap),
+            m.capped_level(m.profile.peak_frac, cap)
+        );
+    }
+
+    #[test]
+    fn large_llm_trough_survives_two_second_window() {
+        // The colocation default must keep a >= 2 s synchronization
+        // trough so PDU window averaging cannot hide the row swing.
+        let p = TrainingProfile::large_llm();
+        assert!(p.sync_width * p.iter_time_s >= 2.0 - 1e-9);
+        assert!(p.peak_frac >= 1.0 - 1e-9); // reaches TDP (§2.4)
+        assert_eq!(p.sync_trough_frac, 0.50); // NeoX-like trough
     }
 
     #[test]

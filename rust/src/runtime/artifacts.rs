@@ -9,48 +9,71 @@ use crate::util::json::{self, Json};
 /// Model dimensions (mirrors `ModelConfig` in python/compile/model.py).
 #[derive(Debug, Clone, PartialEq)]
 pub struct ModelDims {
+    /// Vocabulary size.
     pub vocab: usize,
+    /// Residual-stream width.
     pub d_model: usize,
+    /// Attention heads.
     pub n_heads: usize,
+    /// Transformer layers.
     pub n_layers: usize,
+    /// Feed-forward width.
     pub d_ff: usize,
+    /// Maximum sequence length the KV cache supports.
     pub max_seq: usize,
+    /// Static batch slots compiled into the executables.
     pub batch_slots: usize,
+    /// Per-head width (d_model / n_heads).
     pub d_head: usize,
+    /// Total parameter count.
     pub num_params: usize,
 }
 
 /// One parameter tensor in `weights.bin`.
 #[derive(Debug, Clone)]
 pub struct ParamEntry {
+    /// Canonical parameter name.
     pub name: String,
+    /// Tensor shape.
     pub shape: Vec<usize>,
+    /// Byte offset into `weights.bin`.
     pub byte_offset: usize,
+    /// Byte length in `weights.bin`.
     pub byte_len: usize,
 }
 
 /// One compiled computation.
 #[derive(Debug, Clone)]
 pub struct ArtifactEntry {
+    /// Artifact name (e.g. `prefill_128`).
     pub name: String,
+    /// HLO text file within the bundle.
     pub file: String,
-    pub kind: String, // "prefill" | "decode"
+    /// Computation kind: `"prefill"` or `"decode"`.
+    pub kind: String,
+    /// Prompt bucket length (prefill) or 1 (decode).
     pub seq: usize,
 }
 
 /// The parsed artifact manifest.
 #[derive(Debug, Clone)]
 pub struct Manifest {
+    /// Bundle directory.
     pub dir: PathBuf,
+    /// Model dimensions.
     pub model: ModelDims,
+    /// KV cache tensor shape, exactly as compiled (5-D).
     pub kv_shape: [usize; 5],
+    /// Parameter tensors, in canonical feed order.
     pub params: Vec<ParamEntry>,
+    /// Compiled computations in the bundle.
     pub artifacts: Vec<ArtifactEntry>,
     /// Analytic FLOPs per artifact (drives the serving power model).
     pub flops: Vec<(String, f64)>,
 }
 
 impl Manifest {
+    /// Parse `manifest.json` from an artifact directory.
     pub fn load(dir: &Path) -> anyhow::Result<Manifest> {
         let text = std::fs::read_to_string(dir.join("manifest.json"))
             .with_context(|| format!("reading {}/manifest.json", dir.display()))?;
@@ -157,10 +180,12 @@ impl Manifest {
         Ok(out)
     }
 
+    /// Analytic FLOPs of a named artifact, if recorded.
     pub fn flops_of(&self, name: &str) -> Option<f64> {
         self.flops.iter().find(|(k, _)| k == name).map(|&(_, v)| v)
     }
 
+    /// Total element count of the KV cache tensor.
     pub fn kv_elems(&self) -> usize {
         self.kv_shape.iter().product()
     }

@@ -17,12 +17,15 @@ use super::artifacts::Manifest;
 
 /// KV cache state for the whole batch (owned by the coordinator).
 pub struct KvState {
+    /// Key cache literal.
     pub k: Literal,
+    /// Value cache literal.
     pub v: Literal,
 }
 
 /// A loaded model: PJRT client, compiled executables, weights.
 pub struct Engine {
+    /// The parsed artifact manifest this engine was loaded from.
     pub manifest: Manifest,
     client: PjRtClient,
     /// (bucket_seq, executable), ascending by bucket.
@@ -67,6 +70,7 @@ impl Engine {
         Ok(Engine { manifest, client, prefills, decode, params })
     }
 
+    /// The PJRT client executables run on.
     pub fn client(&self) -> &PjRtClient {
         &self.client
     }
@@ -86,6 +90,7 @@ impl Engine {
         self.prefills.iter().map(|&(s, _)| s).find(|&s| s >= len)
     }
 
+    /// All compiled prompt bucket lengths, ascending.
     pub fn buckets(&self) -> Vec<usize> {
         self.prefills.iter().map(|&(s, _)| s).collect()
     }

@@ -14,8 +14,11 @@ use std::collections::BinaryHeap;
 /// Simulation time in integer microseconds (deterministic; no float drift).
 pub type SimTime = u64;
 
+/// One microsecond of [`SimTime`].
 pub const MICROS: u64 = 1;
+/// One millisecond of [`SimTime`].
 pub const MILLIS: u64 = 1_000;
+/// One second of [`SimTime`].
 pub const SECONDS: u64 = 1_000_000;
 
 /// Convert seconds (f64) to SimTime.
@@ -48,10 +51,12 @@ pub struct EventQueue<E> {
 }
 
 impl<E: Ord> EventQueue<E> {
+    /// Empty queue at time zero.
     pub fn new() -> Self {
         EventQueue { heap: BinaryHeap::new(), seq: 0, now: 0, popped: 0 }
     }
 
+    /// Empty queue with pre-allocated heap capacity.
     pub fn with_capacity(n: usize) -> Self {
         EventQueue { heap: BinaryHeap::with_capacity(n), seq: 0, now: 0, popped: 0 }
     }
@@ -68,11 +73,13 @@ impl<E: Ord> EventQueue<E> {
         self.popped
     }
 
+    /// Pending event count.
     #[inline]
     pub fn len(&self) -> usize {
         self.heap.len()
     }
 
+    /// Whether no events are pending.
     #[inline]
     pub fn is_empty(&self) -> bool {
         self.heap.is_empty()

@@ -19,9 +19,27 @@
 //! once so the *base* row (no oversubscription, no capping) peaks at the
 //! published Table-2 inference utilization (79%) — the same
 //! trace-replication step the paper performs in §6.1.
+//!
+//! # Mixed-workload rows (§2.4 / §7)
+//!
+//! A [`MixedRowConfig`] colocates synchronized training jobs with the
+//! inference services: the last `training_fraction` of the deployed
+//! servers run the [`TrainingProfile`] waveform instead of serving
+//! requests. Training jobs advance on the same event queue — one event
+//! per waveform phase per *job*, so every server of a job switches
+//! phase at the same instant and the row-level swings coordinate
+//! exactly as the paper observes. Training is always low-priority
+//! cappable ([`crate::cluster::hierarchy::JobKind::fixed_priority`]);
+//! frequency caps change training power immediately and stretch the
+//! *next* iteration's compute-bound fraction (gradient-sync barriers
+//! quantize the timing effect at iteration granularity), reported as
+//! iteration-time inflation ([`crate::metrics::TrainingMetrics`])
+//! rather than request latency. The `power_scale` calibration is an
+//! inference-serving artifact, so training wattage is kept absolute by
+//! dividing it out per server (the row aggregate multiplies it back).
 
 use crate::characterize::catalog::{self, ModelSpec};
-use crate::cluster::hierarchy::{Priority, Row};
+use crate::cluster::hierarchy::{JobKind, Priority, Row};
 use crate::cluster::oob::{OobChannel, OobCommand};
 use crate::cluster::telemetry::TelemetryBuffer;
 use crate::config::ExperimentConfig;
@@ -29,20 +47,58 @@ use crate::metrics::RunReport;
 use crate::perfmodel::{ExecPhase, RequestExec};
 use crate::policy::engine::{Action, PolicyEngine, PolicyKind};
 use crate::power::gpu::{CapMode, Phase};
+use crate::power::training::{TrainingPowerModel, TrainingProfile};
 use crate::sim::{secs, to_secs, EventQueue, SimTime};
 use crate::util::rng::Rng;
 use crate::workload::arrivals::ArrivalProcess;
 use crate::workload::spec::{assign_servers, sample_request, WorkloadSpec};
 
+/// Mixed-row parameters: colocate synchronized training jobs with the
+/// inference services (§2.4 contrast, §7 mixing direction).
+#[derive(Debug, Clone)]
+pub struct MixedRowConfig {
+    /// Fraction of the *deployed* servers running training (0.0 = pure
+    /// inference, 1.0 = pure training row). The training servers are
+    /// carved deterministically off the tail of the row so every
+    /// fraction shares one inference workload realization (see
+    /// [`crate::workload::spec::mark_training`]).
+    pub training_fraction: f64,
+    /// Servers per synchronized job; 0 means one job spans every
+    /// training server (the paper's large-job worst case, maximally
+    /// coordinated row swings).
+    pub servers_per_job: usize,
+    /// Offset between consecutive jobs' start times, seconds. Staggered
+    /// jobs de-align their synchronization troughs, shrinking the
+    /// row-level swing — the §7 lever an operator controls.
+    pub job_stagger_s: f64,
+    /// Iteration waveform every job runs.
+    pub profile: TrainingProfile,
+}
+
+impl Default for MixedRowConfig {
+    fn default() -> Self {
+        MixedRowConfig {
+            training_fraction: 0.0,
+            servers_per_job: 0,
+            job_stagger_s: 0.0,
+            profile: TrainingProfile::large_llm(),
+        }
+    }
+}
+
 /// Simulation parameters for one run.
 #[derive(Debug, Clone)]
 pub struct SimConfig {
+    /// Row/policy/SLO parameters (paper Tables 1/3/5) and the seed.
     pub exp: ExperimentConfig,
+    /// Which power-management policy drives the row.
     pub policy_kind: PolicyKind,
     /// Servers actually deployed (baseline = exp.row.num_servers;
     /// more = oversubscribed).
     pub deployed_servers: usize,
+    /// Simulated horizon in weeks (fractions allowed for quick runs).
     pub weeks: f64,
+    /// Catalog model every server is dedicated to (§6.1: BLOOM-176B).
     pub model_name: String,
     /// Override the global LP share (Fig 15b sweep).
     pub lp_fraction_override: Option<f64>,
@@ -54,8 +110,9 @@ pub struct SimConfig {
     pub peak_utilization: f64,
     /// Sample the power series every this many seconds (0 = off).
     pub series_sample_s: f64,
-    /// OOB unreliability (loss probability, jitter fraction).
+    /// OOB command-loss probability (0.0 = the paper's reliable channel).
     pub oob_loss_prob: f64,
+    /// OOB apply-latency jitter fraction (uniform ±).
     pub oob_jitter_frac: f64,
     /// When false, the power manager is disconnected entirely (no caps,
     /// no brake): the unthrottled counterfactual used as the latency
@@ -73,6 +130,10 @@ pub struct SimConfig {
     /// row serves a region whose traffic peaks earlier/later than site
     /// time (fleet layer staggers cluster peaks with this).
     pub diurnal_phase_s: f64,
+    /// Mixed-row configuration (`None` = the paper's inference-only
+    /// row; `Some` with `training_fraction: 0.0` is bit-identical to
+    /// `None` — a tested invariant).
+    pub mixed: Option<MixedRowConfig>,
 }
 
 impl Default for SimConfig {
@@ -94,6 +155,7 @@ impl Default for SimConfig {
             server_model: None,
             perf_mult: 1.0,
             diurnal_phase_s: 0.0,
+            mixed: None,
         }
     }
 }
@@ -133,6 +195,11 @@ enum Ev {
     Telemetry,
     /// An OOB command becomes effective.
     OobApply,
+    /// A training job begins its first iteration (staggered job starts).
+    TrainStart { job: u32 },
+    /// A training job's current waveform phase ends (valid only if `gen`
+    /// matches the job's generation counter).
+    TrainPhase { job: u32, gen: u32 },
     /// Record a point of the downsampled power series.
     SampleSeries,
     End,
@@ -154,6 +221,7 @@ struct QueuedReq {
 
 struct ServerState {
     priority: Priority,
+    kind: JobKind,
     workload_idx: usize,
     freq_cap_mhz: Option<f64>,
     current: Option<InFlight>,
@@ -166,6 +234,27 @@ struct ServerState {
     last_advance_s: f64,
     /// Current power draw in watts (cached for incremental row sum).
     power_w: f64,
+    /// Training servers only: the nominal GPU power fraction of the
+    /// job's current waveform phase (idle before the job starts).
+    train_level: f64,
+}
+
+/// One synchronized training job: every member server switches waveform
+/// phase on the same event, so row-level swings coordinate (§2.4).
+struct TrainJob {
+    /// Indices into `Sim::servers`.
+    servers: Vec<usize>,
+    model: TrainingPowerModel,
+    /// Job start time (staggered per job).
+    start_s: f64,
+    /// Generation counter invalidating stale TrainPhase events.
+    gen: u32,
+    /// Current phase index into `TrainingProfile::phase_levels`.
+    phase_idx: usize,
+    iter_started_s: f64,
+    /// Wall time of the in-flight iteration (stretched by the cap that
+    /// was active when it started).
+    iter_wall_s: f64,
 }
 
 /// Run one simulation; returns the report.
@@ -179,6 +268,7 @@ struct Sim<'a> {
     specs: Vec<WorkloadSpec>,
     row: Row,
     servers: Vec<ServerState>,
+    train_jobs: Vec<TrainJob>,
     queue: EventQueue<Ev>,
     policy: PolicyEngine,
     oob: OobChannel,
@@ -234,6 +324,21 @@ impl<'a> Sim<'a> {
         let mut row = Row::provision(cfg.exp.row.num_servers, cfg.deployed_servers, power_model);
         let specs = crate::workload::spec::table4();
         assign_servers(&mut row, &specs, 0, cfg.lp_fraction_override, &mut root_rng);
+        // Mixed rows: carve training servers off the tail AFTER the
+        // inference assignment, so every training fraction consumes the
+        // identical random stream (0% is bit-identical to `mixed: None`,
+        // and sweeps interpolate on one fixed workload realization).
+        let train_count = cfg
+            .mixed
+            .as_ref()
+            .map(|m| {
+                ((m.training_fraction * row.servers.len() as f64).round() as usize)
+                    .min(row.servers.len())
+            })
+            .unwrap_or(0);
+        if train_count > 0 {
+            crate::workload::spec::mark_training(&mut row, train_count);
+        }
 
         // Per-workload peak arrival rate from the target utilization:
         // rate = utilization / E[nominal service time of that workload].
@@ -249,6 +354,7 @@ impl<'a> Sim<'a> {
             mean_service.push(acc / n as f64);
         }
 
+        let idle_frac = row.power_model.calib.idle_frac;
         let servers = row
             .servers
             .iter()
@@ -256,6 +362,7 @@ impl<'a> Sim<'a> {
                 let rate = cfg.peak_utilization / mean_service[s.workload_idx];
                 ServerState {
                     priority: s.priority,
+                    kind: s.job,
                     workload_idx: s.workload_idx,
                     freq_cap_mhz: None,
                     current: None,
@@ -266,9 +373,44 @@ impl<'a> Sim<'a> {
                     gen: 0,
                     last_advance_s: 0.0,
                     power_w: 0.0,
+                    train_level: idle_frac,
                 }
             })
             .collect();
+
+        // One synchronized job per `servers_per_job` chunk of the
+        // training tail; 0 = a single row-spanning job (§2.4's
+        // large-job worst case).
+        let mut train_jobs = Vec::new();
+        if let Some(m) = &cfg.mixed {
+            let train_idxs: Vec<usize> = row
+                .servers
+                .iter()
+                .enumerate()
+                .filter(|(_, s)| s.job == JobKind::Training)
+                .map(|(i, _)| i)
+                .collect();
+            if !train_idxs.is_empty() {
+                let per =
+                    if m.servers_per_job == 0 { train_idxs.len() } else { m.servers_per_job };
+                for (j, chunk) in train_idxs.chunks(per.max(1)).enumerate() {
+                    train_jobs.push(TrainJob {
+                        servers: chunk.to_vec(),
+                        model: TrainingPowerModel::with_calib(m.profile, row.power_model.calib),
+                        start_s: j as f64 * m.job_stagger_s.max(0.0),
+                        gen: 0,
+                        phase_idx: 0,
+                        iter_started_s: 0.0,
+                        iter_wall_s: m.profile.iter_time_s,
+                    });
+                }
+            }
+        }
+        let mut report = RunReport::default();
+        if !train_jobs.is_empty() {
+            report.train.nominal_iter_s =
+                cfg.mixed.as_ref().map(|m| m.profile.iter_time_s).unwrap_or(0.0);
+        }
 
         let policy = PolicyEngine::new(cfg.policy_kind, cfg.exp.policy.clone());
         let oob = OobChannel::new(
@@ -289,6 +431,7 @@ impl<'a> Sim<'a> {
             specs,
             row,
             servers,
+            train_jobs,
             queue: EventQueue::with_capacity(1024),
             policy,
             oob,
@@ -300,7 +443,7 @@ impl<'a> Sim<'a> {
             last_power_change_s: 0.0,
             last_telemetry_s: 0.0,
             now_s: 0.0,
-            report: RunReport::default(),
+            report,
             horizon,
         }
     }
@@ -346,12 +489,30 @@ impl<'a> Sim<'a> {
         self.last_power_change_s = self.now_s;
     }
 
+    /// Training server wall power in watts: the job's current waveform
+    /// level under this server's cap, through the shared server model.
+    fn training_server_w(&self, idx: usize) -> f64 {
+        let cap = self.cap_mode(idx);
+        let nominal = self.servers[idx].train_level;
+        let frac = self.row.power_model.calib.capped_level(nominal, cap);
+        self.row.power_model.training_power_w(frac)
+    }
+
     /// Recompute one server's power and update the row aggregate.
     fn refresh_power(&mut self, idx: usize) {
         self.settle_energy();
-        let phase = self.server_phase(idx);
-        let cap = self.cap_mode(idx);
-        let w = self.row.power_model.server_power_w(phase, cap, false);
+        let w = match self.servers[idx].kind {
+            JobKind::Inference => {
+                let phase = self.server_phase(idx);
+                let cap = self.cap_mode(idx);
+                self.row.power_model.server_power_w(phase, cap, false)
+            }
+            // Training power is absolute (the §2.4 waveform drives the
+            // GPUs directly); `power_scale` is an inference-serving
+            // calibration, so divide it out here — the row aggregate
+            // multiplies it back in `normalized_row_power`.
+            JobKind::Training => self.training_server_w(idx) / self.cfg.power_scale,
+        };
         let s = &mut self.servers[idx];
         self.row_power_w += w - s.power_w;
         s.power_w = w;
@@ -548,15 +709,83 @@ impl<'a> Sim<'a> {
                     }
                 }
                 OobCommand::Uncap { target } => {
+                    self.report.uncap_commands += 1;
                     for idx in 0..self.servers.len() {
                         if self.servers[idx].priority == target {
                             self.set_server_cap(idx, None, now_s);
                         }
                     }
                 }
-                OobCommand::PowerBrake => self.set_brake(true, now_s),
+                OobCommand::PowerBrake => {
+                    self.report.brake_commands += 1;
+                    self.set_brake(true, now_s);
+                }
                 OobCommand::ReleaseBrake => self.set_brake(false, now_s),
             }
+        }
+    }
+
+    // ---- training-job driver (§2.4 / §7) ---------------------------------
+
+    /// Cap governing a job right now. Every member shares the LP class
+    /// (training is priority-pinned) and the brake is row-wide, so one
+    /// member is representative.
+    fn train_cap(&self, j: usize) -> CapMode {
+        self.cap_mode(self.train_jobs[j].servers[0])
+    }
+
+    /// Push the job's current waveform level to every member server —
+    /// one event, all members: this is the cross-server iteration
+    /// synchronization that makes row-level swings coordinate.
+    fn apply_train_level(&mut self, j: usize) {
+        let level = self.train_jobs[j].model.profile.phase_levels()[self.train_jobs[j].phase_idx];
+        let members = std::mem::take(&mut self.train_jobs[j].servers);
+        for &idx in &members {
+            self.servers[idx].train_level = level;
+            self.refresh_power(idx);
+        }
+        self.train_jobs[j].servers = members;
+    }
+
+    fn schedule_train_phase(&mut self, j: usize) {
+        let job = &self.train_jobs[j];
+        let b = job.model.profile.phase_bounds();
+        let end_s = job.iter_started_s + job.iter_wall_s * b[job.phase_idx + 1];
+        let gen = job.gen;
+        // Same +1 µs guard as request phases: integer-microsecond
+        // rounding must never land before the true boundary.
+        self.queue.schedule_at(secs(end_s) + 1, Ev::TrainPhase { job: j as u32, gen });
+    }
+
+    /// Begin an iteration. Timing is fixed by the cap active *now*:
+    /// caps arriving mid-iteration change power immediately (via
+    /// [`Self::refresh_power`]) but stretch timing only from the next
+    /// gradient-sync barrier on — barriers quantize the performance
+    /// effect at iteration granularity.
+    fn start_train_iteration(&mut self, j: usize, now_s: f64) {
+        let cap = self.train_cap(j);
+        let job = &mut self.train_jobs[j];
+        job.gen = job.gen.wrapping_add(1);
+        job.phase_idx = 0;
+        job.iter_started_s = now_s;
+        job.iter_wall_s = job.model.iter_time_s(cap);
+        self.apply_train_level(j);
+        self.schedule_train_phase(j);
+    }
+
+    fn on_train_phase(&mut self, j: usize, gen: u32, now_s: f64) {
+        if self.train_jobs[j].gen != gen {
+            return; // stale (the job has since restarted an iteration)
+        }
+        if self.train_jobs[j].phase_idx + 1 >= 4 {
+            // Sync barrier reached: the iteration is complete.
+            let wall = now_s - self.train_jobs[j].iter_started_s;
+            self.report.train.record(wall);
+            self.start_train_iteration(j, now_s);
+        } else {
+            self.train_jobs[j].phase_idx += 1;
+            self.apply_train_level(j);
+            self.schedule_train_phase(j);
         }
     }
 
@@ -567,10 +796,18 @@ impl<'a> Sim<'a> {
         for idx in 0..self.servers.len() {
             self.refresh_power(idx);
         }
-        // Seed events.
+        // Seed events. Training servers take no request arrivals: their
+        // load is the iteration waveform, driven by TrainStart below.
         for idx in 0..self.servers.len() {
+            if self.servers[idx].kind == JobKind::Training {
+                continue;
+            }
             let t = self.servers[idx].arrivals.next_after(0.0);
             self.queue.schedule_at(secs(t), Ev::Arrival { server: idx as u32 });
+        }
+        for j in 0..self.train_jobs.len() {
+            let start = self.train_jobs[j].start_s;
+            self.queue.schedule_at(secs(start), Ev::TrainStart { job: j as u32 });
         }
         self.queue.schedule_at(0, Ev::Telemetry);
         if self.cfg.series_sample_s > 0.0 {
@@ -586,6 +823,8 @@ impl<'a> Sim<'a> {
                 Ev::PhaseEnd { server, gen } => self.on_phase_end(server as usize, gen, now_s),
                 Ev::Telemetry => self.on_telemetry(now_s),
                 Ev::OobApply => self.on_oob_apply(now_s),
+                Ev::TrainStart { job } => self.start_train_iteration(job as usize, now_s),
+                Ev::TrainPhase { job, gen } => self.on_train_phase(job as usize, gen, now_s),
                 Ev::SampleSeries => {
                     self.report.power_series.push((now_s, self.normalized_row_power()));
                     self.queue.schedule_in(secs(self.cfg.series_sample_s), Ev::SampleSeries);
@@ -756,6 +995,94 @@ mod tests {
         // All recorded latencies are >= nominal (impact >= 0) by metric
         // construction; peak power must never be absurd.
         assert!(report.power_peak < 2.0);
+    }
+
+    #[test]
+    fn mixed_zero_fraction_is_bit_identical_to_none() {
+        let mut a_cfg = quick_cfg();
+        a_cfg.weeks = 0.03;
+        let mut b_cfg = a_cfg.clone();
+        b_cfg.mixed = Some(MixedRowConfig::default()); // training_fraction 0.0
+        let mut a = run(&a_cfg);
+        let mut b = run(&b_cfg);
+        assert_eq!(a.hp.completed, b.hp.completed);
+        assert_eq!(a.lp.completed, b.lp.completed);
+        assert_eq!(a.events, b.events);
+        assert!((a.power_peak - b.power_peak).abs() == 0.0);
+        assert!((a.hp.latency.p99() - b.hp.latency.p99()).abs() == 0.0);
+        assert_eq!(b.train.iters, 0);
+    }
+
+    #[test]
+    fn pure_training_row_runs_iterations_at_tdp_class_power() {
+        let mut cfg = quick_cfg();
+        cfg.weeks = 0.01; // ~1.7 h
+        cfg.policy_kind = PolicyKind::NoCap;
+        cfg.mixed = Some(MixedRowConfig { training_fraction: 1.0, ..Default::default() });
+        let report = run(&cfg);
+        // No inference traffic at all on a pure-training row.
+        assert_eq!(report.hp.completed + report.lp.completed, 0);
+        assert!(report.train.iters > 500, "iters={}", report.train.iters);
+        // §2.4: training sits just under provisioned power — far above
+        // the inference mean — independent of the inference power_scale.
+        assert!(
+            report.power_peak > 0.85 && report.power_peak < 1.0,
+            "peak={}",
+            report.power_peak
+        );
+        // Uncapped iterations run at nominal speed (µs event rounding only).
+        assert!(report.train.inflation() < 1e-4, "inflation={}", report.train.inflation());
+        assert_eq!(report.brake_events, 0);
+    }
+
+    #[test]
+    fn polca_caps_training_and_inflates_iteration_time() {
+        // A pure-training row idles above T2 (0.89), so POLCA must cap
+        // it — and the cost shows up as iteration-time inflation, never
+        // as request latency (§7: training is always cappable).
+        let mut cfg = quick_cfg();
+        cfg.weeks = 0.02;
+        cfg.policy_kind = PolicyKind::Polca;
+        cfg.mixed = Some(MixedRowConfig { training_fraction: 1.0, ..Default::default() });
+        let report = run(&cfg);
+        assert!(report.cap_commands > 0, "row above T2 must engage LP caps");
+        assert!(
+            report.train.inflation() > 0.005,
+            "capped training must slow down: inflation={}",
+            report.train.inflation()
+        );
+        assert_eq!(report.hp.completed, 0);
+    }
+
+    #[test]
+    fn training_fraction_interpolates_power_monotonically() {
+        let mut peaks = Vec::new();
+        for frac in [0.0, 0.5, 1.0] {
+            let mut cfg = quick_cfg();
+            cfg.weeks = 0.05;
+            cfg.policy_kind = PolicyKind::NoCap;
+            cfg.mixed = Some(MixedRowConfig { training_fraction: frac, ..Default::default() });
+            peaks.push(run(&cfg).power_peak);
+        }
+        assert!(peaks[0] < peaks[1] && peaks[1] < peaks[2], "{peaks:?}");
+    }
+
+    #[test]
+    fn mixed_run_is_deterministic() {
+        let mut cfg = quick_cfg();
+        cfg.weeks = 0.02;
+        cfg.mixed = Some(MixedRowConfig {
+            training_fraction: 0.5,
+            servers_per_job: 3,
+            job_stagger_s: 2.0,
+            ..Default::default()
+        });
+        let a = run(&cfg);
+        let b = run(&cfg);
+        assert_eq!(a.train.iters, b.train.iters);
+        assert_eq!(a.hp.completed, b.hp.completed);
+        assert!((a.power_peak - b.power_peak).abs() == 0.0);
+        assert!((a.train.iter_time_sum_s - b.train.iter_time_sum_s).abs() == 0.0);
     }
 
     #[test]

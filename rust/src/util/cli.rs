@@ -4,11 +4,16 @@
 
 use std::collections::BTreeMap;
 
+/// Parsed command line.
 #[derive(Debug, Clone, Default)]
 pub struct Args {
+    /// First bare argument (the subcommand).
     pub subcommand: Option<String>,
+    /// Remaining bare arguments.
     pub positionals: Vec<String>,
+    /// `--key value` / `--key=value` options.
     pub options: BTreeMap<String, String>,
+    /// Bare `--flag` switches.
     pub flags: Vec<String>,
 }
 
@@ -36,30 +41,37 @@ impl Args {
         out
     }
 
+    /// Parse the process's arguments.
     pub fn from_env() -> Args {
         Args::parse(std::env::args().skip(1))
     }
 
+    /// Whether `--name` was passed as a bare flag.
     pub fn flag(&self, name: &str) -> bool {
         self.flags.iter().any(|f| f == name)
     }
 
+    /// The value of `--name`, if present.
     pub fn get(&self, name: &str) -> Option<&str> {
         self.options.get(name).map(|s| s.as_str())
     }
 
+    /// The value of `--name`, or `default`.
     pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
         self.get(name).unwrap_or(default)
     }
 
+    /// `--name` parsed as f64, or `default`.
     pub fn get_f64(&self, name: &str, default: f64) -> f64 {
         self.get(name).and_then(|s| s.parse().ok()).unwrap_or(default)
     }
 
+    /// `--name` parsed as usize, or `default`.
     pub fn get_usize(&self, name: &str, default: usize) -> usize {
         self.get(name).and_then(|s| s.parse().ok()).unwrap_or(default)
     }
 
+    /// `--name` parsed as u64, or `default`.
     pub fn get_u64(&self, name: &str, default: u64) -> u64 {
         self.get(name).and_then(|s| s.parse().ok()).unwrap_or(default)
     }

@@ -13,10 +13,12 @@ pub struct Csv {
 }
 
 impl Csv {
+    /// Empty CSV with the given header.
     pub fn new(header: &[&str]) -> Self {
         Csv { header: header.iter().map(|s| s.to_string()).collect(), rows: Vec::new() }
     }
 
+    /// Push a row of displayable cells (width-checked).
     pub fn row<D: Display>(&mut self, cells: &[D]) {
         assert_eq!(cells.len(), self.header.len(), "row width != header width");
         self.rows.push(cells.iter().map(|c| escape(&c.to_string())).collect());
@@ -28,13 +30,16 @@ impl Csv {
         self.rows.push(cells.iter().map(|c| escape(c)).collect());
     }
 
+    /// Data-row count (excluding the header).
     pub fn len(&self) -> usize {
         self.rows.len()
     }
+    /// Whether no data rows were pushed.
     pub fn is_empty(&self) -> bool {
         self.rows.is_empty()
     }
 
+    /// Render the full CSV text, header first.
     pub fn to_string(&self) -> String {
         let mut s = self.header.join(",");
         s.push('\n');
@@ -45,6 +50,7 @@ impl Csv {
         s
     }
 
+    /// Write the CSV to `path`, creating parent directories.
     pub fn write_to(&self, path: &Path) -> std::io::Result<()> {
         if let Some(parent) = path.parent() {
             fs::create_dir_all(parent)?;

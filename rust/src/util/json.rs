@@ -11,27 +11,37 @@ use std::fmt::Write as _;
 /// A JSON value. Objects use a BTreeMap for deterministic serialization.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Json {
+    /// `null`.
     Null,
+    /// A boolean.
     Bool(bool),
+    /// A number (all JSON numbers are f64 here).
     Num(f64),
+    /// A string.
     Str(String),
+    /// An array.
     Arr(Vec<Json>),
+    /// An object (sorted keys).
     Obj(BTreeMap<String, Json>),
 }
 
 impl Json {
+    /// Object from (key, value) pairs.
     pub fn obj(pairs: Vec<(&str, Json)>) -> Json {
         Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
     }
 
+    /// Array from an iterator of values.
     pub fn arr<I: IntoIterator<Item = Json>>(items: I) -> Json {
         Json::Arr(items.into_iter().collect())
     }
 
+    /// Numeric array from a slice.
     pub fn num_arr(xs: &[f64]) -> Json {
         Json::Arr(xs.iter().map(|&x| Json::Num(x)).collect())
     }
 
+    /// Object member access.
     pub fn get(&self, key: &str) -> Option<&Json> {
         match self {
             Json::Obj(m) => m.get(key),
@@ -48,6 +58,7 @@ impl Json {
         Some(cur)
     }
 
+    /// Numeric view.
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             Json::Num(x) => Some(*x),
@@ -55,14 +66,17 @@ impl Json {
         }
     }
 
+    /// Numeric view truncated to usize.
     pub fn as_usize(&self) -> Option<usize> {
         self.as_f64().map(|x| x as usize)
     }
 
+    /// Numeric view truncated to i64.
     pub fn as_i64(&self) -> Option<i64> {
         self.as_f64().map(|x| x as i64)
     }
 
+    /// String view.
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Json::Str(s) => Some(s),
@@ -70,6 +84,7 @@ impl Json {
         }
     }
 
+    /// Array view.
     pub fn as_arr(&self) -> Option<&[Json]> {
         match self {
             Json::Arr(v) => Some(v),
@@ -77,6 +92,7 @@ impl Json {
         }
     }
 
+    /// Boolean view.
     pub fn as_bool(&self) -> Option<bool> {
         match self {
             Json::Bool(b) => Some(*b),

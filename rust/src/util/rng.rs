@@ -42,6 +42,7 @@ impl Rng {
         Rng::new(self.next_u64() ^ stream.wrapping_mul(0x9E37_79B9_7F4A_7C15))
     }
 
+    /// Next raw 64-bit output.
     #[inline]
     pub fn next_u64(&mut self) -> u64 {
         let s = &mut self.s;
@@ -93,6 +94,7 @@ impl Rng {
         lo + self.below((hi - lo + 1) as u64) as usize
     }
 
+    /// Bernoulli draw with the given success probability.
     pub fn bool(&mut self, p_true: f64) -> bool {
         self.f64() < p_true
     }
@@ -116,6 +118,7 @@ impl Rng {
         r * theta.cos()
     }
 
+    /// Normal draw with the given mean and standard deviation.
     pub fn normal_with(&mut self, mean: f64, std: f64) -> f64 {
         mean + std * self.normal()
     }

@@ -14,10 +14,12 @@ pub struct Running {
 }
 
 impl Running {
+    /// Empty accumulator.
     pub fn new() -> Self {
         Running { n: 0, mean: 0.0, m2: 0.0, min: f64::INFINITY, max: f64::NEG_INFINITY }
     }
 
+    /// Fold in one observation.
     pub fn push(&mut self, x: f64) {
         self.n += 1;
         let d = x - self.mean;
@@ -27,21 +29,27 @@ impl Running {
         self.max = self.max.max(x);
     }
 
+    /// Observations folded in so far.
     pub fn count(&self) -> u64 {
         self.n
     }
+    /// Running mean (NaN when empty).
     pub fn mean(&self) -> f64 {
         if self.n == 0 { f64::NAN } else { self.mean }
     }
+    /// Sample variance (0 below two observations).
     pub fn var(&self) -> f64 {
         if self.n < 2 { 0.0 } else { self.m2 / (self.n - 1) as f64 }
     }
+    /// Sample standard deviation.
     pub fn std(&self) -> f64 {
         self.var().sqrt()
     }
+    /// Smallest observation.
     pub fn min(&self) -> f64 {
         self.min
     }
+    /// Largest observation.
     pub fn max(&self) -> f64 {
         self.max
     }
@@ -56,18 +64,22 @@ pub struct Percentiles {
 }
 
 impl Percentiles {
+    /// Empty sample set.
     pub fn new() -> Self {
         Percentiles { xs: Vec::new(), sorted: true }
     }
 
+    /// Add one sample.
     pub fn push(&mut self, x: f64) {
         self.xs.push(x);
         self.sorted = false;
     }
 
+    /// Sample count.
     pub fn len(&self) -> usize {
         self.xs.len()
     }
+    /// Whether no samples were added.
     pub fn is_empty(&self) -> bool {
         self.xs.is_empty()
     }
@@ -96,18 +108,23 @@ impl Percentiles {
         self.xs[lo] * (1.0 - frac) + self.xs[hi.min(n - 1)] * frac
     }
 
+    /// Median.
     pub fn p50(&mut self) -> f64 {
         self.percentile(50.0)
     }
+    /// 90th percentile.
     pub fn p90(&mut self) -> f64 {
         self.percentile(90.0)
     }
+    /// 99th percentile.
     pub fn p99(&mut self) -> f64 {
         self.percentile(99.0)
     }
+    /// Largest sample.
     pub fn max(&mut self) -> f64 {
         self.percentile(100.0)
     }
+    /// Arithmetic mean (NaN when empty).
     pub fn mean(&self) -> f64 {
         if self.xs.is_empty() {
             f64::NAN
@@ -127,11 +144,13 @@ pub struct Histogram {
 }
 
 impl Histogram {
+    /// `nbins` equal bins over `[lo, hi)`.
     pub fn new(lo: f64, hi: f64, nbins: usize) -> Self {
         assert!(hi > lo && nbins > 0);
         Histogram { lo, hi, bins: vec![0; nbins] }
     }
 
+    /// Count one value (clamped to the edge bins).
     pub fn push(&mut self, x: f64) {
         let n = self.bins.len();
         let t = ((x - self.lo) / (self.hi - self.lo) * n as f64).floor();
@@ -139,14 +158,17 @@ impl Histogram {
         self.bins[idx] += 1;
     }
 
+    /// Raw bin counts.
     pub fn bins(&self) -> &[u64] {
         &self.bins
     }
 
+    /// Center value of bin `i`.
     pub fn bin_center(&self, i: usize) -> f64 {
         self.lo + (i as f64 + 0.5) / self.bins.len() as f64 * (self.hi - self.lo)
     }
 
+    /// Total counted values.
     pub fn total(&self) -> u64 {
         self.bins.iter().sum()
     }

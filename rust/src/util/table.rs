@@ -1,6 +1,7 @@
 //! ASCII table formatter: the `polca figure ...` commands print
 //! paper-style rows with this.
 
+/// In-memory table with a title and fixed header.
 #[derive(Debug, Clone)]
 pub struct Table {
     title: String,
@@ -9,6 +10,7 @@ pub struct Table {
 }
 
 impl Table {
+    /// Empty table with the given title and column header.
     pub fn new(title: &str, header: &[&str]) -> Self {
         Table {
             title: title.to_string(),
@@ -17,11 +19,13 @@ impl Table {
         }
     }
 
+    /// Push a row (width-checked against the header).
     pub fn row(&mut self, cells: Vec<String>) {
         assert_eq!(cells.len(), self.header.len());
         self.rows.push(cells);
     }
 
+    /// Render the table as aligned ASCII.
     pub fn render(&self) -> String {
         let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
         for row in &self.rows {

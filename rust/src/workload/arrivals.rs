@@ -36,6 +36,7 @@ pub struct ArrivalProcess {
 }
 
 impl ArrivalProcess {
+    /// Stream at the given peak rate with its own random source.
     pub fn new(peak_rate: f64, rng: Rng) -> Self {
         ArrivalProcess { peak_rate, phase_s: 0.0, rng }
     }

@@ -2,12 +2,13 @@
 //! run BLOOM-176B (the paper's worst case for capping sensitivity, §6.1)
 //! on dedicated DGX-A100 servers.
 
-use crate::cluster::hierarchy::{Priority, Row};
+use crate::cluster::hierarchy::{JobKind, Priority, Row};
 use crate::util::rng::Rng;
 
 /// One service class (a Table 4 row).
 #[derive(Debug, Clone)]
 pub struct WorkloadSpec {
+    /// Service name (Table 4 row label).
     pub name: &'static str,
     /// Prompt size range in tokens (inclusive, log-uniform sampling).
     pub prompt_range: (u32, u32),
@@ -104,6 +105,23 @@ pub fn assign_servers(
     }
 }
 
+/// Convert the last `train_count` server slots of an already-assigned
+/// row into training-job slices (§7 colocation). Deliberately
+/// deterministic and RNG-free: the inference allocation ([`assign_servers`])
+/// consumes exactly the same random stream at every training fraction,
+/// so a 0%-training mixed row is bit-identical to an inference-only row
+/// and sweeps interpolate on a fixed workload realization. Training
+/// slots take the priority class [`JobKind::fixed_priority`] pins them
+/// to (always [`Priority::Low`]).
+pub fn mark_training(row: &mut Row, train_count: usize) {
+    let n = row.servers.len();
+    let start = n.saturating_sub(train_count);
+    for server in &mut row.servers[start..] {
+        server.job = JobKind::Training;
+        server.priority = JobKind::Training.fixed_priority().expect("training is priority-pinned");
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -166,6 +184,34 @@ mod tests {
             .iter()
             .filter(|s| s.workload_idx == 1)
             .all(|s| s.priority == Priority::High));
+    }
+
+    #[test]
+    fn mark_training_pins_low_priority_and_preserves_inference_rng() {
+        let specs = table4();
+        // Two rows assigned with identical seeds...
+        let mut plain = Row::provision(20, 20, ServerPowerModel::default());
+        let mut mixed = Row::provision(20, 20, ServerPowerModel::default());
+        let mut rng_a = Rng::new(9);
+        let mut rng_b = Rng::new(9);
+        assign_servers(&mut plain, &specs, 0, None, &mut rng_a);
+        assign_servers(&mut mixed, &specs, 0, None, &mut rng_b);
+        mark_training(&mut mixed, 5);
+        // ...training claims exactly the last 5 slots, all LP,
+        assert_eq!(mixed.training_servers().count(), 5);
+        assert!(mixed.training_servers().all(|s| s.priority == Priority::Low));
+        assert!(mixed.training_servers().all(|s| s.id >= 15));
+        // ...and the surviving inference slots are untouched.
+        for (a, b) in plain.servers.iter().zip(&mixed.servers).take(15) {
+            assert_eq!(a.workload_idx, b.workload_idx);
+            assert_eq!(a.priority, b.priority);
+            assert_eq!(b.job, JobKind::Inference);
+        }
+        // Zero training count is a no-op.
+        let before: Vec<_> = plain.servers.iter().map(|s| s.priority).collect();
+        mark_training(&mut plain, 0);
+        assert_eq!(plain.training_servers().count(), 0);
+        assert_eq!(before, plain.servers.iter().map(|s| s.priority).collect::<Vec<_>>());
     }
 
     #[test]

@@ -1,0 +1,156 @@
+//! Integration tests for mixed-workload rows (§2.4 / §7): the
+//! bit-identity regression guard for the inference-only path, the
+//! row-level composition of synchronized training troughs, and the
+//! stagger mitigation.
+
+use polca::policy::engine::PolicyKind;
+use polca::power::server::ServerPowerModel;
+use polca::power::training::TrainingProfile;
+use polca::simulation::{run, MixedRowConfig, SimConfig};
+use polca::testing;
+
+fn base_cfg(servers: usize, weeks: f64, seed: u64) -> SimConfig {
+    let mut cfg = SimConfig::default();
+    cfg.weeks = weeks;
+    cfg.exp.row.num_servers = servers;
+    cfg.deployed_servers = servers;
+    cfg.exp.seed = seed;
+    cfg.power_scale = 1.35; // small-row calibration (see simulation tests)
+    cfg
+}
+
+/// ISSUE-2 regression guard, as a property: a mixed row at 100%
+/// inference is bit-identical to the pre-refactor inference-only
+/// simulator path across random row sizes, seeds, and policies —
+/// same events, same completions, same power statistics, bitwise.
+#[test]
+fn property_pure_inference_mixed_row_is_bit_identical() {
+    testing::check(
+        "mixed-0pct-bit-identical",
+        0xA11CE,
+        6,
+        |rng| {
+            let servers = rng.range_usize(4, 10);
+            let seed = rng.next_u64();
+            let policy = match rng.below(3) {
+                0 => PolicyKind::Polca,
+                1 => PolicyKind::NoCap,
+                _ => PolicyKind::OneThreshAll,
+            };
+            (servers, seed, policy)
+        },
+        |&(servers, seed, policy)| {
+            let mut a_cfg = base_cfg(servers, 0.012, seed);
+            a_cfg.policy_kind = policy;
+            let mut b_cfg = a_cfg.clone();
+            b_cfg.mixed = Some(MixedRowConfig::default()); // training_fraction 0.0
+            let mut a = run(&a_cfg);
+            let mut b = run(&b_cfg);
+            let same = a.hp.completed == b.hp.completed
+                && a.lp.completed == b.lp.completed
+                && a.hp.dropped == b.hp.dropped
+                && a.lp.dropped == b.lp.dropped
+                && a.events == b.events
+                && a.brake_events == b.brake_events
+                && a.cap_commands == b.cap_commands
+                && a.uncap_commands == b.uncap_commands
+                && a.brake_commands == b.brake_commands
+                && a.power_peak == b.power_peak
+                && a.power_mean == b.power_mean
+                && a.spike_2s == b.spike_2s
+                && a.hp.latency.p99() == b.hp.latency.p99()
+                && a.lp.latency.p99() == b.lp.latency.p99()
+                && b.train.iters == 0;
+            if same {
+                Ok(())
+            } else {
+                Err(format!("diverged:\n  none: {}\n  some: {}", a.summary(), b.summary()))
+            }
+        },
+    );
+}
+
+fn pure_training_run(servers_per_job: usize, stagger_s: f64) -> polca::metrics::RunReport {
+    let profile = TrainingProfile::large_llm();
+    let mut cfg = base_cfg(8, 0.004, 7); // ~40 simulated minutes
+    cfg.policy_kind = PolicyKind::NoCap;
+    cfg.series_sample_s = 0.5; // instantaneous samples, finer than any phase
+    cfg.mixed = Some(MixedRowConfig {
+        training_fraction: 1.0,
+        servers_per_job,
+        job_stagger_s: stagger_s,
+        profile,
+    });
+    run(&cfg)
+}
+
+/// Row swing of the instantaneous power series, ignoring the warmup
+/// window in which staggered jobs have not all started yet.
+fn row_swing(report: &polca::metrics::RunReport, warmup_s: f64) -> f64 {
+    let vals: Vec<f64> = report
+        .power_series
+        .iter()
+        .filter(|&&(t, _)| t >= warmup_s)
+        .map(|&(_, p)| p)
+        .collect();
+    assert!(vals.len() > 100, "series too short: {}", vals.len());
+    let max = vals.iter().cloned().fold(f64::MIN, f64::max);
+    let min = vals.iter().cloned().fold(f64::MAX, f64::min);
+    max - min
+}
+
+/// §2.4: one synchronized job's trough composes at the row level — the
+/// row's instantaneous swing equals a single server's swing fraction
+/// of provisioned power, because every member hits the trough at the
+/// same instant.
+#[test]
+fn synchronized_training_troughs_compose_at_row_level() {
+    let profile = TrainingProfile::large_llm();
+    let report = pure_training_run(0, 0.0);
+    assert!(report.train.iters > 100, "iters={}", report.train.iters);
+
+    let model = ServerPowerModel::default();
+    let expected = (model.training_power_w(profile.peak_frac)
+        - model.training_power_w(profile.sync_trough_frac))
+        / model.provisioned_w();
+    let swing = row_swing(&report, 2.0 * profile.iter_time_s);
+    assert!(
+        (swing - expected).abs() < 1e-6,
+        "synchronized row swing {swing} must equal the per-server swing {expected}"
+    );
+    assert!(expected > 0.3, "the §2.4 swing must be material: {expected}");
+}
+
+/// §7 mitigation: staggering two half-row jobs by half an iteration
+/// de-aligns their troughs, cutting the row-level swing roughly in
+/// half — colocation structure, not just capping, controls the swing.
+#[test]
+fn staggered_jobs_shrink_the_row_swing() {
+    let profile = TrainingProfile::large_llm();
+    let sync = pure_training_run(0, 0.0);
+    let staggered = pure_training_run(4, profile.iter_time_s / 2.0);
+    let warmup = 2.0 * profile.iter_time_s;
+    let s_sync = row_swing(&sync, warmup);
+    let s_stag = row_swing(&staggered, warmup);
+    assert!(
+        s_stag < 0.7 * s_sync,
+        "staggered swing {s_stag} must be well below synchronized {s_sync}"
+    );
+    // Both schedules do the same total work (uncapped, same horizon).
+    let iter_ratio = staggered.train.iters as f64 / sync.train.iters as f64;
+    assert!((iter_ratio - 1.0).abs() < 0.02, "iters {iter_ratio}");
+}
+
+/// Mixing training into an inference row raises its floor but the
+/// inference side keeps serving: the §7 colocation sanity check.
+#[test]
+fn half_training_row_serves_and_trains() {
+    let mut cfg = base_cfg(8, 0.02, 11);
+    cfg.mixed = Some(MixedRowConfig { training_fraction: 0.5, ..Default::default() });
+    let report = run(&cfg);
+    assert!(report.train.iters > 0);
+    assert!(report.hp.completed + report.lp.completed > 20);
+    // Training servers are LP by §7 pinning, so any caps the policy
+    // issues target them first; HP inference keeps its latency profile.
+    assert!(report.power_peak < 1.05);
+}

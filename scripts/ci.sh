@@ -57,4 +57,11 @@ cargo build --release
 echo "== cargo test -q"
 cargo test -q
 
+# Docs gate (ISSUE 2): the crate carries #![warn(missing_docs)] and the
+# ARCHITECTURE/README docs reference rustdoc items — keep both honest by
+# denying all rustdoc warnings (missing docs, broken intra-doc links).
+# --lib avoids the doc-output filename collision with the same-named bin.
+echo "== cargo doc --no-deps (warnings denied)"
+RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --lib --quiet
+
 echo "CI OK"
