@@ -20,7 +20,13 @@ fn main() {
         let site = SiteSpec::demo(n_clusters);
         let mut results = Vec::new();
         for (name, parallel) in [("serial", false), ("parallel", true)] {
-            let rc = SiteRunConfig { weeks: 0.01, seed: 3, sample_s: 120.0, parallel };
+            let rc = SiteRunConfig {
+                weeks: 0.01,
+                seed: 3,
+                sample_s: 120.0,
+                parallel,
+                ..Default::default()
+            };
             let r = bench(
                 &format!("site_{n_clusters}cluster_polca_{name}"),
                 &cfg,

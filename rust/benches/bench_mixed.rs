@@ -6,11 +6,44 @@
 //! per-server power refreshes.
 
 use polca::benchkit::{bench, black_box, BenchConfig};
+use polca::cluster::telemetry::TelemetryBuffer;
 use polca::policy::engine::PolicyKind;
 use polca::simulation::{run, MixedRowConfig, SimConfig};
 
+/// ISSUE-3 satellite before/after: `TelemetryBuffer::values()` used to
+/// materialize a fresh `Vec` inside every `spike_stats` call; the
+/// statistics now run off `iter_values()`/a caller-owned scratch
+/// buffer. `alloc_per_call` measures the old shape (fresh Vec each
+/// call via `values()`), `scratch_reuse` the new one — record both
+/// when running on real hardware to document the win.
+fn bench_telemetry_stats(cfg: &BenchConfig) {
+    // One simulated day of 2 s PDU samples (43 200 points).
+    let mut tb = TelemetryBuffer::new(2.0, 90_000.0);
+    for i in 0..43_200u32 {
+        // Deterministic sawtooth with diurnal drift — shape is irrelevant,
+        // only the buffer length matters to the allocation cost.
+        let x = 0.55 + 0.25 * ((i % 97) as f64 / 97.0) + 0.1 * ((i / 1800) % 24) as f64 / 24.0;
+        tb.record(i as f64 * 2.0, x);
+    }
+    // Both sides compute the identical spike statistics; the only
+    // difference is where the contiguous sample copy lives — a fresh
+    // Vec per call (the pre-fix `values()` shape, which `spike_stats`
+    // reproduces internally) vs one reused scratch buffer.
+    let windows = [2.0, 5.0, 40.0];
+    let r = bench("telemetry_stats_alloc_per_call", cfg, 1.0, || {
+        black_box(tb.spike_stats(&windows));
+    });
+    println!("{}  [= calls/s]", r.report());
+    let mut scratch = Vec::new();
+    let r = bench("telemetry_stats_scratch_reuse", cfg, 1.0, || {
+        black_box(tb.spike_stats_with(&windows, &mut scratch));
+    });
+    println!("{}  [= calls/s]", r.report());
+}
+
 fn main() {
     let cfg = BenchConfig::slow();
+    bench_telemetry_stats(&cfg);
 
     for (name, frac) in [("inference", 0.0), ("half-training", 0.5), ("training", 1.0)] {
         let mut sim_cfg = SimConfig::default();

@@ -40,6 +40,21 @@ pub struct PendingCommand {
 }
 
 /// The OOB channel: issue commands, poll which have taken effect.
+///
+/// ```
+/// use polca::cluster::oob::{OobChannel, OobCommand};
+///
+/// let mut ch = OobChannel::new(40.0, 5.0, 1);
+/// // The brake rides the dedicated 5 s fast path...
+/// let apply_at = ch.issue(0.0, OobCommand::PowerBrake).unwrap();
+/// assert_eq!(apply_at, 5.0);
+/// // ...and a latency storm on the management network (fault
+/// // injection) stretches only the slow cap path.
+/// ch.set_latency_mult(4.0);
+/// assert_eq!(ch.issue(0.0, OobCommand::PowerBrake), Some(5.0));
+/// assert_eq!(ch.issue(0.0, OobCommand::ReleaseBrake), Some(5.0));
+/// assert_eq!(ch.due(5.0).len(), 3);
+/// ```
 #[derive(Debug, Clone)]
 pub struct OobChannel {
     /// Cap/uncap apply latency (Table 1: 40 s).
@@ -51,6 +66,10 @@ pub struct OobChannel {
     pub loss_prob: f64,
     /// Latency jitter fraction (uniform ±).
     pub jitter_frac: f64,
+    /// Multiplier on the slow-path latency (1.0 = nominal; raised during
+    /// a scheduled latency storm, [`crate::faults::FaultKind::OobStorm`]).
+    /// The brake path is a hardware signal and is never stretched.
+    pub latency_mult: f64,
     pending: Vec<PendingCommand>,
     rng: Rng,
 }
@@ -63,6 +82,7 @@ impl OobChannel {
             brake_latency_s,
             loss_prob: 0.0,
             jitter_frac: 0.0,
+            latency_mult: 1.0,
             pending: Vec::new(),
             rng: Rng::new(seed),
         }
@@ -70,9 +90,23 @@ impl OobChannel {
 
     /// Add command loss and latency jitter (failure-mode studies).
     pub fn with_unreliability(mut self, loss_prob: f64, jitter_frac: f64) -> Self {
+        self.set_unreliability(loss_prob, jitter_frac);
+        self
+    }
+
+    /// Set command loss and latency jitter in place — the scheduled-
+    /// episode form of [`OobChannel::with_unreliability`]: a fault plan
+    /// raises these at an episode start and restores the baseline at
+    /// its end.
+    pub fn set_unreliability(&mut self, loss_prob: f64, jitter_frac: f64) {
         self.loss_prob = loss_prob;
         self.jitter_frac = jitter_frac;
-        self
+    }
+
+    /// Set the slow-path latency multiplier (storm episodes; 1.0 =
+    /// nominal). Commands already in flight keep their apply times.
+    pub fn set_latency_mult(&mut self, mult: f64) {
+        self.latency_mult = mult.max(0.0);
     }
 
     /// Issue a command at time `now`; returns when it will apply, or None
@@ -82,7 +116,11 @@ impl OobChannel {
         if !cmd.is_brake_path() && self.loss_prob > 0.0 && self.rng.bool(self.loss_prob) {
             return None;
         }
-        let base = if cmd.is_brake_path() { self.brake_latency_s } else { self.cap_latency_s };
+        let base = if cmd.is_brake_path() {
+            self.brake_latency_s
+        } else {
+            self.cap_latency_s * self.latency_mult
+        };
         let jitter = if self.jitter_frac > 0.0 {
             base * self.jitter_frac * (2.0 * self.rng.f64() - 1.0)
         } else {
@@ -167,6 +205,34 @@ mod tests {
             let t = ch.issue(0.0, OobCommand::Uncap { target: Priority::Low }).unwrap();
             assert!((30.0..=50.0).contains(&t), "t={t}");
         }
+    }
+
+    #[test]
+    fn latency_storm_stretches_caps_not_brakes() {
+        let mut ch = OobChannel::new(40.0, 5.0, 0);
+        ch.set_latency_mult(4.0);
+        let t_cap = ch
+            .issue(0.0, OobCommand::FreqCap { target: Priority::Low, mhz: 1110.0 })
+            .unwrap();
+        let t_brake = ch.issue(0.0, OobCommand::PowerBrake).unwrap();
+        assert_eq!(t_cap, 160.0);
+        assert_eq!(t_brake, 5.0);
+        // Restoring the baseline ends the storm for new commands only.
+        ch.set_latency_mult(1.0);
+        let t_cap2 = ch.issue(0.0, OobCommand::Uncap { target: Priority::Low }).unwrap();
+        assert_eq!(t_cap2, 40.0);
+        // The storm-era command keeps its stretched apply time.
+        assert!(ch.has_pending(|c| matches!(c, OobCommand::FreqCap { .. })));
+        assert_eq!(ch.due(41.0).len(), 2); // brake + the post-storm uncap
+    }
+
+    #[test]
+    fn set_unreliability_episodes_toggle_loss() {
+        let mut ch = OobChannel::new(40.0, 5.0, 3);
+        ch.set_unreliability(1.0, 0.0);
+        assert!(ch.issue(0.0, OobCommand::Uncap { target: Priority::High }).is_none());
+        ch.set_unreliability(0.0, 0.0);
+        assert!(ch.issue(0.0, OobCommand::Uncap { target: Priority::High }).is_some());
     }
 
     #[test]

@@ -9,6 +9,23 @@ use crate::util::stats::{max_rise_within, Percentiles};
 
 /// Ring buffer of (time_s, normalized_row_power) samples with delayed
 /// read semantics.
+///
+/// ```
+/// use polca::cluster::telemetry::TelemetryBuffer;
+///
+/// let mut tb = TelemetryBuffer::new(2.0, 60.0);
+/// tb.record(0.0, 0.70);
+/// tb.record(2.0, 0.80);
+/// tb.record(4.0, 0.90);
+/// // The power manager reads 2 s late: at t=4 it sees the t=2 sample.
+/// assert_eq!(tb.visible_at(4.0), Some((2.0, 0.80)));
+/// // A dropout window pins visibility to what was visible at its start.
+/// tb.freeze(4.0, 10.0);
+/// tb.record(6.0, 1.00);
+/// assert_eq!(tb.visible_at(6.0), Some((2.0, 0.80)));
+/// // After the window, the fresh backlog becomes visible again.
+/// assert_eq!(tb.visible_at(10.0), Some((6.0, 1.00)));
+/// ```
 #[derive(Debug, Clone)]
 pub struct TelemetryBuffer {
     samples: VecDeque<(f64, f64)>,
@@ -16,12 +33,27 @@ pub struct TelemetryBuffer {
     pub delay_s: f64,
     /// Retention horizon for spike statistics.
     pub retain_s: f64,
+    /// Active dropout window with the reading pinned for its duration:
+    /// `(from_s, until_s, sample visible at from_s)`. The sample is
+    /// captured at freeze time so retention pruning during a long
+    /// window can never turn the stale reading into no reading.
+    freeze: Option<(f64, f64, Option<(f64, f64)>)>,
 }
 
 impl TelemetryBuffer {
     /// Empty buffer with the given read delay and retention horizon.
     pub fn new(delay_s: f64, retain_s: f64) -> Self {
-        TelemetryBuffer { samples: VecDeque::new(), delay_s, retain_s }
+        TelemetryBuffer { samples: VecDeque::new(), delay_s, retain_s, freeze: None }
+    }
+
+    /// Start a telemetry dropout: for reads in `[from_s, until_s)` the
+    /// power manager keeps seeing whatever was visible at `from_s` (the
+    /// meter keeps recording ground truth throughout). A later call
+    /// replaces any previous window.
+    pub fn freeze(&mut self, from_s: f64, until_s: f64) {
+        self.freeze = None; // pin against the normal (unfrozen) view
+        let pinned = self.visible_at(from_s);
+        self.freeze = Some((from_s, until_s, pinned));
     }
 
     /// Record an instantaneous PDU reading at time `t`.
@@ -39,8 +71,15 @@ impl TelemetryBuffer {
     }
 
     /// What the power manager sees at time `t`: the newest sample that is
-    /// at least `delay_s` old. None until the pipeline fills.
+    /// at least `delay_s` old. None until the pipeline fills. During a
+    /// [`TelemetryBuffer::freeze`] window the answer is pinned to the
+    /// window's start — the reading goes *stale*, it does not go away.
     pub fn visible_at(&self, t: f64) -> Option<(f64, f64)> {
+        if let Some((from, until, pinned)) = self.freeze {
+            if t >= from && t < until {
+                return pinned;
+            }
+        }
         let cutoff = t - self.delay_s;
         self.samples.iter().rev().find(|&&(st, _)| st <= cutoff).copied()
     }
@@ -60,9 +99,17 @@ impl TelemetryBuffer {
         self.samples.is_empty()
     }
 
-    /// Values in chronological order (for stats/export).
+    /// Values in chronological order, allocation-free (the hot path for
+    /// the per-run statistics; prefer this over [`TelemetryBuffer::values`]).
+    pub fn iter_values(&self) -> impl Iterator<Item = f64> + '_ {
+        self.samples.iter().map(|&(_, p)| p)
+    }
+
+    /// Values in chronological order as a fresh `Vec` (export paths;
+    /// statistics use [`TelemetryBuffer::iter_values`] or a caller-owned
+    /// scratch buffer via [`TelemetryBuffer::spike_stats_with`] instead).
     pub fn values(&self) -> Vec<f64> {
-        self.samples.iter().map(|&(_, p)| p).collect()
+        self.iter_values().collect()
     }
 
     /// Sampling period estimate from the buffer.
@@ -75,15 +122,27 @@ impl TelemetryBuffer {
         (t1 - t0) / (self.samples.len() - 1) as f64
     }
 
-    /// Table 2 spike statistics over the retained window.
+    /// Table 2 spike statistics over the retained window (allocates a
+    /// fresh scratch buffer; callers on a hot loop should hold one and
+    /// use [`TelemetryBuffer::spike_stats_with`]).
     pub fn spike_stats(&self, windows_s: &[f64]) -> Vec<SpikeStats> {
-        let xs = self.values();
+        let mut scratch = Vec::new();
+        self.spike_stats_with(windows_s, &mut scratch)
+    }
+
+    /// Table 2 spike statistics, reusing `scratch` for the contiguous
+    /// sample copy the sliding-window scan needs (cleared and refilled;
+    /// repeated calls amortize the allocation to zero).
+    pub fn spike_stats_with(&self, windows_s: &[f64], scratch: &mut Vec<f64>) -> Vec<SpikeStats> {
+        scratch.clear();
+        scratch.extend(self.iter_values());
         let period = self.period_s();
         windows_s
             .iter()
             .map(|&w| {
-                let nsamples = if period.is_nan() { 1 } else { (w / period).round().max(1.0) as usize };
-                SpikeStats { window_s: w, max_rise: max_rise_within(&xs, nsamples) }
+                let nsamples =
+                    if period.is_nan() { 1 } else { (w / period).round().max(1.0) as usize };
+                SpikeStats { window_s: w, max_rise: max_rise_within(scratch, nsamples) }
             })
             .collect()
     }
@@ -91,7 +150,7 @@ impl TelemetryBuffer {
     /// Peak and percentile utilization over the retained window.
     pub fn utilization(&self) -> (f64, f64, f64) {
         let mut p = Percentiles::new();
-        for &(_, v) in &self.samples {
+        for v in self.iter_values() {
             p.push(v);
         }
         (p.max(), p.p99(), p.mean())
@@ -151,6 +210,68 @@ mod tests {
         // within 40s (20 samples): full rise 0.3
         assert!((stats[1].max_rise - 0.3).abs() < 1e-12);
         assert!(stats[1].max_rise >= stats[0].max_rise);
+    }
+
+    #[test]
+    fn freeze_window_pins_then_releases_visibility() {
+        let mut tb = TelemetryBuffer::new(2.0, 100.0);
+        for i in 0..10 {
+            tb.record(i as f64, 0.5 + 0.01 * i as f64);
+        }
+        let at = |i: i32| Some((i as f64, 0.5 + 0.01 * i as f64));
+        assert_eq!(tb.visible_at(9.0), at(7));
+        tb.freeze(9.0, 14.0);
+        for i in 10..16 {
+            tb.record(i as f64, 0.5 + 0.01 * i as f64);
+        }
+        // Inside the window: pinned to what was visible at 9.0.
+        assert_eq!(tb.visible_at(10.0), at(7));
+        assert_eq!(tb.visible_at(13.9), at(7));
+        // After the window: the normal 2 s delay resumes.
+        assert_eq!(tb.visible_at(14.0), at(12));
+        // Ground truth never froze.
+        assert_eq!(tb.latest(), at(15));
+    }
+
+    #[test]
+    fn frozen_reading_survives_retention_pruning() {
+        // A dropout longer than the retention horizon: the pinned
+        // sample is evicted from the buffer, but the stale reading must
+        // stay readable — "the reading goes stale, it does not go away".
+        let mut tb = TelemetryBuffer::new(2.0, 60.0);
+        for i in 0..=50 {
+            tb.record(i as f64 * 2.0, 0.5);
+        }
+        tb.freeze(100.0, 300.0);
+        let pinned = tb.visible_at(150.0);
+        assert_eq!(pinned, Some((98.0, 0.5)));
+        // Keep recording well past the retention horizon.
+        for i in 51..=120 {
+            tb.record(i as f64 * 2.0, 0.9);
+        }
+        assert_eq!(tb.visible_at(230.0), pinned, "stale, not gone");
+        // After the window the backlog (newest retained sample at
+        // t=240) is visible again.
+        assert_eq!(tb.visible_at(300.0), Some((240.0, 0.9)));
+    }
+
+    #[test]
+    fn iter_values_matches_values_and_scratch_reuse() {
+        let mut tb = TelemetryBuffer::new(0.0, 1000.0);
+        let series = [0.5, 0.5, 0.5, 0.6, 0.7, 0.8, 0.5, 0.5];
+        for (i, &v) in series.iter().enumerate() {
+            tb.record(i as f64 * 2.0, v);
+        }
+        assert_eq!(tb.iter_values().collect::<Vec<_>>(), tb.values());
+        let mut scratch = Vec::new();
+        let a = tb.spike_stats(&[2.0, 40.0]);
+        let b = tb.spike_stats_with(&[2.0, 40.0], &mut scratch);
+        assert_eq!(a, b);
+        assert_eq!(scratch.len(), series.len());
+        // Second call reuses the scratch capacity.
+        let cap = scratch.capacity();
+        tb.spike_stats_with(&[2.0], &mut scratch);
+        assert_eq!(scratch.capacity(), cap);
     }
 
     #[test]

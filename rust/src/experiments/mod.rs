@@ -5,6 +5,7 @@
 
 pub mod characterization;
 pub mod evaluation;
+pub mod faults;
 pub mod fleet;
 pub mod mixed;
 
@@ -80,7 +81,7 @@ pub fn all_ids() -> Vec<&'static str> {
     vec![
         "table1", "fig2", "fig4", "fig5", "fig6", "fig7", "fig8", "fig9", "fig11", "table2",
         "table3", "table4", "table5", "fig13", "fig14", "fig15a", "fig15b", "fig16", "fig17",
-        "fig18", "fig19", "site-headroom", "mixed-row",
+        "fig18", "fig19", "site-headroom", "mixed-row", "fault-matrix",
     ]
 }
 
@@ -112,6 +113,7 @@ pub fn run_experiment(id: &str, depth: Depth, seed: u64) -> anyhow::Result<Figur
         "fig18" => ev::fig18(depth, seed),
         "site-headroom" => fleet::site_headroom(depth, seed),
         "mixed-row" => mixed::mixed_row(depth, seed),
+        "fault-matrix" => faults::fault_matrix(depth, seed),
         other => anyhow::bail!("unknown experiment '{other}' (see `polca figure list`)"),
     })
 }
@@ -123,7 +125,7 @@ mod tests {
     #[test]
     fn registry_is_complete_and_unique() {
         let ids = all_ids();
-        assert_eq!(ids.len(), 23);
+        assert_eq!(ids.len(), 24);
         let mut dedup = ids.clone();
         dedup.sort();
         dedup.dedup();

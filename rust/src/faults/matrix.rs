@@ -1,0 +1,308 @@
+//! The scenario × policy fault matrix: run every built-in fault
+//! scenario under every policy on one oversubscribed row and score
+//! containment. This is the grid behind `polca faults matrix` and the
+//! `fault-matrix` experiment id.
+//!
+//! Invariants the grid itself checks (the ISSUE-3 acceptance shape):
+//! the "none" column is produced by injecting an *empty* plan and must
+//! match a run with no plan at all bit-for-bit ([`MatrixOutcome::clean_match`]),
+//! and every injected-fault cell reports a finite time-to-contain under
+//! at least one policy ([`MatrixOutcome::scenarios_containable`]).
+
+use crate::metrics::{ResilienceMetrics, RunReport};
+use crate::policy::engine::PolicyKind;
+use crate::simulation::{power_scale_for_row, run, SimConfig};
+use crate::util::csv::Csv;
+use crate::util::table::{f, Table};
+
+use super::plan::FaultPlan;
+
+/// Matrix parameters: one row configuration shared by every cell.
+#[derive(Debug, Clone)]
+pub struct MatrixConfig {
+    /// Scenario names (see [`FaultPlan::scenario_names`]).
+    pub scenarios: Vec<String>,
+    /// Policies to grid against (columns).
+    pub policies: Vec<PolicyKind>,
+    /// Baseline (budget) server count of the row.
+    pub servers: usize,
+    /// Added-server fraction (oversubscription) — faults should hit a
+    /// row that actually exercises the control loop.
+    pub added: f64,
+    /// Simulated horizon, weeks.
+    pub weeks: f64,
+    /// Seed (shared across cells: one workload realization).
+    pub seed: u64,
+    /// Containment escalation passed to every cell (including the
+    /// no-fault column, so the comparison is policy-for-policy fair).
+    pub escalation_s: Option<f64>,
+}
+
+impl Default for MatrixConfig {
+    fn default() -> Self {
+        MatrixConfig {
+            scenarios: FaultPlan::scenario_names().iter().map(|s| s.to_string()).collect(),
+            policies: PolicyKind::all().to_vec(),
+            servers: 16,
+            added: 0.30,
+            weeks: 0.1,
+            seed: 1,
+            escalation_s: Some(120.0),
+        }
+    }
+}
+
+impl MatrixConfig {
+    /// The simulated horizon in seconds (scenario windows scale to it).
+    pub fn horizon_s(&self) -> f64 {
+        self.weeks * 7.0 * 86_400.0
+    }
+
+    /// The cell configuration for one (plan, policy) pair.
+    pub fn sim_config(&self, plan: Option<FaultPlan>, policy: PolicyKind) -> SimConfig {
+        let mut cfg = SimConfig::default();
+        cfg.policy_kind = policy;
+        cfg.weeks = self.weeks;
+        cfg.exp.seed = self.seed;
+        cfg.exp.row.num_servers = self.servers;
+        cfg.deployed_servers = (self.servers as f64 * (1.0 + self.added)).round() as usize;
+        cfg.power_scale = power_scale_for_row(self.servers);
+        cfg.brake_escalation_s = self.escalation_s;
+        cfg.faults = plan;
+        cfg
+    }
+}
+
+/// One cell of the grid: containment observables for a scenario run
+/// under one policy.
+#[derive(Debug, Clone)]
+pub struct MatrixCell {
+    /// Scenario name ("none" = the empty-plan control column).
+    pub scenario: String,
+    /// Policy the cell ran under.
+    pub policy: PolicyKind,
+    /// Peak of the *reported* readings (meter bias corrupts this).
+    pub reported_peak: f64,
+    /// Peak of true power over effective budget (the ground truth).
+    pub true_peak: f64,
+    /// Seconds the row spent over its effective budget.
+    pub violation_s: f64,
+    /// Largest instantaneous excess over the effective budget, watts.
+    pub peak_overshoot_w: f64,
+    /// Worst incident time-to-contain ([`f64::INFINITY`] = never).
+    pub time_to_contain_s: f64,
+    /// Whether every injected incident was contained before the horizon.
+    pub contained: bool,
+    /// Policy brake decisions.
+    pub brake_events: u64,
+    /// Fast-path brake deliveries.
+    pub brake_commands: u64,
+    /// Slow-path cap commands that took effect.
+    pub cap_commands: u64,
+    /// Slow-path commands re-issued after an apply timeout.
+    pub reissued_commands: u64,
+}
+
+impl MatrixCell {
+    fn from_report(scenario: &str, policy: PolicyKind, report: &RunReport) -> MatrixCell {
+        let r = &report.resilience;
+        MatrixCell {
+            scenario: scenario.to_string(),
+            policy,
+            reported_peak: report.power_peak,
+            true_peak: r.true_peak_norm,
+            violation_s: r.violation_s,
+            peak_overshoot_w: r.peak_overshoot_w,
+            time_to_contain_s: r.worst_time_to_contain_s(),
+            contained: r.all_contained(),
+            brake_events: report.brake_events,
+            brake_commands: report.brake_commands,
+            cap_commands: report.cap_commands,
+            reissued_commands: r.reissued_commands,
+        }
+    }
+}
+
+/// The full grid plus the cross-cell verdicts.
+#[derive(Debug, Clone)]
+pub struct MatrixOutcome {
+    /// Cells in scenario-major, policy-minor order.
+    pub cells: Vec<MatrixCell>,
+    /// Whether every policy's "none" column matched its no-plan clean
+    /// run exactly (events, completions, commands, power statistics).
+    pub clean_match: bool,
+    /// The horizon the scenario windows were scaled to, seconds.
+    pub horizon_s: f64,
+}
+
+impl MatrixOutcome {
+    /// Cells of one scenario, in policy order.
+    pub fn row(&self, scenario: &str) -> Vec<&MatrixCell> {
+        self.cells.iter().filter(|c| c.scenario == scenario).collect()
+    }
+
+    /// Scenario names present in the grid, in insertion order.
+    pub fn scenarios(&self) -> Vec<&str> {
+        let mut seen = Vec::new();
+        for c in &self.cells {
+            if !seen.contains(&c.scenario.as_str()) {
+                seen.push(c.scenario.as_str());
+            }
+        }
+        seen
+    }
+
+    /// Whether every injected-fault scenario has at least one policy
+    /// that contains it (finite worst time-to-contain). The "none"
+    /// column is trivially contained and excluded.
+    pub fn scenarios_containable(&self) -> bool {
+        self.scenarios()
+            .iter()
+            .filter(|s| **s != "none")
+            .all(|s| self.row(s).iter().any(|c| c.contained))
+    }
+
+    /// Render the grid as a table (shared by the CLI and the
+    /// `fault-matrix` experiment).
+    pub fn table(&self) -> Table {
+        let mut t = Table::new(
+            "Fault matrix: scenario × policy containment",
+            &[
+                "scenario", "policy", "reported peak", "true peak", "viol s", "overshoot W",
+                "ttc", "brakes", "caps", "reissued",
+            ],
+        );
+        for c in &self.cells {
+            t.row(vec![
+                c.scenario.clone(),
+                c.policy.name().to_string(),
+                f(c.reported_peak, 3),
+                f(c.true_peak, 3),
+                f(c.violation_s, 1),
+                f(c.peak_overshoot_w, 0),
+                ResilienceMetrics::fmt_ttc(c.time_to_contain_s),
+                c.brake_events.to_string(),
+                c.cap_commands.to_string(),
+                c.reissued_commands.to_string(),
+            ]);
+        }
+        t
+    }
+
+    /// The grid as CSV (one row per cell).
+    pub fn csv(&self) -> Csv {
+        let mut csv = Csv::new(&[
+            "scenario", "policy", "reported_peak", "true_peak", "violation_s",
+            "peak_overshoot_w", "time_to_contain_s", "contained", "brake_events",
+            "brake_commands", "cap_commands", "reissued_commands",
+        ]);
+        for c in &self.cells {
+            csv.row_strs(&[
+                c.scenario.clone(),
+                c.policy.name().to_string(),
+                f(c.reported_peak, 4),
+                f(c.true_peak, 4),
+                f(c.violation_s, 2),
+                f(c.peak_overshoot_w, 1),
+                if c.time_to_contain_s.is_infinite() {
+                    "inf".to_string()
+                } else {
+                    f(c.time_to_contain_s, 2)
+                },
+                (c.contained as u8).to_string(),
+                c.brake_events.to_string(),
+                c.brake_commands.to_string(),
+                c.cap_commands.to_string(),
+                c.reissued_commands.to_string(),
+            ]);
+        }
+        csv
+    }
+}
+
+/// Two runs agree on everything a fault could have perturbed.
+fn reports_match(a: &RunReport, b: &RunReport) -> bool {
+    a.events == b.events
+        && a.hp.completed == b.hp.completed
+        && a.lp.completed == b.lp.completed
+        && a.hp.dropped == b.hp.dropped
+        && a.lp.dropped == b.lp.dropped
+        && a.brake_events == b.brake_events
+        && a.cap_commands == b.cap_commands
+        && a.uncap_commands == b.uncap_commands
+        && a.brake_commands == b.brake_commands
+        && a.power_peak == b.power_peak
+        && a.power_mean == b.power_mean
+        && a.spike_2s == b.spike_2s
+        && a.resilience.violation_s == b.resilience.violation_s
+        && a.resilience.reissued_commands == b.resilience.reissued_commands
+}
+
+/// Run the grid: every scenario under every policy, plus one no-plan
+/// clean run per policy to certify the "none" column.
+pub fn run_matrix(mc: &MatrixConfig) -> anyhow::Result<MatrixOutcome> {
+    let horizon_s = mc.horizon_s();
+    let mut cells = Vec::with_capacity(mc.scenarios.len() * mc.policies.len());
+    let mut clean_match = true;
+    // One clean (no-plan) reference per policy.
+    let cleans: Vec<RunReport> =
+        mc.policies.iter().map(|&p| run(&mc.sim_config(None, p))).collect();
+    for scenario in &mc.scenarios {
+        let plan = FaultPlan::scenario(scenario, horizon_s)?;
+        for (pi, &policy) in mc.policies.iter().enumerate() {
+            let report = run(&mc.sim_config(Some(plan.clone()), policy));
+            if scenario == "none" {
+                clean_match &= reports_match(&report, &cleans[pi]);
+            }
+            cells.push(MatrixCell::from_report(scenario, policy, &report));
+        }
+    }
+    Ok(MatrixOutcome { cells, clean_match, horizon_s })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// A small grid exercising the two acceptance invariants: the
+    /// no-fault column is bit-identical to the clean run, and every
+    /// fault scenario is containable under at least one policy.
+    #[test]
+    fn quick_matrix_holds_the_acceptance_invariants() {
+        let mc = MatrixConfig {
+            scenarios: vec![
+                "none".into(),
+                "cap-ignore".into(),
+                "feed-loss".into(),
+            ],
+            policies: vec![PolicyKind::Polca, PolicyKind::NoCap],
+            servers: 12,
+            added: 0.5,
+            weeks: 0.05,
+            seed: 3,
+            escalation_s: Some(120.0),
+        };
+        let out = run_matrix(&mc).unwrap();
+        assert_eq!(out.cells.len(), 6);
+        assert!(out.clean_match, "the none column must match the clean run");
+        assert!(out.scenarios_containable(), "{:#?}", out.cells);
+        // The none column reports no incidents at all.
+        for c in out.row("none") {
+            assert!(c.contained);
+            assert_eq!(c.time_to_contain_s, 0.0);
+        }
+        // Rendering covers every cell.
+        assert!(out.table().render().contains("cap-ignore"));
+    }
+
+    #[test]
+    fn unknown_scenario_errors() {
+        let mc = MatrixConfig {
+            scenarios: vec!["bogus".into()],
+            policies: vec![PolicyKind::NoCap],
+            weeks: 0.01,
+            ..Default::default()
+        };
+        assert!(run_matrix(&mc).is_err());
+    }
+}

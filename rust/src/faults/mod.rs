@@ -1,0 +1,72 @@
+//! Fault injection & resilience: prove POLCA stays safe when the
+//! telemetry and controls misbehave.
+//!
+//! The paper's engineering claim is not the headroom number but that
+//! oversubscription can be made *robust and reliable* despite the
+//! "stringent set of telemetry and controls that GPUs offer in a
+//! virtualized environment" (§6–§7). The rest of this crate simulates a
+//! well-behaved control plane; this module is the adversary:
+//!
+//! * [`FaultPlan`] / [`FaultKind`] — a deterministic, seedable timeline
+//!   of fault episodes spanning the whole control loop: telemetry
+//!   dropouts, OOB loss bursts and latency storms, cap-ignoring
+//!   servers, meter miscalibration, and feed-loss budget cuts.
+//! * [`matrix`] — the scenario × policy containment grid
+//!   (`polca faults matrix`, experiment id `fault-matrix`).
+//! * Scoring lives in [`crate::metrics::ResilienceMetrics`]: ground-truth
+//!   budget-violation seconds, peak overshoot watts, and per-incident
+//!   time-to-contain — settled exactly on every power change, so a
+//!   lying meter cannot hide a violation from the scoreboard.
+//! * The planner's fault-mode answer is
+//!   [`crate::fleet::planner::plan_site_under_faults`]: the *derated*
+//!   oversubscription level that stays within a containment SLO even
+//!   while the fault plan replays, printed next to the clean number.
+//!
+//! The runbook mapping each fault kind to the paper passage motivating
+//! it, the knob that injects it, the metric that detects it, and the
+//! expected policy response is `docs/RELIABILITY.md`.
+
+pub mod matrix;
+pub mod plan;
+
+pub use matrix::{run_matrix, MatrixCell, MatrixConfig, MatrixOutcome};
+pub use plan::{FaultEvent, FaultKind, FaultPlan};
+
+/// Containment SLO for fault-mode planning: how much budget violation a
+/// site operator tolerates while a fault plan replays (the knob behind
+/// [`crate::fleet::planner::plan_site_under_faults`]).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ContainmentSlo {
+    /// Max total seconds over the effective budget, per cluster run.
+    pub max_violation_s: f64,
+    /// Max per-incident time-to-contain, seconds (infinite = never
+    /// contained, which always fails).
+    pub max_time_to_contain_s: f64,
+    /// Max instantaneous overshoot as a fraction of the cluster budget
+    /// (the UPS tolerates 133% for 10 s, §4.E — stay well under it).
+    pub max_overshoot_frac: f64,
+}
+
+impl Default for ContainmentSlo {
+    fn default() -> Self {
+        ContainmentSlo {
+            max_violation_s: 60.0,
+            max_time_to_contain_s: 120.0,
+            max_overshoot_frac: 0.25,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn containment_slo_defaults_are_sane() {
+        let slo = ContainmentSlo::default();
+        assert!(slo.max_violation_s > 0.0);
+        assert!(slo.max_time_to_contain_s >= slo.max_violation_s);
+        // Stay under the §4.E UPS tolerance band (133% for 10 s).
+        assert!(slo.max_overshoot_frac < 0.33);
+    }
+}

@@ -1,0 +1,331 @@
+//! Deterministic fault timelines: what breaks, when, and for how long.
+//!
+//! A [`FaultPlan`] is a seedable, fully deterministic list of
+//! [`FaultEvent`] episodes that the row simulator replays alongside the
+//! workload (see [`crate::simulation`]). Each episode degrades one link
+//! of the paper's control loop — the telemetry the power manager reads,
+//! the OOB channel it actuates through, the servers that are supposed
+//! to obey, the meter calibration, or the electrical budget itself —
+//! so a policy can be *falsified* (shown to lose containment) rather
+//! than merely scored on a well-behaved control plane.
+//!
+//! The same plan injected into the same seeded simulation yields a
+//! bit-identical run; an empty plan is bit-identical to not injecting
+//! at all (property-tested in `tests/integration_faults.rs`).
+
+use crate::util::rng::Rng;
+
+/// One way the control plane can misbehave (docs/RELIABILITY.md maps
+/// each kind to the paper passage motivating it and the expected
+/// policy response).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum FaultKind {
+    /// Telemetry dropout: the PDU pipeline stalls and the power manager
+    /// keeps reading the last sample that was visible when the episode
+    /// began ([`crate::cluster::telemetry::TelemetryBuffer::freeze`]).
+    /// The meter itself keeps measuring — only visibility degrades.
+    TelemetryFreeze,
+    /// OOB command-loss burst and latency storm on the slow (SMBPBI via
+    /// BMC) path. The brake path is a dedicated hardware signal and is
+    /// unaffected (§4: "extremely reliable").
+    OobStorm {
+        /// Probability a slow-path command is silently lost.
+        loss_prob: f64,
+        /// Multiplier on the slow-path apply latency (storm congestion).
+        latency_mult: f64,
+        /// Latency jitter fraction (uniform ±) during the storm.
+        jitter_frac: f64,
+    },
+    /// Cap-ignore servers: a fraction of the row acknowledges frequency
+    /// commands but does not apply them (wedged GPU driver / BMC
+    /// firmware). Because the commands *are* acknowledged, re-issuing
+    /// cannot repair this — only the brake path contains it.
+    CapIgnore {
+        /// Fraction of deployed servers that ignore cap/uncap commands
+        /// (the first `ceil(frac · n)` slots of the row, deterministic).
+        server_frac: f64,
+    },
+    /// Meter miscalibration: reported power is `mult ×` the true draw.
+    /// `mult < 1` makes the policy under-react (the dangerous case).
+    MeterBias {
+        /// Multiplicative bias on every reported reading.
+        mult: f64,
+    },
+    /// Feed loss: a redundancy event cuts the effective power budget to
+    /// `budget_frac ×` nominal for the duration ("From Servers to
+    /// Sites": site planning must survive redundancy events). The power
+    /// manager is informed — its normalized reading jumps accordingly.
+    FeedLoss {
+        /// Remaining fraction of the nominal budget during the episode.
+        budget_frac: f64,
+    },
+}
+
+impl FaultKind {
+    /// Stable label used in reports, CSVs and scenario names.
+    pub fn label(&self) -> &'static str {
+        match self {
+            FaultKind::TelemetryFreeze => "telemetry-freeze",
+            FaultKind::OobStorm { .. } => "oob-storm",
+            FaultKind::CapIgnore { .. } => "cap-ignore",
+            FaultKind::MeterBias { .. } => "meter-bias",
+            FaultKind::FeedLoss { .. } => "feed-loss",
+        }
+    }
+}
+
+/// One scheduled fault episode.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FaultEvent {
+    /// What breaks.
+    pub kind: FaultKind,
+    /// When the episode begins, seconds into the run.
+    pub start_s: f64,
+    /// Episode length, seconds.
+    pub duration_s: f64,
+}
+
+impl FaultEvent {
+    /// When the episode ends (state is restored), seconds into the run.
+    pub fn end_s(&self) -> f64 {
+        self.start_s + self.duration_s
+    }
+}
+
+/// A deterministic timeline of fault episodes injected into one run.
+///
+/// ```
+/// use polca::faults::{FaultKind, FaultPlan};
+///
+/// let plan = FaultPlan::new()
+///     .with(FaultKind::MeterBias { mult: 0.85 }, 600.0, 300.0)
+///     .with(FaultKind::FeedLoss { budget_frac: 0.75 }, 1800.0, 300.0);
+/// assert_eq!(plan.len(), 2);
+/// assert!(!plan.is_empty());
+/// // Episodes come back sorted by start time and validated.
+/// let events = plan.normalized().unwrap();
+/// assert!(events[0].start_s <= events[1].start_s);
+/// ```
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct FaultPlan {
+    /// The scheduled episodes (order irrelevant; [`FaultPlan::normalized`]
+    /// sorts by start time).
+    pub events: Vec<FaultEvent>,
+}
+
+impl FaultPlan {
+    /// An empty plan (injects nothing; bit-identical to no plan at all).
+    pub fn new() -> Self {
+        FaultPlan { events: Vec::new() }
+    }
+
+    /// Builder: append one episode.
+    pub fn with(mut self, kind: FaultKind, start_s: f64, duration_s: f64) -> Self {
+        self.events.push(FaultEvent { kind, start_s, duration_s });
+        self
+    }
+
+    /// Scheduled episode count.
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    /// Whether the plan injects nothing.
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// The episodes sorted by start time, validated: non-negative times
+    /// and durations, and no two episodes of the same kind overlapping
+    /// (same-kind overlap would make the restore-on-end state ambiguous).
+    pub fn normalized(&self) -> anyhow::Result<Vec<FaultEvent>> {
+        let mut evs = self.events.clone();
+        for e in &evs {
+            let bad_start = e.start_s.is_nan() || e.start_s < 0.0;
+            let bad_dur = e.duration_s.is_nan() || e.duration_s <= 0.0;
+            if bad_start || bad_dur {
+                anyhow::bail!(
+                    "fault episode '{}' needs start >= 0 and duration > 0 (got {} / {})",
+                    e.kind.label(),
+                    e.start_s,
+                    e.duration_s
+                );
+            }
+        }
+        evs.sort_by(|a, b| {
+            a.start_s
+                .partial_cmp(&b.start_s)
+                .unwrap()
+                .then(a.duration_s.partial_cmp(&b.duration_s).unwrap())
+        });
+        for w in evs.windows(2) {
+            if w[0].kind.label() == w[1].kind.label() && w[1].start_s < w[0].end_s() {
+                anyhow::bail!(
+                    "overlapping '{}' episodes at {}s and {}s — merge them into one window",
+                    w[0].kind.label(),
+                    w[0].start_s,
+                    w[1].start_s
+                );
+            }
+        }
+        Ok(evs)
+    }
+
+    /// A seedable random plan: `episodes` non-overlapping episodes of
+    /// random kinds spread over `[0, horizon_s)`. Deterministic given
+    /// the seed — the timeline itself is data, so two runs of the same
+    /// plan see the same faults at the same instants.
+    pub fn random(seed: u64, horizon_s: f64, episodes: usize) -> FaultPlan {
+        let mut rng = Rng::new(seed ^ 0xFA_17_5EED);
+        let mut plan = FaultPlan::new();
+        if episodes == 0 || horizon_s <= 0.0 {
+            return plan;
+        }
+        let slot = horizon_s / episodes as f64;
+        for i in 0..episodes {
+            // Each episode lives in the middle of its own slot, so no
+            // two episodes (of any kind) can overlap by construction.
+            let start = i as f64 * slot + slot * rng.range_f64(0.1, 0.4);
+            let duration = slot * rng.range_f64(0.2, 0.5);
+            let kind = match rng.below(5) {
+                0 => FaultKind::TelemetryFreeze,
+                1 => FaultKind::OobStorm {
+                    loss_prob: rng.range_f64(0.5, 0.95),
+                    latency_mult: rng.range_f64(2.0, 6.0),
+                    jitter_frac: 0.25,
+                },
+                2 => FaultKind::CapIgnore { server_frac: rng.range_f64(0.25, 1.0) },
+                3 => FaultKind::MeterBias { mult: rng.range_f64(0.75, 0.95) },
+                _ => FaultKind::FeedLoss { budget_frac: rng.range_f64(0.6, 0.9) },
+            };
+            plan = plan.with(kind, start, duration);
+        }
+        plan
+    }
+
+    /// Names of the built-in scenarios, in matrix order. "none" is the
+    /// control column: an empty plan, bit-identical to the clean run.
+    pub fn scenario_names() -> &'static [&'static str] {
+        &[
+            "none",
+            "telemetry-freeze",
+            "oob-storm",
+            "cap-ignore",
+            "meter-bias",
+            "feed-loss",
+            "cascade",
+        ]
+    }
+
+    /// A named scenario placed relative to the run horizon: one episode
+    /// window in the middle third of the run (so containment is always
+    /// observable before the horizon), or a cascade of three. Errors on
+    /// unknown names.
+    pub fn scenario(name: &str, horizon_s: f64) -> anyhow::Result<FaultPlan> {
+        let h = horizon_s;
+        let plan = match name {
+            "none" => FaultPlan::new(),
+            "telemetry-freeze" => {
+                FaultPlan::new().with(FaultKind::TelemetryFreeze, 0.30 * h, 0.20 * h)
+            }
+            "oob-storm" => FaultPlan::new().with(
+                FaultKind::OobStorm { loss_prob: 0.85, latency_mult: 4.0, jitter_frac: 0.25 },
+                0.30 * h,
+                0.20 * h,
+            ),
+            "cap-ignore" => {
+                FaultPlan::new().with(FaultKind::CapIgnore { server_frac: 1.0 }, 0.30 * h, 0.20 * h)
+            }
+            "meter-bias" => {
+                FaultPlan::new().with(FaultKind::MeterBias { mult: 0.80 }, 0.30 * h, 0.20 * h)
+            }
+            "feed-loss" => {
+                FaultPlan::new().with(FaultKind::FeedLoss { budget_frac: 0.75 }, 0.30 * h, 0.20 * h)
+            }
+            "cascade" => FaultPlan::new()
+                .with(FaultKind::TelemetryFreeze, 0.20 * h, 0.10 * h)
+                .with(
+                    FaultKind::OobStorm { loss_prob: 0.85, latency_mult: 4.0, jitter_frac: 0.25 },
+                    0.35 * h,
+                    0.15 * h,
+                )
+                .with(FaultKind::FeedLoss { budget_frac: 0.75 }, 0.55 * h, 0.10 * h),
+            other => anyhow::bail!(
+                "unknown fault scenario '{other}' (known: {})",
+                Self::scenario_names().join(", ")
+            ),
+        };
+        Ok(plan)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builder_and_normalize_sort() {
+        let plan = FaultPlan::new()
+            .with(FaultKind::FeedLoss { budget_frac: 0.8 }, 500.0, 100.0)
+            .with(FaultKind::TelemetryFreeze, 100.0, 50.0);
+        let evs = plan.normalized().unwrap();
+        assert_eq!(evs[0].kind.label(), "telemetry-freeze");
+        assert_eq!(evs[1].end_s(), 600.0);
+    }
+
+    #[test]
+    fn same_kind_overlap_rejected_different_kind_allowed() {
+        let bad = FaultPlan::new()
+            .with(FaultKind::TelemetryFreeze, 100.0, 200.0)
+            .with(FaultKind::TelemetryFreeze, 150.0, 50.0);
+        assert!(bad.normalized().is_err());
+        let ok = FaultPlan::new()
+            .with(FaultKind::TelemetryFreeze, 100.0, 200.0)
+            .with(FaultKind::MeterBias { mult: 0.9 }, 150.0, 50.0);
+        assert_eq!(ok.normalized().unwrap().len(), 2);
+    }
+
+    #[test]
+    fn invalid_times_rejected() {
+        assert!(FaultPlan::new()
+            .with(FaultKind::TelemetryFreeze, -1.0, 10.0)
+            .normalized()
+            .is_err());
+        assert!(FaultPlan::new()
+            .with(FaultKind::TelemetryFreeze, 1.0, 0.0)
+            .normalized()
+            .is_err());
+    }
+
+    #[test]
+    fn random_is_deterministic_and_valid() {
+        let a = FaultPlan::random(7, 86_400.0, 6);
+        let b = FaultPlan::random(7, 86_400.0, 6);
+        assert_eq!(a, b);
+        assert_eq!(a.len(), 6);
+        let evs = a.normalized().unwrap();
+        // Slot construction: already in start order, all inside the horizon.
+        for (i, e) in evs.iter().enumerate() {
+            assert!(e.start_s >= 0.0 && e.end_s() <= 86_400.0, "episode {i}: {e:?}");
+        }
+        assert_ne!(FaultPlan::random(8, 86_400.0, 6), a);
+    }
+
+    #[test]
+    fn scenarios_resolve_and_unknown_errors() {
+        let h = 10_000.0;
+        for name in FaultPlan::scenario_names() {
+            let plan = FaultPlan::scenario(name, h).unwrap();
+            let evs = plan.normalized().unwrap();
+            if *name == "none" {
+                assert!(plan.is_empty());
+            } else {
+                assert!(!plan.is_empty());
+                // Every scenario finishes well before the horizon so
+                // containment can be observed.
+                assert!(evs.iter().all(|e| e.end_s() < 0.9 * h), "{name}: {evs:?}");
+            }
+        }
+        assert!(FaultPlan::scenario("nope", h).is_err());
+    }
+}

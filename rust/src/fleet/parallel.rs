@@ -12,6 +12,7 @@
 use std::thread;
 
 use crate::config::SloConfig;
+use crate::faults::{ContainmentSlo, FaultPlan};
 use crate::metrics::{ImpactSummary, RunReport};
 use crate::policy::engine::PolicyKind;
 use crate::simulation::run_with_impact;
@@ -20,7 +21,7 @@ use crate::util::rng::Rng;
 use super::site::{compose, SiteSpec, SiteTrace};
 
 /// How to execute one site evaluation.
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone)]
 pub struct SiteRunConfig {
     /// Simulated horizon in weeks.
     pub weeks: f64,
@@ -30,11 +31,24 @@ pub struct SiteRunConfig {
     pub sample_s: f64,
     /// Run clusters on scoped threads (false = serial reference path).
     pub parallel: bool,
+    /// Fault plan replayed inside *every* cluster of the site (`None` =
+    /// the clean control plane; see [`crate::faults`]).
+    pub faults: Option<FaultPlan>,
+    /// Containment-escalation setting forwarded to every cluster's
+    /// policy engine (`None` = paper behavior).
+    pub brake_escalation_s: Option<f64>,
 }
 
 impl Default for SiteRunConfig {
     fn default() -> Self {
-        SiteRunConfig { weeks: 0.1, seed: 1, sample_s: 60.0, parallel: true }
+        SiteRunConfig {
+            weeks: 0.1,
+            seed: 1,
+            sample_s: 60.0,
+            parallel: true,
+            faults: None,
+            brake_escalation_s: None,
+        }
     }
 }
 
@@ -105,6 +119,37 @@ impl SiteOutcome {
         self.clusters.iter().map(|c| c.impact.lp_p99).fold(0.0, f64::max)
     }
 
+    /// Worst per-cluster budget-violation seconds (ground truth).
+    pub fn worst_violation_s(&self) -> f64 {
+        self.clusters.iter().map(|c| c.report.resilience.violation_s).fold(0.0, f64::max)
+    }
+
+    /// Worst per-cluster incident time-to-contain (infinite if any
+    /// cluster left any incident uncontained).
+    pub fn worst_time_to_contain_s(&self) -> f64 {
+        self.clusters
+            .iter()
+            .map(|c| c.report.resilience.worst_time_to_contain_s())
+            .fold(0.0, f64::max)
+    }
+
+    /// Worst per-cluster peak overshoot as a fraction of that cluster's
+    /// breaker budget.
+    pub fn worst_overshoot_frac(&self) -> f64 {
+        self.clusters
+            .iter()
+            .map(|c| c.report.resilience.peak_overshoot_w / c.budget_w)
+            .fold(0.0, f64::max)
+    }
+
+    /// Whether every cluster's fault containment stays within the SLO
+    /// (the fault-mode analogue of [`SiteOutcome::feasible`]).
+    pub fn meets_containment(&self, cslo: &ContainmentSlo) -> bool {
+        self.worst_violation_s() <= cslo.max_violation_s
+            && self.worst_time_to_contain_s() <= cslo.max_time_to_contain_s
+            && self.worst_overshoot_frac() <= cslo.max_overshoot_frac
+    }
+
     /// Cap engagements per simulated day across the site.
     pub fn cap_events_per_day(&self) -> f64 {
         let dur_s = self.clusters.first().map(|c| c.report.duration_s).unwrap_or(0.0);
@@ -130,7 +175,12 @@ pub fn run_site(site: &SiteSpec, policy: PolicyKind, rc: &SiteRunConfig) -> Site
         .clusters
         .iter()
         .zip(&seeds)
-        .map(|(c, &seed)| c.sim_config(policy, rc.weeks, seed, rc.sample_s))
+        .map(|(c, &seed)| {
+            let mut cfg = c.sim_config(policy, rc.weeks, seed, rc.sample_s);
+            cfg.faults = rc.faults.clone();
+            cfg.brake_escalation_s = rc.brake_escalation_s;
+            cfg
+        })
         .collect();
 
     let mut results: Vec<Option<(RunReport, ImpactSummary)>> = (0..n).map(|_| None).collect();

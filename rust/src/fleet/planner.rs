@@ -24,6 +24,7 @@
 //! halve full-depth planning time; deferred to a perf pass.
 
 use crate::config::SloConfig;
+use crate::faults::{ContainmentSlo, FaultPlan};
 use crate::policy::engine::PolicyKind;
 
 use super::parallel::{run_site, SiteOutcome, SiteRunConfig};
@@ -46,6 +47,10 @@ pub struct PlannerConfig {
     pub step_pct: u32,
     /// SLOs each probe must hold to count as deployable.
     pub slo: SloConfig,
+    /// Containment escalation forwarded to every probe's policy engines
+    /// (`None` = paper behavior; fault-mode planning typically enables
+    /// it so cap-ignore faults escalate to the brake).
+    pub brake_escalation_s: Option<f64>,
 }
 
 impl Default for PlannerConfig {
@@ -58,6 +63,7 @@ impl Default for PlannerConfig {
             max_added_pct: 50,
             step_pct: 2,
             slo: SloConfig::default(),
+            brake_escalation_s: None,
         }
     }
 }
@@ -94,12 +100,14 @@ pub struct PolicyPlan {
     pub outcome: SiteOutcome,
 }
 
-/// Evaluate the site at one uniform added level (percent).
-pub fn evaluate_added(
+/// Evaluate the site at one uniform added level (percent), optionally
+/// replaying a fault plan inside every cluster.
+pub fn evaluate_added_with_faults(
     site: &SiteSpec,
     policy: PolicyKind,
     added_pct: u32,
     pc: &PlannerConfig,
+    faults: Option<&FaultPlan>,
 ) -> SiteOutcome {
     let scaled = site.with_added(added_pct as f64 / 100.0);
     let rc = SiteRunConfig {
@@ -107,8 +115,20 @@ pub fn evaluate_added(
         seed: pc.seed,
         sample_s: pc.sample_s,
         parallel: pc.parallel,
+        faults: faults.cloned(),
+        brake_escalation_s: pc.brake_escalation_s,
     };
     run_site(&scaled, policy, &rc)
+}
+
+/// Evaluate the site at one uniform added level (percent).
+pub fn evaluate_added(
+    site: &SiteSpec,
+    policy: PolicyKind,
+    added_pct: u32,
+    pc: &PlannerConfig,
+) -> SiteOutcome {
+    evaluate_added_with_faults(site, policy, added_pct, pc, None)
 }
 
 fn plan_from(
@@ -137,6 +157,24 @@ fn plan_from(
 }
 
 /// Binary-search the max deployable added fraction for one policy.
+///
+/// ```
+/// use polca::fleet::planner::{plan_site, PlannerConfig};
+/// use polca::fleet::site::SiteSpec;
+/// use polca::policy::engine::PolicyKind;
+///
+/// let site = SiteSpec::demo(1);
+/// let pc = PlannerConfig {
+///     weeks: 0.005,
+///     max_added_pct: 10,
+///     step_pct: 10,
+///     parallel: false,
+///     ..Default::default()
+/// };
+/// let plan = plan_site(&site, PolicyKind::NoCap, &pc);
+/// assert_eq!(plan.baseline_servers, site.baseline_servers());
+/// assert!(plan.added_pct <= pc.max_added_pct);
+/// ```
 pub fn plan_site(site: &SiteSpec, policy: PolicyKind, pc: &PlannerConfig) -> PolicyPlan {
     let step = pc.step_pct.max(1);
     let o0 = evaluate_added(site, policy, 0, pc);
@@ -183,6 +221,103 @@ pub fn plan_site_with_training(
     pc: &PlannerConfig,
 ) -> PolicyPlan {
     plan_site(&site.with_training(training_fraction), policy, pc)
+}
+
+/// A fault-derated site plan: the clean answer next to the largest
+/// added fraction that also survives the fault plan within the
+/// containment SLO.
+#[derive(Debug, Clone)]
+pub struct FaultedSitePlan {
+    /// The clean (no-fault) plan the derating is anchored to.
+    pub clean: PolicyPlan,
+    /// Largest added fraction (percent) whose *faulted* evaluation
+    /// stays within the containment SLO. Never exceeds
+    /// `clean.added_pct` — a site must be deployable cleanly before it
+    /// can be deployable under faults.
+    pub derated_added_pct: u32,
+    /// Deployed servers at the derated point (≤ the clean count).
+    pub derated_servers: usize,
+    /// Whether any probed point survived the fault plan at all (false
+    /// means even the non-oversubscribed site loses containment).
+    pub feasible: bool,
+    /// Worst per-cluster violation seconds at the derated point.
+    pub worst_violation_s: f64,
+    /// Worst per-cluster time-to-contain at the derated point.
+    pub worst_time_to_contain_s: f64,
+    /// Worst per-cluster overshoot fraction at the derated point.
+    pub worst_overshoot_frac: f64,
+    /// The faulted evaluation at the derated point.
+    pub outcome: SiteOutcome,
+}
+
+/// Derate the clean plan for a fault timeline: binary-search the
+/// largest added fraction, *capped at the clean plan's answer*, whose
+/// evaluation with `faults` replayed in every cluster stays within
+/// `cslo`. The returned server count is therefore ≤ the clean
+/// [`plan_site`] count by construction — faults can only cost capacity.
+/// Containment worsens monotonically with load (more servers → more
+/// power → deeper, longer excursions when a fault lands), which is what
+/// keeps the binary search sound here too.
+pub fn plan_site_under_faults(
+    site: &SiteSpec,
+    policy: PolicyKind,
+    pc: &PlannerConfig,
+    faults: &FaultPlan,
+    cslo: &ContainmentSlo,
+) -> FaultedSitePlan {
+    let step = pc.step_pct.max(1);
+    let clean = plan_site(site, policy, pc);
+    let faulted =
+        |added_pct: u32| evaluate_added_with_faults(site, policy, added_pct, pc, Some(faults));
+    let from = |added_pct: u32, feasible: bool, outcome: SiteOutcome, clean: PolicyPlan| {
+        let derated_servers = site.with_added(added_pct as f64 / 100.0).deployed_servers();
+        FaultedSitePlan {
+            clean,
+            derated_added_pct: added_pct,
+            derated_servers,
+            feasible,
+            worst_violation_s: outcome.worst_violation_s(),
+            worst_time_to_contain_s: outcome.worst_time_to_contain_s(),
+            worst_overshoot_frac: outcome.worst_overshoot_frac(),
+            outcome,
+        }
+    };
+    if !clean.feasible {
+        let o0 = faulted(0);
+        return from(0, false, o0, clean);
+    }
+    // Probe the clean answer first: by the load-monotonicity the search
+    // relies on, it passing implies every lower point passes, so the
+    // common no-derating case costs exactly one faulted evaluation.
+    let o_hi = faulted(clean.added_pct);
+    if o_hi.meets_containment(cslo) {
+        let pct = clean.added_pct;
+        return from(pct, true, o_hi, clean);
+    }
+    if clean.added_pct == 0 {
+        // o_hi evaluated the baseline itself and it failed containment.
+        return from(0, false, o_hi, clean);
+    }
+    let o0 = faulted(0);
+    if !o0.meets_containment(cslo) {
+        // Even the provisioned site loses containment under this plan.
+        return from(0, false, o0, clean);
+    }
+    // Invariant: lo containment-feasible (outcome kept), hi infeasible.
+    let mut lo = 0u32;
+    let mut lo_outcome = o0;
+    let mut hi = clean.added_pct;
+    while hi - lo > step {
+        let mid = lo + (hi - lo) / 2;
+        let o = faulted(mid);
+        if o.meets_containment(cslo) {
+            lo = mid;
+            lo_outcome = o;
+        } else {
+            hi = mid;
+        }
+    }
+    from(lo, true, lo_outcome, clean)
 }
 
 #[cfg(test)]
@@ -251,6 +386,28 @@ mod tests {
             // The chosen point still reports a consistent evaluation.
             assert!(mixed.outcome.feasible(&pc.slo));
             assert!(mixed.outcome.clusters[0].report.train.iters > 0);
+        }
+    }
+
+    #[test]
+    fn fault_derated_plan_never_exceeds_the_clean_plan() {
+        use crate::faults::{ContainmentSlo, FaultPlan};
+
+        let site = tiny_site();
+        let mut pc = tiny_pc();
+        pc.brake_escalation_s = Some(120.0);
+        let horizon_s = pc.weeks * 7.0 * 86_400.0;
+        let faults = FaultPlan::scenario("feed-loss", horizon_s).unwrap();
+        let cslo = ContainmentSlo::default();
+        let plan = plan_site_under_faults(&site, PolicyKind::Polca, &pc, &faults, &cslo);
+        assert!(plan.derated_added_pct <= plan.clean.added_pct);
+        assert!(plan.derated_servers <= plan.clean.deployable_servers.max(site.baseline_servers()));
+        assert_eq!(plan.outcome.clusters.len(), 1);
+        // The faulted evaluation actually replayed the plan.
+        assert_eq!(plan.outcome.clusters[0].report.resilience.incidents.len(), faults.len());
+        if plan.feasible {
+            assert!(plan.outcome.meets_containment(&cslo));
+            assert!(plan.worst_time_to_contain_s.is_finite());
         }
     }
 

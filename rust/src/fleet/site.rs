@@ -23,7 +23,7 @@
 
 use crate::characterize::catalog;
 use crate::policy::engine::PolicyKind;
-use crate::simulation::{SimConfig, DEFAULT_POWER_SCALE};
+use crate::simulation::{power_scale_for_row, SimConfig};
 
 use super::sku::{self, SkuSpec};
 
@@ -59,13 +59,7 @@ impl ClusterSpec {
     /// A cluster of `baseline_servers` slots of `sku`, inference-only,
     /// with the row-size-appropriate power calibration.
     pub fn new(name: &str, sku: SkuSpec, baseline_servers: usize) -> ClusterSpec {
-        let power_scale = if baseline_servers >= 40 {
-            DEFAULT_POWER_SCALE
-        } else if baseline_servers >= 16 {
-            1.45
-        } else {
-            1.35
-        };
+        let power_scale = power_scale_for_row(baseline_servers);
         ClusterSpec {
             name: name.to_string(),
             sku,

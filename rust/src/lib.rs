@@ -22,6 +22,10 @@
 //!   topology with compositional power traces, parallel multi-cluster
 //!   execution, and the site-level capacity planner behind
 //!   `polca fleet`).
+//! * **Resilience** — [`faults`] (deterministic fault-injection plans
+//!   over the whole control loop, the scenario × policy containment
+//!   matrix, and the containment SLO that derates the planner; runbook
+//!   in `docs/RELIABILITY.md`).
 //! * **Serving path** — [`runtime`] (PJRT executables AOT-compiled from
 //!   JAX/Pallas), [`coordinator`] (router, batcher, KV-cache slots) — the
 //!   real-model end-to-end driver with POLCA in the loop.
@@ -39,6 +43,7 @@ pub mod cluster;
 pub mod config;
 pub mod coordinator;
 pub mod experiments;
+pub mod faults;
 pub mod fleet;
 pub mod metrics;
 pub mod perfmodel;

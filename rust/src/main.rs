@@ -21,6 +21,13 @@
 //!         [--servers-per-job N] [--stagger S] [--step PCT]
 //!       Mixed-workload rows: colocate synchronized training jobs with
 //!       inference and reproduce the §2.4 headroom contrast.
+//!   faults [run|sweep|matrix|plan|list] [--scenario NAME]
+//!          [--policy polca|...|all] [--servers N] [--added FRAC]
+//!          [--weeks W] [--seed N] [--escalate S] [--clusters N]
+//!          [--out-dir out]
+//!       Fault injection: run one scenario, sweep oversubscription
+//!       under it, grid scenario × policy containment, or derate the
+//!       site plan for a fault timeline (docs/RELIABILITY.md).
 
 use std::path::{Path, PathBuf};
 
@@ -41,6 +48,7 @@ fn main() {
         Some("serve") => cmd_serve(&args),
         Some("fleet") => cmd_fleet(&args),
         Some("mixed") => cmd_mixed(&args),
+        Some("faults") => cmd_faults(&args),
         Some(other) => {
             eprintln!("unknown subcommand '{other}'");
             print_help();
@@ -60,13 +68,15 @@ fn main() {
 fn print_help() {
     println!(
         "polca — Power Oversubscription in LLM Cloud Providers (reproduction)\n\n\
-         usage: polca <figure|simulate|tune|calibrate|serve|fleet|mixed> [options]\n\
+         usage: polca <figure|simulate|tune|calibrate|serve|fleet|mixed|faults> [options]\n\
          try:   polca figure list\n       \
                 polca figure fig13 --out-dir out\n       \
                 polca simulate --policy polca --added 0.30 --weeks 1\n       \
                 polca fleet --clusters 4 --policy polca\n       \
                 polca mixed sweep --weeks 0.3\n       \
                 polca mixed run --training 0.5 --policy polca\n       \
+                polca faults matrix --weeks 0.1\n       \
+                polca faults run --scenario cap-ignore --policy polca\n       \
                 polca serve --requests 16"
     );
 }
@@ -306,6 +316,180 @@ fn cmd_mixed(args: &Args) -> anyhow::Result<()> {
             );
         }
         other => anyhow::bail!("unknown mixed mode '{other}' (run|sweep)"),
+    }
+    Ok(())
+}
+
+fn cmd_faults(args: &Args) -> anyhow::Result<()> {
+    use polca::faults::{run_matrix, ContainmentSlo, FaultPlan, MatrixConfig};
+    use polca::fleet::planner::{plan_site_under_faults, PlannerConfig};
+    use polca::fleet::site::SiteSpec;
+    use polca::metrics::ResilienceMetrics;
+    use polca::simulation::run;
+    use polca::util::table::{f, pct, Table};
+
+    let mode = args.positionals.first().map(|s| s.as_str()).unwrap_or("matrix");
+    let escalation = args.get("escalate").map(|s| s.parse::<f64>().unwrap_or(120.0));
+    let escalation = if args.flag("escalate") { Some(120.0) } else { escalation };
+    match mode {
+        "list" => {
+            for name in FaultPlan::scenario_names() {
+                println!("{name}");
+            }
+        }
+        "run" => {
+            let mut mc = MatrixConfig::default();
+            mc.weeks = args.get_f64("weeks", 0.1);
+            mc.seed = args.get_u64("seed", mc.seed);
+            mc.servers = args.get_usize("servers", mc.servers);
+            mc.added = args.get_f64("added", mc.added);
+            mc.escalation_s = escalation.or(mc.escalation_s);
+            let scenario = args.get_or("scenario", "cap-ignore");
+            let policy = parse_policy(args.get_or("policy", "polca"))?;
+            let plan = FaultPlan::scenario(scenario, mc.horizon_s())?;
+            eprintln!(
+                "injecting '{scenario}' ({} episodes) into {} at {} servers +{:.0}% \
+                 for {:.2} weeks",
+                plan.len(),
+                policy.name(),
+                mc.servers,
+                mc.added * 100.0,
+                mc.weeks
+            );
+            let mut report = run(&mc.sim_config(Some(plan), policy));
+            println!("{}", report.summary());
+            for inc in &report.resilience.incidents {
+                println!(
+                    "incident {:<16} [{:>7.0}s..{:>7.0}s]  time-to-contain {}",
+                    inc.label,
+                    inc.start_s,
+                    inc.end_s,
+                    ResilienceMetrics::fmt_ttc(inc.time_to_contain_s)
+                );
+            }
+            let r = &report.resilience;
+            println!(
+                "containment: {} (violation {:.1}s, peak overshoot {:.0} W, \
+                 true peak {:.3}, reissued {})",
+                if r.all_contained() { "OK" } else { "FAILED" },
+                r.violation_s,
+                r.peak_overshoot_w,
+                r.true_peak_norm,
+                r.reissued_commands
+            );
+        }
+        "sweep" => {
+            let mut mc = MatrixConfig::default();
+            mc.weeks = args.get_f64("weeks", 0.1);
+            mc.seed = args.get_u64("seed", mc.seed);
+            mc.servers = args.get_usize("servers", mc.servers);
+            mc.escalation_s = escalation.or(mc.escalation_s);
+            let scenario = args.get_or("scenario", "feed-loss");
+            let policy = parse_policy(args.get_or("policy", "polca"))?;
+            let max_added = args.get_usize("max-added", 40);
+            let step = args.get_usize("step", 10).max(1);
+            eprintln!(
+                "sweeping added servers under '{scenario}' with {} ...",
+                policy.name()
+            );
+            let mut t = Table::new(
+                "Oversubscription under faults",
+                &["added", "true peak", "viol s", "overshoot W", "ttc", "brakes", "contained"],
+            );
+            let mut added = 0usize;
+            while added <= max_added {
+                mc.added = added as f64 / 100.0;
+                let plan = FaultPlan::scenario(scenario, mc.horizon_s())?;
+                let report = run(&mc.sim_config(Some(plan), policy));
+                let r = &report.resilience;
+                t.row(vec![
+                    pct(mc.added, 0),
+                    f(r.true_peak_norm, 3),
+                    f(r.violation_s, 1),
+                    f(r.peak_overshoot_w, 0),
+                    ResilienceMetrics::fmt_ttc(r.worst_time_to_contain_s()),
+                    report.brake_events.to_string(),
+                    if r.all_contained() { "yes".into() } else { "NO".into() },
+                ]);
+                added += step;
+            }
+            println!("{}", t.render());
+        }
+        "matrix" => {
+            let mut mc = MatrixConfig::default();
+            mc.weeks = args.get_f64("weeks", mc.weeks);
+            mc.seed = args.get_u64("seed", mc.seed);
+            mc.servers = args.get_usize("servers", mc.servers);
+            mc.added = args.get_f64("added", mc.added);
+            mc.escalation_s = escalation.or(mc.escalation_s);
+            let policy_arg = args.get_or("policy", "all");
+            if policy_arg != "all" {
+                mc.policies = vec![parse_policy(policy_arg)?];
+            }
+            eprintln!(
+                "fault matrix: {} scenarios × {} policies on {} servers +{:.0}%, \
+                 {:.2} weeks each ...",
+                mc.scenarios.len(),
+                mc.policies.len(),
+                mc.servers,
+                mc.added * 100.0,
+                mc.weeks
+            );
+            let grid = run_matrix(&mc)?;
+            println!("{}", grid.table().render());
+            println!(
+                "no-fault column == clean run: {} | all scenarios containable: {}",
+                if grid.clean_match { "ok" } else { "VIOLATED" },
+                if grid.scenarios_containable() { "ok" } else { "VIOLATED" }
+            );
+            if let Some(dir) = args.get("out-dir") {
+                let out_dir = PathBuf::from(dir);
+                std::fs::create_dir_all(&out_dir)?;
+                let path = out_dir.join("fault_matrix.csv");
+                grid.csv().write_to(&path)?;
+                println!("wrote {}", path.display());
+            }
+        }
+        "plan" => {
+            let n_clusters = args.get_usize("clusters", 4);
+            let scenario = args.get_or("scenario", "feed-loss");
+            let policy = parse_policy(args.get_or("policy", "polca"))?;
+            let site = SiteSpec::demo(n_clusters);
+            let mut pc = PlannerConfig::default();
+            pc.weeks = args.get_f64("weeks", pc.weeks);
+            pc.seed = args.get_u64("seed", pc.seed);
+            pc.parallel = !args.flag("serial");
+            pc.max_added_pct = args.get_usize("max-added", pc.max_added_pct as usize) as u32;
+            pc.step_pct = args.get_usize("step", pc.step_pct as usize) as u32;
+            pc.brake_escalation_s = escalation.or(Some(120.0));
+            let horizon_s = pc.weeks * 7.0 * 86_400.0;
+            let plan = FaultPlan::scenario(scenario, horizon_s)?;
+            let cslo = ContainmentSlo::default();
+            eprintln!(
+                "derating site '{}' for '{scenario}' under {} ...",
+                site.name,
+                policy.name()
+            );
+            let fp = plan_site_under_faults(&site, policy, &pc, &plan, &cslo);
+            println!(
+                "clean plan:   {} servers (+{}%)",
+                fp.clean.deployable_servers, fp.clean.added_pct
+            );
+            println!(
+                "under faults: {} servers (+{}%) — derated by {} servers{}",
+                fp.derated_servers,
+                fp.derated_added_pct,
+                fp.clean.deployable_servers.saturating_sub(fp.derated_servers),
+                if fp.feasible { "" } else { " (NOT deployable even at baseline)" }
+            );
+            println!(
+                "worst case at the derated point: violation {:.1}s, ttc {}, overshoot {:.1}%",
+                fp.worst_violation_s,
+                ResilienceMetrics::fmt_ttc(fp.worst_time_to_contain_s),
+                fp.worst_overshoot_frac * 100.0
+            );
+        }
+        other => anyhow::bail!("unknown faults mode '{other}' (run|sweep|matrix|plan|list)"),
     }
     Ok(())
 }

@@ -156,6 +156,81 @@ impl ImpactSummary {
     }
 }
 
+/// One fault episode's outcome: how long the row stayed over its
+/// (effective) budget after the fault hit.
+#[derive(Debug, Clone, PartialEq)]
+pub struct IncidentOutcome {
+    /// Fault-kind label ([`crate::faults::FaultKind::label`]).
+    pub label: String,
+    /// Episode start, seconds into the run.
+    pub start_s: f64,
+    /// Episode end (state restored), seconds into the run.
+    pub end_s: f64,
+    /// Seconds from episode onset until the *last* instant the true row
+    /// power exceeded the effective budget (0 when the episode never
+    /// caused a violation; [`f64::INFINITY`] when the run ends still in
+    /// violation — the policy failed to contain the incident).
+    pub time_to_contain_s: f64,
+}
+
+impl IncidentOutcome {
+    /// Whether the incident was contained before the horizon.
+    pub fn contained(&self) -> bool {
+        self.time_to_contain_s.is_finite()
+    }
+}
+
+/// Ground-truth budget-violation accounting for one run (the fault
+/// subsystem's scoreboard — see [`crate::faults`]).
+///
+/// Unlike the Table-2 power statistics, which are computed on what the
+/// *meter reports* (and are therefore corrupted by a meter-bias fault,
+/// deliberately), these track the physically true row power against the
+/// *effective* budget (nominal budget × any active feed-loss cut).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct ResilienceMetrics {
+    /// Total seconds the true row power exceeded the effective budget.
+    pub violation_s: f64,
+    /// Energy over budget, watt-seconds (severity-weighted violation).
+    pub overshoot_ws: f64,
+    /// Largest instantaneous excess over the effective budget, watts.
+    pub peak_overshoot_w: f64,
+    /// Peak of true power / effective budget (the reported
+    /// `power_peak` can sit below this under a meter-bias fault).
+    pub true_peak_norm: f64,
+    /// Slow-path commands the rack manager re-issued after an apply
+    /// timeout (lost-command repair; acknowledged-but-ignored commands
+    /// are never re-issued — those escalate to the brake path instead).
+    pub reissued_commands: u64,
+    /// Per-injected-fault containment outcomes, in plan order.
+    pub incidents: Vec<IncidentOutcome>,
+}
+
+impl ResilienceMetrics {
+    /// Whether every injected incident was contained before the horizon.
+    pub fn all_contained(&self) -> bool {
+        self.incidents.iter().all(|i| i.contained())
+    }
+
+    /// Worst incident time-to-contain (0 with no incidents; infinite if
+    /// any incident was never contained).
+    pub fn worst_time_to_contain_s(&self) -> f64 {
+        self.incidents.iter().map(|i| i.time_to_contain_s).fold(0.0, f64::max)
+    }
+
+    /// Render a time-to-contain value for tables ("-" when there was
+    /// nothing to contain, "uncontained" when the horizon hit first).
+    pub fn fmt_ttc(ttc: f64) -> String {
+        if ttc.is_infinite() {
+            "uncontained".to_string()
+        } else if ttc == 0.0 {
+            "-".to_string()
+        } else {
+            format!("{ttc:.0}s")
+        }
+    }
+}
+
 /// Relative increase, floored at zero.
 fn rel(policy: f64, baseline: f64) -> f64 {
     if baseline <= 0.0 || policy.is_nan() || baseline.is_nan() {
@@ -195,6 +270,10 @@ pub struct RunReport {
     pub brake_commands: u64,
     /// Seconds with the powerbrake engaged.
     pub brake_time_s: f64,
+    /// Ground-truth budget-violation accounting and per-fault
+    /// containment (populated by every run; incidents only when a
+    /// [`crate::faults::FaultPlan`] was injected).
+    pub resilience: ResilienceMetrics,
     /// Peak normalized row power over the run.
     pub power_peak: f64,
     /// P99 of the normalized row-power samples.
@@ -282,6 +361,18 @@ impl RunReport {
                 self.train.mean_iter_s(),
                 self.train.p99_iter_s(),
                 self.train.inflation() * 100.0
+            ));
+        }
+        let r = &self.resilience;
+        if r.violation_s > 0.0 || !r.incidents.is_empty() {
+            s.push_str(&format!(
+                " | viol={:.1}s overshoot={:.0}W true-peak={:.3} ttc={} incidents={} reissued={}",
+                r.violation_s,
+                r.peak_overshoot_w,
+                r.true_peak_norm,
+                ResilienceMetrics::fmt_ttc(r.worst_time_to_contain_s()),
+                r.incidents.len(),
+                r.reissued_commands,
             ));
         }
         s
@@ -408,6 +499,50 @@ mod tests {
         let s3 = empty.summary();
         assert!(!s3.contains("NaN"), "{s3}");
         assert!(s3.contains("HP p50/p99 lat=-"), "{s3}");
+    }
+
+    #[test]
+    fn resilience_containment_accounting() {
+        let mut r = ResilienceMetrics::default();
+        assert!(r.all_contained());
+        assert_eq!(r.worst_time_to_contain_s(), 0.0);
+        r.incidents.push(IncidentOutcome {
+            label: "feed-loss".into(),
+            start_s: 100.0,
+            end_s: 200.0,
+            time_to_contain_s: 17.0,
+        });
+        r.incidents.push(IncidentOutcome {
+            label: "meter-bias".into(),
+            start_s: 400.0,
+            end_s: 500.0,
+            time_to_contain_s: 0.0,
+        });
+        assert!(r.all_contained());
+        assert_eq!(r.worst_time_to_contain_s(), 17.0);
+        r.incidents.push(IncidentOutcome {
+            label: "cap-ignore".into(),
+            start_s: 800.0,
+            end_s: 900.0,
+            time_to_contain_s: f64::INFINITY,
+        });
+        assert!(!r.all_contained());
+        assert!(r.worst_time_to_contain_s().is_infinite());
+        assert_eq!(ResilienceMetrics::fmt_ttc(0.0), "-");
+        assert_eq!(ResilienceMetrics::fmt_ttc(17.4), "17s");
+        assert_eq!(ResilienceMetrics::fmt_ttc(f64::INFINITY), "uncontained");
+    }
+
+    #[test]
+    fn summary_includes_resilience_clause_only_when_relevant() {
+        let mut r = report_with(&[1.0], &[1.0], 0);
+        assert!(!r.summary().contains("viol="), "{}", r.summary());
+        r.resilience.violation_s = 12.5;
+        r.resilience.peak_overshoot_w = 4200.0;
+        r.resilience.true_peak_norm = 1.08;
+        let s = r.summary();
+        assert!(s.contains("viol=12.5s"), "{s}");
+        assert!(s.contains("true-peak=1.080"), "{s}");
     }
 
     #[test]

@@ -90,6 +90,19 @@ pub struct IntentState {
 }
 
 /// The policy state machine.
+///
+/// ```
+/// use polca::config::PolicyConfig;
+/// use polca::policy::engine::{Action, PolicyEngine, PolicyKind};
+///
+/// let mut engine = PolicyEngine::new(PolicyKind::Polca, PolicyConfig::default());
+/// // Nothing happens below T1 (0.80)...
+/// assert!(engine.tick(0.0, 0.70).is_empty());
+/// // ...and a reading above T2 (0.89) caps low-priority servers first.
+/// let actions = engine.tick(60.0, 0.92);
+/// assert_eq!(actions, vec![Action::CapLp { mhz: 1110.0 }]);
+/// assert_eq!(engine.intent().lp_cap_mhz, Some(1110.0));
+/// ```
 #[derive(Debug, Clone)]
 pub struct PolicyEngine {
     /// Which policy variant this engine runs.
@@ -101,12 +114,25 @@ pub struct PolicyEngine {
     /// show up in the power reading (Algorithm 1's "cap HP subsequently
     /// *if needed*").
     pub escalation_delay_s: f64,
+    /// Containment escalation (fault mode, `None` = paper behavior): if
+    /// the reading is still above T2 this long after the *full* cap set
+    /// was engaged, the caps are visibly not biting — cap-ignoring
+    /// servers, lost commands, or a lying meter — and the engine falls
+    /// through to the fast brake path instead of waiting for the
+    /// breaker at 100%.
+    pub escalate_to_brake_after_s: Option<f64>,
     t1cap: bool,
     t2cap: bool,
     /// Within T2: whether the escalation to HP capping has fired.
     hp_capped: bool,
     /// When the T2 LP cap was issued (escalation clock).
     t2_issued_at: f64,
+    /// Containment-escalation clock: first tick at which the reading
+    /// was observed above T2 with the full cap set engaged (HP caps
+    /// for POLCA, the T2 cap for the baselines). Reset whenever the
+    /// reading dips back under T2, caps release, or the brake engages —
+    /// every fresh excursion gets the full escalation window.
+    stuck_above_t2_since: Option<f64>,
     brake: bool,
     /// Count of brake engagements (the Fig 18 metric).
     pub brake_events: u64,
@@ -120,10 +146,12 @@ impl PolicyEngine {
             kind,
             cfg,
             escalation_delay_s: 45.0,
+            escalate_to_brake_after_s: None,
             t1cap: false,
             t2cap: false,
             hp_capped: false,
             t2_issued_at: 0.0,
+            stuck_above_t2_since: None,
             brake: false,
             brake_events: 0,
             intent: IntentState::default(),
@@ -146,8 +174,8 @@ impl PolicyEngine {
     pub fn tick(&mut self, now_s: f64, p: f64) -> Vec<Action> {
         match self.kind {
             PolicyKind::Polca => self.tick_polca(now_s, p),
-            PolicyKind::OneThreshLowPri => self.tick_single(p, /*cap_hp=*/ false),
-            PolicyKind::OneThreshAll => self.tick_single(p, /*cap_hp=*/ true),
+            PolicyKind::OneThreshLowPri => self.tick_single(now_s, p, /*cap_hp=*/ false),
+            PolicyKind::OneThreshAll => self.tick_single(now_s, p, /*cap_hp=*/ true),
             PolicyKind::NoCap => self.tick_nocap(p),
         }
     }
@@ -171,6 +199,35 @@ impl PolicyEngine {
             self.brake = false;
             self.intent.brake = false;
             out.push(Action::ReleaseBrake);
+        }
+    }
+
+    /// Containment escalation (see [`PolicyEngine::escalate_to_brake_after_s`]):
+    /// the reading has now been continuously above T2 for the whole
+    /// escalation window despite the full cap set being engaged — the
+    /// caps are visibly not biting, fall through to the fast brake path.
+    fn maybe_escalate_to_brake(
+        &mut self,
+        now_s: f64,
+        p: f64,
+        full_caps: bool,
+        out: &mut Vec<Action>,
+    ) {
+        let Some(after) = self.escalate_to_brake_after_s else {
+            return;
+        };
+        if self.brake || !full_caps || p <= self.cfg.t2 {
+            // Not a stuck excursion (or already braked): restart the
+            // clock so the next crossing gets the full window.
+            self.stuck_above_t2_since = None;
+            return;
+        }
+        let since = *self.stuck_above_t2_since.get_or_insert(now_s);
+        if now_s - since >= after {
+            self.brake = true;
+            self.brake_events += 1;
+            self.intent.brake = true;
+            out.push(Action::Brake);
         }
     }
 
@@ -221,11 +278,12 @@ impl PolicyEngine {
             self.t1cap = false;
             self.set_lp(None, &mut out);
         }
+        self.maybe_escalate_to_brake(now_s, p, self.hp_capped, &mut out);
         out
     }
 
     // -- single-threshold baselines --------------------------------------
-    fn tick_single(&mut self, p: f64, cap_hp: bool) -> Vec<Action> {
+    fn tick_single(&mut self, now_s: f64, p: f64, cap_hp: bool) -> Vec<Action> {
         let c = self.cfg.clone();
         let mut out = Vec::new();
         if self.brake_check(p, &mut out) {
@@ -247,6 +305,9 @@ impl PolicyEngine {
                 self.set_hp(None, &mut out);
             }
         }
+        // The single-threshold baselines have no deeper cap to try, so
+        // "full caps" means the T2 cap itself (its whole class set).
+        self.maybe_escalate_to_brake(now_s, p, self.t2cap, &mut out);
         out
     }
 
@@ -402,6 +463,85 @@ mod tests {
         let acts = e.tick(c.next(), 1.01);
         assert_eq!(acts, vec![Action::Brake]);
         assert_eq!(e.brake_events, 1);
+    }
+
+    #[test]
+    fn stuck_above_t2_escalates_to_brake_when_enabled() {
+        let mut e = engine(PolicyKind::Polca);
+        e.escalate_to_brake_after_s = Some(120.0);
+        let mut c = Clk(0.0);
+        e.tick(c.next(), 0.92); // LP capped
+        e.tick(c.next(), 0.92); // HP capped (full cap set engaged)
+        // Still above T2, but the 120 s containment clock has not
+        // elapsed since full caps — no brake yet.
+        assert!(e.tick(c.next(), 0.92).is_empty());
+        // Two minutes after full caps with no effect: brake fires even
+        // though the reading never crossed 1.0.
+        let acts = e.tick(c.next(), 0.92);
+        assert_eq!(acts, vec![Action::Brake]);
+        assert_eq!(e.brake_events, 1);
+        // No duplicate brake while engaged.
+        assert!(e.tick(c.next(), 0.92).is_empty());
+        // Recovery below T2 − buffer releases and uncaps as usual.
+        let rel = e.tick(c.next(), 0.80);
+        assert!(rel.contains(&Action::ReleaseBrake));
+    }
+
+    #[test]
+    fn escalation_clock_resets_when_the_reading_dips_under_t2() {
+        // Caps engaged long ago and *working* (p sits in the hysteresis
+        // band): a later one-tick excursion above T2 must get the full
+        // escalation window, not an instant brake.
+        let mut e = engine(PolicyKind::Polca);
+        e.escalate_to_brake_after_s = Some(120.0);
+        let mut c = Clk(0.0);
+        e.tick(c.next(), 0.92); // LP capped
+        e.tick(c.next(), 0.92); // HP capped, clock starts
+        // The caps bite: p drops into the band (above T2 - buffer, so
+        // caps stay engaged) for a long stretch — clock resets.
+        for _ in 0..20 {
+            assert!(e.tick(c.next(), 0.87).is_empty());
+        }
+        // Fresh excursion above T2: no brake on the first ticks.
+        assert!(e.tick(c.next(), 0.90).is_empty());
+        assert!(e.tick(c.next(), 0.90).is_empty());
+        assert_eq!(e.brake_events, 0);
+        // But a *stuck* excursion still escalates after the window.
+        let acts = e.tick(c.next(), 0.90);
+        assert_eq!(acts, vec![Action::Brake]);
+        assert_eq!(e.brake_events, 1);
+    }
+
+    #[test]
+    fn escalation_disabled_by_default_never_brakes_below_one() {
+        let mut e = engine(PolicyKind::Polca);
+        let mut c = Clk(0.0);
+        for _ in 0..100 {
+            e.tick(c.next(), 0.95);
+        }
+        assert_eq!(e.brake_events, 0);
+        assert!(!e.is_braked());
+    }
+
+    #[test]
+    fn single_threshold_baselines_also_escalate() {
+        for kind in [PolicyKind::OneThreshLowPri, PolicyKind::OneThreshAll] {
+            let mut e = engine(kind);
+            e.escalate_to_brake_after_s = Some(90.0);
+            let mut c = Clk(0.0);
+            e.tick(c.next(), 0.92); // T2 cap engaged
+            assert!(e.tick(c.next(), 0.92).is_empty()); // 60 s < 90 s
+            let acts = e.tick(c.next(), 0.92); // 120 s >= 90 s
+            assert!(acts.contains(&Action::Brake), "{kind:?}: {acts:?}");
+        }
+        // NoCap has no caps whose failure could be observed.
+        let mut e = engine(PolicyKind::NoCap);
+        e.escalate_to_brake_after_s = Some(90.0);
+        let mut c = Clk(0.0);
+        for _ in 0..10 {
+            e.tick(c.next(), 0.95);
+        }
+        assert_eq!(e.brake_events, 0);
     }
 
     #[test]

@@ -37,13 +37,27 @@
 //! rather than request latency. The `power_scale` calibration is an
 //! inference-serving artifact, so training wattage is kept absolute by
 //! dividing it out per server (the row aggregate multiplies it back).
+//!
+//! # Fault injection (§6/§7 robustness)
+//!
+//! A [`crate::faults::FaultPlan`] on [`SimConfig::faults`] interleaves
+//! control-plane fault episodes with the workload: telemetry dropouts
+//! (the manager reads stale), OOB loss bursts and latency storms,
+//! cap-ignoring servers (ack without applying — only the brake path
+//! contains them), meter miscalibration, and feed-loss budget cuts.
+//! Ground-truth budget-violation accounting
+//! ([`crate::metrics::ResilienceMetrics`]) is settled exactly on every
+//! power change, independent of what the possibly-lying meter reports;
+//! docs/RELIABILITY.md is the runbook mapping each fault to its knob,
+//! detection metric, and expected policy response.
 
 use crate::characterize::catalog::{self, ModelSpec};
 use crate::cluster::hierarchy::{JobKind, Priority, Row};
 use crate::cluster::oob::{OobChannel, OobCommand};
 use crate::cluster::telemetry::TelemetryBuffer;
 use crate::config::ExperimentConfig;
-use crate::metrics::RunReport;
+use crate::faults::{FaultEvent, FaultKind, FaultPlan};
+use crate::metrics::{IncidentOutcome, RunReport};
 use crate::perfmodel::{ExecPhase, RequestExec};
 use crate::policy::engine::{Action, PolicyEngine, PolicyKind};
 use crate::power::gpu::{CapMode, Phase};
@@ -134,6 +148,15 @@ pub struct SimConfig {
     /// row; `Some` with `training_fraction: 0.0` is bit-identical to
     /// `None` — a tested invariant).
     pub mixed: Option<MixedRowConfig>,
+    /// Fault-injection timeline (`None` = the paper's well-behaved
+    /// control plane; `Some` with an empty plan is bit-identical to
+    /// `None` — a tested invariant, see [`crate::faults`]).
+    pub faults: Option<FaultPlan>,
+    /// Enable the policy engine's containment escalation: brake when the
+    /// full cap set has visibly failed to pull the reading under T2 for
+    /// this many seconds (`None` = paper behavior; see
+    /// [`crate::policy::engine::PolicyEngine::escalate_to_brake_after_s`]).
+    pub brake_escalation_s: Option<f64>,
 }
 
 impl Default for SimConfig {
@@ -156,6 +179,8 @@ impl Default for SimConfig {
             perf_mult: 1.0,
             diurnal_phase_s: 0.0,
             mixed: None,
+            faults: None,
+            brake_escalation_s: None,
         }
     }
 }
@@ -184,6 +209,20 @@ pub fn run_with_impact(cfg: &SimConfig) -> (RunReport, crate::metrics::ImpactSum
 /// row's diurnal peak at the Table-2 inference utilization (≈0.79).
 pub const DEFAULT_POWER_SCALE: f64 = 1.74;
 
+/// The row-size-appropriate power calibration: small rows multiplex
+/// fewer prompt spikes, so their relative variance is higher and the
+/// fitted scale is smaller (see the module docs; shared by the fleet
+/// layer and the fault matrix so every surface calibrates identically).
+pub fn power_scale_for_row(baseline_servers: usize) -> f64 {
+    if baseline_servers >= 40 {
+        DEFAULT_POWER_SCALE
+    } else if baseline_servers >= 16 {
+        1.45
+    } else {
+        1.35
+    }
+}
+
 #[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
 enum Ev {
     /// A request arrives at a server.
@@ -202,6 +241,10 @@ enum Ev {
     TrainPhase { job: u32, gen: u32 },
     /// Record a point of the downsampled power series.
     SampleSeries,
+    /// A scheduled fault episode begins (index into the run's fault plan).
+    FaultStart { fault: u32 },
+    /// A scheduled fault episode ends (degraded state is restored).
+    FaultEnd { fault: u32 },
     End,
 }
 
@@ -262,6 +305,14 @@ pub fn run(cfg: &SimConfig) -> RunReport {
     Sim::new(cfg).run()
 }
 
+/// Whether a slow-path command addresses the given priority class.
+fn targets(cmd: &OobCommand, p: Priority) -> bool {
+    match cmd {
+        OobCommand::FreqCap { target, .. } | OobCommand::Uncap { target } => *target == p,
+        OobCommand::PowerBrake | OobCommand::ReleaseBrake => false,
+    }
+}
+
 struct Sim<'a> {
     cfg: &'a SimConfig,
     model: ModelSpec,
@@ -290,6 +341,27 @@ struct Sim<'a> {
     now_s: f64,
     report: RunReport,
     horizon: SimTime,
+    // -- fault-injection state (all inert when `cfg.faults` is empty) --
+    /// The run's fault episodes, sorted by start time.
+    fault_events: Vec<FaultEvent>,
+    /// Multiplicative bias on reported (not true) power readings.
+    meter_bias: f64,
+    /// Effective-budget fraction (feed loss cuts it below 1.0).
+    budget_mult: f64,
+    /// Servers currently acknowledging-but-ignoring cap commands.
+    cap_ignore: Vec<bool>,
+    /// Last slow-path cap state *acknowledged* per priority class (what
+    /// the rack manager believes is applied; cap-ignoring servers ack
+    /// without applying, so reconciliation cannot see them).
+    acked_lp: Option<f64>,
+    acked_hp: Option<f64>,
+    /// Last attempt times per class, for the re-issue timeout.
+    lp_last_issue_s: f64,
+    hp_last_issue_s: f64,
+    /// Most recently started fault episode (violations attribute to it).
+    cur_incident: Option<usize>,
+    /// Per-episode: last instant the row was observed over budget.
+    incident_last_violation: Vec<Option<f64>>,
 }
 
 impl<'a> Sim<'a> {
@@ -412,7 +484,13 @@ impl<'a> Sim<'a> {
                 cfg.mixed.as_ref().map(|m| m.profile.iter_time_s).unwrap_or(0.0);
         }
 
-        let policy = PolicyEngine::new(cfg.policy_kind, cfg.exp.policy.clone());
+        let mut policy = PolicyEngine::new(cfg.policy_kind, cfg.exp.policy.clone());
+        policy.escalate_to_brake_after_s = cfg.brake_escalation_s;
+        let fault_events = cfg
+            .faults
+            .as_ref()
+            .map(|p| p.normalized().expect("invalid fault plan"))
+            .unwrap_or_default();
         let oob = OobChannel::new(
             cfg.exp.row.oob_latency_s,
             cfg.exp.row.power_brake_latency_s,
@@ -425,6 +503,8 @@ impl<'a> Sim<'a> {
             cfg.weeks * 7.0 * 86_400.0 + 1.0, // retain everything for Table 2 stats
         );
 
+        let n_servers = servers.len();
+        let n_faults = fault_events.len();
         Sim {
             cfg,
             model,
@@ -445,6 +525,16 @@ impl<'a> Sim<'a> {
             now_s: 0.0,
             report,
             horizon,
+            fault_events,
+            meter_bias: 1.0,
+            budget_mult: 1.0,
+            cap_ignore: vec![false; n_servers],
+            acked_lp: None,
+            acked_hp: None,
+            lp_last_issue_s: f64::NEG_INFINITY,
+            hp_last_issue_s: f64::NEG_INFINITY,
+            cur_incident: None,
+            incident_last_violation: vec![None; n_faults],
         }
     }
 
@@ -482,10 +572,37 @@ impl<'a> Sim<'a> {
     }
 
     /// Settle the energy accumulator up to the current event time (must
-    /// run before any change to `row_power_w`).
+    /// run before any change to `row_power_w` or to the effective
+    /// budget). Power is constant over the settled segment, so the
+    /// ground-truth violation accounting here is exact, not sampled —
+    /// and independent of what the (possibly miscalibrated) meter says.
     fn settle_energy(&mut self) {
         let dt = (self.now_s - self.last_power_change_s).max(0.0);
-        self.energy_acc_ws += self.row_power_w * dt;
+        if dt > 0.0 {
+            self.energy_acc_ws += self.row_power_w * dt;
+            let scaled_w = self.cfg.power_scale * self.row_power_w;
+            let budget_eff_w = self.row.budget_w * self.budget_mult;
+            let r = &mut self.report.resilience;
+            r.true_peak_norm = r.true_peak_norm.max(scaled_w / budget_eff_w);
+            if scaled_w > budget_eff_w {
+                r.violation_s += dt;
+                r.overshoot_ws += (scaled_w - budget_eff_w) * dt;
+                r.peak_overshoot_w = r.peak_overshoot_w.max(scaled_w - budget_eff_w);
+                if let Some(i) = self.cur_incident {
+                    self.incident_last_violation[i] = Some(self.now_s);
+                }
+            } else if let Some(i) = self.cur_incident {
+                // The row is back under budget: once the incident's
+                // episode is over, stop attributing to it — later
+                // violations (e.g. natural diurnal excursions hours
+                // after the fault) are not this incident's tail. A
+                // violation straddling the episode end keeps
+                // attributing until it is actually contained.
+                if self.now_s >= self.fault_events[i].end_s() {
+                    self.cur_incident = None;
+                }
+            }
+        }
         self.last_power_change_s = self.now_s;
     }
 
@@ -519,14 +636,17 @@ impl<'a> Sim<'a> {
     }
 
     /// Window-averaged normalized power since the last telemetry sample —
-    /// what the PDU meter actually reports.
+    /// what the PDU meter actually *reports*: scaled by any active meter
+    /// miscalibration and normalized against the effective budget (a
+    /// feed loss raises the manager-visible fraction because the manager
+    /// knows the budget shrank).
     fn averaged_row_power(&mut self) -> f64 {
         self.settle_energy();
         let window = (self.now_s - self.last_telemetry_s).max(1e-9);
         let avg_w = self.energy_acc_ws / window;
         self.energy_acc_ws = 0.0;
         self.last_telemetry_s = self.now_s;
-        self.cfg.power_scale * avg_w / self.row.budget_w
+        self.meter_bias * self.cfg.power_scale * avg_w / (self.row.budget_w * self.budget_mult)
     }
 
     fn normalized_row_power(&self) -> f64 {
@@ -691,9 +811,56 @@ impl<'a> Sim<'a> {
                 Action::Brake => OobCommand::PowerBrake,
                 Action::ReleaseBrake => OobCommand::ReleaseBrake,
             };
-            if let Some(apply_at) = self.oob.issue(now_s, cmd) {
-                self.queue.schedule_at(secs(apply_at), Ev::OobApply);
-            }
+            self.issue_cmd(now_s, cmd);
+        }
+        self.reconcile_oob(now_s);
+    }
+
+    /// Issue one command through the OOB channel, recording the attempt
+    /// time per class (the re-issue timeout clock).
+    fn issue_cmd(&mut self, now_s: f64, cmd: OobCommand) {
+        match cmd {
+            OobCommand::FreqCap { target: Priority::Low, .. }
+            | OobCommand::Uncap { target: Priority::Low } => self.lp_last_issue_s = now_s,
+            OobCommand::FreqCap { target: Priority::High, .. }
+            | OobCommand::Uncap { target: Priority::High } => self.hp_last_issue_s = now_s,
+            OobCommand::PowerBrake | OobCommand::ReleaseBrake => {}
+        }
+        if let Some(apply_at) = self.oob.issue(now_s, cmd) {
+            self.queue.schedule_at(secs(apply_at), Ev::OobApply);
+        }
+    }
+
+    /// Re-issue slow-path commands that were *lost* (never acknowledged)
+    /// once the apply timeout has elapsed — the idempotent-retry loop a
+    /// real rack manager runs over SMBPBI. Commands that were
+    /// acknowledged are never re-issued, so a cap-ignoring server (acks,
+    /// does not apply) is invisible here; containing it is the policy
+    /// engine's escalation job, not the transport's.
+    fn reconcile_oob(&mut self, now_s: f64) {
+        let timeout = self.cfg.exp.row.oob_latency_s * 1.5 + self.cfg.exp.row.telemetry_period_s;
+        let intent = self.policy.intent();
+        if intent.lp_cap_mhz != self.acked_lp
+            && now_s - self.lp_last_issue_s > timeout
+            && !self.oob.has_pending(|c| targets(c, Priority::Low))
+        {
+            self.report.resilience.reissued_commands += 1;
+            let cmd = match intent.lp_cap_mhz {
+                Some(mhz) => OobCommand::FreqCap { target: Priority::Low, mhz },
+                None => OobCommand::Uncap { target: Priority::Low },
+            };
+            self.issue_cmd(now_s, cmd);
+        }
+        if intent.hp_cap_mhz != self.acked_hp
+            && now_s - self.hp_last_issue_s > timeout
+            && !self.oob.has_pending(|c| targets(c, Priority::High))
+        {
+            self.report.resilience.reissued_commands += 1;
+            let cmd = match intent.hp_cap_mhz {
+                Some(mhz) => OobCommand::FreqCap { target: Priority::High, mhz },
+                None => OobCommand::Uncap { target: Priority::High },
+            };
+            self.issue_cmd(now_s, cmd);
         }
     }
 
@@ -702,26 +869,40 @@ impl<'a> Sim<'a> {
             match pending.cmd {
                 OobCommand::FreqCap { target, mhz } => {
                     self.report.cap_commands += 1;
+                    self.ack(target, Some(mhz));
                     for idx in 0..self.servers.len() {
-                        if self.servers[idx].priority == target {
+                        // Cap-ignoring servers acknowledge (the ack is
+                        // recorded above) but do not change frequency.
+                        if self.servers[idx].priority == target && !self.cap_ignore[idx] {
                             self.set_server_cap(idx, Some(mhz), now_s);
                         }
                     }
                 }
                 OobCommand::Uncap { target } => {
                     self.report.uncap_commands += 1;
+                    self.ack(target, None);
                     for idx in 0..self.servers.len() {
-                        if self.servers[idx].priority == target {
+                        if self.servers[idx].priority == target && !self.cap_ignore[idx] {
                             self.set_server_cap(idx, None, now_s);
                         }
                     }
                 }
+                // The brake is a hardware signal below the wedged
+                // firmware: cap-ignoring servers obey it too.
                 OobCommand::PowerBrake => {
                     self.report.brake_commands += 1;
                     self.set_brake(true, now_s);
                 }
                 OobCommand::ReleaseBrake => self.set_brake(false, now_s),
             }
+        }
+    }
+
+    /// Record a delivered (acknowledged) slow-path cap state per class.
+    fn ack(&mut self, target: Priority, cap: Option<f64>) {
+        match target {
+            Priority::Low => self.acked_lp = cap,
+            Priority::High => self.acked_hp = cap,
         }
     }
 
@@ -789,6 +970,89 @@ impl<'a> Sim<'a> {
         }
     }
 
+    // ---- fault injection (see crate::faults) -----------------------------
+
+    /// A fault episode begins: degrade the corresponding control-plane
+    /// link. Violations from here on attribute to this incident.
+    fn on_fault_start(&mut self, i: usize, now_s: f64) {
+        self.cur_incident = Some(i);
+        let ev = self.fault_events[i];
+        match ev.kind {
+            FaultKind::TelemetryFreeze => self.telemetry.freeze(now_s, ev.end_s()),
+            FaultKind::OobStorm { loss_prob, latency_mult, jitter_frac } => {
+                self.oob.set_unreliability(loss_prob, jitter_frac);
+                self.oob.set_latency_mult(latency_mult);
+            }
+            FaultKind::CapIgnore { server_frac } => {
+                let n = ((server_frac * self.servers.len() as f64).ceil() as usize)
+                    .min(self.servers.len());
+                for idx in 0..n {
+                    self.cap_ignore[idx] = true;
+                }
+            }
+            FaultKind::MeterBias { mult } => self.meter_bias = mult,
+            FaultKind::FeedLoss { budget_frac } => {
+                // Close the accounting segment under the old budget
+                // before the effective budget changes.
+                self.settle_energy();
+                self.budget_mult = budget_frac.max(1e-6);
+            }
+        }
+    }
+
+    /// A fault episode ends: restore the baseline control plane.
+    fn on_fault_end(&mut self, i: usize, now_s: f64) {
+        let ev = self.fault_events[i];
+        match ev.kind {
+            // The freeze window expires by itself inside the buffer.
+            FaultKind::TelemetryFreeze => {}
+            FaultKind::OobStorm { .. } => {
+                self.oob.set_unreliability(self.cfg.oob_loss_prob, self.cfg.oob_jitter_frac);
+                self.oob.set_latency_mult(1.0);
+            }
+            FaultKind::CapIgnore { .. } => {
+                // The wedged firmware recovers and drains its queue:
+                // converge every affected server to the last
+                // acknowledged cap state of its class.
+                for idx in 0..self.servers.len() {
+                    if !self.cap_ignore[idx] {
+                        continue;
+                    }
+                    self.cap_ignore[idx] = false;
+                    let cap = match self.servers[idx].priority {
+                        Priority::Low => self.acked_lp,
+                        Priority::High => self.acked_hp,
+                    };
+                    self.set_server_cap(idx, cap, now_s);
+                }
+            }
+            FaultKind::MeterBias { .. } => self.meter_bias = 1.0,
+            FaultKind::FeedLoss { .. } => {
+                self.settle_energy();
+                self.budget_mult = 1.0;
+            }
+        }
+    }
+
+    /// Per-incident containment outcomes, written at finalize.
+    fn finalize_incidents(&mut self) {
+        let scaled_w = self.cfg.power_scale * self.row_power_w;
+        let still_violating = scaled_w > self.row.budget_w * self.budget_mult;
+        for (i, f) in self.fault_events.iter().enumerate() {
+            let time_to_contain_s = match self.incident_last_violation[i] {
+                None => 0.0,
+                Some(_) if still_violating && self.cur_incident == Some(i) => f64::INFINITY,
+                Some(last) => (last - f.start_s).max(0.0),
+            };
+            self.report.resilience.incidents.push(IncidentOutcome {
+                label: f.kind.label().to_string(),
+                start_s: f.start_s,
+                end_s: f.end_s(),
+                time_to_contain_s,
+            });
+        }
+    }
+
     // ---- main loop -------------------------------------------------------
 
     fn run(mut self) -> RunReport {
@@ -813,6 +1077,13 @@ impl<'a> Sim<'a> {
         if self.cfg.series_sample_s > 0.0 {
             self.queue.schedule_at(0, Ev::SampleSeries);
         }
+        // Fault timeline: an empty plan schedules nothing, keeping the
+        // run bit-identical to one with no plan at all.
+        for i in 0..self.fault_events.len() {
+            let f = self.fault_events[i];
+            self.queue.schedule_at(secs(f.start_s), Ev::FaultStart { fault: i as u32 });
+            self.queue.schedule_at(secs(f.end_s()), Ev::FaultEnd { fault: i as u32 });
+        }
         self.queue.schedule_at(self.horizon, Ev::End);
 
         while let Some((t, ev)) = self.queue.pop() {
@@ -829,6 +1100,8 @@ impl<'a> Sim<'a> {
                     self.report.power_series.push((now_s, self.normalized_row_power()));
                     self.queue.schedule_in(secs(self.cfg.series_sample_s), Ev::SampleSeries);
                 }
+                Ev::FaultStart { fault } => self.on_fault_start(fault as usize, now_s),
+                Ev::FaultEnd { fault } => self.on_fault_end(fault as usize, now_s),
                 Ev::End => break,
             }
             if t >= self.horizon {
@@ -836,7 +1109,11 @@ impl<'a> Sim<'a> {
             }
         }
 
-        // Finalize.
+        // Finalize. Close the last ground-truth accounting segment at
+        // the horizon, then score the injected incidents.
+        self.now_s = to_secs(self.horizon);
+        self.settle_energy();
+        self.finalize_incidents();
         if self.braked {
             self.report.brake_time_s += to_secs(self.horizon) - self.brake_engaged_at;
         }
@@ -1083,6 +1360,123 @@ mod tests {
         assert_eq!(a.hp.completed, b.hp.completed);
         assert!((a.power_peak - b.power_peak).abs() == 0.0);
         assert!((a.train.iter_time_sum_s - b.train.iter_time_sum_s).abs() == 0.0);
+    }
+
+    #[test]
+    fn empty_fault_plan_is_inert() {
+        let mut a_cfg = quick_cfg();
+        a_cfg.weeks = 0.03;
+        let mut b_cfg = a_cfg.clone();
+        b_cfg.faults = Some(FaultPlan::new());
+        let a = run(&a_cfg);
+        let b = run(&b_cfg);
+        // Bit-identical, including the (empty) resilience accounting.
+        assert_eq!(format!("{a:?}"), format!("{b:?}"));
+        assert!(a.resilience.incidents.is_empty());
+    }
+
+    #[test]
+    fn feed_loss_is_contained_by_the_brake_path() {
+        // Probe the clean run for its diurnal peak so the feed loss is
+        // injected when it actually bites.
+        let mut probe = quick_cfg();
+        probe.weeks = 0.1;
+        probe.policy_kind = PolicyKind::NoCap;
+        probe.series_sample_s = 120.0;
+        let horizon = probe.weeks * 7.0 * 86_400.0;
+        let series = run(&probe).power_series;
+        let &(t_peak, p_peak) = series
+            .iter()
+            .filter(|&&(t, _)| t < horizon - 7200.0)
+            .max_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+            .unwrap();
+        // Cut the budget to well under the peak draw: the effective
+        // reading crosses 1.0, and only the brake path can answer.
+        let mut cfg = probe.clone();
+        cfg.series_sample_s = 0.0;
+        let window_s = 1800.0;
+        let budget_frac = p_peak / 1.3;
+        cfg.faults = Some(FaultPlan::new().with(
+            FaultKind::FeedLoss { budget_frac },
+            (t_peak - window_s / 2.0).max(0.0),
+            window_s,
+        ));
+        let report = run(&cfg);
+        assert_eq!(report.resilience.incidents.len(), 1);
+        let inc = report.resilience.incidents[0].clone();
+        assert!(report.resilience.violation_s > 0.0, "the cut must bite");
+        assert!(inc.contained(), "{inc:?}");
+        assert!(report.brake_commands > 0, "containment must have used the brake");
+        // The brake (reported reading > 1.0 exactly when the effective
+        // budget is violated) keeps the violation to a fraction of the
+        // episode — the row is never left over budget for long.
+        assert!(
+            report.resilience.violation_s < 0.8 * window_s,
+            "violation {}s over a {}s episode",
+            report.resilience.violation_s,
+            window_s
+        );
+        assert!(report.resilience.peak_overshoot_w > 0.0);
+    }
+
+    #[test]
+    fn full_telemetry_dropout_disables_the_control_loop() {
+        let mut cfg = quick_cfg();
+        cfg.weeks = 0.08;
+        cfg.deployed_servers = 22; // heavy: the clean run would cap/brake
+        let horizon = cfg.weeks * 7.0 * 86_400.0;
+        cfg.faults = Some(FaultPlan::new().with(
+            FaultKind::TelemetryFreeze,
+            0.0,
+            horizon + 1.0,
+        ));
+        let report = run(&cfg);
+        // The policy never saw a reading: no caps, no brakes — and the
+        // ground-truth accounting shows the row went over budget.
+        assert_eq!(report.cap_commands, 0);
+        assert_eq!(report.brake_commands, 0);
+        assert!(report.resilience.violation_s > 0.0);
+        assert!(report.resilience.true_peak_norm > 1.0);
+    }
+
+    #[test]
+    fn meter_bias_under_reports_the_peak() {
+        let mut clean_cfg = quick_cfg();
+        clean_cfg.weeks = 0.04;
+        clean_cfg.policy_kind = PolicyKind::NoCap;
+        let mut biased_cfg = clean_cfg.clone();
+        let horizon = biased_cfg.weeks * 7.0 * 86_400.0;
+        biased_cfg.faults = Some(FaultPlan::new().with(
+            FaultKind::MeterBias { mult: 0.5 },
+            0.0,
+            horizon + 1.0,
+        ));
+        let clean = run(&clean_cfg);
+        let biased = run(&biased_cfg);
+        // Reported statistics shrink with the bias; the ground truth
+        // does not move (same workload, same NoCap policy).
+        assert!((biased.power_peak - 0.5 * clean.power_peak).abs() < 1e-9);
+        assert!(
+            (biased.resilience.true_peak_norm - clean.resilience.true_peak_norm).abs() < 1e-12
+        );
+    }
+
+    #[test]
+    fn oob_loss_storm_triggers_reissue_not_silence() {
+        let mut cfg = quick_cfg();
+        cfg.weeks = 0.08;
+        cfg.deployed_servers = 18; // capping definitely intended
+        let horizon = cfg.weeks * 7.0 * 86_400.0;
+        cfg.faults = Some(FaultPlan::new().with(
+            FaultKind::OobStorm { loss_prob: 1.0, latency_mult: 1.0, jitter_frac: 0.0 },
+            0.0,
+            horizon + 1.0,
+        ));
+        let report = run(&cfg);
+        // Every slow-path command is lost, so none applies — but the
+        // rack manager keeps retrying after the apply timeout.
+        assert_eq!(report.cap_commands, 0);
+        assert!(report.resilience.reissued_commands > 0);
     }
 
     #[test]

@@ -1,0 +1,114 @@
+//! Integration tests for the fault-injection subsystem (ISSUE 3): the
+//! empty-plan bit-identity property, and the cap-ignore escalation
+//! guarantee — every policy must reach the brake path when its caps are
+//! acknowledged but silently ignored.
+
+use polca::faults::{FaultKind, FaultPlan};
+use polca::policy::engine::PolicyKind;
+use polca::simulation::{run, SimConfig};
+use polca::testing;
+
+fn base_cfg(servers: usize, weeks: f64, seed: u64) -> SimConfig {
+    let mut cfg = SimConfig::default();
+    cfg.weeks = weeks;
+    cfg.exp.row.num_servers = servers;
+    cfg.deployed_servers = servers;
+    cfg.exp.seed = seed;
+    cfg.power_scale = 1.35; // small-row calibration (see simulation tests)
+    cfg
+}
+
+/// The acceptance property: an empty `FaultPlan` is bit-identical to
+/// the baseline run — same RunReport bytes (compared via the full Debug
+/// rendering, which prints every counter, percentile sample, and f64 at
+/// round-trip precision) across random row sizes, seeds, and policies.
+#[test]
+fn property_empty_fault_plan_is_bit_identical() {
+    testing::check(
+        "faults-empty-plan-bit-identical",
+        0xFA017,
+        6,
+        |rng| {
+            let servers = rng.range_usize(4, 10);
+            let seed = rng.next_u64();
+            let policy = match rng.below(4) {
+                0 => PolicyKind::Polca,
+                1 => PolicyKind::NoCap,
+                2 => PolicyKind::OneThreshLowPri,
+                _ => PolicyKind::OneThreshAll,
+            };
+            // Oversubscribe sometimes so the control loop actually acts.
+            let added = rng.range_usize(0, 6);
+            (servers, seed, policy, added)
+        },
+        |&(servers, seed, policy, added)| {
+            let mut a_cfg = base_cfg(servers, 0.012, seed);
+            a_cfg.policy_kind = policy;
+            a_cfg.deployed_servers = servers + added;
+            let mut b_cfg = a_cfg.clone();
+            b_cfg.faults = Some(FaultPlan::new());
+            let a = run(&a_cfg);
+            let b = run(&b_cfg);
+            let (da, db) = (format!("{a:?}"), format!("{b:?}"));
+            if da == db {
+                Ok(())
+            } else {
+                Err(format!("RunReport bytes diverged:\n  none: {da}\n  empty: {db}"))
+            }
+        },
+    );
+}
+
+/// Escalation guarantee: a cap-ignore fault covering a heavily
+/// oversubscribed run drives `brake_commands > 0` under *every*
+/// `PolicyKind` — the capping policies because their caps visibly fail
+/// to bite (containment escalation), and No-cap because the unthrottled
+/// row crosses the breaker on its own.
+#[test]
+fn cap_ignore_drives_the_brake_path_under_every_policy() {
+    for policy in PolicyKind::all() {
+        let mut cfg = base_cfg(12, 0.08, 42);
+        cfg.deployed_servers = 22; // +83%: pushes past the breaker
+        cfg.policy_kind = policy;
+        cfg.brake_escalation_s = Some(120.0);
+        let horizon = cfg.weeks * 7.0 * 86_400.0;
+        cfg.faults = Some(FaultPlan::new().with(
+            FaultKind::CapIgnore { server_frac: 1.0 },
+            0.0,
+            horizon + 1.0,
+        ));
+        let report = run(&cfg);
+        assert!(
+            report.brake_commands > 0,
+            "{}: cap-ignore must force the brake path (report: {:?})",
+            policy.name(),
+            report.resilience
+        );
+        // No slow-path command changed any frequency, by construction:
+        // commands were delivered/acked (counted) but every server
+        // ignored them — the brake is the only thing that moved power.
+        assert!(report.brake_time_s > 0.0, "{}", policy.name());
+    }
+}
+
+/// Random fault plans never wedge the simulator: the run completes,
+/// accounting is finite, and incidents are scored one-per-episode.
+#[test]
+fn random_fault_plans_are_replayable_and_scored() {
+    let horizon_weeks = 0.05;
+    let horizon_s = horizon_weeks * 7.0 * 86_400.0;
+    for seed in [1u64, 2, 3] {
+        let plan = FaultPlan::random(seed, horizon_s, 4);
+        let mut cfg = base_cfg(10, horizon_weeks, seed);
+        cfg.deployed_servers = 13;
+        cfg.brake_escalation_s = Some(120.0);
+        cfg.faults = Some(plan.clone());
+        let report = run(&cfg);
+        assert_eq!(report.resilience.incidents.len(), plan.len());
+        assert!(report.resilience.violation_s.is_finite());
+        assert!(report.resilience.true_peak_norm > 0.0);
+        // Determinism: the same plan and seed replays bit-identically.
+        let again = run(&cfg);
+        assert_eq!(format!("{report:?}"), format!("{again:?}"));
+    }
+}

@@ -36,7 +36,7 @@ fn small_site() -> SiteSpec {
 }
 
 fn quick_rc(parallel: bool) -> SiteRunConfig {
-    SiteRunConfig { weeks: 0.02, seed: 11, sample_s: 120.0, parallel }
+    SiteRunConfig { weeks: 0.02, seed: 11, sample_s: 120.0, parallel, ..Default::default() }
 }
 
 /// The acceptance-critical invariant: a parallel site run is

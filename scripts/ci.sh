@@ -10,6 +10,27 @@
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
+# Docs gate (ISSUE 3): every relative markdown link in README.md and
+# docs/ must point at a path that exists in the tree. Runs before the
+# toolchain check so docs stay honest even on cargo-less machines.
+echo "== docs link check (relative markdown links must resolve)"
+bad_links=0
+for md in README.md docs/*.md; do
+  dir=$(dirname "$md")
+  links=$(grep -oE '\]\([^)]+\)' "$md" | sed -E 's/^\]\(//; s/\)$//; s/[#?].*$//' || true)
+  while IFS= read -r target; do
+    [[ -z "$target" ]] && continue
+    case "$target" in
+      http://*|https://*|mailto:*) continue ;;
+    esac
+    if [[ ! -e "$dir/$target" && ! -e "$target" ]]; then
+      echo "broken link in $md: $target" >&2
+      bad_links=1
+    fi
+  done <<< "$links"
+done
+[[ "$bad_links" == "0" ]] || exit 1
+
 command -v cargo >/dev/null 2>&1 || {
   echo "error: cargo not found in PATH — install a Rust toolchain to run CI" >&2
   exit 127
@@ -56,6 +77,20 @@ cargo build --release
 
 echo "== cargo test -q"
 cargo test -q
+
+# Doctest gate (ISSUE 3): the key public entry points (PolicyEngine,
+# OobChannel, TelemetryBuffer, fleet::planner, FaultPlan) carry
+# runnable rustdoc examples — keep them compiling and passing.
+echo "== cargo test --doc"
+cargo test --doc -q
+
+# Fault-injection smoke (ISSUE 3): the quick-depth scenario × policy
+# grid must run end to end and certify its own invariants (the notes
+# it prints include the no-fault-column and containability verdicts).
+echo "== fault-matrix smoke (quick depth)"
+smoke_out=$(mktemp -d)
+./target/release/polca figure fault-matrix --out-dir "$smoke_out" | tail -n 5
+rm -rf "$smoke_out"
 
 # Docs gate (ISSUE 2): the crate carries #![warn(missing_docs)] and the
 # ARCHITECTURE/README docs reference rustdoc items — keep both honest by
