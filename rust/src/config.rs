@@ -1,10 +1,16 @@
-//! Configuration system: a TOML-subset parser plus the typed experiment
-//! configuration used across the simulator, with presets matching the
-//! paper's Tables 1, 3, 4 and 5.
+//! Configuration system: a TOML-subset parser **and renderer** plus the
+//! typed experiment configuration used across the simulator, with
+//! presets matching the paper's Tables 1, 3, 4 and 5.
 //!
 //! Supported TOML subset (enough for real deployment configs):
-//! `[section]` headers, `key = value` with strings, integers, floats,
-//! booleans, and flat arrays; `#` comments.
+//! `[section]` headers, `key = value` with strings (with `\"`, `\\`,
+//! `\n`, `\t` escapes), integers, floats, booleans, and (nestable)
+//! arrays; `#` comments. [`Toml::render`] emits the same subset, so a
+//! document round-trips: `Toml::parse(&doc.render()) == doc` (the
+//! scenario layer relies on this for `polca scenario save`).
+//!
+//! Parse errors always cite 1-based line numbers (the first line of the
+//! input is line 1), matching what editors display.
 
 use std::collections::BTreeMap;
 
@@ -65,12 +71,14 @@ impl TomlValue {
 }
 
 impl Toml {
-    /// Parse the supported TOML subset (see module docs).
+    /// Parse the supported TOML subset (see module docs). Errors cite
+    /// 1-based line numbers (the first input line is line 1).
     pub fn parse(input: &str) -> anyhow::Result<Toml> {
         let mut doc = Toml::default();
         let mut section = String::new();
         doc.sections.entry(section.clone()).or_default();
-        for (lineno, raw) in input.lines().enumerate() {
+        for (idx, raw) in input.lines().enumerate() {
+            let line_no = idx + 1;
             let line = strip_comment(raw).trim();
             if line.is_empty() {
                 continue;
@@ -78,21 +86,56 @@ impl Toml {
             if let Some(name) = line.strip_prefix('[') {
                 let name = name
                     .strip_suffix(']')
-                    .with_context(|| format!("line {}: bad section header", lineno + 1))?;
+                    .with_context(|| format!("line {line_no}: bad section header"))?;
                 section = name.trim().to_string();
                 doc.sections.entry(section.clone()).or_default();
             } else if let Some((k, v)) = line.split_once('=') {
                 let value = parse_value(v.trim())
-                    .with_context(|| format!("line {}: bad value '{}'", lineno + 1, v.trim()))?;
+                    .with_context(|| format!("line {line_no}: bad value '{}'", v.trim()))?;
                 doc.sections
                     .get_mut(&section)
                     .unwrap()
                     .insert(k.trim().to_string(), value);
             } else {
-                bail!("line {}: expected 'key = value' or '[section]'", lineno + 1);
+                bail!("line {line_no}: expected 'key = value' or '[section]'");
             }
         }
         Ok(doc)
+    }
+
+    /// Render the document in the same subset [`Toml::parse`] accepts:
+    /// top-level keys first, then `[section]` blocks in name order, keys
+    /// sorted within each. Strings are escaped (`\"`, `\\`, `\n`, `\t`),
+    /// and whole-valued floats keep a trailing `.0` so they re-parse as
+    /// floats — `Toml::parse(&doc.render()) == doc` for any document
+    /// whose section/key names are themselves representable.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        for (name, keys) in &self.sections {
+            if name.is_empty() {
+                // Top-level keys need no header; parse starts there.
+                if keys.is_empty() {
+                    continue;
+                }
+            } else {
+                if !out.is_empty() {
+                    out.push('\n');
+                }
+                out.push_str(&format!("[{name}]\n"));
+            }
+            for (k, v) in keys {
+                out.push_str(&format!("{k} = {}\n", render_value(v)));
+            }
+        }
+        out
+    }
+
+    /// Insert (or overwrite) `[section] key = value`.
+    pub fn set(&mut self, section: &str, key: &str, value: TomlValue) {
+        self.sections
+            .entry(section.to_string())
+            .or_default()
+            .insert(key.to_string(), value);
     }
 
     /// Raw value at `[section] key`, if present.
@@ -122,22 +165,67 @@ impl Toml {
 }
 
 fn strip_comment(line: &str) -> &str {
-    // Respect '#' inside quoted strings.
+    // Respect '#' inside quoted strings, including escaped quotes.
     let mut in_str = false;
+    let mut escaped = false;
     for (i, c) in line.char_indices() {
-        match c {
-            '"' => in_str = !in_str,
-            '#' if !in_str => return &line[..i],
-            _ => {}
+        if in_str {
+            if escaped {
+                escaped = false;
+            } else if c == '\\' {
+                escaped = true;
+            } else if c == '"' {
+                in_str = false;
+            }
+        } else {
+            match c {
+                '"' => in_str = true,
+                '#' => return &line[..i],
+                _ => {}
+            }
         }
     }
     line
 }
 
+/// Decode a quoted string starting at `s[0] == '"'`; returns the content
+/// and the remaining input after the closing quote. Escapes: `\"`, `\\`,
+/// `\n`, `\t`; any other `\x` is kept literally (backslash included),
+/// matching the historical lenient behavior.
+fn parse_str(s: &str) -> anyhow::Result<(String, &str)> {
+    let mut out = String::new();
+    let mut escaped = false;
+    for (i, c) in s.char_indices().skip(1) {
+        if escaped {
+            match c {
+                '"' => out.push('"'),
+                '\\' => out.push('\\'),
+                'n' => out.push('\n'),
+                't' => out.push('\t'),
+                other => {
+                    out.push('\\');
+                    out.push(other);
+                }
+            }
+            escaped = false;
+        } else if c == '\\' {
+            escaped = true;
+        } else if c == '"' {
+            return Ok((out, &s[i + 1..]));
+        } else {
+            out.push(c);
+        }
+    }
+    bail!("unterminated string")
+}
+
 fn parse_value(s: &str) -> anyhow::Result<TomlValue> {
-    if let Some(inner) = s.strip_prefix('"') {
-        let inner = inner.strip_suffix('"').context("unterminated string")?;
-        return Ok(TomlValue::Str(inner.replace("\\\"", "\"").replace("\\\\", "\\")));
+    if s.starts_with('"') {
+        let (content, rest) = parse_str(s)?;
+        if !rest.trim().is_empty() {
+            bail!("trailing characters after closing quote: '{}'", rest.trim());
+        }
+        return Ok(TomlValue::Str(content));
     }
     if s == "true" {
         return Ok(TomlValue::Bool(true));
@@ -169,13 +257,24 @@ fn split_top_level(s: &str) -> Vec<&str> {
     let mut parts = Vec::new();
     let mut depth = 0usize;
     let mut in_str = false;
+    let mut escaped = false;
     let mut start = 0usize;
     for (i, c) in s.char_indices() {
+        if in_str {
+            if escaped {
+                escaped = false;
+            } else if c == '\\' {
+                escaped = true;
+            } else if c == '"' {
+                in_str = false;
+            }
+            continue;
+        }
         match c {
-            '"' => in_str = !in_str,
-            '[' if !in_str => depth += 1,
-            ']' if !in_str => depth = depth.saturating_sub(1),
-            ',' if !in_str && depth == 0 => {
+            '"' => in_str = true,
+            '[' => depth += 1,
+            ']' => depth = depth.saturating_sub(1),
+            ',' if depth == 0 => {
                 parts.push(&s[start..i]);
                 start = i + 1;
             }
@@ -184,6 +283,43 @@ fn split_top_level(s: &str) -> Vec<&str> {
     }
     parts.push(&s[start..]);
     parts
+}
+
+fn render_value(v: &TomlValue) -> String {
+    match v {
+        TomlValue::Str(s) => render_str(s),
+        TomlValue::Int(i) => i.to_string(),
+        TomlValue::Float(x) => render_float(*x),
+        TomlValue::Bool(b) => b.to_string(),
+        TomlValue::Arr(items) => {
+            let inner: Vec<String> = items.iter().map(render_value).collect();
+            format!("[{}]", inner.join(", "))
+        }
+    }
+}
+
+/// Float formatting that survives re-parsing as the same `f64`: Rust's
+/// `Debug` for floats emits the shortest round-trippable decimal and
+/// always marks floatness (a `.0` suffix or an exponent), so whole
+/// values of any magnitude re-parse as floats, not ints.
+fn render_float(x: f64) -> String {
+    format!("{x:?}")
+}
+
+fn render_str(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            _ => out.push(c),
+        }
+    }
+    out.push('"');
+    out
 }
 
 // ---------------------------------------------------------------------------
@@ -285,7 +421,7 @@ impl Default for SloConfig {
 }
 
 /// Full experiment configuration.
-#[derive(Debug, Clone, Default)]
+#[derive(Debug, Clone, Default, PartialEq)]
 pub struct ExperimentConfig {
     /// Row topology and control-path latencies (Table 1).
     pub row: RowConfig,
@@ -384,12 +520,88 @@ mod tests {
         assert!(Toml::parse("[unclosed").is_err());
         assert!(Toml::parse("justakey").is_err());
         assert!(Toml::parse("k = @@@").is_err());
+        assert!(Toml::parse("k = \"unterminated").is_err());
+        assert!(Toml::parse("k = \"done\" trailing").is_err());
+    }
+
+    #[test]
+    fn errors_cite_one_based_line_numbers() {
+        // First line of the input is line 1, in every error path.
+        let e = format!("{:#}", Toml::parse("justakey").unwrap_err());
+        assert!(e.contains("line 1"), "{e}");
+        let e = format!("{:#}", Toml::parse("a = 1\nb = 2\nc = @@@").unwrap_err());
+        assert!(e.contains("line 3"), "{e}");
+        let e = format!("{:#}", Toml::parse("a = 1\n[unclosed").unwrap_err());
+        assert!(e.contains("line 2"), "{e}");
     }
 
     #[test]
     fn comment_inside_string_preserved() {
         let doc = Toml::parse("k = \"a # b\"").unwrap();
         assert_eq!(doc.str_or("", "k", ""), "a # b");
+        // ... even when an escaped quote precedes the '#'.
+        let doc = Toml::parse(r#"k = "a\"b # c" # real comment"#).unwrap();
+        assert_eq!(doc.str_or("", "k", ""), "a\"b # c");
+    }
+
+    #[test]
+    fn string_escapes_round_trip() {
+        for content in [
+            "plain",
+            "with \"quotes\"",
+            "back\\slash",
+            "tab\tand\nnewline",
+            "trailing backslash \\",
+            "\\\"mixed\\\" run",
+            "a # b",
+        ] {
+            let mut doc = Toml::default();
+            doc.set("", "k", TomlValue::Str(content.to_string()));
+            let text = doc.render();
+            let reparsed = Toml::parse(&text).unwrap();
+            assert_eq!(reparsed.str_or("", "k", "<missing>"), content, "text: {text}");
+        }
+    }
+
+    #[test]
+    fn render_round_trips_documents() {
+        let mut doc = Toml::default();
+        doc.set("", "seed", TomlValue::Int(7));
+        doc.set("", "label", TomlValue::Str("a \"quoted\" name".into()));
+        doc.set("row", "num_servers", TomlValue::Int(40));
+        doc.set("row", "added", TomlValue::Float(0.3));
+        doc.set("row", "whole", TomlValue::Float(2.0));
+        doc.set("policy", "enabled", TomlValue::Bool(true));
+        doc.set(
+            "faults",
+            "events",
+            TomlValue::Arr(vec![
+                TomlValue::Arr(vec![
+                    TomlValue::Str("feed-loss".into()),
+                    TomlValue::Float(500.0),
+                    TomlValue::Float(0.75),
+                ]),
+                TomlValue::Arr(vec![TomlValue::Str("telemetry-freeze".into())]),
+            ]),
+        );
+        let text = doc.render();
+        let reparsed = Toml::parse(&text).unwrap();
+        assert_eq!(reparsed, doc, "render:\n{text}");
+        // Whole-valued floats stay floats (not silently re-typed as ints).
+        assert!(matches!(reparsed.get("row", "whole"), Some(TomlValue::Float(x)) if *x == 2.0));
+    }
+
+    #[test]
+    fn render_float_precision_is_lossless() {
+        for x in [0.1, 1.0 / 3.0, 0.30000000000000004, 123456.789, 1e-12, 6.5e3, 1e15, 1e20] {
+            let s = render_float(x);
+            assert_eq!(s.parse::<f64>().unwrap(), x, "{s}");
+            // Whole values must stay float-typed through a round-trip.
+            let mut doc = Toml::default();
+            doc.set("", "x", TomlValue::Float(x));
+            let back = Toml::parse(&doc.render()).unwrap();
+            assert!(matches!(back.get("", "x"), Some(TomlValue::Float(_))), "{s}");
+        }
     }
 
     #[test]

@@ -7,6 +7,7 @@ use crate::policy::engine::PolicyKind;
 use crate::policy::tuner::tune_thresholds;
 use crate::power::gpu::CapMode;
 use crate::power::training::TrainingPowerModel;
+use crate::scenario::{Scenario, ScenarioBuilder};
 use crate::simulation::{run, run_with_impact, SimConfig};
 use crate::util::csv::Csv;
 use crate::util::rng::Rng;
@@ -16,11 +17,16 @@ use crate::workload::tracegen::target_power_profile;
 
 use super::{Depth, FigureOutput};
 
+/// The shared row scenario every §6 generator enumerates from: the
+/// paper's 40-server row at the depth-scaled horizon. Generators chain
+/// further builder calls (policy, oversubscription, tuning knobs) —
+/// hand-assembled `SimConfig`s are gone from this module.
+fn row_scenario(depth: Depth, seed: u64) -> ScenarioBuilder {
+    Scenario::builder("eval-row").weeks(depth.weeks(1.0)).seed(seed)
+}
+
 fn base_cfg(depth: Depth, seed: u64) -> SimConfig {
-    let mut cfg = SimConfig::default();
-    cfg.weeks = depth.weeks(1.0);
-    cfg.exp.seed = seed;
-    cfg
+    row_scenario(depth, seed).build().sim_config()
 }
 
 /// Table 2: LLM cluster power usage in production (training vs inference).
@@ -28,8 +34,7 @@ pub fn table2(depth: Depth, seed: u64) -> FigureOutput {
     let mut out = FigureOutput::new("table2", "LLM cluster power usage (training vs inference rows)");
 
     // Inference row: base simulation, no capping.
-    let mut cfg = base_cfg(depth, seed);
-    cfg.policy_kind = PolicyKind::NoCap;
+    let cfg = row_scenario(depth, seed).policy(PolicyKind::NoCap).build().sim_config();
     let report = run(&cfg);
 
     // Training row: 40 servers running one synchronized job (NeoX-like).
@@ -129,8 +134,7 @@ pub fn fig13(depth: Depth, seed: u64) -> FigureOutput {
 /// Fig 14: per-priority throughput under POLCA at +30%.
 pub fn fig14(depth: Depth, seed: u64) -> FigureOutput {
     let mut out = FigureOutput::new("fig14", "Server throughput under POLCA (+30% servers)");
-    let mut cfg = base_cfg(depth, seed);
-    cfg.deployed_servers = (cfg.exp.row.num_servers as f64 * 1.30).round() as usize;
+    let cfg = row_scenario(depth, seed).added(0.30).build().sim_config();
     let (_, impact) = run_with_impact(&cfg);
     let mut t = Table::new("Fig 14", &["priority", "throughput vs uncapped", "decline"]);
     t.row(vec!["High".into(), f(impact.hp_throughput, 4), pct(1.0 - impact.hp_throughput, 2)]);
@@ -150,11 +154,15 @@ pub fn fig15a(depth: Depth, seed: u64) -> FigureOutput {
     let mut t = Table::new("Fig 15a", &["lp_freq_T1_MHz", "LP P50", "LP P99", "meets LP SLO"]);
     let mut csv = Csv::new(&["freq_mhz", "lp_p50", "lp_p99", "ok"]);
     for &mhz in &[1005.0, 1110.0, 1200.0, 1275.0, 1395.0] {
-        let mut cfg = base_cfg(depth, seed);
-        cfg.deployed_servers = (cfg.exp.row.num_servers as f64 * 1.30).round() as usize;
-        cfg.exp.policy.lp_freq_t1_mhz = mhz;
-        // the deeper T2 cap keeps its offset below T1's
-        cfg.exp.policy.lp_freq_t2_mhz = (mhz - 165.0).max(500.0);
+        let cfg = row_scenario(depth, seed)
+            .added(0.30)
+            .policy_config(|p| {
+                p.lp_freq_t1_mhz = mhz;
+                // the deeper T2 cap keeps its offset below T1's
+                p.lp_freq_t2_mhz = (mhz - 165.0).max(500.0);
+            })
+            .build()
+            .sim_config();
         let (_, impact) = run_with_impact(&cfg);
         let ok = impact.lp_p50 <= cfg.exp.slo.lp_p50_impact && impact.lp_p99 <= cfg.exp.slo.lp_p99_impact;
         t.row(vec![f(mhz, 0), pct(impact.lp_p50, 2), pct(impact.lp_p99, 2), ok.to_string()]);
@@ -172,9 +180,7 @@ pub fn fig15b(depth: Depth, seed: u64) -> FigureOutput {
     let mut t = Table::new("Fig 15b", &["LP fraction", "HP P99", "LP P99", "brakes"]);
     let mut csv = Csv::new(&["lp_fraction", "hp_p99", "lp_p99", "brakes"]);
     for &lp in &[0.10, 0.25, 0.50, 0.75] {
-        let mut cfg = base_cfg(depth, seed);
-        cfg.deployed_servers = (cfg.exp.row.num_servers as f64 * 1.30).round() as usize;
-        cfg.lp_fraction_override = Some(lp);
+        let cfg = row_scenario(depth, seed).added(0.30).lp_fraction(lp).build().sim_config();
         let (_, impact) = run_with_impact(&cfg);
         t.row(vec![pct(lp, 0), pct(impact.hp_p99, 2), pct(impact.lp_p99, 2), impact.brake_events.to_string()]);
         csv.row_strs(&[f(lp, 2), f(impact.hp_p99, 4), f(impact.lp_p99, 4), impact.brake_events.to_string()]);
@@ -188,13 +194,13 @@ pub fn fig15b(depth: Depth, seed: u64) -> FigureOutput {
 /// Fig 16: row power timeseries, base vs +30% under POLCA.
 pub fn fig16(depth: Depth, seed: u64) -> FigureOutput {
     let mut out = FigureOutput::new("fig16", "Row-level power utilization (base vs +30% POLCA)");
-    let mut base = base_cfg(depth, seed);
-    base.policy_kind = PolicyKind::NoCap;
+    // series_sample_s is plot instrumentation, not part of the spec —
+    // it stays a SimConfig knob on top of the scenario.
+    let mut base = row_scenario(depth, seed).policy(PolicyKind::NoCap).build().sim_config();
     base.series_sample_s = 300.0;
     let base_report = run(&base);
 
-    let mut over = base_cfg(depth, seed);
-    over.deployed_servers = (over.exp.row.num_servers as f64 * 1.30).round() as usize;
+    let mut over = row_scenario(depth, seed).added(0.30).build().sim_config();
     over.series_sample_s = 300.0;
     let over_report = run(&over);
 
@@ -236,11 +242,13 @@ pub fn fig17(depth: Depth, seed: u64) -> FigureOutput {
     let mut csv = Csv::new(&["policy", "scenario", "hp_p99", "lp_p99", "lp_throughput", "brakes", "meets_slo"]);
     for kind in PolicyKind::all() {
         for (scenario, mult) in [("default", 1.0), ("power+5%", 1.05)] {
-            let mut cfg = base_cfg(depth, seed);
-            cfg.weeks = depth.weeks(5.0).min(2.0); // eval weeks (capped for runtime)
-            cfg.policy_kind = kind;
-            cfg.deployed_servers = (cfg.exp.row.num_servers as f64 * 1.30).round() as usize;
-            cfg.workload_power_mult = mult;
+            let cfg = row_scenario(depth, seed)
+                .weeks(depth.weeks(5.0).min(2.0)) // eval weeks (capped for runtime)
+                .policy(kind)
+                .added(0.30)
+                .power_mult(mult)
+                .build()
+                .sim_config();
             let (_, impact) = run_with_impact(&cfg);
             let ok = impact.meets_slo(&cfg.exp.slo);
             t.row(vec![
@@ -277,11 +285,13 @@ pub fn fig18(depth: Depth, seed: u64) -> FigureOutput {
     for kind in PolicyKind::all() {
         let mut counts = Vec::new();
         for mult in [1.0, 1.05] {
-            let mut cfg = base_cfg(depth, seed);
-            cfg.weeks = depth.weeks(5.0).min(2.0);
-            cfg.policy_kind = kind;
-            cfg.deployed_servers = (cfg.exp.row.num_servers as f64 * 1.30).round() as usize;
-            cfg.workload_power_mult = mult;
+            let cfg = row_scenario(depth, seed)
+                .weeks(depth.weeks(5.0).min(2.0))
+                .policy(kind)
+                .added(0.30)
+                .power_mult(mult)
+                .build()
+                .sim_config();
             let report = run(&cfg);
             counts.push(report.brake_events);
         }

@@ -3,13 +3,33 @@
 //! one row"; this table answers the infrastructure-planning version —
 //! how many fit under one substation when heterogeneous clusters with
 //! staggered diurnal peaks share the budget.
+//!
+//! The generator enumerates one [`Scenario`] per policy over the same
+//! site section, so the experiment, `polca fleet plan`, and
+//! `polca run site-headroom` all execute the identical spec.
 
-use crate::fleet::planner::{plan_all, PlannerConfig};
-use crate::fleet::site::SiteSpec;
+use crate::fleet::planner::PolicyPlan;
+use crate::policy::engine::PolicyKind;
+use crate::scenario::{Outcome, Scenario};
 use crate::util::csv::Csv;
 use crate::util::table::{f, pct, Table};
 
 use super::{Depth, FigureOutput};
+
+/// The site-headroom scenario for one policy at the given depth.
+fn site_scenario(policy: PolicyKind, depth: Depth, seed: u64) -> Scenario {
+    let step = match depth {
+        Depth::Quick => 5,
+        Depth::Full => 2,
+    };
+    Scenario::builder("site-headroom")
+        .policy(policy)
+        .weeks(depth.weeks(1.0))
+        .seed(seed)
+        .site(4)
+        .site_search(50, step)
+        .build()
+}
 
 /// `site-headroom`: per-policy deployable servers for a demo 4-cluster
 /// heterogeneous site.
@@ -18,15 +38,19 @@ pub fn site_headroom(depth: Depth, seed: u64) -> FigureOutput {
         "site-headroom",
         "Site-level deployable servers under a shared substation budget",
     );
-    let site = SiteSpec::demo(4);
-    let mut pc = PlannerConfig::default();
-    pc.seed = seed;
-    pc.weeks = depth.weeks(1.0);
-    pc.step_pct = match depth {
-        Depth::Quick => 5,
-        Depth::Full => 2,
-    };
-    let plans = plan_all(&site, &pc);
+    let plans: Vec<PolicyPlan> = PolicyKind::all()
+        .into_iter()
+        .map(|policy| {
+            let sc = site_scenario(policy, depth, seed);
+            match sc.run().expect("site scenario must run").outcome {
+                Outcome::Site(site) => site.plan,
+                Outcome::Row(_) => unreachable!("site scenario dispatches to the planner"),
+            }
+        })
+        .collect();
+    let site = site_scenario(PolicyKind::Polca, depth, seed)
+        .site_spec()
+        .expect("site scenario has a topology");
 
     let mut t = Table::new(
         "Site headroom",

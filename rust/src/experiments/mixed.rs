@@ -11,6 +11,7 @@
 //! regimes for mixing to be a usable planning knob.
 
 use crate::policy::engine::PolicyKind;
+use crate::scenario::Scenario;
 use crate::simulation::{run, MixedRowConfig, SimConfig};
 use crate::util::csv::Csv;
 use crate::util::table::{f, pct, Table};
@@ -73,19 +74,31 @@ impl Default for SweepConfig {
 }
 
 impl SweepConfig {
-    /// The simulation config for one training fraction — shared by the
-    /// sweep and by `polca mixed run`, so rounding/oversubscription
-    /// semantics live in exactly one place.
+    /// The declarative [`Scenario`] for one training fraction — the
+    /// sweep is an enumeration of scenario values, so `polca mixed`
+    /// and `polca run mixed-row` cannot diverge.
+    pub fn scenario(&self, training_fraction: f64) -> Scenario {
+        Scenario::builder("mixed-row-sweep")
+            .policy(self.policy)
+            .weeks(self.weeks)
+            .seed(self.seed)
+            .servers(self.servers)
+            .added(self.added)
+            .training(training_fraction)
+            .training_jobs(self.mixed.servers_per_job, self.mixed.job_stagger_s)
+            .build()
+    }
+
+    /// The simulation config for one training fraction — derived from
+    /// [`SweepConfig::scenario`], so rounding/oversubscription/
+    /// calibration semantics live in exactly one place (the scenario
+    /// layer). The template's waveform profile rides along for callers
+    /// that customized it.
     pub fn sim_config(&self, training_fraction: f64) -> SimConfig {
-        let mut cfg = SimConfig::default();
-        cfg.policy_kind = self.policy;
-        cfg.weeks = self.weeks;
-        cfg.exp.seed = self.seed;
-        cfg.exp.row.num_servers = self.servers;
-        cfg.deployed_servers = (self.servers as f64 * (1.0 + self.added)).round() as usize;
-        let mut mixed = self.mixed.clone();
-        mixed.training_fraction = training_fraction;
-        cfg.mixed = Some(mixed);
+        let mut cfg = self.scenario(training_fraction).sim_config();
+        if let Some(m) = &mut cfg.mixed {
+            m.profile = self.mixed.profile;
+        }
         cfg
     }
 }

@@ -11,7 +11,8 @@
 
 use crate::metrics::{ResilienceMetrics, RunReport};
 use crate::policy::engine::PolicyKind;
-use crate::simulation::{power_scale_for_row, run, SimConfig};
+use crate::scenario::Scenario;
+use crate::simulation::{run, SimConfig};
 use crate::util::csv::Csv;
 use crate::util::table::{f, Table};
 
@@ -58,18 +59,28 @@ impl MatrixConfig {
         self.weeks * 7.0 * 86_400.0
     }
 
-    /// The cell configuration for one (plan, policy) pair.
+    /// The declarative [`Scenario`] for one (plan, policy) cell — the
+    /// grid is an enumeration of scenario values.
+    pub fn scenario(&self, plan: Option<FaultPlan>, policy: PolicyKind) -> Scenario {
+        let mut b = Scenario::builder("fault-cell")
+            .policy(policy)
+            .weeks(self.weeks)
+            .seed(self.seed)
+            .servers(self.servers)
+            .added(self.added);
+        if let Some(esc) = self.escalation_s {
+            b = b.escalate(esc);
+        }
+        if let Some(p) = plan {
+            b = b.faults(p);
+        }
+        b.build()
+    }
+
+    /// The cell configuration for one (plan, policy) pair (derived from
+    /// [`MatrixConfig::scenario`]).
     pub fn sim_config(&self, plan: Option<FaultPlan>, policy: PolicyKind) -> SimConfig {
-        let mut cfg = SimConfig::default();
-        cfg.policy_kind = policy;
-        cfg.weeks = self.weeks;
-        cfg.exp.seed = self.seed;
-        cfg.exp.row.num_servers = self.servers;
-        cfg.deployed_servers = (self.servers as f64 * (1.0 + self.added)).round() as usize;
-        cfg.power_scale = power_scale_for_row(self.servers);
-        cfg.brake_escalation_s = self.escalation_s;
-        cfg.faults = plan;
-        cfg
+        self.scenario(plan, policy).sim_config()
     }
 }
 

@@ -158,14 +158,20 @@ impl FaultPlan {
                 .unwrap()
                 .then(a.duration_s.partial_cmp(&b.duration_s).unwrap())
         });
-        for w in evs.windows(2) {
-            if w[0].kind.label() == w[1].kind.label() && w[1].start_s < w[0].end_s() {
-                anyhow::bail!(
-                    "overlapping '{}' episodes at {}s and {}s — merge them into one window",
-                    w[0].kind.label(),
-                    w[0].start_s,
-                    w[1].start_s
-                );
+        // Same-kind overlap must be checked pairwise, not only between
+        // neighbors in start order: an interleaved episode of another
+        // kind would otherwise hide the conflict (and the restore-on-end
+        // handler would un-do a still-active episode mid-run).
+        for (i, a) in evs.iter().enumerate() {
+            for b in &evs[i + 1..] {
+                if a.kind.label() == b.kind.label() && b.start_s < a.end_s() {
+                    anyhow::bail!(
+                        "overlapping '{}' episodes at {}s and {}s — merge them into one window",
+                        a.kind.label(),
+                        a.start_s,
+                        b.start_s
+                    );
+                }
             }
         }
         Ok(evs)
@@ -283,6 +289,13 @@ mod tests {
             .with(FaultKind::TelemetryFreeze, 100.0, 200.0)
             .with(FaultKind::MeterBias { mult: 0.9 }, 150.0, 50.0);
         assert_eq!(ok.normalized().unwrap().len(), 2);
+        // An interleaved episode of another kind must not hide a
+        // same-kind overlap from validation.
+        let hidden = FaultPlan::new()
+            .with(FaultKind::FeedLoss { budget_frac: 0.75 }, 0.0, 1000.0)
+            .with(FaultKind::TelemetryFreeze, 10.0, 20.0)
+            .with(FaultKind::FeedLoss { budget_frac: 0.9 }, 500.0, 100.0);
+        assert!(hidden.normalized().is_err());
     }
 
     #[test]

@@ -29,8 +29,14 @@
 //! * **Serving path** — [`runtime`] (PJRT executables AOT-compiled from
 //!   JAX/Pallas), [`coordinator`] (router, batcher, KV-cache slots) — the
 //!   real-model end-to-end driver with POLCA in the loop.
+//! * **Scenario layer** — [`scenario`]: one declarative [`scenario::Scenario`]
+//!   spec composing workload, cluster shape, SKU, policy knobs, training
+//!   mix, fault plan, and site topology; fluent builder, lossless TOML
+//!   round-trip, named presets, and a single `run()` dispatching to the
+//!   engines above. Every CLI surface and experiment generator
+//!   constructs runs through it.
 //! * **Reproduction** — [`experiments`] regenerates every table and figure
-//!   in the paper's evaluation.
+//!   in the paper's evaluation by enumerating scenario values.
 //!
 //! A paper-section → module map with the control-loop dataflow lives in
 //! `docs/ARCHITECTURE.md`.
@@ -50,6 +56,7 @@ pub mod perfmodel;
 pub mod policy;
 pub mod power;
 pub mod runtime;
+pub mod scenario;
 pub mod sim;
 pub mod simulation;
 pub mod testing;

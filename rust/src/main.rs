@@ -1,33 +1,30 @@
 //! `polca` — CLI for the POLCA reproduction.
 //!
-//! Subcommands:
+//! Canonical surface (the scenario layer — one declarative spec for
+//! every run, see `rust/src/scenario/`):
+//!   run <preset|file.toml> [--quick] [--policy P] [--weeks W]
+//!       [--seed N] [--servers N] [--added FRAC] [--training FRAC]
+//!       [--escalate S]
+//!       Execute one scenario (row simulation or site plan).
+//!   scenario list
+//!       Named presets with descriptions.
+//!   scenario show <preset|file>      Print the scenario as TOML.
+//!   scenario validate <preset|file> | --all
+//!       Check a spec (and its TOML round-trip); --all covers every preset.
+//!   scenario save <preset> [--out FILE]
+//!       Write a preset to a TOML file to edit and `polca run`.
+//!
+//! Reproduction & tooling:
 //!   figure <id|all|list> [--out-dir out] [--full] [--seed N]
 //!       Regenerate paper tables/figures (CSV + stdout).
-//!   simulate [--policy polca|1t-lp|1t-all|nocap] [--servers N]
-//!            [--added FRAC] [--weeks W] [--seed N] [--config FILE]
-//!       One cluster simulation with an impact report.
-//!   tune [--weeks W] [--seed N]
-//!       Week-one threshold search (§6.2).
-//!   calibrate [--weeks W] [--seed N]
-//!       Fit the power-scale factor to the Table-2 peak.
+//!   tune [--weeks W] [--seed N]       Week-one threshold search (§6.2).
+//!   calibrate [--weeks W] [--seed N]  Fit power_scale to the Table-2 peak.
 //!   serve [--artifacts DIR] [--requests N] [--oversub F]
 //!       Mini end-to-end serving run (real PJRT model, POLCA in loop).
-//!   fleet [plan|sweep|trace] [--clusters N] [--policy polca|all]
-//!         [--added PCT] [--training FRAC] [--weeks W] [--seed N]
-//!         [--serial] [--out-dir out]
-//!       Site-level planning over a heterogeneous multi-cluster site.
-//!   mixed [run|sweep] [--training FRAC] [--policy polca|nocap|...]
-//!         [--servers N] [--added FRAC] [--weeks W] [--seed N]
-//!         [--servers-per-job N] [--stagger S] [--step PCT]
-//!       Mixed-workload rows: colocate synchronized training jobs with
-//!       inference and reproduce the §2.4 headroom contrast.
-//!   faults [run|sweep|matrix|plan|list] [--scenario NAME]
-//!          [--policy polca|...|all] [--servers N] [--added FRAC]
-//!          [--weeks W] [--seed N] [--escalate S] [--clusters N]
-//!          [--out-dir out]
-//!       Fault injection: run one scenario, sweep oversubscription
-//!       under it, grid scenario × policy containment, or derate the
-//!       site plan for a fault timeline (docs/RELIABILITY.md).
+//!
+//! Deprecated aliases (each builds a `Scenario` internally; prefer
+//! `polca run`): simulate, mixed [run|sweep], faults
+//! [run|sweep|matrix|plan|list], fleet [plan|sweep|trace].
 
 use std::path::{Path, PathBuf};
 
@@ -35,12 +32,15 @@ use polca::config::ExperimentConfig;
 use polca::experiments::{all_ids, run_experiment, Depth};
 use polca::policy::engine::PolicyKind;
 use polca::policy::tuner::tune_thresholds;
-use polca::simulation::{calibrate, run_with_impact, SimConfig};
+use polca::scenario::{preset, preset_names, presets, Outcome, Scenario};
+use polca::simulation::calibrate;
 use polca::util::cli::Args;
 
 fn main() {
     let args = Args::from_env();
     let result = match args.subcommand.as_deref() {
+        Some("run") => cmd_run(&args),
+        Some("scenario") => cmd_scenario(&args),
         Some("figure") => cmd_figure(&args),
         Some("simulate") => cmd_simulate(&args),
         Some("tune") => cmd_tune(&args),
@@ -68,17 +68,171 @@ fn main() {
 fn print_help() {
     println!(
         "polca — Power Oversubscription in LLM Cloud Providers (reproduction)\n\n\
-         usage: polca <figure|simulate|tune|calibrate|serve|fleet|mixed|faults> [options]\n\
-         try:   polca figure list\n       \
+         usage: polca <run|scenario|figure|tune|calibrate|serve> [options]\n\
+         try:   polca scenario list\n       \
+                polca run oversubscribed-row --quick\n       \
+                polca run cascade-faults\n       \
+                polca run examples/scenarios/custom-fault-timeline.toml\n       \
+                polca scenario save mixed-row --out my-row.toml\n       \
                 polca figure fig13 --out-dir out\n       \
+                polca serve --requests 16\n\n\
+         deprecated aliases (each builds a scenario internally):\n       \
                 polca simulate --policy polca --added 0.30 --weeks 1\n       \
-                polca fleet --clusters 4 --policy polca\n       \
-                polca mixed sweep --weeks 0.3\n       \
-                polca mixed run --training 0.5 --policy polca\n       \
-                polca faults matrix --weeks 0.1\n       \
-                polca faults run --scenario cap-ignore --policy polca\n       \
-                polca serve --requests 16"
+                polca mixed [run|sweep]\n       \
+                polca faults [run|sweep|matrix|plan|list]\n       \
+                polca fleet [plan|sweep|trace]"
     );
+}
+
+fn deprecation_note(old: &str, hint: &str) {
+    eprintln!(
+        "note: `polca {old}` is a deprecated alias (it now builds a scenario internally) — \
+         prefer `{hint}`; see `polca scenario list`"
+    );
+}
+
+/// Resolve a `polca run` target: an existing path (or anything ending
+/// in `.toml`) loads a scenario file; otherwise it names a preset.
+fn load_scenario(target: &str) -> anyhow::Result<Scenario> {
+    if target.ends_with(".toml") || Path::new(target).exists() {
+        Scenario::load(Path::new(target))
+    } else {
+        preset(target)
+    }
+}
+
+/// Parse `--escalate [SECONDS]`: a value must be numeric (a typo like
+/// `--escalate 60s` is an error, not a silent 120 s), the bare flag
+/// arms the 120 s default, absence means "leave unchanged".
+fn escalate_arg(args: &Args) -> anyhow::Result<Option<f64>> {
+    if let Some(raw) = args.get("escalate") {
+        let secs: f64 = raw
+            .parse()
+            .map_err(|_| anyhow::anyhow!("--escalate needs seconds, got '{raw}'"))?;
+        Ok(Some(secs))
+    } else if args.flag("escalate") {
+        Ok(Some(120.0))
+    } else {
+        Ok(None)
+    }
+}
+
+/// The flag overlays every scenario-driven subcommand shares. Options
+/// that are absent leave the scenario untouched, so preset/file values
+/// are the defaults.
+fn apply_overrides(sc: &mut Scenario, args: &Args) -> anyhow::Result<()> {
+    if let Some(p) = args.get("policy") {
+        sc.policy_kind = polca::util::cli::parse_policy(p)?;
+    }
+    args.set_f64("weeks", &mut sc.weeks);
+    args.set_u64("seed", &mut sc.exp.seed);
+    args.set_usize("servers", &mut sc.exp.row.num_servers);
+    args.set_f64("added", &mut sc.added_frac);
+    args.set_f64("training", &mut sc.training.fraction);
+    args.set_f64("power-mult", &mut sc.workload_power_mult);
+    if let Some(secs) = escalate_arg(args)? {
+        sc.brake_escalation_s = Some(secs);
+    }
+    if let Some(site) = sc.site.as_mut() {
+        args.set_u32("max-added", &mut site.max_added_pct);
+        args.set_u32("step", &mut site.step_pct);
+        if args.flag("serial") {
+            site.parallel = false;
+        }
+    }
+    Ok(())
+}
+
+/// Validate, announce, execute, and print one scenario — the single
+/// execution path behind `polca run` and every deprecated alias.
+fn run_and_print(sc: &Scenario) -> anyhow::Result<()> {
+    sc.validate()?;
+    eprintln!("{}", sc.describe());
+    let t = std::time::Instant::now();
+    let mut report = sc.run()?;
+    let wall = t.elapsed().as_secs_f64();
+    print!("{}", report.render());
+    if let Outcome::Row(row) = &report.outcome {
+        println!(
+            "{} events in {:.1}s wall ({:.2}M events/s)",
+            row.report.events,
+            wall,
+            row.report.events as f64 / wall / 1e6
+        );
+    }
+    Ok(())
+}
+
+fn cmd_run(args: &Args) -> anyhow::Result<()> {
+    let Some(target) = args.positionals.first() else {
+        println!("usage: polca run <preset|file.toml> [--quick] [options]\npresets:");
+        list_presets();
+        return Ok(());
+    };
+    let mut sc = load_scenario(target)?;
+    // --quick scales the spec's horizon first; explicit flags (e.g.
+    // --weeks) then override whatever the spec or --quick chose.
+    if args.flag("quick") {
+        sc = sc.quick();
+    }
+    apply_overrides(&mut sc, args)?;
+    run_and_print(&sc)
+}
+
+fn list_presets() {
+    for sc in presets() {
+        println!("  {:<20} {}", sc.name, sc.description);
+    }
+}
+
+fn cmd_scenario(args: &Args) -> anyhow::Result<()> {
+    let mode = args.positionals.first().map(|s| s.as_str()).unwrap_or("list");
+    let target = args.positionals.get(1).map(|s| s.as_str());
+    match mode {
+        "list" => list_presets(),
+        "show" => {
+            let target = target
+                .ok_or_else(|| anyhow::anyhow!("usage: polca scenario show <preset|file.toml>"))?;
+            print!("{}", load_scenario(target)?.to_toml_string());
+        }
+        "validate" => {
+            let targets: Vec<String> = if args.flag("all") {
+                preset_names().iter().map(|s| s.to_string()).collect()
+            } else {
+                vec![target
+                    .ok_or_else(|| {
+                        anyhow::anyhow!(
+                            "usage: polca scenario validate <preset|file.toml> | --all"
+                        )
+                    })?
+                    .to_string()]
+            };
+            for t in &targets {
+                let sc = load_scenario(t)?;
+                sc.validate()?;
+                // The save path must be faithful: spec -> TOML -> spec
+                // reproduces the value exactly.
+                let back = Scenario::parse(&sc.to_toml_string())?;
+                anyhow::ensure!(back == sc, "scenario '{t}' does not round-trip through TOML");
+                println!("{t}: ok ({})", sc.describe());
+            }
+        }
+        "save" => {
+            let target = target.ok_or_else(|| {
+                anyhow::anyhow!("usage: polca scenario save <preset|file.toml> [--out FILE]")
+            })?;
+            let sc = load_scenario(target)?;
+            let out = PathBuf::from(
+                args.get("out")
+                    .map(|s| s.to_string())
+                    .unwrap_or_else(|| format!("{}.toml", sc.name)),
+            );
+            sc.save(&out)?;
+            println!("wrote {} (edit it, then: polca run {})", out.display(), out.display());
+        }
+        other => anyhow::bail!("unknown scenario mode '{other}' (list|show|validate|save)"),
+    }
+    Ok(())
 }
 
 fn cmd_figure(args: &Args) -> anyhow::Result<()> {
@@ -110,70 +264,24 @@ fn cmd_figure(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
-fn parse_policy(s: &str) -> anyhow::Result<PolicyKind> {
-    Ok(match s {
-        "polca" => PolicyKind::Polca,
-        "1t-lp" => PolicyKind::OneThreshLowPri,
-        "1t-all" => PolicyKind::OneThreshAll,
-        "nocap" => PolicyKind::NoCap,
-        other => anyhow::bail!("unknown policy '{other}' (polca|1t-lp|1t-all|nocap)"),
-    })
-}
-
 fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
-    let mut cfg = SimConfig::default();
+    deprecation_note("simulate", "polca run inference-row (or oversubscribed-row)");
+    let mut sc = Scenario::builder("simulate")
+        .description("legacy `polca simulate` alias")
+        .build();
     if let Some(path) = args.get("config") {
-        cfg.exp = ExperimentConfig::load(Path::new(path))?;
+        sc.exp = ExperimentConfig::load(Path::new(path))?;
     }
-    cfg.policy_kind = parse_policy(args.get_or("policy", "polca"))?;
-    cfg.weeks = args.get_f64("weeks", 1.0);
-    cfg.exp.seed = args.get_u64("seed", cfg.exp.seed);
-    let baseline_servers = args.get_usize("servers", cfg.exp.row.num_servers);
-    cfg.exp.row.num_servers = baseline_servers;
-    let added = args.get_f64("added", 0.0);
-    cfg.deployed_servers = (baseline_servers as f64 * (1.0 + added)).round() as usize;
-    cfg.workload_power_mult = args.get_f64("power-mult", 1.0);
-
-    eprintln!(
-        "simulating {} for {:.2} weeks: {} servers deployed on a {}-server budget (+{:.0}%)",
-        cfg.policy_kind.name(),
-        cfg.weeks,
-        cfg.deployed_servers,
-        baseline_servers,
-        added * 100.0
-    );
-    let t = std::time::Instant::now();
-    let (mut report, impact) = run_with_impact(&cfg);
-    let wall = t.elapsed().as_secs_f64();
-    println!("{}", report.summary());
-    println!(
-        "impact vs uncapped: HP p50/p99 = {:.2}%/{:.2}%  LP p50/p99 = {:.2}%/{:.2}%  thrpt HP/LP = {:.3}/{:.3}",
-        impact.hp_p50 * 100.0,
-        impact.hp_p99 * 100.0,
-        impact.lp_p50 * 100.0,
-        impact.lp_p99 * 100.0,
-        impact.hp_throughput,
-        impact.lp_throughput
-    );
-    let v = impact.slo_violations(&cfg.exp.slo);
-    if v.is_empty() {
-        println!("SLO: OK (Table 5)");
-    } else {
-        println!("SLO: VIOLATED — {}", v.join("; "));
-    }
-    println!(
-        "{} events in {:.1}s wall ({:.2}M events/s)",
-        report.events,
-        wall,
-        report.events as f64 / wall / 1e6
-    );
-    Ok(())
+    apply_overrides(&mut sc, args)?;
+    run_and_print(&sc)
 }
 
 fn cmd_tune(args: &Args) -> anyhow::Result<()> {
-    let mut base = SimConfig::default();
-    base.weeks = args.get_f64("weeks", 1.0);
-    base.exp.seed = args.get_u64("seed", 1);
+    let base = Scenario::builder("tune")
+        .weeks(args.get_f64("weeks", 1.0))
+        .seed(args.get_u64("seed", 1))
+        .build()
+        .sim_config();
     let combos = [(0.75, 0.85), (0.80, 0.89), (0.85, 0.95)];
     let added = [0.0, 0.10, 0.20, 0.25, 0.30, 0.35, 0.40];
     eprintln!("sweeping {} points ...", combos.len() * added.len());
@@ -224,57 +332,28 @@ fn cmd_mixed(args: &Args) -> anyhow::Result<()> {
     let mode = args.positionals.first().map(|s| s.as_str()).unwrap_or("sweep");
     match mode {
         "run" => {
-            let mut sc = SweepConfig::default();
-            sc.policy = parse_policy(args.get_or("policy", "polca"))?;
-            sc.weeks = args.get_f64("weeks", 0.25);
-            sc.seed = args.get_u64("seed", sc.seed);
-            sc.servers = args.get_usize("servers", sc.servers);
-            sc.added = args.get_f64("added", 0.0);
-            sc.mixed.servers_per_job = args.get_usize("servers-per-job", 0);
-            sc.mixed.job_stagger_s = args.get_f64("stagger", 0.0);
-            let frac = args.get_f64("training", 0.5).clamp(0.0, 1.0);
-            let cfg = sc.sim_config(frac);
-            eprintln!(
-                "mixed row: {} with {:.0}% training, {} servers deployed on a {}-server \
-                 budget (+{:.0}%), {:.2} weeks",
-                cfg.policy_kind.name(),
-                frac * 100.0,
-                cfg.deployed_servers,
-                sc.servers,
-                sc.added * 100.0,
-                cfg.weeks
-            );
-            let (mut report, impact) = run_with_impact(&cfg);
-            println!("{}", report.summary());
-            println!(
-                "inference impact vs uncapped: HP p50/p99 = {:.2}%/{:.2}%  \
-                 LP p50/p99 = {:.2}%/{:.2}%",
-                impact.hp_p50 * 100.0,
-                impact.hp_p99 * 100.0,
-                impact.lp_p50 * 100.0,
-                impact.lp_p99 * 100.0
-            );
-            println!(
-                "training: {} iterations, mean {:.3}s vs nominal {:.3}s (inflation {:.1}%)",
-                report.train.iters,
-                report.train.mean_iter_s(),
-                report.train.nominal_iter_s,
-                report.train.inflation() * 100.0
-            );
-            let v = impact.slo_violations(&cfg.exp.slo);
-            if v.is_empty() {
-                println!("SLO: OK (Table 5; training pays in iteration time, not SLOs)");
-            } else {
-                println!("SLO: VIOLATED — {}", v.join("; "));
-            }
+            deprecation_note("mixed run", "polca run mixed-row");
+            let mut sc = Scenario::builder("mixed")
+                .description("legacy `polca mixed run` alias")
+                .weeks(0.25)
+                .seed(1)
+                .training(0.5)
+                .build();
+            apply_overrides(&mut sc, args)?;
+            sc.training.fraction = sc.training.fraction.clamp(0.0, 1.0);
+            sc.training.servers_per_job = args.get_usize("servers-per-job", 0);
+            sc.training.stagger_s = args.get_f64("stagger", 0.0);
+            run_and_print(&sc)
         }
         "sweep" => {
             let mut sc = SweepConfig::default();
-            sc.policy = parse_policy(args.get_or("policy", "nocap"))?;
-            sc.weeks = args.get_f64("weeks", sc.weeks);
-            sc.seed = args.get_u64("seed", sc.seed);
-            sc.servers = args.get_usize("servers", sc.servers);
-            sc.added = args.get_f64("added", sc.added);
+            if let Some(p) = args.get("policy") {
+                sc.policy = polca::util::cli::parse_policy(p)?;
+            }
+            args.set_f64("weeks", &mut sc.weeks);
+            args.set_u64("seed", &mut sc.seed);
+            args.set_usize("servers", &mut sc.servers);
+            args.set_f64("added", &mut sc.added);
             sc.mixed.servers_per_job = args.get_usize("servers-per-job", 0);
             sc.mixed.job_stagger_s = args.get_f64("stagger", 0.0);
             let step = args.get_usize("step", 25).clamp(1, 100);
@@ -314,23 +393,19 @@ fn cmd_mixed(args: &Args) -> anyhow::Result<()> {
                 "headroom interpolates monotonically across mixes: {}",
                 if v.monotone { "ok" } else { "FAIL" }
             );
+            Ok(())
         }
         other => anyhow::bail!("unknown mixed mode '{other}' (run|sweep)"),
     }
-    Ok(())
 }
 
 fn cmd_faults(args: &Args) -> anyhow::Result<()> {
-    use polca::faults::{run_matrix, ContainmentSlo, FaultPlan, MatrixConfig};
-    use polca::fleet::planner::{plan_site_under_faults, PlannerConfig};
-    use polca::fleet::site::SiteSpec;
+    use polca::faults::{run_matrix, FaultPlan, MatrixConfig};
     use polca::metrics::ResilienceMetrics;
     use polca::simulation::run;
     use polca::util::table::{f, pct, Table};
 
     let mode = args.positionals.first().map(|s| s.as_str()).unwrap_or("matrix");
-    let escalation = args.get("escalate").map(|s| s.parse::<f64>().unwrap_or(120.0));
-    let escalation = if args.flag("escalate") { Some(120.0) } else { escalation };
     match mode {
         "list" => {
             for name in FaultPlan::scenario_names() {
@@ -338,54 +413,29 @@ fn cmd_faults(args: &Args) -> anyhow::Result<()> {
             }
         }
         "run" => {
-            let mut mc = MatrixConfig::default();
-            mc.weeks = args.get_f64("weeks", 0.1);
-            mc.seed = args.get_u64("seed", mc.seed);
-            mc.servers = args.get_usize("servers", mc.servers);
-            mc.added = args.get_f64("added", mc.added);
-            mc.escalation_s = escalation.or(mc.escalation_s);
-            let scenario = args.get_or("scenario", "cap-ignore");
-            let policy = parse_policy(args.get_or("policy", "polca"))?;
-            let plan = FaultPlan::scenario(scenario, mc.horizon_s())?;
-            eprintln!(
-                "injecting '{scenario}' ({} episodes) into {} at {} servers +{:.0}% \
-                 for {:.2} weeks",
-                plan.len(),
-                policy.name(),
-                mc.servers,
-                mc.added * 100.0,
-                mc.weeks
-            );
-            let mut report = run(&mc.sim_config(Some(plan), policy));
-            println!("{}", report.summary());
-            for inc in &report.resilience.incidents {
-                println!(
-                    "incident {:<16} [{:>7.0}s..{:>7.0}s]  time-to-contain {}",
-                    inc.label,
-                    inc.start_s,
-                    inc.end_s,
-                    ResilienceMetrics::fmt_ttc(inc.time_to_contain_s)
-                );
-            }
-            let r = &report.resilience;
-            println!(
-                "containment: {} (violation {:.1}s, peak overshoot {:.0} W, \
-                 true peak {:.3}, reissued {})",
-                if r.all_contained() { "OK" } else { "FAILED" },
-                r.violation_s,
-                r.peak_overshoot_w,
-                r.true_peak_norm,
-                r.reissued_commands
-            );
+            deprecation_note("faults run", "polca run cascade-faults (or cap-ignore-drill)");
+            let mut sc = Scenario::builder("faults")
+                .description("legacy `polca faults run` alias")
+                .servers(16)
+                .added(0.30)
+                .weeks(0.1)
+                .seed(1)
+                .faults_scenario(args.get_or("scenario", "cap-ignore"))
+                .escalate(120.0)
+                .build();
+            apply_overrides(&mut sc, args)?;
+            run_and_print(&sc)?;
         }
         "sweep" => {
             let mut mc = MatrixConfig::default();
             mc.weeks = args.get_f64("weeks", 0.1);
-            mc.seed = args.get_u64("seed", mc.seed);
-            mc.servers = args.get_usize("servers", mc.servers);
-            mc.escalation_s = escalation.or(mc.escalation_s);
+            args.set_u64("seed", &mut mc.seed);
+            args.set_usize("servers", &mut mc.servers);
+            if let Some(secs) = escalate_arg(args)? {
+                mc.escalation_s = Some(secs);
+            }
             let scenario = args.get_or("scenario", "feed-loss");
-            let policy = parse_policy(args.get_or("policy", "polca"))?;
+            let policy = args.policy("polca")?;
             let max_added = args.get_usize("max-added", 40);
             let step = args.get_usize("step", 10).max(1);
             eprintln!(
@@ -417,14 +467,16 @@ fn cmd_faults(args: &Args) -> anyhow::Result<()> {
         }
         "matrix" => {
             let mut mc = MatrixConfig::default();
-            mc.weeks = args.get_f64("weeks", mc.weeks);
-            mc.seed = args.get_u64("seed", mc.seed);
-            mc.servers = args.get_usize("servers", mc.servers);
-            mc.added = args.get_f64("added", mc.added);
-            mc.escalation_s = escalation.or(mc.escalation_s);
+            args.set_f64("weeks", &mut mc.weeks);
+            args.set_u64("seed", &mut mc.seed);
+            args.set_usize("servers", &mut mc.servers);
+            args.set_f64("added", &mut mc.added);
+            if let Some(secs) = escalate_arg(args)? {
+                mc.escalation_s = Some(secs);
+            }
             let policy_arg = args.get_or("policy", "all");
             if policy_arg != "all" {
-                mc.policies = vec![parse_policy(policy_arg)?];
+                mc.policies = vec![polca::util::cli::parse_policy(policy_arg)?];
             }
             eprintln!(
                 "fault matrix: {} scenarios × {} policies on {} servers +{:.0}%, \
@@ -451,43 +503,17 @@ fn cmd_faults(args: &Args) -> anyhow::Result<()> {
             }
         }
         "plan" => {
-            let n_clusters = args.get_usize("clusters", 4);
-            let scenario = args.get_or("scenario", "feed-loss");
-            let policy = parse_policy(args.get_or("policy", "polca"))?;
-            let site = SiteSpec::demo(n_clusters);
-            let mut pc = PlannerConfig::default();
-            pc.weeks = args.get_f64("weeks", pc.weeks);
-            pc.seed = args.get_u64("seed", pc.seed);
-            pc.parallel = !args.flag("serial");
-            pc.max_added_pct = args.get_usize("max-added", pc.max_added_pct as usize) as u32;
-            pc.step_pct = args.get_usize("step", pc.step_pct as usize) as u32;
-            pc.brake_escalation_s = escalation.or(Some(120.0));
-            let horizon_s = pc.weeks * 7.0 * 86_400.0;
-            let plan = FaultPlan::scenario(scenario, horizon_s)?;
-            let cslo = ContainmentSlo::default();
-            eprintln!(
-                "derating site '{}' for '{scenario}' under {} ...",
-                site.name,
-                policy.name()
-            );
-            let fp = plan_site_under_faults(&site, policy, &pc, &plan, &cslo);
-            println!(
-                "clean plan:   {} servers (+{}%)",
-                fp.clean.deployable_servers, fp.clean.added_pct
-            );
-            println!(
-                "under faults: {} servers (+{}%) — derated by {} servers{}",
-                fp.derated_servers,
-                fp.derated_added_pct,
-                fp.clean.deployable_servers.saturating_sub(fp.derated_servers),
-                if fp.feasible { "" } else { " (NOT deployable even at baseline)" }
-            );
-            println!(
-                "worst case at the derated point: violation {:.1}s, ttc {}, overshoot {:.1}%",
-                fp.worst_violation_s,
-                ResilienceMetrics::fmt_ttc(fp.worst_time_to_contain_s),
-                fp.worst_overshoot_frac * 100.0
-            );
+            deprecation_note("faults plan", "polca run site-derated");
+            let mut sc = Scenario::builder("faults-plan")
+                .description("legacy `polca faults plan` alias")
+                .weeks(0.08)
+                .seed(1)
+                .site(args.get_usize("clusters", 4))
+                .faults_scenario(args.get_or("scenario", "feed-loss"))
+                .escalate(120.0)
+                .build();
+            apply_overrides(&mut sc, args)?;
+            run_and_print(&sc)?;
         }
         other => anyhow::bail!("unknown faults mode '{other}' (run|sweep|matrix|plan|list)"),
     }
@@ -495,35 +521,31 @@ fn cmd_faults(args: &Args) -> anyhow::Result<()> {
 }
 
 fn cmd_fleet(args: &Args) -> anyhow::Result<()> {
-    use polca::fleet::planner::{evaluate_added, plan_site, PlannerConfig};
-    use polca::fleet::site::SiteSpec;
+    use polca::fleet::planner::evaluate_added;
     use polca::util::csv::Csv;
     use polca::util::table::{f, pct, Table};
 
     let mode = args.positionals.first().map(|s| s.as_str()).unwrap_or("plan");
-    let n_clusters = args.get_usize("clusters", 4);
-    let training = args.get_f64("training", 0.0).clamp(0.0, 1.0);
-    let site = if training > 0.0 {
-        SiteSpec::demo(n_clusters).with_training(training)
-    } else {
-        SiteSpec::demo(n_clusters)
-    };
-    if training > 0.0 {
-        eprintln!("every cluster colocates {:.0}% training servers", training * 100.0);
+    // The alias's base scenario: the demo site at the planner defaults.
+    let mut sc = Scenario::builder("fleet")
+        .description("legacy `polca fleet` alias")
+        .weeks(0.08)
+        .seed(1)
+        .site(args.get_usize("clusters", 4))
+        .build();
+    apply_overrides(&mut sc, args)?;
+    sc.training.fraction = sc.training.fraction.clamp(0.0, 1.0);
+    if sc.training.fraction > 0.0 {
+        eprintln!(
+            "every cluster colocates {:.0}% training servers",
+            sc.training.fraction * 100.0
+        );
     }
-    let mut pc = PlannerConfig::default();
-    pc.weeks = args.get_f64("weeks", pc.weeks);
-    pc.seed = args.get_u64("seed", pc.seed);
-    pc.parallel = !args.flag("serial");
-    pc.max_added_pct = args.get_usize("max-added", pc.max_added_pct as usize) as u32;
-    pc.step_pct = args.get_usize("step", pc.step_pct as usize) as u32;
+    let site = sc.site_spec().expect("fleet alias always carries a site");
+    let pc = sc.planner_config().expect("fleet alias always carries a site");
 
     let policy_arg = args.get_or("policy", "all");
-    let policies: Vec<PolicyKind> = if policy_arg == "all" {
-        PolicyKind::all().to_vec()
-    } else {
-        vec![parse_policy(policy_arg)?]
-    };
+    let policies: Vec<PolicyKind> = polca::util::cli::parse_policies(policy_arg)?;
 
     eprintln!(
         "site '{}': {} clusters / {} baseline servers / {:.0} kW substation budget ({})",
@@ -546,12 +568,25 @@ fn cmd_fleet(args: &Args) -> anyhow::Result<()> {
 
     match mode {
         "plan" => {
+            deprecation_note("fleet plan", "polca run site-headroom");
             let mut t = Table::new(
                 "Site capacity plan",
                 &["policy", "deployable", "added", "site peak", "headroom", "brakes",
                   "caps/day", "HP p99", "LP p99"],
             );
-            let plans: Vec<_> = policies.iter().map(|&p| plan_site(&site, p, &pc)).collect();
+            // One scenario per policy: the alias enumerates scenario
+            // values exactly like the site-headroom experiment does.
+            let plans: Vec<_> = policies
+                .iter()
+                .map(|&p| {
+                    let mut s = sc.clone();
+                    s.policy_kind = p;
+                    match s.run()?.outcome {
+                        Outcome::Site(site) => Ok(site.plan),
+                        Outcome::Row(_) => unreachable!("site scenario plans a site"),
+                    }
+                })
+                .collect::<anyhow::Result<Vec<_>>>()?;
             for p in &plans {
                 t.row(vec![
                     p.policy.name().to_string(),

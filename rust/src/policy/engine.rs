@@ -58,6 +58,22 @@ impl PolicyKind {
     pub fn all() -> [PolicyKind; 4] {
         [PolicyKind::Polca, PolicyKind::OneThreshLowPri, PolicyKind::OneThreshAll, PolicyKind::NoCap]
     }
+
+    /// Stable machine-readable slug, shared by the CLI (`--policy`) and
+    /// the scenario TOML (`[policy] kind = "..."`).
+    pub fn slug(&self) -> &'static str {
+        match self {
+            PolicyKind::Polca => "polca",
+            PolicyKind::OneThreshLowPri => "1t-lp",
+            PolicyKind::OneThreshAll => "1t-all",
+            PolicyKind::NoCap => "nocap",
+        }
+    }
+
+    /// The inverse of [`PolicyKind::slug`].
+    pub fn from_slug(s: &str) -> Option<PolicyKind> {
+        PolicyKind::all().into_iter().find(|k| k.slug() == s)
+    }
 }
 
 /// Abstract control action emitted by the engine.

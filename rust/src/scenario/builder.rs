@@ -1,0 +1,261 @@
+//! Fluent construction of [`Scenario`] values — the programmatic front
+//! door the CLI aliases and every experiment generator use, so run
+//! wiring reads as *what* is being studied instead of field-by-field
+//! `SimConfig` assembly.
+//!
+//! ```
+//! use polca::policy::engine::PolicyKind;
+//! use polca::scenario::Scenario;
+//!
+//! let sc = Scenario::builder("demo")
+//!     .description("one oversubscribed mixed row under a fault drill")
+//!     .policy(PolicyKind::Polca)
+//!     .servers(16)
+//!     .added(0.30)
+//!     .weeks(0.1)
+//!     .seed(3)
+//!     .training(0.25)
+//!     .faults_scenario("cap-ignore")
+//!     .escalate(120.0)
+//!     .build();
+//! assert!(sc.validate().is_ok());
+//! assert_eq!(sc.deployed_servers(), 21);
+//! ```
+
+use crate::config::{ExperimentConfig, PolicyConfig};
+use crate::faults::FaultPlan;
+use crate::policy::engine::PolicyKind;
+
+use super::{FaultSpec, Scenario};
+
+/// Fluent [`Scenario`] builder (see [`Scenario::builder`]).
+#[derive(Debug, Clone)]
+pub struct ScenarioBuilder {
+    sc: Scenario,
+}
+
+impl ScenarioBuilder {
+    /// A builder over the default scenario (the paper's 40-server row,
+    /// POLCA, one week, no oversubscription).
+    pub fn new(name: &str) -> Self {
+        ScenarioBuilder { sc: Scenario { name: name.to_string(), ..Default::default() } }
+    }
+
+    /// Set the one-line description.
+    pub fn description(mut self, d: &str) -> Self {
+        self.sc.description = d.to_string();
+        self
+    }
+
+    /// Replace the whole experiment config (row latencies, policy
+    /// knobs, SLOs, seed) — e.g. one loaded from a `--config` file.
+    pub fn experiment(mut self, exp: ExperimentConfig) -> Self {
+        self.sc.exp = exp;
+        self
+    }
+
+    /// Set the driving policy.
+    pub fn policy(mut self, kind: PolicyKind) -> Self {
+        self.sc.policy_kind = kind;
+        self
+    }
+
+    /// Set the baseline (budget) server count.
+    pub fn servers(mut self, n: usize) -> Self {
+        self.sc.exp.row.num_servers = n;
+        self
+    }
+
+    /// Set the added-server fraction (oversubscription).
+    pub fn added(mut self, frac: f64) -> Self {
+        self.sc.added_frac = frac;
+        self
+    }
+
+    /// Set the simulated horizon in weeks.
+    pub fn weeks(mut self, w: f64) -> Self {
+        self.sc.weeks = w;
+        self
+    }
+
+    /// Set the root seed.
+    pub fn seed(mut self, s: u64) -> Self {
+        self.sc.exp.seed = s;
+        self
+    }
+
+    /// Set the catalog model.
+    pub fn model(mut self, name: &str) -> Self {
+        self.sc.model_name = name.to_string();
+        self
+    }
+
+    /// Pin a server SKU by registry name (row scenarios only).
+    pub fn sku(mut self, name: &str) -> Self {
+        self.sc.sku = Some(name.to_string());
+        self
+    }
+
+    /// Override the row-power calibration (rarely needed; the default
+    /// follows the row size).
+    pub fn power_scale(mut self, scale: f64) -> Self {
+        self.sc.power_scale = Some(scale);
+        self
+    }
+
+    /// Set the diurnal-peak target utilization.
+    pub fn peak_utilization(mut self, u: f64) -> Self {
+        self.sc.peak_utilization = u;
+        self
+    }
+
+    /// Set the Fig-17 workload power multiplier.
+    pub fn power_mult(mut self, m: f64) -> Self {
+        self.sc.workload_power_mult = m;
+        self
+    }
+
+    /// Override the low-priority workload share (Fig 15b).
+    pub fn lp_fraction(mut self, frac: f64) -> Self {
+        self.sc.lp_fraction_override = Some(frac);
+        self
+    }
+
+    /// Set the POLCA thresholds (fractions of the row budget).
+    pub fn thresholds(mut self, t1: f64, t2: f64) -> Self {
+        self.sc.exp.policy.t1 = t1;
+        self.sc.exp.policy.t2 = t2;
+        self
+    }
+
+    /// Tune any other Table-3 policy knob in place.
+    pub fn policy_config(mut self, f: impl FnOnce(&mut PolicyConfig)) -> Self {
+        f(&mut self.sc.exp.policy);
+        self
+    }
+
+    /// Colocate this fraction of deployed servers as training.
+    pub fn training(mut self, fraction: f64) -> Self {
+        self.sc.training.fraction = fraction;
+        self
+    }
+
+    /// Set the training job granularity and start stagger.
+    pub fn training_jobs(mut self, servers_per_job: usize, stagger_s: f64) -> Self {
+        self.sc.training.servers_per_job = servers_per_job;
+        self.sc.training.stagger_s = stagger_s;
+        self
+    }
+
+    /// Inject a named fault scenario (resolved against the horizon).
+    pub fn faults_scenario(mut self, name: &str) -> Self {
+        self.sc.faults = FaultSpec::Named(name.to_string());
+        self
+    }
+
+    /// Inject an explicit fault timeline.
+    pub fn faults(mut self, plan: FaultPlan) -> Self {
+        self.sc.faults = FaultSpec::Plan(plan);
+        self
+    }
+
+    /// Enable the policy engine's containment escalation.
+    pub fn escalate(mut self, after_s: f64) -> Self {
+        self.sc.brake_escalation_s = Some(after_s);
+        self
+    }
+
+    /// Make this a site scenario over the demo topology of `clusters`
+    /// clusters (dispatches to the fleet planner).
+    pub fn site(mut self, clusters: usize) -> Self {
+        let mut s = self.sc.site.take().unwrap_or_default();
+        s.clusters = clusters;
+        self.sc.site = Some(s);
+        self
+    }
+
+    /// Set the site planner's search ceiling and resolution (percent).
+    pub fn site_search(mut self, max_added_pct: u32, step_pct: u32) -> Self {
+        let mut s = self.sc.site.take().unwrap_or_default();
+        s.max_added_pct = max_added_pct;
+        s.step_pct = step_pct;
+        self.sc.site = Some(s);
+        self
+    }
+
+    /// Run site clusters serially (reference path; default is parallel).
+    pub fn serial(mut self) -> Self {
+        let mut s = self.sc.site.take().unwrap_or_default();
+        s.parallel = false;
+        self.sc.site = Some(s);
+        self
+    }
+
+    /// Finish: the assembled [`Scenario`] (call
+    /// [`Scenario::validate`] to check it for contradictions).
+    pub fn build(self) -> Scenario {
+        self.sc
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::SiteSection;
+    use super::*;
+
+    #[test]
+    fn builder_touches_every_section() {
+        let plan = FaultPlan::new();
+        let sc = Scenario::builder("full")
+            .description("d")
+            .policy(PolicyKind::NoCap)
+            .servers(12)
+            .added(0.5)
+            .weeks(0.05)
+            .seed(9)
+            .model("BLOOM-176B")
+            .power_scale(1.35)
+            .peak_utilization(0.8)
+            .power_mult(1.05)
+            .lp_fraction(0.4)
+            .thresholds(0.7, 0.9)
+            .policy_config(|p| p.lp_freq_t1_mhz = 1200.0)
+            .training(0.5)
+            .training_jobs(3, 2.0)
+            .faults(plan.clone())
+            .escalate(60.0)
+            .build();
+        assert_eq!(sc.name, "full");
+        assert_eq!(sc.policy_kind, PolicyKind::NoCap);
+        assert_eq!(sc.servers(), 12);
+        assert_eq!(sc.deployed_servers(), 18);
+        assert_eq!(sc.exp.seed, 9);
+        assert_eq!(sc.power_scale, Some(1.35));
+        assert_eq!(sc.lp_fraction_override, Some(0.4));
+        assert_eq!((sc.exp.policy.t1, sc.exp.policy.t2), (0.7, 0.9));
+        assert_eq!(sc.exp.policy.lp_freq_t1_mhz, 1200.0);
+        assert_eq!(sc.training.servers_per_job, 3);
+        assert_eq!(sc.faults, FaultSpec::Plan(plan));
+        assert_eq!(sc.brake_escalation_s, Some(60.0));
+        assert!(sc.validate().is_ok());
+    }
+
+    #[test]
+    fn site_setters_compose_without_clobbering() {
+        let sc = Scenario::builder("s").site(6).site_search(40, 5).serial().build();
+        let site = sc.site.unwrap();
+        assert_eq!(site.clusters, 6);
+        assert_eq!(site.max_added_pct, 40);
+        assert_eq!(site.step_pct, 5);
+        assert!(!site.parallel);
+        // Order must not matter either.
+        let sc2 = Scenario::builder("s").serial().site_search(40, 5).site(6).build();
+        assert_eq!(sc2.site.unwrap(), SiteSection {
+            clusters: 6,
+            max_added_pct: 40,
+            step_pct: 5,
+            parallel: false,
+            ..Default::default()
+        });
+    }
+}

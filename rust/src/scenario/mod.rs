@@ -1,0 +1,697 @@
+//! The unified scenario layer: **one declarative spec for every run**.
+//!
+//! PRs 1–3 grew four disjoint entry points — `SimConfig`/`run` for
+//! inference rows, `MixedRowConfig` for training colocation,
+//! `FaultPlan` + `SiteRunConfig` for resilience, and the fleet planner
+//! for sites — each re-wired by hand in `main.rs` and in every
+//! experiment generator. A [`Scenario`] composes all of them into a
+//! single value:
+//!
+//! * **workload** — horizon, seed, catalog model, peak utilization,
+//!   power multiplier, LP-share override;
+//! * **cluster shape** — baseline servers, oversubscription,
+//!   optional SKU ([`crate::fleet::sku`]) and power-scale override;
+//! * **policy** — [`PolicyKind`] plus every Table-3 tuning knob
+//!   (carried in [`crate::config::ExperimentConfig`]), and the
+//!   containment-escalation setting;
+//! * **training mix** — fraction / job granularity / stagger
+//!   ([`crate::simulation::MixedRowConfig`], §2.4/§7);
+//! * **fault plan** — a named scenario resolved against the horizon or
+//!   an explicit [`FaultPlan`] timeline ([`crate::faults`]);
+//! * **site topology** — optional [`SiteSection`]: when present the
+//!   scenario runs through the fleet planner instead of a single row.
+//!
+//! The spec is fully declarative and [`PartialEq`]: it builds fluently
+//! ([`ScenarioBuilder`]), round-trips losslessly through the in-tree
+//! TOML subset (`Scenario::from_toml(&s.to_toml()) == s`, see
+//! [`crate::config::Toml::render`]), ships as a named preset registry
+//! ([`presets::preset`], `polca scenario list`), and executes through
+//! exactly one path:
+//! [`Scenario::run`], which dispatches to the existing simulation and
+//! fleet engines. Every CLI surface (`polca run`, and the deprecated
+//! `simulate|mixed|faults|fleet` aliases) and every experiment
+//! generator constructs runs through this layer, so adding a new
+//! study is one preset (or one `.toml` under `examples/scenarios/`),
+//! not a new subcommand.
+
+pub mod builder;
+pub mod presets;
+pub mod toml;
+
+pub use builder::ScenarioBuilder;
+pub use presets::{preset, preset_names, presets};
+
+use crate::config::ExperimentConfig;
+use crate::faults::{ContainmentSlo, FaultPlan};
+use crate::fleet::planner::{
+    plan_site, plan_site_under_faults, FaultedSitePlan, PlannerConfig, PolicyPlan,
+};
+use crate::fleet::site::SiteSpec;
+use crate::metrics::{ImpactSummary, ResilienceMetrics, RunReport};
+use crate::policy::engine::PolicyKind;
+use crate::simulation::{power_scale_for_row, run_with_impact, MixedRowConfig, SimConfig};
+
+/// The training-colocation part of a scenario (flows into
+/// [`MixedRowConfig`]; the iteration waveform is the canonical
+/// [`crate::power::training::TrainingProfile::large_llm`]).
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct TrainingMix {
+    /// Fraction of deployed servers running synchronized training
+    /// (0.0 = the paper's inference-only row).
+    pub fraction: f64,
+    /// Servers per synchronized job (0 = one row-spanning job).
+    pub servers_per_job: usize,
+    /// Offset between consecutive jobs' start times, seconds.
+    pub stagger_s: f64,
+}
+
+/// The fault-injection part of a scenario.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub enum FaultSpec {
+    /// No injection at all (the paper's well-behaved control plane).
+    #[default]
+    None,
+    /// A named built-in scenario ([`FaultPlan::scenario_names`]),
+    /// resolved against the run horizon at execution time.
+    Named(String),
+    /// An explicit episode timeline, absolute seconds.
+    Plan(FaultPlan),
+}
+
+/// The optional site-topology part of a scenario: when present,
+/// [`Scenario::run`] dispatches to the fleet planner over a
+/// [`SiteSpec::demo`] topology of this size instead of one row.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SiteSection {
+    /// Demo-topology cluster count (SKUs cycle through the registry,
+    /// diurnal peaks staggered 3 h apart).
+    pub clusters: usize,
+    /// Planner search ceiling for the added fraction, percent.
+    pub max_added_pct: u32,
+    /// Planner search resolution, percentage points.
+    pub step_pct: u32,
+    /// Fan clusters out on scoped threads.
+    pub parallel: bool,
+    /// Power-series sampling period for trace composition, seconds.
+    pub sample_s: f64,
+    /// Containment SLO for fault-mode planning (used when the scenario
+    /// also carries a fault spec).
+    pub containment: ContainmentSlo,
+}
+
+impl Default for SiteSection {
+    fn default() -> Self {
+        SiteSection {
+            clusters: 4,
+            max_added_pct: 50,
+            step_pct: 2,
+            parallel: true,
+            sample_s: 60.0,
+            containment: ContainmentSlo::default(),
+        }
+    }
+}
+
+/// One declarative run specification (see the module docs). Build with
+/// [`Scenario::builder`], load with [`Scenario::load`], execute with
+/// [`Scenario::run`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct Scenario {
+    /// Scenario name (preset key / report label).
+    pub name: String,
+    /// One-line human description (shown by `polca scenario list`).
+    pub description: String,
+    /// Row topology, policy tuning knobs, SLOs, and the seed
+    /// (paper Tables 1/3/5). `exp.row.num_servers` is the baseline
+    /// (budget) server count.
+    pub exp: ExperimentConfig,
+    /// Which power-management policy drives the run.
+    pub policy_kind: PolicyKind,
+    /// Added-server fraction: deployed = baseline × (1 + added).
+    pub added_frac: f64,
+    /// Simulated horizon, weeks (fractions allowed).
+    pub weeks: f64,
+    /// Catalog model every server is dedicated to (§6.1).
+    pub model_name: String,
+    /// Target server busy fraction at the diurnal peak.
+    pub peak_utilization: f64,
+    /// Multiplier on per-workload power (Fig 17 robustness knob).
+    pub workload_power_mult: f64,
+    /// Override the global LP share (Fig 15b sweep).
+    pub lp_fraction_override: Option<f64>,
+    /// Explicit row-power calibration; `None` = the row-size-appropriate
+    /// [`power_scale_for_row`] (the shared calibration every surface
+    /// uses since PR 3).
+    pub power_scale: Option<f64>,
+    /// Server SKU by registry name ([`crate::fleet::sku`]); `None` = the
+    /// paper's DGX-A100 catalog default.
+    pub sku: Option<String>,
+    /// Training colocation (§2.4/§7).
+    pub training: TrainingMix,
+    /// Fault injection ([`crate::faults`]).
+    pub faults: FaultSpec,
+    /// Policy-engine containment escalation (`None` = paper behavior).
+    pub brake_escalation_s: Option<f64>,
+    /// Site topology; `None` = a single row.
+    pub site: Option<SiteSection>,
+}
+
+impl Default for Scenario {
+    fn default() -> Self {
+        Scenario {
+            name: "scenario".to_string(),
+            description: String::new(),
+            exp: ExperimentConfig::default(),
+            policy_kind: PolicyKind::Polca,
+            added_frac: 0.0,
+            weeks: 1.0,
+            model_name: "BLOOM-176B".to_string(),
+            peak_utilization: 0.85,
+            workload_power_mult: 1.0,
+            lp_fraction_override: None,
+            power_scale: None,
+            sku: None,
+            training: TrainingMix::default(),
+            faults: FaultSpec::None,
+            brake_escalation_s: None,
+            site: None,
+        }
+    }
+}
+
+impl Scenario {
+    /// Start a fluent builder.
+    pub fn builder(name: &str) -> ScenarioBuilder {
+        ScenarioBuilder::new(name)
+    }
+
+    /// Baseline (budget) server count of the row.
+    pub fn servers(&self) -> usize {
+        self.exp.row.num_servers
+    }
+
+    /// Servers actually deployed at the scenario's oversubscription.
+    pub fn deployed_servers(&self) -> usize {
+        (self.servers() as f64 * (1.0 + self.added_frac)).round() as usize
+    }
+
+    /// The simulated horizon in seconds (fault scenarios scale to it).
+    pub fn horizon_s(&self) -> f64 {
+        self.weeks * 7.0 * 86_400.0
+    }
+
+    /// The row-power calibration in effect: the explicit override, or
+    /// the shared row-size fit.
+    pub fn effective_power_scale(&self) -> f64 {
+        self.power_scale.unwrap_or_else(|| power_scale_for_row(self.servers()))
+    }
+
+    /// Resolve the fault spec into a concrete plan (`None` = no
+    /// injection). Named scenarios place their episodes relative to
+    /// `horizon_s`.
+    pub fn fault_plan(&self, horizon_s: f64) -> anyhow::Result<Option<FaultPlan>> {
+        match &self.faults {
+            FaultSpec::None => Ok(None),
+            FaultSpec::Named(name) => Ok(Some(FaultPlan::scenario(name, horizon_s)?)),
+            FaultSpec::Plan(plan) => {
+                plan.normalized()?; // surface invalid timelines here, not mid-run
+                Ok(Some(plan.clone()))
+            }
+        }
+    }
+
+    /// The row-level [`SimConfig`] this scenario denotes — the single
+    /// place scenario fields map onto the simulator (the golden tests
+    /// pin it against the legacy per-subcommand wiring it replaced).
+    ///
+    /// Call [`Scenario::validate`] first: an unresolvable fault spec or
+    /// SKU panics here (the CLI always validates before running).
+    pub fn sim_config(&self) -> SimConfig {
+        let mut cfg = SimConfig::default();
+        cfg.exp = self.exp.clone();
+        cfg.policy_kind = self.policy_kind;
+        cfg.deployed_servers = self.deployed_servers();
+        cfg.weeks = self.weeks;
+        cfg.model_name = self.model_name.clone();
+        cfg.lp_fraction_override = self.lp_fraction_override;
+        cfg.power_scale = self.effective_power_scale();
+        cfg.workload_power_mult = self.workload_power_mult;
+        cfg.peak_utilization = self.peak_utilization;
+        cfg.brake_escalation_s = self.brake_escalation_s;
+        if self.training.fraction > 0.0 {
+            cfg.mixed = Some(MixedRowConfig {
+                training_fraction: self.training.fraction,
+                servers_per_job: self.training.servers_per_job,
+                job_stagger_s: self.training.stagger_s,
+                ..Default::default()
+            });
+        }
+        cfg.faults = self.fault_plan(self.horizon_s()).expect("validate() the scenario first");
+        if let Some(name) = &self.sku {
+            let sku = crate::fleet::sku::find(name).expect("validate() the scenario first");
+            let base = crate::characterize::catalog::find(&self.model_name)
+                .expect("validate() the scenario first")
+                .power;
+            cfg.server_model = Some(sku.server_model(base));
+            cfg.perf_mult = sku.perf_mult;
+            sku.scale_policy(&mut cfg.exp.policy);
+        }
+        cfg
+    }
+
+    /// The site topology this scenario denotes (`None` for row
+    /// scenarios): the demo heterogeneous site at the scenario's
+    /// training fraction.
+    pub fn site_spec(&self) -> Option<SiteSpec> {
+        self.site.as_ref().map(|s| {
+            let spec = SiteSpec::demo(s.clusters);
+            if self.training.fraction > 0.0 {
+                spec.with_training(self.training.fraction)
+            } else {
+                spec
+            }
+        })
+    }
+
+    /// The planner configuration for a site scenario (`None` for row
+    /// scenarios).
+    pub fn planner_config(&self) -> Option<PlannerConfig> {
+        self.site.as_ref().map(|s| PlannerConfig {
+            weeks: self.weeks,
+            seed: self.exp.seed,
+            sample_s: s.sample_s,
+            parallel: s.parallel,
+            max_added_pct: s.max_added_pct,
+            step_pct: s.step_pct,
+            slo: self.exp.slo.clone(),
+            brake_escalation_s: self.brake_escalation_s,
+        })
+    }
+
+    /// A shortened copy for smoke runs, mirroring
+    /// [`crate::experiments::Depth::Quick`]'s horizon scaling — but
+    /// never *longer* than the spec's own horizon (a scenario already
+    /// shorter than the quick floor stays as it is).
+    pub fn quick(mut self) -> Self {
+        self.weeks = self.weeks.min((self.weeks * 0.15).max(0.1));
+        self
+    }
+
+    /// Check the spec for contradictions: threshold ordering, fraction
+    /// ranges, resolvable SKU / model / fault names, valid fault
+    /// timelines, and site-section sanity. Collects every problem into
+    /// one error so a config file is fixed in one pass.
+    pub fn validate(&self) -> anyhow::Result<()> {
+        let mut problems: Vec<String> = Vec::new();
+        if self.name.is_empty() {
+            problems.push("name must not be empty".into());
+        }
+        if self.weeks.is_nan() || self.weeks <= 0.0 {
+            problems.push(format!("weeks must be > 0 (got {})", self.weeks));
+        }
+        if self.servers() == 0 {
+            problems.push("row.num_servers must be > 0".into());
+        }
+        if self.added_frac.is_nan() || self.added_frac < 0.0 {
+            problems.push(format!("added must be >= 0 (got {})", self.added_frac));
+        }
+        let p = &self.exp.policy;
+        if p.t1.is_nan() || p.t2.is_nan() || p.t1 >= p.t2 {
+            problems.push(format!("policy thresholds need t1 < t2 (got {} >= {})", p.t1, p.t2));
+        }
+        if !(0.0..=1.0).contains(&self.training.fraction) {
+            problems.push(format!(
+                "training fraction must be in [0, 1] (got {})",
+                self.training.fraction
+            ));
+        }
+        if !(self.peak_utilization > 0.0 && self.peak_utilization <= 1.0) {
+            problems.push(format!(
+                "peak_utilization must be in (0, 1] (got {})",
+                self.peak_utilization
+            ));
+        }
+        if crate::characterize::catalog::find(&self.model_name).is_none() {
+            problems.push(format!("unknown model '{}'", self.model_name));
+        }
+        if let Some(sku) = &self.sku {
+            if crate::fleet::sku::find(sku).is_none() {
+                problems.push(format!(
+                    "unknown sku '{sku}' (known: {})",
+                    crate::fleet::sku::registry()
+                        .iter()
+                        .map(|s| s.name)
+                        .collect::<Vec<_>>()
+                        .join(", ")
+                ));
+            }
+        }
+        if let Err(e) = self.fault_plan(self.horizon_s()) {
+            problems.push(format!("fault spec: {e:#}"));
+        }
+        if let Some(site) = &self.site {
+            if site.clusters == 0 {
+                problems.push("site.clusters must be > 0".into());
+            }
+            if site.step_pct == 0 {
+                problems.push("site.step_pct must be > 0".into());
+            }
+            if self.sku.is_some() {
+                problems.push(
+                    "sku cannot be combined with a site (the demo topology \
+                     cycles through the SKU registry itself)"
+                        .into(),
+                );
+            }
+        }
+        if problems.is_empty() {
+            Ok(())
+        } else {
+            anyhow::bail!("invalid scenario '{}': {}", self.name, problems.join("; "))
+        }
+    }
+
+    /// One-line description of what will run (printed before a run).
+    pub fn describe(&self) -> String {
+        let faults = match &self.faults {
+            FaultSpec::None => String::new(),
+            FaultSpec::Named(n) => format!(", faults '{n}'"),
+            FaultSpec::Plan(p) => format!(", {} fault episodes", p.len()),
+        };
+        let training = if self.training.fraction > 0.0 {
+            format!(", {:.0}% training", self.training.fraction * 100.0)
+        } else {
+            String::new()
+        };
+        match &self.site {
+            Some(s) => format!(
+                "scenario '{}': plan a {}-cluster site under {} for {:.2} weeks{}{} (seed {})",
+                self.name,
+                s.clusters,
+                self.policy_kind.name(),
+                self.weeks,
+                training,
+                faults,
+                self.exp.seed
+            ),
+            None => format!(
+                "scenario '{}': {} deployed on a {}-server budget (+{:.0}%) under {} \
+                 for {:.2} weeks{}{} (seed {})",
+                self.name,
+                self.deployed_servers(),
+                self.servers(),
+                self.added_frac * 100.0,
+                self.policy_kind.name(),
+                self.weeks,
+                training,
+                faults,
+                self.exp.seed
+            ),
+        }
+    }
+
+    /// Execute the scenario through the single dispatch path: row
+    /// scenarios run the discrete-event simulator paired with its
+    /// unthrottled baseline; site scenarios run the fleet planner
+    /// (fault-derated when a fault spec is present).
+    pub fn run(&self) -> anyhow::Result<ScenarioReport> {
+        self.validate()?;
+        if self.site.is_some() {
+            let spec = self.site_spec().unwrap();
+            let pc = self.planner_config().unwrap();
+            let cslo = self.site.as_ref().unwrap().containment.clone();
+            let outcome = match self.fault_plan(self.horizon_s())? {
+                Some(plan) if !plan.is_empty() => {
+                    let derated =
+                        plan_site_under_faults(&spec, self.policy_kind, &pc, &plan, &cslo);
+                    SiteReport { plan: derated.clean.clone(), derated: Some(derated) }
+                }
+                _ => SiteReport { plan: plan_site(&spec, self.policy_kind, &pc), derated: None },
+            };
+            Ok(ScenarioReport {
+                name: self.name.clone(),
+                outcome: Outcome::Site(Box::new(outcome)),
+            })
+        } else {
+            let cfg = self.sim_config();
+            let (report, impact) = run_with_impact(&cfg);
+            let slo_violations = impact.slo_violations(&self.exp.slo);
+            Ok(ScenarioReport {
+                name: self.name.clone(),
+                outcome: Outcome::Row(Box::new(RowReport { report, impact, slo_violations })),
+            })
+        }
+    }
+}
+
+/// A row scenario's result: the simulation report, its impact vs the
+/// unthrottled baseline, and the Table-5 verdict.
+#[derive(Debug, Clone)]
+pub struct RowReport {
+    /// The full simulation report (includes resilience accounting).
+    pub report: RunReport,
+    /// Latency/throughput impact vs the unthrottled counterfactual.
+    pub impact: ImpactSummary,
+    /// Table-5 SLO violations (empty = SLOs held).
+    pub slo_violations: Vec<String>,
+}
+
+/// A site scenario's result: the clean capacity plan, plus the
+/// fault-derated plan when a fault spec was present.
+#[derive(Debug, Clone)]
+pub struct SiteReport {
+    /// The clean (no-fault) plan.
+    pub plan: PolicyPlan,
+    /// The fault-derated plan, when the scenario injected faults.
+    pub derated: Option<FaultedSitePlan>,
+}
+
+/// Which engine the scenario dispatched to.
+#[derive(Debug, Clone)]
+pub enum Outcome {
+    /// A single-row simulation.
+    Row(Box<RowReport>),
+    /// A site-level capacity plan.
+    Site(Box<SiteReport>),
+}
+
+/// What [`Scenario::run`] returns: one report shape for every scenario.
+#[derive(Debug, Clone)]
+pub struct ScenarioReport {
+    /// The scenario's name.
+    pub name: String,
+    /// Row or site result.
+    pub outcome: Outcome,
+}
+
+impl ScenarioReport {
+    /// Render the human-readable report (the `polca run` output).
+    /// `&mut` because latency percentiles sort lazily.
+    pub fn render(&mut self) -> String {
+        let mut out = String::new();
+        match &mut self.outcome {
+            Outcome::Row(row) => {
+                out.push_str(&row.report.summary());
+                out.push('\n');
+                let i = &row.impact;
+                out.push_str(&format!(
+                    "impact vs uncapped: HP p50/p99 = {:.2}%/{:.2}%  LP p50/p99 = {:.2}%/{:.2}%  \
+                     thrpt HP/LP = {:.3}/{:.3}\n",
+                    i.hp_p50 * 100.0,
+                    i.hp_p99 * 100.0,
+                    i.lp_p50 * 100.0,
+                    i.lp_p99 * 100.0,
+                    i.hp_throughput,
+                    i.lp_throughput
+                ));
+                if row.report.train.iters > 0 {
+                    out.push_str(&format!(
+                        "training: {} iterations, mean {:.3}s vs nominal {:.3}s \
+                         (inflation {:.1}%)\n",
+                        row.report.train.iters,
+                        row.report.train.mean_iter_s(),
+                        row.report.train.nominal_iter_s,
+                        row.report.train.inflation() * 100.0
+                    ));
+                }
+                if row.slo_violations.is_empty() {
+                    out.push_str("SLO: OK (Table 5)\n");
+                } else {
+                    out.push_str(&format!("SLO: VIOLATED — {}\n", row.slo_violations.join("; ")));
+                }
+                let r = &row.report.resilience;
+                if !r.incidents.is_empty() {
+                    for inc in &r.incidents {
+                        out.push_str(&format!(
+                            "incident {:<16} [{:>7.0}s..{:>7.0}s]  time-to-contain {}\n",
+                            inc.label,
+                            inc.start_s,
+                            inc.end_s,
+                            ResilienceMetrics::fmt_ttc(inc.time_to_contain_s)
+                        ));
+                    }
+                    out.push_str(&format!(
+                        "containment: {} (violation {:.1}s, peak overshoot {:.0} W, \
+                         true peak {:.3}, reissued {})\n",
+                        if r.all_contained() { "OK" } else { "FAILED" },
+                        r.violation_s,
+                        r.peak_overshoot_w,
+                        r.true_peak_norm,
+                        r.reissued_commands
+                    ));
+                }
+            }
+            Outcome::Site(site) => {
+                let p = &site.plan;
+                out.push_str(&format!(
+                    "{}: {} deployable servers (+{}%) of {} baseline — site peak {:.0} kW / \
+                     budget {:.0} kW (headroom {:.1}%), {} brakes, {:.1} caps/day, \
+                     HP p99 {:.2}% LP p99 {:.2}%{}\n",
+                    p.policy.name(),
+                    p.deployable_servers,
+                    p.added_pct,
+                    p.baseline_servers,
+                    p.site_peak_w / 1e3,
+                    p.substation_budget_w / 1e3,
+                    p.headroom_frac * 100.0,
+                    p.brake_events,
+                    p.cap_events_per_day,
+                    p.worst_hp_p99 * 100.0,
+                    p.worst_lp_p99 * 100.0,
+                    if p.feasible { "" } else { " (NOT deployable even at baseline)" }
+                ));
+                if let Some(d) = &site.derated {
+                    out.push_str(&format!(
+                        "under faults: {} servers (+{}%) — derated by {} servers{}\n",
+                        d.derated_servers,
+                        d.derated_added_pct,
+                        d.clean.deployable_servers.saturating_sub(d.derated_servers),
+                        if d.feasible { "" } else { " (NOT deployable even at baseline)" }
+                    ));
+                    out.push_str(&format!(
+                        "worst case at the derated point: violation {:.1}s, ttc {}, \
+                         overshoot {:.1}%\n",
+                        d.worst_violation_s,
+                        ResilienceMetrics::fmt_ttc(d.worst_time_to_contain_s),
+                        d.worst_overshoot_frac * 100.0
+                    ));
+                }
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_scenario_is_the_paper_row() {
+        let sc = Scenario::default();
+        assert!(sc.validate().is_ok());
+        let cfg = sc.sim_config();
+        let d = SimConfig::default();
+        // The default scenario IS the paper's default simulation.
+        assert_eq!(format!("{cfg:?}"), format!("{d:?}"));
+    }
+
+    #[test]
+    fn added_fraction_rounds_like_the_legacy_wiring() {
+        let mut sc = Scenario::default();
+        sc.added_frac = 0.30;
+        assert_eq!(sc.deployed_servers(), 52); // round(40 * 1.3)
+        sc.exp.row.num_servers = 16;
+        assert_eq!(sc.deployed_servers(), 21); // round(16 * 1.3)
+    }
+
+    #[test]
+    fn power_scale_follows_row_size_unless_overridden() {
+        let mut sc = Scenario::default();
+        assert_eq!(sc.effective_power_scale(), crate::simulation::DEFAULT_POWER_SCALE);
+        sc.exp.row.num_servers = 12;
+        assert_eq!(sc.effective_power_scale(), power_scale_for_row(12));
+        sc.power_scale = Some(2.0);
+        assert_eq!(sc.effective_power_scale(), 2.0);
+    }
+
+    #[test]
+    fn training_fraction_zero_keeps_the_inference_fast_path() {
+        let sc = Scenario::default();
+        assert!(sc.sim_config().mixed.is_none());
+        let mut mixed = sc.clone();
+        mixed.training.fraction = 0.5;
+        mixed.training.servers_per_job = 3;
+        let cfg = mixed.sim_config();
+        let m = cfg.mixed.expect("training fraction must produce a mixed config");
+        assert_eq!(m.training_fraction, 0.5);
+        assert_eq!(m.servers_per_job, 3);
+    }
+
+    #[test]
+    fn sku_override_scales_the_policy_domain() {
+        let mut sc = Scenario::default();
+        sc.sku = Some("hgx-h100".to_string());
+        assert!(sc.validate().is_ok());
+        let cfg = sc.sim_config();
+        assert!(cfg.server_model.is_some());
+        assert!(cfg.perf_mult > 2.0);
+        // Table-3 setpoints moved into the H100 clock domain.
+        assert_eq!(cfg.exp.policy.max_freq_mhz, 1980.0);
+        // ... but the scenario itself still stores the A100-domain spec.
+        assert_eq!(sc.exp.policy.max_freq_mhz, 1410.0);
+    }
+
+    #[test]
+    fn validate_collects_every_problem() {
+        let mut sc = Scenario::default();
+        sc.weeks = 0.0;
+        sc.exp.policy.t1 = 0.95; // >= t2
+        sc.sku = Some("dgx-h200".to_string());
+        sc.faults = FaultSpec::Named("bogus".to_string());
+        sc.training.fraction = 1.5;
+        let msg = format!("{:#}", sc.validate().unwrap_err());
+        for needle in ["weeks", "t1 < t2", "dgx-h200", "bogus", "training fraction"] {
+            assert!(msg.contains(needle), "missing '{needle}' in: {msg}");
+        }
+    }
+
+    #[test]
+    fn named_fault_spec_resolves_against_the_horizon() {
+        let mut sc = Scenario::default();
+        sc.weeks = 0.1;
+        sc.faults = FaultSpec::Named("cascade".to_string());
+        let plan = sc.fault_plan(sc.horizon_s()).unwrap().unwrap();
+        assert_eq!(plan.len(), 3);
+        let evs = plan.normalized().unwrap();
+        assert!(evs.iter().all(|e| e.end_s() < sc.horizon_s()));
+        // Explicit plans pass through unchanged.
+        sc.faults = FaultSpec::Plan(plan.clone());
+        assert_eq!(sc.fault_plan(sc.horizon_s()).unwrap().unwrap(), plan);
+    }
+
+    #[test]
+    fn site_scenario_maps_onto_the_planner() {
+        let mut sc = Scenario::default();
+        sc.site = Some(SiteSection { clusters: 2, ..Default::default() });
+        sc.training.fraction = 0.25;
+        assert!(sc.validate().is_ok());
+        let spec = sc.site_spec().unwrap();
+        assert_eq!(spec.clusters.len(), 2);
+        assert!(spec.clusters.iter().all(|c| c.training_fraction == 0.25));
+        let pc = sc.planner_config().unwrap();
+        assert_eq!(pc.weeks, sc.weeks);
+        assert_eq!(pc.seed, sc.exp.seed);
+        assert_eq!(pc.max_added_pct, 50);
+    }
+
+    #[test]
+    fn quick_shrinks_the_horizon_like_depth_quick() {
+        let sc = Scenario::default().quick();
+        assert_eq!(sc.weeks, crate::experiments::Depth::Quick.weeks(1.0));
+        // ... and never stretches an already-short scenario.
+        let mut short = Scenario::default();
+        short.weeks = 0.05;
+        assert_eq!(short.quick().weeks, 0.05);
+    }
+}

@@ -1,0 +1,257 @@
+//! Named scenario presets — the registry behind `polca scenario list`
+//! and `polca run <preset>`. Each preset is one [`Scenario`] value
+//! built through the fluent [`crate::scenario::ScenarioBuilder`]; all
+//! of them round-trip bit-identically through TOML and reproduce the
+//! legacy subcommand they replaced (property- and golden-tested in
+//! `tests/integration_scenario.rs`).
+//!
+//! Adding a study = adding one entry here (or shipping a `.toml` under
+//! `examples/scenarios/`) — no new subcommand, no new wiring.
+
+use crate::policy::engine::PolicyKind;
+
+use super::Scenario;
+
+/// One registry row.
+struct Preset {
+    name: &'static str,
+    description: &'static str,
+    build: fn() -> Scenario,
+}
+
+/// The registry, in presentation order: rows first, then drills, then
+/// sites. Descriptions double as `polca scenario list` output.
+fn registry() -> Vec<Preset> {
+    vec![
+        Preset {
+            name: "inference-row",
+            description: "The paper's §6 row: 40 servers, POLCA, no oversubscription, 1 week \
+                          (what `polca simulate` ran by default)",
+            build: inference_row,
+        },
+        Preset {
+            name: "oversubscribed-row",
+            description: "The headline claim: the same row deployed at +30% under POLCA \
+                          (Fig 13's chosen point)",
+            build: oversubscribed_row,
+        },
+        Preset {
+            name: "mixed-row",
+            description: "§2.4/§7 colocation: half the deployed servers run one synchronized \
+                          training job (what `polca mixed run` ran by default)",
+            build: mixed_row,
+        },
+        Preset {
+            name: "training-row",
+            description: "Pure-training row under No-cap: the §2.4 coordinated-swing regime \
+                          (headroom bounded by the 37.5% swing)",
+            build: training_row,
+        },
+        Preset {
+            name: "h100-row",
+            description: "An HGX-H100 row at +30%: Table-3 setpoints rescaled into the H100 \
+                          clock domain (fleet SKU registry)",
+            build: h100_row,
+        },
+        Preset {
+            name: "cascade-faults",
+            description: "Telemetry freeze → OOB storm → feed loss cascading over one \
+                          +30% row, containment escalation armed (docs/RELIABILITY.md)",
+            build: cascade_faults,
+        },
+        Preset {
+            name: "cap-ignore-drill",
+            description: "Every server acks caps without applying them; only the brake path \
+                          (via escalation) can contain the row",
+            build: cap_ignore_drill,
+        },
+        Preset {
+            name: "feed-loss-drill",
+            description: "A redundancy event cuts the row budget to 75% mid-run; the brake \
+                          must answer before the UPS tolerance window",
+            build: feed_loss_drill,
+        },
+        Preset {
+            name: "site-headroom",
+            description: "Plan a 4-cluster heterogeneous site: max deployable servers under \
+                          the shared substation budget (fleet planner)",
+            build: site_headroom,
+        },
+        Preset {
+            name: "site-derated",
+            description: "The same site plan derated for a feed-loss fault: how many servers \
+                          must be given back to keep containment",
+            build: site_derated,
+        },
+    ]
+}
+
+fn inference_row() -> Scenario {
+    Scenario::builder("inference-row")
+        .description("Paper §6 row: 40 DGX-A100 servers, POLCA, 1 week")
+        .policy(PolicyKind::Polca)
+        .build()
+}
+
+fn oversubscribed_row() -> Scenario {
+    Scenario::builder("oversubscribed-row")
+        .description("Paper headline: +30% servers on the same budget under POLCA")
+        .policy(PolicyKind::Polca)
+        .added(0.30)
+        .build()
+}
+
+fn mixed_row() -> Scenario {
+    Scenario::builder("mixed-row")
+        .description("50% training colocation under POLCA (§2.4/§7)")
+        .policy(PolicyKind::Polca)
+        .weeks(0.25)
+        .seed(1)
+        .training(0.5)
+        .build()
+}
+
+fn training_row() -> Scenario {
+    Scenario::builder("training-row")
+        .description("Pure-training row, uncapped: the §2.4 swing regime")
+        .policy(PolicyKind::NoCap)
+        .weeks(0.25)
+        .seed(1)
+        .training(1.0)
+        .build()
+}
+
+fn h100_row() -> Scenario {
+    Scenario::builder("h100-row")
+        .description("HGX-H100 row at +30%: SKU-rescaled policy setpoints")
+        .policy(PolicyKind::Polca)
+        .added(0.30)
+        .weeks(0.25)
+        .seed(1)
+        .sku("hgx-h100")
+        .build()
+}
+
+/// The fault drills share the fault-matrix row shape (16 servers at
+/// +30%, 0.1 weeks, escalation armed) so their numbers line up with
+/// the `fault-matrix` experiment grid.
+fn fault_drill(name: &str, description: &str, scenario: &str) -> Scenario {
+    Scenario::builder(name)
+        .description(description)
+        .policy(PolicyKind::Polca)
+        .servers(16)
+        .added(0.30)
+        .weeks(0.1)
+        .seed(1)
+        .faults_scenario(scenario)
+        .escalate(120.0)
+        .build()
+}
+
+fn cascade_faults() -> Scenario {
+    fault_drill(
+        "cascade-faults",
+        "Cascading telemetry freeze, OOB storm, feed loss on a +30% row",
+        "cascade",
+    )
+}
+
+fn cap_ignore_drill() -> Scenario {
+    fault_drill(
+        "cap-ignore-drill",
+        "Cap-ignoring servers: only the brake (via escalation) contains",
+        "cap-ignore",
+    )
+}
+
+fn feed_loss_drill() -> Scenario {
+    fault_drill("feed-loss-drill", "Feed loss cuts the budget to 75% mid-run", "feed-loss")
+}
+
+fn site_headroom() -> Scenario {
+    Scenario::builder("site-headroom")
+        .description("Max deployable servers for a 4-cluster site under POLCA")
+        .policy(PolicyKind::Polca)
+        .weeks(0.08)
+        .seed(1)
+        .site(4)
+        .site_search(50, 5)
+        .build()
+}
+
+fn site_derated() -> Scenario {
+    Scenario::builder("site-derated")
+        .description("The site plan derated for a feed-loss fault timeline")
+        .policy(PolicyKind::Polca)
+        .weeks(0.08)
+        .seed(1)
+        .site(4)
+        .site_search(50, 10)
+        .faults_scenario("feed-loss")
+        .escalate(120.0)
+        .build()
+}
+
+/// Preset names, in presentation order.
+pub fn preset_names() -> Vec<&'static str> {
+    registry().iter().map(|p| p.name).collect()
+}
+
+/// One-line description of a preset (for `polca scenario list`).
+pub fn preset_description(name: &str) -> Option<&'static str> {
+    registry().iter().find(|p| p.name == name).map(|p| p.description)
+}
+
+/// Build a preset by name.
+pub fn preset(name: &str) -> anyhow::Result<Scenario> {
+    registry()
+        .iter()
+        .find(|p| p.name == name)
+        .map(|p| (p.build)())
+        .ok_or_else(|| {
+            anyhow::anyhow!("unknown preset '{name}' (known: {})", preset_names().join(", "))
+        })
+}
+
+/// Every preset, built, in presentation order.
+pub fn presets() -> Vec<Scenario> {
+    registry().iter().map(|p| (p.build)()).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_is_unique_named_and_valid() {
+        let names = preset_names();
+        let mut dedup = names.clone();
+        dedup.sort();
+        dedup.dedup();
+        assert_eq!(dedup.len(), names.len(), "duplicate preset names");
+        for sc in presets() {
+            assert!(names.contains(&sc.name.as_str()), "preset name '{}' not its key", sc.name);
+            assert!(!sc.description.is_empty(), "{}", sc.name);
+            sc.validate().unwrap_or_else(|e| panic!("preset '{}': {e:#}", sc.name));
+            assert!(preset_description(&sc.name).is_some());
+        }
+        assert!(preset("nope").is_err());
+    }
+
+    #[test]
+    fn issue_named_presets_exist() {
+        for name in ["inference-row", "mixed-row", "cascade-faults", "site-headroom"] {
+            assert!(preset(name).is_ok(), "{name}");
+        }
+    }
+
+    #[test]
+    fn preset_families_dispatch_as_expected() {
+        use crate::scenario::FaultSpec;
+        assert!(preset("inference-row").unwrap().site.is_none());
+        assert!(preset("site-headroom").unwrap().site.is_some());
+        assert!(matches!(preset("cascade-faults").unwrap().faults, FaultSpec::Named(_)));
+        assert_eq!(preset("training-row").unwrap().training.fraction, 1.0);
+        assert_eq!(preset("h100-row").unwrap().sku.as_deref(), Some("hgx-h100"));
+    }
+}

@@ -1,0 +1,397 @@
+//! Lossless TOML (de)serialization for [`Scenario`] — the format behind
+//! `polca run <file.toml>`, `polca scenario show|save`, and the
+//! `examples/scenarios/` directory.
+//!
+//! The codec targets the in-tree TOML subset ([`crate::config::Toml`])
+//! and is *bit-lossless*: for every scenario `s`,
+//! `Scenario::from_toml(&s.to_toml()) == s` exactly (floats included —
+//! the renderer emits shortest round-trippable decimals). This is
+//! property-tested over every built-in preset and over randomly
+//! generated scenarios in `tests/integration_scenario.rs`.
+//!
+//! Schema (all keys optional on input; defaults fill the gaps):
+//!
+//! ```toml
+//! name = "cascade-faults"
+//! description = "..."
+//! seed = 1
+//!
+//! [workload]   # weeks, model, peak_utilization, power_mult, lp_fraction
+//! [row]        # num_servers, added, telemetry/brake/OOB latencies, sku, power_scale
+//! [policy]     # kind ("polca"|"1t-lp"|"1t-all"|"nocap"), Table-3 knobs, escalate_s
+//! [slo]        # Table-5 bounds
+//! [training]   # fraction, servers_per_job, stagger_s
+//! [faults]     # scenario = "name"  OR  events = [["feed-loss", start, dur, frac], ...]
+//! [site]       # clusters, max_added_pct, step_pct, parallel, sample_s, containment bounds
+//! ```
+
+use anyhow::Context;
+
+use crate::config::{ExperimentConfig, Toml, TomlValue};
+use crate::faults::{ContainmentSlo, FaultEvent, FaultKind, FaultPlan};
+use crate::policy::engine::PolicyKind;
+
+use super::{FaultSpec, Scenario, SiteSection, TrainingMix};
+
+impl Scenario {
+    /// Serialize to a TOML document (every field written, so the
+    /// document is self-contained).
+    pub fn to_toml(&self) -> Toml {
+        let mut doc = Toml::default();
+        doc.set("", "name", TomlValue::Str(self.name.clone()));
+        doc.set("", "description", TomlValue::Str(self.description.clone()));
+        doc.set("", "seed", TomlValue::Int(self.exp.seed as i64));
+
+        doc.set("workload", "weeks", TomlValue::Float(self.weeks));
+        doc.set("workload", "model", TomlValue::Str(self.model_name.clone()));
+        doc.set("workload", "peak_utilization", TomlValue::Float(self.peak_utilization));
+        doc.set("workload", "power_mult", TomlValue::Float(self.workload_power_mult));
+        if let Some(lp) = self.lp_fraction_override {
+            doc.set("workload", "lp_fraction", TomlValue::Float(lp));
+        }
+
+        let r = &self.exp.row;
+        doc.set("row", "num_servers", TomlValue::Int(r.num_servers as i64));
+        doc.set("row", "added", TomlValue::Float(self.added_frac));
+        doc.set("row", "telemetry_delay_s", TomlValue::Float(r.telemetry_delay_s));
+        doc.set("row", "power_brake_latency_s", TomlValue::Float(r.power_brake_latency_s));
+        doc.set("row", "oob_latency_s", TomlValue::Float(r.oob_latency_s));
+        doc.set("row", "telemetry_period_s", TomlValue::Float(r.telemetry_period_s));
+        if let Some(sku) = &self.sku {
+            doc.set("row", "sku", TomlValue::Str(sku.clone()));
+        }
+        if let Some(scale) = self.power_scale {
+            doc.set("row", "power_scale", TomlValue::Float(scale));
+        }
+
+        let p = &self.exp.policy;
+        doc.set("policy", "kind", TomlValue::Str(self.policy_kind.slug().to_string()));
+        doc.set("policy", "t1", TomlValue::Float(p.t1));
+        doc.set("policy", "t2", TomlValue::Float(p.t2));
+        doc.set("policy", "t1_buffer", TomlValue::Float(p.t1_buffer));
+        doc.set("policy", "t2_buffer", TomlValue::Float(p.t2_buffer));
+        doc.set("policy", "lp_freq_t1_mhz", TomlValue::Float(p.lp_freq_t1_mhz));
+        doc.set("policy", "lp_freq_t2_mhz", TomlValue::Float(p.lp_freq_t2_mhz));
+        doc.set("policy", "hp_freq_t2_mhz", TomlValue::Float(p.hp_freq_t2_mhz));
+        doc.set("policy", "brake_freq_mhz", TomlValue::Float(p.brake_freq_mhz));
+        doc.set("policy", "max_freq_mhz", TomlValue::Float(p.max_freq_mhz));
+        if let Some(esc) = self.brake_escalation_s {
+            doc.set("policy", "escalate_s", TomlValue::Float(esc));
+        }
+
+        let s = &self.exp.slo;
+        doc.set("slo", "hp_p50_impact", TomlValue::Float(s.hp_p50_impact));
+        doc.set("slo", "hp_p99_impact", TomlValue::Float(s.hp_p99_impact));
+        doc.set("slo", "lp_p50_impact", TomlValue::Float(s.lp_p50_impact));
+        doc.set("slo", "lp_p99_impact", TomlValue::Float(s.lp_p99_impact));
+        doc.set("slo", "max_powerbrakes", TomlValue::Int(s.max_powerbrakes as i64));
+
+        doc.set("training", "fraction", TomlValue::Float(self.training.fraction));
+        doc.set(
+            "training",
+            "servers_per_job",
+            TomlValue::Int(self.training.servers_per_job as i64),
+        );
+        doc.set("training", "stagger_s", TomlValue::Float(self.training.stagger_s));
+
+        match &self.faults {
+            FaultSpec::None => {}
+            FaultSpec::Named(name) => {
+                doc.set("faults", "scenario", TomlValue::Str(name.clone()));
+            }
+            FaultSpec::Plan(plan) => {
+                let items: Vec<TomlValue> = plan.events.iter().map(event_to_toml).collect();
+                doc.set("faults", "events", TomlValue::Arr(items));
+            }
+        }
+
+        if let Some(site) = &self.site {
+            doc.set("site", "clusters", TomlValue::Int(site.clusters as i64));
+            doc.set("site", "max_added_pct", TomlValue::Int(site.max_added_pct as i64));
+            doc.set("site", "step_pct", TomlValue::Int(site.step_pct as i64));
+            doc.set("site", "parallel", TomlValue::Bool(site.parallel));
+            doc.set("site", "sample_s", TomlValue::Float(site.sample_s));
+            let c = &site.containment;
+            doc.set("site", "max_violation_s", TomlValue::Float(c.max_violation_s));
+            doc.set("site", "max_time_to_contain_s", TomlValue::Float(c.max_time_to_contain_s));
+            doc.set("site", "max_overshoot_frac", TomlValue::Float(c.max_overshoot_frac));
+        }
+        doc
+    }
+
+    /// Deserialize from a TOML document. Missing keys take the default
+    /// `Scenario` values, so sparse hand-written files work; documents
+    /// produced by [`Scenario::to_toml`] reconstruct exactly.
+    pub fn from_toml(doc: &Toml) -> anyhow::Result<Scenario> {
+        let d = Scenario::default();
+        let exp = ExperimentConfig::from_toml(doc);
+        let kind_slug = doc.str_or("policy", "kind", d.policy_kind.slug());
+        let policy_kind = PolicyKind::from_slug(kind_slug)
+            .with_context(|| format!("unknown policy kind '{kind_slug}'"))?;
+        let faults = if let Some(v) = doc.get("faults", "scenario") {
+            let name = v.as_str().context("[faults] scenario must be a string")?;
+            FaultSpec::Named(name.to_string())
+        } else if let Some(v) = doc.get("faults", "events") {
+            let TomlValue::Arr(items) = v else {
+                anyhow::bail!("[faults] events must be an array of event arrays");
+            };
+            let events = items
+                .iter()
+                .enumerate()
+                .map(|(i, item)| {
+                    event_from_toml(item).with_context(|| format!("fault event #{}", i + 1))
+                })
+                .collect::<anyhow::Result<Vec<FaultEvent>>>()?;
+            FaultSpec::Plan(FaultPlan { events })
+        } else {
+            FaultSpec::None
+        };
+        let site = if doc.sections.contains_key("site") {
+            let ds = SiteSection::default();
+            let dc = ContainmentSlo::default();
+            Some(SiteSection {
+                clusters: doc.usize_or("site", "clusters", ds.clusters),
+                max_added_pct: doc.usize_or("site", "max_added_pct", ds.max_added_pct as usize)
+                    as u32,
+                step_pct: doc.usize_or("site", "step_pct", ds.step_pct as usize) as u32,
+                parallel: doc.bool_or("site", "parallel", ds.parallel),
+                sample_s: doc.f64_or("site", "sample_s", ds.sample_s),
+                containment: ContainmentSlo {
+                    max_violation_s: doc.f64_or("site", "max_violation_s", dc.max_violation_s),
+                    max_time_to_contain_s: doc.f64_or(
+                        "site",
+                        "max_time_to_contain_s",
+                        dc.max_time_to_contain_s,
+                    ),
+                    max_overshoot_frac: doc.f64_or(
+                        "site",
+                        "max_overshoot_frac",
+                        dc.max_overshoot_frac,
+                    ),
+                },
+            })
+        } else {
+            None
+        };
+        Ok(Scenario {
+            name: doc.str_or("", "name", &d.name).to_string(),
+            description: doc.str_or("", "description", &d.description).to_string(),
+            exp,
+            policy_kind,
+            added_frac: doc.f64_or("row", "added", d.added_frac),
+            weeks: doc.f64_or("workload", "weeks", d.weeks),
+            model_name: doc.str_or("workload", "model", &d.model_name).to_string(),
+            peak_utilization: doc.f64_or("workload", "peak_utilization", d.peak_utilization),
+            workload_power_mult: doc.f64_or("workload", "power_mult", d.workload_power_mult),
+            lp_fraction_override: doc.get("workload", "lp_fraction").and_then(|v| v.as_f64()),
+            power_scale: doc.get("row", "power_scale").and_then(|v| v.as_f64()),
+            sku: doc.get("row", "sku").and_then(|v| v.as_str()).map(str::to_string),
+            training: TrainingMix {
+                fraction: doc.f64_or("training", "fraction", d.training.fraction),
+                servers_per_job: doc.usize_or(
+                    "training",
+                    "servers_per_job",
+                    d.training.servers_per_job,
+                ),
+                stagger_s: doc.f64_or("training", "stagger_s", d.training.stagger_s),
+            },
+            faults,
+            brake_escalation_s: doc.get("policy", "escalate_s").and_then(|v| v.as_f64()),
+            site,
+        })
+    }
+
+    /// The scenario rendered as a TOML string (what `polca scenario
+    /// show|save` emit).
+    pub fn to_toml_string(&self) -> String {
+        format!(
+            "# polca scenario '{}'\n# run with: polca run <this-file>\n{}",
+            self.name,
+            self.to_toml().render()
+        )
+    }
+
+    /// Parse a scenario from TOML text.
+    pub fn parse(text: &str) -> anyhow::Result<Scenario> {
+        Scenario::from_toml(&Toml::parse(text)?)
+    }
+
+    /// Load a scenario file.
+    pub fn load(path: &std::path::Path) -> anyhow::Result<Scenario> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading scenario {}", path.display()))?;
+        Scenario::parse(&text).with_context(|| format!("parsing scenario {}", path.display()))
+    }
+
+    /// Write the scenario to a file.
+    pub fn save(&self, path: &std::path::Path) -> anyhow::Result<()> {
+        std::fs::write(path, self.to_toml_string())
+            .with_context(|| format!("writing scenario {}", path.display()))
+    }
+}
+
+fn event_to_toml(e: &FaultEvent) -> TomlValue {
+    let mut items = vec![
+        TomlValue::Str(e.kind.label().to_string()),
+        TomlValue::Float(e.start_s),
+        TomlValue::Float(e.duration_s),
+    ];
+    match e.kind {
+        FaultKind::TelemetryFreeze => {}
+        FaultKind::OobStorm { loss_prob, latency_mult, jitter_frac } => {
+            items.push(TomlValue::Float(loss_prob));
+            items.push(TomlValue::Float(latency_mult));
+            items.push(TomlValue::Float(jitter_frac));
+        }
+        FaultKind::CapIgnore { server_frac } => items.push(TomlValue::Float(server_frac)),
+        FaultKind::MeterBias { mult } => items.push(TomlValue::Float(mult)),
+        FaultKind::FeedLoss { budget_frac } => items.push(TomlValue::Float(budget_frac)),
+    }
+    TomlValue::Arr(items)
+}
+
+fn event_from_toml(v: &TomlValue) -> anyhow::Result<FaultEvent> {
+    let TomlValue::Arr(items) = v else {
+        anyhow::bail!("expected [\"kind\", start_s, duration_s, params...]");
+    };
+    let label = items.first().and_then(|v| v.as_str()).context("missing kind label")?;
+    let num = |i: usize, what: &str| -> anyhow::Result<f64> {
+        items
+            .get(i)
+            .and_then(|v| v.as_f64())
+            .with_context(|| format!("'{label}' needs numeric {what} at position {}", i + 1))
+    };
+    let start_s = num(1, "start_s")?;
+    let duration_s = num(2, "duration_s")?;
+    let kind = match label {
+        "telemetry-freeze" => FaultKind::TelemetryFreeze,
+        "oob-storm" => FaultKind::OobStorm {
+            loss_prob: num(3, "loss_prob")?,
+            latency_mult: num(4, "latency_mult")?,
+            jitter_frac: num(5, "jitter_frac")?,
+        },
+        "cap-ignore" => FaultKind::CapIgnore { server_frac: num(3, "server_frac")? },
+        "meter-bias" => FaultKind::MeterBias { mult: num(3, "mult")? },
+        "feed-loss" => FaultKind::FeedLoss { budget_frac: num(3, "budget_frac")? },
+        other => anyhow::bail!(
+            "unknown fault kind '{other}' (known: telemetry-freeze, oob-storm, cap-ignore, \
+             meter-bias, feed-loss)"
+        ),
+    };
+    Ok(FaultEvent { kind, start_s, duration_s })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn full_scenario() -> Scenario {
+        let plan = FaultPlan::new()
+            .with(FaultKind::TelemetryFreeze, 100.5, 50.25)
+            .with(
+                FaultKind::OobStorm { loss_prob: 0.85, latency_mult: 4.0, jitter_frac: 0.25 },
+                300.0,
+                120.0,
+            )
+            .with(FaultKind::CapIgnore { server_frac: 0.5 }, 600.0, 60.0)
+            .with(FaultKind::MeterBias { mult: 0.8 }, 900.0, 60.0)
+            .with(FaultKind::FeedLoss { budget_frac: 0.75 }, 1200.0, 60.0);
+        let mut sc = Scenario::builder("full")
+            .description("every field exercised, incl. \"quotes\"")
+            .policy(PolicyKind::OneThreshAll)
+            .servers(16)
+            .added(0.3)
+            .weeks(0.1)
+            .seed(42)
+            .power_scale(1.45)
+            .peak_utilization(0.8)
+            .power_mult(1.05)
+            .lp_fraction(0.4)
+            .thresholds(0.75, 0.9)
+            .training(0.25)
+            .training_jobs(4, 3.5)
+            .faults(plan)
+            .escalate(120.0)
+            .build();
+        sc.sku = Some("hgx-h100".to_string());
+        sc
+    }
+
+    #[test]
+    fn every_field_round_trips_bit_identically() {
+        let sc = full_scenario();
+        let doc = sc.to_toml();
+        let text = doc.render();
+        let reparsed = Toml::parse(&text).unwrap();
+        assert_eq!(reparsed, doc, "document level:\n{text}");
+        let back = Scenario::from_toml(&reparsed).unwrap();
+        assert_eq!(back, sc, "value level:\n{text}");
+    }
+
+    #[test]
+    fn site_and_named_faults_round_trip() {
+        let mut sc = Scenario::builder("site")
+            .policy(PolicyKind::Polca)
+            .weeks(0.05)
+            .seed(7)
+            .site(3)
+            .site_search(30, 5)
+            .serial()
+            .faults_scenario("cascade")
+            .escalate(90.0)
+            .build();
+        sc.site.as_mut().unwrap().containment.max_violation_s = 45.0;
+        let back = Scenario::parse(&sc.to_toml_string()).unwrap();
+        assert_eq!(back, sc);
+    }
+
+    #[test]
+    fn sparse_files_fill_defaults() {
+        let sc = Scenario::parse(
+            r#"
+            name = "sparse"
+            [row]
+            added = 0.3
+            [policy]
+            kind = "nocap"
+            "#,
+        )
+        .unwrap();
+        assert_eq!(sc.name, "sparse");
+        assert_eq!(sc.policy_kind, PolicyKind::NoCap);
+        assert_eq!(sc.added_frac, 0.3);
+        assert_eq!(sc.servers(), 40); // default row
+        assert_eq!(sc.weeks, 1.0);
+        assert_eq!(sc.faults, FaultSpec::None);
+        assert!(sc.site.is_none());
+        assert!(sc.validate().is_ok());
+    }
+
+    #[test]
+    fn bad_specs_error_helpfully() {
+        let e = format!("{:#}", Scenario::parse("[policy]\nkind = \"bogus\"").unwrap_err());
+        assert!(e.contains("bogus"), "{e}");
+        let e = format!(
+            "{:#}",
+            Scenario::parse("[faults]\nevents = [[\"not-a-kind\", 1.0, 2.0]]").unwrap_err()
+        );
+        assert!(e.contains("not-a-kind"), "{e}");
+        let e = format!(
+            "{:#}",
+            Scenario::parse("[faults]\nevents = [[\"oob-storm\", 1.0, 2.0]]").unwrap_err()
+        );
+        assert!(e.contains("loss_prob"), "{e}");
+    }
+
+    #[test]
+    fn save_and_load_through_disk() {
+        let sc = full_scenario();
+        let dir = std::env::temp_dir().join("polca_scenario_toml_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("full.toml");
+        sc.save(&path).unwrap();
+        let back = Scenario::load(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        assert_eq!(back, sc);
+    }
+}

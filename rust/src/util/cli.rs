@@ -1,8 +1,29 @@
-//! Minimal command-line argument parser (no `clap` offline).
+//! Minimal command-line argument parser (no `clap` offline), plus the
+//! flag-parsing helpers shared by every `polca` subcommand: policy
+//! parsing ([`parse_policy`] / [`parse_policies`]) and the
+//! `set_*` overlay methods that replace the per-subcommand
+//! `cfg.x = args.get_*(...)` loops with one call per knob.
 //!
 //! Model: `polca <subcommand> [positionals...] [--key value | --flag]`.
 
 use std::collections::BTreeMap;
+
+use crate::policy::engine::PolicyKind;
+
+/// Parse a `--policy` value; the slugs are [`PolicyKind::slug`]s.
+pub fn parse_policy(s: &str) -> anyhow::Result<PolicyKind> {
+    PolicyKind::from_slug(s)
+        .ok_or_else(|| anyhow::anyhow!("unknown policy '{s}' (polca|1t-lp|1t-all|nocap)"))
+}
+
+/// Parse a `--policy` value that may also be `all` (the comparison set).
+pub fn parse_policies(s: &str) -> anyhow::Result<Vec<PolicyKind>> {
+    if s == "all" {
+        Ok(PolicyKind::all().to_vec())
+    } else {
+        Ok(vec![parse_policy(s)?])
+    }
+}
 
 /// Parsed command line.
 #[derive(Debug, Clone, Default)]
@@ -75,6 +96,46 @@ impl Args {
     pub fn get_u64(&self, name: &str, default: u64) -> u64 {
         self.get(name).and_then(|s| s.parse().ok()).unwrap_or(default)
     }
+
+    /// The `--policy` option parsed as one [`PolicyKind`] (`default` is
+    /// a slug, used when the option is absent).
+    pub fn policy(&self, default: &str) -> anyhow::Result<PolicyKind> {
+        parse_policy(self.get_or("policy", default))
+    }
+
+    /// The `--policy` option parsed as a policy set (`all` expands to
+    /// the full comparison set).
+    pub fn policies(&self, default: &str) -> anyhow::Result<Vec<PolicyKind>> {
+        parse_policies(self.get_or("policy", default))
+    }
+
+    /// Overwrite `slot` with `--name` when present and parseable.
+    pub fn set_f64(&self, name: &str, slot: &mut f64) {
+        if let Some(v) = self.get(name).and_then(|s| s.parse().ok()) {
+            *slot = v;
+        }
+    }
+
+    /// Overwrite `slot` with `--name` when present and parseable.
+    pub fn set_usize(&self, name: &str, slot: &mut usize) {
+        if let Some(v) = self.get(name).and_then(|s| s.parse().ok()) {
+            *slot = v;
+        }
+    }
+
+    /// Overwrite `slot` with `--name` when present and parseable.
+    pub fn set_u64(&self, name: &str, slot: &mut u64) {
+        if let Some(v) = self.get(name).and_then(|s| s.parse().ok()) {
+            *slot = v;
+        }
+    }
+
+    /// Overwrite `slot` with `--name` when present and parseable.
+    pub fn set_u32(&self, name: &str, slot: &mut u32) {
+        if let Some(v) = self.get(name).and_then(|s| s.parse().ok()) {
+            *slot = v;
+        }
+    }
 }
 
 #[cfg(test)]
@@ -107,5 +168,37 @@ mod tests {
         let a = parse(&["x", "--fast", "--safe"]);
         assert!(a.flag("fast") && a.flag("safe"));
         assert!(a.options.is_empty());
+    }
+
+    #[test]
+    fn policy_helpers_share_the_slug_set() {
+        let a = parse(&["run", "--policy", "1t-lp"]);
+        assert_eq!(a.policy("polca").unwrap(), PolicyKind::OneThreshLowPri);
+        // default applies when the option is absent
+        assert_eq!(parse(&["run"]).policy("nocap").unwrap(), PolicyKind::NoCap);
+        assert!(parse(&["run", "--policy", "bogus"]).policy("polca").is_err());
+        assert_eq!(parse(&["run", "--policy", "all"]).policies("polca").unwrap().len(), 4);
+        assert_eq!(parse(&["run"]).policies("polca").unwrap(), vec![PolicyKind::Polca]);
+        // every slug round-trips
+        for k in PolicyKind::all() {
+            assert_eq!(parse_policy(k.slug()).unwrap(), k);
+        }
+    }
+
+    #[test]
+    fn set_overlays_only_when_present() {
+        let a = parse(&["run", "--weeks", "0.5", "--servers", "16", "--step", "bad"]);
+        let mut weeks = 1.0;
+        let mut servers = 40usize;
+        let mut seed = 7u64;
+        let mut step = 2u32;
+        a.set_f64("weeks", &mut weeks);
+        a.set_usize("servers", &mut servers);
+        a.set_u64("seed", &mut seed);
+        a.set_u32("step", &mut step);
+        assert_eq!(weeks, 0.5);
+        assert_eq!(servers, 16);
+        assert_eq!(seed, 7, "absent option must not disturb the default");
+        assert_eq!(step, 2, "unparseable option must not disturb the default");
     }
 }

@@ -92,6 +92,19 @@ smoke_out=$(mktemp -d)
 ./target/release/polca figure fault-matrix --out-dir "$smoke_out" | tail -n 5
 rm -rf "$smoke_out"
 
+# Scenario gate (ISSUE 4): every built-in preset must validate and
+# round-trip through TOML, and every shipped example scenario file must
+# load and validate — adding a preset or example that cannot run is a
+# CI failure, not a latent doc bug.
+echo "== scenario validate (presets)"
+./target/release/polca scenario validate --all
+echo "== scenario validate (examples/scenarios/)"
+for f in examples/scenarios/*.toml; do
+  ./target/release/polca scenario validate "$f"
+done
+echo "== scenario smoke: polca run oversubscribed-row --quick --weeks 0.02"
+./target/release/polca run oversubscribed-row --quick --weeks 0.02 | tail -n 3
+
 # Docs gate (ISSUE 2): the crate carries #![warn(missing_docs)] and the
 # ARCHITECTURE/README docs reference rustdoc items — keep both honest by
 # denying all rustdoc warnings (missing docs, broken intra-doc links).

@@ -109,6 +109,27 @@ impl<T, E: StdError + Send + Sync + 'static> Context<T> for std::result::Result<
     }
 }
 
+// Context on an already-`anyhow` Result (adding an outer message to an
+// existing chain). Coherent next to the `E: StdError` blanket impl
+// because `Error` itself does not implement `StdError` (see the module
+// docs) — the same reasoning that makes the blanket `From` impl legal.
+impl<T> Context<T> for std::result::Result<T, Error> {
+    fn context<C>(self, context: C) -> Result<T>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+    {
+        self.map_err(|e| e.context(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.map_err(|e| e.context(f()))
+    }
+}
+
 impl<T> Context<T> for Option<T> {
     fn context<C>(self, context: C) -> Result<T>
     where
@@ -187,6 +208,18 @@ mod tests {
         let e = r.context("reading manifest").unwrap_err();
         assert_eq!(format!("{e}"), "reading manifest");
         assert_eq!(format!("{e:#}"), "reading manifest: missing");
+    }
+
+    #[test]
+    fn context_stacks_on_anyhow_results_too() {
+        fn inner() -> Result<()> {
+            bail!("root problem")
+        }
+        let e = inner().with_context(|| "outer step").unwrap_err();
+        assert_eq!(format!("{e}"), "outer step");
+        assert_eq!(format!("{e:#}"), "outer step: root problem");
+        let e = inner().context("labelled").unwrap_err();
+        assert_eq!(format!("{e:#}"), "labelled: root problem");
     }
 
     #[test]
