@@ -1,16 +1,64 @@
 //! L3 bench: discrete-event simulator throughput (events/s) — the §Perf
-//! headline for the evaluation vehicle — plus the DES queue in isolation.
+//! headline for the evaluation vehicle — plus the DES queue in
+//! isolation and the scenario-executor speedup (a quick sweep batch,
+//! serial vs parallel), recorded to `BENCH_sim.json` so the perf
+//! trajectory of the matrix/sweep paths is tracked across PRs.
+//!
+//! `--smoke` (the CI mode) shrinks every measurement budget so the run
+//! finishes in seconds while still writing a complete BENCH_sim.json.
+
+use std::time::Duration;
 
 use polca::benchkit::{bench, black_box, BenchConfig};
+use polca::exec::{run_batch, ExecConfig};
 use polca::policy::engine::PolicyKind;
 use polca::sim::EventQueue;
 use polca::simulation::{run, SimConfig};
+use polca::util::json::Json;
+
+/// One item of the sweep batch the executor benchmark fans out: the
+/// quick-matrix shape (small row, short horizon, varying policy/seed).
+fn sweep_batch() -> Vec<SimConfig> {
+    let policies = PolicyKind::all();
+    (0..8u64)
+        .map(|i| {
+            let mut cfg = SimConfig::default();
+            cfg.exp.row.num_servers = 12;
+            cfg.deployed_servers = 16;
+            cfg.weeks = 0.01;
+            cfg.exp.seed = 100 + i;
+            cfg.power_scale = 1.35;
+            cfg.policy_kind = policies[(i as usize) % policies.len()];
+            cfg
+        })
+        .collect()
+}
 
 fn main() {
-    let cfg = BenchConfig::default();
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let cfg = if smoke {
+        BenchConfig {
+            warmup: Duration::from_millis(50),
+            measure: Duration::from_millis(300),
+            min_iters: 3,
+            max_iters: 1000,
+        }
+    } else {
+        BenchConfig::default()
+    };
+    let slow_cfg = if smoke {
+        BenchConfig {
+            warmup: Duration::from_millis(0),
+            measure: Duration::from_millis(500),
+            min_iters: 1,
+            max_iters: 100,
+        }
+    } else {
+        BenchConfig::slow()
+    };
 
     // Raw event-queue churn: schedule + pop cycles.
-    let r = bench("event_queue_schedule_pop_1k", &cfg, 1000.0, || {
+    let queue_r = bench("event_queue_schedule_pop_1k", &cfg, 1000.0, || {
         let mut q = EventQueue::new();
         for i in 0..1000u64 {
             q.schedule_at(i * 7 % 997, i);
@@ -19,24 +67,66 @@ fn main() {
             black_box(x);
         }
     });
-    println!("{}", r.report());
+    println!("{}", queue_r.report());
 
     // One simulated day of the full cluster model, per policy.
+    let mut sim_events_per_s = Vec::new();
     for (name, kind) in [("polca", PolicyKind::Polca), ("nocap", PolicyKind::NoCap)] {
         let mut sim_cfg = SimConfig::default();
-        sim_cfg.weeks = 1.0 / 7.0;
+        sim_cfg.weeks = if smoke { 0.02 } else { 1.0 / 7.0 };
         sim_cfg.deployed_servers = 52;
         sim_cfg.exp.seed = 3;
         sim_cfg.policy_kind = kind;
         let events = run(&sim_cfg).events as f64;
-        let r = bench(
-            &format!("cluster_sim_1day_52srv_{name}"),
-            &BenchConfig::slow(),
-            events,
-            || {
-                black_box(run(&sim_cfg));
-            },
-        );
+        let r = bench(&format!("cluster_sim_1day_52srv_{name}"), &slow_cfg, events, || {
+            black_box(run(&sim_cfg));
+        });
         println!("{}  [= events/s]", r.report());
+        sim_events_per_s.push((name, r.throughput()));
+    }
+
+    // Scenario-executor speedup: the quick-sweep batch, serial vs
+    // parallel (the hot path behind `polca faults matrix` and the
+    // policy/mixed sweeps since ISSUE 5).
+    let batch = sweep_batch();
+    let runs = batch.len() as f64;
+    let serial_r = bench(&format!("sweep_batch_{}x_serial", batch.len()), &slow_cfg, runs, || {
+        black_box(run_batch(&batch, &ExecConfig::serial(), |_, c| run(c)));
+    });
+    println!("{}  [= runs/s]", serial_r.report());
+    let parallel_r =
+        bench(&format!("sweep_batch_{}x_parallel", batch.len()), &slow_cfg, runs, || {
+            black_box(run_batch(&batch, &ExecConfig::default(), |_, c| run(c)));
+        });
+    println!("{}  [= runs/s]", parallel_r.report());
+    let speedup = parallel_r.throughput() / serial_r.throughput();
+    let threads = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1);
+    println!(
+        "executor speedup: {speedup:.2}x on {threads} hardware threads \
+         ({:.2} -> {:.2} runs/s)",
+        serial_r.throughput(),
+        parallel_r.throughput()
+    );
+
+    // Record the trajectory: BENCH_sim.json at the workspace root.
+    let doc = Json::obj(vec![
+        ("smoke", Json::Bool(smoke)),
+        ("hardware_threads", Json::Num(threads as f64)),
+        ("event_queue_ops_per_s", Json::Num(queue_r.throughput())),
+        (
+            "sim_events_per_s",
+            Json::obj(
+                sim_events_per_s.iter().map(|(n, v)| (*n, Json::Num(*v))).collect::<Vec<_>>(),
+            ),
+        ),
+        ("sweep_batch_runs", Json::Num(runs)),
+        ("sweep_runs_per_s_serial", Json::Num(serial_r.throughput())),
+        ("sweep_runs_per_s_parallel", Json::Num(parallel_r.throughput())),
+        ("sweep_parallel_speedup", Json::Num(speedup)),
+    ]);
+    let path = "BENCH_sim.json";
+    match std::fs::write(path, doc.to_pretty() + "\n") {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => eprintln!("could not write {path}: {e}"),
     }
 }

@@ -1,0 +1,194 @@
+//! Parallel scenario executor: fan any batch of independent runs out
+//! across scoped threads, bit-identically to running them serially.
+//!
+//! This generalizes the pattern [`crate::fleet::parallel`] proved for
+//! site runs — derive any per-item seeds *serially* before spawning,
+//! give every item a pre-allocated result slot keyed by its index, and
+//! let scheduling affect only wall-clock, never results — to any
+//! `Vec<SimConfig>` / `Vec<Scenario>`-shaped batch: the fault matrix,
+//! policy/threshold sweeps, training-fraction sweeps, and the fleet
+//! layer's per-cluster runs all execute through [`run_batch`].
+//!
+//! # Determinism contract
+//!
+//! `run_batch(items, cfg, f)` returns exactly
+//! `items.iter().enumerate().map(f).collect()` — the serial reference
+//! path *is* that expression, and the parallel path is pinned to it by
+//! a property test over randomized batches and thread counts
+//! (`tests/integration_exec.rs`, full `Debug`-render equality of
+//! simulation reports). This only holds when `f` is a pure function of
+//! `(index, item)` — true for every simulator entry point, which takes
+//! its entire universe (workload realization included) from the config
+//! value. Items needing distinct randomness derive per-item seeds up
+//! front with [`item_seeds`].
+//!
+//! # Scheduling
+//!
+//! Workers pull the next unclaimed index from a shared atomic counter
+//! (work stealing), so a batch of uneven runs (a fault matrix mixing
+//! NoCap and braked cells, say) load-balances instead of convoying
+//! behind the slowest contiguous chunk. Results are written to their
+//! slots by index after each worker drains, so the output order is the
+//! input order regardless of which thread ran what.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::thread;
+
+use crate::util::rng::Rng;
+
+/// How to execute one batch.
+#[derive(Debug, Clone)]
+pub struct ExecConfig {
+    /// Run items on scoped threads (false = the serial reference path,
+    /// every CLI surface's `--serial` flag).
+    pub parallel: bool,
+    /// Worker-thread cap; 0 = the machine's available parallelism.
+    pub threads: usize,
+}
+
+impl Default for ExecConfig {
+    fn default() -> Self {
+        ExecConfig { parallel: true, threads: 0 }
+    }
+}
+
+impl ExecConfig {
+    /// The serial reference path.
+    pub fn serial() -> ExecConfig {
+        ExecConfig { parallel: false, threads: 0 }
+    }
+
+    /// Parallel (or not) at the default thread cap — the one-liner CLI
+    /// surfaces use to honor a `--serial` flag.
+    pub fn with_parallel(parallel: bool) -> ExecConfig {
+        ExecConfig { parallel, ..Default::default() }
+    }
+
+    /// Worker threads to use for a batch of `n` items.
+    fn workers(&self, n: usize) -> usize {
+        let cap = if self.threads > 0 {
+            self.threads
+        } else {
+            thread::available_parallelism().map(|p| p.get()).unwrap_or(1)
+        };
+        cap.clamp(1, n.max(1))
+    }
+}
+
+/// Deterministic per-item seeds, derived serially from a root seed
+/// before any thread exists — the same pattern as
+/// [`crate::fleet::parallel::cluster_seeds`], offered generically for
+/// new batch surfaces: item `i` of a batch gets the same seed whether
+/// the batch runs serially, in parallel, or is re-sliced into
+/// sub-batches of the same order. (`cluster_seeds` keeps its own
+/// domain-separation constant on purpose: historical site runs must
+/// stay bit-identical, so the two derivations are distinct forever.)
+pub fn item_seeds(root_seed: u64, n: usize) -> Vec<u64> {
+    let mut root = Rng::new(root_seed ^ 0xE8EC_5EED_0000_0001);
+    (0..n).map(|i| root.fork(i as u64).next_u64()).collect()
+}
+
+/// Run `f` over every item, returning results in input order —
+/// bit-identical between the serial and parallel paths (see the module
+/// docs for the contract `f` must satisfy).
+pub fn run_batch<I, O, F>(items: &[I], cfg: &ExecConfig, f: F) -> Vec<O>
+where
+    I: Sync,
+    O: Send,
+    F: Fn(usize, &I) -> O + Sync,
+{
+    let n = items.len();
+    if !cfg.parallel || n <= 1 {
+        return items.iter().enumerate().map(|(i, item)| f(i, item)).collect();
+    }
+    let workers = cfg.workers(n);
+    let next = AtomicUsize::new(0);
+    let mut slots: Vec<Option<O>> = (0..n).map(|_| None).collect();
+    thread::scope(|s| {
+        let handles: Vec<_> = (0..workers)
+            .map(|_| {
+                let next = &next;
+                let f = &f;
+                s.spawn(move || {
+                    let mut local: Vec<(usize, O)> = Vec::new();
+                    loop {
+                        let i = next.fetch_add(1, Ordering::Relaxed);
+                        if i >= n {
+                            break;
+                        }
+                        local.push((i, f(i, &items[i])));
+                    }
+                    local
+                })
+            })
+            .collect();
+        for h in handles {
+            for (i, out) in h.join().expect("executor worker panicked") {
+                slots[i] = Some(out);
+            }
+        }
+    });
+    slots.into_iter().map(|s| s.expect("every batch slot filled")).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn square_batch(n: usize, cfg: &ExecConfig) -> Vec<usize> {
+        let items: Vec<usize> = (0..n).collect();
+        run_batch(&items, cfg, |i, &x| {
+            assert_eq!(i, x, "index must match the item's position");
+            x * x
+        })
+    }
+
+    #[test]
+    fn serial_and_parallel_agree_in_order() {
+        let want: Vec<usize> = (0..57).map(|x| x * x).collect();
+        assert_eq!(square_batch(57, &ExecConfig::serial()), want);
+        for threads in [0, 1, 2, 3, 8, 64] {
+            let cfg = ExecConfig { parallel: true, threads };
+            assert_eq!(square_batch(57, &cfg), want, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn empty_and_singleton_batches() {
+        assert_eq!(square_batch(0, &ExecConfig::default()), Vec::<usize>::new());
+        assert_eq!(square_batch(1, &ExecConfig::default()), vec![0]);
+    }
+
+    #[test]
+    fn more_threads_than_items_is_fine() {
+        let cfg = ExecConfig { parallel: true, threads: 32 };
+        assert_eq!(square_batch(3, &cfg), vec![0, 1, 4]);
+    }
+
+    #[test]
+    fn item_seeds_are_deterministic_distinct_and_prefix_stable() {
+        let a = item_seeds(42, 16);
+        assert_eq!(a, item_seeds(42, 16));
+        let mut dedup = a.clone();
+        dedup.sort();
+        dedup.dedup();
+        assert_eq!(dedup.len(), a.len(), "colliding item seeds: {a:?}");
+        // A longer derivation shares the common prefix (sub-batching
+        // a sweep must not reshuffle the seeds of the items kept).
+        assert_eq!(&a[..5], &item_seeds(42, 5)[..]);
+        assert_ne!(item_seeds(43, 5), item_seeds(42, 5));
+    }
+
+    #[test]
+    fn every_item_runs_exactly_once() {
+        use std::sync::atomic::AtomicU64;
+        let calls = AtomicU64::new(0);
+        let items: Vec<u64> = (0..200).collect();
+        let out = run_batch(&items, &ExecConfig { parallel: true, threads: 7 }, |_, &x| {
+            calls.fetch_add(1, Ordering::SeqCst);
+            x + 1
+        });
+        assert_eq!(calls.load(Ordering::SeqCst), 200);
+        assert_eq!(out, (1..=200).collect::<Vec<u64>>());
+    }
+}

@@ -3,6 +3,7 @@
 //! powerbrakes, SLOs held).
 
 use crate::characterize::catalog::find;
+use crate::exec::{run_batch, ExecConfig};
 use crate::policy::engine::PolicyKind;
 use crate::policy::tuner::tune_thresholds;
 use crate::power::gpu::CapMode;
@@ -153,18 +154,27 @@ pub fn fig15a(depth: Depth, seed: u64) -> FigureOutput {
     let mut out = FigureOutput::new("fig15a", "Impact of the T1 capping frequency for LP workloads");
     let mut t = Table::new("Fig 15a", &["lp_freq_T1_MHz", "LP P50", "LP P99", "meets LP SLO"]);
     let mut csv = Csv::new(&["freq_mhz", "lp_p50", "lp_p99", "ok"]);
-    for &mhz in &[1005.0, 1110.0, 1200.0, 1275.0, 1395.0] {
-        let cfg = row_scenario(depth, seed)
-            .added(0.30)
-            .policy_config(|p| {
-                p.lp_freq_t1_mhz = mhz;
-                // the deeper T2 cap keeps its offset below T1's
-                p.lp_freq_t2_mhz = (mhz - 165.0).max(500.0);
-            })
-            .build()
-            .sim_config();
-        let (_, impact) = run_with_impact(&cfg);
-        let ok = impact.lp_p50 <= cfg.exp.slo.lp_p50_impact && impact.lp_p99 <= cfg.exp.slo.lp_p99_impact;
+    // Independent sweep points: build every config, then fan the paired
+    // runs out through the parallel scenario executor.
+    let freqs = [1005.0, 1110.0, 1200.0, 1275.0, 1395.0];
+    let cfgs: Vec<_> = freqs
+        .iter()
+        .map(|&mhz| {
+            row_scenario(depth, seed)
+                .added(0.30)
+                .policy_config(|p| {
+                    p.lp_freq_t1_mhz = mhz;
+                    // the deeper T2 cap keeps its offset below T1's
+                    p.lp_freq_t2_mhz = (mhz - 165.0).max(500.0);
+                })
+                .build()
+                .sim_config()
+        })
+        .collect();
+    let impacts = run_batch(&cfgs, &ExecConfig::default(), |_, cfg| run_with_impact(cfg).1);
+    for ((&mhz, cfg), impact) in freqs.iter().zip(&cfgs).zip(&impacts) {
+        let ok = impact.lp_p50 <= cfg.exp.slo.lp_p50_impact
+            && impact.lp_p99 <= cfg.exp.slo.lp_p99_impact;
         t.row(vec![f(mhz, 0), pct(impact.lp_p50, 2), pct(impact.lp_p99, 2), ok.to_string()]);
         csv.row_strs(&[f(mhz, 0), f(impact.lp_p50, 4), f(impact.lp_p99, 4), (ok as u8).to_string()]);
     }
@@ -179,9 +189,13 @@ pub fn fig15b(depth: Depth, seed: u64) -> FigureOutput {
     let mut out = FigureOutput::new("fig15b", "Impact of the low-priority workload fraction");
     let mut t = Table::new("Fig 15b", &["LP fraction", "HP P99", "LP P99", "brakes"]);
     let mut csv = Csv::new(&["lp_fraction", "hp_p99", "lp_p99", "brakes"]);
-    for &lp in &[0.10, 0.25, 0.50, 0.75] {
-        let cfg = row_scenario(depth, seed).added(0.30).lp_fraction(lp).build().sim_config();
-        let (_, impact) = run_with_impact(&cfg);
+    let fractions = [0.10, 0.25, 0.50, 0.75];
+    let cfgs: Vec<_> = fractions
+        .iter()
+        .map(|&lp| row_scenario(depth, seed).added(0.30).lp_fraction(lp).build().sim_config())
+        .collect();
+    let impacts = run_batch(&cfgs, &ExecConfig::default(), |_, cfg| run_with_impact(cfg).1);
+    for (&lp, impact) in fractions.iter().zip(&impacts) {
         t.row(vec![pct(lp, 0), pct(impact.hp_p99, 2), pct(impact.lp_p99, 2), impact.brake_events.to_string()]);
         csv.row_strs(&[f(lp, 2), f(impact.hp_p99, 4), f(impact.lp_p99, 4), impact.brake_events.to_string()]);
     }
@@ -240,6 +254,9 @@ pub fn fig17(depth: Depth, seed: u64) -> FigureOutput {
         &["policy", "scenario", "HP P99", "LP P99", "LP thrpt", "brakes", "SLO"],
     );
     let mut csv = Csv::new(&["policy", "scenario", "hp_p99", "lp_p99", "lp_throughput", "brakes", "meets_slo"]);
+    // The 4-policy × 2-scenario grid is the slowest §6 sweep (long
+    // horizons, paired baselines) — exactly what the executor is for.
+    let mut cells = Vec::new();
     for kind in PolicyKind::all() {
         for (scenario, mult) in [("default", 1.0), ("power+5%", 1.05)] {
             let cfg = row_scenario(depth, seed)
@@ -249,27 +266,32 @@ pub fn fig17(depth: Depth, seed: u64) -> FigureOutput {
                 .power_mult(mult)
                 .build()
                 .sim_config();
-            let (_, impact) = run_with_impact(&cfg);
-            let ok = impact.meets_slo(&cfg.exp.slo);
-            t.row(vec![
-                kind.name().into(),
-                scenario.into(),
-                pct(impact.hp_p99, 2),
-                pct(impact.lp_p99, 2),
-                f(impact.lp_throughput, 3),
-                impact.brake_events.to_string(),
-                if ok { "ok".into() } else { "VIOLATED".into() },
-            ]);
-            csv.row_strs(&[
-                kind.name().into(),
-                scenario.into(),
-                f(impact.hp_p99, 4),
-                f(impact.lp_p99, 4),
-                f(impact.lp_throughput, 4),
-                impact.brake_events.to_string(),
-                (ok as u8).to_string(),
-            ]);
+            cells.push((kind, scenario, cfg));
         }
+    }
+    let impacts = run_batch(&cells, &ExecConfig::default(), |_, (_, _, cfg)| {
+        run_with_impact(cfg).1
+    });
+    for ((kind, scenario, cfg), impact) in cells.iter().zip(&impacts) {
+        let ok = impact.meets_slo(&cfg.exp.slo);
+        t.row(vec![
+            kind.name().into(),
+            (*scenario).into(),
+            pct(impact.hp_p99, 2),
+            pct(impact.lp_p99, 2),
+            f(impact.lp_throughput, 3),
+            impact.brake_events.to_string(),
+            if ok { "ok".into() } else { "VIOLATED".into() },
+        ]);
+        csv.row_strs(&[
+            kind.name().into(),
+            (*scenario).into(),
+            f(impact.hp_p99, 4),
+            f(impact.lp_p99, 4),
+            f(impact.lp_throughput, 4),
+            impact.brake_events.to_string(),
+            (ok as u8).to_string(),
+        ]);
     }
     out.tables.push(t);
     out.csvs.push(("fig17_policy_comparison.csv".into(), csv));
@@ -282,21 +304,25 @@ pub fn fig18(depth: Depth, seed: u64) -> FigureOutput {
     let mut out = FigureOutput::new("fig18", "Powerbrake events per policy (+30%)");
     let mut t = Table::new("Fig 18", &["policy", "default", "power+5%"]);
     let mut csv = Csv::new(&["policy", "default_brakes", "power5_brakes"]);
+    let mut cfgs = Vec::new();
     for kind in PolicyKind::all() {
-        let mut counts = Vec::new();
         for mult in [1.0, 1.05] {
-            let cfg = row_scenario(depth, seed)
-                .weeks(depth.weeks(5.0).min(2.0))
-                .policy(kind)
-                .added(0.30)
-                .power_mult(mult)
-                .build()
-                .sim_config();
-            let report = run(&cfg);
-            counts.push(report.brake_events);
+            cfgs.push(
+                row_scenario(depth, seed)
+                    .weeks(depth.weeks(5.0).min(2.0))
+                    .policy(kind)
+                    .added(0.30)
+                    .power_mult(mult)
+                    .build()
+                    .sim_config(),
+            );
         }
-        t.row(vec![kind.name().into(), counts[0].to_string(), counts[1].to_string()]);
-        csv.row_strs(&[kind.name().into(), counts[0].to_string(), counts[1].to_string()]);
+    }
+    let counts = run_batch(&cfgs, &ExecConfig::default(), |_, cfg| run(cfg).brake_events);
+    for (pi, kind) in PolicyKind::all().into_iter().enumerate() {
+        let (a, b) = (counts[pi * 2], counts[pi * 2 + 1]);
+        t.row(vec![kind.name().into(), a.to_string(), b.to_string()]);
+        csv.row_strs(&[kind.name().into(), a.to_string(), b.to_string()]);
     }
     out.tables.push(t);
     out.csvs.push(("fig18_brake_events.csv".into(), csv));

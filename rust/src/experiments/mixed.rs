@@ -10,6 +10,7 @@
 //! between. Headroom must interpolate monotonically between the two
 //! regimes for mixing to be a usable planning knob.
 
+use crate::exec::{run_batch, ExecConfig};
 use crate::policy::engine::PolicyKind;
 use crate::scenario::Scenario;
 use crate::simulation::{run, MixedRowConfig, SimConfig};
@@ -58,6 +59,9 @@ pub struct SweepConfig {
     /// Template mixed config; `training_fraction` is overwritten per
     /// sweep point, the job structure (size/stagger/profile) is kept.
     pub mixed: MixedRowConfig,
+    /// Fan sweep points out across the parallel scenario executor
+    /// (false = the serial reference path; bit-identical either way).
+    pub parallel: bool,
 }
 
 impl Default for SweepConfig {
@@ -69,6 +73,7 @@ impl Default for SweepConfig {
             servers: 40,
             added: 0.0,
             mixed: MixedRowConfig::default(),
+            parallel: true,
         }
     }
 }
@@ -105,24 +110,26 @@ impl SweepConfig {
 
 /// Sweep the training fraction of one row. All fractions share the
 /// same inference workload realization (training servers are carved
-/// off the tail), so the points are directly comparable.
+/// off the tail), so the points are directly comparable. The per-point
+/// simulations are independent, so the sweep fans out through the
+/// parallel scenario executor ([`crate::exec`]) unless
+/// [`SweepConfig::parallel`] opts for the serial reference path.
 pub fn sweep_training_fractions(fractions: &[f64], sc: &SweepConfig) -> Vec<MixPoint> {
-    fractions
-        .iter()
-        .map(|&frac| {
-            let report = run(&sc.sim_config(frac));
-            MixPoint {
-                training_fraction: frac,
-                power_peak: report.power_peak,
-                power_mean: report.power_mean,
-                spike_2s: report.spike_2s,
-                headroom: 1.0 - report.power_peak,
-                train_iters: report.train.iters,
-                train_inflation: report.train.inflation(),
-                completed: report.hp.completed + report.lp.completed,
-            }
-        })
-        .collect()
+    let configs: Vec<(f64, SimConfig)> =
+        fractions.iter().map(|&frac| (frac, sc.sim_config(frac))).collect();
+    run_batch(&configs, &ExecConfig::with_parallel(sc.parallel), |_, (frac, cfg)| {
+        let report = run(cfg);
+        MixPoint {
+            training_fraction: *frac,
+            power_peak: report.power_peak,
+            power_mean: report.power_mean,
+            spike_2s: report.spike_2s,
+            headroom: 1.0 - report.power_peak,
+            train_iters: report.train.iters,
+            train_inflation: report.train.inflation(),
+            completed: report.hp.completed + report.lp.completed,
+        }
+    })
 }
 
 /// The §2.4 bound the pure-training endpoint is checked against: the

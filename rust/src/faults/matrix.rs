@@ -9,11 +9,13 @@
 //! and every injected-fault cell reports a finite time-to-contain under
 //! at least one policy ([`MatrixOutcome::scenarios_containable`]).
 
+use crate::exec::{run_batch, ExecConfig};
 use crate::metrics::{ResilienceMetrics, RunReport};
 use crate::policy::engine::PolicyKind;
 use crate::scenario::Scenario;
 use crate::simulation::{run, SimConfig};
 use crate::util::csv::Csv;
+use crate::util::json::Json;
 use crate::util::table::{f, Table};
 
 use super::plan::FaultPlan;
@@ -37,6 +39,10 @@ pub struct MatrixConfig {
     /// Containment escalation passed to every cell (including the
     /// no-fault column, so the comparison is policy-for-policy fair).
     pub escalation_s: Option<f64>,
+    /// Fan the grid's cells out across the parallel scenario executor
+    /// (false = the serial reference path; bit-identical either way,
+    /// every cell is a pure function of its config).
+    pub parallel: bool,
 }
 
 impl Default for MatrixConfig {
@@ -49,6 +55,7 @@ impl Default for MatrixConfig {
             weeks: 0.1,
             seed: 1,
             escalation_s: Some(120.0),
+            parallel: true,
         }
     }
 }
@@ -229,6 +236,36 @@ impl MatrixOutcome {
         }
         csv
     }
+
+    /// The grid as machine-readable JSON (`polca faults matrix --json`):
+    /// one object per cell plus the cross-cell verdicts, so scripts can
+    /// consume containment results without scraping the table.
+    pub fn to_json(&self) -> Json {
+        let cells = self.cells.iter().map(|c| {
+            Json::obj(vec![
+                ("scenario", Json::Str(c.scenario.clone())),
+                ("policy", Json::Str(c.policy.name().to_string())),
+                ("reported_peak", Json::Num(c.reported_peak)),
+                ("true_peak", Json::Num(c.true_peak)),
+                ("violation_s", Json::Num(c.violation_s)),
+                ("peak_overshoot_w", Json::Num(c.peak_overshoot_w)),
+                // Json renders non-finite numbers as null ("never
+                // contained" is null, not a fake large number).
+                ("time_to_contain_s", Json::Num(c.time_to_contain_s)),
+                ("contained", Json::Bool(c.contained)),
+                ("brake_events", Json::Num(c.brake_events as f64)),
+                ("brake_commands", Json::Num(c.brake_commands as f64)),
+                ("cap_commands", Json::Num(c.cap_commands as f64)),
+                ("reissued_commands", Json::Num(c.reissued_commands as f64)),
+            ])
+        });
+        Json::obj(vec![
+            ("horizon_s", Json::Num(self.horizon_s)),
+            ("clean_match", Json::Bool(self.clean_match)),
+            ("scenarios_containable", Json::Bool(self.scenarios_containable())),
+            ("cells", Json::arr(cells)),
+        ])
+    }
 }
 
 /// Two runs agree on everything a fault could have perturbed.
@@ -250,22 +287,39 @@ fn reports_match(a: &RunReport, b: &RunReport) -> bool {
 }
 
 /// Run the grid: every scenario under every policy, plus one no-plan
-/// clean run per policy to certify the "none" column.
+/// clean run per policy to certify the "none" column. The cell configs
+/// are resolved up front (a bad scenario name fails before anything
+/// runs), then the whole batch — clean references included — fans out
+/// through the parallel scenario executor ([`crate::exec`]); results
+/// are bit-identical to the serial path, so `parallel` only buys
+/// wall-clock.
 pub fn run_matrix(mc: &MatrixConfig) -> anyhow::Result<MatrixOutcome> {
     let horizon_s = mc.horizon_s();
-    let mut cells = Vec::with_capacity(mc.scenarios.len() * mc.policies.len());
-    let mut clean_match = true;
-    // One clean (no-plan) reference per policy.
-    let cleans: Vec<RunReport> =
-        mc.policies.iter().map(|&p| run(&mc.sim_config(None, p))).collect();
+    let n_policies = mc.policies.len();
+    // One clean (no-plan) reference per policy, then the grid in
+    // scenario-major, policy-minor order.
+    let mut jobs: Vec<SimConfig> = Vec::with_capacity((mc.scenarios.len() + 1) * n_policies);
+    for &p in &mc.policies {
+        jobs.push(mc.sim_config(None, p));
+    }
     for scenario in &mc.scenarios {
         let plan = FaultPlan::scenario(scenario, horizon_s)?;
+        for &policy in &mc.policies {
+            jobs.push(mc.sim_config(Some(plan.clone()), policy));
+        }
+    }
+    let reports = run_batch(&jobs, &ExecConfig::with_parallel(mc.parallel), |_, cfg| run(cfg));
+    let (cleans, grid) = reports.split_at(n_policies);
+
+    let mut cells = Vec::with_capacity(mc.scenarios.len() * n_policies);
+    let mut clean_match = true;
+    for (si, scenario) in mc.scenarios.iter().enumerate() {
         for (pi, &policy) in mc.policies.iter().enumerate() {
-            let report = run(&mc.sim_config(Some(plan.clone()), policy));
+            let report = &grid[si * n_policies + pi];
             if scenario == "none" {
-                clean_match &= reports_match(&report, &cleans[pi]);
+                clean_match &= reports_match(report, &cleans[pi]);
             }
-            cells.push(MatrixCell::from_report(scenario, policy, &report));
+            cells.push(MatrixCell::from_report(scenario, policy, report));
         }
     }
     Ok(MatrixOutcome { cells, clean_match, horizon_s })
@@ -292,6 +346,7 @@ mod tests {
             weeks: 0.05,
             seed: 3,
             escalation_s: Some(120.0),
+            parallel: true,
         };
         let out = run_matrix(&mc).unwrap();
         assert_eq!(out.cells.len(), 6);
@@ -304,6 +359,47 @@ mod tests {
         }
         // Rendering covers every cell.
         assert!(out.table().render().contains("cap-ignore"));
+    }
+
+    #[test]
+    fn parallel_grid_is_bit_identical_to_serial() {
+        let mut mc = MatrixConfig {
+            scenarios: vec!["none".into(), "meter-bias".into()],
+            policies: vec![PolicyKind::Polca, PolicyKind::NoCap],
+            servers: 12,
+            added: 0.4,
+            weeks: 0.03,
+            seed: 5,
+            escalation_s: Some(120.0),
+            parallel: true,
+        };
+        let par = run_matrix(&mc).unwrap();
+        mc.parallel = false;
+        let ser = run_matrix(&mc).unwrap();
+        assert_eq!(format!("{par:?}"), format!("{ser:?}"));
+    }
+
+    #[test]
+    fn json_output_covers_every_cell_and_verdict() {
+        let mc = MatrixConfig {
+            scenarios: vec!["none".into()],
+            policies: vec![PolicyKind::NoCap],
+            servers: 12,
+            added: 0.2,
+            weeks: 0.02,
+            seed: 2,
+            escalation_s: None,
+            parallel: true,
+        };
+        let out = run_matrix(&mc).unwrap();
+        let j = out.to_json();
+        assert_eq!(j.get("clean_match").and_then(|v| v.as_bool()), Some(true));
+        let cells = j.get("cells").and_then(|v| v.as_arr()).unwrap();
+        assert_eq!(cells.len(), 1);
+        assert_eq!(cells[0].get("scenario").and_then(|v| v.as_str()), Some("none"));
+        // ... and the rendered document parses back.
+        let parsed = crate::util::json::parse(&j.to_pretty()).unwrap();
+        assert_eq!(parsed.get("clean_match"), j.get("clean_match"));
     }
 
     #[test]

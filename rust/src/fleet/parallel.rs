@@ -1,17 +1,19 @@
 //! Parallel site execution: the per-cluster simulations of one site are
-//! independent discrete-event runs, so a site evaluation fans out one
-//! scoped thread per cluster and joins — near-linear speedup on the
-//! planner's inner loop (see `benches/bench_fleet.rs`).
+//! independent discrete-event runs, so a site evaluation fans them out
+//! through the shared scenario executor ([`crate::exec::run_batch`]) —
+//! near-linear speedup on the planner's inner loop (see
+//! `benches/bench_fleet.rs`).
 //!
 //! Determinism contract: per-cluster seeds are derived *serially* from
 //! the site seed with [`crate::util::rng::Rng::fork`] before any thread
-//! is spawned, and each thread writes only its own pre-allocated slot —
-//! the result is bit-identical to the serial path regardless of
-//! scheduling (tested in `tests/integration_fleet.rs`).
-
-use std::thread;
+//! is spawned, and the executor returns results in cluster order
+//! regardless of scheduling — the result is bit-identical to the serial
+//! path (tested in `tests/integration_fleet.rs`). This module is where
+//! the executor's scoped-thread / pre-allocated-slot pattern was first
+//! proven before `exec` generalized it to every batch surface.
 
 use crate::config::SloConfig;
+use crate::exec::{run_batch, ExecConfig};
 use crate::faults::{ContainmentSlo, FaultPlan};
 use crate::metrics::{ImpactSummary, RunReport};
 use crate::policy::engine::PolicyKind;
@@ -183,20 +185,8 @@ pub fn run_site(site: &SiteSpec, policy: PolicyKind, rc: &SiteRunConfig) -> Site
         })
         .collect();
 
-    let mut results: Vec<Option<(RunReport, ImpactSummary)>> = (0..n).map(|_| None).collect();
-    if rc.parallel {
-        thread::scope(|s| {
-            for (sim, slot) in sims.iter().zip(results.iter_mut()) {
-                s.spawn(move || {
-                    *slot = Some(run_with_impact(sim));
-                });
-            }
-        });
-    } else {
-        for (sim, slot) in sims.iter().zip(results.iter_mut()) {
-            *slot = Some(run_with_impact(sim));
-        }
-    }
+    let results: Vec<(RunReport, ImpactSummary)> =
+        run_batch(&sims, &ExecConfig::with_parallel(rc.parallel), |_, sim| run_with_impact(sim));
 
     let budgets: Vec<f64> = site.clusters.iter().map(|c| c.budget_w()).collect();
     // Phase offsets were realized inside each cluster's arrival process
@@ -205,8 +195,7 @@ pub fn run_site(site: &SiteSpec, policy: PolicyKind, rc: &SiteRunConfig) -> Site
     let offsets = vec![0.0; n];
     let mut clusters = Vec::with_capacity(n);
     let mut series = Vec::with_capacity(n);
-    for (i, r) in results.into_iter().enumerate() {
-        let (report, impact) = r.expect("cluster thread completed");
+    for (i, (report, impact)) in results.into_iter().enumerate() {
         series.push(report.power_series.clone());
         clusters.push(ClusterOutcome {
             name: site.clusters[i].name.clone(),

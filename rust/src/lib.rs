@@ -17,7 +17,13 @@
 //!   [`cluster`] (PDU/UPS/BMC hierarchy with the paper's OOB latencies).
 //! * **The contribution** — [`policy`] (POLCA Algorithm 1 + baselines +
 //!   tuner), [`metrics`] (SLO accounting), [`simulation`] (row-level
-//!   cluster simulator, the paper's §6 evaluation vehicle).
+//!   cluster simulator, the paper's §6 evaluation vehicle — a layered
+//!   package: core event loop / servers / control / training / faults /
+//!   accounting, plus the memoized power-scale calibration).
+//! * **Batch execution** — [`exec`]: the parallel scenario executor —
+//!   every multi-run surface (fault matrix, policy and mixed sweeps,
+//!   fleet cluster fan-out) runs its batch through one scoped-thread
+//!   work-stealing pool, bit-identical to the serial reference path.
 //! * **Fleet layer** — [`fleet`] (heterogeneous SKU registry, site
 //!   topology with compositional power traces, parallel multi-cluster
 //!   execution, and the site-level capacity planner behind
@@ -48,6 +54,7 @@ pub mod characterize;
 pub mod cluster;
 pub mod config;
 pub mod coordinator;
+pub mod exec;
 pub mod experiments;
 pub mod faults;
 pub mod fleet;

@@ -4,8 +4,9 @@
 //! every run, see `rust/src/scenario/`):
 //!   run <preset|file.toml> [--quick] [--policy P] [--weeks W]
 //!       [--seed N] [--servers N] [--added FRAC] [--training FRAC]
-//!       [--escalate S]
-//!       Execute one scenario (row simulation or site plan).
+//!       [--escalate S] [--json]
+//!       Execute one scenario (row simulation or site plan); --json
+//!       emits the machine-readable ScenarioReport on stdout.
 //!   scenario list
 //!       Named presets with descriptions.
 //!   scenario show <preset|file>      Print the scenario as TOML.
@@ -25,13 +26,19 @@
 //! Deprecated aliases (each builds a `Scenario` internally; prefer
 //! `polca run`): simulate, mixed [run|sweep], faults
 //! [run|sweep|matrix|plan|list], fleet [plan|sweep|trace].
+//!
+//! Every multi-run path (`faults matrix|sweep`, `mixed sweep`, `tune`,
+//! site planning) fans its batch out through the parallel scenario
+//! executor (`polca::exec`) — bit-identical to serial; pass `--serial`
+//! for the reference path. `faults matrix` also takes `--quick` (the
+//! CI smoke shape) and `--json` (machine-readable MatrixOutcome).
 
 use std::path::{Path, PathBuf};
 
 use polca::config::ExperimentConfig;
 use polca::experiments::{all_ids, run_experiment, Depth};
 use polca::policy::engine::PolicyKind;
-use polca::policy::tuner::tune_thresholds;
+use polca::policy::tuner::tune_thresholds_exec;
 use polca::scenario::{preset, preset_names, presets, Outcome, Scenario};
 use polca::simulation::calibrate;
 use polca::util::cli::Args;
@@ -145,12 +152,18 @@ fn apply_overrides(sc: &mut Scenario, args: &Args) -> anyhow::Result<()> {
 
 /// Validate, announce, execute, and print one scenario — the single
 /// execution path behind `polca run` and every deprecated alias.
-fn run_and_print(sc: &Scenario) -> anyhow::Result<()> {
+/// With `json`, stdout carries exactly one machine-readable document
+/// (the human narration stays on stderr).
+fn run_and_print(sc: &Scenario, json: bool) -> anyhow::Result<()> {
     sc.validate()?;
     eprintln!("{}", sc.describe());
     let t = std::time::Instant::now();
     let mut report = sc.run()?;
     let wall = t.elapsed().as_secs_f64();
+    if json {
+        println!("{}", report.to_json().to_pretty());
+        return Ok(());
+    }
     print!("{}", report.render());
     if let Outcome::Row(row) = &report.outcome {
         println!(
@@ -176,7 +189,7 @@ fn cmd_run(args: &Args) -> anyhow::Result<()> {
         sc = sc.quick();
     }
     apply_overrides(&mut sc, args)?;
-    run_and_print(&sc)
+    run_and_print(&sc, args.flag("json"))
 }
 
 fn list_presets() {
@@ -273,7 +286,7 @@ fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
         sc.exp = ExperimentConfig::load(Path::new(path))?;
     }
     apply_overrides(&mut sc, args)?;
-    run_and_print(&sc)
+    run_and_print(&sc, args.flag("json"))
 }
 
 fn cmd_tune(args: &Args) -> anyhow::Result<()> {
@@ -284,8 +297,13 @@ fn cmd_tune(args: &Args) -> anyhow::Result<()> {
         .sim_config();
     let combos = [(0.75, 0.85), (0.80, 0.89), (0.85, 0.95)];
     let added = [0.0, 0.10, 0.20, 0.25, 0.30, 0.35, 0.40];
-    eprintln!("sweeping {} points ...", combos.len() * added.len());
-    let outcome = tune_thresholds(&base, &combos, &added, &base.exp.slo);
+    let exec = polca::exec::ExecConfig::with_parallel(!args.flag("serial"));
+    eprintln!(
+        "sweeping {} points ({}) ...",
+        combos.len() * added.len(),
+        if exec.parallel { "parallel" } else { "serial" }
+    );
+    let outcome = tune_thresholds_exec(&base, &combos, &added, &base.exp.slo, &exec);
     for p in &outcome.points {
         println!(
             "T1-T2 {:.0}-{:.0} +{:>4.1}% | HP p99 {:>6.2}% LP p99 {:>6.2}% | brakes {} | {}",
@@ -343,7 +361,7 @@ fn cmd_mixed(args: &Args) -> anyhow::Result<()> {
             sc.training.fraction = sc.training.fraction.clamp(0.0, 1.0);
             sc.training.servers_per_job = args.get_usize("servers-per-job", 0);
             sc.training.stagger_s = args.get_f64("stagger", 0.0);
-            run_and_print(&sc)
+            run_and_print(&sc, args.flag("json"))
         }
         "sweep" => {
             let mut sc = SweepConfig::default();
@@ -356,6 +374,7 @@ fn cmd_mixed(args: &Args) -> anyhow::Result<()> {
             args.set_f64("added", &mut sc.added);
             sc.mixed.servers_per_job = args.get_usize("servers-per-job", 0);
             sc.mixed.job_stagger_s = args.get_f64("stagger", 0.0);
+            sc.parallel = !args.flag("serial");
             let step = args.get_usize("step", 25).clamp(1, 100);
             let mut fractions = Vec::new();
             let mut p = 0usize;
@@ -365,10 +384,11 @@ fn cmd_mixed(args: &Args) -> anyhow::Result<()> {
             }
             fractions.push(1.0);
             eprintln!(
-                "sweeping {} training fractions under {} for {:.2} weeks ...",
+                "sweeping {} training fractions under {} for {:.2} weeks ({}) ...",
                 fractions.len(),
                 sc.policy.name(),
-                sc.weeks
+                sc.weeks,
+                if sc.parallel { "parallel" } else { "serial" }
             );
             let points = sweep_training_fractions(&fractions, &sc);
             println!("{}", sweep_table(&points).render());
@@ -424,7 +444,7 @@ fn cmd_faults(args: &Args) -> anyhow::Result<()> {
                 .escalate(120.0)
                 .build();
             apply_overrides(&mut sc, args)?;
-            run_and_print(&sc)?;
+            run_and_print(&sc, args.flag("json"))?;
         }
         "sweep" => {
             let mut mc = MatrixConfig::default();
@@ -438,22 +458,32 @@ fn cmd_faults(args: &Args) -> anyhow::Result<()> {
             let policy = args.policy("polca")?;
             let max_added = args.get_usize("max-added", 40);
             let step = args.get_usize("step", 10).max(1);
+            let exec = polca::exec::ExecConfig::with_parallel(!args.flag("serial"));
             eprintln!(
-                "sweeping added servers under '{scenario}' with {} ...",
-                policy.name()
+                "sweeping added servers under '{scenario}' with {} ({}) ...",
+                policy.name(),
+                if exec.parallel { "parallel" } else { "serial" }
             );
             let mut t = Table::new(
                 "Oversubscription under faults",
                 &["added", "true peak", "viol s", "overshoot W", "ttc", "brakes", "contained"],
             );
+            // Resolve every added level's config up front, then fan the
+            // independent runs out through the scenario executor.
+            let mut levels = Vec::new();
             let mut added = 0usize;
             while added <= max_added {
                 mc.added = added as f64 / 100.0;
                 let plan = FaultPlan::scenario(scenario, mc.horizon_s())?;
-                let report = run(&mc.sim_config(Some(plan), policy));
+                levels.push((mc.added, mc.sim_config(Some(plan), policy)));
+                added += step;
+            }
+            let reports =
+                polca::exec::run_batch(&levels, &exec, |_, (_, cfg)| run(cfg));
+            for ((added_frac, _), report) in levels.iter().zip(&reports) {
                 let r = &report.resilience;
                 t.row(vec![
-                    pct(mc.added, 0),
+                    pct(*added_frac, 0),
                     f(r.true_peak_norm, 3),
                     f(r.violation_s, 1),
                     f(r.peak_overshoot_w, 0),
@@ -461,16 +491,22 @@ fn cmd_faults(args: &Args) -> anyhow::Result<()> {
                     report.brake_events.to_string(),
                     if r.all_contained() { "yes".into() } else { "NO".into() },
                 ]);
-                added += step;
             }
             println!("{}", t.render());
         }
         "matrix" => {
             let mut mc = MatrixConfig::default();
+            // --quick: the CI smoke shape — a small row on a short
+            // horizon; explicit flags below still override it.
+            if args.flag("quick") {
+                mc.weeks = 0.02;
+                mc.servers = 12;
+            }
             args.set_f64("weeks", &mut mc.weeks);
             args.set_u64("seed", &mut mc.seed);
             args.set_usize("servers", &mut mc.servers);
             args.set_f64("added", &mut mc.added);
+            mc.parallel = !args.flag("serial");
             if let Some(secs) = escalate_arg(args)? {
                 mc.escalation_s = Some(secs);
             }
@@ -480,26 +516,31 @@ fn cmd_faults(args: &Args) -> anyhow::Result<()> {
             }
             eprintln!(
                 "fault matrix: {} scenarios × {} policies on {} servers +{:.0}%, \
-                 {:.2} weeks each ...",
+                 {:.2} weeks each ({}) ...",
                 mc.scenarios.len(),
                 mc.policies.len(),
                 mc.servers,
                 mc.added * 100.0,
-                mc.weeks
+                mc.weeks,
+                if mc.parallel { "parallel" } else { "serial" }
             );
             let grid = run_matrix(&mc)?;
-            println!("{}", grid.table().render());
-            println!(
-                "no-fault column == clean run: {} | all scenarios containable: {}",
-                if grid.clean_match { "ok" } else { "VIOLATED" },
-                if grid.scenarios_containable() { "ok" } else { "VIOLATED" }
-            );
+            if args.flag("json") {
+                println!("{}", grid.to_json().to_pretty());
+            } else {
+                println!("{}", grid.table().render());
+                println!(
+                    "no-fault column == clean run: {} | all scenarios containable: {}",
+                    if grid.clean_match { "ok" } else { "VIOLATED" },
+                    if grid.scenarios_containable() { "ok" } else { "VIOLATED" }
+                );
+            }
             if let Some(dir) = args.get("out-dir") {
                 let out_dir = PathBuf::from(dir);
                 std::fs::create_dir_all(&out_dir)?;
                 let path = out_dir.join("fault_matrix.csv");
                 grid.csv().write_to(&path)?;
-                println!("wrote {}", path.display());
+                eprintln!("wrote {}", path.display());
             }
         }
         "plan" => {
@@ -513,7 +554,7 @@ fn cmd_faults(args: &Args) -> anyhow::Result<()> {
                 .escalate(120.0)
                 .build();
             apply_overrides(&mut sc, args)?;
-            run_and_print(&sc)?;
+            run_and_print(&sc, args.flag("json"))?;
         }
         other => anyhow::bail!("unknown faults mode '{other}' (run|sweep|matrix|plan|list)"),
     }

@@ -10,6 +10,7 @@
 
 use crate::cluster::hierarchy::Priority;
 use crate::config::SloConfig;
+use crate::util::json::Json;
 use crate::util::stats::Percentiles;
 
 /// Per-priority accumulators for one run.
@@ -153,6 +154,19 @@ impl ImpactSummary {
     /// Whether every Table 5 SLO holds.
     pub fn meets_slo(&self, slo: &SloConfig) -> bool {
         self.slo_violations(slo).is_empty()
+    }
+
+    /// Machine-readable view (the `polca run --json` impact block).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("hp_p50", Json::Num(self.hp_p50)),
+            ("hp_p99", Json::Num(self.hp_p99)),
+            ("lp_p50", Json::Num(self.lp_p50)),
+            ("lp_p99", Json::Num(self.lp_p99)),
+            ("hp_throughput", Json::Num(self.hp_throughput)),
+            ("lp_throughput", Json::Num(self.lp_throughput)),
+            ("brake_events", Json::Num(self.brake_events as f64)),
+        ])
     }
 }
 
@@ -376,6 +390,73 @@ impl RunReport {
             ));
         }
         s
+    }
+
+    /// Machine-readable view of the run (the `polca run --json` report
+    /// block): the summary-level observables, per-priority counts and
+    /// latency percentiles, training and resilience accounting. `&mut`
+    /// because latency percentiles sort lazily. Non-finite numbers
+    /// (an uncontained incident's time-to-contain) render as JSON null.
+    pub fn to_json(&mut self) -> Json {
+        fn priority_json(p: &mut PriorityMetrics) -> Json {
+            let (p50, p99) = if p.latency.is_empty() {
+                (Json::Null, Json::Null)
+            } else {
+                (Json::Num(p.latency.p50()), Json::Num(p.latency.p99()))
+            };
+            Json::obj(vec![
+                ("completed", Json::Num(p.completed as f64)),
+                ("dropped", Json::Num(p.dropped as f64)),
+                ("tokens_out", Json::Num(p.tokens_out)),
+                ("latency_p50_s", p50),
+                ("latency_p99_s", p99),
+            ])
+        }
+        let hp = priority_json(&mut self.hp);
+        let lp = priority_json(&mut self.lp);
+        let train = Json::obj(vec![
+            ("iters", Json::Num(self.train.iters as f64)),
+            ("mean_iter_s", Json::Num(self.train.mean_iter_s())),
+            ("nominal_iter_s", Json::Num(self.train.nominal_iter_s)),
+            ("inflation", Json::Num(self.train.inflation())),
+        ]);
+        let r = &self.resilience;
+        let incidents = r.incidents.iter().map(|i| {
+            Json::obj(vec![
+                ("label", Json::Str(i.label.clone())),
+                ("start_s", Json::Num(i.start_s)),
+                ("end_s", Json::Num(i.end_s)),
+                ("time_to_contain_s", Json::Num(i.time_to_contain_s)),
+                ("contained", Json::Bool(i.contained())),
+            ])
+        });
+        let resilience = Json::obj(vec![
+            ("violation_s", Json::Num(r.violation_s)),
+            ("overshoot_ws", Json::Num(r.overshoot_ws)),
+            ("peak_overshoot_w", Json::Num(r.peak_overshoot_w)),
+            ("true_peak_norm", Json::Num(r.true_peak_norm)),
+            ("reissued_commands", Json::Num(r.reissued_commands as f64)),
+            ("incidents", Json::arr(incidents)),
+        ]);
+        Json::obj(vec![
+            ("power_peak", Json::Num(self.power_peak)),
+            ("power_p99", Json::Num(self.power_p99)),
+            ("power_mean", Json::Num(self.power_mean)),
+            ("spike_2s", Json::Num(self.spike_2s)),
+            ("spike_5s", Json::Num(self.spike_5s)),
+            ("spike_40s", Json::Num(self.spike_40s)),
+            ("brake_events", Json::Num(self.brake_events as f64)),
+            ("brake_commands", Json::Num(self.brake_commands as f64)),
+            ("cap_commands", Json::Num(self.cap_commands as f64)),
+            ("uncap_commands", Json::Num(self.uncap_commands as f64)),
+            ("brake_time_s", Json::Num(self.brake_time_s)),
+            ("duration_s", Json::Num(self.duration_s)),
+            ("events", Json::Num(self.events as f64)),
+            ("hp", hp),
+            ("lp", lp),
+            ("train", train),
+            ("resilience", resilience),
+        ])
     }
 }
 

@@ -7,6 +7,7 @@
 //! traces when the fleet's models change.
 
 use crate::config::SloConfig;
+use crate::exec::{run_batch, ExecConfig};
 use crate::policy::engine::PolicyKind;
 use crate::simulation::{run_with_impact, SimConfig};
 
@@ -72,21 +73,38 @@ pub fn evaluate_point(
 
 /// Sweep (T1,T2) combos × added-server levels (the Fig 13 grid); return
 /// every point plus the best SLO-meeting configuration (max added).
+/// Grid points are independent paired simulations, so they fan out
+/// through the parallel scenario executor by default.
 pub fn tune_thresholds(
     base: &SimConfig,
     combos: &[(f64, f64)],
     added_fracs: &[f64],
     slo: &SloConfig,
 ) -> TunerOutcome {
-    let mut points = Vec::new();
+    tune_thresholds_exec(base, combos, added_fracs, slo, &ExecConfig::default())
+}
+
+/// [`tune_thresholds`] with an explicit executor configuration (the
+/// `polca tune --serial` reference path). The best-point selection
+/// scans the collected grid in sweep order, so the verdict is
+/// bit-identical regardless of scheduling.
+pub fn tune_thresholds_exec(
+    base: &SimConfig,
+    combos: &[(f64, f64)],
+    added_fracs: &[f64],
+    slo: &SloConfig,
+    exec: &ExecConfig,
+) -> TunerOutcome {
+    let grid: Vec<(f64, f64, f64)> = combos
+        .iter()
+        .flat_map(|&(t1, t2)| added_fracs.iter().map(move |&a| (t1, t2, a)))
+        .collect();
+    let points =
+        run_batch(&grid, exec, |_, &(t1, t2, added)| evaluate_point(base, t1, t2, added, slo));
     let mut best: Option<(f64, f64, f64)> = None;
-    for &(t1, t2) in combos {
-        for &added in added_fracs {
-            let p = evaluate_point(base, t1, t2, added, slo);
-            if p.meets_slo && best.map(|(_, _, a)| added > a).unwrap_or(true) {
-                best = Some((t1, t2, added));
-            }
-            points.push(p);
+    for p in &points {
+        if p.meets_slo && best.map(|(_, _, a)| p.added_frac > a).unwrap_or(true) {
+            best = Some((p.t1, p.t2, p.added_frac));
         }
     }
     TunerOutcome { points, best }
@@ -126,5 +144,17 @@ mod tests {
         assert!(out.best.is_some());
         let (_, _, added) = out.best.unwrap();
         assert!(added >= 0.0);
+    }
+
+    #[test]
+    fn parallel_sweep_is_bit_identical_to_serial() {
+        let base = quick_base();
+        let combos = [(0.80, 0.89)];
+        let added = [0.0, 0.25];
+        let slo = SloConfig::default();
+        let par = tune_thresholds_exec(&base, &combos, &added, &slo, &ExecConfig::default());
+        let ser = tune_thresholds_exec(&base, &combos, &added, &slo, &ExecConfig::serial());
+        assert_eq!(format!("{:?}", par.points), format!("{:?}", ser.points));
+        assert_eq!(par.best, ser.best);
     }
 }

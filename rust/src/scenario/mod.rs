@@ -485,6 +485,69 @@ pub struct ScenarioReport {
 }
 
 impl ScenarioReport {
+    /// Machine-readable view (the `polca run --json` output): one JSON
+    /// document per run so scripts consume results without scraping the
+    /// rendered tables. Row scenarios carry the full simulation report,
+    /// the impact-vs-baseline block, and the Table-5 verdict; site
+    /// scenarios carry the capacity plan (and the fault-derated plan
+    /// when the scenario injected faults). `&mut` because latency
+    /// percentiles sort lazily.
+    pub fn to_json(&mut self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        fn plan_json(p: &PolicyPlan) -> Json {
+            Json::obj(vec![
+                ("policy", Json::Str(p.policy.name().to_string())),
+                ("feasible", Json::Bool(p.feasible)),
+                ("added_pct", Json::Num(p.added_pct as f64)),
+                ("baseline_servers", Json::Num(p.baseline_servers as f64)),
+                ("deployable_servers", Json::Num(p.deployable_servers as f64)),
+                ("site_peak_w", Json::Num(p.site_peak_w)),
+                ("substation_budget_w", Json::Num(p.substation_budget_w)),
+                ("headroom_frac", Json::Num(p.headroom_frac)),
+                ("brake_events", Json::Num(p.brake_events as f64)),
+                ("cap_events_per_day", Json::Num(p.cap_events_per_day)),
+                ("worst_hp_p99", Json::Num(p.worst_hp_p99)),
+                ("worst_lp_p99", Json::Num(p.worst_lp_p99)),
+            ])
+        }
+        let outcome = match &mut self.outcome {
+            Outcome::Row(row) => Json::obj(vec![
+                ("kind", Json::Str("row".to_string())),
+                ("report", row.report.to_json()),
+                ("impact", row.impact.to_json()),
+                ("slo_ok", Json::Bool(row.slo_violations.is_empty())),
+                (
+                    "slo_violations",
+                    Json::arr(row.slo_violations.iter().map(|v| Json::Str(v.clone()))),
+                ),
+            ]),
+            Outcome::Site(site) => {
+                let mut pairs = vec![
+                    ("kind", Json::Str("site".to_string())),
+                    ("plan", plan_json(&site.plan)),
+                ];
+                if let Some(d) = &site.derated {
+                    pairs.push((
+                        "derated",
+                        Json::obj(vec![
+                            ("feasible", Json::Bool(d.feasible)),
+                            ("derated_added_pct", Json::Num(d.derated_added_pct as f64)),
+                            ("derated_servers", Json::Num(d.derated_servers as f64)),
+                            ("worst_violation_s", Json::Num(d.worst_violation_s)),
+                            (
+                                "worst_time_to_contain_s",
+                                Json::Num(d.worst_time_to_contain_s),
+                            ),
+                            ("worst_overshoot_frac", Json::Num(d.worst_overshoot_frac)),
+                        ]),
+                    ));
+                }
+                Json::obj(pairs)
+            }
+        };
+        Json::obj(vec![("name", Json::Str(self.name.clone())), ("outcome", outcome)])
+    }
+
     /// Render the human-readable report (the `polca run` output).
     /// `&mut` because latency percentiles sort lazily.
     pub fn render(&mut self) -> String {

@@ -1,0 +1,98 @@
+//! Accounting layer: the energy accumulator and run bookkeeping.
+//!
+//! Owns the [`RunReport`] under construction and the exact energy
+//! integral behind it. Two distinct views of row power are settled
+//! here, deliberately kept apart:
+//!
+//! * **What the meter reports** (`Sim::averaged_row_power`): real PDU
+//!   meters report power averaged over the sampling period, not
+//!   instantaneous draw — sub-second prompt-spike alignments are
+//!   smoothed by the meter (and are harmless physically: the UPS
+//!   tolerates 133% load for 10 s, §4.E). Table 2's spike statistics
+//!   are computed on these averaged readings, and a meter-bias fault
+//!   corrupts exactly this view.
+//! * **Ground truth** (`Sim::settle_energy`): power is constant over
+//!   each settled segment, so the budget-violation accounting
+//!   ([`crate::metrics::ResilienceMetrics`]) is exact, not sampled —
+//!   and independent of what the possibly-lying meter says.
+
+use crate::metrics::RunReport;
+
+use super::core::Sim;
+
+/// Energy accumulator, settlement clocks, and the report being built.
+pub(crate) struct Accounting {
+    /// Energy accumulator for window-averaged PDU readings, watt-seconds.
+    pub(crate) energy_acc_ws: f64,
+    pub(crate) last_power_change_s: f64,
+    pub(crate) last_telemetry_s: f64,
+    pub(crate) report: RunReport,
+}
+
+impl Accounting {
+    pub(crate) fn new() -> Accounting {
+        Accounting {
+            energy_acc_ws: 0.0,
+            last_power_change_s: 0.0,
+            last_telemetry_s: 0.0,
+            report: RunReport::default(),
+        }
+    }
+}
+
+impl<'a> Sim<'a> {
+    /// Settle the energy accumulator up to the current event time (must
+    /// run before any change to the row power or to the effective
+    /// budget). Power is constant over the settled segment, so the
+    /// ground-truth violation accounting here is exact, not sampled —
+    /// and independent of what the (possibly miscalibrated) meter says.
+    pub(crate) fn settle_energy(&mut self) {
+        let dt = (self.core.now_s - self.acct.last_power_change_s).max(0.0);
+        if dt > 0.0 {
+            self.acct.energy_acc_ws += self.servers.row_power_w * dt;
+            let scaled_w = self.cfg.power_scale * self.servers.row_power_w;
+            let budget_eff_w = self.servers.row.budget_w * self.faults.budget_mult;
+            let r = &mut self.acct.report.resilience;
+            r.true_peak_norm = r.true_peak_norm.max(scaled_w / budget_eff_w);
+            if scaled_w > budget_eff_w {
+                r.violation_s += dt;
+                r.overshoot_ws += (scaled_w - budget_eff_w) * dt;
+                r.peak_overshoot_w = r.peak_overshoot_w.max(scaled_w - budget_eff_w);
+                if let Some(i) = self.faults.cur_incident {
+                    self.faults.incident_last_violation[i] = Some(self.core.now_s);
+                }
+            } else if let Some(i) = self.faults.cur_incident {
+                // The row is back under budget: once the incident's
+                // episode is over, stop attributing to it — later
+                // violations (e.g. natural diurnal excursions hours
+                // after the fault) are not this incident's tail. A
+                // violation straddling the episode end keeps
+                // attributing until it is actually contained.
+                if self.core.now_s >= self.faults.events[i].end_s() {
+                    self.faults.cur_incident = None;
+                }
+            }
+        }
+        self.acct.last_power_change_s = self.core.now_s;
+    }
+
+    /// Window-averaged normalized power since the last telemetry sample —
+    /// what the PDU meter actually *reports*: scaled by any active meter
+    /// miscalibration and normalized against the effective budget (a
+    /// feed loss raises the manager-visible fraction because the manager
+    /// knows the budget shrank).
+    pub(crate) fn averaged_row_power(&mut self) -> f64 {
+        self.settle_energy();
+        let window = (self.core.now_s - self.acct.last_telemetry_s).max(1e-9);
+        let avg_w = self.acct.energy_acc_ws / window;
+        self.acct.energy_acc_ws = 0.0;
+        self.acct.last_telemetry_s = self.core.now_s;
+        self.faults.meter_bias * self.cfg.power_scale * avg_w
+            / (self.servers.row.budget_w * self.faults.budget_mult)
+    }
+
+    /// Instantaneous normalized row power (the power-series sample).
+    pub(crate) fn normalized_row_power(&self) -> f64 {
+        self.cfg.power_scale * self.servers.row_power_w / self.servers.row.budget_w
+    }
+}

@@ -1,0 +1,199 @@
+//! Row-power calibration: fitting `power_scale` and the memoized
+//! per-row-size cache behind [`power_scale_for_row`].
+//!
+//! The analytic single-request server model understates the sustained
+//! draw of production serving (continuous batching, co-located
+//! services), so a scalar `power_scale` is fitted once so the *base*
+//! row (no oversubscription, no capping) peaks at the published
+//! Table-2 inference utilization (79%) — the same trace-replication
+//! step the paper performs in §6.1. Small rows multiplex fewer prompt
+//! spikes, so their relative variance is higher and the fitted scale
+//! is smaller; the fit is therefore keyed by the row's baseline server
+//! count.
+//!
+//! Fitting means running a full calibration simulation, and sweep
+//! loops (fleet planning, the fault matrix, scenario batches) ask for
+//! the same row sizes over and over — so the fits live in a small
+//! seeded cache: the three row sizes every in-tree surface uses (40,
+//! 16, 12) are pre-seeded with the pinned published fits (keeping
+//! every existing output bit-identical and free), and any novel size
+//! triggers exactly one deterministic calibration run, memoized for
+//! the rest of the process ([`calibration_runs`] counts them; a unit
+//! test pins "one calibration per distinct row size").
+//!
+//! Deliberate behavior change vs the pre-ISSUE-5 band table (which
+//! mapped *every* size to one of the three constants): a non-anchor
+//! size like 20 now gets a real fit instead of borrowing the
+//! 16-server constant. The first lookup announces itself on stderr
+//! and costs one one-day simulation; an explicit `power_scale` on the
+//! scenario/config bypasses the fit entirely.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Mutex, OnceLock};
+
+use crate::policy::engine::PolicyKind;
+
+use super::{run, SimConfig};
+
+/// Fitted once via [`calibrate`] with the default config; pins the base
+/// 40-server row's diurnal peak at the Table-2 inference utilization
+/// (≈0.79).
+pub const DEFAULT_POWER_SCALE: f64 = 1.74;
+
+/// The Table-2 inference peak every row-size fit targets.
+const CALIB_TARGET_PEAK: f64 = 0.79;
+/// Horizon of one calibration run: one simulated day — exactly one
+/// full diurnal cycle, so the peak is observed at the lowest cost.
+const CALIB_WEEKS: f64 = 1.0 / 7.0;
+/// Fixed seed of the calibration workload realization — the cache is
+/// *seeded*: a given row size always fits the same scale, in any
+/// process, on any thread.
+const CALIB_SEED: u64 = 0xCA11_B5EE_D;
+
+/// How many calibration simulations this process has run (cache
+/// misses). Pre-seeded fits and repeated lookups never increment it —
+/// the memoization test pins exactly one run per distinct row size.
+static CALIBRATION_RUNS: AtomicUsize = AtomicUsize::new(0);
+
+/// Calibration simulations run so far in this process (a diagnostics /
+/// test hook for the [`power_scale_for_row`] memo cache).
+pub fn calibration_runs() -> usize {
+    CALIBRATION_RUNS.load(Ordering::SeqCst)
+}
+
+/// Test hook: the cached fit for a row size, if any. A present key can
+/// never be re-fit (fits happen only on a miss, under the cache lock),
+/// which is what the memoization test asserts on — immune to other
+/// tests concurrently fitting *other* sizes.
+#[cfg(test)]
+fn cached_fit(baseline_servers: usize) -> Option<f64> {
+    cache().lock().expect("calibration cache poisoned").get(&baseline_servers).copied()
+}
+
+fn cache() -> &'static Mutex<HashMap<usize, f64>> {
+    static CACHE: OnceLock<Mutex<HashMap<usize, f64>>> = OnceLock::new();
+    CACHE.get_or_init(|| {
+        // The pinned fits, produced by the same procedure as
+        // `fit_power_scale` and frozen so the paper row (40), the
+        // fleet/matrix rows (16), and the quick-test rows (12) stay
+        // bit-identical across releases without re-running the fit.
+        Mutex::new(HashMap::from([(40, DEFAULT_POWER_SCALE), (16, 1.45), (12, 1.35)]))
+    })
+}
+
+/// One full calibration simulation for a row of `baseline_servers`:
+/// the base row (no oversubscription), power manager disconnected,
+/// `power_scale = 1.0`; the fitted scale is the ratio that would have
+/// pinned the observed peak at the Table-2 target.
+fn fit_power_scale(baseline_servers: usize) -> f64 {
+    CALIBRATION_RUNS.fetch_add(1, Ordering::SeqCst);
+    // Announce the one-time cost: this is a full one-day simulation,
+    // not a table lookup, and a CLI user who picked a novel row size
+    // deserves to know why the first run pauses (set an explicit
+    // `power_scale` in the scenario to skip the fit entirely).
+    eprintln!(
+        "calibrating power_scale for {baseline_servers}-server rows \
+         (one-time simulation of one day; cached afterwards) ..."
+    );
+    let mut cfg = SimConfig {
+        policy_kind: PolicyKind::NoCap,
+        deployed_servers: baseline_servers,
+        weeks: CALIB_WEEKS,
+        power_scale: 1.0,
+        ..Default::default()
+    };
+    cfg.exp.row.num_servers = baseline_servers;
+    cfg.exp.seed = CALIB_SEED;
+    let report = run(&cfg);
+    if report.power_peak > 0.0 {
+        CALIB_TARGET_PEAK / report.power_peak
+    } else {
+        DEFAULT_POWER_SCALE // degenerate row (no load observed): keep the default fit
+    }
+}
+
+/// The row-size-appropriate power calibration, memoized: pre-seeded
+/// pinned fits for the standard row sizes, one deterministic
+/// calibration simulation (then cached) for any other size. Shared by
+/// the scenario layer, the fleet layer, and the fault matrix so every
+/// surface calibrates identically.
+pub fn power_scale_for_row(baseline_servers: usize) -> f64 {
+    let mut cache = cache().lock().expect("calibration cache poisoned");
+    if let Some(&scale) = cache.get(&baseline_servers) {
+        return scale;
+    }
+    // Deliberately fitted under the lock: concurrent first lookups of
+    // one novel size must still produce exactly one calibration run.
+    let scale = fit_power_scale(baseline_servers);
+    cache.insert(baseline_servers, scale);
+    scale
+}
+
+/// Fit `power_scale` so the base row (baseline servers, no capping)
+/// peaks at `target_peak` (Table 2 inference: 0.79). Returns the scale.
+pub fn calibrate(target_peak: f64, weeks: f64, seed: u64) -> f64 {
+    let mut cfg = SimConfig {
+        policy_kind: PolicyKind::NoCap,
+        weeks,
+        power_scale: 1.0,
+        ..Default::default()
+    };
+    cfg.exp.seed = seed;
+    let report = run(&cfg);
+    target_peak / report.power_peak
+}
+
+/// The telemetry-visible power series of a run (for trace MAPE checks).
+pub fn power_series_of(cfg: &SimConfig) -> Vec<(f64, f64)> {
+    let mut c = cfg.clone();
+    c.series_sample_s = if c.series_sample_s > 0.0 { c.series_sample_s } else { 60.0 };
+    run(&c).power_series
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pinned_fits_cost_no_calibration_run() {
+        let before = calibration_runs();
+        assert_eq!(power_scale_for_row(40), DEFAULT_POWER_SCALE);
+        assert_eq!(power_scale_for_row(16), 1.45);
+        assert_eq!(power_scale_for_row(12), 1.35);
+        // Other tests may calibrate novel sizes concurrently, so assert
+        // on this thread's contribution only: the pinned lookups above
+        // never fit.
+        assert!(
+            calibration_runs() >= before,
+            "counter is monotone: {before} -> {}",
+            calibration_runs()
+        );
+        assert_eq!(power_scale_for_row(40), DEFAULT_POWER_SCALE, "lookup is idempotent");
+    }
+
+    #[test]
+    fn novel_row_size_calibrates_exactly_once() {
+        // 11 servers is used by no other surface or test, so this test
+        // owns the key — assertions are on the per-key cache state, not
+        // on exact global-counter deltas (other tests may legitimately
+        // fit *other* sizes concurrently).
+        assert!(cached_fit(11).is_none(), "size 11 must be novel to this test binary");
+        let before = calibration_runs();
+        let first = power_scale_for_row(11);
+        assert!(calibration_runs() > before, "a novel size must run a calibration");
+        assert_eq!(cached_fit(11), Some(first), "the fit is memoized under its key");
+        // Fits happen only on a cache miss, under the cache lock, so a
+        // present key can never be re-fit: this lookup is a pure hit.
+        let second = power_scale_for_row(11);
+        assert_eq!(first, second, "memoized fit must be stable");
+        assert_eq!(cached_fit(11), Some(first));
+        // A small row multiplexes fewer spikes than the 40-server row,
+        // so its fitted scale is materially smaller than the default —
+        // and any fit far outside the published band is a regression.
+        assert!(
+            (0.8..=DEFAULT_POWER_SCALE).contains(&first),
+            "11-server fit {first} outside the plausible band"
+        );
+    }
+}

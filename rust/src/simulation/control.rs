@@ -1,0 +1,220 @@
+//! Control layer: telemetry → policy engine → OOB actuation.
+//!
+//! Owns the closed loop the paper builds in §4/§5: the PDU
+//! [`TelemetryBuffer`] (2 s visibility delay, window-averaged meter
+//! readings), the [`PolicyEngine`] (Algorithm 1 and the baselines), the
+//! [`OobChannel`] with the Table-1 latencies (slow-path frequency caps
+//! ~40 s, fast-path powerbrake ~5 s), and the rack manager's delivery
+//! state — last *acknowledged* cap per priority class plus the re-issue
+//! clocks behind the idempotent retry loop (`Sim::reconcile_oob`).
+//!
+//! The row-wide powerbrake lives here too (`Sim::set_brake`): it is
+//! control-plane actuation (a BMC hardware signal), even though its
+//! effect fans out across every server in [`super::servers`].
+
+use crate::cluster::hierarchy::Priority;
+use crate::cluster::oob::{OobChannel, OobCommand};
+use crate::cluster::telemetry::TelemetryBuffer;
+use crate::policy::engine::{Action, PolicyEngine};
+use crate::sim::secs;
+
+use super::core::{Ev, Sim};
+use super::SimConfig;
+
+/// Whether a slow-path command addresses the given priority class.
+pub(crate) fn targets(cmd: &OobCommand, p: Priority) -> bool {
+    match cmd {
+        OobCommand::FreqCap { target, .. } | OobCommand::Uncap { target } => *target == p,
+        OobCommand::PowerBrake | OobCommand::ReleaseBrake => false,
+    }
+}
+
+/// Telemetry, policy, OOB transport, and rack-manager delivery state.
+pub(crate) struct ControlLayer {
+    pub(crate) policy: PolicyEngine,
+    pub(crate) oob: OobChannel,
+    pub(crate) telemetry: TelemetryBuffer,
+    pub(crate) braked: bool,
+    pub(crate) brake_engaged_at: f64,
+    /// Last slow-path cap state *acknowledged* per priority class (what
+    /// the rack manager believes is applied; cap-ignoring servers ack
+    /// without applying, so reconciliation cannot see them).
+    pub(crate) acked_lp: Option<f64>,
+    pub(crate) acked_hp: Option<f64>,
+    /// Last attempt times per class, for the re-issue timeout.
+    pub(crate) lp_last_issue_s: f64,
+    pub(crate) hp_last_issue_s: f64,
+}
+
+impl ControlLayer {
+    pub(crate) fn new(cfg: &SimConfig) -> ControlLayer {
+        let mut policy = PolicyEngine::new(cfg.policy_kind, cfg.exp.policy.clone());
+        policy.escalate_to_brake_after_s = cfg.brake_escalation_s;
+        let oob = OobChannel::new(
+            cfg.exp.row.oob_latency_s,
+            cfg.exp.row.power_brake_latency_s,
+            cfg.exp.seed ^ 0xBEEF,
+        )
+        .with_unreliability(cfg.oob_loss_prob, cfg.oob_jitter_frac);
+        let telemetry = TelemetryBuffer::new(
+            cfg.exp.row.telemetry_delay_s,
+            cfg.weeks * 7.0 * 86_400.0 + 1.0, // retain everything for Table 2 stats
+        );
+        ControlLayer {
+            policy,
+            oob,
+            telemetry,
+            braked: false,
+            brake_engaged_at: 0.0,
+            acked_lp: None,
+            acked_hp: None,
+            lp_last_issue_s: f64::NEG_INFINITY,
+            hp_last_issue_s: f64::NEG_INFINITY,
+        }
+    }
+}
+
+impl<'a> Sim<'a> {
+    pub(crate) fn set_brake(&mut self, on: bool, now_s: f64) {
+        if self.control.braked == on {
+            return;
+        }
+        // Advance all running work at the old ratios first.
+        for idx in 0..self.servers.states.len() {
+            self.advance_work(idx, now_s);
+        }
+        self.control.braked = on;
+        if on {
+            self.control.brake_engaged_at = now_s;
+        } else {
+            self.acct.report.brake_time_s += now_s - self.control.brake_engaged_at;
+        }
+        for idx in 0..self.servers.states.len() {
+            self.servers.states[idx].gen = self.servers.states[idx].gen.wrapping_add(1);
+            self.refresh_power(idx);
+            self.schedule_phase_end(idx, now_s);
+        }
+    }
+
+    pub(crate) fn on_telemetry(&mut self, now_s: f64) {
+        self.core.queue.schedule_in(secs(self.cfg.exp.row.telemetry_period_s), Ev::Telemetry);
+        let p = self.averaged_row_power();
+        if now_s == 0.0 {
+            return; // no averaging window yet — first real sample comes next tick
+        }
+        self.control.telemetry.record(now_s, p);
+        if !self.cfg.protection {
+            return;
+        }
+        let Some((_, visible)) = self.control.telemetry.visible_at(now_s) else {
+            return;
+        };
+        let actions = self.control.policy.tick(now_s, visible);
+        for act in actions {
+            let cmd = match act {
+                Action::CapLp { mhz } => OobCommand::FreqCap { target: Priority::Low, mhz },
+                Action::CapHp { mhz } => OobCommand::FreqCap { target: Priority::High, mhz },
+                Action::UncapLp => OobCommand::Uncap { target: Priority::Low },
+                Action::UncapHp => OobCommand::Uncap { target: Priority::High },
+                Action::Brake => OobCommand::PowerBrake,
+                Action::ReleaseBrake => OobCommand::ReleaseBrake,
+            };
+            self.issue_cmd(now_s, cmd);
+        }
+        self.reconcile_oob(now_s);
+    }
+
+    /// Issue one command through the OOB channel, recording the attempt
+    /// time per class (the re-issue timeout clock).
+    pub(crate) fn issue_cmd(&mut self, now_s: f64, cmd: OobCommand) {
+        match cmd {
+            OobCommand::FreqCap { target: Priority::Low, .. }
+            | OobCommand::Uncap { target: Priority::Low } => self.control.lp_last_issue_s = now_s,
+            OobCommand::FreqCap { target: Priority::High, .. }
+            | OobCommand::Uncap { target: Priority::High } => self.control.hp_last_issue_s = now_s,
+            OobCommand::PowerBrake | OobCommand::ReleaseBrake => {}
+        }
+        if let Some(apply_at) = self.control.oob.issue(now_s, cmd) {
+            self.core.queue.schedule_at(secs(apply_at), Ev::OobApply);
+        }
+    }
+
+    /// Re-issue slow-path commands that were *lost* (never acknowledged)
+    /// once the apply timeout has elapsed — the idempotent-retry loop a
+    /// real rack manager runs over SMBPBI. Commands that were
+    /// acknowledged are never re-issued, so a cap-ignoring server (acks,
+    /// does not apply) is invisible here; containing it is the policy
+    /// engine's escalation job, not the transport's.
+    pub(crate) fn reconcile_oob(&mut self, now_s: f64) {
+        let timeout = self.cfg.exp.row.oob_latency_s * 1.5 + self.cfg.exp.row.telemetry_period_s;
+        let intent = self.control.policy.intent();
+        if intent.lp_cap_mhz != self.control.acked_lp
+            && now_s - self.control.lp_last_issue_s > timeout
+            && !self.control.oob.has_pending(|c| targets(c, Priority::Low))
+        {
+            self.acct.report.resilience.reissued_commands += 1;
+            let cmd = match intent.lp_cap_mhz {
+                Some(mhz) => OobCommand::FreqCap { target: Priority::Low, mhz },
+                None => OobCommand::Uncap { target: Priority::Low },
+            };
+            self.issue_cmd(now_s, cmd);
+        }
+        if intent.hp_cap_mhz != self.control.acked_hp
+            && now_s - self.control.hp_last_issue_s > timeout
+            && !self.control.oob.has_pending(|c| targets(c, Priority::High))
+        {
+            self.acct.report.resilience.reissued_commands += 1;
+            let cmd = match intent.hp_cap_mhz {
+                Some(mhz) => OobCommand::FreqCap { target: Priority::High, mhz },
+                None => OobCommand::Uncap { target: Priority::High },
+            };
+            self.issue_cmd(now_s, cmd);
+        }
+    }
+
+    pub(crate) fn on_oob_apply(&mut self, now_s: f64) {
+        for pending in self.control.oob.due(now_s) {
+            match pending.cmd {
+                OobCommand::FreqCap { target, mhz } => {
+                    self.acct.report.cap_commands += 1;
+                    self.ack(target, Some(mhz));
+                    for idx in 0..self.servers.states.len() {
+                        // Cap-ignoring servers acknowledge (the ack is
+                        // recorded above) but do not change frequency.
+                        if self.servers.states[idx].priority == target
+                            && !self.faults.cap_ignore[idx]
+                        {
+                            self.set_server_cap(idx, Some(mhz), now_s);
+                        }
+                    }
+                }
+                OobCommand::Uncap { target } => {
+                    self.acct.report.uncap_commands += 1;
+                    self.ack(target, None);
+                    for idx in 0..self.servers.states.len() {
+                        if self.servers.states[idx].priority == target
+                            && !self.faults.cap_ignore[idx]
+                        {
+                            self.set_server_cap(idx, None, now_s);
+                        }
+                    }
+                }
+                // The brake is a hardware signal below the wedged
+                // firmware: cap-ignoring servers obey it too.
+                OobCommand::PowerBrake => {
+                    self.acct.report.brake_commands += 1;
+                    self.set_brake(true, now_s);
+                }
+                OobCommand::ReleaseBrake => self.set_brake(false, now_s),
+            }
+        }
+    }
+
+    /// Record a delivered (acknowledged) slow-path cap state per class.
+    pub(crate) fn ack(&mut self, target: Priority, cap: Option<f64>) {
+        match target {
+            Priority::Low => self.control.acked_lp = cap,
+            Priority::High => self.control.acked_hp = cap,
+        }
+    }
+}

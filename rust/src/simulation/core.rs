@@ -1,0 +1,192 @@
+//! Core layer: the discrete event loop over [`crate::sim::EventQueue`].
+//!
+//! Owns the event vocabulary (`Ev`), simulated time and the run
+//! horizon, and the `Sim` composition itself: the simulator is
+//! nothing but the five domain layers wired to one queue, with this
+//! module's loop popping events and dispatching each to the layer that
+//! owns it ([`super::servers`], [`super::control`],
+//! [`super::training`], [`super::faults`]) while
+//! [`super::accounting`] settles energy across every transition.
+//!
+//! Determinism contract: the queue orders ties by insertion sequence,
+//! every random stream is forked once at construction in a fixed order
+//! (see `ServerLayer::new` in [`super::servers`]), and `now_s` is set
+//! from the popped event time before any handler runs — so a config +
+//! seed pins the entire run bit-for-bit, which is what lets
+//! [`crate::exec`] fan scenario batches out across threads without
+//! changing a single reported number.
+
+use crate::cluster::hierarchy::JobKind;
+use crate::metrics::RunReport;
+use crate::sim::{secs, to_secs, EventQueue, SimTime};
+
+use super::accounting::Accounting;
+use super::control::ControlLayer;
+use super::faults::FaultLayer;
+use super::servers::ServerLayer;
+use super::training::TrainingLayer;
+use super::SimConfig;
+
+/// The simulator's event vocabulary. Every variant is owned by exactly
+/// one layer; the loop in [`Sim::run`] is pure dispatch.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub(crate) enum Ev {
+    /// A request arrives at a server.
+    Arrival { server: u32 },
+    /// The current phase of the server's in-flight request completes
+    /// (valid only if `gen` matches the server's generation counter).
+    PhaseEnd { server: u32, gen: u32 },
+    /// PDU sample + policy tick.
+    Telemetry,
+    /// An OOB command becomes effective.
+    OobApply,
+    /// A training job begins its first iteration (staggered job starts).
+    TrainStart { job: u32 },
+    /// A training job's current waveform phase ends (valid only if `gen`
+    /// matches the job's generation counter).
+    TrainPhase { job: u32, gen: u32 },
+    /// Record a point of the downsampled power series.
+    SampleSeries,
+    /// A scheduled fault episode begins (index into the run's fault plan).
+    FaultStart { fault: u32 },
+    /// A scheduled fault episode ends (degraded state is restored).
+    FaultEnd { fault: u32 },
+    End,
+}
+
+/// Event-loop state: the queue, the horizon, and simulation "now".
+pub(crate) struct Core {
+    pub(crate) queue: EventQueue<Ev>,
+    pub(crate) horizon: SimTime,
+    /// Simulation "now" (set by the event loop before each handler), so
+    /// power changes can settle the energy accumulator.
+    pub(crate) now_s: f64,
+}
+
+impl Core {
+    pub(crate) fn new(cfg: &SimConfig) -> Core {
+        Core {
+            queue: EventQueue::with_capacity(1024),
+            horizon: secs(cfg.weeks * 7.0 * 86_400.0),
+            now_s: 0.0,
+        }
+    }
+}
+
+/// The row simulator: a composition of the extracted layers. Every
+/// field is one layer with an explicit boundary; cross-layer effects go
+/// through `Sim` methods defined in the layer that owns the state they
+/// mutate.
+pub(crate) struct Sim<'a> {
+    pub(crate) cfg: &'a SimConfig,
+    pub(crate) core: Core,
+    pub(crate) servers: ServerLayer,
+    pub(crate) control: ControlLayer,
+    pub(crate) training: TrainingLayer,
+    pub(crate) faults: FaultLayer,
+    pub(crate) acct: Accounting,
+}
+
+/// Run one simulation; returns the report (the [`super::run`] entry).
+pub(crate) fn run_sim(cfg: &SimConfig) -> RunReport {
+    Sim::new(cfg).run()
+}
+
+impl<'a> Sim<'a> {
+    /// Assemble the layers. Construction order is fixed: the server
+    /// layer first (it owns every random stream), then the RNG-free
+    /// layers in any order — kept explicit here so the bit-identity
+    /// contract survives future edits.
+    pub(crate) fn new(cfg: &'a SimConfig) -> Self {
+        let servers = ServerLayer::new(cfg);
+        let training = TrainingLayer::new(cfg, &servers.row);
+        let control = ControlLayer::new(cfg);
+        let faults = FaultLayer::new(cfg, servers.states.len());
+        let mut acct = Accounting::new();
+        if !training.jobs.is_empty() {
+            acct.report.train.nominal_iter_s =
+                cfg.mixed.as_ref().map(|m| m.profile.iter_time_s).unwrap_or(0.0);
+        }
+        Sim { cfg, core: Core::new(cfg), servers, control, training, faults, acct }
+    }
+
+    // ---- main loop -------------------------------------------------------
+
+    pub(crate) fn run(mut self) -> RunReport {
+        // Initial power state.
+        for idx in 0..self.servers.states.len() {
+            self.refresh_power(idx);
+        }
+        // Seed events. Training servers take no request arrivals: their
+        // load is the iteration waveform, driven by TrainStart below.
+        for idx in 0..self.servers.states.len() {
+            if self.servers.states[idx].kind == JobKind::Training {
+                continue;
+            }
+            let t = self.servers.states[idx].arrivals.next_after(0.0);
+            self.core.queue.schedule_at(secs(t), Ev::Arrival { server: idx as u32 });
+        }
+        for j in 0..self.training.jobs.len() {
+            let start = self.training.jobs[j].start_s;
+            self.core.queue.schedule_at(secs(start), Ev::TrainStart { job: j as u32 });
+        }
+        self.core.queue.schedule_at(0, Ev::Telemetry);
+        if self.cfg.series_sample_s > 0.0 {
+            self.core.queue.schedule_at(0, Ev::SampleSeries);
+        }
+        // Fault timeline: an empty plan schedules nothing, keeping the
+        // run bit-identical to one with no plan at all.
+        for i in 0..self.faults.events.len() {
+            let f = self.faults.events[i];
+            self.core.queue.schedule_at(secs(f.start_s), Ev::FaultStart { fault: i as u32 });
+            self.core.queue.schedule_at(secs(f.end_s()), Ev::FaultEnd { fault: i as u32 });
+        }
+        let horizon = self.core.horizon;
+        self.core.queue.schedule_at(horizon, Ev::End);
+
+        while let Some((t, ev)) = self.core.queue.pop() {
+            let now_s = to_secs(t);
+            self.core.now_s = now_s;
+            match ev {
+                Ev::Arrival { server } => self.on_arrival(server as usize, now_s),
+                Ev::PhaseEnd { server, gen } => self.on_phase_end(server as usize, gen, now_s),
+                Ev::Telemetry => self.on_telemetry(now_s),
+                Ev::OobApply => self.on_oob_apply(now_s),
+                Ev::TrainStart { job } => self.start_train_iteration(job as usize, now_s),
+                Ev::TrainPhase { job, gen } => self.on_train_phase(job as usize, gen, now_s),
+                Ev::SampleSeries => {
+                    let p = self.normalized_row_power();
+                    self.acct.report.power_series.push((now_s, p));
+                    self.core.queue.schedule_in(secs(self.cfg.series_sample_s), Ev::SampleSeries);
+                }
+                Ev::FaultStart { fault } => self.on_fault_start(fault as usize, now_s),
+                Ev::FaultEnd { fault } => self.on_fault_end(fault as usize, now_s),
+                Ev::End => break,
+            }
+            if t >= horizon {
+                break;
+            }
+        }
+
+        // Finalize. Close the last ground-truth accounting segment at
+        // the horizon, then score the injected incidents.
+        self.core.now_s = to_secs(horizon);
+        self.settle_energy();
+        self.finalize_incidents();
+        if self.control.braked {
+            self.acct.report.brake_time_s += to_secs(horizon) - self.control.brake_engaged_at;
+        }
+        self.acct.report.brake_events = self.control.policy.brake_events;
+        self.acct.report.duration_s = to_secs(horizon);
+        self.acct.report.events = self.core.queue.popped();
+        let (peak, p99, mean) = self.control.telemetry.utilization();
+        self.acct.report.power_peak = peak;
+        self.acct.report.power_p99 = p99;
+        self.acct.report.power_mean = mean;
+        let spikes = self.control.telemetry.spike_stats(&[2.0, 5.0, 40.0]);
+        self.acct.report.spike_2s = spikes[0].max_rise;
+        self.acct.report.spike_5s = spikes[1].max_rise;
+        self.acct.report.spike_40s = spikes[2].max_rise;
+        self.acct.report
+    }
+}

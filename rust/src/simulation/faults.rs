@@ -1,0 +1,140 @@
+//! Fault layer: the episode overlay over the control plane.
+//!
+//! Owns the run's injected [`FaultEvent`] timeline and the degraded
+//! state it toggles: meter miscalibration (reported readings lie),
+//! feed-loss budget cuts (the effective budget shrinks), cap-ignoring
+//! servers (ack without applying; only the brake contains them), and
+//! the incident-attribution bookkeeping that scores each episode's
+//! time-to-contain at finalize. All of it is inert when the config
+//! carries no plan — an empty overlay is bit-identical to no overlay
+//! (a tested invariant, see [`crate::faults`]).
+//!
+//! Telemetry freezes and OOB storms have no state here: their episode
+//! toggles degrade the control layer's transport objects directly
+//! (`Sim::on_fault_start` / `Sim::on_fault_end`).
+
+use crate::faults::{FaultEvent, FaultKind};
+use crate::metrics::IncidentOutcome;
+
+use super::core::Sim;
+use super::SimConfig;
+
+/// Injected episodes plus the degraded-state overlay they control.
+pub(crate) struct FaultLayer {
+    /// The run's fault episodes, sorted by start time.
+    pub(crate) events: Vec<FaultEvent>,
+    /// Multiplicative bias on reported (not true) power readings.
+    pub(crate) meter_bias: f64,
+    /// Effective-budget fraction (feed loss cuts it below 1.0).
+    pub(crate) budget_mult: f64,
+    /// Servers currently acknowledging-but-ignoring cap commands.
+    pub(crate) cap_ignore: Vec<bool>,
+    /// Most recently started fault episode (violations attribute to it).
+    pub(crate) cur_incident: Option<usize>,
+    /// Per-episode: last instant the row was observed over budget.
+    pub(crate) incident_last_violation: Vec<Option<f64>>,
+}
+
+impl FaultLayer {
+    pub(crate) fn new(cfg: &SimConfig, n_servers: usize) -> FaultLayer {
+        let events = cfg
+            .faults
+            .as_ref()
+            .map(|p| p.normalized().expect("invalid fault plan"))
+            .unwrap_or_default();
+        let n_faults = events.len();
+        FaultLayer {
+            events,
+            meter_bias: 1.0,
+            budget_mult: 1.0,
+            cap_ignore: vec![false; n_servers],
+            cur_incident: None,
+            incident_last_violation: vec![None; n_faults],
+        }
+    }
+}
+
+impl<'a> Sim<'a> {
+    /// A fault episode begins: degrade the corresponding control-plane
+    /// link. Violations from here on attribute to this incident.
+    pub(crate) fn on_fault_start(&mut self, i: usize, now_s: f64) {
+        self.faults.cur_incident = Some(i);
+        let ev = self.faults.events[i];
+        match ev.kind {
+            FaultKind::TelemetryFreeze => self.control.telemetry.freeze(now_s, ev.end_s()),
+            FaultKind::OobStorm { loss_prob, latency_mult, jitter_frac } => {
+                self.control.oob.set_unreliability(loss_prob, jitter_frac);
+                self.control.oob.set_latency_mult(latency_mult);
+            }
+            FaultKind::CapIgnore { server_frac } => {
+                let n = ((server_frac * self.servers.states.len() as f64).ceil() as usize)
+                    .min(self.servers.states.len());
+                for idx in 0..n {
+                    self.faults.cap_ignore[idx] = true;
+                }
+            }
+            FaultKind::MeterBias { mult } => self.faults.meter_bias = mult,
+            FaultKind::FeedLoss { budget_frac } => {
+                // Close the accounting segment under the old budget
+                // before the effective budget changes.
+                self.settle_energy();
+                self.faults.budget_mult = budget_frac.max(1e-6);
+            }
+        }
+    }
+
+    /// A fault episode ends: restore the baseline control plane.
+    pub(crate) fn on_fault_end(&mut self, i: usize, now_s: f64) {
+        let ev = self.faults.events[i];
+        match ev.kind {
+            // The freeze window expires by itself inside the buffer.
+            FaultKind::TelemetryFreeze => {}
+            FaultKind::OobStorm { .. } => {
+                self.control
+                    .oob
+                    .set_unreliability(self.cfg.oob_loss_prob, self.cfg.oob_jitter_frac);
+                self.control.oob.set_latency_mult(1.0);
+            }
+            FaultKind::CapIgnore { .. } => {
+                // The wedged firmware recovers and drains its queue:
+                // converge every affected server to the last
+                // acknowledged cap state of its class.
+                for idx in 0..self.servers.states.len() {
+                    if !self.faults.cap_ignore[idx] {
+                        continue;
+                    }
+                    self.faults.cap_ignore[idx] = false;
+                    let cap = match self.servers.states[idx].priority {
+                        crate::cluster::hierarchy::Priority::Low => self.control.acked_lp,
+                        crate::cluster::hierarchy::Priority::High => self.control.acked_hp,
+                    };
+                    self.set_server_cap(idx, cap, now_s);
+                }
+            }
+            FaultKind::MeterBias { .. } => self.faults.meter_bias = 1.0,
+            FaultKind::FeedLoss { .. } => {
+                self.settle_energy();
+                self.faults.budget_mult = 1.0;
+            }
+        }
+    }
+
+    /// Per-incident containment outcomes, written at finalize.
+    pub(crate) fn finalize_incidents(&mut self) {
+        let scaled_w = self.cfg.power_scale * self.servers.row_power_w;
+        let still_violating = scaled_w > self.servers.row.budget_w * self.faults.budget_mult;
+        for (i, f) in self.faults.events.iter().enumerate() {
+            let time_to_contain_s = match self.faults.incident_last_violation[i] {
+                None => 0.0,
+                Some(_) if still_violating && self.faults.cur_incident == Some(i) => f64::INFINITY,
+                Some(last) => (last - f.start_s).max(0.0),
+            };
+            self.acct.report.resilience.incidents.push(IncidentOutcome {
+                label: f.kind.label().to_string(),
+                start_s: f.start_s,
+                end_s: f.end_s(),
+                time_to_contain_s,
+            });
+        }
+    }
+}

@@ -13,92 +13,68 @@
 //!   * OOB cap commands with 40 s latency, powerbrake with 5 s (Table 1),
 //!   * the powerbrake backstop when real power exceeds the breaker.
 //!
-//! Power calibration: the analytic single-request server model
-//! understates the sustained draw of production serving (continuous
-//! batching, co-located services), so a scalar `power_scale` is fitted
-//! once so the *base* row (no oversubscription, no capping) peaks at the
-//! published Table-2 inference utilization (79%) — the same
-//! trace-replication step the paper performs in §6.1.
+//! # Layers
+//!
+//! The simulator is a composition of six layers, each in its own
+//! module with an explicit boundary (state it owns, `Sim` methods that
+//! mutate it):
+//!
+//! | layer          | owns                                                        |
+//! |----------------|-------------------------------------------------------------|
+//! | [`core`](self::core) | event vocabulary, queue, horizon, the dispatch loop   |
+//! | [`servers`]    | row provisioning, per-server state, request lifecycle       |
+//! | [`control`]    | telemetry → policy → OOB issue/ack/reconcile, the brake     |
+//! | [`training`]   | the mixed-row phase driver ([`MixedRowConfig`], §2.4/§7)    |
+//! | [`faults`]     | episode overlay: meter bias, budget cuts, cap-ignore        |
+//! | [`accounting`] | energy accumulator, [`crate::metrics::RunReport`] bookkeeping |
+//!
+//! [`calib`] carries the row-power calibration (`power_scale`) and its
+//! memoized per-row-size cache. This module re-exports the public API;
+//! golden tests (`tests/golden_simulation.rs`) pin the layered
+//! composition bit-identical to the pre-split monolith at the same
+//! seed, and batch surfaces fan runs out through [`crate::exec`].
+//!
+//! # Power calibration
+//!
+//! The analytic single-request server model understates the sustained
+//! draw of production serving, so a scalar `power_scale` is fitted once
+//! so the *base* row peaks at the published Table-2 inference
+//! utilization (79%) — see [`calib`] for the fit and the cache.
 //!
 //! # Mixed-workload rows (§2.4 / §7)
 //!
 //! A [`MixedRowConfig`] colocates synchronized training jobs with the
-//! inference services: the last `training_fraction` of the deployed
-//! servers run the [`TrainingProfile`] waveform instead of serving
-//! requests. Training jobs advance on the same event queue — one event
-//! per waveform phase per *job*, so every server of a job switches
-//! phase at the same instant and the row-level swings coordinate
-//! exactly as the paper observes. Training is always low-priority
-//! cappable ([`crate::cluster::hierarchy::JobKind::fixed_priority`]);
-//! frequency caps change training power immediately and stretch the
-//! *next* iteration's compute-bound fraction (gradient-sync barriers
-//! quantize the timing effect at iteration granularity), reported as
-//! iteration-time inflation ([`crate::metrics::TrainingMetrics`])
-//! rather than request latency. The `power_scale` calibration is an
-//! inference-serving artifact, so training wattage is kept absolute by
-//! dividing it out per server (the row aggregate multiplies it back).
+//! inference services — see [`training`] for the phase-driver contract
+//! (caps change power immediately, stretch the *next* iteration).
 //!
 //! # Fault injection (§6/§7 robustness)
 //!
 //! A [`crate::faults::FaultPlan`] on [`SimConfig::faults`] interleaves
-//! control-plane fault episodes with the workload: telemetry dropouts
-//! (the manager reads stale), OOB loss bursts and latency storms,
-//! cap-ignoring servers (ack without applying — only the brake path
-//! contains them), meter miscalibration, and feed-loss budget cuts.
-//! Ground-truth budget-violation accounting
-//! ([`crate::metrics::ResilienceMetrics`]) is settled exactly on every
-//! power change, independent of what the possibly-lying meter reports;
-//! docs/RELIABILITY.md is the runbook mapping each fault to its knob,
-//! detection metric, and expected policy response.
+//! control-plane fault episodes with the workload — see [`faults`];
+//! ground-truth violation accounting is settled exactly on every power
+//! change in [`accounting`], independent of what the possibly-lying
+//! meter reports. docs/RELIABILITY.md is the runbook.
 
-use crate::characterize::catalog::{self, ModelSpec};
-use crate::cluster::hierarchy::{JobKind, Priority, Row};
-use crate::cluster::oob::{OobChannel, OobCommand};
-use crate::cluster::telemetry::TelemetryBuffer;
+pub mod accounting;
+pub mod calib;
+pub mod control;
+pub mod core;
+pub mod faults;
+pub mod servers;
+pub mod training;
+
+#[cfg(test)]
+mod tests;
+
+pub use calib::{
+    calibrate, calibration_runs, power_scale_for_row, power_series_of, DEFAULT_POWER_SCALE,
+};
+pub use training::MixedRowConfig;
+
 use crate::config::ExperimentConfig;
-use crate::faults::{FaultEvent, FaultKind, FaultPlan};
-use crate::metrics::{IncidentOutcome, RunReport};
-use crate::perfmodel::{ExecPhase, RequestExec};
-use crate::policy::engine::{Action, PolicyEngine, PolicyKind};
-use crate::power::gpu::{CapMode, Phase};
-use crate::power::training::{TrainingPowerModel, TrainingProfile};
-use crate::sim::{secs, to_secs, EventQueue, SimTime};
-use crate::util::rng::Rng;
-use crate::workload::arrivals::ArrivalProcess;
-use crate::workload::spec::{assign_servers, sample_request, WorkloadSpec};
-
-/// Mixed-row parameters: colocate synchronized training jobs with the
-/// inference services (§2.4 contrast, §7 mixing direction).
-#[derive(Debug, Clone)]
-pub struct MixedRowConfig {
-    /// Fraction of the *deployed* servers running training (0.0 = pure
-    /// inference, 1.0 = pure training row). The training servers are
-    /// carved deterministically off the tail of the row so every
-    /// fraction shares one inference workload realization (see
-    /// [`crate::workload::spec::mark_training`]).
-    pub training_fraction: f64,
-    /// Servers per synchronized job; 0 means one job spans every
-    /// training server (the paper's large-job worst case, maximally
-    /// coordinated row swings).
-    pub servers_per_job: usize,
-    /// Offset between consecutive jobs' start times, seconds. Staggered
-    /// jobs de-align their synchronization troughs, shrinking the
-    /// row-level swing — the §7 lever an operator controls.
-    pub job_stagger_s: f64,
-    /// Iteration waveform every job runs.
-    pub profile: TrainingProfile,
-}
-
-impl Default for MixedRowConfig {
-    fn default() -> Self {
-        MixedRowConfig {
-            training_fraction: 0.0,
-            servers_per_job: 0,
-            job_stagger_s: 0.0,
-            profile: TrainingProfile::large_llm(),
-        }
-    }
-}
+use crate::faults::FaultPlan;
+use crate::metrics::RunReport;
+use crate::policy::engine::PolicyKind;
 
 /// Simulation parameters for one run.
 #[derive(Debug, Clone)]
@@ -116,7 +92,7 @@ pub struct SimConfig {
     pub model_name: String,
     /// Override the global LP share (Fig 15b sweep).
     pub lp_fraction_override: Option<f64>,
-    /// Row-power calibration factor (see module docs / [`calibrate`]).
+    /// Row-power calibration factor (see [`calib`]).
     pub power_scale: f64,
     /// Multiplier on per-workload power (Fig 17 "+5%" robustness study).
     pub workload_power_mult: f64,
@@ -197,1302 +173,15 @@ impl SimConfig {
     }
 }
 
+/// Run one simulation; returns the report.
+pub fn run(cfg: &SimConfig) -> RunReport {
+    self::core::run_sim(cfg)
+}
+
 /// Run a policy config and its paired baseline; return (report, impact).
 pub fn run_with_impact(cfg: &SimConfig) -> (RunReport, crate::metrics::ImpactSummary) {
     let mut report = run(cfg);
     let mut base = run(&cfg.baseline());
     let impact = report.impact_vs(&mut base);
     (report, impact)
-}
-
-/// Fitted once via [`calibrate`] with the default config; pins the base
-/// row's diurnal peak at the Table-2 inference utilization (≈0.79).
-pub const DEFAULT_POWER_SCALE: f64 = 1.74;
-
-/// The row-size-appropriate power calibration: small rows multiplex
-/// fewer prompt spikes, so their relative variance is higher and the
-/// fitted scale is smaller (see the module docs; shared by the fleet
-/// layer and the fault matrix so every surface calibrates identically).
-pub fn power_scale_for_row(baseline_servers: usize) -> f64 {
-    if baseline_servers >= 40 {
-        DEFAULT_POWER_SCALE
-    } else if baseline_servers >= 16 {
-        1.45
-    } else {
-        1.35
-    }
-}
-
-#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
-enum Ev {
-    /// A request arrives at a server.
-    Arrival { server: u32 },
-    /// The current phase of the server's in-flight request completes
-    /// (valid only if `gen` matches the server's generation counter).
-    PhaseEnd { server: u32, gen: u32 },
-    /// PDU sample + policy tick.
-    Telemetry,
-    /// An OOB command becomes effective.
-    OobApply,
-    /// A training job begins its first iteration (staggered job starts).
-    TrainStart { job: u32 },
-    /// A training job's current waveform phase ends (valid only if `gen`
-    /// matches the job's generation counter).
-    TrainPhase { job: u32, gen: u32 },
-    /// Record a point of the downsampled power series.
-    SampleSeries,
-    /// A scheduled fault episode begins (index into the run's fault plan).
-    FaultStart { fault: u32 },
-    /// A scheduled fault episode ends (degraded state is restored).
-    FaultEnd { fault: u32 },
-    End,
-}
-
-#[derive(Debug, Clone)]
-struct InFlight {
-    exec: RequestExec,
-    arrived_s: f64,
-    priority: Priority,
-}
-
-#[derive(Debug, Clone)]
-struct QueuedReq {
-    input: f64,
-    output: f64,
-    arrived_s: f64,
-}
-
-struct ServerState {
-    priority: Priority,
-    kind: JobKind,
-    workload_idx: usize,
-    freq_cap_mhz: Option<f64>,
-    current: Option<InFlight>,
-    queued: Option<QueuedReq>,
-    arrivals: ArrivalProcess,
-    rng: Rng,
-    /// Generation counter invalidating stale PhaseEnd events.
-    gen: u32,
-    /// Time work was last advanced (for mid-flight cap changes).
-    last_advance_s: f64,
-    /// Current power draw in watts (cached for incremental row sum).
-    power_w: f64,
-    /// Training servers only: the nominal GPU power fraction of the
-    /// job's current waveform phase (idle before the job starts).
-    train_level: f64,
-}
-
-/// One synchronized training job: every member server switches waveform
-/// phase on the same event, so row-level swings coordinate (§2.4).
-struct TrainJob {
-    /// Indices into `Sim::servers`.
-    servers: Vec<usize>,
-    model: TrainingPowerModel,
-    /// Job start time (staggered per job).
-    start_s: f64,
-    /// Generation counter invalidating stale TrainPhase events.
-    gen: u32,
-    /// Current phase index into `TrainingProfile::phase_levels`.
-    phase_idx: usize,
-    iter_started_s: f64,
-    /// Wall time of the in-flight iteration (stretched by the cap that
-    /// was active when it started).
-    iter_wall_s: f64,
-}
-
-/// Run one simulation; returns the report.
-pub fn run(cfg: &SimConfig) -> RunReport {
-    Sim::new(cfg).run()
-}
-
-/// Whether a slow-path command addresses the given priority class.
-fn targets(cmd: &OobCommand, p: Priority) -> bool {
-    match cmd {
-        OobCommand::FreqCap { target, .. } | OobCommand::Uncap { target } => *target == p,
-        OobCommand::PowerBrake | OobCommand::ReleaseBrake => false,
-    }
-}
-
-struct Sim<'a> {
-    cfg: &'a SimConfig,
-    model: ModelSpec,
-    specs: Vec<WorkloadSpec>,
-    row: Row,
-    servers: Vec<ServerState>,
-    train_jobs: Vec<TrainJob>,
-    queue: EventQueue<Ev>,
-    policy: PolicyEngine,
-    oob: OobChannel,
-    telemetry: TelemetryBuffer,
-    braked: bool,
-    brake_engaged_at: f64,
-    row_power_w: f64,
-    /// Energy accumulator for window-averaged PDU readings: real PDU
-    /// meters report power averaged over the sampling period, not
-    /// instantaneous draw — sub-second prompt-spike alignments are
-    /// smoothed by the meter (and are harmless physically: the UPS
-    /// tolerates 133% load for 10 s, §4.E). Table 2's spike statistics
-    /// are computed on these averaged readings.
-    energy_acc_ws: f64,
-    last_power_change_s: f64,
-    last_telemetry_s: f64,
-    /// Simulation "now" (set by the event loop before each handler), so
-    /// power changes can settle the energy accumulator.
-    now_s: f64,
-    report: RunReport,
-    horizon: SimTime,
-    // -- fault-injection state (all inert when `cfg.faults` is empty) --
-    /// The run's fault episodes, sorted by start time.
-    fault_events: Vec<FaultEvent>,
-    /// Multiplicative bias on reported (not true) power readings.
-    meter_bias: f64,
-    /// Effective-budget fraction (feed loss cuts it below 1.0).
-    budget_mult: f64,
-    /// Servers currently acknowledging-but-ignoring cap commands.
-    cap_ignore: Vec<bool>,
-    /// Last slow-path cap state *acknowledged* per priority class (what
-    /// the rack manager believes is applied; cap-ignoring servers ack
-    /// without applying, so reconciliation cannot see them).
-    acked_lp: Option<f64>,
-    acked_hp: Option<f64>,
-    /// Last attempt times per class, for the re-issue timeout.
-    lp_last_issue_s: f64,
-    hp_last_issue_s: f64,
-    /// Most recently started fault episode (violations attribute to it).
-    cur_incident: Option<usize>,
-    /// Per-episode: last instant the row was observed over budget.
-    incident_last_violation: Vec<Option<f64>>,
-}
-
-impl<'a> Sim<'a> {
-    fn new(cfg: &'a SimConfig) -> Self {
-        let mut model = catalog::find(&cfg.model_name).expect("model not in catalog");
-        // Fig 17 robustness knob: workloads draw more than profiled.
-        if cfg.workload_power_mult != 1.0 {
-            model.power.prompt_peak_at_256 *= cfg.workload_power_mult;
-            model.power.prompt_peak_at_8192 *= cfg.workload_power_mult;
-            model.power.token_mean_at_b1 *= cfg.workload_power_mult;
-            model.power.token_mean_at_b16 *= cfg.workload_power_mult;
-        }
-        // Fleet SKU knob: faster silicon shifts the latency anchors.
-        if cfg.perf_mult != 1.0 {
-            model.prompt_tokens_per_s *= cfg.perf_mult;
-            model.decode_tokens_per_s *= cfg.perf_mult;
-        }
-        let mut power_model = cfg.server_model.clone().unwrap_or_else(|| {
-            crate::power::server::ServerPowerModel { calib: model.power, ..Default::default() }
-        });
-        // An explicit server model carries its own calibration, so the
-        // Fig-17 robustness multiplier must be applied to it directly
-        // (the scaling above only touched the catalog-derived default).
-        if cfg.server_model.is_some() && cfg.workload_power_mult != 1.0 {
-            let c = &mut power_model.calib;
-            c.prompt_peak_at_256 *= cfg.workload_power_mult;
-            c.prompt_peak_at_8192 *= cfg.workload_power_mult;
-            c.token_mean_at_b1 *= cfg.workload_power_mult;
-            c.token_mean_at_b16 *= cfg.workload_power_mult;
-        }
-        let mut root_rng = Rng::new(cfg.exp.seed ^ 0x9E3779B97F4A7C15);
-        let mut row = Row::provision(cfg.exp.row.num_servers, cfg.deployed_servers, power_model);
-        let specs = crate::workload::spec::table4();
-        assign_servers(&mut row, &specs, 0, cfg.lp_fraction_override, &mut root_rng);
-        // Mixed rows: carve training servers off the tail AFTER the
-        // inference assignment, so every training fraction consumes the
-        // identical random stream (0% is bit-identical to `mixed: None`,
-        // and sweeps interpolate on one fixed workload realization).
-        let train_count = cfg
-            .mixed
-            .as_ref()
-            .map(|m| {
-                ((m.training_fraction * row.servers.len() as f64).round() as usize)
-                    .min(row.servers.len())
-            })
-            .unwrap_or(0);
-        if train_count > 0 {
-            crate::workload::spec::mark_training(&mut row, train_count);
-        }
-
-        // Per-workload peak arrival rate from the target utilization:
-        // rate = utilization / E[nominal service time of that workload].
-        let mut mean_service: Vec<f64> = Vec::new();
-        let mut est_rng = root_rng.fork(77);
-        for spec in &specs {
-            let mut acc = 0.0;
-            let n = 400;
-            for _ in 0..n {
-                let (i, o) = sample_request(spec, &mut est_rng);
-                acc += model.request_latency_s(i, o, 1.0, 1.0);
-            }
-            mean_service.push(acc / n as f64);
-        }
-
-        let idle_frac = row.power_model.calib.idle_frac;
-        let servers = row
-            .servers
-            .iter()
-            .map(|s| {
-                let rate = cfg.peak_utilization / mean_service[s.workload_idx];
-                ServerState {
-                    priority: s.priority,
-                    kind: s.job,
-                    workload_idx: s.workload_idx,
-                    freq_cap_mhz: None,
-                    current: None,
-                    queued: None,
-                    arrivals: ArrivalProcess::new(rate, root_rng.fork(1000 + s.id as u64))
-                        .with_phase(cfg.diurnal_phase_s),
-                    rng: root_rng.fork(2000 + s.id as u64),
-                    gen: 0,
-                    last_advance_s: 0.0,
-                    power_w: 0.0,
-                    train_level: idle_frac,
-                }
-            })
-            .collect();
-
-        // One synchronized job per `servers_per_job` chunk of the
-        // training tail; 0 = a single row-spanning job (§2.4's
-        // large-job worst case).
-        let mut train_jobs = Vec::new();
-        if let Some(m) = &cfg.mixed {
-            let train_idxs: Vec<usize> = row
-                .servers
-                .iter()
-                .enumerate()
-                .filter(|(_, s)| s.job == JobKind::Training)
-                .map(|(i, _)| i)
-                .collect();
-            if !train_idxs.is_empty() {
-                let per =
-                    if m.servers_per_job == 0 { train_idxs.len() } else { m.servers_per_job };
-                for (j, chunk) in train_idxs.chunks(per.max(1)).enumerate() {
-                    train_jobs.push(TrainJob {
-                        servers: chunk.to_vec(),
-                        model: TrainingPowerModel::with_calib(m.profile, row.power_model.calib),
-                        start_s: j as f64 * m.job_stagger_s.max(0.0),
-                        gen: 0,
-                        phase_idx: 0,
-                        iter_started_s: 0.0,
-                        iter_wall_s: m.profile.iter_time_s,
-                    });
-                }
-            }
-        }
-        let mut report = RunReport::default();
-        if !train_jobs.is_empty() {
-            report.train.nominal_iter_s =
-                cfg.mixed.as_ref().map(|m| m.profile.iter_time_s).unwrap_or(0.0);
-        }
-
-        let mut policy = PolicyEngine::new(cfg.policy_kind, cfg.exp.policy.clone());
-        policy.escalate_to_brake_after_s = cfg.brake_escalation_s;
-        let fault_events = cfg
-            .faults
-            .as_ref()
-            .map(|p| p.normalized().expect("invalid fault plan"))
-            .unwrap_or_default();
-        let oob = OobChannel::new(
-            cfg.exp.row.oob_latency_s,
-            cfg.exp.row.power_brake_latency_s,
-            cfg.exp.seed ^ 0xBEEF,
-        )
-        .with_unreliability(cfg.oob_loss_prob, cfg.oob_jitter_frac);
-        let horizon = secs(cfg.weeks * 7.0 * 86_400.0);
-        let telemetry = TelemetryBuffer::new(
-            cfg.exp.row.telemetry_delay_s,
-            cfg.weeks * 7.0 * 86_400.0 + 1.0, // retain everything for Table 2 stats
-        );
-
-        let n_servers = servers.len();
-        let n_faults = fault_events.len();
-        Sim {
-            cfg,
-            model,
-            specs,
-            row,
-            servers,
-            train_jobs,
-            queue: EventQueue::with_capacity(1024),
-            policy,
-            oob,
-            telemetry,
-            braked: false,
-            brake_engaged_at: 0.0,
-            row_power_w: 0.0,
-            energy_acc_ws: 0.0,
-            last_power_change_s: 0.0,
-            last_telemetry_s: 0.0,
-            now_s: 0.0,
-            report,
-            horizon,
-            fault_events,
-            meter_bias: 1.0,
-            budget_mult: 1.0,
-            cap_ignore: vec![false; n_servers],
-            acked_lp: None,
-            acked_hp: None,
-            lp_last_issue_s: f64::NEG_INFINITY,
-            hp_last_issue_s: f64::NEG_INFINITY,
-            cur_incident: None,
-            incident_last_violation: vec![None; n_faults],
-        }
-    }
-
-    // ---- power bookkeeping ------------------------------------------------
-
-    fn freq_ratio(&self, idx: usize) -> f64 {
-        if self.braked {
-            return self.cfg.exp.policy.brake_freq_mhz / self.cfg.exp.policy.max_freq_mhz;
-        }
-        match self.servers[idx].freq_cap_mhz {
-            Some(mhz) => mhz / self.cfg.exp.policy.max_freq_mhz,
-            None => 1.0,
-        }
-    }
-
-    fn cap_mode(&self, idx: usize) -> CapMode {
-        if self.braked {
-            CapMode::FreqCap { mhz: self.cfg.exp.policy.brake_freq_mhz }
-        } else {
-            match self.servers[idx].freq_cap_mhz {
-                Some(mhz) => CapMode::FreqCap { mhz },
-                None => CapMode::None,
-            }
-        }
-    }
-
-    fn server_phase(&self, idx: usize) -> Phase {
-        match &self.servers[idx].current {
-            None => Phase::Idle,
-            Some(inf) => match inf.exec.phase() {
-                ExecPhase::Prompt => Phase::Prompt { total_input: inf.exec.input * inf.exec.batch },
-                ExecPhase::Token | ExecPhase::Done => Phase::Token { batch: inf.exec.batch },
-            },
-        }
-    }
-
-    /// Settle the energy accumulator up to the current event time (must
-    /// run before any change to `row_power_w` or to the effective
-    /// budget). Power is constant over the settled segment, so the
-    /// ground-truth violation accounting here is exact, not sampled —
-    /// and independent of what the (possibly miscalibrated) meter says.
-    fn settle_energy(&mut self) {
-        let dt = (self.now_s - self.last_power_change_s).max(0.0);
-        if dt > 0.0 {
-            self.energy_acc_ws += self.row_power_w * dt;
-            let scaled_w = self.cfg.power_scale * self.row_power_w;
-            let budget_eff_w = self.row.budget_w * self.budget_mult;
-            let r = &mut self.report.resilience;
-            r.true_peak_norm = r.true_peak_norm.max(scaled_w / budget_eff_w);
-            if scaled_w > budget_eff_w {
-                r.violation_s += dt;
-                r.overshoot_ws += (scaled_w - budget_eff_w) * dt;
-                r.peak_overshoot_w = r.peak_overshoot_w.max(scaled_w - budget_eff_w);
-                if let Some(i) = self.cur_incident {
-                    self.incident_last_violation[i] = Some(self.now_s);
-                }
-            } else if let Some(i) = self.cur_incident {
-                // The row is back under budget: once the incident's
-                // episode is over, stop attributing to it — later
-                // violations (e.g. natural diurnal excursions hours
-                // after the fault) are not this incident's tail. A
-                // violation straddling the episode end keeps
-                // attributing until it is actually contained.
-                if self.now_s >= self.fault_events[i].end_s() {
-                    self.cur_incident = None;
-                }
-            }
-        }
-        self.last_power_change_s = self.now_s;
-    }
-
-    /// Training server wall power in watts: the job's current waveform
-    /// level under this server's cap, through the shared server model.
-    fn training_server_w(&self, idx: usize) -> f64 {
-        let cap = self.cap_mode(idx);
-        let nominal = self.servers[idx].train_level;
-        let frac = self.row.power_model.calib.capped_level(nominal, cap);
-        self.row.power_model.training_power_w(frac)
-    }
-
-    /// Recompute one server's power and update the row aggregate.
-    fn refresh_power(&mut self, idx: usize) {
-        self.settle_energy();
-        let w = match self.servers[idx].kind {
-            JobKind::Inference => {
-                let phase = self.server_phase(idx);
-                let cap = self.cap_mode(idx);
-                self.row.power_model.server_power_w(phase, cap, false)
-            }
-            // Training power is absolute (the §2.4 waveform drives the
-            // GPUs directly); `power_scale` is an inference-serving
-            // calibration, so divide it out here — the row aggregate
-            // multiplies it back in `normalized_row_power`.
-            JobKind::Training => self.training_server_w(idx) / self.cfg.power_scale,
-        };
-        let s = &mut self.servers[idx];
-        self.row_power_w += w - s.power_w;
-        s.power_w = w;
-    }
-
-    /// Window-averaged normalized power since the last telemetry sample —
-    /// what the PDU meter actually *reports*: scaled by any active meter
-    /// miscalibration and normalized against the effective budget (a
-    /// feed loss raises the manager-visible fraction because the manager
-    /// knows the budget shrank).
-    fn averaged_row_power(&mut self) -> f64 {
-        self.settle_energy();
-        let window = (self.now_s - self.last_telemetry_s).max(1e-9);
-        let avg_w = self.energy_acc_ws / window;
-        self.energy_acc_ws = 0.0;
-        self.last_telemetry_s = self.now_s;
-        self.meter_bias * self.cfg.power_scale * avg_w / (self.row.budget_w * self.budget_mult)
-    }
-
-    fn normalized_row_power(&self) -> f64 {
-        self.cfg.power_scale * self.row_power_w / self.row.budget_w
-    }
-
-    // ---- request lifecycle --------------------------------------------
-
-    fn start_request(&mut self, idx: usize, input: f64, output: f64, arrived_s: f64, now_s: f64) {
-        let exec = RequestExec::new(&self.model, input, output, 1.0);
-        self.servers[idx].current = Some(InFlight {
-            exec,
-            arrived_s,
-            priority: self.servers[idx].priority,
-        });
-        self.servers[idx].last_advance_s = now_s;
-        self.servers[idx].gen = self.servers[idx].gen.wrapping_add(1);
-        self.refresh_power(idx);
-        self.schedule_phase_end(idx, now_s);
-    }
-
-    fn schedule_phase_end(&mut self, idx: usize, now_s: f64) {
-        let ratio = self.freq_ratio(idx);
-        let wall = match &self.servers[idx].current {
-            Some(inf) if inf.exec.phase() != ExecPhase::Done => {
-                inf.exec.wall_to_phase_end(&self.model, ratio)
-            }
-            _ => return,
-        };
-        let gen = self.servers[idx].gen;
-        // +1 µs guard: `secs` rounds to integer microseconds, which can
-        // land *before* the true phase end and loop the event at the same
-        // timestamp. Overshooting by a microsecond guarantees progress.
-        self.queue.schedule_at(secs(now_s + wall) + 1, Ev::PhaseEnd { server: idx as u32, gen });
-    }
-
-    /// Advance the in-flight request's work to `now` at the *current*
-    /// ratio (call BEFORE changing the ratio).
-    fn advance_work(&mut self, idx: usize, now_s: f64) {
-        let ratio = self.freq_ratio(idx);
-        let last = self.servers[idx].last_advance_s;
-        if let Some(inf) = &mut self.servers[idx].current {
-            let dt = (now_s - last).max(0.0);
-            if dt > 0.0 {
-                inf.exec.advance(&self.model, ratio, dt);
-            }
-        }
-        self.servers[idx].last_advance_s = now_s;
-    }
-
-    /// Apply a frequency change to one server (work-conserving).
-    fn set_server_cap(&mut self, idx: usize, cap: Option<f64>, now_s: f64) {
-        if self.servers[idx].freq_cap_mhz == cap {
-            return;
-        }
-        self.advance_work(idx, now_s);
-        self.servers[idx].freq_cap_mhz = cap;
-        self.servers[idx].gen = self.servers[idx].gen.wrapping_add(1);
-        self.refresh_power(idx);
-        self.schedule_phase_end(idx, now_s);
-    }
-
-    fn set_brake(&mut self, on: bool, now_s: f64) {
-        if self.braked == on {
-            return;
-        }
-        // Advance all running work at the old ratios first.
-        for idx in 0..self.servers.len() {
-            self.advance_work(idx, now_s);
-        }
-        self.braked = on;
-        if on {
-            self.brake_engaged_at = now_s;
-        } else {
-            self.report.brake_time_s += now_s - self.brake_engaged_at;
-        }
-        for idx in 0..self.servers.len() {
-            self.servers[idx].gen = self.servers[idx].gen.wrapping_add(1);
-            self.refresh_power(idx);
-            self.schedule_phase_end(idx, now_s);
-        }
-    }
-
-    // ---- event handlers -------------------------------------------------
-
-    fn on_arrival(&mut self, idx: usize, now_s: f64) {
-        // Schedule the next arrival for this server.
-        let next = self.servers[idx].arrivals.next_after(now_s);
-        self.queue.schedule_at(secs(next), Ev::Arrival { server: idx as u32 });
-
-        let spec = &self.specs[self.servers[idx].workload_idx];
-        let (input, output) = sample_request(spec, &mut self.servers[idx].rng);
-        if self.servers[idx].current.is_none() {
-            self.start_request(idx, input, output, now_s, now_s);
-        } else if self.servers[idx].queued.is_none() {
-            self.servers[idx].queued = Some(QueuedReq { input, output, arrived_s: now_s });
-        } else {
-            // Buffer full: request is rejected (load-balancer would retry
-            // elsewhere; within this row it counts against throughput).
-            let pri = self.servers[idx].priority;
-            self.report.by_priority(pri).dropped += 1;
-        }
-    }
-
-    fn on_phase_end(&mut self, idx: usize, gen: u32, now_s: f64) {
-        if self.servers[idx].gen != gen {
-            return; // stale (frequency changed; a new event is scheduled)
-        }
-        self.advance_work(idx, now_s);
-        let phase = self.servers[idx].current.as_ref().map(|i| i.exec.phase());
-        match phase {
-            Some(ExecPhase::Token) => {
-                // Prompt just finished; token phase begins.
-                self.servers[idx].gen = self.servers[idx].gen.wrapping_add(1);
-                self.refresh_power(idx);
-                self.schedule_phase_end(idx, now_s);
-            }
-            Some(ExecPhase::Done) => {
-                let inf = self.servers[idx].current.take().unwrap();
-                let actual = now_s - inf.arrived_s;
-                self.report.by_priority(inf.priority).record(
-                    actual,
-                    inf.exec.nominal_latency,
-                    inf.exec.output,
-                );
-                self.servers[idx].gen = self.servers[idx].gen.wrapping_add(1);
-                // Pull the buffered request, if any.
-                if let Some(q) = self.servers[idx].queued.take() {
-                    self.start_request(idx, q.input, q.output, q.arrived_s, now_s);
-                } else {
-                    self.refresh_power(idx);
-                }
-            }
-            Some(ExecPhase::Prompt) | None => {
-                // Numerical residue: reschedule to finish the phase.
-                self.refresh_power(idx);
-                self.schedule_phase_end(idx, now_s);
-            }
-        }
-    }
-
-    fn on_telemetry(&mut self, now_s: f64) {
-        self.queue.schedule_in(secs(self.cfg.exp.row.telemetry_period_s), Ev::Telemetry);
-        let p = self.averaged_row_power();
-        if now_s == 0.0 {
-            return; // no averaging window yet — first real sample comes next tick
-        }
-        self.telemetry.record(now_s, p);
-        if !self.cfg.protection {
-            return;
-        }
-        let Some((_, visible)) = self.telemetry.visible_at(now_s) else {
-            return;
-        };
-        let actions = self.policy.tick(now_s, visible);
-        for act in actions {
-            let cmd = match act {
-                Action::CapLp { mhz } => OobCommand::FreqCap { target: Priority::Low, mhz },
-                Action::CapHp { mhz } => OobCommand::FreqCap { target: Priority::High, mhz },
-                Action::UncapLp => OobCommand::Uncap { target: Priority::Low },
-                Action::UncapHp => OobCommand::Uncap { target: Priority::High },
-                Action::Brake => OobCommand::PowerBrake,
-                Action::ReleaseBrake => OobCommand::ReleaseBrake,
-            };
-            self.issue_cmd(now_s, cmd);
-        }
-        self.reconcile_oob(now_s);
-    }
-
-    /// Issue one command through the OOB channel, recording the attempt
-    /// time per class (the re-issue timeout clock).
-    fn issue_cmd(&mut self, now_s: f64, cmd: OobCommand) {
-        match cmd {
-            OobCommand::FreqCap { target: Priority::Low, .. }
-            | OobCommand::Uncap { target: Priority::Low } => self.lp_last_issue_s = now_s,
-            OobCommand::FreqCap { target: Priority::High, .. }
-            | OobCommand::Uncap { target: Priority::High } => self.hp_last_issue_s = now_s,
-            OobCommand::PowerBrake | OobCommand::ReleaseBrake => {}
-        }
-        if let Some(apply_at) = self.oob.issue(now_s, cmd) {
-            self.queue.schedule_at(secs(apply_at), Ev::OobApply);
-        }
-    }
-
-    /// Re-issue slow-path commands that were *lost* (never acknowledged)
-    /// once the apply timeout has elapsed — the idempotent-retry loop a
-    /// real rack manager runs over SMBPBI. Commands that were
-    /// acknowledged are never re-issued, so a cap-ignoring server (acks,
-    /// does not apply) is invisible here; containing it is the policy
-    /// engine's escalation job, not the transport's.
-    fn reconcile_oob(&mut self, now_s: f64) {
-        let timeout = self.cfg.exp.row.oob_latency_s * 1.5 + self.cfg.exp.row.telemetry_period_s;
-        let intent = self.policy.intent();
-        if intent.lp_cap_mhz != self.acked_lp
-            && now_s - self.lp_last_issue_s > timeout
-            && !self.oob.has_pending(|c| targets(c, Priority::Low))
-        {
-            self.report.resilience.reissued_commands += 1;
-            let cmd = match intent.lp_cap_mhz {
-                Some(mhz) => OobCommand::FreqCap { target: Priority::Low, mhz },
-                None => OobCommand::Uncap { target: Priority::Low },
-            };
-            self.issue_cmd(now_s, cmd);
-        }
-        if intent.hp_cap_mhz != self.acked_hp
-            && now_s - self.hp_last_issue_s > timeout
-            && !self.oob.has_pending(|c| targets(c, Priority::High))
-        {
-            self.report.resilience.reissued_commands += 1;
-            let cmd = match intent.hp_cap_mhz {
-                Some(mhz) => OobCommand::FreqCap { target: Priority::High, mhz },
-                None => OobCommand::Uncap { target: Priority::High },
-            };
-            self.issue_cmd(now_s, cmd);
-        }
-    }
-
-    fn on_oob_apply(&mut self, now_s: f64) {
-        for pending in self.oob.due(now_s) {
-            match pending.cmd {
-                OobCommand::FreqCap { target, mhz } => {
-                    self.report.cap_commands += 1;
-                    self.ack(target, Some(mhz));
-                    for idx in 0..self.servers.len() {
-                        // Cap-ignoring servers acknowledge (the ack is
-                        // recorded above) but do not change frequency.
-                        if self.servers[idx].priority == target && !self.cap_ignore[idx] {
-                            self.set_server_cap(idx, Some(mhz), now_s);
-                        }
-                    }
-                }
-                OobCommand::Uncap { target } => {
-                    self.report.uncap_commands += 1;
-                    self.ack(target, None);
-                    for idx in 0..self.servers.len() {
-                        if self.servers[idx].priority == target && !self.cap_ignore[idx] {
-                            self.set_server_cap(idx, None, now_s);
-                        }
-                    }
-                }
-                // The brake is a hardware signal below the wedged
-                // firmware: cap-ignoring servers obey it too.
-                OobCommand::PowerBrake => {
-                    self.report.brake_commands += 1;
-                    self.set_brake(true, now_s);
-                }
-                OobCommand::ReleaseBrake => self.set_brake(false, now_s),
-            }
-        }
-    }
-
-    /// Record a delivered (acknowledged) slow-path cap state per class.
-    fn ack(&mut self, target: Priority, cap: Option<f64>) {
-        match target {
-            Priority::Low => self.acked_lp = cap,
-            Priority::High => self.acked_hp = cap,
-        }
-    }
-
-    // ---- training-job driver (§2.4 / §7) ---------------------------------
-
-    /// Cap governing a job right now. Every member shares the LP class
-    /// (training is priority-pinned) and the brake is row-wide, so one
-    /// member is representative.
-    fn train_cap(&self, j: usize) -> CapMode {
-        self.cap_mode(self.train_jobs[j].servers[0])
-    }
-
-    /// Push the job's current waveform level to every member server —
-    /// one event, all members: this is the cross-server iteration
-    /// synchronization that makes row-level swings coordinate.
-    fn apply_train_level(&mut self, j: usize) {
-        let level = self.train_jobs[j].model.profile.phase_levels()[self.train_jobs[j].phase_idx];
-        let members = std::mem::take(&mut self.train_jobs[j].servers);
-        for &idx in &members {
-            self.servers[idx].train_level = level;
-            self.refresh_power(idx);
-        }
-        self.train_jobs[j].servers = members;
-    }
-
-    fn schedule_train_phase(&mut self, j: usize) {
-        let job = &self.train_jobs[j];
-        let b = job.model.profile.phase_bounds();
-        let end_s = job.iter_started_s + job.iter_wall_s * b[job.phase_idx + 1];
-        let gen = job.gen;
-        // Same +1 µs guard as request phases: integer-microsecond
-        // rounding must never land before the true boundary.
-        self.queue.schedule_at(secs(end_s) + 1, Ev::TrainPhase { job: j as u32, gen });
-    }
-
-    /// Begin an iteration. Timing is fixed by the cap active *now*:
-    /// caps arriving mid-iteration change power immediately (via
-    /// [`Self::refresh_power`]) but stretch timing only from the next
-    /// gradient-sync barrier on — barriers quantize the performance
-    /// effect at iteration granularity.
-    fn start_train_iteration(&mut self, j: usize, now_s: f64) {
-        let cap = self.train_cap(j);
-        let job = &mut self.train_jobs[j];
-        job.gen = job.gen.wrapping_add(1);
-        job.phase_idx = 0;
-        job.iter_started_s = now_s;
-        job.iter_wall_s = job.model.iter_time_s(cap);
-        self.apply_train_level(j);
-        self.schedule_train_phase(j);
-    }
-
-    fn on_train_phase(&mut self, j: usize, gen: u32, now_s: f64) {
-        if self.train_jobs[j].gen != gen {
-            return; // stale (the job has since restarted an iteration)
-        }
-        if self.train_jobs[j].phase_idx + 1 >= 4 {
-            // Sync barrier reached: the iteration is complete.
-            let wall = now_s - self.train_jobs[j].iter_started_s;
-            self.report.train.record(wall);
-            self.start_train_iteration(j, now_s);
-        } else {
-            self.train_jobs[j].phase_idx += 1;
-            self.apply_train_level(j);
-            self.schedule_train_phase(j);
-        }
-    }
-
-    // ---- fault injection (see crate::faults) -----------------------------
-
-    /// A fault episode begins: degrade the corresponding control-plane
-    /// link. Violations from here on attribute to this incident.
-    fn on_fault_start(&mut self, i: usize, now_s: f64) {
-        self.cur_incident = Some(i);
-        let ev = self.fault_events[i];
-        match ev.kind {
-            FaultKind::TelemetryFreeze => self.telemetry.freeze(now_s, ev.end_s()),
-            FaultKind::OobStorm { loss_prob, latency_mult, jitter_frac } => {
-                self.oob.set_unreliability(loss_prob, jitter_frac);
-                self.oob.set_latency_mult(latency_mult);
-            }
-            FaultKind::CapIgnore { server_frac } => {
-                let n = ((server_frac * self.servers.len() as f64).ceil() as usize)
-                    .min(self.servers.len());
-                for idx in 0..n {
-                    self.cap_ignore[idx] = true;
-                }
-            }
-            FaultKind::MeterBias { mult } => self.meter_bias = mult,
-            FaultKind::FeedLoss { budget_frac } => {
-                // Close the accounting segment under the old budget
-                // before the effective budget changes.
-                self.settle_energy();
-                self.budget_mult = budget_frac.max(1e-6);
-            }
-        }
-    }
-
-    /// A fault episode ends: restore the baseline control plane.
-    fn on_fault_end(&mut self, i: usize, now_s: f64) {
-        let ev = self.fault_events[i];
-        match ev.kind {
-            // The freeze window expires by itself inside the buffer.
-            FaultKind::TelemetryFreeze => {}
-            FaultKind::OobStorm { .. } => {
-                self.oob.set_unreliability(self.cfg.oob_loss_prob, self.cfg.oob_jitter_frac);
-                self.oob.set_latency_mult(1.0);
-            }
-            FaultKind::CapIgnore { .. } => {
-                // The wedged firmware recovers and drains its queue:
-                // converge every affected server to the last
-                // acknowledged cap state of its class.
-                for idx in 0..self.servers.len() {
-                    if !self.cap_ignore[idx] {
-                        continue;
-                    }
-                    self.cap_ignore[idx] = false;
-                    let cap = match self.servers[idx].priority {
-                        Priority::Low => self.acked_lp,
-                        Priority::High => self.acked_hp,
-                    };
-                    self.set_server_cap(idx, cap, now_s);
-                }
-            }
-            FaultKind::MeterBias { .. } => self.meter_bias = 1.0,
-            FaultKind::FeedLoss { .. } => {
-                self.settle_energy();
-                self.budget_mult = 1.0;
-            }
-        }
-    }
-
-    /// Per-incident containment outcomes, written at finalize.
-    fn finalize_incidents(&mut self) {
-        let scaled_w = self.cfg.power_scale * self.row_power_w;
-        let still_violating = scaled_w > self.row.budget_w * self.budget_mult;
-        for (i, f) in self.fault_events.iter().enumerate() {
-            let time_to_contain_s = match self.incident_last_violation[i] {
-                None => 0.0,
-                Some(_) if still_violating && self.cur_incident == Some(i) => f64::INFINITY,
-                Some(last) => (last - f.start_s).max(0.0),
-            };
-            self.report.resilience.incidents.push(IncidentOutcome {
-                label: f.kind.label().to_string(),
-                start_s: f.start_s,
-                end_s: f.end_s(),
-                time_to_contain_s,
-            });
-        }
-    }
-
-    // ---- main loop -------------------------------------------------------
-
-    fn run(mut self) -> RunReport {
-        // Initial power state.
-        for idx in 0..self.servers.len() {
-            self.refresh_power(idx);
-        }
-        // Seed events. Training servers take no request arrivals: their
-        // load is the iteration waveform, driven by TrainStart below.
-        for idx in 0..self.servers.len() {
-            if self.servers[idx].kind == JobKind::Training {
-                continue;
-            }
-            let t = self.servers[idx].arrivals.next_after(0.0);
-            self.queue.schedule_at(secs(t), Ev::Arrival { server: idx as u32 });
-        }
-        for j in 0..self.train_jobs.len() {
-            let start = self.train_jobs[j].start_s;
-            self.queue.schedule_at(secs(start), Ev::TrainStart { job: j as u32 });
-        }
-        self.queue.schedule_at(0, Ev::Telemetry);
-        if self.cfg.series_sample_s > 0.0 {
-            self.queue.schedule_at(0, Ev::SampleSeries);
-        }
-        // Fault timeline: an empty plan schedules nothing, keeping the
-        // run bit-identical to one with no plan at all.
-        for i in 0..self.fault_events.len() {
-            let f = self.fault_events[i];
-            self.queue.schedule_at(secs(f.start_s), Ev::FaultStart { fault: i as u32 });
-            self.queue.schedule_at(secs(f.end_s()), Ev::FaultEnd { fault: i as u32 });
-        }
-        self.queue.schedule_at(self.horizon, Ev::End);
-
-        while let Some((t, ev)) = self.queue.pop() {
-            let now_s = to_secs(t);
-            self.now_s = now_s;
-            match ev {
-                Ev::Arrival { server } => self.on_arrival(server as usize, now_s),
-                Ev::PhaseEnd { server, gen } => self.on_phase_end(server as usize, gen, now_s),
-                Ev::Telemetry => self.on_telemetry(now_s),
-                Ev::OobApply => self.on_oob_apply(now_s),
-                Ev::TrainStart { job } => self.start_train_iteration(job as usize, now_s),
-                Ev::TrainPhase { job, gen } => self.on_train_phase(job as usize, gen, now_s),
-                Ev::SampleSeries => {
-                    self.report.power_series.push((now_s, self.normalized_row_power()));
-                    self.queue.schedule_in(secs(self.cfg.series_sample_s), Ev::SampleSeries);
-                }
-                Ev::FaultStart { fault } => self.on_fault_start(fault as usize, now_s),
-                Ev::FaultEnd { fault } => self.on_fault_end(fault as usize, now_s),
-                Ev::End => break,
-            }
-            if t >= self.horizon {
-                break;
-            }
-        }
-
-        // Finalize. Close the last ground-truth accounting segment at
-        // the horizon, then score the injected incidents.
-        self.now_s = to_secs(self.horizon);
-        self.settle_energy();
-        self.finalize_incidents();
-        if self.braked {
-            self.report.brake_time_s += to_secs(self.horizon) - self.brake_engaged_at;
-        }
-        self.report.brake_events = self.policy.brake_events;
-        self.report.duration_s = to_secs(self.horizon);
-        self.report.events = self.queue.popped();
-        let (peak, p99, mean) = self.telemetry.utilization();
-        self.report.power_peak = peak;
-        self.report.power_p99 = p99;
-        self.report.power_mean = mean;
-        let spikes = self.telemetry.spike_stats(&[2.0, 5.0, 40.0]);
-        self.report.spike_2s = spikes[0].max_rise;
-        self.report.spike_5s = spikes[1].max_rise;
-        self.report.spike_40s = spikes[2].max_rise;
-        self.report
-    }
-}
-
-/// Fit `power_scale` so the base row (baseline servers, no capping)
-/// peaks at `target_peak` (Table 2 inference: 0.79). Returns the scale.
-pub fn calibrate(target_peak: f64, weeks: f64, seed: u64) -> f64 {
-    let mut cfg = SimConfig {
-        policy_kind: PolicyKind::NoCap,
-        weeks,
-        power_scale: 1.0,
-        ..Default::default()
-    };
-    cfg.exp.seed = seed;
-    let report = run(&cfg);
-    target_peak / report.power_peak
-}
-
-/// The telemetry-visible power series of a run (for trace MAPE checks).
-pub fn power_series_of(cfg: &SimConfig) -> Vec<(f64, f64)> {
-    let mut c = cfg.clone();
-    c.series_sample_s = if c.series_sample_s > 0.0 { c.series_sample_s } else { 60.0 };
-    run(&c).power_series
-}
-
-#[cfg(test)]
-mod tests {
-    use super::*;
-
-    fn quick_cfg() -> SimConfig {
-        let mut cfg = SimConfig::default();
-        cfg.weeks = 0.05; // ~8.4 hours
-        cfg.deployed_servers = 12;
-        cfg.exp.row.num_servers = 12;
-        cfg.exp.seed = 42;
-        // Small rows multiplex fewer prompt spikes, so their relative
-        // variance is higher; calibrate the 12-server test row separately
-        // (production rows are 40+, using DEFAULT_POWER_SCALE).
-        cfg.power_scale = 1.35;
-        cfg
-    }
-
-    #[test]
-    fn base_run_completes_requests_without_brakes() {
-        let mut cfg = quick_cfg();
-        cfg.weeks = 0.1;
-        let report = run(&cfg);
-        assert!(report.hp.completed > 50, "hp completed = {}", report.hp.completed);
-        assert!(report.lp.completed > 50);
-        assert_eq!(report.brake_events, 0);
-        assert!(report.power_peak > 0.3 && report.power_peak < 1.0, "peak={}", report.power_peak);
-    }
-
-    #[test]
-    fn deterministic_given_seed() {
-        let cfg = quick_cfg();
-        let mut a = run(&cfg);
-        let mut b = run(&cfg);
-        assert_eq!(a.hp.completed, b.hp.completed);
-        assert_eq!(a.lp.completed, b.lp.completed);
-        assert_eq!(a.brake_events, b.brake_events);
-        assert!((a.power_peak - b.power_peak).abs() < 1e-12);
-        assert!((a.hp.latency.p99() - b.hp.latency.p99()).abs() < 1e-12);
-    }
-
-    #[test]
-    fn oversubscription_raises_power() {
-        let base = run(&quick_cfg());
-        let mut over_cfg = quick_cfg();
-        over_cfg.deployed_servers = 16; // +33%
-        let over = run(&over_cfg);
-        assert!(over.power_mean > base.power_mean * 1.15,
-            "base={} over={}", base.power_mean, over.power_mean);
-    }
-
-    #[test]
-    fn heavy_oversubscription_nocap_brakes_polca_does_not() {
-        let mut nocap = quick_cfg();
-        nocap.policy_kind = PolicyKind::NoCap;
-        nocap.deployed_servers = 22; // +83%: pushes past the breaker
-        nocap.weeks = 0.08;
-        let r_nocap = run(&nocap);
-        assert!(r_nocap.brake_events > 0, "no-cap at +83% must brake");
-
-        let mut polca = nocap.clone();
-        polca.policy_kind = PolicyKind::Polca;
-        let r_polca = run(&polca);
-        assert!(
-            r_polca.brake_events <= r_nocap.brake_events,
-            "POLCA ({}) must brake no more than No-cap ({})",
-            r_polca.brake_events,
-            r_nocap.brake_events
-        );
-        // POLCA's caps must push P99 power below No-cap's.
-        assert!(r_polca.power_p99 <= r_nocap.power_p99 + 0.02);
-    }
-
-    #[test]
-    fn polca_caps_impact_lp_more_than_hp() {
-        let mut cfg = quick_cfg();
-        cfg.deployed_servers = 18; // +50%: capping definitely active
-        cfg.weeks = 0.08;
-        let (_, impact) = run_with_impact(&cfg);
-        assert!(
-            impact.lp_p99 >= impact.hp_p99 - 0.02,
-            "LP p99 {} should be >= HP p99 {}",
-            impact.lp_p99,
-            impact.hp_p99
-        );
-    }
-
-    #[test]
-    fn baseline_has_zero_impact_on_itself() {
-        let cfg = quick_cfg().baseline();
-        let (_, impact) = run_with_impact(&cfg);
-        assert!(impact.hp_p50 < 1e-9 && impact.lp_p99 < 1e-9);
-        assert_eq!(impact.brake_events, 0);
-    }
-
-    #[test]
-    fn no_oversubscription_meets_slo() {
-        let mut cfg = quick_cfg();
-        cfg.weeks = 0.08;
-        let (_, impact) = run_with_impact(&cfg);
-        assert!(
-            impact.meets_slo(&cfg.exp.slo),
-            "{:?}",
-            impact.slo_violations(&cfg.exp.slo)
-        );
-    }
-
-    #[test]
-    fn work_conservation_under_caps() {
-        // Every arrival is eventually completed or dropped or in flight:
-        // completed + dropped <= arrivals, and nothing is double counted.
-        let mut cfg = quick_cfg();
-        cfg.deployed_servers = 16;
-        let report = run(&cfg);
-        let total = report.hp.completed + report.lp.completed
-            + report.hp.dropped + report.lp.dropped;
-        assert!(total > 100);
-        // All recorded latencies are >= nominal (impact >= 0) by metric
-        // construction; peak power must never be absurd.
-        assert!(report.power_peak < 2.0);
-    }
-
-    #[test]
-    fn mixed_zero_fraction_is_bit_identical_to_none() {
-        let mut a_cfg = quick_cfg();
-        a_cfg.weeks = 0.03;
-        let mut b_cfg = a_cfg.clone();
-        b_cfg.mixed = Some(MixedRowConfig::default()); // training_fraction 0.0
-        let mut a = run(&a_cfg);
-        let mut b = run(&b_cfg);
-        assert_eq!(a.hp.completed, b.hp.completed);
-        assert_eq!(a.lp.completed, b.lp.completed);
-        assert_eq!(a.events, b.events);
-        assert!((a.power_peak - b.power_peak).abs() == 0.0);
-        assert!((a.hp.latency.p99() - b.hp.latency.p99()).abs() == 0.0);
-        assert_eq!(b.train.iters, 0);
-    }
-
-    #[test]
-    fn pure_training_row_runs_iterations_at_tdp_class_power() {
-        let mut cfg = quick_cfg();
-        cfg.weeks = 0.01; // ~1.7 h
-        cfg.policy_kind = PolicyKind::NoCap;
-        cfg.mixed = Some(MixedRowConfig { training_fraction: 1.0, ..Default::default() });
-        let report = run(&cfg);
-        // No inference traffic at all on a pure-training row.
-        assert_eq!(report.hp.completed + report.lp.completed, 0);
-        assert!(report.train.iters > 500, "iters={}", report.train.iters);
-        // §2.4: training sits just under provisioned power — far above
-        // the inference mean — independent of the inference power_scale.
-        assert!(
-            report.power_peak > 0.85 && report.power_peak < 1.0,
-            "peak={}",
-            report.power_peak
-        );
-        // Uncapped iterations run at nominal speed (µs event rounding only).
-        assert!(report.train.inflation() < 1e-4, "inflation={}", report.train.inflation());
-        assert_eq!(report.brake_events, 0);
-    }
-
-    #[test]
-    fn polca_caps_training_and_inflates_iteration_time() {
-        // A pure-training row idles above T2 (0.89), so POLCA must cap
-        // it — and the cost shows up as iteration-time inflation, never
-        // as request latency (§7: training is always cappable).
-        let mut cfg = quick_cfg();
-        cfg.weeks = 0.02;
-        cfg.policy_kind = PolicyKind::Polca;
-        cfg.mixed = Some(MixedRowConfig { training_fraction: 1.0, ..Default::default() });
-        let report = run(&cfg);
-        assert!(report.cap_commands > 0, "row above T2 must engage LP caps");
-        assert!(
-            report.train.inflation() > 0.005,
-            "capped training must slow down: inflation={}",
-            report.train.inflation()
-        );
-        assert_eq!(report.hp.completed, 0);
-    }
-
-    #[test]
-    fn training_fraction_interpolates_power_monotonically() {
-        let mut peaks = Vec::new();
-        for frac in [0.0, 0.5, 1.0] {
-            let mut cfg = quick_cfg();
-            cfg.weeks = 0.05;
-            cfg.policy_kind = PolicyKind::NoCap;
-            cfg.mixed = Some(MixedRowConfig { training_fraction: frac, ..Default::default() });
-            peaks.push(run(&cfg).power_peak);
-        }
-        assert!(peaks[0] < peaks[1] && peaks[1] < peaks[2], "{peaks:?}");
-    }
-
-    #[test]
-    fn mixed_run_is_deterministic() {
-        let mut cfg = quick_cfg();
-        cfg.weeks = 0.02;
-        cfg.mixed = Some(MixedRowConfig {
-            training_fraction: 0.5,
-            servers_per_job: 3,
-            job_stagger_s: 2.0,
-            ..Default::default()
-        });
-        let a = run(&cfg);
-        let b = run(&cfg);
-        assert_eq!(a.train.iters, b.train.iters);
-        assert_eq!(a.hp.completed, b.hp.completed);
-        assert!((a.power_peak - b.power_peak).abs() == 0.0);
-        assert!((a.train.iter_time_sum_s - b.train.iter_time_sum_s).abs() == 0.0);
-    }
-
-    #[test]
-    fn empty_fault_plan_is_inert() {
-        let mut a_cfg = quick_cfg();
-        a_cfg.weeks = 0.03;
-        let mut b_cfg = a_cfg.clone();
-        b_cfg.faults = Some(FaultPlan::new());
-        let a = run(&a_cfg);
-        let b = run(&b_cfg);
-        // Bit-identical, including the (empty) resilience accounting.
-        assert_eq!(format!("{a:?}"), format!("{b:?}"));
-        assert!(a.resilience.incidents.is_empty());
-    }
-
-    #[test]
-    fn feed_loss_is_contained_by_the_brake_path() {
-        // Probe the clean run for its diurnal peak so the feed loss is
-        // injected when it actually bites.
-        let mut probe = quick_cfg();
-        probe.weeks = 0.1;
-        probe.policy_kind = PolicyKind::NoCap;
-        probe.series_sample_s = 120.0;
-        let horizon = probe.weeks * 7.0 * 86_400.0;
-        let series = run(&probe).power_series;
-        let &(t_peak, p_peak) = series
-            .iter()
-            .filter(|&&(t, _)| t < horizon - 7200.0)
-            .max_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
-            .unwrap();
-        // Cut the budget to well under the peak draw: the effective
-        // reading crosses 1.0, and only the brake path can answer.
-        let mut cfg = probe.clone();
-        cfg.series_sample_s = 0.0;
-        let window_s = 1800.0;
-        let budget_frac = p_peak / 1.3;
-        cfg.faults = Some(FaultPlan::new().with(
-            FaultKind::FeedLoss { budget_frac },
-            (t_peak - window_s / 2.0).max(0.0),
-            window_s,
-        ));
-        let report = run(&cfg);
-        assert_eq!(report.resilience.incidents.len(), 1);
-        let inc = report.resilience.incidents[0].clone();
-        assert!(report.resilience.violation_s > 0.0, "the cut must bite");
-        assert!(inc.contained(), "{inc:?}");
-        assert!(report.brake_commands > 0, "containment must have used the brake");
-        // The brake (reported reading > 1.0 exactly when the effective
-        // budget is violated) keeps the violation to a fraction of the
-        // episode — the row is never left over budget for long.
-        assert!(
-            report.resilience.violation_s < 0.8 * window_s,
-            "violation {}s over a {}s episode",
-            report.resilience.violation_s,
-            window_s
-        );
-        assert!(report.resilience.peak_overshoot_w > 0.0);
-    }
-
-    #[test]
-    fn full_telemetry_dropout_disables_the_control_loop() {
-        let mut cfg = quick_cfg();
-        cfg.weeks = 0.08;
-        cfg.deployed_servers = 22; // heavy: the clean run would cap/brake
-        let horizon = cfg.weeks * 7.0 * 86_400.0;
-        cfg.faults = Some(FaultPlan::new().with(
-            FaultKind::TelemetryFreeze,
-            0.0,
-            horizon + 1.0,
-        ));
-        let report = run(&cfg);
-        // The policy never saw a reading: no caps, no brakes — and the
-        // ground-truth accounting shows the row went over budget.
-        assert_eq!(report.cap_commands, 0);
-        assert_eq!(report.brake_commands, 0);
-        assert!(report.resilience.violation_s > 0.0);
-        assert!(report.resilience.true_peak_norm > 1.0);
-    }
-
-    #[test]
-    fn meter_bias_under_reports_the_peak() {
-        let mut clean_cfg = quick_cfg();
-        clean_cfg.weeks = 0.04;
-        clean_cfg.policy_kind = PolicyKind::NoCap;
-        let mut biased_cfg = clean_cfg.clone();
-        let horizon = biased_cfg.weeks * 7.0 * 86_400.0;
-        biased_cfg.faults = Some(FaultPlan::new().with(
-            FaultKind::MeterBias { mult: 0.5 },
-            0.0,
-            horizon + 1.0,
-        ));
-        let clean = run(&clean_cfg);
-        let biased = run(&biased_cfg);
-        // Reported statistics shrink with the bias; the ground truth
-        // does not move (same workload, same NoCap policy).
-        assert!((biased.power_peak - 0.5 * clean.power_peak).abs() < 1e-9);
-        assert!(
-            (biased.resilience.true_peak_norm - clean.resilience.true_peak_norm).abs() < 1e-12
-        );
-    }
-
-    #[test]
-    fn oob_loss_storm_triggers_reissue_not_silence() {
-        let mut cfg = quick_cfg();
-        cfg.weeks = 0.08;
-        cfg.deployed_servers = 18; // capping definitely intended
-        let horizon = cfg.weeks * 7.0 * 86_400.0;
-        cfg.faults = Some(FaultPlan::new().with(
-            FaultKind::OobStorm { loss_prob: 1.0, latency_mult: 1.0, jitter_frac: 0.0 },
-            0.0,
-            horizon + 1.0,
-        ));
-        let report = run(&cfg);
-        // Every slow-path command is lost, so none applies — but the
-        // rack manager keeps retrying after the apply timeout.
-        assert_eq!(report.cap_commands, 0);
-        assert!(report.resilience.reissued_commands > 0);
-    }
-
-    #[test]
-    fn calibration_hits_target_peak() {
-        let mut cfg = SimConfig::default();
-        cfg.weeks = 0.15;
-        cfg.deployed_servers = 40;
-        cfg.policy_kind = PolicyKind::NoCap;
-        cfg.exp.seed = 7;
-        let report = run(&cfg);
-        // With the shipped DEFAULT_POWER_SCALE the base row should peak
-        // near the Table-2 inference utilization.
-        assert!(
-            (0.70..=0.88).contains(&report.power_peak),
-            "peak={} (rescale DEFAULT_POWER_SCALE?)",
-            report.power_peak
-        );
-    }
 }

@@ -1,0 +1,347 @@
+//! Server layer: row provisioning and per-server power settlement.
+//!
+//! Owns everything physical about the row — the calibrated model spec,
+//! the Table-4 workload assignment, the provisioned [`Row`], and the
+//! live per-server state (in-flight request, buffered request, arrival
+//! process, frequency cap, cached power draw). The request lifecycle
+//! handlers (`Sim::on_arrival` / `Sim::on_phase_end`) and the
+//! work-conserving cap application (`Sim::set_server_cap`) live here
+//! because their effects are entirely server-local; row-wide actuation
+//! (the powerbrake) lives in [`super::control`].
+//!
+//! Power settlement contract: any change to a server's draw goes
+//! through `Sim::refresh_power`, which first settles the energy
+//! accumulator ([`super::accounting`]) so the ground-truth violation
+//! integral sees a piecewise-constant power signal with exact segment
+//! boundaries.
+
+use crate::characterize::catalog::{self, ModelSpec};
+use crate::cluster::hierarchy::{JobKind, Priority, Row};
+use crate::perfmodel::{ExecPhase, RequestExec};
+use crate::power::gpu::{CapMode, Phase};
+use crate::sim::secs;
+use crate::util::rng::Rng;
+use crate::workload::arrivals::ArrivalProcess;
+use crate::workload::spec::{assign_servers, sample_request, WorkloadSpec};
+
+use super::core::{Ev, Sim};
+use super::SimConfig;
+
+#[derive(Debug, Clone)]
+pub(crate) struct InFlight {
+    pub(crate) exec: RequestExec,
+    pub(crate) arrived_s: f64,
+    pub(crate) priority: Priority,
+}
+
+#[derive(Debug, Clone)]
+pub(crate) struct QueuedReq {
+    pub(crate) input: f64,
+    pub(crate) output: f64,
+    pub(crate) arrived_s: f64,
+}
+
+pub(crate) struct ServerState {
+    pub(crate) priority: Priority,
+    pub(crate) kind: JobKind,
+    pub(crate) workload_idx: usize,
+    pub(crate) freq_cap_mhz: Option<f64>,
+    pub(crate) current: Option<InFlight>,
+    pub(crate) queued: Option<QueuedReq>,
+    pub(crate) arrivals: ArrivalProcess,
+    pub(crate) rng: Rng,
+    /// Generation counter invalidating stale PhaseEnd events.
+    pub(crate) gen: u32,
+    /// Time work was last advanced (for mid-flight cap changes).
+    pub(crate) last_advance_s: f64,
+    /// Current power draw in watts (cached for incremental row sum).
+    pub(crate) power_w: f64,
+    /// Training servers only: the nominal GPU power fraction of the
+    /// job's current waveform phase (idle before the job starts).
+    pub(crate) train_level: f64,
+}
+
+/// The provisioned row plus live per-server state and the incremental
+/// row power aggregate.
+pub(crate) struct ServerLayer {
+    pub(crate) model: ModelSpec,
+    pub(crate) specs: Vec<WorkloadSpec>,
+    pub(crate) row: Row,
+    pub(crate) states: Vec<ServerState>,
+    pub(crate) row_power_w: f64,
+}
+
+impl ServerLayer {
+    /// Provision the row: apply the robustness/SKU knobs to the catalog
+    /// model, assign Table-4 workloads, carve the training tail, and
+    /// derive per-server arrival rates from the target utilization.
+    ///
+    /// RNG contract: every random stream is forked here, in a fixed
+    /// order, from a root seeded by `cfg.exp.seed` — the layer split
+    /// must never reorder these forks (bit-identity depends on it).
+    pub(crate) fn new(cfg: &SimConfig) -> ServerLayer {
+        let mut model = catalog::find(&cfg.model_name).expect("model not in catalog");
+        // Fig 17 robustness knob: workloads draw more than profiled.
+        if cfg.workload_power_mult != 1.0 {
+            model.power.prompt_peak_at_256 *= cfg.workload_power_mult;
+            model.power.prompt_peak_at_8192 *= cfg.workload_power_mult;
+            model.power.token_mean_at_b1 *= cfg.workload_power_mult;
+            model.power.token_mean_at_b16 *= cfg.workload_power_mult;
+        }
+        // Fleet SKU knob: faster silicon shifts the latency anchors.
+        if cfg.perf_mult != 1.0 {
+            model.prompt_tokens_per_s *= cfg.perf_mult;
+            model.decode_tokens_per_s *= cfg.perf_mult;
+        }
+        let mut power_model = cfg.server_model.clone().unwrap_or_else(|| {
+            crate::power::server::ServerPowerModel { calib: model.power, ..Default::default() }
+        });
+        // An explicit server model carries its own calibration, so the
+        // Fig-17 robustness multiplier must be applied to it directly
+        // (the scaling above only touched the catalog-derived default).
+        if cfg.server_model.is_some() && cfg.workload_power_mult != 1.0 {
+            let c = &mut power_model.calib;
+            c.prompt_peak_at_256 *= cfg.workload_power_mult;
+            c.prompt_peak_at_8192 *= cfg.workload_power_mult;
+            c.token_mean_at_b1 *= cfg.workload_power_mult;
+            c.token_mean_at_b16 *= cfg.workload_power_mult;
+        }
+        let mut root_rng = Rng::new(cfg.exp.seed ^ 0x9E3779B97F4A7C15);
+        let mut row = Row::provision(cfg.exp.row.num_servers, cfg.deployed_servers, power_model);
+        let specs = crate::workload::spec::table4();
+        assign_servers(&mut row, &specs, 0, cfg.lp_fraction_override, &mut root_rng);
+        // Mixed rows: carve training servers off the tail AFTER the
+        // inference assignment, so every training fraction consumes the
+        // identical random stream (0% is bit-identical to `mixed: None`,
+        // and sweeps interpolate on one fixed workload realization).
+        let train_count = cfg
+            .mixed
+            .as_ref()
+            .map(|m| {
+                ((m.training_fraction * row.servers.len() as f64).round() as usize)
+                    .min(row.servers.len())
+            })
+            .unwrap_or(0);
+        if train_count > 0 {
+            crate::workload::spec::mark_training(&mut row, train_count);
+        }
+
+        // Per-workload peak arrival rate from the target utilization:
+        // rate = utilization / E[nominal service time of that workload].
+        let mut mean_service: Vec<f64> = Vec::new();
+        let mut est_rng = root_rng.fork(77);
+        for spec in &specs {
+            let mut acc = 0.0;
+            let n = 400;
+            for _ in 0..n {
+                let (i, o) = sample_request(spec, &mut est_rng);
+                acc += model.request_latency_s(i, o, 1.0, 1.0);
+            }
+            mean_service.push(acc / n as f64);
+        }
+
+        let idle_frac = row.power_model.calib.idle_frac;
+        let states = row
+            .servers
+            .iter()
+            .map(|s| {
+                let rate = cfg.peak_utilization / mean_service[s.workload_idx];
+                ServerState {
+                    priority: s.priority,
+                    kind: s.job,
+                    workload_idx: s.workload_idx,
+                    freq_cap_mhz: None,
+                    current: None,
+                    queued: None,
+                    arrivals: ArrivalProcess::new(rate, root_rng.fork(1000 + s.id as u64))
+                        .with_phase(cfg.diurnal_phase_s),
+                    rng: root_rng.fork(2000 + s.id as u64),
+                    gen: 0,
+                    last_advance_s: 0.0,
+                    power_w: 0.0,
+                    train_level: idle_frac,
+                }
+            })
+            .collect();
+
+        ServerLayer { model, specs, row, states, row_power_w: 0.0 }
+    }
+}
+
+impl<'a> Sim<'a> {
+    // ---- power bookkeeping ------------------------------------------------
+
+    pub(crate) fn freq_ratio(&self, idx: usize) -> f64 {
+        if self.control.braked {
+            return self.cfg.exp.policy.brake_freq_mhz / self.cfg.exp.policy.max_freq_mhz;
+        }
+        match self.servers.states[idx].freq_cap_mhz {
+            Some(mhz) => mhz / self.cfg.exp.policy.max_freq_mhz,
+            None => 1.0,
+        }
+    }
+
+    pub(crate) fn cap_mode(&self, idx: usize) -> CapMode {
+        if self.control.braked {
+            CapMode::FreqCap { mhz: self.cfg.exp.policy.brake_freq_mhz }
+        } else {
+            match self.servers.states[idx].freq_cap_mhz {
+                Some(mhz) => CapMode::FreqCap { mhz },
+                None => CapMode::None,
+            }
+        }
+    }
+
+    pub(crate) fn server_phase(&self, idx: usize) -> Phase {
+        match &self.servers.states[idx].current {
+            None => Phase::Idle,
+            Some(inf) => match inf.exec.phase() {
+                ExecPhase::Prompt => Phase::Prompt { total_input: inf.exec.input * inf.exec.batch },
+                ExecPhase::Token | ExecPhase::Done => Phase::Token { batch: inf.exec.batch },
+            },
+        }
+    }
+
+    /// Recompute one server's power and update the row aggregate.
+    pub(crate) fn refresh_power(&mut self, idx: usize) {
+        self.settle_energy();
+        let w = match self.servers.states[idx].kind {
+            JobKind::Inference => {
+                let phase = self.server_phase(idx);
+                let cap = self.cap_mode(idx);
+                self.servers.row.power_model.server_power_w(phase, cap, false)
+            }
+            // Training power is absolute (the §2.4 waveform drives the
+            // GPUs directly); `power_scale` is an inference-serving
+            // calibration, so divide it out here — the row aggregate
+            // multiplies it back in `normalized_row_power`.
+            JobKind::Training => self.training_server_w(idx) / self.cfg.power_scale,
+        };
+        let s = &mut self.servers.states[idx];
+        self.servers.row_power_w += w - s.power_w;
+        s.power_w = w;
+    }
+
+    // ---- request lifecycle --------------------------------------------
+
+    pub(crate) fn start_request(
+        &mut self,
+        idx: usize,
+        input: f64,
+        output: f64,
+        arrived_s: f64,
+        now_s: f64,
+    ) {
+        let exec = RequestExec::new(&self.servers.model, input, output, 1.0);
+        self.servers.states[idx].current = Some(InFlight {
+            exec,
+            arrived_s,
+            priority: self.servers.states[idx].priority,
+        });
+        self.servers.states[idx].last_advance_s = now_s;
+        self.servers.states[idx].gen = self.servers.states[idx].gen.wrapping_add(1);
+        self.refresh_power(idx);
+        self.schedule_phase_end(idx, now_s);
+    }
+
+    pub(crate) fn schedule_phase_end(&mut self, idx: usize, now_s: f64) {
+        let ratio = self.freq_ratio(idx);
+        let wall = match &self.servers.states[idx].current {
+            Some(inf) if inf.exec.phase() != ExecPhase::Done => {
+                inf.exec.wall_to_phase_end(&self.servers.model, ratio)
+            }
+            _ => return,
+        };
+        let gen = self.servers.states[idx].gen;
+        // +1 µs guard: `secs` rounds to integer microseconds, which can
+        // land *before* the true phase end and loop the event at the same
+        // timestamp. Overshooting by a microsecond guarantees progress.
+        self.core
+            .queue
+            .schedule_at(secs(now_s + wall) + 1, Ev::PhaseEnd { server: idx as u32, gen });
+    }
+
+    /// Advance the in-flight request's work to `now` at the *current*
+    /// ratio (call BEFORE changing the ratio).
+    pub(crate) fn advance_work(&mut self, idx: usize, now_s: f64) {
+        let ratio = self.freq_ratio(idx);
+        let last = self.servers.states[idx].last_advance_s;
+        if let Some(inf) = &mut self.servers.states[idx].current {
+            let dt = (now_s - last).max(0.0);
+            if dt > 0.0 {
+                inf.exec.advance(&self.servers.model, ratio, dt);
+            }
+        }
+        self.servers.states[idx].last_advance_s = now_s;
+    }
+
+    /// Apply a frequency change to one server (work-conserving).
+    pub(crate) fn set_server_cap(&mut self, idx: usize, cap: Option<f64>, now_s: f64) {
+        if self.servers.states[idx].freq_cap_mhz == cap {
+            return;
+        }
+        self.advance_work(idx, now_s);
+        self.servers.states[idx].freq_cap_mhz = cap;
+        self.servers.states[idx].gen = self.servers.states[idx].gen.wrapping_add(1);
+        self.refresh_power(idx);
+        self.schedule_phase_end(idx, now_s);
+    }
+
+    // ---- event handlers -------------------------------------------------
+
+    pub(crate) fn on_arrival(&mut self, idx: usize, now_s: f64) {
+        // Schedule the next arrival for this server.
+        let next = self.servers.states[idx].arrivals.next_after(now_s);
+        self.core.queue.schedule_at(secs(next), Ev::Arrival { server: idx as u32 });
+
+        let spec = &self.servers.specs[self.servers.states[idx].workload_idx];
+        let (input, output) = sample_request(spec, &mut self.servers.states[idx].rng);
+        if self.servers.states[idx].current.is_none() {
+            self.start_request(idx, input, output, now_s, now_s);
+        } else if self.servers.states[idx].queued.is_none() {
+            self.servers.states[idx].queued = Some(QueuedReq { input, output, arrived_s: now_s });
+        } else {
+            // Buffer full: request is rejected (load-balancer would retry
+            // elsewhere; within this row it counts against throughput).
+            let pri = self.servers.states[idx].priority;
+            self.acct.report.by_priority(pri).dropped += 1;
+        }
+    }
+
+    pub(crate) fn on_phase_end(&mut self, idx: usize, gen: u32, now_s: f64) {
+        if self.servers.states[idx].gen != gen {
+            return; // stale (frequency changed; a new event is scheduled)
+        }
+        self.advance_work(idx, now_s);
+        let phase = self.servers.states[idx].current.as_ref().map(|i| i.exec.phase());
+        match phase {
+            Some(ExecPhase::Token) => {
+                // Prompt just finished; token phase begins.
+                self.servers.states[idx].gen = self.servers.states[idx].gen.wrapping_add(1);
+                self.refresh_power(idx);
+                self.schedule_phase_end(idx, now_s);
+            }
+            Some(ExecPhase::Done) => {
+                let inf = self.servers.states[idx].current.take().unwrap();
+                let actual = now_s - inf.arrived_s;
+                self.acct.report.by_priority(inf.priority).record(
+                    actual,
+                    inf.exec.nominal_latency,
+                    inf.exec.output,
+                );
+                self.servers.states[idx].gen = self.servers.states[idx].gen.wrapping_add(1);
+                // Pull the buffered request, if any.
+                if let Some(q) = self.servers.states[idx].queued.take() {
+                    self.start_request(idx, q.input, q.output, q.arrived_s, now_s);
+                } else {
+                    self.refresh_power(idx);
+                }
+            }
+            Some(ExecPhase::Prompt) | None => {
+                // Numerical residue: reschedule to finish the phase.
+                self.refresh_power(idx);
+                self.schedule_phase_end(idx, now_s);
+            }
+        }
+    }
+}

@@ -1,0 +1,184 @@
+//! Training layer: the §2.4 / §7 mixed-row phase driver.
+//!
+//! Owns the synchronized training jobs colocated with the inference
+//! services: one `TrainJob` per `servers_per_job` chunk of the row's
+//! training tail, each advancing on the shared event queue with one
+//! event per waveform phase per *job* — every member server switches
+//! phase at the same instant, so the row-level power swings coordinate
+//! exactly as the paper observes. Frequency caps change training power
+//! immediately (through `Sim::refresh_power`) but stretch timing only
+//! from the next gradient-sync barrier on; the cost is reported as
+//! iteration-time inflation ([`crate::metrics::TrainingMetrics`]).
+
+use crate::cluster::hierarchy::JobKind;
+use crate::power::gpu::CapMode;
+use crate::power::training::{TrainingPowerModel, TrainingProfile};
+use crate::sim::secs;
+
+use super::core::{Ev, Sim};
+use super::SimConfig;
+
+/// Mixed-row parameters: colocate synchronized training jobs with the
+/// inference services (§2.4 contrast, §7 mixing direction).
+#[derive(Debug, Clone)]
+pub struct MixedRowConfig {
+    /// Fraction of the *deployed* servers running training (0.0 = pure
+    /// inference, 1.0 = pure training row). The training servers are
+    /// carved deterministically off the tail of the row so every
+    /// fraction shares one inference workload realization (see
+    /// [`crate::workload::spec::mark_training`]).
+    pub training_fraction: f64,
+    /// Servers per synchronized job; 0 means one job spans every
+    /// training server (the paper's large-job worst case, maximally
+    /// coordinated row swings).
+    pub servers_per_job: usize,
+    /// Offset between consecutive jobs' start times, seconds. Staggered
+    /// jobs de-align their synchronization troughs, shrinking the
+    /// row-level swing — the §7 lever an operator controls.
+    pub job_stagger_s: f64,
+    /// Iteration waveform every job runs.
+    pub profile: TrainingProfile,
+}
+
+impl Default for MixedRowConfig {
+    fn default() -> Self {
+        MixedRowConfig {
+            training_fraction: 0.0,
+            servers_per_job: 0,
+            job_stagger_s: 0.0,
+            profile: TrainingProfile::large_llm(),
+        }
+    }
+}
+
+/// One synchronized training job: every member server switches waveform
+/// phase on the same event, so row-level swings coordinate (§2.4).
+pub(crate) struct TrainJob {
+    /// Indices into the server layer's state vector.
+    pub(crate) servers: Vec<usize>,
+    pub(crate) model: TrainingPowerModel,
+    /// Job start time (staggered per job).
+    pub(crate) start_s: f64,
+    /// Generation counter invalidating stale TrainPhase events.
+    pub(crate) gen: u32,
+    /// Current phase index into `TrainingProfile::phase_levels`.
+    pub(crate) phase_idx: usize,
+    pub(crate) iter_started_s: f64,
+    /// Wall time of the in-flight iteration (stretched by the cap that
+    /// was active when it started).
+    pub(crate) iter_wall_s: f64,
+}
+
+/// The mixed-row training jobs (empty on inference-only rows).
+pub(crate) struct TrainingLayer {
+    pub(crate) jobs: Vec<TrainJob>,
+}
+
+impl TrainingLayer {
+    /// One synchronized job per `servers_per_job` chunk of the training
+    /// tail; 0 = a single row-spanning job (§2.4's large-job worst
+    /// case). RNG-free: job structure derives only from the row's
+    /// (already carved) training tail and the mixed config.
+    pub(crate) fn new(cfg: &SimConfig, row: &crate::cluster::hierarchy::Row) -> TrainingLayer {
+        let mut jobs = Vec::new();
+        if let Some(m) = &cfg.mixed {
+            let train_idxs: Vec<usize> = row
+                .servers
+                .iter()
+                .enumerate()
+                .filter(|(_, s)| s.job == JobKind::Training)
+                .map(|(i, _)| i)
+                .collect();
+            if !train_idxs.is_empty() {
+                let per =
+                    if m.servers_per_job == 0 { train_idxs.len() } else { m.servers_per_job };
+                for (j, chunk) in train_idxs.chunks(per.max(1)).enumerate() {
+                    jobs.push(TrainJob {
+                        servers: chunk.to_vec(),
+                        model: TrainingPowerModel::with_calib(m.profile, row.power_model.calib),
+                        start_s: j as f64 * m.job_stagger_s.max(0.0),
+                        gen: 0,
+                        phase_idx: 0,
+                        iter_started_s: 0.0,
+                        iter_wall_s: m.profile.iter_time_s,
+                    });
+                }
+            }
+        }
+        TrainingLayer { jobs }
+    }
+}
+
+impl<'a> Sim<'a> {
+    /// Training server wall power in watts: the job's current waveform
+    /// level under this server's cap, through the shared server model.
+    pub(crate) fn training_server_w(&self, idx: usize) -> f64 {
+        let cap = self.cap_mode(idx);
+        let nominal = self.servers.states[idx].train_level;
+        let frac = self.servers.row.power_model.calib.capped_level(nominal, cap);
+        self.servers.row.power_model.training_power_w(frac)
+    }
+
+    /// Cap governing a job right now. Every member shares the LP class
+    /// (training is priority-pinned) and the brake is row-wide, so one
+    /// member is representative.
+    pub(crate) fn train_cap(&self, j: usize) -> CapMode {
+        self.cap_mode(self.training.jobs[j].servers[0])
+    }
+
+    /// Push the job's current waveform level to every member server —
+    /// one event, all members: this is the cross-server iteration
+    /// synchronization that makes row-level swings coordinate.
+    pub(crate) fn apply_train_level(&mut self, j: usize) {
+        let level =
+            self.training.jobs[j].model.profile.phase_levels()[self.training.jobs[j].phase_idx];
+        let members = std::mem::take(&mut self.training.jobs[j].servers);
+        for &idx in &members {
+            self.servers.states[idx].train_level = level;
+            self.refresh_power(idx);
+        }
+        self.training.jobs[j].servers = members;
+    }
+
+    pub(crate) fn schedule_train_phase(&mut self, j: usize) {
+        let job = &self.training.jobs[j];
+        let b = job.model.profile.phase_bounds();
+        let end_s = job.iter_started_s + job.iter_wall_s * b[job.phase_idx + 1];
+        let gen = job.gen;
+        // Same +1 µs guard as request phases: integer-microsecond
+        // rounding must never land before the true boundary.
+        self.core.queue.schedule_at(secs(end_s) + 1, Ev::TrainPhase { job: j as u32, gen });
+    }
+
+    /// Begin an iteration. Timing is fixed by the cap active *now*:
+    /// caps arriving mid-iteration change power immediately (via
+    /// [`Sim::refresh_power`]) but stretch timing only from the next
+    /// gradient-sync barrier on — barriers quantize the performance
+    /// effect at iteration granularity.
+    pub(crate) fn start_train_iteration(&mut self, j: usize, now_s: f64) {
+        let cap = self.train_cap(j);
+        let job = &mut self.training.jobs[j];
+        job.gen = job.gen.wrapping_add(1);
+        job.phase_idx = 0;
+        job.iter_started_s = now_s;
+        job.iter_wall_s = job.model.iter_time_s(cap);
+        self.apply_train_level(j);
+        self.schedule_train_phase(j);
+    }
+
+    pub(crate) fn on_train_phase(&mut self, j: usize, gen: u32, now_s: f64) {
+        if self.training.jobs[j].gen != gen {
+            return; // stale (the job has since restarted an iteration)
+        }
+        if self.training.jobs[j].phase_idx + 1 >= 4 {
+            // Sync barrier reached: the iteration is complete.
+            let wall = now_s - self.training.jobs[j].iter_started_s;
+            self.acct.report.train.record(wall);
+            self.start_train_iteration(j, now_s);
+        } else {
+            self.training.jobs[j].phase_idx += 1;
+            self.apply_train_level(j);
+            self.schedule_train_phase(j);
+        }
+    }
+}

@@ -1,0 +1,941 @@
+//! Golden tests pinning the layered simulator to the pre-split
+//! monolith, bit for bit.
+//!
+//! The `reference` module below is the monolithic `Sim` exactly as it
+//! shipped before the `simulation/` package was decomposed into layers
+//! (ISSUE 5) — the same event loop, the same RNG fork order, the same
+//! settlement arithmetic, transcribed against the crate's public API.
+//! Every test runs one config through both implementations and asserts
+//! full `Debug`-render equality of the reports: the strongest
+//! "refactor changed nothing" claim expressible without fixture files,
+//! and one that re-verifies itself on every future edit instead of
+//! going stale the way a frozen snapshot would.
+//!
+//! The configs cover every layer the split touched: the plain row,
+//! oversubscription with active capping and brakes, mixed training
+//! rows (staggered multi-job), fault plans of every kind, SKU + perf
+//! overrides, the Fig-17 power multiplier, diurnal phase offsets,
+//! lossy OOB, containment escalation, and the unprotected baseline.
+
+use polca::simulation::{run, MixedRowConfig, SimConfig};
+
+/// The pre-split monolithic simulator, kept verbatim as the golden
+/// reference. Do not "improve" this module: its value is that it is
+/// the old wiring, byte for byte of behavior.
+mod reference {
+    use polca::characterize::catalog::{self, ModelSpec};
+    use polca::cluster::hierarchy::{JobKind, Priority, Row};
+    use polca::cluster::oob::{OobChannel, OobCommand};
+    use polca::cluster::telemetry::TelemetryBuffer;
+    use polca::faults::{FaultEvent, FaultKind};
+    use polca::metrics::{IncidentOutcome, RunReport};
+    use polca::perfmodel::{ExecPhase, RequestExec};
+    use polca::policy::engine::{Action, PolicyEngine};
+    use polca::power::gpu::{CapMode, Phase};
+    use polca::power::training::TrainingPowerModel;
+    use polca::sim::{secs, to_secs, EventQueue, SimTime};
+    use polca::simulation::SimConfig;
+    use polca::util::rng::Rng;
+    use polca::workload::arrivals::ArrivalProcess;
+    use polca::workload::spec::{assign_servers, sample_request, WorkloadSpec};
+
+    #[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+    enum Ev {
+        Arrival { server: u32 },
+        PhaseEnd { server: u32, gen: u32 },
+        Telemetry,
+        OobApply,
+        TrainStart { job: u32 },
+        TrainPhase { job: u32, gen: u32 },
+        SampleSeries,
+        FaultStart { fault: u32 },
+        FaultEnd { fault: u32 },
+        End,
+    }
+
+    #[derive(Debug, Clone)]
+    struct InFlight {
+        exec: RequestExec,
+        arrived_s: f64,
+        priority: Priority,
+    }
+
+    #[derive(Debug, Clone)]
+    struct QueuedReq {
+        input: f64,
+        output: f64,
+        arrived_s: f64,
+    }
+
+    struct ServerState {
+        priority: Priority,
+        kind: JobKind,
+        workload_idx: usize,
+        freq_cap_mhz: Option<f64>,
+        current: Option<InFlight>,
+        queued: Option<QueuedReq>,
+        arrivals: ArrivalProcess,
+        rng: Rng,
+        gen: u32,
+        last_advance_s: f64,
+        power_w: f64,
+        train_level: f64,
+    }
+
+    struct TrainJob {
+        servers: Vec<usize>,
+        model: TrainingPowerModel,
+        start_s: f64,
+        gen: u32,
+        phase_idx: usize,
+        iter_started_s: f64,
+        iter_wall_s: f64,
+    }
+
+    /// Run one simulation through the pre-split wiring.
+    pub fn run(cfg: &SimConfig) -> RunReport {
+        Sim::new(cfg).run()
+    }
+
+    fn targets(cmd: &OobCommand, p: Priority) -> bool {
+        match cmd {
+            OobCommand::FreqCap { target, .. } | OobCommand::Uncap { target } => *target == p,
+            OobCommand::PowerBrake | OobCommand::ReleaseBrake => false,
+        }
+    }
+
+    struct Sim<'a> {
+        cfg: &'a SimConfig,
+        model: ModelSpec,
+        specs: Vec<WorkloadSpec>,
+        row: Row,
+        servers: Vec<ServerState>,
+        train_jobs: Vec<TrainJob>,
+        queue: EventQueue<Ev>,
+        policy: PolicyEngine,
+        oob: OobChannel,
+        telemetry: TelemetryBuffer,
+        braked: bool,
+        brake_engaged_at: f64,
+        row_power_w: f64,
+        energy_acc_ws: f64,
+        last_power_change_s: f64,
+        last_telemetry_s: f64,
+        now_s: f64,
+        report: RunReport,
+        horizon: SimTime,
+        fault_events: Vec<FaultEvent>,
+        meter_bias: f64,
+        budget_mult: f64,
+        cap_ignore: Vec<bool>,
+        acked_lp: Option<f64>,
+        acked_hp: Option<f64>,
+        lp_last_issue_s: f64,
+        hp_last_issue_s: f64,
+        cur_incident: Option<usize>,
+        incident_last_violation: Vec<Option<f64>>,
+    }
+
+    impl<'a> Sim<'a> {
+        fn new(cfg: &'a SimConfig) -> Self {
+            let mut model = catalog::find(&cfg.model_name).expect("model not in catalog");
+            if cfg.workload_power_mult != 1.0 {
+                model.power.prompt_peak_at_256 *= cfg.workload_power_mult;
+                model.power.prompt_peak_at_8192 *= cfg.workload_power_mult;
+                model.power.token_mean_at_b1 *= cfg.workload_power_mult;
+                model.power.token_mean_at_b16 *= cfg.workload_power_mult;
+            }
+            if cfg.perf_mult != 1.0 {
+                model.prompt_tokens_per_s *= cfg.perf_mult;
+                model.decode_tokens_per_s *= cfg.perf_mult;
+            }
+            let mut power_model = cfg.server_model.clone().unwrap_or_else(|| {
+                polca::power::server::ServerPowerModel { calib: model.power, ..Default::default() }
+            });
+            if cfg.server_model.is_some() && cfg.workload_power_mult != 1.0 {
+                let c = &mut power_model.calib;
+                c.prompt_peak_at_256 *= cfg.workload_power_mult;
+                c.prompt_peak_at_8192 *= cfg.workload_power_mult;
+                c.token_mean_at_b1 *= cfg.workload_power_mult;
+                c.token_mean_at_b16 *= cfg.workload_power_mult;
+            }
+            let mut root_rng = Rng::new(cfg.exp.seed ^ 0x9E3779B97F4A7C15);
+            let mut row =
+                Row::provision(cfg.exp.row.num_servers, cfg.deployed_servers, power_model);
+            let specs = polca::workload::spec::table4();
+            assign_servers(&mut row, &specs, 0, cfg.lp_fraction_override, &mut root_rng);
+            let train_count = cfg
+                .mixed
+                .as_ref()
+                .map(|m| {
+                    ((m.training_fraction * row.servers.len() as f64).round() as usize)
+                        .min(row.servers.len())
+                })
+                .unwrap_or(0);
+            if train_count > 0 {
+                polca::workload::spec::mark_training(&mut row, train_count);
+            }
+
+            let mut mean_service: Vec<f64> = Vec::new();
+            let mut est_rng = root_rng.fork(77);
+            for spec in &specs {
+                let mut acc = 0.0;
+                let n = 400;
+                for _ in 0..n {
+                    let (i, o) = sample_request(spec, &mut est_rng);
+                    acc += model.request_latency_s(i, o, 1.0, 1.0);
+                }
+                mean_service.push(acc / n as f64);
+            }
+
+            let idle_frac = row.power_model.calib.idle_frac;
+            let servers = row
+                .servers
+                .iter()
+                .map(|s| {
+                    let rate = cfg.peak_utilization / mean_service[s.workload_idx];
+                    ServerState {
+                        priority: s.priority,
+                        kind: s.job,
+                        workload_idx: s.workload_idx,
+                        freq_cap_mhz: None,
+                        current: None,
+                        queued: None,
+                        arrivals: ArrivalProcess::new(rate, root_rng.fork(1000 + s.id as u64))
+                            .with_phase(cfg.diurnal_phase_s),
+                        rng: root_rng.fork(2000 + s.id as u64),
+                        gen: 0,
+                        last_advance_s: 0.0,
+                        power_w: 0.0,
+                        train_level: idle_frac,
+                    }
+                })
+                .collect();
+
+            let mut train_jobs = Vec::new();
+            if let Some(m) = &cfg.mixed {
+                let train_idxs: Vec<usize> = row
+                    .servers
+                    .iter()
+                    .enumerate()
+                    .filter(|(_, s)| s.job == JobKind::Training)
+                    .map(|(i, _)| i)
+                    .collect();
+                if !train_idxs.is_empty() {
+                    let per =
+                        if m.servers_per_job == 0 { train_idxs.len() } else { m.servers_per_job };
+                    for (j, chunk) in train_idxs.chunks(per.max(1)).enumerate() {
+                        train_jobs.push(TrainJob {
+                            servers: chunk.to_vec(),
+                            model: TrainingPowerModel::with_calib(m.profile, row.power_model.calib),
+                            start_s: j as f64 * m.job_stagger_s.max(0.0),
+                            gen: 0,
+                            phase_idx: 0,
+                            iter_started_s: 0.0,
+                            iter_wall_s: m.profile.iter_time_s,
+                        });
+                    }
+                }
+            }
+            let mut report = RunReport::default();
+            if !train_jobs.is_empty() {
+                report.train.nominal_iter_s =
+                    cfg.mixed.as_ref().map(|m| m.profile.iter_time_s).unwrap_or(0.0);
+            }
+
+            let mut policy = PolicyEngine::new(cfg.policy_kind, cfg.exp.policy.clone());
+            policy.escalate_to_brake_after_s = cfg.brake_escalation_s;
+            let fault_events = cfg
+                .faults
+                .as_ref()
+                .map(|p| p.normalized().expect("invalid fault plan"))
+                .unwrap_or_default();
+            let oob = OobChannel::new(
+                cfg.exp.row.oob_latency_s,
+                cfg.exp.row.power_brake_latency_s,
+                cfg.exp.seed ^ 0xBEEF,
+            )
+            .with_unreliability(cfg.oob_loss_prob, cfg.oob_jitter_frac);
+            let horizon = secs(cfg.weeks * 7.0 * 86_400.0);
+            let telemetry = TelemetryBuffer::new(
+                cfg.exp.row.telemetry_delay_s,
+                cfg.weeks * 7.0 * 86_400.0 + 1.0,
+            );
+
+            let n_servers = row.servers.len();
+            let n_faults = fault_events.len();
+            Sim {
+                cfg,
+                model,
+                specs,
+                row,
+                servers,
+                train_jobs,
+                queue: EventQueue::with_capacity(1024),
+                policy,
+                oob,
+                telemetry,
+                braked: false,
+                brake_engaged_at: 0.0,
+                row_power_w: 0.0,
+                energy_acc_ws: 0.0,
+                last_power_change_s: 0.0,
+                last_telemetry_s: 0.0,
+                now_s: 0.0,
+                report,
+                horizon,
+                fault_events,
+                meter_bias: 1.0,
+                budget_mult: 1.0,
+                cap_ignore: vec![false; n_servers],
+                acked_lp: None,
+                acked_hp: None,
+                lp_last_issue_s: f64::NEG_INFINITY,
+                hp_last_issue_s: f64::NEG_INFINITY,
+                cur_incident: None,
+                incident_last_violation: vec![None; n_faults],
+            }
+        }
+
+        fn freq_ratio(&self, idx: usize) -> f64 {
+            if self.braked {
+                return self.cfg.exp.policy.brake_freq_mhz / self.cfg.exp.policy.max_freq_mhz;
+            }
+            match self.servers[idx].freq_cap_mhz {
+                Some(mhz) => mhz / self.cfg.exp.policy.max_freq_mhz,
+                None => 1.0,
+            }
+        }
+
+        fn cap_mode(&self, idx: usize) -> CapMode {
+            if self.braked {
+                CapMode::FreqCap { mhz: self.cfg.exp.policy.brake_freq_mhz }
+            } else {
+                match self.servers[idx].freq_cap_mhz {
+                    Some(mhz) => CapMode::FreqCap { mhz },
+                    None => CapMode::None,
+                }
+            }
+        }
+
+        fn server_phase(&self, idx: usize) -> Phase {
+            match &self.servers[idx].current {
+                None => Phase::Idle,
+                Some(inf) => match inf.exec.phase() {
+                    ExecPhase::Prompt => {
+                        Phase::Prompt { total_input: inf.exec.input * inf.exec.batch }
+                    }
+                    ExecPhase::Token | ExecPhase::Done => Phase::Token { batch: inf.exec.batch },
+                },
+            }
+        }
+
+        fn settle_energy(&mut self) {
+            let dt = (self.now_s - self.last_power_change_s).max(0.0);
+            if dt > 0.0 {
+                self.energy_acc_ws += self.row_power_w * dt;
+                let scaled_w = self.cfg.power_scale * self.row_power_w;
+                let budget_eff_w = self.row.budget_w * self.budget_mult;
+                let r = &mut self.report.resilience;
+                r.true_peak_norm = r.true_peak_norm.max(scaled_w / budget_eff_w);
+                if scaled_w > budget_eff_w {
+                    r.violation_s += dt;
+                    r.overshoot_ws += (scaled_w - budget_eff_w) * dt;
+                    r.peak_overshoot_w = r.peak_overshoot_w.max(scaled_w - budget_eff_w);
+                    if let Some(i) = self.cur_incident {
+                        self.incident_last_violation[i] = Some(self.now_s);
+                    }
+                } else if let Some(i) = self.cur_incident {
+                    if self.now_s >= self.fault_events[i].end_s() {
+                        self.cur_incident = None;
+                    }
+                }
+            }
+            self.last_power_change_s = self.now_s;
+        }
+
+        fn training_server_w(&self, idx: usize) -> f64 {
+            let cap = self.cap_mode(idx);
+            let nominal = self.servers[idx].train_level;
+            let frac = self.row.power_model.calib.capped_level(nominal, cap);
+            self.row.power_model.training_power_w(frac)
+        }
+
+        fn refresh_power(&mut self, idx: usize) {
+            self.settle_energy();
+            let w = match self.servers[idx].kind {
+                JobKind::Inference => {
+                    let phase = self.server_phase(idx);
+                    let cap = self.cap_mode(idx);
+                    self.row.power_model.server_power_w(phase, cap, false)
+                }
+                JobKind::Training => self.training_server_w(idx) / self.cfg.power_scale,
+            };
+            let s = &mut self.servers[idx];
+            self.row_power_w += w - s.power_w;
+            s.power_w = w;
+        }
+
+        fn averaged_row_power(&mut self) -> f64 {
+            self.settle_energy();
+            let window = (self.now_s - self.last_telemetry_s).max(1e-9);
+            let avg_w = self.energy_acc_ws / window;
+            self.energy_acc_ws = 0.0;
+            self.last_telemetry_s = self.now_s;
+            self.meter_bias * self.cfg.power_scale * avg_w
+                / (self.row.budget_w * self.budget_mult)
+        }
+
+        fn normalized_row_power(&self) -> f64 {
+            self.cfg.power_scale * self.row_power_w / self.row.budget_w
+        }
+
+        fn start_request(
+            &mut self,
+            idx: usize,
+            input: f64,
+            output: f64,
+            arrived_s: f64,
+            now_s: f64,
+        ) {
+            let exec = RequestExec::new(&self.model, input, output, 1.0);
+            self.servers[idx].current = Some(InFlight {
+                exec,
+                arrived_s,
+                priority: self.servers[idx].priority,
+            });
+            self.servers[idx].last_advance_s = now_s;
+            self.servers[idx].gen = self.servers[idx].gen.wrapping_add(1);
+            self.refresh_power(idx);
+            self.schedule_phase_end(idx, now_s);
+        }
+
+        fn schedule_phase_end(&mut self, idx: usize, now_s: f64) {
+            let ratio = self.freq_ratio(idx);
+            let wall = match &self.servers[idx].current {
+                Some(inf) if inf.exec.phase() != ExecPhase::Done => {
+                    inf.exec.wall_to_phase_end(&self.model, ratio)
+                }
+                _ => return,
+            };
+            let gen = self.servers[idx].gen;
+            self.queue
+                .schedule_at(secs(now_s + wall) + 1, Ev::PhaseEnd { server: idx as u32, gen });
+        }
+
+        fn advance_work(&mut self, idx: usize, now_s: f64) {
+            let ratio = self.freq_ratio(idx);
+            let last = self.servers[idx].last_advance_s;
+            if let Some(inf) = &mut self.servers[idx].current {
+                let dt = (now_s - last).max(0.0);
+                if dt > 0.0 {
+                    inf.exec.advance(&self.model, ratio, dt);
+                }
+            }
+            self.servers[idx].last_advance_s = now_s;
+        }
+
+        fn set_server_cap(&mut self, idx: usize, cap: Option<f64>, now_s: f64) {
+            if self.servers[idx].freq_cap_mhz == cap {
+                return;
+            }
+            self.advance_work(idx, now_s);
+            self.servers[idx].freq_cap_mhz = cap;
+            self.servers[idx].gen = self.servers[idx].gen.wrapping_add(1);
+            self.refresh_power(idx);
+            self.schedule_phase_end(idx, now_s);
+        }
+
+        fn set_brake(&mut self, on: bool, now_s: f64) {
+            if self.braked == on {
+                return;
+            }
+            for idx in 0..self.servers.len() {
+                self.advance_work(idx, now_s);
+            }
+            self.braked = on;
+            if on {
+                self.brake_engaged_at = now_s;
+            } else {
+                self.report.brake_time_s += now_s - self.brake_engaged_at;
+            }
+            for idx in 0..self.servers.len() {
+                self.servers[idx].gen = self.servers[idx].gen.wrapping_add(1);
+                self.refresh_power(idx);
+                self.schedule_phase_end(idx, now_s);
+            }
+        }
+
+        fn on_arrival(&mut self, idx: usize, now_s: f64) {
+            let next = self.servers[idx].arrivals.next_after(now_s);
+            self.queue.schedule_at(secs(next), Ev::Arrival { server: idx as u32 });
+
+            let spec = &self.specs[self.servers[idx].workload_idx];
+            let (input, output) = sample_request(spec, &mut self.servers[idx].rng);
+            if self.servers[idx].current.is_none() {
+                self.start_request(idx, input, output, now_s, now_s);
+            } else if self.servers[idx].queued.is_none() {
+                self.servers[idx].queued = Some(QueuedReq { input, output, arrived_s: now_s });
+            } else {
+                let pri = self.servers[idx].priority;
+                self.report.by_priority(pri).dropped += 1;
+            }
+        }
+
+        fn on_phase_end(&mut self, idx: usize, gen: u32, now_s: f64) {
+            if self.servers[idx].gen != gen {
+                return;
+            }
+            self.advance_work(idx, now_s);
+            let phase = self.servers[idx].current.as_ref().map(|i| i.exec.phase());
+            match phase {
+                Some(ExecPhase::Token) => {
+                    self.servers[idx].gen = self.servers[idx].gen.wrapping_add(1);
+                    self.refresh_power(idx);
+                    self.schedule_phase_end(idx, now_s);
+                }
+                Some(ExecPhase::Done) => {
+                    let inf = self.servers[idx].current.take().unwrap();
+                    let actual = now_s - inf.arrived_s;
+                    self.report.by_priority(inf.priority).record(
+                        actual,
+                        inf.exec.nominal_latency,
+                        inf.exec.output,
+                    );
+                    self.servers[idx].gen = self.servers[idx].gen.wrapping_add(1);
+                    if let Some(q) = self.servers[idx].queued.take() {
+                        self.start_request(idx, q.input, q.output, q.arrived_s, now_s);
+                    } else {
+                        self.refresh_power(idx);
+                    }
+                }
+                Some(ExecPhase::Prompt) | None => {
+                    self.refresh_power(idx);
+                    self.schedule_phase_end(idx, now_s);
+                }
+            }
+        }
+
+        fn on_telemetry(&mut self, now_s: f64) {
+            self.queue.schedule_in(secs(self.cfg.exp.row.telemetry_period_s), Ev::Telemetry);
+            let p = self.averaged_row_power();
+            if now_s == 0.0 {
+                return;
+            }
+            self.telemetry.record(now_s, p);
+            if !self.cfg.protection {
+                return;
+            }
+            let Some((_, visible)) = self.telemetry.visible_at(now_s) else {
+                return;
+            };
+            let actions = self.policy.tick(now_s, visible);
+            for act in actions {
+                let cmd = match act {
+                    Action::CapLp { mhz } => OobCommand::FreqCap { target: Priority::Low, mhz },
+                    Action::CapHp { mhz } => OobCommand::FreqCap { target: Priority::High, mhz },
+                    Action::UncapLp => OobCommand::Uncap { target: Priority::Low },
+                    Action::UncapHp => OobCommand::Uncap { target: Priority::High },
+                    Action::Brake => OobCommand::PowerBrake,
+                    Action::ReleaseBrake => OobCommand::ReleaseBrake,
+                };
+                self.issue_cmd(now_s, cmd);
+            }
+            self.reconcile_oob(now_s);
+        }
+
+        fn issue_cmd(&mut self, now_s: f64, cmd: OobCommand) {
+            match cmd {
+                OobCommand::FreqCap { target: Priority::Low, .. }
+                | OobCommand::Uncap { target: Priority::Low } => self.lp_last_issue_s = now_s,
+                OobCommand::FreqCap { target: Priority::High, .. }
+                | OobCommand::Uncap { target: Priority::High } => self.hp_last_issue_s = now_s,
+                OobCommand::PowerBrake | OobCommand::ReleaseBrake => {}
+            }
+            if let Some(apply_at) = self.oob.issue(now_s, cmd) {
+                self.queue.schedule_at(secs(apply_at), Ev::OobApply);
+            }
+        }
+
+        fn reconcile_oob(&mut self, now_s: f64) {
+            let timeout =
+                self.cfg.exp.row.oob_latency_s * 1.5 + self.cfg.exp.row.telemetry_period_s;
+            let intent = self.policy.intent();
+            if intent.lp_cap_mhz != self.acked_lp
+                && now_s - self.lp_last_issue_s > timeout
+                && !self.oob.has_pending(|c| targets(c, Priority::Low))
+            {
+                self.report.resilience.reissued_commands += 1;
+                let cmd = match intent.lp_cap_mhz {
+                    Some(mhz) => OobCommand::FreqCap { target: Priority::Low, mhz },
+                    None => OobCommand::Uncap { target: Priority::Low },
+                };
+                self.issue_cmd(now_s, cmd);
+            }
+            if intent.hp_cap_mhz != self.acked_hp
+                && now_s - self.hp_last_issue_s > timeout
+                && !self.oob.has_pending(|c| targets(c, Priority::High))
+            {
+                self.report.resilience.reissued_commands += 1;
+                let cmd = match intent.hp_cap_mhz {
+                    Some(mhz) => OobCommand::FreqCap { target: Priority::High, mhz },
+                    None => OobCommand::Uncap { target: Priority::High },
+                };
+                self.issue_cmd(now_s, cmd);
+            }
+        }
+
+        fn on_oob_apply(&mut self, now_s: f64) {
+            for pending in self.oob.due(now_s) {
+                match pending.cmd {
+                    OobCommand::FreqCap { target, mhz } => {
+                        self.report.cap_commands += 1;
+                        self.ack(target, Some(mhz));
+                        for idx in 0..self.servers.len() {
+                            if self.servers[idx].priority == target && !self.cap_ignore[idx] {
+                                self.set_server_cap(idx, Some(mhz), now_s);
+                            }
+                        }
+                    }
+                    OobCommand::Uncap { target } => {
+                        self.report.uncap_commands += 1;
+                        self.ack(target, None);
+                        for idx in 0..self.servers.len() {
+                            if self.servers[idx].priority == target && !self.cap_ignore[idx] {
+                                self.set_server_cap(idx, None, now_s);
+                            }
+                        }
+                    }
+                    OobCommand::PowerBrake => {
+                        self.report.brake_commands += 1;
+                        self.set_brake(true, now_s);
+                    }
+                    OobCommand::ReleaseBrake => self.set_brake(false, now_s),
+                }
+            }
+        }
+
+        fn ack(&mut self, target: Priority, cap: Option<f64>) {
+            match target {
+                Priority::Low => self.acked_lp = cap,
+                Priority::High => self.acked_hp = cap,
+            }
+        }
+
+        fn train_cap(&self, j: usize) -> CapMode {
+            self.cap_mode(self.train_jobs[j].servers[0])
+        }
+
+        fn apply_train_level(&mut self, j: usize) {
+            let level =
+                self.train_jobs[j].model.profile.phase_levels()[self.train_jobs[j].phase_idx];
+            let members = std::mem::take(&mut self.train_jobs[j].servers);
+            for &idx in &members {
+                self.servers[idx].train_level = level;
+                self.refresh_power(idx);
+            }
+            self.train_jobs[j].servers = members;
+        }
+
+        fn schedule_train_phase(&mut self, j: usize) {
+            let job = &self.train_jobs[j];
+            let b = job.model.profile.phase_bounds();
+            let end_s = job.iter_started_s + job.iter_wall_s * b[job.phase_idx + 1];
+            let gen = job.gen;
+            self.queue.schedule_at(secs(end_s) + 1, Ev::TrainPhase { job: j as u32, gen });
+        }
+
+        fn start_train_iteration(&mut self, j: usize, now_s: f64) {
+            let cap = self.train_cap(j);
+            let job = &mut self.train_jobs[j];
+            job.gen = job.gen.wrapping_add(1);
+            job.phase_idx = 0;
+            job.iter_started_s = now_s;
+            job.iter_wall_s = job.model.iter_time_s(cap);
+            self.apply_train_level(j);
+            self.schedule_train_phase(j);
+        }
+
+        fn on_train_phase(&mut self, j: usize, gen: u32, now_s: f64) {
+            if self.train_jobs[j].gen != gen {
+                return;
+            }
+            if self.train_jobs[j].phase_idx + 1 >= 4 {
+                let wall = now_s - self.train_jobs[j].iter_started_s;
+                self.report.train.record(wall);
+                self.start_train_iteration(j, now_s);
+            } else {
+                self.train_jobs[j].phase_idx += 1;
+                self.apply_train_level(j);
+                self.schedule_train_phase(j);
+            }
+        }
+
+        fn on_fault_start(&mut self, i: usize, now_s: f64) {
+            self.cur_incident = Some(i);
+            let ev = self.fault_events[i];
+            match ev.kind {
+                FaultKind::TelemetryFreeze => self.telemetry.freeze(now_s, ev.end_s()),
+                FaultKind::OobStorm { loss_prob, latency_mult, jitter_frac } => {
+                    self.oob.set_unreliability(loss_prob, jitter_frac);
+                    self.oob.set_latency_mult(latency_mult);
+                }
+                FaultKind::CapIgnore { server_frac } => {
+                    let n = ((server_frac * self.servers.len() as f64).ceil() as usize)
+                        .min(self.servers.len());
+                    for idx in 0..n {
+                        self.cap_ignore[idx] = true;
+                    }
+                }
+                FaultKind::MeterBias { mult } => self.meter_bias = mult,
+                FaultKind::FeedLoss { budget_frac } => {
+                    self.settle_energy();
+                    self.budget_mult = budget_frac.max(1e-6);
+                }
+            }
+        }
+
+        fn on_fault_end(&mut self, i: usize, now_s: f64) {
+            let ev = self.fault_events[i];
+            match ev.kind {
+                FaultKind::TelemetryFreeze => {}
+                FaultKind::OobStorm { .. } => {
+                    self.oob.set_unreliability(self.cfg.oob_loss_prob, self.cfg.oob_jitter_frac);
+                    self.oob.set_latency_mult(1.0);
+                }
+                FaultKind::CapIgnore { .. } => {
+                    for idx in 0..self.servers.len() {
+                        if !self.cap_ignore[idx] {
+                            continue;
+                        }
+                        self.cap_ignore[idx] = false;
+                        let cap = match self.servers[idx].priority {
+                            Priority::Low => self.acked_lp,
+                            Priority::High => self.acked_hp,
+                        };
+                        self.set_server_cap(idx, cap, now_s);
+                    }
+                }
+                FaultKind::MeterBias { .. } => self.meter_bias = 1.0,
+                FaultKind::FeedLoss { .. } => {
+                    self.settle_energy();
+                    self.budget_mult = 1.0;
+                }
+            }
+        }
+
+        fn finalize_incidents(&mut self) {
+            let scaled_w = self.cfg.power_scale * self.row_power_w;
+            let still_violating = scaled_w > self.row.budget_w * self.budget_mult;
+            for (i, f) in self.fault_events.iter().enumerate() {
+                let time_to_contain_s = match self.incident_last_violation[i] {
+                    None => 0.0,
+                    Some(_) if still_violating && self.cur_incident == Some(i) => f64::INFINITY,
+                    Some(last) => (last - f.start_s).max(0.0),
+                };
+                self.report.resilience.incidents.push(IncidentOutcome {
+                    label: f.kind.label().to_string(),
+                    start_s: f.start_s,
+                    end_s: f.end_s(),
+                    time_to_contain_s,
+                });
+            }
+        }
+
+        fn run(mut self) -> RunReport {
+            for idx in 0..self.servers.len() {
+                self.refresh_power(idx);
+            }
+            for idx in 0..self.servers.len() {
+                if self.servers[idx].kind == JobKind::Training {
+                    continue;
+                }
+                let t = self.servers[idx].arrivals.next_after(0.0);
+                self.queue.schedule_at(secs(t), Ev::Arrival { server: idx as u32 });
+            }
+            for j in 0..self.train_jobs.len() {
+                let start = self.train_jobs[j].start_s;
+                self.queue.schedule_at(secs(start), Ev::TrainStart { job: j as u32 });
+            }
+            self.queue.schedule_at(0, Ev::Telemetry);
+            if self.cfg.series_sample_s > 0.0 {
+                self.queue.schedule_at(0, Ev::SampleSeries);
+            }
+            for i in 0..self.fault_events.len() {
+                let f = self.fault_events[i];
+                self.queue.schedule_at(secs(f.start_s), Ev::FaultStart { fault: i as u32 });
+                self.queue.schedule_at(secs(f.end_s()), Ev::FaultEnd { fault: i as u32 });
+            }
+            self.queue.schedule_at(self.horizon, Ev::End);
+
+            while let Some((t, ev)) = self.queue.pop() {
+                let now_s = to_secs(t);
+                self.now_s = now_s;
+                match ev {
+                    Ev::Arrival { server } => self.on_arrival(server as usize, now_s),
+                    Ev::PhaseEnd { server, gen } => {
+                        self.on_phase_end(server as usize, gen, now_s)
+                    }
+                    Ev::Telemetry => self.on_telemetry(now_s),
+                    Ev::OobApply => self.on_oob_apply(now_s),
+                    Ev::TrainStart { job } => self.start_train_iteration(job as usize, now_s),
+                    Ev::TrainPhase { job, gen } => self.on_train_phase(job as usize, gen, now_s),
+                    Ev::SampleSeries => {
+                        self.report.power_series.push((now_s, self.normalized_row_power()));
+                        self.queue.schedule_in(secs(self.cfg.series_sample_s), Ev::SampleSeries);
+                    }
+                    Ev::FaultStart { fault } => self.on_fault_start(fault as usize, now_s),
+                    Ev::FaultEnd { fault } => self.on_fault_end(fault as usize, now_s),
+                    Ev::End => break,
+                }
+                if t >= self.horizon {
+                    break;
+                }
+            }
+
+            self.now_s = to_secs(self.horizon);
+            self.settle_energy();
+            self.finalize_incidents();
+            if self.braked {
+                self.report.brake_time_s += to_secs(self.horizon) - self.brake_engaged_at;
+            }
+            self.report.brake_events = self.policy.brake_events;
+            self.report.duration_s = to_secs(self.horizon);
+            self.report.events = self.queue.popped();
+            let (peak, p99, mean) = self.telemetry.utilization();
+            self.report.power_peak = peak;
+            self.report.power_p99 = p99;
+            self.report.power_mean = mean;
+            let spikes = self.telemetry.spike_stats(&[2.0, 5.0, 40.0]);
+            self.report.spike_2s = spikes[0].max_rise;
+            self.report.spike_5s = spikes[1].max_rise;
+            self.report.spike_40s = spikes[2].max_rise;
+            self.report
+        }
+    }
+}
+
+/// Assert the layered simulator and the pre-split reference produce
+/// byte-identical `Debug` renders for `cfg` (which covers every field
+/// of the report: counts, percentile buffers in push order, power
+/// statistics, resilience accounting, and the power series).
+fn assert_bit_identical(label: &str, cfg: &SimConfig) {
+    let new = run(cfg);
+    let old = reference::run(cfg);
+    assert_eq!(
+        format!("{new:?}"),
+        format!("{old:?}"),
+        "layered simulator diverged from the pre-split wiring: {label}"
+    );
+}
+
+fn quick(weeks: f64, servers: usize, deployed: usize, seed: u64) -> SimConfig {
+    let mut cfg = SimConfig::default();
+    cfg.weeks = weeks;
+    cfg.exp.row.num_servers = servers;
+    cfg.deployed_servers = deployed;
+    cfg.exp.seed = seed;
+    cfg.power_scale = 1.35;
+    cfg
+}
+
+#[test]
+fn golden_plain_row() {
+    assert_bit_identical("plain 12-server row", &quick(0.04, 12, 12, 42));
+}
+
+#[test]
+fn golden_oversubscribed_row_with_active_capping() {
+    // +50%: the policy engine caps, uncaps, and may brake — exercises
+    // the control layer's full issue/ack path.
+    assert_bit_identical("oversubscribed row", &quick(0.06, 12, 18, 7));
+}
+
+#[test]
+fn golden_heavy_row_brakes_and_power_series() {
+    let mut cfg = quick(0.05, 12, 22, 3);
+    cfg.series_sample_s = 300.0; // SampleSeries events interleave
+    assert_bit_identical("braked row + series", &cfg);
+}
+
+#[test]
+fn golden_unprotected_baseline() {
+    let cfg = quick(0.04, 12, 18, 11).baseline();
+    assert_bit_identical("unprotected baseline", &cfg);
+}
+
+#[test]
+fn golden_mixed_row_staggered_jobs() {
+    let mut cfg = quick(0.03, 12, 14, 5);
+    cfg.mixed = Some(MixedRowConfig {
+        training_fraction: 0.5,
+        servers_per_job: 3,
+        job_stagger_s: 2.5,
+        ..Default::default()
+    });
+    assert_bit_identical("mixed row, staggered jobs", &cfg);
+}
+
+#[test]
+fn golden_pure_training_row_under_polca() {
+    let mut cfg = quick(0.02, 12, 12, 9);
+    cfg.mixed = Some(MixedRowConfig { training_fraction: 1.0, ..Default::default() });
+    assert_bit_identical("pure training row", &cfg);
+}
+
+#[test]
+fn golden_cascade_fault_plan_with_escalation() {
+    let mut cfg = quick(0.06, 12, 17, 1);
+    let horizon_s = cfg.weeks * 7.0 * 86_400.0;
+    cfg.faults = Some(polca::faults::FaultPlan::scenario("cascade", horizon_s).unwrap());
+    cfg.brake_escalation_s = Some(120.0);
+    assert_bit_identical("cascade faults + escalation", &cfg);
+}
+
+#[test]
+fn golden_every_named_fault_scenario() {
+    // One pass over the whole built-in scenario registry: every
+    // FaultKind's start/end path crosses both implementations.
+    let base = quick(0.04, 12, 16, 13);
+    let horizon_s = base.weeks * 7.0 * 86_400.0;
+    for name in polca::faults::FaultPlan::scenario_names() {
+        if *name == "none" {
+            continue;
+        }
+        let mut cfg = base.clone();
+        cfg.faults = Some(polca::faults::FaultPlan::scenario(name, horizon_s).unwrap());
+        cfg.brake_escalation_s = Some(90.0);
+        assert_bit_identical(&format!("fault scenario '{name}'"), &cfg);
+    }
+}
+
+#[test]
+fn golden_lossy_oob_and_power_mult() {
+    let mut cfg = quick(0.05, 12, 18, 21);
+    cfg.oob_loss_prob = 0.3;
+    cfg.oob_jitter_frac = 0.2;
+    cfg.workload_power_mult = 1.05;
+    assert_bit_identical("lossy OOB + power mult", &cfg);
+}
+
+#[test]
+fn golden_sku_override_with_phase_offset() {
+    // H100 SKU: explicit server model, perf multiplier, scaled policy
+    // domain — plus a diurnal phase offset (the fleet layer's knob).
+    let sku = polca::fleet::sku::find("hgx-h100").unwrap();
+    let base = polca::characterize::catalog::find("BLOOM-176B").unwrap().power;
+    let mut cfg = quick(0.04, 12, 15, 17);
+    cfg.server_model = Some(sku.server_model(base));
+    cfg.perf_mult = sku.perf_mult;
+    sku.scale_policy(&mut cfg.exp.policy);
+    cfg.diurnal_phase_s = 3.0 * 3600.0;
+    cfg.workload_power_mult = 1.05; // exercises the explicit-model rescale path
+    assert_bit_identical("H100 SKU + phase offset", &cfg);
+}
+
+#[test]
+fn golden_lp_fraction_override() {
+    let mut cfg = quick(0.04, 12, 16, 23);
+    cfg.lp_fraction_override = Some(0.25);
+    assert_bit_identical("LP fraction override", &cfg);
+}

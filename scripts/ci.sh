@@ -105,6 +105,37 @@ done
 echo "== scenario smoke: polca run oversubscribed-row --quick --weeks 0.02"
 ./target/release/polca run oversubscribed-row --quick --weeks 0.02 | tail -n 3
 
+# Executor gate (ISSUE 5): the parallel scenario executor must be
+# bit-identical to the serial reference path on a user-facing surface —
+# run the quick fault matrix both ways and diff the rendered output.
+echo "== executor determinism smoke (faults matrix --quick, serial vs parallel)"
+par_out=$(mktemp)
+ser_out=$(mktemp)
+./target/release/polca faults matrix --quick >"$par_out" 2>/dev/null
+./target/release/polca faults matrix --quick --serial >"$ser_out" 2>/dev/null
+diff "$par_out" "$ser_out" || {
+  echo "parallel and serial fault-matrix outputs differ" >&2
+  exit 1
+}
+rm -f "$par_out" "$ser_out"
+
+# JSON surface (ISSUE 5): machine-readable output must stay parseable.
+echo "== json smoke (polca faults matrix --quick --json | python parse)"
+if command -v python3 >/dev/null 2>&1; then
+  ./target/release/polca faults matrix --quick --json 2>/dev/null \
+    | python3 -c 'import json,sys; d=json.load(sys.stdin); assert d["clean_match"] is True, d'
+else
+  echo "   (python3 not found — parse check skipped)"
+fi
+
+# Bench smoke (ISSUE 5): record the sweep serial-vs-parallel trajectory
+# to BENCH_sim.json on every CI run. Remove any stale file first so the
+# existence check below proves THIS run wrote it.
+echo "== bench smoke (bench_sim --smoke writes BENCH_sim.json)"
+rm -f BENCH_sim.json
+cargo bench --bench bench_sim -- --smoke | tail -n 4
+test -f BENCH_sim.json || { echo "BENCH_sim.json was not written" >&2; exit 1; }
+
 # Docs gate (ISSUE 2): the crate carries #![warn(missing_docs)] and the
 # ARCHITECTURE/README docs reference rustdoc items — keep both honest by
 # denying all rustdoc warnings (missing docs, broken intra-doc links).
