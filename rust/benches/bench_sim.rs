@@ -1,8 +1,10 @@
 //! L3 bench: discrete-event simulator throughput (events/s) — the §Perf
 //! headline for the evaluation vehicle — plus the DES queue in
-//! isolation and the scenario-executor speedup (a quick sweep batch,
-//! serial vs parallel), recorded to `BENCH_sim.json` so the perf
-//! trajectory of the matrix/sweep paths is tracked across PRs.
+//! isolation, the scenario-executor speedup (a quick sweep batch,
+//! serial vs parallel), the traced-vs-untraced recording overhead
+//! (`trace_overhead_frac`), and a profiled-batch utilization snapshot,
+//! recorded to `BENCH_sim.json` so the perf trajectory of the
+//! matrix/sweep/trace paths is tracked across PRs.
 //!
 //! `--smoke` (the CI mode) shrinks every measurement budget so the run
 //! finishes in seconds while still writing a complete BENCH_sim.json.
@@ -10,10 +12,11 @@
 use std::time::Duration;
 
 use polca::benchkit::{bench, black_box, BenchConfig};
-use polca::exec::{run_batch, ExecConfig};
+use polca::exec::{run_batch, run_batch_profiled, ExecConfig};
+use polca::obs::{batch_stats, Recorder, RecorderConfig};
 use polca::policy::engine::PolicyKind;
 use polca::sim::EventQueue;
-use polca::simulation::{run, SimConfig};
+use polca::simulation::{run, run_observed, SimConfig};
 use polca::util::json::Json;
 
 /// One item of the sweep batch the executor benchmark fans out: the
@@ -108,6 +111,46 @@ fn main() {
         parallel_r.throughput()
     );
 
+    // Trace overhead (ISSUE 6): the same one-day simulation with a live
+    // Recorder attached — what observing costs when someone IS watching.
+    // (The off path is pinned elsewhere: golden tests prove the
+    // NoopObserver simulator is bit-identical to the pre-trace code.)
+    let mut traced_cfg = SimConfig::default();
+    traced_cfg.weeks = if smoke { 0.02 } else { 1.0 / 7.0 };
+    traced_cfg.deployed_servers = 52;
+    traced_cfg.exp.seed = 3;
+    traced_cfg.policy_kind = PolicyKind::Polca;
+    let traced_events = run(&traced_cfg).events as f64;
+    let traced_r = bench("cluster_sim_1day_52srv_polca_traced", &slow_cfg, traced_events, || {
+        let mut rec = Recorder::new(RecorderConfig::default());
+        black_box(run_observed(&traced_cfg, &mut rec));
+        black_box(rec);
+    });
+    println!("{}  [= events/s]", traced_r.report());
+    let untraced = sim_events_per_s[0].1; // ("polca", events/s) measured above
+    let trace_overhead_frac = 1.0 - traced_r.throughput() / untraced;
+    println!(
+        "trace overhead: {:.1}% ({:.0} -> {:.0} events/s with a Recorder attached)",
+        trace_overhead_frac * 100.0,
+        untraced,
+        traced_r.throughput()
+    );
+
+    // Profiled-batch utilization: run_batch_profiled's wall-clock spans
+    // folded into a lane-packing profile. One shot, not a bench loop —
+    // the numbers are wall-clock and vary; the trajectory is what CI
+    // tracks.
+    let (outs, spans) = run_batch_profiled(&batch, &ExecConfig::default(), |_, c| run(c));
+    black_box(outs);
+    let profile = batch_stats(&spans, threads.min(batch.len()));
+    println!(
+        "profiled batch: {} items, {:.3}s wall, {:.0}% busy across {} workers",
+        profile.items,
+        profile.wall_s,
+        profile.busy_frac * 100.0,
+        profile.workers
+    );
+
     // Record the trajectory: BENCH_sim.json at the workspace root.
     let doc = Json::obj(vec![
         ("smoke", Json::Bool(smoke)),
@@ -123,6 +166,10 @@ fn main() {
         ("sweep_runs_per_s_serial", Json::Num(serial_r.throughput())),
         ("sweep_runs_per_s_parallel", Json::Num(parallel_r.throughput())),
         ("sweep_parallel_speedup", Json::Num(speedup)),
+        ("sim_events_per_s_traced", Json::num(traced_r.throughput())),
+        ("trace_overhead_frac", Json::num(trace_overhead_frac)),
+        ("profiled_batch_wall_s", Json::num(profile.wall_s)),
+        ("profiled_batch_busy_frac", Json::num(profile.busy_frac)),
     ]);
     let path = "BENCH_sim.json";
     match std::fs::write(path, doc.to_pretty() + "\n") {

@@ -33,7 +33,9 @@
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::thread;
+use std::time::Instant;
 
+use crate::obs::Span;
 use crate::util::rng::Rng;
 
 /// How to execute one batch.
@@ -131,6 +133,82 @@ where
     slots.into_iter().map(|s| s.expect("every batch slot filled")).collect()
 }
 
+/// [`run_batch`] plus a wall-clock [`Span`] per item (the hot-path
+/// profile behind `bench_sim`'s traced-overhead numbers and the
+/// ROADMAP's raw-speed baseline).
+///
+/// The returned outputs are exactly `run_batch`'s: spans are recorded
+/// on the side, so the executor's bit-identity contract is untouched —
+/// but note the spans themselves are wall-clock measurements and NOT
+/// deterministic. Spans are returned sorted by start time; `span.name`
+/// is `item-<i>` and `span.worker` is the worker lane that ran it (0
+/// on the serial path).
+pub fn run_batch_profiled<I, O, F>(
+    items: &[I],
+    cfg: &ExecConfig,
+    f: F,
+) -> (Vec<O>, Vec<Span>)
+where
+    I: Sync,
+    O: Send,
+    F: Fn(usize, &I) -> O + Sync,
+{
+    let t0 = Instant::now();
+    let n = items.len();
+    if !cfg.parallel || n <= 1 {
+        let mut outs = Vec::with_capacity(n);
+        let mut spans = Vec::with_capacity(n);
+        for (i, item) in items.iter().enumerate() {
+            let start_s = t0.elapsed().as_secs_f64();
+            outs.push(f(i, item));
+            let dur_s = t0.elapsed().as_secs_f64() - start_s;
+            spans.push(Span { name: format!("item-{i}"), start_s, dur_s, worker: 0 });
+        }
+        return (outs, spans);
+    }
+    let workers = cfg.workers(n);
+    let next = AtomicUsize::new(0);
+    let mut slots: Vec<Option<O>> = (0..n).map(|_| None).collect();
+    let mut all_spans: Vec<Span> = Vec::with_capacity(n);
+    thread::scope(|s| {
+        let handles: Vec<_> = (0..workers)
+            .map(|w| {
+                let next = &next;
+                let f = &f;
+                let t0 = &t0;
+                s.spawn(move || {
+                    let mut local: Vec<(usize, O, Span)> = Vec::new();
+                    loop {
+                        let i = next.fetch_add(1, Ordering::Relaxed);
+                        if i >= n {
+                            break;
+                        }
+                        let start_s = t0.elapsed().as_secs_f64();
+                        let out = f(i, &items[i]);
+                        let dur_s = t0.elapsed().as_secs_f64() - start_s;
+                        local.push((
+                            i,
+                            out,
+                            Span { name: format!("item-{i}"), start_s, dur_s, worker: w },
+                        ));
+                    }
+                    local
+                })
+            })
+            .collect();
+        for h in handles {
+            for (i, out, span) in h.join().expect("executor worker panicked") {
+                slots[i] = Some(out);
+                all_spans.push(span);
+            }
+        }
+    });
+    all_spans
+        .sort_by(|a, b| a.start_s.partial_cmp(&b.start_s).unwrap_or(std::cmp::Ordering::Equal));
+    let outs = slots.into_iter().map(|s| s.expect("every batch slot filled")).collect();
+    (outs, all_spans)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -177,6 +255,24 @@ mod tests {
         // a sweep must not reshuffle the seeds of the items kept).
         assert_eq!(&a[..5], &item_seeds(42, 5)[..]);
         assert_ne!(item_seeds(43, 5), item_seeds(42, 5));
+    }
+
+    #[test]
+    fn profiled_batch_matches_plain_outputs_with_one_span_per_item() {
+        let items: Vec<u64> = (0..37).collect();
+        for cfg in [ExecConfig::serial(), ExecConfig { parallel: true, threads: 4 }] {
+            let (out, spans) = run_batch_profiled(&items, &cfg, |_, &x| x * 3);
+            assert_eq!(out, items.iter().map(|x| x * 3).collect::<Vec<u64>>());
+            assert_eq!(spans.len(), items.len());
+            let mut idxs: Vec<usize> = spans
+                .iter()
+                .map(|s| s.name.strip_prefix("item-").unwrap().parse().unwrap())
+                .collect();
+            idxs.sort();
+            assert_eq!(idxs, (0..items.len()).collect::<Vec<usize>>());
+            assert!(spans.iter().all(|s| s.dur_s >= 0.0 && s.start_s >= 0.0));
+            assert!(spans.windows(2).all(|w| w[0].start_s <= w[1].start_s), "sorted by start");
+        }
     }
 
     #[test]

@@ -249,9 +249,9 @@ impl MatrixOutcome {
                 ("true_peak", Json::Num(c.true_peak)),
                 ("violation_s", Json::Num(c.violation_s)),
                 ("peak_overshoot_w", Json::Num(c.peak_overshoot_w)),
-                // Json renders non-finite numbers as null ("never
-                // contained" is null, not a fake large number).
-                ("time_to_contain_s", Json::Num(c.time_to_contain_s)),
+                // Json::num: "never contained" is null, not a fake
+                // large number (the crate-wide non-finite convention).
+                ("time_to_contain_s", Json::num(c.time_to_contain_s)),
                 ("contained", Json::Bool(c.contained)),
                 ("brake_events", Json::Num(c.brake_events as f64)),
                 ("brake_commands", Json::Num(c.brake_commands as f64)),

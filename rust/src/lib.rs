@@ -24,6 +24,12 @@
 //!   every multi-run surface (fault matrix, policy and mixed sweeps,
 //!   fleet cluster fan-out) runs its batch through one scoped-thread
 //!   work-stealing pool, bit-identical to the serial reference path.
+//! * **Observability** — [`obs`]: the zero-cost-when-off trace layer —
+//!   a passive observer threaded through every simulation layer records
+//!   control-loop events, decimated time series, and hot-path counters
+//!   into first-class traces with JSONL/CSV/Chrome exporters and an
+//!   incident-timeline renderer (`polca run --trace`, `polca trace`;
+//!   schema in `docs/OBSERVABILITY.md`).
 //! * **Fleet layer** — [`fleet`] (heterogeneous SKU registry, site
 //!   topology with compositional power traces, parallel multi-cluster
 //!   execution, and the site-level capacity planner behind
@@ -59,6 +65,7 @@ pub mod experiments;
 pub mod faults;
 pub mod fleet;
 pub mod metrics;
+pub mod obs;
 pub mod perfmodel;
 pub mod policy;
 pub mod power;

@@ -4,9 +4,16 @@
 //! every run, see `rust/src/scenario/`):
 //!   run <preset|file.toml> [--quick] [--policy P] [--weeks W]
 //!       [--seed N] [--servers N] [--added FRAC] [--training FRAC]
-//!       [--escalate S] [--json]
+//!       [--escalate S] [--json] [--trace FILE [--trace-format F]]
 //!       Execute one scenario (row simulation or site plan); --json
-//!       emits the machine-readable ScenarioReport on stdout.
+//!       emits the machine-readable ScenarioReport on stdout. --trace
+//!       records the run through the observability layer (`polca::obs`)
+//!       and writes the trace as jsonl (default), csv, or chrome
+//!       (chrome://tracing); the report gains per-incident timelines.
+//!   trace [summarize|timeline|export] <trace.jsonl>
+//!       [--format jsonl|csv|chrome] [--out FILE]
+//!       Inspect or convert a recorded trace (schema in
+//!       docs/OBSERVABILITY.md).
 //!   scenario list
 //!       Named presets with descriptions.
 //!   scenario show <preset|file>      Print the scenario as TOML.
@@ -44,9 +51,18 @@ use polca::simulation::calibrate;
 use polca::util::cli::Args;
 
 fn main() {
+    // The library's diagnostics are quiet by default (embedders opt
+    // in); the CLI wants them on stderr.
+    polca::obs::set_diag_handler(Box::new(|e| match e {
+        polca::obs::DiagEvent::CalibrationFit { baseline_servers } => eprintln!(
+            "calibrating power_scale for {baseline_servers}-server rows \
+             (one-time simulation of one day; cached afterwards) ..."
+        ),
+    }));
     let args = Args::from_env();
     let result = match args.subcommand.as_deref() {
         Some("run") => cmd_run(&args),
+        Some("trace") => cmd_trace(&args),
         Some("scenario") => cmd_scenario(&args),
         Some("figure") => cmd_figure(&args),
         Some("simulate") => cmd_simulate(&args),
@@ -75,10 +91,12 @@ fn main() {
 fn print_help() {
     println!(
         "polca — Power Oversubscription in LLM Cloud Providers (reproduction)\n\n\
-         usage: polca <run|scenario|figure|tune|calibrate|serve> [options]\n\
+         usage: polca <run|trace|scenario|figure|tune|calibrate|serve> [options]\n\
          try:   polca scenario list\n       \
                 polca run oversubscribed-row --quick\n       \
-                polca run cascade-faults\n       \
+                polca run cascade-faults --trace cascade.jsonl\n       \
+                polca trace timeline cascade.jsonl\n       \
+                polca trace export cascade.jsonl --format chrome\n       \
                 polca run examples/scenarios/custom-fault-timeline.toml\n       \
                 polca scenario save mixed-row --out my-row.toml\n       \
                 polca figure fig13 --out-dir out\n       \
@@ -152,15 +170,29 @@ fn apply_overrides(sc: &mut Scenario, args: &Args) -> anyhow::Result<()> {
 
 /// Validate, announce, execute, and print one scenario — the single
 /// execution path behind `polca run` and every deprecated alias.
-/// With `json`, stdout carries exactly one machine-readable document
-/// (the human narration stays on stderr).
-fn run_and_print(sc: &Scenario, json: bool) -> anyhow::Result<()> {
+/// With `--json`, stdout carries exactly one machine-readable document
+/// (the human narration stays on stderr). With `--trace FILE`, the run
+/// goes through [`polca::obs::Recorder`], the trace lands in FILE
+/// (`--trace-format jsonl|csv|chrome`, default jsonl), and the report
+/// gains per-incident timelines — observation is passive, so the
+/// numbers are bit-identical to an untraced run.
+fn run_and_print(sc: &Scenario, args: &Args) -> anyhow::Result<()> {
     sc.validate()?;
     eprintln!("{}", sc.describe());
     let t = std::time::Instant::now();
-    let mut report = sc.run()?;
+    let mut report = match args.get("trace") {
+        Some(path) => {
+            let mut rec = polca::obs::Recorder::new(polca::obs::RecorderConfig::default());
+            let mut report = sc.run_observed(&mut rec)?;
+            let records = rec.into_trace(&sc.name).records();
+            report.timeline = Some(polca::obs::export::incident_timeline(&records));
+            write_trace(&records, Path::new(path), args.get_or("trace-format", "jsonl"))?;
+            report
+        }
+        None => sc.run()?,
+    };
     let wall = t.elapsed().as_secs_f64();
-    if json {
+    if args.flag("json") {
         println!("{}", report.to_json().to_pretty());
         return Ok(());
     }
@@ -172,6 +204,73 @@ fn run_and_print(sc: &Scenario, json: bool) -> anyhow::Result<()> {
             wall,
             row.report.events as f64 / wall / 1e6
         );
+    }
+    Ok(())
+}
+
+/// Write trace records to `path` in one of the export formats.
+fn write_trace(
+    records: &[polca::util::json::Json],
+    path: &Path,
+    format: &str,
+) -> anyhow::Result<()> {
+    use polca::obs::export;
+    match format {
+        "jsonl" => std::fs::write(path, export::to_jsonl(records))?,
+        "csv" => export::to_csv(records).write_to(path)?,
+        "chrome" => std::fs::write(path, export::to_chrome(records).to_pretty())?,
+        other => anyhow::bail!("unknown trace format '{other}' (jsonl|csv|chrome)"),
+    }
+    eprintln!("wrote {} trace records to {} ({format})", records.len(), path.display());
+    Ok(())
+}
+
+/// `polca trace` — inspect or convert a recorded JSONL trace.
+fn cmd_trace(args: &Args) -> anyhow::Result<()> {
+    use polca::obs::export;
+    const USAGE: &str = "usage: polca trace [summarize|timeline|export] <trace.jsonl> \
+                         [--format jsonl|csv|chrome] [--out FILE]";
+    // `polca trace t.jsonl` defaults to summarize.
+    let (mode, file) = match (args.positionals.first(), args.positionals.get(1)) {
+        (Some(m), Some(f)) => (m.as_str(), f.as_str()),
+        (Some(f), None) if !matches!(f.as_str(), "summarize" | "timeline" | "export") => {
+            ("summarize", f.as_str())
+        }
+        _ => anyhow::bail!("{USAGE}"),
+    };
+    let text = std::fs::read_to_string(file)
+        .map_err(|e| anyhow::anyhow!("cannot read trace '{file}': {e}"))?;
+    let records =
+        export::parse_jsonl(&text).map_err(|e| anyhow::anyhow!("invalid trace '{file}': {e}"))?;
+    match mode {
+        "summarize" => println!("{}", export::summarize(&records).trim_end()),
+        "timeline" => {
+            let tls = export::incident_timeline(&records);
+            if tls.is_empty() {
+                println!(
+                    "no incidents in {} records (no fault or violation windows)",
+                    records.len()
+                );
+            } else {
+                print!("{}", export::render_timeline(&tls));
+            }
+        }
+        "export" => {
+            let format = args.get_or("format", "chrome");
+            let out = match args.get("out") {
+                Some(o) => PathBuf::from(o),
+                None => {
+                    let ext = match format {
+                        "chrome" => "trace.json",
+                        "csv" => "csv",
+                        _ => "out.jsonl",
+                    };
+                    PathBuf::from(format!("{file}.{ext}"))
+                }
+            };
+            write_trace(&records, &out, format)?;
+        }
+        other => anyhow::bail!("unknown trace mode '{other}' (summarize|timeline|export)"),
     }
     Ok(())
 }
@@ -189,7 +288,7 @@ fn cmd_run(args: &Args) -> anyhow::Result<()> {
         sc = sc.quick();
     }
     apply_overrides(&mut sc, args)?;
-    run_and_print(&sc, args.flag("json"))
+    run_and_print(&sc, args)
 }
 
 fn list_presets() {
@@ -286,7 +385,7 @@ fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
         sc.exp = ExperimentConfig::load(Path::new(path))?;
     }
     apply_overrides(&mut sc, args)?;
-    run_and_print(&sc, args.flag("json"))
+    run_and_print(&sc, args)
 }
 
 fn cmd_tune(args: &Args) -> anyhow::Result<()> {
@@ -361,7 +460,7 @@ fn cmd_mixed(args: &Args) -> anyhow::Result<()> {
             sc.training.fraction = sc.training.fraction.clamp(0.0, 1.0);
             sc.training.servers_per_job = args.get_usize("servers-per-job", 0);
             sc.training.stagger_s = args.get_f64("stagger", 0.0);
-            run_and_print(&sc, args.flag("json"))
+            run_and_print(&sc, args)
         }
         "sweep" => {
             let mut sc = SweepConfig::default();
@@ -444,7 +543,7 @@ fn cmd_faults(args: &Args) -> anyhow::Result<()> {
                 .escalate(120.0)
                 .build();
             apply_overrides(&mut sc, args)?;
-            run_and_print(&sc, args.flag("json"))?;
+            run_and_print(&sc, args)?;
         }
         "sweep" => {
             let mut mc = MatrixConfig::default();
@@ -554,7 +653,7 @@ fn cmd_faults(args: &Args) -> anyhow::Result<()> {
                 .escalate(120.0)
                 .build();
             apply_overrides(&mut sc, args)?;
-            run_and_print(&sc, args.flag("json"))?;
+            run_and_print(&sc, args)?;
         }
         other => anyhow::bail!("unknown faults mode '{other}' (run|sweep|matrix|plan|list)"),
     }

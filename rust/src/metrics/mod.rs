@@ -395,8 +395,9 @@ impl RunReport {
     /// Machine-readable view of the run (the `polca run --json` report
     /// block): the summary-level observables, per-priority counts and
     /// latency percentiles, training and resilience accounting. `&mut`
-    /// because latency percentiles sort lazily. Non-finite numbers
-    /// (an uncontained incident's time-to-contain) render as JSON null.
+    /// because latency percentiles sort lazily. Quantities that can be
+    /// non-finite (an uncontained incident's time-to-contain) go
+    /// through [`Json::num`] and render as JSON null.
     pub fn to_json(&mut self) -> Json {
         fn priority_json(p: &mut PriorityMetrics) -> Json {
             let (p50, p99) = if p.latency.is_empty() {
@@ -426,7 +427,7 @@ impl RunReport {
                 ("label", Json::Str(i.label.clone())),
                 ("start_s", Json::Num(i.start_s)),
                 ("end_s", Json::Num(i.end_s)),
-                ("time_to_contain_s", Json::Num(i.time_to_contain_s)),
+                ("time_to_contain_s", Json::num(i.time_to_contain_s)),
                 ("contained", Json::Bool(i.contained())),
             ])
         });

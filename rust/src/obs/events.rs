@@ -1,0 +1,287 @@
+//! Structured control-loop events with simulation timestamps.
+//!
+//! [`EventKind`] enumerates every lifecycle transition the control loop
+//! makes: command issue/ack through the OOB channel, brake engage and
+//! release, fault episodes, budget-violation windows, telemetry reads,
+//! and training phase changes. Events are cheap `Copy` values stamped
+//! with sim-time seconds by the emitting layer; the
+//! [`Recorder`](crate::obs::Recorder) ring-buffers them and
+//! [`export`](crate::obs::export) serializes them to JSONL / CSV /
+//! Chrome trace-event form.
+
+use crate::cluster::hierarchy::Priority;
+use crate::util::json::Json;
+
+/// Export name for a priority class.
+fn class_str(p: Priority) -> &'static str {
+    match p {
+        Priority::Low => "lp",
+        Priority::High => "hp",
+    }
+}
+
+/// One lifecycle transition in the control loop.
+///
+/// Fault labels and entity ids are `Copy`-friendly (`&'static str` /
+/// indices) so emission sites stay allocation-free.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum EventKind {
+    /// A frequency-cap command entered the OOB channel.
+    CapIssued {
+        /// Priority class being capped.
+        class: Priority,
+        /// Commanded frequency ceiling.
+        mhz: f64,
+    },
+    /// An uncap command entered the OOB channel.
+    UncapIssued {
+        /// Priority class being released.
+        class: Priority,
+    },
+    /// A command timed out without an ack and was re-issued
+    /// (the re-issue itself also appears as its own issue event).
+    CapReissued {
+        /// Priority class of the stale intent.
+        class: Priority,
+        /// The re-commanded ceiling; `None` when the intent is uncap.
+        mhz: Option<f64>,
+    },
+    /// A frequency-cap command was delivered and acknowledged.
+    CapAcked {
+        /// Priority class that acknowledged.
+        class: Priority,
+        /// Acknowledged frequency ceiling.
+        mhz: f64,
+    },
+    /// An uncap command was delivered and acknowledged.
+    UncapAcked {
+        /// Priority class that acknowledged.
+        class: Priority,
+    },
+    /// A power-brake command entered the OOB channel.
+    BrakeIssued,
+    /// A brake-release command entered the OOB channel.
+    BrakeReleaseIssued,
+    /// The row-wide power brake took effect.
+    BrakeEngaged,
+    /// The row-wide power brake was released.
+    BrakeReleased,
+    /// An injected fault episode began.
+    FaultStart {
+        /// Index of the episode in the run's fault plan.
+        fault: u32,
+        /// Fault-kind label (e.g. `feed-loss`).
+        label: &'static str,
+    },
+    /// An injected fault episode ended.
+    FaultEnd {
+        /// Index of the episode in the run's fault plan.
+        fault: u32,
+        /// Fault-kind label (e.g. `feed-loss`).
+        label: &'static str,
+    },
+    /// Scaled row power crossed above the effective budget.
+    ///
+    /// Stamped at the start of the settled segment that first exceeded
+    /// the budget, which can precede the emission instant.
+    ViolationStart {
+        /// Watts over the effective budget when the window opened.
+        over_w: f64,
+    },
+    /// Scaled row power dropped back under the effective budget.
+    ViolationContained,
+    /// The control plane read the averaged power meter.
+    Telemetry {
+        /// Reading as seen by the policy (normalized to budget; includes
+        /// meter bias and the averaging window).
+        reported: f64,
+    },
+    /// A training job moved to a new iteration phase.
+    TrainPhase {
+        /// Training job index.
+        job: u32,
+        /// Phase index within the iteration (0-based).
+        phase: u32,
+        /// Relative power level the phase pushes to its servers.
+        level: f64,
+    },
+    /// A training job completed one full iteration.
+    TrainIter {
+        /// Training job index.
+        job: u32,
+        /// Wall-clock (sim) seconds the iteration took.
+        wall_s: f64,
+    },
+}
+
+impl EventKind {
+    /// Stable kebab-case label used in exports and timelines.
+    pub fn label(self) -> &'static str {
+        match self {
+            EventKind::CapIssued { .. } => "cap-issued",
+            EventKind::UncapIssued { .. } => "uncap-issued",
+            EventKind::CapReissued { .. } => "cap-reissued",
+            EventKind::CapAcked { .. } => "cap-acked",
+            EventKind::UncapAcked { .. } => "uncap-acked",
+            EventKind::BrakeIssued => "brake-issued",
+            EventKind::BrakeReleaseIssued => "brake-release-issued",
+            EventKind::BrakeEngaged => "brake-engaged",
+            EventKind::BrakeReleased => "brake-released",
+            EventKind::FaultStart { .. } => "fault-start",
+            EventKind::FaultEnd { .. } => "fault-end",
+            EventKind::ViolationStart { .. } => "violation-start",
+            EventKind::ViolationContained => "violation-contained",
+            EventKind::Telemetry { .. } => "telemetry",
+            EventKind::TrainPhase { .. } => "train-phase",
+            EventKind::TrainIter { .. } => "train-iter",
+        }
+    }
+}
+
+/// A timestamped [`EventKind`].
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Event {
+    /// Simulation time of the transition, in seconds.
+    pub t_s: f64,
+    /// What happened.
+    pub kind: EventKind,
+}
+
+impl Event {
+    /// Stable kebab-case label of the underlying kind.
+    pub fn label(&self) -> &'static str {
+        self.kind.label()
+    }
+
+    /// Serialize to one trace record (`{"type": "event", ...}`).
+    pub fn to_record(&self) -> Json {
+        let mut pairs: Vec<(&str, Json)> = vec![
+            ("type", Json::Str("event".to_string())),
+            ("t_s", Json::num(self.t_s)),
+            ("event", Json::Str(self.label().to_string())),
+        ];
+        match self.kind {
+            EventKind::CapIssued { class, mhz } | EventKind::CapAcked { class, mhz } => {
+                pairs.push(("class", Json::Str(class_str(class).to_string())));
+                pairs.push(("mhz", Json::num(mhz)));
+            }
+            EventKind::UncapIssued { class } | EventKind::UncapAcked { class } => {
+                pairs.push(("class", Json::Str(class_str(class).to_string())));
+            }
+            EventKind::CapReissued { class, mhz } => {
+                pairs.push(("class", Json::Str(class_str(class).to_string())));
+                if let Some(mhz) = mhz {
+                    pairs.push(("mhz", Json::num(mhz)));
+                }
+            }
+            EventKind::BrakeIssued
+            | EventKind::BrakeReleaseIssued
+            | EventKind::BrakeEngaged
+            | EventKind::BrakeReleased
+            | EventKind::ViolationContained => {}
+            EventKind::FaultStart { fault, label } | EventKind::FaultEnd { fault, label } => {
+                pairs.push(("fault", Json::num(fault as f64)));
+                pairs.push(("label", Json::Str(label.to_string())));
+            }
+            EventKind::ViolationStart { over_w } => {
+                pairs.push(("over_w", Json::num(over_w)));
+            }
+            EventKind::Telemetry { reported } => {
+                pairs.push(("reported", Json::num(reported)));
+            }
+            EventKind::TrainPhase { job, phase, level } => {
+                pairs.push(("job", Json::num(job as f64)));
+                pairs.push(("phase", Json::num(phase as f64)));
+                pairs.push(("level", Json::num(level)));
+            }
+            EventKind::TrainIter { job, wall_s } => {
+                pairs.push(("job", Json::num(job as f64)));
+                pairs.push(("wall_s", Json::num(wall_s)));
+            }
+        }
+        Json::obj(pairs)
+    }
+
+    /// One-line human rendering used by timelines (label plus the
+    /// fields that matter at a glance).
+    pub fn describe(&self) -> String {
+        match self.kind {
+            EventKind::CapIssued { class, mhz } => {
+                format!("cap-issued {} {:.0}MHz", class_str(class), mhz)
+            }
+            EventKind::UncapIssued { class } => format!("uncap-issued {}", class_str(class)),
+            EventKind::CapReissued { class, mhz } => match mhz {
+                Some(mhz) => format!("cap-reissued {} {:.0}MHz", class_str(class), mhz),
+                None => format!("cap-reissued {} (uncap)", class_str(class)),
+            },
+            EventKind::CapAcked { class, mhz } => {
+                format!("cap-acked {} {:.0}MHz", class_str(class), mhz)
+            }
+            EventKind::UncapAcked { class } => format!("uncap-acked {}", class_str(class)),
+            EventKind::FaultStart { label, .. } => format!("fault-start {label}"),
+            EventKind::FaultEnd { label, .. } => format!("fault-end {label}"),
+            EventKind::ViolationStart { over_w } => {
+                format!("violation-start (+{over_w:.0}W over budget)")
+            }
+            EventKind::Telemetry { reported } => format!("telemetry {reported:.3}"),
+            EventKind::TrainPhase { job, phase, level } => {
+                format!("train-phase job {job} phase {phase} level {level:.2}")
+            }
+            EventKind::TrainIter { job, wall_s } => {
+                format!("train-iter job {job} done in {wall_s:.1}s")
+            }
+            _ => self.label().to_string(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_carry_label_time_and_fields() {
+        let e = Event {
+            t_s: 12.5,
+            kind: EventKind::CapIssued { class: Priority::Low, mhz: 990.0 },
+        };
+        let r = e.to_record();
+        assert_eq!(r.get("type").unwrap().as_str(), Some("event"));
+        assert_eq!(r.get("t_s").unwrap().as_f64(), Some(12.5));
+        assert_eq!(r.get("event").unwrap().as_str(), Some("cap-issued"));
+        assert_eq!(r.get("class").unwrap().as_str(), Some("lp"));
+        assert_eq!(r.get("mhz").unwrap().as_f64(), Some(990.0));
+    }
+
+    #[test]
+    fn every_kind_has_a_distinct_label() {
+        let kinds = [
+            EventKind::CapIssued { class: Priority::Low, mhz: 1.0 },
+            EventKind::UncapIssued { class: Priority::Low },
+            EventKind::CapReissued { class: Priority::Low, mhz: None },
+            EventKind::CapAcked { class: Priority::High, mhz: 1.0 },
+            EventKind::UncapAcked { class: Priority::High },
+            EventKind::BrakeIssued,
+            EventKind::BrakeReleaseIssued,
+            EventKind::BrakeEngaged,
+            EventKind::BrakeReleased,
+            EventKind::FaultStart { fault: 0, label: "feed-loss" },
+            EventKind::FaultEnd { fault: 0, label: "feed-loss" },
+            EventKind::ViolationStart { over_w: 1.0 },
+            EventKind::ViolationContained,
+            EventKind::Telemetry { reported: 0.5 },
+            EventKind::TrainPhase { job: 0, phase: 0, level: 1.0 },
+            EventKind::TrainIter { job: 0, wall_s: 1.0 },
+        ];
+        let labels: std::collections::BTreeSet<&str> = kinds.iter().map(|k| k.label()).collect();
+        assert_eq!(labels.len(), kinds.len());
+    }
+
+    #[test]
+    fn describe_is_nonempty_for_every_kind() {
+        let e = Event { t_s: 0.0, kind: EventKind::BrakeEngaged };
+        assert_eq!(e.describe(), "brake-engaged");
+        let e = Event { t_s: 0.0, kind: EventKind::ViolationStart { over_w: 321.7 } };
+        assert!(e.describe().contains("322W"));
+    }
+}

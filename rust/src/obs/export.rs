@@ -1,0 +1,538 @@
+//! Trace serialization: JSONL, CSV, Chrome trace-event, and the
+//! incident-timeline renderer.
+//!
+//! All writers consume the *record* form of a trace — a flat list of
+//! [`Json`] objects, each tagged with a `"type"` of `meta`, `event`,
+//! `sample`, `counter`, or `span` (see `docs/OBSERVABILITY.md` for the
+//! full schema). Both an in-process [`Trace`](crate::obs::Trace)
+//! (via [`Trace::records`](crate::obs::Trace::records)) and a JSONL
+//! file loaded with [`parse_jsonl`] produce the same record list, so
+//! `polca trace summarize|timeline|export` works identically on live
+//! and saved traces.
+
+use crate::util::csv::Csv;
+use crate::util::json::{parse, Json};
+
+/// Maximum entries rendered per incident before eliding the middle.
+const MAX_TIMELINE_ENTRIES: usize = 40;
+
+/// Serialize records as JSON Lines (one compact object per line).
+pub fn to_jsonl(records: &[Json]) -> String {
+    let mut out = String::new();
+    for r in records {
+        out.push_str(&r.to_string());
+        out.push('\n');
+    }
+    out
+}
+
+/// Parse a JSON Lines trace back into records (blank lines skipped).
+pub fn parse_jsonl(text: &str) -> Result<Vec<Json>, String> {
+    let mut records = Vec::new();
+    for (i, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        records.push(parse(line).map_err(|e| format!("line {}: {e}", i + 1))?);
+    }
+    Ok(records)
+}
+
+fn num(rec: &Json, key: &str) -> Option<f64> {
+    rec.get(key).and_then(Json::as_f64)
+}
+
+fn text<'a>(rec: &'a Json, key: &str) -> Option<&'a str> {
+    rec.get(key).and_then(Json::as_str)
+}
+
+/// Long-format CSV (`t_s,kind,name,value`): events, series samples,
+/// spans, and counters; meta records are summary-only and are skipped.
+pub fn to_csv(records: &[Json]) -> Csv {
+    let mut csv = Csv::new(&["t_s", "kind", "name", "value"]);
+    for r in records {
+        let (t_s, kind, name, value) = match text(r, "type") {
+            Some("event") => {
+                let value = ["mhz", "over_w", "reported", "level", "wall_s"]
+                    .iter()
+                    .find_map(|k| num(r, k));
+                (num(r, "t_s"), "event", text(r, "event").unwrap_or("?"), value)
+            }
+            Some("sample") => {
+                (num(r, "t_s"), "sample", text(r, "series").unwrap_or("?"), num(r, "v"))
+            }
+            Some("span") => {
+                (num(r, "start_s"), "span", text(r, "name").unwrap_or("?"), num(r, "dur_s"))
+            }
+            Some("counter") => (None, "counter", text(r, "name").unwrap_or("?"), num(r, "v")),
+            _ => continue,
+        };
+        let fmt = |x: Option<f64>| x.map(|x| Json::Num(x).to_string()).unwrap_or_default();
+        csv.row_strs(&[fmt(t_s), kind.to_string(), name.to_string(), fmt(value)]);
+    }
+    csv
+}
+
+/// Chrome trace-event document (load via `chrome://tracing` or
+/// Perfetto). Sim-time events and series live under pid 1 (`ts` is sim
+/// microseconds); wall-clock spans live under pid 2, one lane per
+/// worker.
+pub fn to_chrome(records: &[Json]) -> Json {
+    let mut tes: Vec<Json> = Vec::new();
+    for r in records {
+        match text(r, "type") {
+            Some("event") => {
+                let mut args: Vec<(&str, Json)> = Vec::new();
+                if let Json::Obj(m) = r {
+                    for (k, v) in m {
+                        if !matches!(k.as_str(), "type" | "t_s" | "event") {
+                            args.push((k, v.clone()));
+                        }
+                    }
+                }
+                tes.push(Json::obj(vec![
+                    ("name", Json::Str(text(r, "event").unwrap_or("?").to_string())),
+                    ("cat", Json::Str("sim".to_string())),
+                    ("ph", Json::Str("i".to_string())),
+                    ("s", Json::Str("t".to_string())),
+                    ("ts", Json::num(num(r, "t_s").unwrap_or(0.0) * 1e6)),
+                    ("pid", Json::Num(1.0)),
+                    ("tid", Json::Num(1.0)),
+                    ("args", Json::obj(args)),
+                ]));
+            }
+            Some("sample") => {
+                tes.push(Json::obj(vec![
+                    ("name", Json::Str(text(r, "series").unwrap_or("?").to_string())),
+                    ("cat", Json::Str("sim".to_string())),
+                    ("ph", Json::Str("C".to_string())),
+                    ("ts", Json::num(num(r, "t_s").unwrap_or(0.0) * 1e6)),
+                    ("pid", Json::Num(1.0)),
+                    ("tid", Json::Num(0.0)),
+                    ("args", Json::obj(vec![("value", Json::num(num(r, "v").unwrap_or(0.0)))])),
+                ]));
+            }
+            Some("span") => {
+                tes.push(Json::obj(vec![
+                    ("name", Json::Str(text(r, "name").unwrap_or("?").to_string())),
+                    ("cat", Json::Str("wall".to_string())),
+                    ("ph", Json::Str("X".to_string())),
+                    ("ts", Json::num(num(r, "start_s").unwrap_or(0.0) * 1e6)),
+                    ("dur", Json::num(num(r, "dur_s").unwrap_or(0.0) * 1e6)),
+                    ("pid", Json::Num(2.0)),
+                    ("tid", Json::num(num(r, "worker").unwrap_or(0.0))),
+                ]));
+            }
+            _ => {}
+        }
+    }
+    Json::obj(vec![
+        ("traceEvents", Json::Arr(tes)),
+        ("displayTimeUnit", Json::Str("ms".to_string())),
+    ])
+}
+
+/// One line of an incident timeline.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TimelineEntry {
+    /// Sim time of the entry, seconds.
+    pub t_s: f64,
+    /// Human rendering (event label plus key fields).
+    pub what: String,
+}
+
+/// The control-loop activity attributed to one incident window.
+#[derive(Debug, Clone, PartialEq)]
+pub struct IncidentTimeline {
+    /// Fault-kind label, or `violation` for fault-free excursions.
+    pub label: String,
+    /// Incident start (sim seconds).
+    pub start_s: f64,
+    /// Scheduled end of the episode; `inf` if it never ended in-trace.
+    pub end_s: f64,
+    /// Whether the excursion was contained inside the window.
+    pub contained: bool,
+    /// Attributed events, in time order (middle elided past
+    /// [`MAX_TIMELINE_ENTRIES`]).
+    pub entries: Vec<TimelineEntry>,
+    /// Entries dropped by elision.
+    pub elided: usize,
+}
+
+impl IncidentTimeline {
+    /// JSON form used by `ScenarioReport`'s optional `timeline` field.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("label", Json::Str(self.label.clone())),
+            ("start_s", Json::num(self.start_s)),
+            ("end_s", Json::num(self.end_s)),
+            ("contained", Json::Bool(self.contained)),
+            ("elided", Json::num(self.elided as f64)),
+            (
+                "entries",
+                Json::arr(self.entries.iter().map(|e| {
+                    Json::obj(vec![
+                        ("t_s", Json::num(e.t_s)),
+                        ("what", Json::Str(e.what.clone())),
+                    ])
+                })),
+            ),
+        ])
+    }
+}
+
+struct RawEvent<'a> {
+    t_s: f64,
+    label: &'a str,
+    rec: &'a Json,
+}
+
+fn describe_record(r: &Json) -> String {
+    let label = text(r, "event").unwrap_or("?");
+    let mut s = label.to_string();
+    if let Some(c) = text(r, "class") {
+        s.push(' ');
+        s.push_str(c);
+    }
+    if let Some(mhz) = num(r, "mhz") {
+        s.push_str(&format!(" {mhz:.0}MHz"));
+    }
+    if let Some(l) = text(r, "label") {
+        s.push(' ');
+        s.push_str(l);
+    }
+    if let Some(w) = num(r, "over_w") {
+        s.push_str(&format!(" (+{w:.0}W over budget)"));
+    }
+    s
+}
+
+fn push_window(
+    out: &mut Vec<IncidentTimeline>,
+    events: &[RawEvent<'_>],
+    label: &str,
+    start_s: f64,
+    end_s: f64,
+    window_end: f64,
+) {
+    let mut entries: Vec<TimelineEntry> = Vec::new();
+    let mut violating = false;
+    let mut saw_violation = false;
+    for e in events {
+        if e.t_s < start_s || e.t_s >= window_end {
+            continue;
+        }
+        match e.label {
+            "telemetry" | "train-phase" | "train-iter" => continue,
+            "violation-start" => {
+                violating = true;
+                saw_violation = true;
+            }
+            "violation-contained" => violating = false,
+            _ => {}
+        }
+        entries.push(TimelineEntry { t_s: e.t_s, what: describe_record(e.rec) });
+    }
+    let elided = entries.len().saturating_sub(MAX_TIMELINE_ENTRIES);
+    if elided > 0 {
+        // Keep the head and tail of the window; the middle is churn.
+        let tail = entries.split_off(entries.len() - MAX_TIMELINE_ENTRIES / 2);
+        entries.truncate(MAX_TIMELINE_ENTRIES / 2);
+        entries.extend(tail);
+    }
+    let contained = !saw_violation || !violating;
+    out.push(IncidentTimeline {
+        label: label.to_string(),
+        start_s,
+        end_s,
+        contained,
+        entries,
+        elided,
+    });
+}
+
+/// Group trace events into per-incident timelines.
+///
+/// With fault episodes in the trace, each `fault-start` opens an
+/// incident window that runs until the next `fault-start` (or the end
+/// of the trace); every non-telemetry event inside the window is
+/// attributed to it. Without faults, each `violation-start` ..
+/// `violation-contained` pair forms its own `violation` incident.
+pub fn incident_timeline(records: &[Json]) -> Vec<IncidentTimeline> {
+    let mut events: Vec<RawEvent<'_>> = records
+        .iter()
+        .filter(|r| text(r, "type") == Some("event"))
+        .filter_map(|r| {
+            Some(RawEvent { t_s: num(r, "t_s")?, label: text(r, "event")?, rec: r })
+        })
+        .collect();
+    events.sort_by(|a, b| a.t_s.partial_cmp(&b.t_s).unwrap_or(std::cmp::Ordering::Equal));
+
+    let starts: Vec<(f64, f64, String)> = events
+        .iter()
+        .filter(|e| e.label == "fault-start")
+        .map(|e| {
+            let id = num(e.rec, "fault").unwrap_or(-1.0);
+            let end = events
+                .iter()
+                .find(|x| x.label == "fault-end" && num(x.rec, "fault") == Some(id))
+                .map(|x| x.t_s)
+                .unwrap_or(f64::INFINITY);
+            (e.t_s, end, text(e.rec, "label").unwrap_or("fault").to_string())
+        })
+        .collect();
+
+    let mut out = Vec::new();
+    if starts.is_empty() {
+        // Fault-free trace: violation windows become the incidents.
+        let mut open: Option<f64> = None;
+        for e in &events {
+            match (e.label, open) {
+                ("violation-start", None) => open = Some(e.t_s),
+                ("violation-contained", Some(s)) => {
+                    push_window(&mut out, &events, "violation", s, e.t_s, e.t_s + 1e-9);
+                    open = None;
+                }
+                _ => {}
+            }
+        }
+        if let Some(s) = open {
+            push_window(&mut out, &events, "violation", s, f64::INFINITY, f64::INFINITY);
+        }
+        return out;
+    }
+    for (i, (start_s, end_s, label)) in starts.iter().enumerate() {
+        let window_end = starts.get(i + 1).map(|s| s.0).unwrap_or(f64::INFINITY);
+        push_window(&mut out, &events, label, *start_s, *end_s, window_end);
+    }
+    out
+}
+
+/// Text rendering of [`incident_timeline`] output.
+pub fn render_timeline(timelines: &[IncidentTimeline]) -> String {
+    let mut out = String::new();
+    for (i, tl) in timelines.iter().enumerate() {
+        let end = if tl.end_s.is_finite() {
+            format!("{:.0}s", tl.end_s)
+        } else {
+            "end".to_string()
+        };
+        let verdict = if tl.contained { "contained" } else { "NOT contained" };
+        out.push_str(&format!(
+            "incident {}: {} [{:.0}s .. {end}] — {verdict}\n",
+            i + 1,
+            tl.label,
+            tl.start_s
+        ));
+        let head = tl.entries.len() - tl.entries.len().min(MAX_TIMELINE_ENTRIES / 2);
+        for (j, e) in tl.entries.iter().enumerate() {
+            if tl.elided > 0 && j == head {
+                out.push_str(&format!("    ... {} entries elided ...\n", tl.elided));
+            }
+            out.push_str(&format!("  {:>10.1}s  {}\n", e.t_s, e.what));
+        }
+        if tl.entries.is_empty() {
+            out.push_str("  (no control-loop activity in window)\n");
+        }
+    }
+    out
+}
+
+/// Human summary of a record list: counts by type, events by label,
+/// sim-time range, per-series retention, counters.
+pub fn summarize(records: &[Json]) -> String {
+    use std::collections::BTreeMap;
+    let mut by_type: BTreeMap<&str, usize> = BTreeMap::new();
+    let mut by_label: BTreeMap<String, usize> = BTreeMap::new();
+    let mut by_series: BTreeMap<String, usize> = BTreeMap::new();
+    let mut counters: Vec<(String, f64)> = Vec::new();
+    let mut t_min = f64::INFINITY;
+    let mut t_max = f64::NEG_INFINITY;
+    for r in records {
+        let ty = text(r, "type").unwrap_or("?");
+        *by_type.entry(ty).or_insert(0) += 1;
+        if let Some(t) = num(r, "t_s") {
+            t_min = t_min.min(t);
+            t_max = t_max.max(t);
+        }
+        match ty {
+            "event" => {
+                *by_label.entry(text(r, "event").unwrap_or("?").to_string()).or_insert(0) += 1;
+            }
+            "sample" => {
+                *by_series.entry(text(r, "series").unwrap_or("?").to_string()).or_insert(0) += 1;
+            }
+            "counter" => {
+                counters
+                    .push((text(r, "name").unwrap_or("?").to_string(), num(r, "v").unwrap_or(0.0)));
+            }
+            _ => {}
+        }
+    }
+    let mut out = format!("trace: {} records", records.len());
+    if t_max >= t_min {
+        out.push_str(&format!(", sim time {t_min:.0}s .. {t_max:.0}s"));
+    }
+    out.push('\n');
+    for (ty, n) in &by_type {
+        out.push_str(&format!("  {ty:>8}: {n}\n"));
+    }
+    if !by_label.is_empty() {
+        let mut labels: Vec<_> = by_label.into_iter().collect();
+        labels.sort_by(|a, b| b.1.cmp(&a.1).then(a.0.cmp(&b.0)));
+        out.push_str("events by label:\n");
+        for (label, n) in labels {
+            out.push_str(&format!("  {label:>22}: {n}\n"));
+        }
+    }
+    if !by_series.is_empty() {
+        out.push_str("series (retained samples):\n");
+        for (name, n) in &by_series {
+            out.push_str(&format!("  {name:>22}: {n}\n"));
+        }
+    }
+    if !counters.is_empty() {
+        out.push_str("counters:\n");
+        for (name, v) in &counters {
+            out.push_str(&format!("  {name:>22}: {v:.0}\n"));
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(t_s: f64, label: &str, extra: Vec<(&str, Json)>) -> Json {
+        let mut pairs = vec![
+            ("type", Json::Str("event".to_string())),
+            ("t_s", Json::num(t_s)),
+            ("event", Json::Str(label.to_string())),
+        ];
+        pairs.extend(extra);
+        Json::obj(pairs)
+    }
+
+    fn sample(t_s: f64, series: &str, v: f64) -> Json {
+        Json::obj(vec![
+            ("type", Json::Str("sample".to_string())),
+            ("t_s", Json::num(t_s)),
+            ("series", Json::Str(series.to_string())),
+            ("v", Json::num(v)),
+        ])
+    }
+
+    fn fault_records() -> Vec<Json> {
+        vec![
+            ev(100.0, "fault-start", vec![
+                ("fault", Json::num(0.0)),
+                ("label", Json::Str("feed-loss".to_string())),
+            ]),
+            ev(110.0, "violation-start", vec![("over_w", Json::num(500.0))]),
+            ev(120.0, "cap-issued", vec![
+                ("class", Json::Str("lp".to_string())),
+                ("mhz", Json::num(990.0)),
+            ]),
+            ev(125.0, "cap-acked", vec![
+                ("class", Json::Str("lp".to_string())),
+                ("mhz", Json::num(990.0)),
+            ]),
+            ev(130.0, "violation-contained", vec![]),
+            ev(400.0, "fault-end", vec![
+                ("fault", Json::num(0.0)),
+                ("label", Json::Str("feed-loss".to_string())),
+            ]),
+            sample(115.0, "row-power", 1.1),
+        ]
+    }
+
+    #[test]
+    fn jsonl_roundtrips() {
+        let records = fault_records();
+        let text = to_jsonl(&records);
+        assert_eq!(text.lines().count(), records.len());
+        let back = parse_jsonl(&text).unwrap();
+        assert_eq!(back, records);
+    }
+
+    #[test]
+    fn parse_jsonl_reports_the_bad_line() {
+        let err = parse_jsonl("{\"type\":\"meta\"}\nnot json\n").unwrap_err();
+        assert!(err.starts_with("line 2:"), "{err}");
+    }
+
+    #[test]
+    fn timeline_groups_events_under_their_fault() {
+        let tls = incident_timeline(&fault_records());
+        assert_eq!(tls.len(), 1);
+        let tl = &tls[0];
+        assert_eq!(tl.label, "feed-loss");
+        assert_eq!(tl.start_s, 100.0);
+        assert_eq!(tl.end_s, 400.0);
+        assert!(tl.contained);
+        let whats: Vec<&str> = tl.entries.iter().map(|e| e.what.as_str()).collect();
+        assert!(whats.iter().any(|w| w.contains("cap-issued lp 990MHz")), "{whats:?}");
+        assert!(whats.iter().any(|w| w.contains("violation-contained")), "{whats:?}");
+        let rendered = render_timeline(&tls);
+        assert!(rendered.contains("incident 1: feed-loss [100s .. 400s] — contained"), "{rendered}");
+    }
+
+    #[test]
+    fn uncontained_violation_is_flagged() {
+        let mut records = fault_records();
+        // Drop the containment event: the window stays violating.
+        records.retain(|r| r.get("event").and_then(Json::as_str) != Some("violation-contained"));
+        let tls = incident_timeline(&records);
+        assert!(!tls[0].contained);
+        assert!(render_timeline(&tls).contains("NOT contained"));
+    }
+
+    #[test]
+    fn faultfree_traces_build_violation_incidents() {
+        let records = vec![
+            ev(10.0, "violation-start", vec![("over_w", Json::num(100.0))]),
+            ev(12.0, "cap-issued", vec![
+                ("class", Json::Str("lp".to_string())),
+                ("mhz", Json::num(990.0)),
+            ]),
+            ev(20.0, "violation-contained", vec![]),
+        ];
+        let tls = incident_timeline(&records);
+        assert_eq!(tls.len(), 1);
+        assert_eq!(tls[0].label, "violation");
+        assert!(tls[0].contained);
+        assert_eq!(tls[0].entries.len(), 3);
+    }
+
+    #[test]
+    fn chrome_export_has_trace_events() {
+        let doc = to_chrome(&fault_records());
+        let tes = doc.get("traceEvents").unwrap().as_arr().unwrap();
+        assert_eq!(tes.len(), 7);
+        let first = &tes[0];
+        assert_eq!(first.get("ph").unwrap().as_str(), Some("i"));
+        assert_eq!(first.get("ts").unwrap().as_f64(), Some(100.0 * 1e6));
+        // Counter samples carry args.value.
+        let counter = tes.iter().find(|t| t.get("ph").unwrap().as_str() == Some("C")).unwrap();
+        assert_eq!(counter.at(&["args", "value"]).unwrap().as_f64(), Some(1.1));
+    }
+
+    #[test]
+    fn csv_is_long_format() {
+        let csv = to_csv(&fault_records()).to_string();
+        let mut lines = csv.lines();
+        assert_eq!(lines.next(), Some("t_s,kind,name,value"));
+        assert!(csv.contains("120,event,cap-issued,990"), "{csv}");
+        assert!(csv.contains("115,sample,row-power,1.1"), "{csv}");
+    }
+
+    #[test]
+    fn summarize_counts_types_and_labels() {
+        let s = summarize(&fault_records());
+        assert!(s.contains("7 records"), "{s}");
+        assert!(s.contains("event: 6") || s.contains("event:    6") || s.contains("event: 6\n"), "{s}");
+        assert!(s.contains("cap-issued"), "{s}");
+    }
+}

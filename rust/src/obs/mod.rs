@@ -1,0 +1,337 @@
+//! Observability: a zero-cost-when-off trace/metrics layer for the
+//! whole control loop.
+//!
+//! The simulator's layers emit structured [`events`](self::events),
+//! decimated time [`series`](self::series), and hot-path counters
+//! through the passive [`Observer`] trait. The default
+//! [`NoopObserver`] sets [`Observer::ENABLED`] to `false`, so every
+//! emission site — guarded by `if O::ENABLED` — monomorphizes away and
+//! the unobserved simulation is bit-identical to (and as fast as) one
+//! with no observability compiled in. A [`Recorder`] captures
+//! everything into a first-class [`Trace`] value that outlives the
+//! run; [`export`](self::export) serializes traces to JSONL, CSV, and
+//! Chrome trace-event form, and renders per-incident timelines.
+//!
+//! Observation is strictly read-only: an observer receives copies of
+//! values the simulation already computed and has no channel back into
+//! it, which is what makes the passivity property testable
+//! (`tests/integration_obs.rs` proves recording never perturbs a
+//! `RunReport`).
+//!
+//! The module also hosts the library's quiet-by-default diagnostic
+//! hook ([`set_diag_handler`]): rare, human-relevant notices (like a
+//! one-time calibration fit) go through [`DiagEvent`] instead of
+//! `eprintln!`, so embedding applications control the channel.
+
+pub mod events;
+pub mod export;
+pub mod series;
+pub mod spans;
+
+use std::collections::VecDeque;
+use std::sync::OnceLock;
+use std::time::Instant;
+
+use crate::util::json::Json;
+
+pub use events::{Event, EventKind};
+pub use series::{Series, SeriesId, SeriesRecorder};
+pub use spans::{batch_stats, BatchProfile, Span};
+
+/// Passive sink for simulation observations.
+///
+/// All hooks have empty default bodies; implementors override what
+/// they need. Emission sites in the simulator are guarded by
+/// [`Observer::ENABLED`], so with [`NoopObserver`] the compiler
+/// removes them entirely — the trait is threaded as a generic (not a
+/// trait object) for exactly this reason.
+pub trait Observer {
+    /// Whether emission sites should run at all. `true` for every real
+    /// observer; [`NoopObserver`] overrides it to `false`.
+    const ENABLED: bool = true;
+
+    /// A control-loop lifecycle event at sim time `t_s`.
+    fn event(&mut self, _t_s: f64, _kind: EventKind) {}
+
+    /// One sample of a built-in time series at sim time `t_s`.
+    fn sample(&mut self, _id: SeriesId, _t_s: f64, _value: f64) {}
+
+    /// The accounting layer settled an energy segment (hot-path
+    /// counter; called very frequently).
+    fn settle(&mut self) {}
+
+    /// A named end-of-run counter (e.g. total events dispatched).
+    fn counter(&mut self, _name: &'static str, _value: u64) {}
+}
+
+/// The default do-nothing observer; disables every emission site at
+/// compile time.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct NoopObserver;
+
+impl Observer for NoopObserver {
+    const ENABLED: bool = false;
+}
+
+/// Capacity bounds for a [`Recorder`].
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RecorderConfig {
+    /// Event ring capacity; the oldest events drop past this (the drop
+    /// count is kept and exported in the trace meta record).
+    pub max_events: usize,
+    /// Per-series retained-point bound before decimation kicks in
+    /// (see [`SeriesRecorder`]).
+    pub series_capacity: usize,
+}
+
+impl Default for RecorderConfig {
+    fn default() -> RecorderConfig {
+        RecorderConfig { max_events: 1 << 20, series_capacity: 4096 }
+    }
+}
+
+/// An [`Observer`] that records everything into memory, bounded by a
+/// [`RecorderConfig`]; detach the result with [`Recorder::into_trace`].
+#[derive(Debug)]
+pub struct Recorder {
+    cfg: RecorderConfig,
+    started: Instant,
+    events: VecDeque<Event>,
+    dropped_events: u64,
+    series: Vec<SeriesRecorder>,
+    settle_calls: u64,
+    counters: Vec<(&'static str, u64)>,
+}
+
+impl Recorder {
+    /// New recorder with the given bounds.
+    pub fn new(cfg: RecorderConfig) -> Recorder {
+        Recorder {
+            cfg,
+            started: Instant::now(),
+            events: VecDeque::new(),
+            dropped_events: 0,
+            series: SeriesId::ALL.iter().map(|_| SeriesRecorder::new(cfg.series_capacity)).collect(),
+            settle_calls: 0,
+            counters: Vec::new(),
+        }
+    }
+
+    /// Events recorded so far (ring-bounded), in emission order.
+    pub fn events(&self) -> impl Iterator<Item = &Event> {
+        self.events.iter()
+    }
+
+    /// Detach into a first-class [`Trace`] named `name`.
+    pub fn into_trace(self, name: &str) -> Trace {
+        let wall_s = self.started.elapsed().as_secs_f64();
+        let mut counters: Vec<(String, u64)> =
+            self.counters.into_iter().map(|(k, v)| (k.to_string(), v)).collect();
+        counters.push(("settle-calls".to_string(), self.settle_calls));
+        Trace {
+            name: name.to_string(),
+            events: self.events.into_iter().collect(),
+            dropped_events: self.dropped_events,
+            series: self
+                .series
+                .into_iter()
+                .zip(SeriesId::ALL)
+                .map(|(r, id)| r.into_series(id))
+                .collect(),
+            counters,
+            spans: Vec::new(),
+            wall_s,
+        }
+    }
+}
+
+impl Observer for Recorder {
+    fn event(&mut self, t_s: f64, kind: EventKind) {
+        if self.events.len() >= self.cfg.max_events {
+            self.events.pop_front();
+            self.dropped_events += 1;
+        }
+        self.events.push_back(Event { t_s, kind });
+    }
+
+    fn sample(&mut self, id: SeriesId, t_s: f64, value: f64) {
+        let idx = SeriesId::ALL.iter().position(|&s| s == id).unwrap_or(0);
+        self.series[idx].push(t_s, value);
+    }
+
+    fn settle(&mut self) {
+        self.settle_calls += 1;
+    }
+
+    fn counter(&mut self, name: &'static str, value: u64) {
+        self.counters.push((name, value));
+    }
+}
+
+/// A finished recording, detached from any `Sim`.
+#[derive(Debug, Clone)]
+pub struct Trace {
+    /// Trace name (scenario name for CLI-produced traces).
+    pub name: String,
+    /// Recorded events in emission order (oldest dropped past the
+    /// recorder's ring bound).
+    pub events: Vec<Event>,
+    /// Events lost to the ring bound.
+    pub dropped_events: u64,
+    /// One decimated series per [`SeriesId`], in `SeriesId::ALL` order.
+    pub series: Vec<Series>,
+    /// End-of-run counters (name, value).
+    pub counters: Vec<(String, u64)>,
+    /// Wall-clock spans, when the trace came from a profiled batch
+    /// (empty for single runs).
+    pub spans: Vec<Span>,
+    /// Wall-clock seconds the recording covered.
+    pub wall_s: f64,
+}
+
+impl Trace {
+    /// The canonical serialized form: a flat record list (meta first,
+    /// then counters, spans, series samples, and events) consumed by
+    /// every [`export`](self::export) writer. A JSONL file written
+    /// from these records and re-loaded with
+    /// [`export::parse_jsonl`] yields the same list.
+    pub fn records(&self) -> Vec<Json> {
+        let mut out = Vec::with_capacity(
+            2 + self.counters.len()
+                + self.spans.len()
+                + self.events.len()
+                + self.series.iter().map(|s| s.points.len()).sum::<usize>(),
+        );
+        out.push(Json::obj(vec![
+            ("type", Json::Str("meta".to_string())),
+            ("name", Json::Str(self.name.clone())),
+            ("wall_s", Json::num(self.wall_s)),
+            ("dropped_events", Json::num(self.dropped_events as f64)),
+            ("series", Json::arr(self.series.iter().map(|s| s.to_json()))),
+        ]));
+        for (name, v) in &self.counters {
+            out.push(Json::obj(vec![
+                ("type", Json::Str("counter".to_string())),
+                ("name", Json::Str(name.clone())),
+                ("v", Json::num(*v as f64)),
+            ]));
+        }
+        for span in &self.spans {
+            out.push(span.to_record());
+        }
+        for s in &self.series {
+            for &(t_s, v) in &s.points {
+                out.push(Json::obj(vec![
+                    ("type", Json::Str("sample".to_string())),
+                    ("t_s", Json::num(t_s)),
+                    ("series", Json::Str(s.name.clone())),
+                    ("v", Json::num(v)),
+                ]));
+            }
+        }
+        for e in &self.events {
+            out.push(e.to_record());
+        }
+        out
+    }
+
+    /// Serialize as JSON Lines (see [`Trace::records`]).
+    pub fn to_jsonl(&self) -> String {
+        export::to_jsonl(&self.records())
+    }
+}
+
+/// A rare, human-relevant library notice (not a per-run trace event).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum DiagEvent {
+    /// A one-time power-scale calibration fit is starting (it costs a
+    /// one-day baseline simulation; the result is cached afterwards).
+    CalibrationFit {
+        /// Row size (server count) being fitted.
+        baseline_servers: usize,
+    },
+}
+
+static DIAG: OnceLock<Box<dyn Fn(&DiagEvent) + Send + Sync>> = OnceLock::new();
+
+/// Install the process-wide diagnostic handler. The library default is
+/// quiet (no handler, notices dropped); the CLI installs a stderr
+/// printer at startup. Returns `false` if a handler was already set
+/// (the first installation wins).
+pub fn set_diag_handler(handler: Box<dyn Fn(&DiagEvent) + Send + Sync>) -> bool {
+    DIAG.set(handler).is_ok()
+}
+
+/// Emit a diagnostic notice to the installed handler, if any.
+pub fn emit_diag(event: &DiagEvent) {
+    if let Some(handler) = DIAG.get() {
+        handler(event);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn noop_observer_is_disabled_at_compile_time() {
+        assert!(!NoopObserver::ENABLED);
+        assert!(Recorder::ENABLED);
+    }
+
+    #[test]
+    fn recorder_ring_drops_oldest_events() {
+        let mut rec = Recorder::new(RecorderConfig { max_events: 4, series_capacity: 64 });
+        for i in 0..10 {
+            rec.event(i as f64, EventKind::BrakeEngaged);
+        }
+        assert_eq!(rec.events().count(), 4);
+        let trace = rec.into_trace("ring");
+        assert_eq!(trace.dropped_events, 6);
+        assert_eq!(trace.events[0].t_s, 6.0);
+    }
+
+    #[test]
+    fn trace_records_cover_every_stream() {
+        let mut rec = Recorder::new(RecorderConfig::default());
+        rec.event(1.0, EventKind::BrakeEngaged);
+        rec.sample(SeriesId::RowPower, 1.0, 0.9);
+        rec.settle();
+        rec.settle();
+        rec.counter("events-dispatched", 42);
+        let mut trace = rec.into_trace("t");
+        trace.spans.push(Span { name: "item-0".to_string(), start_s: 0.0, dur_s: 0.1, worker: 0 });
+        let records = trace.records();
+        let types: Vec<&str> =
+            records.iter().filter_map(|r| r.get("type").and_then(Json::as_str)).collect();
+        for need in ["meta", "counter", "span", "sample", "event"] {
+            assert!(types.contains(&need), "missing {need} in {types:?}");
+        }
+        assert_eq!(records.len(), 1 + 2 + 1 + 1 + 1);
+        // settle-calls is folded into the counters.
+        assert!(records.iter().any(|r| {
+            r.get("name").and_then(Json::as_str) == Some("settle-calls")
+                && r.get("v").and_then(Json::as_f64) == Some(2.0)
+        }));
+        // Round-trip through JSONL is lossless at the record level.
+        let back = export::parse_jsonl(&trace.to_jsonl()).unwrap();
+        assert_eq!(back, records);
+    }
+
+    #[test]
+    fn diag_is_quiet_without_a_handler_and_single_install() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        static SEEN: AtomicUsize = AtomicUsize::new(0);
+        // No handler yet: must not panic, just drop.
+        emit_diag(&DiagEvent::CalibrationFit { baseline_servers: 7 });
+        let first = set_diag_handler(Box::new(|_| {
+            SEEN.fetch_add(1, Ordering::SeqCst);
+        }));
+        emit_diag(&DiagEvent::CalibrationFit { baseline_servers: 7 });
+        if first {
+            assert!(SEEN.load(Ordering::SeqCst) >= 1);
+            // A second installation is rejected; the first handler stays.
+            assert!(!set_diag_handler(Box::new(|_| {})));
+        }
+    }
+}

@@ -1,0 +1,196 @@
+//! Ring-buffered, decimating time-series recorders.
+//!
+//! A [`SeriesRecorder`] stores at most `capacity` points over an
+//! arbitrarily long run: it keeps every `stride`-th offered sample, and
+//! whenever the buffer fills it drops every other retained point and
+//! doubles the stride. The result is a uniformly-thinned view whose
+//! resolution degrades gracefully (never a hard truncation at the front
+//! or back of the run). Finished recorders detach into [`Series`]
+//! values that are usable without re-running a `Sim`.
+
+use crate::util::json::Json;
+
+/// Identity of a built-in recorded series.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SeriesId {
+    /// True scaled row power as a fraction of the nominal budget.
+    RowPower,
+    /// Power as the policy sees it (meter bias × averaging window),
+    /// normalized to the effective budget.
+    ReportedPower,
+    /// Effective budget fraction (feed loss pulls it below 1.0).
+    BudgetFrac,
+    /// Servers with a request queued behind an in-flight one.
+    QueueDepth,
+    /// Servers currently under a frequency cap (all of them while the
+    /// brake is engaged).
+    ActiveCaps,
+}
+
+impl SeriesId {
+    /// Every built-in series, in storage order.
+    pub const ALL: [SeriesId; 5] = [
+        SeriesId::RowPower,
+        SeriesId::ReportedPower,
+        SeriesId::BudgetFrac,
+        SeriesId::QueueDepth,
+        SeriesId::ActiveCaps,
+    ];
+
+    /// Stable kebab-case name used in exports.
+    pub fn name(self) -> &'static str {
+        match self {
+            SeriesId::RowPower => "row-power",
+            SeriesId::ReportedPower => "reported-power",
+            SeriesId::BudgetFrac => "budget-frac",
+            SeriesId::QueueDepth => "queue-depth",
+            SeriesId::ActiveCaps => "active-caps",
+        }
+    }
+}
+
+/// Bounded time-series recorder (see module docs for the decimation
+/// scheme).
+#[derive(Debug, Clone)]
+pub struct SeriesRecorder {
+    capacity: usize,
+    stride: u64,
+    seen: u64,
+    points: Vec<(f64, f64)>,
+}
+
+impl SeriesRecorder {
+    /// New recorder bounded to `capacity` retained points (min 8).
+    pub fn new(capacity: usize) -> SeriesRecorder {
+        SeriesRecorder { capacity: capacity.max(8), stride: 1, seen: 0, points: Vec::new() }
+    }
+
+    /// Offer one `(t_s, value)` sample; retained iff it falls on the
+    /// current stride.
+    pub fn push(&mut self, t_s: f64, value: f64) {
+        if self.seen % self.stride == 0 {
+            self.points.push((t_s, value));
+            if self.points.len() >= self.capacity {
+                let mut i = 0usize;
+                self.points.retain(|_| {
+                    let keep = i % 2 == 0;
+                    i += 1;
+                    keep
+                });
+                self.stride *= 2;
+            }
+        }
+        self.seen += 1;
+    }
+
+    /// Retained `(t_s, value)` points, in time order.
+    pub fn points(&self) -> &[(f64, f64)] {
+        &self.points
+    }
+
+    /// Current decimation stride (1 = every sample retained).
+    pub fn stride(&self) -> u64 {
+        self.stride
+    }
+
+    /// Total samples offered, before decimation.
+    pub fn seen(&self) -> u64 {
+        self.seen
+    }
+
+    /// Detach into a first-class [`Series`].
+    pub fn into_series(self, id: SeriesId) -> Series {
+        Series {
+            name: id.name().to_string(),
+            stride: self.stride,
+            seen: self.seen,
+            points: self.points,
+        }
+    }
+}
+
+/// A finished, owned time series detached from any `Sim`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Series {
+    /// Export name (kebab-case, see [`SeriesId::name`]).
+    pub name: String,
+    /// Final decimation stride (1 = every sample retained).
+    pub stride: u64,
+    /// Total samples offered, before decimation.
+    pub seen: u64,
+    /// Retained `(t_s, value)` points, in time order.
+    pub points: Vec<(f64, f64)>,
+}
+
+impl Series {
+    /// Summary object (name, stride, seen, retained count) used in the
+    /// trace meta record; the points themselves export as `sample`
+    /// records.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::Str(self.name.clone())),
+            ("stride", Json::num(self.stride as f64)),
+            ("seen", Json::num(self.seen as f64)),
+            ("retained", Json::num(self.points.len() as f64)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn small_runs_keep_every_sample() {
+        let mut r = SeriesRecorder::new(64);
+        for i in 0..50 {
+            r.push(i as f64, i as f64 * 2.0);
+        }
+        assert_eq!(r.points().len(), 50);
+        assert_eq!(r.stride(), 1);
+        assert_eq!(r.seen(), 50);
+    }
+
+    #[test]
+    fn long_runs_decimate_under_the_capacity_bound() {
+        let cap = 64;
+        let mut r = SeriesRecorder::new(cap);
+        for i in 0..100_000u64 {
+            r.push(i as f64, 0.0);
+        }
+        assert!(r.points().len() < cap, "len {} >= cap {cap}", r.points().len());
+        assert!(r.stride() > 1);
+        assert_eq!(r.seen(), 100_000);
+        // Retained points stay uniformly spread: strictly increasing
+        // timestamps from near the start to near the end of the run.
+        let pts = r.points();
+        assert!(pts.windows(2).all(|w| w[0].0 < w[1].0));
+        assert!(pts[0].0 < 1024.0, "front of run dropped: first t = {}", pts[0].0);
+        assert!(pts[pts.len() - 1].0 > 90_000.0, "tail of run dropped");
+    }
+
+    #[test]
+    fn retained_points_fall_on_the_stride() {
+        let mut r = SeriesRecorder::new(8);
+        for i in 0..1000u64 {
+            r.push(i as f64, 0.0);
+        }
+        let stride = r.stride() as f64;
+        for &(t, _) in r.points() {
+            // Sample i carries t = i here, so every retained t must be
+            // a multiple of the final stride.
+            assert_eq!(t % stride, 0.0, "t {t} not on stride {stride}");
+        }
+    }
+
+    #[test]
+    fn series_detaches_with_metadata() {
+        let mut r = SeriesRecorder::new(8);
+        r.push(0.0, 1.0);
+        r.push(1.0, 2.0);
+        let s = r.into_series(SeriesId::RowPower);
+        assert_eq!(s.name, "row-power");
+        assert_eq!(s.points, vec![(0.0, 1.0), (1.0, 2.0)]);
+        assert_eq!(s.to_json().get("retained").unwrap().as_usize(), Some(2));
+    }
+}

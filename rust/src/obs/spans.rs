@@ -1,0 +1,102 @@
+//! Wall-clock spans: profiling the batch-executor hot path.
+//!
+//! Unlike [`events`](crate::obs::events) and
+//! [`series`](crate::obs::series) (which carry *simulation* time),
+//! spans carry *wall-clock* time relative to a profile start. They are
+//! produced per-item by [`crate::exec::run_batch_profiled`] and
+//! establish the raw-speed baseline the ROADMAP's event-loop
+//! optimization item is judged against. Chrome trace export renders
+//! them as `X` (complete) events, one lane per worker thread.
+
+use crate::util::json::Json;
+
+/// One wall-clock span.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Span {
+    /// Label, e.g. `item-7` for the 8th batch item.
+    pub name: String,
+    /// Seconds from profile start to span start.
+    pub start_s: f64,
+    /// Span duration in seconds.
+    pub dur_s: f64,
+    /// Worker thread index that executed the span (0 when serial).
+    pub worker: usize,
+}
+
+impl Span {
+    /// Seconds from profile start to span end.
+    pub fn end_s(&self) -> f64 {
+        self.start_s + self.dur_s
+    }
+
+    /// Serialize to one trace record (`{"type": "span", ...}`).
+    pub fn to_record(&self) -> Json {
+        Json::obj(vec![
+            ("type", Json::Str("span".to_string())),
+            ("name", Json::Str(self.name.clone())),
+            ("start_s", Json::num(self.start_s)),
+            ("dur_s", Json::num(self.dur_s)),
+            ("worker", Json::num(self.worker as f64)),
+        ])
+    }
+}
+
+/// Aggregate utilization over one profiled batch.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct BatchProfile {
+    /// Number of spans (batch items).
+    pub items: usize,
+    /// Wall-clock seconds from profile start to the last span end.
+    pub wall_s: f64,
+    /// Busy seconds summed across all workers.
+    pub busy_s: f64,
+    /// Worker count the utilization is computed against.
+    pub workers: usize,
+    /// `busy_s / (wall_s × workers)`; 1.0 means perfectly packed.
+    pub busy_frac: f64,
+}
+
+/// Summarize the spans of one profiled batch against `workers` lanes.
+pub fn batch_stats(spans: &[Span], workers: usize) -> BatchProfile {
+    let workers = workers.max(1);
+    let wall_s = spans.iter().map(Span::end_s).fold(0.0f64, f64::max);
+    let busy_s = spans.iter().map(|s| s.dur_s).sum::<f64>();
+    let denom = wall_s * workers as f64;
+    let busy_frac = if denom > 0.0 { busy_s / denom } else { 0.0 };
+    BatchProfile { items: spans.len(), wall_s, busy_s, workers, busy_frac }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn span(start_s: f64, dur_s: f64, worker: usize) -> Span {
+        Span { name: format!("item-{worker}"), start_s, dur_s, worker }
+    }
+
+    #[test]
+    fn batch_stats_measures_wall_and_busy_time() {
+        let spans = vec![span(0.0, 1.0, 0), span(0.0, 2.0, 1), span(1.0, 1.0, 0)];
+        let p = batch_stats(&spans, 2);
+        assert_eq!(p.items, 3);
+        assert_eq!(p.wall_s, 2.0);
+        assert_eq!(p.busy_s, 4.0);
+        assert_eq!(p.busy_frac, 1.0);
+    }
+
+    #[test]
+    fn empty_batch_is_all_zero_not_nan() {
+        let p = batch_stats(&[], 4);
+        assert_eq!(p.wall_s, 0.0);
+        assert_eq!(p.busy_frac, 0.0);
+    }
+
+    #[test]
+    fn span_record_shape() {
+        let r = span(0.5, 0.25, 3).to_record();
+        assert_eq!(r.get("type").unwrap().as_str(), Some("span"));
+        assert_eq!(r.get("start_s").unwrap().as_f64(), Some(0.5));
+        assert_eq!(r.get("dur_s").unwrap().as_f64(), Some(0.25));
+        assert_eq!(r.get("worker").unwrap().as_usize(), Some(3));
+    }
+}

@@ -48,8 +48,12 @@ use crate::fleet::planner::{
 };
 use crate::fleet::site::SiteSpec;
 use crate::metrics::{ImpactSummary, ResilienceMetrics, RunReport};
+use crate::obs::export::{render_timeline, IncidentTimeline};
+use crate::obs::Observer;
 use crate::policy::engine::PolicyKind;
-use crate::simulation::{power_scale_for_row, run_with_impact, MixedRowConfig, SimConfig};
+use crate::simulation::{
+    power_scale_for_row, run_with_impact, run_with_impact_observed, MixedRowConfig, SimConfig,
+};
 
 /// The training-colocation part of a scenario (flows into
 /// [`MixedRowConfig`]; the iteration waveform is the canonical
@@ -431,6 +435,7 @@ impl Scenario {
             Ok(ScenarioReport {
                 name: self.name.clone(),
                 outcome: Outcome::Site(Box::new(outcome)),
+                timeline: None,
             })
         } else {
             let cfg = self.sim_config();
@@ -439,8 +444,37 @@ impl Scenario {
             Ok(ScenarioReport {
                 name: self.name.clone(),
                 outcome: Outcome::Row(Box::new(RowReport { report, impact, slo_violations })),
+                timeline: None,
             })
         }
+    }
+
+    /// [`Scenario::run`] with an [`Observer`] on the policy run — the
+    /// engine behind `polca run --trace`. Row scenarios only: a site
+    /// scenario's planner sweep runs hundreds of candidate simulations,
+    /// so there is no single run to trace (the CLI surfaces this as an
+    /// error rather than silently tracing nothing). Observation is
+    /// passive — the report is bit-identical to [`Scenario::run`]; the
+    /// returned report's `timeline` stays `None` (the caller derives it
+    /// from the observer's records, which the scenario layer does not
+    /// assume are retrievable from an arbitrary `O`).
+    pub fn run_observed<O: Observer>(&self, obs: &mut O) -> anyhow::Result<ScenarioReport> {
+        self.validate()?;
+        if self.site.is_some() {
+            anyhow::bail!(
+                "scenario '{}' plans a site: tracing needs a single row run \
+                 (drop the [site] section to trace)",
+                self.name
+            );
+        }
+        let cfg = self.sim_config();
+        let (report, impact) = run_with_impact_observed(&cfg, obs);
+        let slo_violations = impact.slo_violations(&self.exp.slo);
+        Ok(ScenarioReport {
+            name: self.name.clone(),
+            outcome: Outcome::Row(Box::new(RowReport { report, impact, slo_violations })),
+            timeline: None,
+        })
     }
 }
 
@@ -482,6 +516,11 @@ pub struct ScenarioReport {
     pub name: String,
     /// Row or site result.
     pub outcome: Outcome,
+    /// Per-incident control-loop timelines, when the run was traced
+    /// (`polca run --trace` attaches them from the recorded event
+    /// stream; untraced runs carry `None` and their JSON shape is
+    /// unchanged).
+    pub timeline: Option<Vec<IncidentTimeline>>,
 }
 
 impl ScenarioReport {
@@ -535,8 +574,9 @@ impl ScenarioReport {
                             ("derated_servers", Json::Num(d.derated_servers as f64)),
                             ("worst_violation_s", Json::Num(d.worst_violation_s)),
                             (
+                                // Json::num: infinite when uncontained.
                                 "worst_time_to_contain_s",
-                                Json::Num(d.worst_time_to_contain_s),
+                                Json::num(d.worst_time_to_contain_s),
                             ),
                             ("worst_overshoot_frac", Json::Num(d.worst_overshoot_frac)),
                         ]),
@@ -545,7 +585,11 @@ impl ScenarioReport {
                 Json::obj(pairs)
             }
         };
-        Json::obj(vec![("name", Json::Str(self.name.clone())), ("outcome", outcome)])
+        let mut pairs = vec![("name", Json::Str(self.name.clone())), ("outcome", outcome)];
+        if let Some(tls) = &self.timeline {
+            pairs.push(("timeline", Json::arr(tls.iter().map(|t| t.to_json()))));
+        }
+        Json::obj(pairs)
     }
 
     /// Render the human-readable report (the `polca run` output).
@@ -639,6 +683,11 @@ impl ScenarioReport {
                         d.worst_overshoot_frac * 100.0
                     ));
                 }
+            }
+        }
+        if let Some(tls) = &self.timeline {
+            if !tls.is_empty() {
+                out.push_str(&render_timeline(tls));
             }
         }
         out

@@ -73,6 +73,13 @@ impl<E: Ord> EventQueue<E> {
         self.popped
     }
 
+    /// Total events ever scheduled (the insertion sequence counter; an
+    /// [`crate::obs`] hot-path counter).
+    #[inline]
+    pub fn scheduled(&self) -> u64 {
+        self.seq
+    }
+
     /// Pending event count.
     #[inline]
     pub fn len(&self) -> usize {
@@ -182,5 +189,6 @@ mod tests {
         }
         while q.pop().is_some() {}
         assert_eq!(q.popped(), 10);
+        assert_eq!(q.scheduled(), 10);
     }
 }

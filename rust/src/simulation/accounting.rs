@@ -17,6 +17,7 @@
 //!   and independent of what the possibly-lying meter says.
 
 use crate::metrics::RunReport;
+use crate::obs::{EventKind, Observer};
 
 use super::core::Sim;
 
@@ -26,6 +27,11 @@ pub(crate) struct Accounting {
     pub(crate) energy_acc_ws: f64,
     pub(crate) last_power_change_s: f64,
     pub(crate) last_telemetry_s: f64,
+    /// Whether the last settled segment was over the effective budget.
+    /// Observability bookkeeping only (violation-start/contained edge
+    /// detection); maintained only when an observer is attached, never
+    /// read by the simulation itself.
+    pub(crate) in_violation: bool,
     pub(crate) report: RunReport,
 }
 
@@ -35,23 +41,44 @@ impl Accounting {
             energy_acc_ws: 0.0,
             last_power_change_s: 0.0,
             last_telemetry_s: 0.0,
+            in_violation: false,
             report: RunReport::default(),
         }
     }
 }
 
-impl<'a> Sim<'a> {
+impl<'a, O: Observer> Sim<'a, O> {
     /// Settle the energy accumulator up to the current event time (must
     /// run before any change to the row power or to the effective
     /// budget). Power is constant over the settled segment, so the
     /// ground-truth violation accounting here is exact, not sampled —
     /// and independent of what the (possibly miscalibrated) meter says.
     pub(crate) fn settle_energy(&mut self) {
+        if O::ENABLED {
+            self.obs.settle();
+        }
         let dt = (self.core.now_s - self.acct.last_power_change_s).max(0.0);
         if dt > 0.0 {
             self.acct.energy_acc_ws += self.servers.row_power_w * dt;
             let scaled_w = self.cfg.power_scale * self.servers.row_power_w;
             let budget_eff_w = self.servers.row.budget_w * self.faults.budget_mult;
+            if O::ENABLED {
+                // Violation edge detection: the settled segment had
+                // constant power, so the crossing happened when the
+                // segment began. Bookkeeping is observer-only — the
+                // simulation itself never reads `in_violation`.
+                let seg_start = self.acct.last_power_change_s;
+                if scaled_w > budget_eff_w && !self.acct.in_violation {
+                    self.acct.in_violation = true;
+                    self.obs.event(
+                        seg_start,
+                        EventKind::ViolationStart { over_w: scaled_w - budget_eff_w },
+                    );
+                } else if scaled_w <= budget_eff_w && self.acct.in_violation {
+                    self.acct.in_violation = false;
+                    self.obs.event(seg_start, EventKind::ViolationContained);
+                }
+            }
             let r = &mut self.acct.report.resilience;
             r.true_peak_norm = r.true_peak_norm.max(scaled_w / budget_eff_w);
             if scaled_w > budget_eff_w {

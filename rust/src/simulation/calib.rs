@@ -24,9 +24,11 @@
 //! Deliberate behavior change vs the pre-ISSUE-5 band table (which
 //! mapped *every* size to one of the three constants): a non-anchor
 //! size like 20 now gets a real fit instead of borrowing the
-//! 16-server constant. The first lookup announces itself on stderr
-//! and costs one one-day simulation; an explicit `power_scale` on the
-//! scenario/config bypasses the fit entirely.
+//! 16-server constant. The first lookup announces itself through the
+//! [`crate::obs`] diagnostic hook (quiet by default for library
+//! embedders; the CLI installs a stderr printer) and costs one one-day
+//! simulation; an explicit `power_scale` on the scenario/config
+//! bypasses the fit entirely.
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -91,11 +93,11 @@ fn fit_power_scale(baseline_servers: usize) -> f64 {
     // Announce the one-time cost: this is a full one-day simulation,
     // not a table lookup, and a CLI user who picked a novel row size
     // deserves to know why the first run pauses (set an explicit
-    // `power_scale` in the scenario to skip the fit entirely).
-    eprintln!(
-        "calibrating power_scale for {baseline_servers}-server rows \
-         (one-time simulation of one day; cached afterwards) ..."
-    );
+    // `power_scale` in the scenario to skip the fit entirely). The
+    // notice goes through the quiet-by-default diagnostic hook so
+    // library embedders are never spammed on stderr; `polca`'s main()
+    // installs the printer.
+    crate::obs::emit_diag(&crate::obs::DiagEvent::CalibrationFit { baseline_servers });
     let mut cfg = SimConfig {
         policy_kind: PolicyKind::NoCap,
         deployed_servers: baseline_servers,

@@ -15,6 +15,7 @@
 use crate::cluster::hierarchy::Priority;
 use crate::cluster::oob::{OobChannel, OobCommand};
 use crate::cluster::telemetry::TelemetryBuffer;
+use crate::obs::{EventKind, Observer, SeriesId};
 use crate::policy::engine::{Action, PolicyEngine};
 use crate::sim::secs;
 
@@ -74,10 +75,14 @@ impl ControlLayer {
     }
 }
 
-impl<'a> Sim<'a> {
+impl<'a, O: Observer> Sim<'a, O> {
     pub(crate) fn set_brake(&mut self, on: bool, now_s: f64) {
         if self.control.braked == on {
             return;
+        }
+        if O::ENABLED {
+            let kind = if on { EventKind::BrakeEngaged } else { EventKind::BrakeReleased };
+            self.obs.event(now_s, kind);
         }
         // Advance all running work at the old ratios first.
         for idx in 0..self.servers.states.len() {
@@ -103,6 +108,22 @@ impl<'a> Sim<'a> {
             return; // no averaging window yet — first real sample comes next tick
         }
         self.control.telemetry.record(now_s, p);
+        if O::ENABLED {
+            self.obs.event(now_s, EventKind::Telemetry { reported: p });
+            let true_p = self.normalized_row_power();
+            let budget_mult = self.faults.budget_mult;
+            let queued = self.servers.states.iter().filter(|s| s.queued.is_some()).count();
+            let caps = if self.control.braked {
+                self.servers.states.len()
+            } else {
+                self.servers.states.iter().filter(|s| s.freq_cap_mhz.is_some()).count()
+            };
+            self.obs.sample(SeriesId::RowPower, now_s, true_p);
+            self.obs.sample(SeriesId::ReportedPower, now_s, p);
+            self.obs.sample(SeriesId::BudgetFrac, now_s, budget_mult);
+            self.obs.sample(SeriesId::QueueDepth, now_s, queued as f64);
+            self.obs.sample(SeriesId::ActiveCaps, now_s, caps as f64);
+        }
         if !self.cfg.protection {
             return;
         }
@@ -127,6 +148,17 @@ impl<'a> Sim<'a> {
     /// Issue one command through the OOB channel, recording the attempt
     /// time per class (the re-issue timeout clock).
     pub(crate) fn issue_cmd(&mut self, now_s: f64, cmd: OobCommand) {
+        if O::ENABLED {
+            let kind = match cmd {
+                OobCommand::FreqCap { target, mhz } => {
+                    EventKind::CapIssued { class: target, mhz }
+                }
+                OobCommand::Uncap { target } => EventKind::UncapIssued { class: target },
+                OobCommand::PowerBrake => EventKind::BrakeIssued,
+                OobCommand::ReleaseBrake => EventKind::BrakeReleaseIssued,
+            };
+            self.obs.event(now_s, kind);
+        }
         match cmd {
             OobCommand::FreqCap { target: Priority::Low, .. }
             | OobCommand::Uncap { target: Priority::Low } => self.control.lp_last_issue_s = now_s,
@@ -153,6 +185,12 @@ impl<'a> Sim<'a> {
             && !self.control.oob.has_pending(|c| targets(c, Priority::Low))
         {
             self.acct.report.resilience.reissued_commands += 1;
+            if O::ENABLED {
+                self.obs.event(
+                    now_s,
+                    EventKind::CapReissued { class: Priority::Low, mhz: intent.lp_cap_mhz },
+                );
+            }
             let cmd = match intent.lp_cap_mhz {
                 Some(mhz) => OobCommand::FreqCap { target: Priority::Low, mhz },
                 None => OobCommand::Uncap { target: Priority::Low },
@@ -164,6 +202,12 @@ impl<'a> Sim<'a> {
             && !self.control.oob.has_pending(|c| targets(c, Priority::High))
         {
             self.acct.report.resilience.reissued_commands += 1;
+            if O::ENABLED {
+                self.obs.event(
+                    now_s,
+                    EventKind::CapReissued { class: Priority::High, mhz: intent.hp_cap_mhz },
+                );
+            }
             let cmd = match intent.hp_cap_mhz {
                 Some(mhz) => OobCommand::FreqCap { target: Priority::High, mhz },
                 None => OobCommand::Uncap { target: Priority::High },
@@ -178,6 +222,9 @@ impl<'a> Sim<'a> {
                 OobCommand::FreqCap { target, mhz } => {
                     self.acct.report.cap_commands += 1;
                     self.ack(target, Some(mhz));
+                    if O::ENABLED {
+                        self.obs.event(now_s, EventKind::CapAcked { class: target, mhz });
+                    }
                     for idx in 0..self.servers.states.len() {
                         // Cap-ignoring servers acknowledge (the ack is
                         // recorded above) but do not change frequency.
@@ -191,6 +238,9 @@ impl<'a> Sim<'a> {
                 OobCommand::Uncap { target } => {
                     self.acct.report.uncap_commands += 1;
                     self.ack(target, None);
+                    if O::ENABLED {
+                        self.obs.event(now_s, EventKind::UncapAcked { class: target });
+                    }
                     for idx in 0..self.servers.states.len() {
                         if self.servers.states[idx].priority == target
                             && !self.faults.cap_ignore[idx]

@@ -18,6 +18,7 @@
 
 use crate::cluster::hierarchy::JobKind;
 use crate::metrics::RunReport;
+use crate::obs::{NoopObserver, Observer};
 use crate::sim::{secs, to_secs, EventQueue, SimTime};
 
 use super::accounting::Accounting;
@@ -77,7 +78,12 @@ impl Core {
 /// field is one layer with an explicit boundary; cross-layer effects go
 /// through `Sim` methods defined in the layer that owns the state they
 /// mutate.
-pub(crate) struct Sim<'a> {
+///
+/// The observer is a generic (not a trait object) so that with the
+/// default [`NoopObserver`] — whose `ENABLED` is `false` — every
+/// `if O::ENABLED` emission site monomorphizes away and the unobserved
+/// run costs nothing and stays bit-identical.
+pub(crate) struct Sim<'a, O: Observer> {
     pub(crate) cfg: &'a SimConfig,
     pub(crate) core: Core,
     pub(crate) servers: ServerLayer,
@@ -85,19 +91,27 @@ pub(crate) struct Sim<'a> {
     pub(crate) training: TrainingLayer,
     pub(crate) faults: FaultLayer,
     pub(crate) acct: Accounting,
+    pub(crate) obs: &'a mut O,
 }
 
 /// Run one simulation; returns the report (the [`super::run`] entry).
 pub(crate) fn run_sim(cfg: &SimConfig) -> RunReport {
-    Sim::new(cfg).run()
+    let mut obs = NoopObserver;
+    Sim::new(cfg, &mut obs).run()
 }
 
-impl<'a> Sim<'a> {
+/// Run one simulation with an observer attached (the
+/// [`super::run_observed`] entry).
+pub(crate) fn run_sim_observed<O: Observer>(cfg: &SimConfig, obs: &mut O) -> RunReport {
+    Sim::new(cfg, obs).run()
+}
+
+impl<'a, O: Observer> Sim<'a, O> {
     /// Assemble the layers. Construction order is fixed: the server
     /// layer first (it owns every random stream), then the RNG-free
     /// layers in any order — kept explicit here so the bit-identity
     /// contract survives future edits.
-    pub(crate) fn new(cfg: &'a SimConfig) -> Self {
+    pub(crate) fn new(cfg: &'a SimConfig, obs: &'a mut O) -> Self {
         let servers = ServerLayer::new(cfg);
         let training = TrainingLayer::new(cfg, &servers.row);
         let control = ControlLayer::new(cfg);
@@ -107,7 +121,7 @@ impl<'a> Sim<'a> {
             acct.report.train.nominal_iter_s =
                 cfg.mixed.as_ref().map(|m| m.profile.iter_time_s).unwrap_or(0.0);
         }
-        Sim { cfg, core: Core::new(cfg), servers, control, training, faults, acct }
+        Sim { cfg, core: Core::new(cfg), servers, control, training, faults, acct, obs }
     }
 
     // ---- main loop -------------------------------------------------------
@@ -179,6 +193,10 @@ impl<'a> Sim<'a> {
         self.acct.report.brake_events = self.control.policy.brake_events;
         self.acct.report.duration_s = to_secs(horizon);
         self.acct.report.events = self.core.queue.popped();
+        if O::ENABLED {
+            self.obs.counter("events-dispatched", self.core.queue.popped());
+            self.obs.counter("queue-scheduled", self.core.queue.scheduled());
+        }
         let (peak, p99, mean) = self.control.telemetry.utilization();
         self.acct.report.power_peak = peak;
         self.acct.report.power_p99 = p99;

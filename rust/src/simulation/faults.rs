@@ -15,6 +15,7 @@
 
 use crate::faults::{FaultEvent, FaultKind};
 use crate::metrics::IncidentOutcome;
+use crate::obs::{EventKind as ObsEvent, Observer};
 
 use super::core::Sim;
 use super::SimConfig;
@@ -54,12 +55,16 @@ impl FaultLayer {
     }
 }
 
-impl<'a> Sim<'a> {
+impl<'a, O: Observer> Sim<'a, O> {
     /// A fault episode begins: degrade the corresponding control-plane
     /// link. Violations from here on attribute to this incident.
     pub(crate) fn on_fault_start(&mut self, i: usize, now_s: f64) {
         self.faults.cur_incident = Some(i);
         let ev = self.faults.events[i];
+        if O::ENABLED {
+            self.obs
+                .event(now_s, ObsEvent::FaultStart { fault: i as u32, label: ev.kind.label() });
+        }
         match ev.kind {
             FaultKind::TelemetryFreeze => self.control.telemetry.freeze(now_s, ev.end_s()),
             FaultKind::OobStorm { loss_prob, latency_mult, jitter_frac } => {
@@ -86,6 +91,9 @@ impl<'a> Sim<'a> {
     /// A fault episode ends: restore the baseline control plane.
     pub(crate) fn on_fault_end(&mut self, i: usize, now_s: f64) {
         let ev = self.faults.events[i];
+        if O::ENABLED {
+            self.obs.event(now_s, ObsEvent::FaultEnd { fault: i as u32, label: ev.kind.label() });
+        }
         match ev.kind {
             // The freeze window expires by itself inside the buffer.
             FaultKind::TelemetryFreeze => {}

@@ -178,9 +178,30 @@ pub fn run(cfg: &SimConfig) -> RunReport {
     self::core::run_sim(cfg)
 }
 
+/// Run one simulation with an [`Observer`](crate::obs::Observer)
+/// attached. Observation is passive: the report is bit-identical to
+/// [`run`] on the same config (the passivity property in
+/// `tests/integration_obs.rs`); the observer additionally receives the
+/// event stream, series samples, and hot-path counters.
+pub fn run_observed<O: crate::obs::Observer>(cfg: &SimConfig, obs: &mut O) -> RunReport {
+    self::core::run_sim_observed(cfg, obs)
+}
+
 /// Run a policy config and its paired baseline; return (report, impact).
 pub fn run_with_impact(cfg: &SimConfig) -> (RunReport, crate::metrics::ImpactSummary) {
     let mut report = run(cfg);
+    let mut base = run(&cfg.baseline());
+    let impact = report.impact_vs(&mut base);
+    (report, impact)
+}
+
+/// [`run_with_impact`] with an observer on the policy run (the paired
+/// baseline is a counterfactual and stays unobserved).
+pub fn run_with_impact_observed<O: crate::obs::Observer>(
+    cfg: &SimConfig,
+    obs: &mut O,
+) -> (RunReport, crate::metrics::ImpactSummary) {
+    let mut report = run_observed(cfg, obs);
     let mut base = run(&cfg.baseline());
     let impact = report.impact_vs(&mut base);
     (report, impact)

@@ -17,6 +17,7 @@
 
 use crate::characterize::catalog::{self, ModelSpec};
 use crate::cluster::hierarchy::{JobKind, Priority, Row};
+use crate::obs::Observer;
 use crate::perfmodel::{ExecPhase, RequestExec};
 use crate::power::gpu::{CapMode, Phase};
 use crate::sim::secs;
@@ -168,7 +169,7 @@ impl ServerLayer {
     }
 }
 
-impl<'a> Sim<'a> {
+impl<'a, O: Observer> Sim<'a, O> {
     // ---- power bookkeeping ------------------------------------------------
 
     pub(crate) fn freq_ratio(&self, idx: usize) -> f64 {

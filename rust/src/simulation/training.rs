@@ -11,6 +11,7 @@
 //! iteration-time inflation ([`crate::metrics::TrainingMetrics`]).
 
 use crate::cluster::hierarchy::JobKind;
+use crate::obs::{EventKind, Observer};
 use crate::power::gpu::CapMode;
 use crate::power::training::{TrainingPowerModel, TrainingProfile};
 use crate::sim::secs;
@@ -109,7 +110,7 @@ impl TrainingLayer {
     }
 }
 
-impl<'a> Sim<'a> {
+impl<'a, O: Observer> Sim<'a, O> {
     /// Training server wall power in watts: the job's current waveform
     /// level under this server's cap, through the shared server model.
     pub(crate) fn training_server_w(&self, idx: usize) -> f64 {
@@ -132,6 +133,11 @@ impl<'a> Sim<'a> {
     pub(crate) fn apply_train_level(&mut self, j: usize) {
         let level =
             self.training.jobs[j].model.profile.phase_levels()[self.training.jobs[j].phase_idx];
+        if O::ENABLED {
+            let phase = self.training.jobs[j].phase_idx as u32;
+            self.obs
+                .event(self.core.now_s, EventKind::TrainPhase { job: j as u32, phase, level });
+        }
         let members = std::mem::take(&mut self.training.jobs[j].servers);
         for &idx in &members {
             self.servers.states[idx].train_level = level;
@@ -174,6 +180,9 @@ impl<'a> Sim<'a> {
             // Sync barrier reached: the iteration is complete.
             let wall = now_s - self.training.jobs[j].iter_started_s;
             self.acct.report.train.record(wall);
+            if O::ENABLED {
+                self.obs.event(now_s, EventKind::TrainIter { job: j as u32, wall_s: wall });
+            }
             self.start_train_iteration(j, now_s);
         } else {
             self.training.jobs[j].phase_idx += 1;

@@ -36,9 +36,24 @@ impl Json {
         Json::Arr(items.into_iter().collect())
     }
 
-    /// Numeric array from a slice.
+    /// Canonical number constructor: non-finite values become
+    /// [`Json::Null`] at construction. The writer already renders a
+    /// non-finite `Json::Num` as `null` (JSON has no inf/nan), but a
+    /// value built through `num` also *compares* and parses back as
+    /// null — use this in `to_json` impls for any quantity that can be
+    /// non-finite (e.g. an uncontained incident's time-to-contain).
+    pub fn num(x: f64) -> Json {
+        if x.is_finite() {
+            Json::Num(x)
+        } else {
+            Json::Null
+        }
+    }
+
+    /// Numeric array from a slice (non-finite entries become null,
+    /// as with [`Json::num`]).
     pub fn num_arr(xs: &[f64]) -> Json {
-        Json::Arr(xs.iter().map(|&x| Json::Num(x)).collect())
+        Json::Arr(xs.iter().map(|&x| Json::num(x)).collect())
     }
 
     /// Object member access.
@@ -422,6 +437,22 @@ mod tests {
         assert_eq!(v.at(&["flops", "prefill_s16"]).unwrap().as_i64(), Some(123456789));
         // pretty-printing round-trips
         assert_eq!(parse(&v.to_pretty()).unwrap(), v);
+    }
+
+    #[test]
+    fn nonfinite_numbers_are_null_everywhere() {
+        // The writer renders a raw non-finite Num as null ...
+        assert_eq!(Json::Num(f64::INFINITY).to_string(), "null");
+        assert_eq!(Json::Num(f64::NEG_INFINITY).to_string(), "null");
+        assert_eq!(Json::Num(f64::NAN).to_string(), "null");
+        // ... and the canonical constructor normalizes at build time,
+        // so values round-trip through parse() consistently.
+        assert_eq!(Json::num(f64::INFINITY), Json::Null);
+        assert_eq!(Json::num(f64::NAN), Json::Null);
+        assert_eq!(Json::num(1.5), Json::Num(1.5));
+        let arr = Json::num_arr(&[1.0, f64::INFINITY, 3.0]);
+        assert_eq!(arr.to_string(), "[1,null,3]");
+        assert_eq!(parse(&arr.to_string()).unwrap(), arr);
     }
 
     #[test]

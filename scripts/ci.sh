@@ -128,6 +128,49 @@ else
   echo "   (python3 not found — parse check skipped)"
 fi
 
+# Trace gate (ISSUE 6): a traced run must emit a parseable JSONL stream
+# whose every line matches the record schema, and the trace CLI must be
+# able to summarize, render per-incident timelines, and convert to a
+# non-empty Chrome trace. (`tail`, never `head`, after polca commands:
+# under pipefail a closed pipe would turn a passing gate into exit 141.)
+echo "== trace gate (polca run --trace + schema check + trace CLI)"
+trace_dir=$(mktemp -d)
+./target/release/polca run inference-row --quick --weeks 0.02 \
+  --trace "$trace_dir/t.jsonl" | tail -n 3
+if command -v python3 >/dev/null 2>&1; then
+  python3 - "$trace_dir/t.jsonl" <<'PY'
+import json, sys
+kinds = {"meta", "counter", "span", "sample", "event"}
+counts = {}
+with open(sys.argv[1]) as f:
+    for i, line in enumerate(f, 1):
+        rec = json.loads(line)
+        t = rec.get("type")
+        assert t in kinds, f"line {i}: unknown record type {t!r}"
+        if t in ("sample", "event"):
+            ts = rec.get("t_s")
+            assert isinstance(ts, (int, float)), f"line {i}: non-numeric t_s {ts!r}"
+        counts[t] = counts.get(t, 0) + 1
+assert counts.get("meta") == 1, f"expected exactly one meta record: {counts}"
+assert counts.get("event", 0) > 0, f"no events recorded: {counts}"
+assert counts.get("sample", 0) > 0, f"no series samples recorded: {counts}"
+print(f"   trace schema OK: {counts}")
+PY
+else
+  echo "   (python3 not found — schema check skipped)"
+fi
+./target/release/polca trace summarize "$trace_dir/t.jsonl" | tail -n 3
+./target/release/polca run cascade-faults --quick --weeks 0.03 \
+  --trace "$trace_dir/c.jsonl" | tail -n 3
+./target/release/polca trace timeline "$trace_dir/c.jsonl" | tail -n 12
+./target/release/polca trace export "$trace_dir/c.jsonl" \
+  --format chrome --out "$trace_dir/c.trace.json"
+if command -v python3 >/dev/null 2>&1; then
+  python3 -c 'import json,sys; d=json.load(open(sys.argv[1])); assert d["traceEvents"], "empty traceEvents"' \
+    "$trace_dir/c.trace.json"
+fi
+rm -rf "$trace_dir"
+
 # Bench smoke (ISSUE 5): record the sweep serial-vs-parallel trajectory
 # to BENCH_sim.json on every CI run. Remove any stale file first so the
 # existence check below proves THIS run wrote it.
