@@ -81,7 +81,7 @@ pub fn all_ids() -> Vec<&'static str> {
     vec![
         "table1", "fig2", "fig4", "fig5", "fig6", "fig7", "fig8", "fig9", "fig11", "table2",
         "table3", "table4", "table5", "fig13", "fig14", "fig15a", "fig15b", "fig16", "fig17",
-        "fig18", "fig19", "site-headroom", "mixed-row", "fault-matrix",
+        "fig18", "fig19", "site-headroom", "region-headroom", "mixed-row", "fault-matrix",
     ]
 }
 
@@ -112,6 +112,7 @@ pub fn run_experiment(id: &str, depth: Depth, seed: u64) -> anyhow::Result<Figur
         "fig17" => ev::fig17(depth, seed),
         "fig18" => ev::fig18(depth, seed),
         "site-headroom" => fleet::site_headroom(depth, seed),
+        "region-headroom" => fleet::region_headroom(depth, seed),
         "mixed-row" => mixed::mixed_row(depth, seed),
         "fault-matrix" => faults::fault_matrix(depth, seed),
         other => anyhow::bail!("unknown experiment '{other}' (see `polca figure list`)"),
@@ -125,7 +126,7 @@ mod tests {
     #[test]
     fn registry_is_complete_and_unique() {
         let ids = all_ids();
-        assert_eq!(ids.len(), 24);
+        assert_eq!(ids.len(), 25);
         let mut dedup = ids.clone();
         dedup.sort();
         dedup.dedup();

@@ -17,6 +17,13 @@
 //! * [`planner`] — per-policy binary search for the max deployable
 //!   servers under the substation budget, reporting headroom, cap-event
 //!   rates, and SLO impact via [`crate::metrics::ImpactSummary`].
+//! * [`trace`] — first-class power traces ([`trace::PowerTrace`]) with
+//!   closed-form composition operators (`sum`/`scale`/`shift_phase`/
+//!   `mix`); [`site::compose`] is derived from them bit-identically.
+//! * [`region`] — many sites under one shared grid budget: archetype
+//!   simulation cache + analytic trace composition gives a planner
+//!   whose cost is independent of site count, cross-validated against
+//!   full simulation by [`region::validate_region`].
 //!
 //! Mixed workloads thread through every layer: a cluster can colocate a
 //! training fraction ([`site::ClusterSpec::training_fraction`],
@@ -29,14 +36,22 @@
 //! [`planner::plan_site_with_training`].
 //!
 //! CLI: `polca fleet [plan|sweep|trace] --clusters N --policy polca
-//! [--training FRAC]`.
+//! [--training FRAC]` and `polca fleet region [plan|trace|validate]
+//! --sites N`.
 
 pub mod parallel;
 pub mod planner;
+pub mod region;
 pub mod site;
 pub mod sku;
+pub mod trace;
 
 pub use parallel::{run_site, ClusterOutcome, SiteOutcome, SiteRunConfig};
 pub use planner::{plan_all, plan_site, plan_site_with_training, PlannerConfig, PolicyPlan};
+pub use region::{
+    plan_region, validate_region, ArchetypeCache, RegionPlan, RegionPlanConfig, RegionSite,
+    RegionSpec, RegionValidation,
+};
 pub use site::{compose, ClusterSpec, Feed, SiteSpec, SiteTrace};
 pub use sku::SkuSpec;
+pub use trace::{PowerTrace, TraceSummary};

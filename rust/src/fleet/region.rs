@@ -1,0 +1,835 @@
+//! Region layer: many sites under one shared grid budget, planned
+//! analytically through the trace algebra.
+//!
+//! The site planner ([`crate::fleet::planner`]) simulates every
+//! candidate because one substation feeds a handful of clusters. A
+//! *region* — tens to hundreds of sites behind a shared grid
+//! interconnect — cannot afford a discrete-event run per candidate
+//! allocation. This module makes planning closed-form instead:
+//!
+//! 1. **Archetypes** ([`ArchetypeCache`]): a cluster's normalized power
+//!    trace depends only on (SKU, baseline servers, added %, training
+//!    fraction) — not on which site it sits in or what diurnal phase it
+//!    serves. Each distinct archetype is simulated *once* (fanned out
+//!    through [`crate::exec::run_batch`]) and cached; a 50-site region
+//!    of 3 SKUs probes a dozen sims total, independent of site count.
+//! 2. **Composition** ([`site_trace`], [`region_trace`]): a site's
+//!    trace is the [`PowerTrace`] sum of its clusters' archetypes,
+//!    each rotated by the cluster's diurnal phase plus the site's
+//!    time-zone offset and scaled to its breaker budget; the region
+//!    trace is the sum of substation-side site traces. Evaluating a
+//!    candidate allocation is O(sites × samples).
+//! 3. **Planning** ([`plan_region`]): binary-search the largest
+//!    *uniform* added level that keeps the (optionally price/carbon
+//!    weighted) region peak under the grid budget and every site under
+//!    its substation budget, then greedily bump individual sites by
+//!    `step_pct` while feasibility holds.
+//! 4. **Validation** ([`validate_region`]): the analytic path is only
+//!    trustworthy against the event-driven truth, so the subsystem
+//!    ships its own harness — full [`crate::fleet::parallel::run_site`]
+//!    simulations of deterministically sampled sites, compared to the
+//!    analytic composition, reporting mean/peak relative error against
+//!    the pinned tolerances ([`MEAN_TOLERANCE`], [`PEAK_TOLERANCE`]).
+//!
+//! # Periodicity contract
+//!
+//! Phase rotation of an archetype is exact only when the trace spans
+//! whole diurnal periods of like days: the arrival model's weekday
+//! pattern repeats across days 0–4 (weekends differ), so validation
+//! snaps its horizon to whole days and demo time-zone offsets stay
+//! under a day. Planning at other horizons is self-consistent but its
+//! wrap-around is an approximation — which is precisely what
+//! `validate` measures.
+//!
+//! The plan allocates *power*; per-site SLO feasibility at the chosen
+//! added levels remains the site planner's job
+//! ([`crate::fleet::planner::plan_site`]).
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use crate::exec::{run_batch, run_batch_profiled, ExecConfig};
+use crate::obs::{emit_diag, DiagEvent, Span};
+use crate::policy::engine::PolicyKind;
+use crate::simulation;
+use crate::util::rng::Rng;
+
+use super::parallel::{run_site, SiteRunConfig};
+use super::site::{ClusterSpec, Feed, SiteSpec};
+use super::sku;
+use super::trace::PowerTrace;
+
+/// Validation tolerance on analytic-vs-simulated *mean* site power.
+pub const MEAN_TOLERANCE: f64 = 0.01;
+/// Validation tolerance on analytic-vs-simulated *peak* site power.
+pub const PEAK_TOLERANCE: f64 = 0.03;
+
+/// One site of a region: a full site topology plus the time-zone
+/// offset of the demand it serves.
+#[derive(Debug, Clone)]
+pub struct RegionSite {
+    /// The site topology (clusters → feeds → UPS → substation).
+    pub site: SiteSpec,
+    /// Time-zone offset of this site's demand vs region time, seconds.
+    /// A site serving demand `h` hours east sees its diurnal peak `h`
+    /// hours earlier in region time (same convention as
+    /// [`ClusterSpec::phase_offset_s`]). Keep under a day so phase
+    /// rotation stays within the weekday-periodic window.
+    pub tz_offset_s: f64,
+}
+
+/// A region: sites sharing one grid interconnect budget.
+#[derive(Debug, Clone)]
+pub struct RegionSpec {
+    /// Region name (for tables and traces).
+    pub name: String,
+    /// The sites drawing from the shared interconnect.
+    pub sites: Vec<RegionSite>,
+    /// Shared grid budget in watts, applied to the (weighted) peak of
+    /// the composed region trace at the substation side.
+    pub grid_budget_w: f64,
+    /// Optional time-varying grid *price* weights (resampled to the
+    /// trace length; 1.0 = neutral). The planner constrains
+    /// `max_t weight(t) × draw(t) ≤ grid_budget_w`, so expensive hours
+    /// bind tighter.
+    pub price_weights: Option<Vec<f64>>,
+    /// Optional time-varying *carbon intensity* weights, combined
+    /// multiplicatively with the price weights.
+    pub carbon_weights: Option<Vec<f64>>,
+}
+
+impl RegionSpec {
+    /// A demo region: `n_sites` sites of `clusters_per_site` clusters
+    /// each, cycling the SKU registry on 12-server baselines (a pinned
+    /// calibration anchor, so no archetype triggers a calibration
+    /// fit), cluster diurnal peaks staggered 3 h apart within a site,
+    /// site time zones staggered 3 h apart across the region, and a
+    /// shared grid budget of `grid_budget_frac` × the summed
+    /// substation budgets.
+    pub fn demo(n_sites: usize, clusters_per_site: usize, grid_budget_frac: f64) -> RegionSpec {
+        let skus = sku::registry();
+        let sites: Vec<RegionSite> = (0..n_sites)
+            .map(|s| {
+                let clusters: Vec<ClusterSpec> = (0..clusters_per_site)
+                    .map(|i| {
+                        let sk = skus[(s + i) % skus.len()];
+                        let mut c =
+                            ClusterSpec::new(&format!("s{s}c{i}-{}", sk.name), sk, 12);
+                        c.phase_offset_s = i as f64 * 3.0 * 3600.0;
+                        c
+                    })
+                    .collect();
+                let feeds: Vec<Feed> = clusters
+                    .chunks(2)
+                    .enumerate()
+                    .map(|(f, chunk)| {
+                        let idxs: Vec<usize> = (f * 2..f * 2 + chunk.len()).collect();
+                        let capacity_w: f64 = chunk.iter().map(|c| c.budget_w()).sum();
+                        Feed { name: format!("feed{f}"), clusters: idxs, capacity_w }
+                    })
+                    .collect();
+                let ups_efficiency = 0.94;
+                let substation_budget_w =
+                    clusters.iter().map(|c| c.budget_w()).sum::<f64>() / ups_efficiency;
+                RegionSite {
+                    site: SiteSpec {
+                        name: format!("site{s}"),
+                        clusters,
+                        feeds,
+                        ups_efficiency,
+                        substation_budget_w,
+                    },
+                    tz_offset_s: (s % 5) as f64 * 3.0 * 3600.0,
+                }
+            })
+            .collect();
+        let grid_budget_w =
+            grid_budget_frac * sites.iter().map(|r| r.site.substation_budget_w).sum::<f64>();
+        RegionSpec {
+            name: format!("demo-region-{n_sites}"),
+            sites,
+            grid_budget_w,
+            price_weights: None,
+            carbon_weights: None,
+        }
+    }
+
+    /// Total provisioned server count across all sites.
+    pub fn baseline_servers(&self) -> usize {
+        self.sites.iter().map(|r| r.site.baseline_servers()).sum()
+    }
+
+    /// Total deployed server count at the given per-site added levels.
+    pub fn deployed_at(&self, added_pct: &[u32]) -> usize {
+        self.sites
+            .iter()
+            .zip(added_pct)
+            .map(|(r, &a)| r.site.with_added(a as f64 / 100.0).deployed_servers())
+            .sum()
+    }
+
+    /// The combined (price × carbon) weight profile, if any weights are
+    /// configured; resampled pointwise to the longer of the two.
+    pub fn effective_weights(&self) -> Option<Vec<f64>> {
+        match (&self.price_weights, &self.carbon_weights) {
+            (None, None) => None,
+            (Some(p), None) => Some(p.clone()),
+            (None, Some(c)) => Some(c.clone()),
+            (Some(p), Some(c)) => {
+                let n = p.len().max(c.len());
+                Some(
+                    (0..n)
+                        .map(|j| p[(j * p.len()) / n] * c[(j * c.len()) / n])
+                        .collect(),
+                )
+            }
+        }
+    }
+}
+
+/// How to run a region planning / validation pass.
+#[derive(Debug, Clone)]
+pub struct RegionPlanConfig {
+    /// Capping policy every archetype and validation cluster runs.
+    pub policy: PolicyKind,
+    /// Archetype simulation horizon in weeks (default one day, the
+    /// shortest whole diurnal period — see the module docs).
+    pub weeks: f64,
+    /// Region seed; archetype and validation seeds derive from it.
+    pub seed: u64,
+    /// Trace sampling period, seconds.
+    pub sample_s: f64,
+    /// Fan archetype/validation batches out on scoped threads.
+    pub parallel: bool,
+    /// Largest per-site added level probed, percent.
+    pub max_added_pct: u32,
+    /// Planning granularity, percent.
+    pub step_pct: u32,
+}
+
+impl Default for RegionPlanConfig {
+    fn default() -> Self {
+        RegionPlanConfig {
+            policy: PolicyKind::Polca,
+            weeks: 1.0 / 7.0,
+            seed: 1,
+            sample_s: 300.0,
+            parallel: true,
+            max_added_pct: 50,
+            step_pct: 5,
+        }
+    }
+}
+
+/// Archetype key: everything a cluster's *normalized* trace depends on.
+/// (Phase is deliberately absent — archetypes are simulated at zero
+/// phase and rotated analytically; training fraction is keyed in
+/// permille.)
+type ArchetypeKey = (String, usize, u32, u32);
+
+fn archetype_key(c: &ClusterSpec, added_pct: u32) -> ArchetypeKey {
+    (
+        c.sku.name.to_string(),
+        c.baseline_servers,
+        added_pct,
+        (c.training_fraction * 1000.0).round() as u32,
+    )
+}
+
+/// Deterministic archetype seed: a pure function of the region seed and
+/// the archetype key, domain-separated from every other seed derivation
+/// in the tree ([`crate::fleet::parallel::cluster_seeds`],
+/// [`crate::exec::item_seeds`]) by its own constant.
+fn archetype_seed(region_seed: u64, key: &ArchetypeKey) -> u64 {
+    // FNV-1a over the key, then one xoshiro squeeze for dispersion.
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in key.0.bytes() {
+        h = (h ^ b as u64).wrapping_mul(0x0000_0100_0000_01B3);
+    }
+    h ^= (key.1 as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+    h ^= ((key.2 as u64) << 32) | key.3 as u64;
+    Rng::new(region_seed ^ 0xA2C7_E7F5_5EED_0003 ^ h).next_u64()
+}
+
+/// Deterministic per-site validation seeds (distinct domain from
+/// archetype seeds, so the spot-check simulations are statistically
+/// independent of the traces they check).
+fn validation_seed(region_seed: u64, site_idx: usize) -> u64 {
+    Rng::new(region_seed ^ 0x7A11_DA7E_5EED_0009).fork(site_idx as u64).next_u64()
+}
+
+/// Cache of simulated cluster archetypes: one normalized
+/// [`PowerTrace`] per [`ArchetypeKey`], populated lazily in batches
+/// through the scenario executor.
+pub struct ArchetypeCache {
+    policy: PolicyKind,
+    weeks: f64,
+    seed: u64,
+    /// Trace sampling period of every archetype, seconds.
+    pub sample_s: f64,
+    exec: ExecConfig,
+    traces: BTreeMap<ArchetypeKey, PowerTrace>,
+    /// Discrete-event simulations actually run to fill the cache.
+    pub sims_run: usize,
+    /// Per-archetype execution spans from the profiled batches (for
+    /// the region-plan trace surface).
+    pub spans: Vec<Span>,
+}
+
+impl ArchetypeCache {
+    /// An empty cache that will simulate with the given plan settings.
+    pub fn new(pc: &RegionPlanConfig) -> ArchetypeCache {
+        ArchetypeCache {
+            policy: pc.policy,
+            weeks: pc.weeks,
+            seed: pc.seed,
+            sample_s: pc.sample_s,
+            exec: ExecConfig::with_parallel(pc.parallel),
+            traces: BTreeMap::new(),
+            sims_run: 0,
+            spans: Vec::new(),
+        }
+    }
+
+    /// Insert an externally supplied archetype (a measured trace, or a
+    /// synthetic one in tests) so [`ArchetypeCache::ensure`] will not
+    /// simulate that key.
+    pub fn insert(&mut self, c: &ClusterSpec, added_pct: u32, trace: PowerTrace) {
+        self.traces.insert(archetype_key(c, added_pct), trace);
+    }
+
+    /// Make sure every archetype needed to evaluate `region` at the
+    /// given per-site added levels is present, simulating the missing
+    /// ones as one batch through [`crate::exec::run_batch`].
+    pub fn ensure(&mut self, region: &RegionSpec, added_pct: &[u32]) {
+        let mut missing: BTreeMap<ArchetypeKey, ClusterSpec> = BTreeMap::new();
+        let mut seen: BTreeSet<ArchetypeKey> = BTreeSet::new();
+        for (rs, &level) in region.sites.iter().zip(added_pct) {
+            for c in &rs.site.clusters {
+                let key = archetype_key(c, level);
+                if !self.traces.contains_key(&key) && seen.insert(key.clone()) {
+                    let mut rep = c.clone();
+                    rep.phase_offset_s = 0.0;
+                    rep.added_frac = level as f64 / 100.0;
+                    missing.insert(key, rep);
+                }
+            }
+        }
+        if missing.is_empty() {
+            return;
+        }
+        let items: Vec<(ArchetypeKey, ClusterSpec)> = missing.into_iter().collect();
+        let sims: Vec<_> = items
+            .iter()
+            .map(|(key, rep)| {
+                rep.sim_config(self.policy, self.weeks, archetype_seed(self.seed, key), self.sample_s)
+            })
+            .collect();
+        let (reports, spans) =
+            run_batch_profiled(&sims, &self.exec, |_, cfg| simulation::run(cfg));
+        self.sims_run += reports.len();
+        self.spans.extend(spans);
+        for ((key, _), report) in items.into_iter().zip(reports) {
+            self.traces
+                .insert(key, PowerTrace::from_series(&report.power_series, self.sample_s));
+        }
+    }
+
+    /// The cached normalized archetype for a cluster at an added level.
+    /// Panics if [`ArchetypeCache::ensure`] has not covered the key.
+    pub fn get(&self, c: &ClusterSpec, added_pct: u32) -> &PowerTrace {
+        self.traces
+            .get(&archetype_key(c, added_pct))
+            .expect("archetype not in cache — call ensure() first")
+    }
+}
+
+/// Analytic *cluster-side* site trace (watts at the breakers): each
+/// cluster's archetype rotated to its diurnal phase plus the site's
+/// time zone, scaled to its breaker budget, and summed — the analytic
+/// twin of the trace [`crate::fleet::parallel::run_site`] composes
+/// from real simulations.
+pub fn site_trace(rs: &RegionSite, added_pct: u32, cache: &ArchetypeCache) -> PowerTrace {
+    let traces: Vec<PowerTrace> = rs
+        .site
+        .clusters
+        .iter()
+        .map(|c| {
+            // A cluster whose arrival clock runs phi ahead sees its
+            // features phi *earlier*, hence the backward rotation.
+            cache
+                .get(c, added_pct)
+                .shift_phase(-(c.phase_offset_s + rs.tz_offset_s))
+                .scale(c.budget_w())
+        })
+        .collect();
+    PowerTrace::sum(cache.sample_s, &traces)
+}
+
+/// The composed region trace at the given per-site added levels.
+#[derive(Debug, Clone)]
+pub struct RegionTrace {
+    /// Sampling period, seconds.
+    pub period_s: f64,
+    /// Per-site *substation-side* traces (after UPS losses), watts.
+    pub site_w: Vec<PowerTrace>,
+    /// Region total (sum of `site_w`), the grid's view.
+    pub region_w: PowerTrace,
+}
+
+/// Compose the region trace analytically (no simulation beyond filling
+/// the archetype cache).
+pub fn region_trace(
+    region: &RegionSpec,
+    added_pct: &[u32],
+    cache: &mut ArchetypeCache,
+) -> RegionTrace {
+    cache.ensure(region, added_pct);
+    let site_w: Vec<PowerTrace> = region
+        .sites
+        .iter()
+        .zip(added_pct)
+        .map(|(rs, &a)| site_trace(rs, a, cache).scale(1.0 / rs.site.ups_efficiency))
+        .collect();
+    let region_w = PowerTrace::sum(cache.sample_s, &site_w);
+    RegionTrace { period_s: cache.sample_s, site_w, region_w }
+}
+
+/// A region allocation plan.
+#[derive(Debug, Clone)]
+pub struct RegionPlan {
+    /// Site names, in region order.
+    pub site_names: Vec<String>,
+    /// Planned added level per site, percent.
+    pub added_pct: Vec<u32>,
+    /// The uniform level the binary search settled on before the
+    /// greedy per-site bumps.
+    pub uniform_added_pct: u32,
+    /// Total provisioned servers across the region.
+    pub baseline_servers: usize,
+    /// Total deployed servers under the plan.
+    pub deployed_servers: usize,
+    /// Shared grid budget, watts.
+    pub grid_budget_w: f64,
+    /// (Weighted) analytic region peak at the plan, watts.
+    pub grid_peak_w: f64,
+    /// Analytic substation-side peak per site at the plan, watts.
+    pub site_peak_w: Vec<f64>,
+    /// Substation budget per site, watts.
+    pub site_budget_w: Vec<f64>,
+    /// False only when the region breaks its budgets with zero added
+    /// servers (over-provisioned vs the grid interconnect).
+    pub feasible: bool,
+    /// Discrete-event simulations run to fill the archetype cache —
+    /// the whole point: independent of site count and candidate count.
+    pub archetype_sims: usize,
+    /// Closed-form candidate evaluations performed.
+    pub candidate_evals: usize,
+    /// Execution spans of the archetype simulation batches.
+    pub spans: Vec<Span>,
+}
+
+impl RegionPlan {
+    /// Extra servers deployed over baseline, percent.
+    pub fn headroom_pct(&self) -> f64 {
+        if self.baseline_servers == 0 {
+            return 0.0;
+        }
+        100.0 * (self.deployed_servers as f64 - self.baseline_servers as f64)
+            / self.baseline_servers as f64
+    }
+}
+
+struct CandidateEval {
+    ok: bool,
+    grid_peak_w: f64,
+    site_peak_w: Vec<f64>,
+}
+
+/// Evaluate one candidate allocation closed-form, memoizing per-site
+/// substation-side traces by (site index, level).
+fn eval_candidate(
+    region: &RegionSpec,
+    added_pct: &[u32],
+    cache: &mut ArchetypeCache,
+    memo: &mut BTreeMap<(usize, u32), PowerTrace>,
+    evals: &mut usize,
+) -> CandidateEval {
+    cache.ensure(region, added_pct);
+    *evals += 1;
+    let sample_s = cache.sample_s;
+    let site_traces: Vec<PowerTrace> = region
+        .sites
+        .iter()
+        .enumerate()
+        .zip(added_pct)
+        .map(|((i, rs), &a)| {
+            memo.entry((i, a))
+                .or_insert_with(|| {
+                    site_trace(rs, a, cache).scale(1.0 / rs.site.ups_efficiency)
+                })
+                .clone()
+        })
+        .collect();
+    let region_w = PowerTrace::sum(sample_s, &site_traces);
+    let weights = region.effective_weights();
+    let grid_peak_w = match &weights {
+        Some(w) => region_w.weighted_peak_w(w),
+        None => region_w.peak_w(),
+    };
+    let site_peak_w: Vec<f64> = site_traces.iter().map(|t| t.peak_w()).collect();
+    let ok = grid_peak_w <= region.grid_budget_w
+        && site_peak_w
+            .iter()
+            .zip(&region.sites)
+            .all(|(&p, rs)| p <= rs.site.substation_budget_w);
+    CandidateEval { ok, grid_peak_w, site_peak_w }
+}
+
+/// Plan a region with a caller-supplied archetype cache (lets tests and
+/// external-trace users pre-seed archetypes; [`plan_region`] is the
+/// plain entry point).
+pub fn plan_region_with_cache(
+    region: &RegionSpec,
+    pc: &RegionPlanConfig,
+    cache: &mut ArchetypeCache,
+) -> RegionPlan {
+    let n_sites = region.sites.len();
+    let step = pc.step_pct.max(1);
+    let max_units = pc.max_added_pct / step;
+    let mut memo: BTreeMap<(usize, u32), PowerTrace> = BTreeMap::new();
+    let mut evals = 0usize;
+
+    // Binary-search the largest feasible *uniform* level, in step units.
+    let at = |units: u32| vec![units * step; n_sites];
+    let feasible = eval_candidate(region, &at(0), cache, &mut memo, &mut evals).ok;
+    let mut lo_u = 0u32;
+    if feasible && max_units > 0 {
+        if eval_candidate(region, &at(max_units), cache, &mut memo, &mut evals).ok {
+            lo_u = max_units;
+        } else {
+            let mut hi_u = max_units; // invariant: lo feasible, hi not
+            while hi_u - lo_u > 1 {
+                let mid_u = lo_u + (hi_u - lo_u) / 2;
+                if eval_candidate(region, &at(mid_u), cache, &mut memo, &mut evals).ok {
+                    lo_u = mid_u;
+                } else {
+                    hi_u = mid_u;
+                }
+            }
+        }
+    }
+    let uniform = lo_u * step;
+    let mut added = vec![uniform; n_sites];
+
+    // Greedy refinement: bump one site at a time by `step` while the
+    // region stays feasible; passes repeat until no bump lands. Each
+    // probe is a closed-form evaluation — no simulation.
+    if feasible {
+        loop {
+            let mut improved = false;
+            for s in 0..n_sites {
+                if added[s] + step > pc.max_added_pct {
+                    continue;
+                }
+                let mut cand = added.clone();
+                cand[s] += step;
+                if eval_candidate(region, &cand, cache, &mut memo, &mut evals).ok {
+                    added = cand;
+                    improved = true;
+                }
+            }
+            if !improved {
+                break;
+            }
+        }
+    }
+
+    let fin = eval_candidate(region, &added, cache, &mut memo, &mut evals);
+    let plan = RegionPlan {
+        site_names: region.sites.iter().map(|r| r.site.name.clone()).collect(),
+        added_pct: added.clone(),
+        uniform_added_pct: uniform,
+        baseline_servers: region.baseline_servers(),
+        deployed_servers: region.deployed_at(&added),
+        grid_budget_w: region.grid_budget_w,
+        grid_peak_w: fin.grid_peak_w,
+        site_peak_w: fin.site_peak_w,
+        site_budget_w: region.sites.iter().map(|r| r.site.substation_budget_w).collect(),
+        feasible,
+        archetype_sims: cache.sims_run,
+        candidate_evals: evals,
+        spans: cache.spans.clone(),
+    };
+    emit_diag(DiagEvent::RegionPlanned {
+        sites: n_sites,
+        archetype_sims: cache.sims_run,
+        candidate_evals: evals,
+    });
+    plan
+}
+
+/// Plan a region: joint binary-search + greedy allocation of added
+/// servers across sites under the shared grid budget, entirely
+/// closed-form on top of the archetype cache.
+pub fn plan_region(region: &RegionSpec, pc: &RegionPlanConfig) -> RegionPlan {
+    let mut cache = ArchetypeCache::new(pc);
+    plan_region_with_cache(region, pc, &mut cache)
+}
+
+/// One site's analytic-vs-simulated comparison.
+#[derive(Debug, Clone)]
+pub struct SiteValidation {
+    /// Site name.
+    pub site: String,
+    /// Added level the site was validated at, percent.
+    pub added_pct: u32,
+    /// Analytic mean site power (cluster side), watts.
+    pub analytic_mean_w: f64,
+    /// Fully simulated mean site power, watts.
+    pub simulated_mean_w: f64,
+    /// Analytic peak site power, watts.
+    pub analytic_peak_w: f64,
+    /// Fully simulated peak site power, watts.
+    pub simulated_peak_w: f64,
+    /// |analytic − simulated| / simulated, means.
+    pub mean_rel_err: f64,
+    /// |analytic − simulated| / simulated, peaks.
+    pub peak_rel_err: f64,
+}
+
+/// The region validation report: per-site errors vs the pinned bounds.
+#[derive(Debug, Clone)]
+pub struct RegionValidation {
+    /// Per sampled site, in sample order.
+    pub sites: Vec<SiteValidation>,
+    /// Largest per-site mean relative error.
+    pub worst_mean_rel_err: f64,
+    /// Largest per-site peak relative error.
+    pub worst_peak_rel_err: f64,
+    /// Mean tolerance the run was held to.
+    pub mean_tolerance: f64,
+    /// Peak tolerance the run was held to.
+    pub peak_tolerance: f64,
+    /// Full-simulation horizon used, weeks (snapped to whole days).
+    pub weeks: f64,
+}
+
+impl RegionValidation {
+    /// Whether every sampled site is inside both tolerances.
+    pub fn passed(&self) -> bool {
+        self.worst_mean_rel_err <= self.mean_tolerance
+            && self.worst_peak_rel_err <= self.peak_tolerance
+    }
+
+    /// The worst-offending site (largest tolerance-normalized error) —
+    /// what a failing run should print for triage.
+    pub fn worst_site(&self) -> Option<&SiteValidation> {
+        self.sites.iter().max_by(|a, b| {
+            let ka = (a.mean_rel_err / self.mean_tolerance)
+                .max(a.peak_rel_err / self.peak_tolerance);
+            let kb = (b.mean_rel_err / self.mean_tolerance)
+                .max(b.peak_rel_err / self.peak_tolerance);
+            ka.total_cmp(&kb)
+        })
+    }
+}
+
+fn rel_err(analytic: f64, simulated: f64) -> f64 {
+    if simulated == 0.0 {
+        return if analytic == 0.0 { 0.0 } else { f64::INFINITY };
+    }
+    (analytic - simulated).abs() / simulated
+}
+
+/// Cross-validate the analytic composition against full simulation on
+/// `n_sites` deterministically sampled sites (evenly spaced across the
+/// region), at the plan's added levels.
+///
+/// The full-simulation horizon is snapped to whole days so the phase
+/// rotation the analytic path relies on is exact on the arrival
+/// pattern (see the module docs); the comparison is cluster-side
+/// (before UPS losses — relative errors are invariant to that constant
+/// scale). Validation seeds are domain-separated from archetype seeds,
+/// so the two paths share no randomness: the reported error includes
+/// both approximation and Monte-Carlo noise, which is the honest bound
+/// a planner consumer cares about.
+pub fn validate_region(
+    region: &RegionSpec,
+    plan: &RegionPlan,
+    pc: &RegionPlanConfig,
+    n_sites: usize,
+) -> RegionValidation {
+    let days = (pc.weeks * 7.0).round().max(1.0);
+    let weeks = days / 7.0;
+    let mut vcfg = pc.clone();
+    vcfg.weeks = weeks;
+    let mut cache = ArchetypeCache::new(&vcfg);
+    cache.ensure(region, &plan.added_pct);
+
+    let k = n_sites.clamp(1, region.sites.len().max(1)).min(region.sites.len());
+    let idxs: Vec<usize> = (0..k).map(|i| i * region.sites.len() / k).collect();
+
+    // Full-simulation twins: the added level applied, the site's time
+    // zone folded into every cluster's arrival clock (the simulator
+    // realizes phase physically; the analytic path rotates instead).
+    let items: Vec<(usize, SiteSpec)> = idxs
+        .iter()
+        .map(|&i| {
+            let rs = &region.sites[i];
+            let mut site = rs.site.with_added(plan.added_pct[i] as f64 / 100.0);
+            for c in &mut site.clusters {
+                c.phase_offset_s += rs.tz_offset_s;
+            }
+            (i, site)
+        })
+        .collect();
+    let outcomes = run_batch(&items, &ExecConfig::with_parallel(pc.parallel), |_, (i, site)| {
+        let rc = SiteRunConfig {
+            weeks,
+            seed: validation_seed(pc.seed, *i),
+            sample_s: pc.sample_s,
+            parallel: false, // the site batch is already fanned out
+            faults: None,
+            brake_escalation_s: None,
+        };
+        run_site(site, pc.policy, &rc)
+    });
+
+    let mut sites = Vec::with_capacity(k);
+    for (&i, outcome) in idxs.iter().zip(&outcomes) {
+        let rs = &region.sites[i];
+        let analytic = site_trace(rs, plan.added_pct[i], &cache);
+        let sim = PowerTrace::from_samples(outcome.trace.site_w.clone(), pc.sample_s);
+        sites.push(SiteValidation {
+            site: rs.site.name.clone(),
+            added_pct: plan.added_pct[i],
+            analytic_mean_w: analytic.mean_w(),
+            simulated_mean_w: sim.mean_w(),
+            analytic_peak_w: analytic.peak_w(),
+            simulated_peak_w: sim.peak_w(),
+            mean_rel_err: rel_err(analytic.mean_w(), sim.mean_w()),
+            peak_rel_err: rel_err(analytic.peak_w(), sim.peak_w()),
+        });
+    }
+    let worst_mean_rel_err = sites.iter().map(|s| s.mean_rel_err).fold(0.0, f64::max);
+    let worst_peak_rel_err = sites.iter().map(|s| s.peak_rel_err).fold(0.0, f64::max);
+    RegionValidation {
+        sites,
+        worst_mean_rel_err,
+        worst_peak_rel_err,
+        mean_tolerance: MEAN_TOLERANCE,
+        peak_tolerance: PEAK_TOLERANCE,
+        weeks,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// A tiny homogeneous two-site region whose archetypes are
+    /// injected synthetically, so the full planner logic runs with
+    /// zero simulations: a flat normalized draw of `0.5 + 0.01·level`.
+    fn synthetic_region() -> (RegionSpec, RegionPlanConfig, ArchetypeCache) {
+        let mut region = RegionSpec::demo(2, 1, 1.0);
+        let sk = sku::find("dgx-a100").unwrap();
+        for (s, rs) in region.sites.iter_mut().enumerate() {
+            rs.tz_offset_s = 0.0;
+            let c = ClusterSpec::new(&format!("s{s}c0"), sk, 12);
+            let b = c.budget_w();
+            rs.site.feeds =
+                vec![Feed { name: "feed0".to_string(), clusters: vec![0], capacity_w: b }];
+            rs.site.substation_budget_w = b / 0.94;
+            rs.site.clusters = vec![c];
+        }
+        let pc = RegionPlanConfig { step_pct: 10, max_added_pct: 50, ..Default::default() };
+        let mut cache = ArchetypeCache::new(&pc);
+        for level in (0..=50).step_by(10) {
+            let v = 0.5 + 0.01 * level as f64;
+            for rs in &region.sites {
+                cache.insert(
+                    &rs.site.clusters[0],
+                    level,
+                    PowerTrace::from_samples(vec![v; 8], pc.sample_s),
+                );
+            }
+        }
+        (region, pc, cache)
+    }
+
+    /// Grid budget that admits a uniform 20% plus exactly one greedy
+    /// 30% bump: the per-site substation draw at level L is
+    /// `(0.5 + 0.01L)·b`, so pick the midpoint of (v20+v30)·b and
+    /// (v30+v30)·b.
+    fn one_bump_budget(region: &RegionSpec) -> f64 {
+        let b = region.sites[0].site.clusters[0].budget_w() / 0.94;
+        ((0.70 + 0.80) + (0.80 + 0.80)) / 2.0 * b
+    }
+
+    #[test]
+    fn planner_logic_runs_simulation_free_on_injected_archetypes() {
+        let (mut region, pc, mut cache) = synthetic_region();
+        region.grid_budget_w = one_bump_budget(&region);
+        let plan = plan_region_with_cache(&region, &pc, &mut cache);
+        assert!(plan.feasible);
+        assert_eq!(plan.uniform_added_pct, 20);
+        assert_eq!(plan.added_pct, vec![30, 20], "greedy bumps the first site once");
+        assert_eq!(plan.archetype_sims, 0, "all archetypes were injected");
+        assert!(plan.candidate_evals > 0);
+        assert_eq!(plan.baseline_servers, 24);
+        // deployed: round(12·1.3) + round(12·1.2)
+        assert_eq!(plan.deployed_servers, 16 + 14);
+        assert!(plan.grid_peak_w <= region.grid_budget_w);
+        assert!(plan.headroom_pct() > 0.0);
+    }
+
+    #[test]
+    fn infeasible_at_zero_is_reported_not_planned() {
+        let (mut region, pc, mut cache) = synthetic_region();
+        region.grid_budget_w = 1.0; // no region fits a 1 W interconnect
+        let plan = plan_region_with_cache(&region, &pc, &mut cache);
+        assert!(!plan.feasible);
+        assert_eq!(plan.added_pct, vec![0, 0]);
+        assert_eq!(plan.deployed_servers, plan.baseline_servers);
+    }
+
+    #[test]
+    fn weights_tighten_the_plan() {
+        let (mut region, pc, mut cache) = synthetic_region();
+        region.grid_budget_w = one_bump_budget(&region);
+        let unweighted = plan_region_with_cache(&region, &pc, &mut cache).deployed_servers;
+        // A 1.5× price spike makes the same budget bind 1.5× tighter.
+        region.price_weights = Some(vec![1.5]);
+        let weighted = plan_region_with_cache(&region, &pc, &mut cache).deployed_servers;
+        assert!(weighted < unweighted, "{weighted} !< {unweighted}");
+    }
+
+    #[test]
+    fn seeds_are_deterministic_and_domain_separated() {
+        let key = ("dgx-a100".to_string(), 12usize, 20u32, 0u32);
+        assert_eq!(archetype_seed(1, &key), archetype_seed(1, &key));
+        assert_ne!(archetype_seed(1, &key), archetype_seed(2, &key));
+        let other = ("hgx-h100".to_string(), 12usize, 20u32, 0u32);
+        assert_ne!(archetype_seed(1, &key), archetype_seed(1, &other));
+        assert_eq!(validation_seed(1, 3), validation_seed(1, 3));
+        assert_ne!(validation_seed(1, 3), validation_seed(1, 4));
+        assert_ne!(validation_seed(1, 3), archetype_seed(1, &key));
+    }
+
+    #[test]
+    fn demo_region_is_well_formed() {
+        let region = RegionSpec::demo(7, 3, 0.85);
+        assert_eq!(region.sites.len(), 7);
+        assert!(region.sites.iter().all(|r| r.site.clusters.len() == 3));
+        assert!(region.sites.iter().all(|r| r.tz_offset_s < 86_400.0));
+        assert!(region.grid_budget_w > 0.0);
+        let sum: f64 = region.sites.iter().map(|r| r.site.substation_budget_w).sum();
+        assert!((region.grid_budget_w / sum - 0.85).abs() < 1e-9);
+        assert_eq!(region.baseline_servers(), 7 * 3 * 12);
+        // weights combine multiplicatively under resampling
+        let mut r2 = region.clone();
+        r2.price_weights = Some(vec![1.0, 2.0]);
+        r2.carbon_weights = Some(vec![3.0]);
+        assert_eq!(r2.effective_weights().unwrap(), vec![3.0, 6.0]);
+    }
+}

@@ -26,6 +26,7 @@ use crate::policy::engine::PolicyKind;
 use crate::simulation::{power_scale_for_row, SimConfig};
 
 use super::sku::{self, SkuSpec};
+use super::trace::PowerTrace;
 
 /// One cluster (a paper "row"): a breaker-budgeted pool of one SKU.
 #[derive(Debug, Clone)]
@@ -287,29 +288,28 @@ pub fn compose(
 ) -> SiteTrace {
     assert_eq!(series.len(), budgets_w.len());
     assert_eq!(series.len(), offsets_s.len());
+    // Derived from the trace algebra: truncate → rotate → budget-scale
+    // → left-fold sum. Each operator reproduces the original float
+    // order exactly (one multiply per sample, `+=` into a zeroed
+    // accumulator in cluster order), so this stays bit-identical to the
+    // pre-algebra implementation — the invariant the pinned tests below
+    // and `tests/integration_fleet.rs` enforce.
     let n = series.iter().map(|s| s.len()).min().unwrap_or(0);
-    let mut cluster_w = Vec::with_capacity(series.len());
-    for (i, s) in series.iter().enumerate() {
-        let shift = if n == 0 {
-            0
-        } else {
-            ((offsets_s[i] / period_s).round() as i64).rem_euclid(n as i64) as usize
-        };
-        let mut w = vec![0.0; n];
-        for (j, slot) in w.iter_mut().enumerate() {
-            // Cluster-local sample `src` lands at site time `j = src + shift`.
-            let src = (j + n - shift) % n;
-            *slot = s[src].1 * budgets_w[i];
-        }
-        cluster_w.push(w);
+    let clusters: Vec<PowerTrace> = series
+        .iter()
+        .enumerate()
+        .map(|(i, s)| {
+            PowerTrace::from_series(&s[..n], period_s)
+                .shift_phase(offsets_s[i])
+                .scale(budgets_w[i])
+        })
+        .collect();
+    let site = PowerTrace::sum(period_s, &clusters);
+    SiteTrace {
+        period_s,
+        cluster_w: clusters.into_iter().map(|t| t.samples).collect(),
+        site_w: site.samples,
     }
-    let mut site_w = vec![0.0; n];
-    for w in &cluster_w {
-        for (j, x) in w.iter().enumerate() {
-            site_w[j] += x;
-        }
-    }
-    SiteTrace { period_s, cluster_w, site_w }
 }
 
 #[cfg(test)]

@@ -1,0 +1,325 @@
+//! First-class power traces with closed-form composition operators.
+//!
+//! A [`PowerTrace`] is a fixed-period sampled power signal (watts, or
+//! normalized watts-per-budget-watt) plus the summary statistics the
+//! planner reasons about: mean, peak, variance, and inter-trace
+//! covariance / phase-offset structure. The point of making traces
+//! values is that a site's — and then a region's — aggregate trace can
+//! be *computed* from per-cluster summaries instead of re-simulated:
+//! [`PowerTrace::sum`], [`PowerTrace::scale`],
+//! [`PowerTrace::shift_phase`] and [`PowerTrace::mix`] are closed-form,
+//! so evaluating a candidate allocation is O(samples), not O(events).
+//!
+//! # Float contract (bit-identity with [`crate::fleet::site::compose`])
+//!
+//! `compose` predates this module and its output is pinned by tests at
+//! full bit precision, so the operators here reproduce its exact float
+//! order:
+//!
+//! * `shift_phase` rotates by whole samples via
+//!   `((offset_s / period_s).round() as i64).rem_euclid(n)` — no
+//!   arithmetic on the sample values at all;
+//! * `scale` performs exactly one multiply per sample;
+//! * `sum` left-folds `+=` into a zero-initialized accumulator in
+//!   argument order (IEEE addition is commutative pairwise and
+//!   `0.0 + x == x`, so prefix regrouping is bit-exact; general
+//!   reassociation is not, which is why the order is part of the
+//!   contract).
+//!
+//! These guarantees are what the trace-algebra property tests in
+//! `tests/integration_region.rs` pin: `sum` commutative/associative
+//! (bit-exact on summaries), `peak(sum) ≤ sum(peaks)` always (with
+//! equality at zero phase offsets), and linearity of means under
+//! `scale`/`mix` (to float rounding).
+
+/// Summary statistics of one trace — the closed-form "shape" of a
+/// cluster's power draw that region planning composes without
+/// re-simulating.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TraceSummary {
+    /// Number of samples.
+    pub len: usize,
+    /// Sampling period, seconds.
+    pub period_s: f64,
+    /// Mean draw over the trace.
+    pub mean_w: f64,
+    /// Peak draw over the trace.
+    pub peak_w: f64,
+    /// Population variance of the draw (W²).
+    pub variance_w2: f64,
+}
+
+/// A fixed-period sampled power trace.
+///
+/// Samples are in watts when the trace is budget-scaled, or in
+/// normalized watts-per-budget-watt when it comes straight from a
+/// cluster simulation's `power_series` (see
+/// [`crate::metrics::RunReport`]).
+#[derive(Debug, Clone, PartialEq)]
+pub struct PowerTrace {
+    /// Sampling period, seconds.
+    pub period_s: f64,
+    /// The sampled signal.
+    pub samples: Vec<f64>,
+}
+
+impl PowerTrace {
+    /// A trace from raw samples at a fixed period.
+    pub fn from_samples(samples: Vec<f64>, period_s: f64) -> PowerTrace {
+        PowerTrace { period_s, samples }
+    }
+
+    /// A trace from a `(t, value)` series (the simulator's
+    /// `power_series` shape); timestamps are dropped, the fixed period
+    /// is taken on faith from the caller.
+    pub fn from_series(series: &[(f64, f64)], period_s: f64) -> PowerTrace {
+        PowerTrace { period_s, samples: series.iter().map(|&(_, v)| v).collect() }
+    }
+
+    /// Number of samples.
+    pub fn len(&self) -> usize {
+        self.samples.len()
+    }
+
+    /// Whether the trace has no samples.
+    pub fn is_empty(&self) -> bool {
+        self.samples.is_empty()
+    }
+
+    /// Total covered time, seconds.
+    pub fn duration_s(&self) -> f64 {
+        self.samples.len() as f64 * self.period_s
+    }
+
+    /// Mean draw (0.0 for an empty trace).
+    pub fn mean_w(&self) -> f64 {
+        if self.samples.is_empty() {
+            return 0.0;
+        }
+        self.samples.iter().sum::<f64>() / self.samples.len() as f64
+    }
+
+    /// Peak draw (0.0 for an empty trace; same fold as
+    /// [`crate::fleet::site::SiteTrace::peak_w`]).
+    pub fn peak_w(&self) -> f64 {
+        self.samples.iter().cloned().fold(0.0, f64::max)
+    }
+
+    /// Population variance of the draw, W² (0.0 for an empty trace).
+    pub fn variance_w2(&self) -> f64 {
+        if self.samples.is_empty() {
+            return 0.0;
+        }
+        let mean = self.mean_w();
+        self.samples.iter().map(|&x| (x - mean) * (x - mean)).sum::<f64>()
+            / self.samples.len() as f64
+    }
+
+    /// All summary statistics at once.
+    pub fn summary(&self) -> TraceSummary {
+        TraceSummary {
+            len: self.samples.len(),
+            period_s: self.period_s,
+            mean_w: self.mean_w(),
+            peak_w: self.peak_w(),
+            variance_w2: self.variance_w2(),
+        }
+    }
+
+    /// A copy truncated to the first `n` samples.
+    pub fn truncated(&self, n: usize) -> PowerTrace {
+        let n = n.min(self.samples.len());
+        PowerTrace { period_s: self.period_s, samples: self.samples[..n].to_vec() }
+    }
+
+    /// The trace scaled by `factor` — exactly one multiply per sample,
+    /// so `normalized.scale(budget_w)` is bit-identical to the watt
+    /// conversion [`crate::fleet::site::compose`] performs.
+    pub fn scale(&self, factor: f64) -> PowerTrace {
+        PowerTrace {
+            period_s: self.period_s,
+            samples: self.samples.iter().map(|&x| x * factor).collect(),
+        }
+    }
+
+    /// The trace rotated forward in time by `offset_s` (rounded to
+    /// whole samples, wrapping circularly): a feature at sample `j`
+    /// moves to sample `j + offset`. Negative offsets rotate backward —
+    /// `shift_phase(-phi)` of a zero-phase trace models a cluster whose
+    /// arrival clock runs `phi` seconds ahead (its peaks happen
+    /// *earlier*, the [`crate::fleet::site::ClusterSpec::phase_offset_s`]
+    /// convention).
+    ///
+    /// Circular wrap is only physically meaningful when the trace spans
+    /// whole diurnal periods of like days (the arrival model's weekday
+    /// pattern repeats across days 0–4; weekends differ).
+    pub fn shift_phase(&self, offset_s: f64) -> PowerTrace {
+        let n = self.samples.len();
+        if n == 0 {
+            return self.clone();
+        }
+        let shift = ((offset_s / self.period_s).round() as i64).rem_euclid(n as i64) as usize;
+        let samples =
+            (0..n).map(|j| self.samples[(j + n - shift) % n]).collect();
+        PowerTrace { period_s: self.period_s, samples }
+    }
+
+    /// Sample-wise sum of `traces`, truncated to the shortest: a
+    /// zero-initialized accumulator left-folded with `+=` in argument
+    /// order (the [`crate::fleet::site::compose`] float order — see the
+    /// module docs for why the order is part of the contract).
+    ///
+    /// `period_s` is passed explicitly so the sum of zero traces is
+    /// still a well-formed empty trace.
+    pub fn sum(period_s: f64, traces: &[PowerTrace]) -> PowerTrace {
+        let n = traces.iter().map(|t| t.samples.len()).min().unwrap_or(0);
+        let mut acc = vec![0.0; n];
+        for t in traces {
+            for (j, slot) in acc.iter_mut().enumerate() {
+                *slot += t.samples[j];
+            }
+        }
+        PowerTrace { period_s, samples: acc }
+    }
+
+    /// Weighted sum: each trace scaled by its weight, then summed in
+    /// order (`mix(p, ts, ws) == sum(p, [t.scale(w) ...])`, bit-exactly,
+    /// because that is literally how it is computed).
+    pub fn mix(period_s: f64, traces: &[PowerTrace], weights: &[f64]) -> PowerTrace {
+        assert_eq!(traces.len(), weights.len());
+        let scaled: Vec<PowerTrace> =
+            traces.iter().zip(weights).map(|(t, &w)| t.scale(w)).collect();
+        PowerTrace::sum(period_s, &scaled)
+    }
+
+    /// Population covariance with another trace over their common
+    /// prefix, W² (0.0 when the overlap is empty). Aligned traces of
+    /// like shape covary positively; phase-staggered traces covary
+    /// less — exactly the diversity a site planner sells.
+    pub fn covariance_w2(&self, other: &PowerTrace) -> f64 {
+        let n = self.samples.len().min(other.samples.len());
+        if n == 0 {
+            return 0.0;
+        }
+        let ma = self.samples[..n].iter().sum::<f64>() / n as f64;
+        let mb = other.samples[..n].iter().sum::<f64>() / n as f64;
+        self.samples[..n]
+            .iter()
+            .zip(&other.samples[..n])
+            .map(|(&a, &b)| (a - ma) * (b - mb))
+            .sum::<f64>()
+            / n as f64
+    }
+
+    /// The forward rotation of `other` (in whole samples) that
+    /// maximizes its cross-correlation with `self` — the empirical
+    /// phase offset between two cluster traces. O(n²); a diagnostic,
+    /// not a planner hot path. Ties break toward the smallest shift;
+    /// 0 for empty overlap.
+    pub fn phase_lag_samples(&self, other: &PowerTrace) -> usize {
+        let n = self.samples.len().min(other.samples.len());
+        if n == 0 {
+            return 0;
+        }
+        let mut best = (0usize, f64::NEG_INFINITY);
+        for shift in 0..n {
+            let score: f64 = (0..n)
+                .map(|j| self.samples[j] * other.samples[(j + n - shift) % n])
+                .sum();
+            if score > best.1 {
+                best = (shift, score);
+            }
+        }
+        best.0
+    }
+
+    /// Peak of the trace under a per-sample weight profile (e.g.
+    /// time-varying grid price or carbon intensity), `max_j w_j · x_j`.
+    /// The weight vector is resampled to the trace length by index
+    /// scaling, so callers can supply e.g. 24 hourly weights against a
+    /// 288-sample day.
+    pub fn weighted_peak_w(&self, weights: &[f64]) -> f64 {
+        let n = self.samples.len();
+        if weights.is_empty() {
+            return self.peak_w();
+        }
+        let mut peak = 0.0f64;
+        for (j, &x) in self.samples.iter().enumerate() {
+            let w = weights[(j * weights.len()) / n];
+            peak = peak.max(w * x);
+        }
+        peak
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tr(vals: &[f64]) -> PowerTrace {
+        PowerTrace::from_samples(vals.to_vec(), 60.0)
+    }
+
+    #[test]
+    fn summaries_match_hand_computation() {
+        let t = tr(&[1.0, 3.0, 2.0, 2.0]);
+        let s = t.summary();
+        assert_eq!(s.len, 4);
+        assert_eq!(s.mean_w, 2.0);
+        assert_eq!(s.peak_w, 3.0);
+        assert!((s.variance_w2 - 0.5).abs() < 1e-12);
+        assert_eq!(t.duration_s(), 240.0);
+        assert_eq!(tr(&[]).summary().mean_w, 0.0);
+        assert_eq!(tr(&[]).variance_w2(), 0.0);
+    }
+
+    #[test]
+    fn shift_rotates_forward_and_wraps() {
+        let t = tr(&[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(t.shift_phase(60.0).samples, vec![4.0, 1.0, 2.0, 3.0]);
+        // negative offset rotates backward (peaks earlier)
+        assert_eq!(t.shift_phase(-60.0).samples, vec![2.0, 3.0, 4.0, 1.0]);
+        // offsets wrap modulo the trace duration
+        assert_eq!(t.shift_phase(5.0 * 60.0).samples, t.shift_phase(60.0).samples);
+        assert!(tr(&[]).shift_phase(60.0).is_empty());
+    }
+
+    #[test]
+    fn sum_and_mix_agree_with_manual_fold() {
+        let a = tr(&[1.0, 2.0]);
+        let b = tr(&[10.0, 20.0, 30.0]);
+        let s = PowerTrace::sum(60.0, &[a.clone(), b.clone()]);
+        assert_eq!(s.samples, vec![11.0, 22.0]); // truncated to shortest
+        let m = PowerTrace::mix(60.0, &[a.clone(), b.clone()], &[2.0, 0.5]);
+        assert_eq!(m.samples, vec![1.0 * 2.0 + 10.0 * 0.5, 2.0 * 2.0 + 20.0 * 0.5]);
+        assert!(PowerTrace::sum(60.0, &[]).is_empty());
+    }
+
+    #[test]
+    fn covariance_sees_alignment() {
+        let a = tr(&[0.0, 1.0, 0.0, 1.0]);
+        let aligned = a.covariance_w2(&a);
+        let opposed = a.covariance_w2(&a.shift_phase(60.0));
+        assert!(aligned > 0.0);
+        assert!(opposed < 0.0);
+        assert_eq!(tr(&[]).covariance_w2(&a), 0.0);
+    }
+
+    #[test]
+    fn phase_lag_recovers_a_known_shift() {
+        let base = tr(&[0.1, 0.2, 1.0, 0.3, 0.1, 0.1]);
+        let shifted = base.shift_phase(2.0 * 60.0);
+        assert_eq!(shifted.phase_lag_samples(&base), 2);
+        assert_eq!(base.phase_lag_samples(&base), 0);
+    }
+
+    #[test]
+    fn weighted_peak_resamples_the_weight_profile() {
+        let t = tr(&[1.0, 1.0, 4.0, 1.0]);
+        assert_eq!(t.weighted_peak_w(&[]), 4.0);
+        // 2 weights over 4 samples: first half ×1, second half ×0.5
+        assert_eq!(t.weighted_peak_w(&[1.0, 0.5]), 2.0);
+        // pricier second half can move the binding sample
+        assert_eq!(t.weighted_peak_w(&[1.0, 3.0]), 12.0);
+    }
+}

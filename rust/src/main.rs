@@ -29,6 +29,14 @@
 //!   calibrate [--weeks W] [--seed N]  Fit power_scale to the Table-2 peak.
 //!   serve [--artifacts DIR] [--requests N] [--oversub F]
 //!       Mini end-to-end serving run (real PJRT model, POLCA in loop).
+//!   fleet region [plan|trace|validate] [--sites N] [--clusters N]
+//!       [--grid-frac F] [--policy P] [--max-added PCT] [--step PCT]
+//!       [--validate-sites N] [--quick] [--serial] [--out-dir DIR]
+//!       Region-scale planning via compositional trace algebra: the
+//!       archetype cache simulates each distinct (SKU, level) pair
+//!       once, so cost is independent of site count; `validate`
+//!       cross-checks analytic vs full simulation and exits nonzero
+//!       out of tolerance (the CI gate).
 //!
 //! Deprecated aliases (each builds a `Scenario` internally; prefer
 //! `polca run`): simulate, mixed [run|sweep], faults
@@ -58,6 +66,12 @@ fn main() {
             "calibrating power_scale for {baseline_servers}-server rows \
              (one-time simulation of one day; cached afterwards) ..."
         ),
+        polca::obs::DiagEvent::RegionPlanned { sites, archetype_sims, candidate_evals } => {
+            eprintln!(
+                "planned {sites} sites from {archetype_sims} archetype simulations \
+                 + {candidate_evals} closed-form candidate evaluations"
+            )
+        }
     }));
     let args = Args::from_env();
     let result = match args.subcommand.as_deref() {
@@ -100,7 +114,9 @@ fn print_help() {
                 polca run examples/scenarios/custom-fault-timeline.toml\n       \
                 polca scenario save mixed-row --out my-row.toml\n       \
                 polca figure fig13 --out-dir out\n       \
-                polca serve --requests 16\n\n\
+                polca serve --requests 16\n       \
+                polca fleet region plan --sites 50\n       \
+                polca fleet region validate --quick\n\n\
          deprecated aliases (each builds a scenario internally):\n       \
                 polca simulate --policy polca --added 0.30 --weeks 1\n       \
                 polca mixed [run|sweep]\n       \
@@ -666,6 +682,11 @@ fn cmd_fleet(args: &Args) -> anyhow::Result<()> {
     use polca::util::table::{f, pct, Table};
 
     let mode = args.positionals.first().map(|s| s.as_str()).unwrap_or("plan");
+    // `fleet region` is the first-class region surface, not a site
+    // alias — dispatch before building the legacy site scenario.
+    if mode == "region" {
+        return cmd_fleet_region(args);
+    }
     // The alias's base scenario: the demo site at the planner defaults.
     let mut sc = Scenario::builder("fleet")
         .description("legacy `polca fleet` alias")
@@ -723,7 +744,9 @@ fn cmd_fleet(args: &Args) -> anyhow::Result<()> {
                     s.policy_kind = p;
                     match s.run()?.outcome {
                         Outcome::Site(site) => Ok(site.plan),
-                        Outcome::Row(_) => unreachable!("site scenario plans a site"),
+                        Outcome::Row(_) | Outcome::Region(_) => {
+                            unreachable!("site scenario plans a site")
+                        }
                     }
                 })
                 .collect::<anyhow::Result<Vec<_>>>()?;
@@ -816,7 +839,167 @@ fn cmd_fleet(args: &Args) -> anyhow::Result<()> {
                 path.display()
             );
         }
-        other => anyhow::bail!("unknown fleet mode '{other}' (plan|sweep|trace)"),
+        other => anyhow::bail!("unknown fleet mode '{other}' (plan|sweep|trace|region)"),
+    }
+    Ok(())
+}
+
+/// `polca fleet region [plan|trace|validate]` — region-scale planning
+/// over the compositional trace algebra (`polca::fleet::region`): the
+/// archetype cache simulates each distinct (SKU, level) pair once, so
+/// planning cost is independent of the number of sites. `validate`
+/// cross-checks the analytic composition against full simulation on
+/// sampled sites and exits nonzero when the tolerances are exceeded
+/// (the CI gate).
+fn cmd_fleet_region(args: &Args) -> anyhow::Result<()> {
+    use polca::fleet::region::{
+        plan_region_with_cache, region_trace, validate_region, ArchetypeCache, RegionPlanConfig,
+        RegionSpec,
+    };
+    use polca::util::csv::Csv;
+    use polca::util::table::{f, pct, Table};
+
+    let sub = args.positionals.get(1).map(|s| s.as_str()).unwrap_or("plan");
+    let quick = args.flag("quick");
+    let sites = args.get_usize("sites", if quick { 4 } else { 8 });
+    let clusters = args.get_usize("clusters", if quick { 2 } else { 3 });
+    let grid_frac = args.get_f64("grid-frac", 0.85);
+    let region = RegionSpec::demo(sites, clusters, grid_frac);
+
+    let mut pc = RegionPlanConfig::default();
+    if quick {
+        pc.max_added_pct = 30;
+        pc.step_pct = 10;
+    }
+    if let Some(p) = args.get("policy") {
+        pc.policy = polca::util::cli::parse_policy(p)?;
+    }
+    args.set_f64("weeks", &mut pc.weeks);
+    args.set_u64("seed", &mut pc.seed);
+    args.set_f64("sample-s", &mut pc.sample_s);
+    args.set_u32("max-added", &mut pc.max_added_pct);
+    args.set_u32("step", &mut pc.step_pct);
+    pc.parallel = !args.flag("serial");
+
+    eprintln!(
+        "region '{}': {} sites x {} clusters / {} baseline servers / \
+         grid budget {:.2} MW ({})",
+        region.name,
+        region.sites.len(),
+        clusters,
+        region.baseline_servers(),
+        region.grid_budget_w / 1e6,
+        if pc.parallel { "parallel" } else { "serial" }
+    );
+
+    let mut cache = ArchetypeCache::new(&pc);
+    let plan = plan_region_with_cache(&region, &pc, &mut cache);
+
+    match sub {
+        "plan" => {
+            let mut t = Table::new(
+                "Region capacity plan",
+                &["site", "tz", "added", "peak kW", "budget kW", "util"],
+            );
+            for (i, name) in plan.site_names.iter().enumerate() {
+                t.row(vec![
+                    name.clone(),
+                    format!("{:+.0}h", region.sites[i].tz_offset_s / 3600.0),
+                    pct(plan.added_pct[i] as f64 / 100.0, 0),
+                    f(plan.site_peak_w[i] / 1e3, 0),
+                    f(plan.site_budget_w[i] / 1e3, 0),
+                    pct(plan.site_peak_w[i] / plan.site_budget_w[i], 1),
+                ]);
+            }
+            println!("{}", t.render());
+            println!(
+                "{} deployable servers of {} baseline (+{:.1}%); grid peak {:.2} MW / \
+                 budget {:.2} MW; uniform +{}%; {} archetype sims for {} closed-form evals{}",
+                plan.deployed_servers,
+                plan.baseline_servers,
+                plan.headroom_pct(),
+                plan.grid_peak_w / 1e6,
+                plan.grid_budget_w / 1e6,
+                plan.uniform_added_pct,
+                plan.archetype_sims,
+                plan.candidate_evals,
+                if plan.feasible { "" } else { " — INFEASIBLE at zero added servers" }
+            );
+        }
+        "trace" => {
+            let rt = region_trace(&region, &plan.added_pct, &mut cache);
+            let mut header: Vec<String> =
+                vec!["t_s".into(), "region_w".into(), "region_norm".into()];
+            for name in &plan.site_names {
+                header.push(format!("{name}_w"));
+            }
+            let refs: Vec<&str> = header.iter().map(|s| s.as_str()).collect();
+            let mut csv = Csv::new(&refs);
+            for (j, &w) in rt.region_w.samples.iter().enumerate() {
+                let mut row =
+                    vec![f(j as f64 * rt.period_s, 0), f(w, 1), f(w / region.grid_budget_w, 4)];
+                for site in &rt.site_w {
+                    row.push(f(site.samples[j], 1));
+                }
+                csv.row_strs(&row);
+            }
+            let out_dir = PathBuf::from(args.get_or("out-dir", "out"));
+            std::fs::create_dir_all(&out_dir)?;
+            let path = out_dir.join(format!("region_trace_{}site.csv", region.sites.len()));
+            csv.write_to(&path)?;
+            println!(
+                "region peak {:.2} MW / budget {:.2} MW at the plan's levels, \
+                 {} samples -> {}",
+                rt.region_w.peak_w() / 1e6,
+                region.grid_budget_w / 1e6,
+                rt.region_w.len(),
+                path.display()
+            );
+        }
+        "validate" => {
+            let n = args.get_usize("validate-sites", if quick { 2 } else { 3 });
+            eprintln!("cross-validating {} sampled sites against full simulation ...", n);
+            let v = validate_region(&region, &plan, &pc, n);
+            let mut t = Table::new(
+                "Analytic composition vs full simulation",
+                &["site", "added", "mean err", "peak err"],
+            );
+            for s in &v.sites {
+                t.row(vec![
+                    s.site.clone(),
+                    pct(s.added_pct as f64 / 100.0, 0),
+                    pct(s.mean_rel_err, 2),
+                    pct(s.peak_rel_err, 2),
+                ]);
+            }
+            println!("{}", t.render());
+            println!(
+                "worst mean err {:.2}% (tolerance {:.0}%), worst peak err {:.2}% \
+                 (tolerance {:.0}%) over {:.2} simulated weeks",
+                v.worst_mean_rel_err * 100.0,
+                v.mean_tolerance * 100.0,
+                v.worst_peak_rel_err * 100.0,
+                v.peak_tolerance * 100.0,
+                v.weeks
+            );
+            if !v.passed() {
+                if let Some(w) = v.worst_site() {
+                    eprintln!(
+                        "worst offender: site '{}' at +{}% — analytic mean {:.1} kW vs \
+                         simulated {:.1} kW, analytic peak {:.1} kW vs simulated {:.1} kW",
+                        w.site,
+                        w.added_pct,
+                        w.analytic_mean_w / 1e3,
+                        w.simulated_mean_w / 1e3,
+                        w.analytic_peak_w / 1e3,
+                        w.simulated_peak_w / 1e3
+                    );
+                }
+                anyhow::bail!("analytic composition is out of tolerance");
+            }
+            println!("ok: analytic composition within tolerance on every sampled site");
+        }
+        other => anyhow::bail!("unknown fleet region mode '{other}' (plan|trace|validate)"),
     }
     Ok(())
 }

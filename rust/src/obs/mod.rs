@@ -250,6 +250,18 @@ pub enum DiagEvent {
         /// Row size (server count) being fitted.
         baseline_servers: usize,
     },
+    /// A region plan finished: `sites` sites were allocated using only
+    /// `archetype_sims` discrete-event simulations and
+    /// `candidate_evals` closed-form trace evaluations (the count pair
+    /// that demonstrates planning cost is independent of region size).
+    RegionPlanned {
+        /// Sites in the planned region.
+        sites: usize,
+        /// Simulations run to fill the archetype cache.
+        archetype_sims: usize,
+        /// Closed-form candidate evaluations performed.
+        candidate_evals: usize,
+    },
 }
 
 static DIAG: OnceLock<Box<dyn Fn(&DiagEvent) + Send + Sync>> = OnceLock::new();

@@ -183,11 +183,51 @@ impl ScenarioBuilder {
         self
     }
 
-    /// Run site clusters serially (reference path; default is parallel).
+    /// Make this a region scenario over the demo topology of `sites`
+    /// sites (dispatches to the fleet region planner).
+    pub fn region(mut self, sites: usize) -> Self {
+        let mut r = self.sc.region.take().unwrap_or_default();
+        r.sites = sites;
+        self.sc.region = Some(r);
+        self
+    }
+
+    /// Set the clusters-per-site shape of the demo region.
+    pub fn region_clusters(mut self, clusters_per_site: usize) -> Self {
+        let mut r = self.sc.region.take().unwrap_or_default();
+        r.clusters_per_site = clusters_per_site;
+        self.sc.region = Some(r);
+        self
+    }
+
+    /// Set the shared grid budget as a fraction of the substation sum.
+    pub fn region_grid(mut self, budget_frac: f64) -> Self {
+        let mut r = self.sc.region.take().unwrap_or_default();
+        r.grid_budget_frac = budget_frac;
+        self.sc.region = Some(r);
+        self
+    }
+
+    /// Set the region planner's search ceiling and resolution (percent).
+    pub fn region_search(mut self, max_added_pct: u32, step_pct: u32) -> Self {
+        let mut r = self.sc.region.take().unwrap_or_default();
+        r.max_added_pct = max_added_pct;
+        r.step_pct = step_pct;
+        self.sc.region = Some(r);
+        self
+    }
+
+    /// Run serially (reference path; default is parallel). Targets the
+    /// region section when one exists, the site section otherwise — so
+    /// call it after [`Self::region`] in region scenarios.
     pub fn serial(mut self) -> Self {
-        let mut s = self.sc.site.take().unwrap_or_default();
-        s.parallel = false;
-        self.sc.site = Some(s);
+        if let Some(r) = self.sc.region.as_mut() {
+            r.parallel = false;
+        } else {
+            let mut s = self.sc.site.take().unwrap_or_default();
+            s.parallel = false;
+            self.sc.site = Some(s);
+        }
         self
     }
 
@@ -257,5 +297,22 @@ mod tests {
             parallel: false,
             ..Default::default()
         });
+    }
+
+    #[test]
+    fn region_setters_compose_and_serial_targets_the_region() {
+        let sc = Scenario::builder("r")
+            .region(10)
+            .region_clusters(2)
+            .region_grid(0.8)
+            .region_search(40, 10)
+            .serial()
+            .build();
+        assert!(sc.site.is_none(), "region setters must not create a site section");
+        let r = sc.region.unwrap();
+        assert_eq!((r.sites, r.clusters_per_site), (10, 2));
+        assert_eq!(r.grid_budget_frac, 0.8);
+        assert_eq!((r.max_added_pct, r.step_pct), (40, 10));
+        assert!(!r.parallel);
     }
 }

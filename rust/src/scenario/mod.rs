@@ -19,7 +19,11 @@
 //! * **fault plan** — a named scenario resolved against the horizon or
 //!   an explicit [`FaultPlan`] timeline ([`crate::faults`]);
 //! * **site topology** — optional [`SiteSection`]: when present the
-//!   scenario runs through the fleet planner instead of a single row.
+//!   scenario runs through the fleet planner instead of a single row;
+//! * **region topology** — optional [`RegionSection`]: when present the
+//!   scenario runs the analytic region planner
+//!   ([`crate::fleet::region`]) over a demo multi-site region under a
+//!   shared grid budget.
 //!
 //! The spec is fully declarative and [`PartialEq`]: it builds fluently
 //! ([`ScenarioBuilder`]), round-trips losslessly through the in-tree
@@ -46,6 +50,7 @@ use crate::faults::{ContainmentSlo, FaultPlan};
 use crate::fleet::planner::{
     plan_site, plan_site_under_faults, FaultedSitePlan, PlannerConfig, PolicyPlan,
 };
+use crate::fleet::region::{plan_region, RegionPlan, RegionPlanConfig, RegionSpec};
 use crate::fleet::site::SiteSpec;
 use crate::metrics::{ImpactSummary, ResilienceMetrics, RunReport};
 use crate::obs::export::{render_timeline, IncidentTimeline};
@@ -116,6 +121,47 @@ impl Default for SiteSection {
     }
 }
 
+/// The optional region part of a scenario: when present,
+/// [`Scenario::run`] dispatches to the analytic region planner
+/// ([`crate::fleet::region::plan_region`]) over a
+/// [`RegionSpec::demo`] topology instead of one row or site.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RegionSection {
+    /// Demo-region site count (time zones staggered 3 h apart).
+    pub sites: usize,
+    /// Clusters per demo site (SKUs cycle through the registry).
+    pub clusters_per_site: usize,
+    /// Shared grid budget as a fraction of the summed substation
+    /// budgets.
+    pub grid_budget_frac: f64,
+    /// Planner search ceiling for the added level, percent.
+    pub max_added_pct: u32,
+    /// Planner granularity, percentage points.
+    pub step_pct: u32,
+    /// Fan archetype/validation batches out on scoped threads.
+    pub parallel: bool,
+    /// Trace sampling period, seconds.
+    pub sample_s: f64,
+    /// Sites to spot-validate against full simulation (the
+    /// `polca fleet region validate` surface; planning ignores it).
+    pub validate_sites: usize,
+}
+
+impl Default for RegionSection {
+    fn default() -> Self {
+        RegionSection {
+            sites: 8,
+            clusters_per_site: 3,
+            grid_budget_frac: 0.85,
+            max_added_pct: 50,
+            step_pct: 5,
+            parallel: true,
+            sample_s: 300.0,
+            validate_sites: 3,
+        }
+    }
+}
+
 /// One declarative run specification (see the module docs). Build with
 /// [`Scenario::builder`], load with [`Scenario::load`], execute with
 /// [`Scenario::run`].
@@ -158,6 +204,9 @@ pub struct Scenario {
     pub brake_escalation_s: Option<f64>,
     /// Site topology; `None` = a single row.
     pub site: Option<SiteSection>,
+    /// Region topology; `None` = a single row or site. Mutually
+    /// exclusive with `site`.
+    pub region: Option<RegionSection>,
 }
 
 impl Default for Scenario {
@@ -179,6 +228,7 @@ impl Default for Scenario {
             faults: FaultSpec::None,
             brake_escalation_s: None,
             site: None,
+            region: None,
         }
     }
 }
@@ -292,6 +342,35 @@ impl Scenario {
         })
     }
 
+    /// The region topology this scenario denotes (`None` for row and
+    /// site scenarios): the demo multi-site region at the scenario's
+    /// training fraction.
+    pub fn region_spec(&self) -> Option<RegionSpec> {
+        self.region.as_ref().map(|r| {
+            let mut spec = RegionSpec::demo(r.sites, r.clusters_per_site, r.grid_budget_frac);
+            if self.training.fraction > 0.0 {
+                for rs in &mut spec.sites {
+                    rs.site = rs.site.with_training(self.training.fraction);
+                }
+            }
+            spec
+        })
+    }
+
+    /// The region-planner configuration (`None` for row and site
+    /// scenarios).
+    pub fn region_plan_config(&self) -> Option<RegionPlanConfig> {
+        self.region.as_ref().map(|r| RegionPlanConfig {
+            policy: self.policy_kind,
+            weeks: self.weeks,
+            seed: self.exp.seed,
+            sample_s: r.sample_s,
+            parallel: r.parallel,
+            max_added_pct: r.max_added_pct,
+            step_pct: r.step_pct,
+        })
+    }
+
     /// A shortened copy for smoke runs, mirroring
     /// [`crate::experiments::Depth::Quick`]'s horizon scaling — but
     /// never *longer* than the spec's own horizon (a scenario already
@@ -368,6 +447,40 @@ impl Scenario {
                 );
             }
         }
+        if let Some(region) = &self.region {
+            if region.sites == 0 {
+                problems.push("region.sites must be > 0".into());
+            }
+            if region.clusters_per_site == 0 {
+                problems.push("region.clusters_per_site must be > 0".into());
+            }
+            if region.step_pct == 0 {
+                problems.push("region.step_pct must be > 0".into());
+            }
+            if region.grid_budget_frac.is_nan() || region.grid_budget_frac <= 0.0 {
+                problems.push(format!(
+                    "region.grid_budget_frac must be > 0 (got {})",
+                    region.grid_budget_frac
+                ));
+            }
+            if self.site.is_some() {
+                problems.push("a scenario plans either a site or a region, not both".into());
+            }
+            if self.sku.is_some() {
+                problems.push(
+                    "sku cannot be combined with a region (the demo topology \
+                     cycles through the SKU registry itself)"
+                        .into(),
+                );
+            }
+            if !matches!(self.faults, FaultSpec::None) {
+                problems.push(
+                    "fault injection is not supported for region planning \
+                     (derate individual sites via a [site] scenario instead)"
+                        .into(),
+                );
+            }
+        }
         if problems.is_empty() {
             Ok(())
         } else {
@@ -387,6 +500,20 @@ impl Scenario {
         } else {
             String::new()
         };
+        if let Some(r) = &self.region {
+            return format!(
+                "scenario '{}': plan a {}-site region ({} clusters/site, grid budget \
+                 {:.0}% of substation sum) under {} for {:.2} weeks{} (seed {})",
+                self.name,
+                r.sites,
+                r.clusters_per_site,
+                r.grid_budget_frac * 100.0,
+                self.policy_kind.name(),
+                self.weeks,
+                training,
+                self.exp.seed
+            );
+        }
         match &self.site {
             Some(s) => format!(
                 "scenario '{}': plan a {}-cluster site under {} for {:.2} weeks{}{} (seed {})",
@@ -420,6 +547,16 @@ impl Scenario {
     /// (fault-derated when a fault spec is present).
     pub fn run(&self) -> anyhow::Result<ScenarioReport> {
         self.validate()?;
+        if self.region.is_some() {
+            let spec = self.region_spec().unwrap();
+            let pc = self.region_plan_config().unwrap();
+            let plan = plan_region(&spec, &pc);
+            return Ok(ScenarioReport {
+                name: self.name.clone(),
+                outcome: Outcome::Region(Box::new(plan)),
+                timeline: None,
+            });
+        }
         if self.site.is_some() {
             let spec = self.site_spec().unwrap();
             let pc = self.planner_config().unwrap();
@@ -460,11 +597,13 @@ impl Scenario {
     /// assume are retrievable from an arbitrary `O`).
     pub fn run_observed<O: Observer>(&self, obs: &mut O) -> anyhow::Result<ScenarioReport> {
         self.validate()?;
-        if self.site.is_some() {
+        if self.site.is_some() || self.region.is_some() {
             anyhow::bail!(
-                "scenario '{}' plans a site: tracing needs a single row run \
-                 (drop the [site] section to trace)",
-                self.name
+                "scenario '{}' plans a {}: tracing needs a single row run \
+                 (drop the [{}] section to trace)",
+                self.name,
+                if self.region.is_some() { "region" } else { "site" },
+                if self.region.is_some() { "region" } else { "site" },
             );
         }
         let cfg = self.sim_config();
@@ -507,6 +646,8 @@ pub enum Outcome {
     Row(Box<RowReport>),
     /// A site-level capacity plan.
     Site(Box<SiteReport>),
+    /// A region-level allocation plan (analytic trace composition).
+    Region(Box<RegionPlan>),
 }
 
 /// What [`Scenario::run`] returns: one report shape for every scenario.
@@ -584,6 +725,23 @@ impl ScenarioReport {
                 }
                 Json::obj(pairs)
             }
+            Outcome::Region(plan) => Json::obj(vec![
+                ("kind", Json::Str("region".to_string())),
+                ("feasible", Json::Bool(plan.feasible)),
+                ("sites", Json::Num(plan.site_names.len() as f64)),
+                ("baseline_servers", Json::Num(plan.baseline_servers as f64)),
+                ("deployed_servers", Json::Num(plan.deployed_servers as f64)),
+                ("uniform_added_pct", Json::Num(plan.uniform_added_pct as f64)),
+                (
+                    "added_pct",
+                    Json::arr(plan.added_pct.iter().map(|&a| Json::Num(a as f64))),
+                ),
+                ("headroom_pct", Json::Num(plan.headroom_pct())),
+                ("grid_budget_w", Json::Num(plan.grid_budget_w)),
+                ("grid_peak_w", Json::Num(plan.grid_peak_w)),
+                ("archetype_sims", Json::Num(plan.archetype_sims as f64)),
+                ("candidate_evals", Json::Num(plan.candidate_evals as f64)),
+            ]),
         };
         let mut pairs = vec![("name", Json::Str(self.name.clone())), ("outcome", outcome)];
         if let Some(tls) = &self.timeline {
@@ -683,6 +841,23 @@ impl ScenarioReport {
                         d.worst_overshoot_frac * 100.0
                     ));
                 }
+            }
+            Outcome::Region(plan) => {
+                out.push_str(&format!(
+                    "region plan: {} deployable servers of {} baseline (+{:.1}%) across {} \
+                     sites — grid peak {:.2} MW / budget {:.2} MW; uniform +{}%, \
+                     {} archetype sims, {} closed-form evals{}\n",
+                    plan.deployed_servers,
+                    plan.baseline_servers,
+                    plan.headroom_pct(),
+                    plan.site_names.len(),
+                    plan.grid_peak_w / 1e6,
+                    plan.grid_budget_w / 1e6,
+                    plan.uniform_added_pct,
+                    plan.archetype_sims,
+                    plan.candidate_evals,
+                    if plan.feasible { "" } else { " (grid budget broken even at baseline)" }
+                ));
             }
         }
         if let Some(tls) = &self.timeline {
@@ -795,6 +970,38 @@ mod tests {
         assert_eq!(pc.weeks, sc.weeks);
         assert_eq!(pc.seed, sc.exp.seed);
         assert_eq!(pc.max_added_pct, 50);
+    }
+
+    #[test]
+    fn region_scenario_maps_onto_the_region_planner() {
+        let mut sc = Scenario::default();
+        sc.region = Some(RegionSection { sites: 6, ..Default::default() });
+        sc.weeks = 1.0 / 7.0;
+        assert!(sc.validate().is_ok());
+        let spec = sc.region_spec().unwrap();
+        assert_eq!(spec.sites.len(), 6);
+        let pc = sc.region_plan_config().unwrap();
+        assert_eq!(pc.weeks, sc.weeks);
+        assert_eq!(pc.seed, sc.exp.seed);
+        assert_eq!(pc.max_added_pct, 50);
+        assert_eq!(pc.step_pct, 5);
+        assert!(sc.describe().contains("6-site region"));
+        // training flows into every cluster of every site
+        sc.training.fraction = 0.25;
+        let spec = sc.region_spec().unwrap();
+        assert!(spec
+            .sites
+            .iter()
+            .all(|rs| rs.site.clusters.iter().all(|c| c.training_fraction == 0.25)));
+        // region + site, region + sku, and region + faults all conflict
+        sc.training.fraction = 0.0;
+        sc.site = Some(SiteSection::default());
+        sc.sku = Some("hgx-h100".to_string());
+        sc.faults = FaultSpec::Named("cascade".to_string());
+        let msg = format!("{:#}", sc.validate().unwrap_err());
+        for needle in ["not both", "sku cannot be combined with a region", "fault injection"] {
+            assert!(msg.contains(needle), "missing '{needle}' in: {msg}");
+        }
     }
 
     #[test]

@@ -83,6 +83,12 @@ fn registry() -> Vec<Preset> {
                           must be given back to keep containment",
             build: site_derated,
         },
+        Preset {
+            name: "region-headroom",
+            description: "Plan an 8-site region under one shared grid budget via the \
+                          compositional trace algebra (no per-site simulation per candidate)",
+            build: region_headroom,
+        },
     ]
 }
 
@@ -192,6 +198,19 @@ fn site_derated() -> Scenario {
         .build()
 }
 
+fn region_headroom() -> Scenario {
+    Scenario::builder("region-headroom")
+        .description("Max deployable servers across an 8-site region under one grid budget")
+        .policy(PolicyKind::Polca)
+        .weeks(1.0 / 7.0)
+        .seed(1)
+        .region(8)
+        .region_clusters(3)
+        .region_grid(0.85)
+        .region_search(50, 5)
+        .build()
+}
+
 /// Preset names, in presentation order.
 pub fn preset_names() -> Vec<&'static str> {
     registry().iter().map(|p| p.name).collect()
@@ -250,6 +269,8 @@ mod tests {
         use crate::scenario::FaultSpec;
         assert!(preset("inference-row").unwrap().site.is_none());
         assert!(preset("site-headroom").unwrap().site.is_some());
+        let region = preset("region-headroom").unwrap();
+        assert!(region.site.is_none() && region.region.is_some());
         assert!(matches!(preset("cascade-faults").unwrap().faults, FaultSpec::Named(_)));
         assert_eq!(preset("training-row").unwrap().training.fraction, 1.0);
         assert_eq!(preset("h100-row").unwrap().sku.as_deref(), Some("hgx-h100"));

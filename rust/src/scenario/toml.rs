@@ -23,6 +23,7 @@
 //! [training]   # fraction, servers_per_job, stagger_s
 //! [faults]     # scenario = "name"  OR  events = [["feed-loss", start, dur, frac], ...]
 //! [site]       # clusters, max_added_pct, step_pct, parallel, sample_s, containment bounds
+//! [region]     # sites, clusters_per_site, grid_budget_frac, search knobs, validate_sites
 //! ```
 
 use anyhow::Context;
@@ -31,7 +32,7 @@ use crate::config::{ExperimentConfig, Toml, TomlValue};
 use crate::faults::{ContainmentSlo, FaultEvent, FaultKind, FaultPlan};
 use crate::policy::engine::PolicyKind;
 
-use super::{FaultSpec, Scenario, SiteSection, TrainingMix};
+use super::{FaultSpec, RegionSection, Scenario, SiteSection, TrainingMix};
 
 impl Scenario {
     /// Serialize to a TOML document (every field written, so the
@@ -116,6 +117,21 @@ impl Scenario {
             doc.set("site", "max_time_to_contain_s", TomlValue::Float(c.max_time_to_contain_s));
             doc.set("site", "max_overshoot_frac", TomlValue::Float(c.max_overshoot_frac));
         }
+
+        if let Some(region) = &self.region {
+            doc.set("region", "sites", TomlValue::Int(region.sites as i64));
+            doc.set(
+                "region",
+                "clusters_per_site",
+                TomlValue::Int(region.clusters_per_site as i64),
+            );
+            doc.set("region", "grid_budget_frac", TomlValue::Float(region.grid_budget_frac));
+            doc.set("region", "max_added_pct", TomlValue::Int(region.max_added_pct as i64));
+            doc.set("region", "step_pct", TomlValue::Int(region.step_pct as i64));
+            doc.set("region", "parallel", TomlValue::Bool(region.parallel));
+            doc.set("region", "sample_s", TomlValue::Float(region.sample_s));
+            doc.set("region", "validate_sites", TomlValue::Int(region.validate_sites as i64));
+        }
         doc
     }
 
@@ -173,6 +189,26 @@ impl Scenario {
         } else {
             None
         };
+        let region = if doc.sections.contains_key("region") {
+            let dr = RegionSection::default();
+            Some(RegionSection {
+                sites: doc.usize_or("region", "sites", dr.sites),
+                clusters_per_site: doc.usize_or(
+                    "region",
+                    "clusters_per_site",
+                    dr.clusters_per_site,
+                ),
+                grid_budget_frac: doc.f64_or("region", "grid_budget_frac", dr.grid_budget_frac),
+                max_added_pct: doc.usize_or("region", "max_added_pct", dr.max_added_pct as usize)
+                    as u32,
+                step_pct: doc.usize_or("region", "step_pct", dr.step_pct as usize) as u32,
+                parallel: doc.bool_or("region", "parallel", dr.parallel),
+                sample_s: doc.f64_or("region", "sample_s", dr.sample_s),
+                validate_sites: doc.usize_or("region", "validate_sites", dr.validate_sites),
+            })
+        } else {
+            None
+        };
         Ok(Scenario {
             name: doc.str_or("", "name", &d.name).to_string(),
             description: doc.str_or("", "description", &d.description).to_string(),
@@ -198,6 +234,7 @@ impl Scenario {
             faults,
             brake_escalation_s: doc.get("policy", "escalate_s").and_then(|v| v.as_f64()),
             site,
+            region,
         })
     }
 
@@ -343,6 +380,25 @@ mod tests {
         sc.site.as_mut().unwrap().containment.max_violation_s = 45.0;
         let back = Scenario::parse(&sc.to_toml_string()).unwrap();
         assert_eq!(back, sc);
+    }
+
+    #[test]
+    fn region_round_trips() {
+        let sc = Scenario::builder("region")
+            .policy(PolicyKind::Polca)
+            .weeks(1.0 / 7.0)
+            .seed(11)
+            .region(6)
+            .region_grid(0.8)
+            .region_search(40, 10)
+            .serial()
+            .build();
+        assert!(!sc.region.as_ref().unwrap().parallel, "serial() must reach [region]");
+        let back = Scenario::parse(&sc.to_toml_string()).unwrap();
+        assert_eq!(back, sc);
+        let r = back.region.unwrap();
+        assert_eq!((r.sites, r.max_added_pct, r.step_pct), (6, 40, 10));
+        assert_eq!(r.grid_budget_frac, 0.8);
     }
 
     #[test]

@@ -5,11 +5,157 @@
 //! seed, and a Debug rendering of the failing input so the case can be
 //! replayed deterministically. Used by the coordinator/policy invariant
 //! tests (DESIGN.md §6).
+//!
+//! Also home to the scaffolding the integration suites share instead of
+//! carrying private copies: seeded [`SimConfig`]/[`Scenario`]
+//! generators ([`random_sim_config`], [`random_scenario`]), the small
+//! fixed-row config ([`base_sim_config`]), the Debug-render
+//! bit-identity assertion ([`assert_bit_identical`]), and the
+//! quick/full test-tier switch ([`full_suite`], `POLCA_TEST_FULL=1`).
 
+use crate::faults::FaultPlan;
+use crate::policy::engine::PolicyKind;
+use crate::scenario::Scenario;
+use crate::simulation::{MixedRowConfig, SimConfig};
 use crate::util::rng::Rng;
 
 /// Number of cases per property (kept moderate: single-core CI budget).
 pub const DEFAULT_CASES: u32 = 256;
+
+/// Whether the full (slow) test tier was requested. The integration
+/// suites gate their exhaustive grids on `POLCA_TEST_FULL=1`; the
+/// default run is the quick tier `scripts/ci.sh` times separately.
+pub fn full_suite() -> bool {
+    matches!(std::env::var("POLCA_TEST_FULL"), Ok(v) if !v.is_empty() && v != "0")
+}
+
+/// Assert two values render identically under `{:?}` — the repo's
+/// bit-identity contract (Debug prints every counter, percentile
+/// buffer, and f64 at round-trip precision).
+///
+/// Panics with `ctx` and both renders on divergence.
+pub fn assert_bit_identical<T: std::fmt::Debug>(a: &T, b: &T, ctx: &str) {
+    let (da, db) = (format!("{a:?}"), format!("{b:?}"));
+    assert_eq!(da, db, "{ctx}: Debug renders diverged");
+}
+
+/// A small fixed row on an explicit calibration: the base config the
+/// fault-injection tests build on (deployed == baseline; oversubscribe
+/// by raising `deployed_servers` afterwards).
+pub fn base_sim_config(servers: usize, weeks: f64, seed: u64) -> SimConfig {
+    let mut cfg = SimConfig::default();
+    cfg.weeks = weeks;
+    cfg.exp.row.num_servers = servers;
+    cfg.deployed_servers = servers;
+    cfg.exp.seed = seed;
+    cfg.power_scale = 1.35; // small-row calibration (see simulation tests)
+    cfg
+}
+
+/// A randomized quick config: small rows and short horizons keep each
+/// case cheap while still exercising capping, mixes, and faults.
+/// `power_scale` is always explicit so no case depends on the
+/// calibration cache. Shared by the executor and observability
+/// bit-identity properties (one generator, one distribution).
+pub fn random_sim_config(rng: &mut Rng) -> SimConfig {
+    let mut cfg = SimConfig::default();
+    let servers = rng.range_usize(8, 12);
+    cfg.exp.row.num_servers = servers;
+    cfg.deployed_servers = servers + rng.range_usize(0, servers / 2);
+    cfg.weeks = rng.range_f64(0.008, 0.02);
+    cfg.exp.seed = rng.next_u64() >> 1;
+    cfg.power_scale = 1.35;
+    let policies = PolicyKind::all();
+    cfg.policy_kind = policies[rng.range_usize(0, policies.len() - 1)];
+    if rng.bool(0.3) {
+        cfg.mixed = Some(MixedRowConfig {
+            training_fraction: rng.range_f64(0.2, 0.8),
+            servers_per_job: rng.range_usize(0, 4),
+            job_stagger_s: rng.range_f64(0.0, 5.0),
+            ..Default::default()
+        });
+    }
+    if rng.bool(0.3) {
+        let horizon_s = cfg.weeks * 7.0 * 86_400.0;
+        cfg.faults = Some(FaultPlan::random(rng.next_u64(), horizon_s, rng.range_usize(1, 3)));
+        cfg.brake_escalation_s = Some(120.0);
+    }
+    cfg
+}
+
+/// A deterministic pseudo-random scenario touching optional fields with
+/// varying shapes — row, site, and region dispatches, SKUs, training
+/// mixes, fault plans. The generator is seeded, so failures replay.
+/// Used by the TOML round-trip property.
+pub fn random_scenario(rng: &mut Rng, i: usize) -> Scenario {
+    let policies = PolicyKind::all();
+    let mut b = Scenario::builder(&format!("rand-{i}"))
+        .description("randomized round-trip scenario")
+        .policy(policies[rng.range_usize(0, policies.len() - 1)])
+        .servers(rng.range_usize(4, 64))
+        .added(rng.range_f64(0.0, 0.6))
+        .weeks(rng.range_f64(0.01, 3.0))
+        .seed(rng.fork(i as u64).next_u64() >> 1)
+        .peak_utilization(rng.range_f64(0.5, 1.0))
+        .power_mult(rng.range_f64(0.9, 1.2))
+        .thresholds(rng.range_f64(0.6, 0.8), rng.range_f64(0.85, 0.97));
+    if rng.bool(0.5) {
+        b = b.lp_fraction(rng.range_f64(0.1, 0.9));
+    }
+    if rng.bool(0.3) {
+        b = b.power_scale(rng.range_f64(1.0, 2.0));
+    }
+    if rng.bool(0.5) {
+        b = b
+            .training(rng.range_f64(0.0, 1.0))
+            .training_jobs(rng.range_usize(0, 8), rng.range_f64(0.0, 10.0));
+    }
+    if rng.bool(0.4) {
+        b = b.escalate(rng.range_f64(30.0, 300.0));
+    }
+    // Dispatch shape first: fault plans are only drawn for non-region
+    // scenarios (validate() rejects region + faults).
+    let region_shape = rng.bool(0.2);
+    if !region_shape {
+        match rng.below(3) {
+            0 => {}
+            1 => {
+                let names = FaultPlan::scenario_names();
+                b = b.faults_scenario(names[rng.range_usize(0, names.len() - 1)]);
+            }
+            _ => {
+                let plan = FaultPlan::random(rng.next_u64(), 86_400.0, rng.range_usize(1, 6));
+                b = b.faults(plan);
+            }
+        }
+    }
+    if region_shape {
+        b = b
+            .region(rng.range_usize(2, 12))
+            .region_clusters(rng.range_usize(1, 4))
+            .region_grid(rng.range_f64(0.6, 1.0))
+            .region_search(
+                rng.range_usize(10, 50) as u32,
+                rng.range_usize(5, 10) as u32,
+            );
+        if rng.bool(0.5) {
+            b = b.serial();
+        }
+    } else if rng.bool(0.3) {
+        b = b.site(rng.range_usize(1, 6)).site_search(
+            rng.range_usize(10, 50) as u32,
+            rng.range_usize(1, 10) as u32,
+        );
+        if rng.bool(0.5) {
+            b = b.serial();
+        }
+    } else if rng.bool(0.3) {
+        // SKUs only on row scenarios (a site cycles the registry itself).
+        let skus = crate::fleet::sku::registry();
+        b = b.sku(skus[rng.range_usize(0, skus.len() - 1)].name);
+    }
+    b.build()
+}
 
 /// Run `prop` over `cases` random inputs drawn by `gen`.
 ///
@@ -59,6 +205,30 @@ mod tests {
     #[should_panic(expected = "property 'always-fails' failed")]
     fn failing_property_reports() {
         check("always-fails", 2, 8, |r| r.below(10), |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn random_scenarios_are_well_formed_and_cover_every_shape() {
+        let mut rng = Rng::new(0xBEEF);
+        let (mut rows, mut sites, mut regions) = (0, 0, 0);
+        for i in 0..60 {
+            let sc = random_scenario(&mut rng, i);
+            match (&sc.site, &sc.region) {
+                (Some(_), None) => sites += 1,
+                (None, Some(_)) => regions += 1,
+                (None, None) => rows += 1,
+                (Some(_), Some(_)) => panic!("scenario #{i} has both site and region"),
+            }
+            sc.validate().unwrap_or_else(|e| panic!("scenario #{i}: {e:#}"));
+        }
+        assert!(rows > 0 && sites > 0 && regions > 0, "{rows}/{sites}/{regions}");
+    }
+
+    #[test]
+    fn bit_identity_assert_accepts_equal_and_full_suite_reads_env() {
+        assert_bit_identical(&vec![1.0_f64, 2.5], &vec![1.0_f64, 2.5], "same vectors");
+        // Whatever the ambient env says, the function must not panic.
+        let _ = full_suite();
     }
 
     #[test]

@@ -9,53 +9,24 @@
 //! * **Surfaces** — the user-facing batch paths rewired onto the
 //!   executor (`polca mixed sweep`, the fault matrix) agree with their
 //!   serial selves end to end.
+//!
+//! The randomized config generator is the shared
+//! [`polca::testing::random_sim_config`] (one generator, one
+//! distribution, across the exec and obs suites).
 
 use polca::exec::{item_seeds, run_batch, ExecConfig};
 use polca::experiments::mixed::{sweep_training_fractions, SweepConfig};
 use polca::policy::engine::PolicyKind;
-use polca::simulation::{run, MixedRowConfig, SimConfig};
+use polca::simulation::{run, SimConfig};
+use polca::testing::random_sim_config;
 use polca::util::rng::Rng;
-
-/// A randomized quick config: small rows and short horizons keep each
-/// case cheap while still exercising capping, mixes, and faults.
-/// `power_scale` is always explicit so the batch never depends on the
-/// calibration cache.
-fn random_cfg(rng: &mut Rng) -> SimConfig {
-    let mut cfg = SimConfig::default();
-    let servers = rng.range_usize(8, 12);
-    cfg.exp.row.num_servers = servers;
-    cfg.deployed_servers = servers + rng.range_usize(0, servers / 2);
-    cfg.weeks = rng.range_f64(0.008, 0.02);
-    cfg.exp.seed = rng.next_u64() >> 1;
-    cfg.power_scale = 1.35;
-    let policies = PolicyKind::all();
-    cfg.policy_kind = policies[rng.range_usize(0, policies.len() - 1)];
-    if rng.bool(0.3) {
-        cfg.mixed = Some(MixedRowConfig {
-            training_fraction: rng.range_f64(0.2, 0.8),
-            servers_per_job: rng.range_usize(0, 4),
-            job_stagger_s: rng.range_f64(0.0, 5.0),
-            ..Default::default()
-        });
-    }
-    if rng.bool(0.3) {
-        let horizon_s = cfg.weeks * 7.0 * 86_400.0;
-        cfg.faults = Some(polca::faults::FaultPlan::random(
-            rng.next_u64(),
-            horizon_s,
-            rng.range_usize(1, 3),
-        ));
-        cfg.brake_escalation_s = Some(120.0);
-    }
-    cfg
-}
 
 #[test]
 fn parallel_batches_are_bit_identical_to_serial_across_thread_counts() {
     let mut rng = Rng::new(0xE8EC_CA5E);
     for case in 0..3 {
         let batch: Vec<SimConfig> =
-            (0..rng.range_usize(3, 5)).map(|_| random_cfg(&mut rng)).collect();
+            (0..rng.range_usize(3, 5)).map(|_| random_sim_config(&mut rng)).collect();
         let serial: Vec<String> = run_batch(&batch, &ExecConfig::serial(), |_, cfg| {
             format!("{:?}", run(cfg))
         });

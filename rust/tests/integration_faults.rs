@@ -5,18 +5,8 @@
 
 use polca::faults::{FaultKind, FaultPlan};
 use polca::policy::engine::PolicyKind;
-use polca::simulation::{run, SimConfig};
-use polca::testing;
-
-fn base_cfg(servers: usize, weeks: f64, seed: u64) -> SimConfig {
-    let mut cfg = SimConfig::default();
-    cfg.weeks = weeks;
-    cfg.exp.row.num_servers = servers;
-    cfg.deployed_servers = servers;
-    cfg.exp.seed = seed;
-    cfg.power_scale = 1.35; // small-row calibration (see simulation tests)
-    cfg
-}
+use polca::simulation::run;
+use polca::testing::{self, base_sim_config};
 
 /// The acceptance property: an empty `FaultPlan` is bit-identical to
 /// the baseline run — same RunReport bytes (compared via the full Debug
@@ -42,7 +32,7 @@ fn property_empty_fault_plan_is_bit_identical() {
             (servers, seed, policy, added)
         },
         |&(servers, seed, policy, added)| {
-            let mut a_cfg = base_cfg(servers, 0.012, seed);
+            let mut a_cfg = base_sim_config(servers, 0.012, seed);
             a_cfg.policy_kind = policy;
             a_cfg.deployed_servers = servers + added;
             let mut b_cfg = a_cfg.clone();
@@ -67,7 +57,7 @@ fn property_empty_fault_plan_is_bit_identical() {
 #[test]
 fn cap_ignore_drives_the_brake_path_under_every_policy() {
     for policy in PolicyKind::all() {
-        let mut cfg = base_cfg(12, 0.08, 42);
+        let mut cfg = base_sim_config(12, 0.08, 42);
         cfg.deployed_servers = 22; // +83%: pushes past the breaker
         cfg.policy_kind = policy;
         cfg.brake_escalation_s = Some(120.0);
@@ -99,7 +89,7 @@ fn random_fault_plans_are_replayable_and_scored() {
     let horizon_s = horizon_weeks * 7.0 * 86_400.0;
     for seed in [1u64, 2, 3] {
         let plan = FaultPlan::random(seed, horizon_s, 4);
-        let mut cfg = base_cfg(10, horizon_weeks, seed);
+        let mut cfg = base_sim_config(10, horizon_weeks, seed);
         cfg.deployed_servers = 13;
         cfg.brake_escalation_s = Some(120.0);
         cfg.faults = Some(plan.clone());
@@ -109,6 +99,6 @@ fn random_fault_plans_are_replayable_and_scored() {
         assert!(report.resilience.true_peak_norm > 0.0);
         // Determinism: the same plan and seed replays bit-identically.
         let again = run(&cfg);
-        assert_eq!(format!("{report:?}"), format!("{again:?}"));
+        testing::assert_bit_identical(&report, &again, &format!("seed {seed} replay"));
     }
 }

@@ -16,46 +16,16 @@
 
 use polca::faults::FaultPlan;
 use polca::obs::{Recorder, RecorderConfig};
-use polca::policy::engine::PolicyKind;
 use polca::scenario::presets;
-use polca::simulation::{run, run_observed, MixedRowConfig, SimConfig};
+use polca::simulation::{run, run_observed, SimConfig};
+use polca::testing::random_sim_config;
 use polca::util::rng::Rng;
-
-/// A randomized quick config (same shape as the executor's property
-/// test): small rows and short horizons keep each case cheap while
-/// still exercising capping, mixes, and faults. `power_scale` is
-/// always explicit so no case depends on the calibration cache.
-fn random_cfg(rng: &mut Rng) -> SimConfig {
-    let mut cfg = SimConfig::default();
-    let servers = rng.range_usize(8, 12);
-    cfg.exp.row.num_servers = servers;
-    cfg.deployed_servers = servers + rng.range_usize(0, servers / 2);
-    cfg.weeks = rng.range_f64(0.008, 0.02);
-    cfg.exp.seed = rng.next_u64() >> 1;
-    cfg.power_scale = 1.35;
-    let policies = PolicyKind::all();
-    cfg.policy_kind = policies[rng.range_usize(0, policies.len() - 1)];
-    if rng.bool(0.3) {
-        cfg.mixed = Some(MixedRowConfig {
-            training_fraction: rng.range_f64(0.2, 0.8),
-            servers_per_job: rng.range_usize(0, 4),
-            job_stagger_s: rng.range_f64(0.0, 5.0),
-            ..Default::default()
-        });
-    }
-    if rng.bool(0.3) {
-        let horizon_s = cfg.weeks * 7.0 * 86_400.0;
-        cfg.faults = Some(FaultPlan::random(rng.next_u64(), horizon_s, rng.range_usize(1, 3)));
-        cfg.brake_escalation_s = Some(120.0);
-    }
-    cfg
-}
 
 #[test]
 fn recording_never_perturbs_a_run() {
     let mut rng = Rng::new(0x0B5E_77ED);
     for case in 0..6 {
-        let cfg = random_cfg(&mut rng);
+        let cfg = random_sim_config(&mut rng);
         let plain = format!("{:?}", run(&cfg));
         let mut rec = Recorder::new(RecorderConfig::default());
         let observed = format!("{:?}", run_observed(&cfg, &mut rec));
@@ -74,8 +44,8 @@ fn recording_never_perturbs_a_run() {
 #[test]
 fn every_row_preset_is_passivity_clean() {
     for mut sc in presets() {
-        if sc.site.is_some() {
-            continue; // site planning sweeps have no single run to trace
+        if sc.site.is_some() || sc.region.is_some() {
+            continue; // site/region planning sweeps have no single run to trace
         }
         sc.weeks = sc.weeks.min(0.02);
         let plain = sc.run().unwrap();

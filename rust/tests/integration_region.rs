@@ -1,0 +1,365 @@
+//! Integration tests for the region layer (ISSUE 7):
+//!
+//! * **Trace-algebra properties** — over randomized seeded trace sets:
+//!   `sum` is commutative and prefix-associative *bit-exactly* (samples
+//!   and summaries), `peak(sum) <= sum(peaks)` always (with exact
+//!   equality when every trace peaks at the same instant — the
+//!   zero-phase-offset case), and `scale`/`mix` are linear in the mean
+//!   to float tolerance.
+//! * **Planner scale** — a 50-site region plans from an archetype
+//!   cache whose simulation count depends on the (SKU, level) alphabet,
+//!   not on the number of sites or candidates.
+//! * **Cross-validation tolerance** — analytic composition vs full
+//!   simulation stays within `MEAN_TOLERANCE` / `PEAK_TOLERANCE` on
+//!   sampled sites; quick tier checks one configuration, the full tier
+//!   (`POLCA_TEST_FULL=1`) sweeps every named SKU × a grid of cluster
+//!   mixes and reports the worst-offending configuration on failure.
+
+use polca::fleet::region::{
+    plan_region, plan_region_with_cache, validate_region, ArchetypeCache, RegionPlanConfig,
+    RegionSpec, MEAN_TOLERANCE, PEAK_TOLERANCE,
+};
+use polca::fleet::site::{ClusterSpec, Feed};
+use polca::fleet::sku;
+use polca::fleet::trace::PowerTrace;
+use polca::policy::engine::PolicyKind;
+use polca::testing::{check, full_suite};
+use polca::util::rng::Rng;
+
+const PERIOD_S: f64 = 300.0;
+
+fn random_trace(rng: &mut Rng, n: usize) -> PowerTrace {
+    PowerTrace::from_samples((0..n).map(|_| rng.range_f64(0.0, 1000.0)).collect(), PERIOD_S)
+}
+
+// ---------------------------------------------------------------------------
+// Trace-algebra properties (simulation-free).
+// ---------------------------------------------------------------------------
+
+#[test]
+fn property_sum_commutes_bit_exactly() {
+    check(
+        "trace-sum-commutes",
+        0x7A_CE01,
+        128,
+        |rng| {
+            let n = rng.range_usize(4, 64);
+            (random_trace(rng, n), random_trace(rng, n))
+        },
+        |(a, b)| {
+            let ab = PowerTrace::sum(PERIOD_S, &[a.clone(), b.clone()]);
+            let ba = PowerTrace::sum(PERIOD_S, &[b.clone(), a.clone()]);
+            if ab.samples != ba.samples {
+                return Err("sum(a,b) and sum(b,a) sample vectors differ".into());
+            }
+            if ab.summary() != ba.summary() {
+                return Err("sum(a,b) and sum(b,a) summaries differ".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn property_sum_is_prefix_associative_bit_exactly() {
+    // General float reassociation is NOT bit-exact, but grouping a
+    // prefix is: the fold starts at 0.0 and 0.0 + x == x, so
+    // sum(a, b, c) == sum(sum(a, b), c) sample for sample.
+    check(
+        "trace-sum-prefix-assoc",
+        0x7A_CE02,
+        128,
+        |rng| {
+            let n = rng.range_usize(4, 48);
+            (random_trace(rng, n), random_trace(rng, n), random_trace(rng, n))
+        },
+        |(a, b, c)| {
+            let flat = PowerTrace::sum(PERIOD_S, &[a.clone(), b.clone(), c.clone()]);
+            let prefix = PowerTrace::sum(
+                PERIOD_S,
+                &[PowerTrace::sum(PERIOD_S, &[a.clone(), b.clone()]), c.clone()],
+            );
+            if flat.samples != prefix.samples {
+                return Err("prefix grouping changed the sample vector".into());
+            }
+            if flat.summary() != prefix.summary() {
+                return Err("prefix grouping changed the summary".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn property_peak_of_sum_is_subadditive() {
+    // IEEE addition rounds monotonically, and both sides are the same
+    // left-to-right fold shape, so the inequality is exact — no
+    // epsilon.
+    check(
+        "trace-peak-subadditive",
+        0x7A_CE03,
+        128,
+        |rng| {
+            let n = rng.range_usize(4, 48);
+            let k = rng.range_usize(2, 5);
+            (0..k).map(|_| random_trace(rng, n)).collect::<Vec<_>>()
+        },
+        |traces| {
+            let peak_of_sum = PowerTrace::sum(PERIOD_S, traces).peak_w();
+            let sum_of_peaks = traces.iter().map(|t| t.peak_w()).fold(0.0, |acc, p| acc + p);
+            if peak_of_sum <= sum_of_peaks {
+                Ok(())
+            } else {
+                Err(format!("peak(sum) {peak_of_sum} > sum(peaks) {sum_of_peaks}"))
+            }
+        },
+    );
+}
+
+#[test]
+fn property_aligned_peaks_make_subadditivity_an_equality() {
+    // The zero-phase-offset case: scaled copies of one base trace all
+    // peak at the same instant, and peak(sum) == sum(peaks) bit-exactly
+    // (both sides fold the identical per-trace peak values in the same
+    // order). This is the trace-algebra face of the site invariant
+    // "site trace == sum of cluster traces at zero offset".
+    check(
+        "trace-aligned-peak-equality",
+        0x7A_CE04,
+        128,
+        |rng| {
+            let n = rng.range_usize(4, 48);
+            let mut base = random_trace(rng, n);
+            // A strictly dominant spike pins a unique argmax.
+            let j = rng.range_usize(0, n - 1);
+            base.samples[j] = 2000.0 + rng.range_f64(0.0, 100.0);
+            let k = rng.range_usize(2, 5);
+            let weights: Vec<f64> = (0..k).map(|_| rng.range_f64(0.1, 3.0)).collect();
+            (base, weights)
+        },
+        |(base, weights)| {
+            let traces: Vec<PowerTrace> = weights.iter().map(|&w| base.scale(w)).collect();
+            let peak_of_sum = PowerTrace::sum(PERIOD_S, &traces).peak_w();
+            let sum_of_peaks = traces.iter().map(|t| t.peak_w()).fold(0.0, |acc, p| acc + p);
+            if peak_of_sum == sum_of_peaks {
+                Ok(())
+            } else {
+                Err(format!(
+                    "aligned peaks must be exactly additive: {peak_of_sum} != {sum_of_peaks}"
+                ))
+            }
+        },
+    );
+}
+
+#[test]
+fn property_scale_and_mix_are_linear_in_the_mean() {
+    const REL_TOL: f64 = 1e-9;
+    let rel = |x: f64, y: f64| (x - y).abs() / y.abs().max(1e-12);
+    check(
+        "trace-mean-linearity",
+        0x7A_CE05,
+        128,
+        |rng| {
+            let n = rng.range_usize(4, 64);
+            let k = rng.range_f64(0.1, 5.0);
+            let (wa, wb) = (rng.range_f64(0.1, 2.0), rng.range_f64(0.1, 2.0));
+            (random_trace(rng, n), random_trace(rng, n), k, wa, wb)
+        },
+        |(a, b, k, wa, wb)| {
+            if rel(a.scale(*k).mean_w(), k * a.mean_w()) > REL_TOL {
+                return Err("mean(scale(t, k)) drifted from k * mean(t)".into());
+            }
+            let mixed = PowerTrace::mix(PERIOD_S, &[a.clone(), b.clone()], &[*wa, *wb]);
+            let expect = wa * a.mean_w() + wb * b.mean_w();
+            if rel(mixed.mean_w(), expect) > REL_TOL {
+                return Err(format!(
+                    "mean(mix) {} drifted from the weighted means {expect}",
+                    mixed.mean_w()
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn property_shift_phase_is_a_peak_preserving_rotation_group() {
+    check(
+        "trace-shift-rotation-group",
+        0x7A_CE06,
+        128,
+        |rng| {
+            let n = rng.range_usize(4, 48);
+            let k1 = rng.range_usize(0, 2 * n) as f64;
+            let k2 = rng.range_usize(0, 2 * n) as f64;
+            (random_trace(rng, n), k1, k2)
+        },
+        |(t, k1, k2)| {
+            // Rotation permutes samples: the peak (a fold of
+            // comparisons, no arithmetic) is bit-identical.
+            if t.shift_phase(k1 * PERIOD_S).peak_w() != t.peak_w() {
+                return Err("rotation changed the peak".into());
+            }
+            // Whole-period shifts compose additively...
+            let composed = t.shift_phase(k1 * PERIOD_S).shift_phase(k2 * PERIOD_S);
+            let direct = t.shift_phase((k1 + k2) * PERIOD_S);
+            if composed.samples != direct.samples {
+                return Err("shift(k1) . shift(k2) != shift(k1 + k2)".into());
+            }
+            // ... and a full turn is the identity.
+            let full = t.shift_phase(t.len() as f64 * PERIOD_S);
+            if full.samples != t.samples {
+                return Err("a full-period rotation must be the identity".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Planner scale: simulations track the archetype alphabet, not sites.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn fifty_site_region_plans_from_a_constant_archetype_alphabet() {
+    let region = RegionSpec::demo(50, 2, 0.9);
+    let pc = RegionPlanConfig {
+        policy: PolicyKind::NoCap,
+        weeks: 0.02,
+        max_added_pct: 20,
+        step_pct: 10,
+        ..Default::default()
+    };
+    let plan = plan_region(&region, &pc);
+    assert_eq!(plan.site_names.len(), 50);
+    assert_eq!(plan.added_pct.len(), 50);
+    // The demo region cycles the SKU registry, so the archetype
+    // alphabet is at most |SKUs| x |levels probed| — far below one
+    // simulation per (site, candidate), let alone per server.
+    let skus = sku::registry().len();
+    let levels = (pc.max_added_pct / pc.step_pct + 1) as usize;
+    assert!(
+        plan.archetype_sims <= skus * levels,
+        "{} archetype sims for {} SKUs x {} levels",
+        plan.archetype_sims,
+        skus,
+        levels
+    );
+    assert!(
+        plan.candidate_evals >= 2,
+        "the search must have evaluated several candidates ({})",
+        plan.candidate_evals
+    );
+    // Every closed-form evaluation reused those archetypes: evals over
+    // 50 sites with zero additional simulations is the tentpole claim.
+    assert!(plan.archetype_sims < plan.candidate_evals * 50);
+    assert_eq!(plan.baseline_servers, 50 * 2 * 12);
+}
+
+// ---------------------------------------------------------------------------
+// Cross-validation: analytic composition vs full simulation.
+// ---------------------------------------------------------------------------
+
+/// A homogeneous-SKU region: `n_sites` sites x `clusters_per_site`
+/// clusters of one SKU on 12-server baselines (the pinned calibration
+/// anchor), staggered phases within sites and time zones across them,
+/// optionally colocating a training fraction on every cluster.
+fn sku_region(
+    sku_name: &str,
+    n_sites: usize,
+    clusters_per_site: usize,
+    training: f64,
+) -> RegionSpec {
+    let sk = sku::find(sku_name).unwrap_or_else(|| panic!("unknown sku '{sku_name}'"));
+    let mut region = RegionSpec::demo(n_sites, clusters_per_site, 1.0);
+    for (s, rs) in region.sites.iter_mut().enumerate() {
+        let clusters: Vec<ClusterSpec> = (0..clusters_per_site)
+            .map(|i| {
+                let mut c = ClusterSpec::new(&format!("s{s}c{i}-{sku_name}"), sk, 12);
+                c.phase_offset_s = i as f64 * 3.0 * 3600.0;
+                c.training_fraction = training;
+                c
+            })
+            .collect();
+        let feeds: Vec<Feed> = clusters
+            .chunks(2)
+            .enumerate()
+            .map(|(fi, chunk)| {
+                let idxs: Vec<usize> = (fi * 2..fi * 2 + chunk.len()).collect();
+                let capacity_w: f64 = chunk.iter().map(|c| c.budget_w()).sum();
+                Feed { name: format!("feed{fi}"), clusters: idxs, capacity_w }
+            })
+            .collect();
+        rs.site.substation_budget_w =
+            clusters.iter().map(|c| c.budget_w()).sum::<f64>() / rs.site.ups_efficiency;
+        rs.site.feeds = feeds;
+        rs.site.clusters = clusters;
+    }
+    region.grid_budget_w =
+        region.sites.iter().map(|r| r.site.substation_budget_w).sum::<f64>();
+    region
+}
+
+/// Plan + validate one configuration; returns the validation and a
+/// human description for failure reporting.
+fn validate_config(
+    sku_name: &str,
+    clusters_per_site: usize,
+    training: f64,
+) -> (polca::fleet::region::RegionValidation, String) {
+    let region = sku_region(sku_name, 3, clusters_per_site, training);
+    let pc = RegionPlanConfig { max_added_pct: 20, step_pct: 10, ..Default::default() };
+    let mut cache = ArchetypeCache::new(&pc);
+    let plan = plan_region_with_cache(&region, &pc, &mut cache);
+    let v = validate_region(&region, &plan, &pc, 2);
+    let desc = format!(
+        "sku={sku_name} clusters/site={clusters_per_site} training={training} \
+         plan={:?}",
+        plan.added_pct
+    );
+    (v, desc)
+}
+
+#[test]
+fn analytic_composition_matches_full_simulation_within_tolerance() {
+    // Quick tier: one representative configuration. Full tier
+    // (POLCA_TEST_FULL=1): every named SKU x a grid of cluster mixes.
+    let mut grid: Vec<(&str, usize, f64)> = vec![("dgx-a100", 2, 0.0)];
+    if full_suite() {
+        grid.clear();
+        for sk in sku::registry() {
+            for &(clusters, training) in &[(1usize, 0.0), (2, 0.0), (2, 0.5)] {
+                grid.push((sk.name, clusters, training));
+            }
+        }
+    }
+    let mut failures: Vec<String> = Vec::new();
+    for &(sku_name, clusters, training) in &grid {
+        let (v, desc) = validate_config(sku_name, clusters, training);
+        assert_eq!(v.mean_tolerance, MEAN_TOLERANCE);
+        assert_eq!(v.peak_tolerance, PEAK_TOLERANCE);
+        if !v.passed() {
+            let worst = v.worst_site().expect("a failing validation has sites");
+            failures.push(format!(
+                "{desc}: worst site '{}' at +{}% — mean err {:.3}% (<= {:.0}%), \
+                 peak err {:.3}% (<= {:.0}%); analytic peak {:.1} kW vs simulated {:.1} kW",
+                worst.site,
+                worst.added_pct,
+                worst.mean_rel_err * 100.0,
+                v.mean_tolerance * 100.0,
+                worst.peak_rel_err * 100.0,
+                v.peak_tolerance * 100.0,
+                worst.analytic_peak_w / 1e3,
+                worst.simulated_peak_w / 1e3,
+            ));
+        }
+    }
+    assert!(
+        failures.is_empty(),
+        "{} of {} configurations out of tolerance:\n{}",
+        failures.len(),
+        grid.len(),
+        failures.join("\n")
+    );
+}

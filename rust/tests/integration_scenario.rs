@@ -10,12 +10,14 @@
 //!   seed. The mixed-row and fault-drill presets are pinned the same
 //!   way against the legacy `mixed`/`faults` wiring.
 //! * **Dispatch** — `Scenario::run` routes row scenarios to the
-//!   simulator and site scenarios to the fleet planner.
+//!   simulator, site scenarios to the fleet planner, and region
+//!   scenarios to the region planner.
 
 use polca::faults::FaultKind;
 use polca::policy::engine::PolicyKind;
 use polca::scenario::{preset, presets, FaultSpec, Outcome, Scenario};
 use polca::simulation::{power_scale_for_row, run, MixedRowConfig, SimConfig};
+use polca::testing::{full_suite, random_scenario};
 use polca::util::rng::Rng;
 
 // ---------------------------------------------------------------------------
@@ -39,70 +41,14 @@ fn every_preset_round_trips_through_toml_bit_identically() {
     }
 }
 
-/// A deterministic pseudo-random scenario touching optional fields with
-/// varying shapes (the generator is seeded, so failures replay).
-fn random_scenario(rng: &mut Rng, i: usize) -> Scenario {
-    let policies = PolicyKind::all();
-    let mut b = Scenario::builder(&format!("rand-{i}"))
-        .description("randomized round-trip scenario")
-        .policy(policies[rng.range_usize(0, policies.len() - 1)])
-        .servers(rng.range_usize(4, 64))
-        .added(rng.range_f64(0.0, 0.6))
-        .weeks(rng.range_f64(0.01, 3.0))
-        .seed(rng.fork(i as u64).next_u64() >> 1)
-        .peak_utilization(rng.range_f64(0.5, 1.0))
-        .power_mult(rng.range_f64(0.9, 1.2))
-        .thresholds(rng.range_f64(0.6, 0.8), rng.range_f64(0.85, 0.97));
-    if rng.bool(0.5) {
-        b = b.lp_fraction(rng.range_f64(0.1, 0.9));
-    }
-    if rng.bool(0.3) {
-        b = b.power_scale(rng.range_f64(1.0, 2.0));
-    }
-    if rng.bool(0.5) {
-        b = b.training(rng.range_f64(0.0, 1.0)).training_jobs(
-            rng.range_usize(0, 8),
-            rng.range_f64(0.0, 10.0),
-        );
-    }
-    if rng.bool(0.4) {
-        b = b.escalate(rng.range_f64(30.0, 300.0));
-    }
-    match rng.below(3) {
-        0 => {}
-        1 => {
-            let names = polca::faults::FaultPlan::scenario_names();
-            b = b.faults_scenario(names[rng.range_usize(0, names.len() - 1)]);
-        }
-        _ => {
-            let plan = polca::faults::FaultPlan::random(
-                rng.next_u64(),
-                86_400.0,
-                rng.range_usize(1, 6),
-            );
-            b = b.faults(plan);
-        }
-    }
-    if rng.bool(0.3) {
-        b = b.site(rng.range_usize(1, 6)).site_search(
-            rng.range_usize(10, 50) as u32,
-            rng.range_usize(1, 10) as u32,
-        );
-        if rng.bool(0.5) {
-            b = b.serial();
-        }
-    } else if rng.bool(0.3) {
-        // SKUs only on row scenarios (a site cycles the registry itself).
-        let skus = polca::fleet::sku::registry();
-        b = b.sku(skus[rng.range_usize(0, skus.len() - 1)].name);
-    }
-    b.build()
-}
-
 #[test]
 fn random_scenarios_round_trip_through_toml_bit_identically() {
+    // The generator lives in `polca::testing` (shared scaffolding); it
+    // covers row, site, and region shapes. Quick tier keeps the case
+    // count moderate; `POLCA_TEST_FULL=1` runs the full population.
+    let cases = if full_suite() { 500 } else { 200 };
     let mut rng = Rng::new(0x5CE17A210);
-    for i in 0..200 {
+    for i in 0..cases {
         let sc = random_scenario(&mut rng, i);
         let text = sc.to_toml_string();
         let back = Scenario::parse(&text)
@@ -242,6 +188,29 @@ fn site_scenario_runs_through_the_planner() {
     assert_eq!(site.plan.baseline_servers, 16); // demo clusters are 16-server
     assert!(site.derated.is_none());
     assert!(report.render().contains("deployable servers"));
+}
+
+#[test]
+fn region_scenario_runs_through_the_region_planner() {
+    let sc = Scenario::builder("region-dispatch")
+        .policy(PolicyKind::NoCap)
+        .weeks(0.01)
+        .seed(1)
+        .region(2)
+        .region_clusters(1)
+        .region_grid(1.0)
+        .region_search(10, 10)
+        .serial()
+        .build();
+    let mut report = sc.run().unwrap();
+    let Outcome::Region(plan) = &report.outcome else {
+        panic!("region scenario must dispatch to the region planner");
+    };
+    assert_eq!(plan.site_names.len(), 2);
+    assert_eq!(plan.baseline_servers, 24); // demo region clusters are 12-server
+    assert!(plan.archetype_sims > 0, "planning must fill the archetype cache");
+    let text = report.render();
+    assert!(text.contains("region plan:"), "{text}");
 }
 
 #[test]

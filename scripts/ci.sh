@@ -75,8 +75,19 @@ fi
 echo "== cargo build --release"
 cargo build --release
 
-echo "== cargo test -q"
+# Tiered test gate (ISSUE 7): the quick tier is the default `cargo
+# test`; POLCA_TEST_FULL=1 widens the randomized populations (500-case
+# TOML round-trips, the full SKU x cluster-mix cross-validation grid).
+# Both tiers run here, each with its wall-clock recorded, so a drift in
+# either tier's cost is visible in the CI log.
+echo "== cargo test -q (quick tier)"
+tier_start=$SECONDS
 cargo test -q
+echo "   quick tier: $((SECONDS - tier_start))s"
+echo "== POLCA_TEST_FULL=1 cargo test -q (full tier)"
+tier_start=$SECONDS
+POLCA_TEST_FULL=1 cargo test -q
+echo "   full tier: $((SECONDS - tier_start))s"
 
 # Doctest gate (ISSUE 3): the key public entry points (PolicyEngine,
 # OobChannel, TelemetryBuffer, fleet::planner, FaultPlan) carry
@@ -170,6 +181,14 @@ if command -v python3 >/dev/null 2>&1; then
     "$trace_dir/c.trace.json"
 fi
 rm -rf "$trace_dir"
+
+# Region gate (ISSUE 7): the compositional trace algebra must stay
+# within tolerance of full simulation — `fleet region validate` plans a
+# demo region analytically, re-simulates sampled sites end to end, and
+# exits nonzero if the worst mean error exceeds 1% or the worst peak
+# error exceeds 3%.
+echo "== region cross-validation (polca fleet region validate --quick)"
+./target/release/polca fleet region validate --quick | tail -n 6
 
 # Bench smoke (ISSUE 5): record the sweep serial-vs-parallel trajectory
 # to BENCH_sim.json on every CI run. Remove any stale file first so the
