@@ -2,7 +2,9 @@
 //! headline for the evaluation vehicle — plus the DES queue in
 //! isolation, the scenario-executor speedup (a quick sweep batch,
 //! serial vs parallel), the traced-vs-untraced recording overhead
-//! (`trace_overhead_frac`), and a profiled-batch utilization snapshot,
+//! (`trace_overhead_frac`), the adaptive-controller overhead
+//! (`adapt_overhead_frac`, `retune_evals_per_s`), and a
+//! profiled-batch utilization snapshot,
 //! recorded to `BENCH_sim.json` so the perf trajectory of the
 //! matrix/sweep/trace paths is tracked across PRs.
 //!
@@ -14,6 +16,7 @@ use std::time::Duration;
 use polca::benchkit::{bench, black_box, BenchConfig};
 use polca::exec::{run_batch, run_batch_profiled, ExecConfig};
 use polca::obs::{batch_stats, Recorder, RecorderConfig};
+use polca::policy::adapt::AdaptConfig;
 use polca::policy::engine::PolicyKind;
 use polca::sim::EventQueue;
 use polca::simulation::{run, run_observed, SimConfig};
@@ -136,6 +139,40 @@ fn main() {
         traced_r.throughput()
     );
 
+    // Adaptive-controller overhead (ISSUE 8): the same one-day row with
+    // the retune loop armed — a fast 30-minute window so the horizon
+    // holds many control windows. Throughput is compared against the
+    // unadapted polca run above (same row shape, same seed), so
+    // `adapt_overhead_frac` is what closing the provisioning→runtime
+    // loop costs per event; `retune_evals_per_s` is the controller's
+    // own decision rate.
+    let mut adapt_cfg = traced_cfg.clone();
+    adapt_cfg.adapt = Some(AdaptConfig {
+        window_s: 1800.0,
+        initial_added: 0.10,
+        max_added: 0.30,
+        ..Default::default()
+    });
+    let probe = run(&adapt_cfg);
+    let adapt_events = probe.events as f64;
+    let adapt_summary = probe.adapt.expect("armed controller must report");
+    let adapt_r = bench("cluster_sim_1day_52srv_polca_adaptive", &slow_cfg, adapt_events, || {
+        black_box(run(&adapt_cfg));
+    });
+    println!("{}  [= events/s]", adapt_r.report());
+    let retune_evals_per_s =
+        adapt_r.throughput() * adapt_summary.evals as f64 / adapt_events.max(1.0);
+    let adapt_overhead_frac = 1.0 - adapt_r.throughput() / untraced;
+    println!(
+        "adapt overhead: {:.1}% ({:.0} retune evals/s; {} evals / {} applies / {} \
+         vetoes over the horizon)",
+        adapt_overhead_frac * 100.0,
+        retune_evals_per_s,
+        adapt_summary.evals,
+        adapt_summary.applies,
+        adapt_summary.vetoes
+    );
+
     // Profiled-batch utilization: run_batch_profiled's wall-clock spans
     // folded into a lane-packing profile. One shot, not a bench loop —
     // the numbers are wall-clock and vary; the trajectory is what CI
@@ -168,6 +205,9 @@ fn main() {
         ("sweep_parallel_speedup", Json::Num(speedup)),
         ("sim_events_per_s_traced", Json::num(traced_r.throughput())),
         ("trace_overhead_frac", Json::num(trace_overhead_frac)),
+        ("sim_events_per_s_adaptive", Json::num(adapt_r.throughput())),
+        ("retune_evals_per_s", Json::num(retune_evals_per_s)),
+        ("adapt_overhead_frac", Json::num(adapt_overhead_frac)),
         ("profiled_batch_wall_s", Json::num(profile.wall_s)),
         ("profiled_batch_busy_frac", Json::num(profile.busy_frac)),
     ]);

@@ -1,0 +1,308 @@
+//! Beyond-paper experiment: static vs adaptive oversubscription under
+//! demand drift — the provisioning→runtime loop closed online.
+//!
+//! The paper tunes (T1, T2) and the added-server level *offline* from
+//! week-one data (§6.2) and argues robustness to workload change
+//! (§5.1) from margin left in that static choice. This experiment asks
+//! the follow-on question: when demand keeps growing week over week
+//! (with a seasonal swing on top), how does a row frozen at its
+//! week-one level compare to the same row driven by the
+//! [`crate::policy::adapt`] outer loop, which re-walks the tuner grid
+//! every window and claims headroom only while the feedback stays
+//! calm?
+//!
+//! The comparison the `adaptive-drift` id prints: one static arm per
+//! provisioning level (the row deployed at that level, no controller)
+//! against one adaptive arm racked at the search ceiling but *started*
+//! at the lowest static level. Adaptive dominance = no more violation
+//! minutes than the matched static arm while claiming at least its
+//! mean added level — the acceptance bar `tests/integration_adapt.rs`
+//! pins.
+
+use crate::exec::{run_batch, ExecConfig};
+use crate::policy::engine::PolicyKind;
+use crate::scenario::Scenario;
+use crate::simulation::run_with_impact;
+use crate::util::csv::Csv;
+use crate::util::table::{f, pct, Table};
+
+use super::{Depth, FigureOutput};
+
+/// The study's fixed shape — one place for both the experiment and the
+/// long-horizon regression tests, so the arms cannot drift apart.
+#[derive(Debug, Clone)]
+pub struct DriftStudy {
+    /// Simulated horizon, weeks.
+    pub weeks: f64,
+    /// Root seed (shared across arms).
+    pub seed: u64,
+    /// Baseline (budget) server count.
+    pub servers: usize,
+    /// The adaptive arm's racked ceiling (added fraction).
+    pub racked: f64,
+    /// Static provisioning levels to compare against (ascending; the
+    /// first is also the adaptive arm's starting level).
+    pub static_levels: Vec<f64>,
+    /// Retune window, seconds.
+    pub window_s: f64,
+    /// Demand growth per week (fraction).
+    pub growth_per_week: f64,
+    /// Seasonal modulation amplitude (fraction).
+    pub season_amp: f64,
+    /// Explicit row-power calibration (`None` = the shared row fit).
+    pub power_scale: Option<f64>,
+    /// Fan arms out across the parallel scenario executor.
+    pub parallel: bool,
+}
+
+impl Default for DriftStudy {
+    fn default() -> Self {
+        DriftStudy {
+            weeks: 2.0,
+            seed: 1,
+            servers: 16,
+            racked: 0.40,
+            static_levels: vec![0.10, 0.20, 0.30],
+            window_s: 21_600.0,
+            growth_per_week: 0.025,
+            season_amp: 0.15,
+            power_scale: None,
+            parallel: true,
+        }
+    }
+}
+
+impl DriftStudy {
+    fn base(&self, name: &str) -> crate::scenario::ScenarioBuilder {
+        let mut b = Scenario::builder(name)
+            .policy(PolicyKind::Polca)
+            .servers(self.servers)
+            .weeks(self.weeks)
+            .seed(self.seed)
+            .drift(self.growth_per_week, self.season_amp, 4.0);
+        if let Some(scale) = self.power_scale {
+            b = b.power_scale(scale);
+        }
+        b
+    }
+
+    /// A row frozen at its week-one provisioning level: deployed at
+    /// `level`, no controller (the §6.2 static answer).
+    pub fn static_scenario(&self, level: f64) -> Scenario {
+        self.base("drift-static").added(level).build()
+    }
+
+    /// The same row racked to the ceiling and driven by the adaptive
+    /// controller, started at the lowest static level. `min_added` is
+    /// pinned to the start level so the adaptive arm never provisions
+    /// *below* its static counterpart — which is what makes the
+    /// mean-added dominance check meaningful rather than vacuous.
+    pub fn adaptive_scenario(&self) -> Scenario {
+        let start = self.static_levels.first().copied().unwrap_or(0.0);
+        self.base("drift-adaptive")
+            .added(self.racked)
+            .adaptive(self.window_s)
+            .adapt_levels(start, start, self.racked)
+            .adapt_pacing(2, 3)
+            .build()
+    }
+}
+
+/// One arm's observables.
+#[derive(Debug, Clone)]
+pub struct DriftPoint {
+    /// Arm label ("static +10%" / "adaptive").
+    pub label: String,
+    /// Time-weighted mean added-server level over the horizon.
+    pub mean_added: f64,
+    /// Added level at the horizon.
+    pub final_added: f64,
+    /// Ground-truth budget-violation seconds.
+    pub violation_s: f64,
+    /// Powerbrake engagements.
+    pub brake_events: u64,
+    /// Peak normalized row power.
+    pub power_peak: f64,
+    /// HP p99 latency impact vs the unthrottled baseline.
+    pub hp_p99_impact: f64,
+    /// Whether the Table-5 SLOs held.
+    pub slo_ok: bool,
+    /// Controller activity: (evals, applies, vetoes); zeros for static.
+    pub retunes: (u64, u64, u64),
+}
+
+/// Run every arm (static levels plus the adaptive row) and collect the
+/// observables. Arms are independent simulations, so the batch fans
+/// out through [`crate::exec`].
+pub fn run_drift_study(study: &DriftStudy) -> Vec<DriftPoint> {
+    let mut arms: Vec<(String, Scenario)> = study
+        .static_levels
+        .iter()
+        .map(|&l| (format!("static +{:.0}%", l * 100.0), study.static_scenario(l)))
+        .collect();
+    arms.push(("adaptive".to_string(), study.adaptive_scenario()));
+    run_batch(&arms, &ExecConfig::with_parallel(study.parallel), |_, (label, sc)| {
+        let cfg = sc.sim_config();
+        let (report, impact) = run_with_impact(&cfg);
+        let slo_ok = impact.slo_violations(&sc.exp.slo).is_empty();
+        let (mean_added, final_added, retunes) = match &report.adapt {
+            Some(a) => (a.mean_added, a.final_added, (a.evals, a.applies, a.vetoes)),
+            None => (sc.added_frac, sc.added_frac, (0, 0, 0)),
+        };
+        DriftPoint {
+            label: label.clone(),
+            mean_added,
+            final_added,
+            violation_s: report.resilience.violation_s,
+            brake_events: report.brake_events,
+            power_peak: report.power_peak,
+            hp_p99_impact: impact.hp_p99,
+            slo_ok,
+            retunes,
+        }
+    })
+}
+
+/// The dominance verdict: the adaptive arm against the static arm at
+/// its own starting level (the matched comparison).
+#[derive(Debug, Clone, Copy)]
+pub struct DriftVerdict {
+    /// Matched static arm's violation seconds.
+    pub static_violation_s: f64,
+    /// Adaptive arm's violation seconds.
+    pub adaptive_violation_s: f64,
+    /// Matched static arm's mean added level.
+    pub static_mean_added: f64,
+    /// Adaptive arm's mean added level.
+    pub adaptive_mean_added: f64,
+    /// Violation minutes no worse AND mean added level no lower.
+    pub dominates: bool,
+    /// Both arms kept the Table-5 SLOs.
+    pub slo_ok_both: bool,
+}
+
+/// Evaluate the verdict over [`run_drift_study`] output (the static
+/// arms in study order, the adaptive arm last).
+pub fn drift_verdict(points: &[DriftPoint]) -> DriftVerdict {
+    let adaptive = points.last().expect("non-empty study");
+    let matched = points.first().expect("non-empty study");
+    DriftVerdict {
+        static_violation_s: matched.violation_s,
+        adaptive_violation_s: adaptive.violation_s,
+        static_mean_added: matched.mean_added,
+        adaptive_mean_added: adaptive.mean_added,
+        dominates: adaptive.violation_s <= matched.violation_s + 1e-9
+            && adaptive.mean_added >= matched.mean_added - 1e-9,
+        slo_ok_both: adaptive.slo_ok && matched.slo_ok,
+    }
+}
+
+/// `adaptive-drift`: static-vs-adaptive headroom under demand growth.
+pub fn adaptive_drift(depth: Depth, seed: u64) -> FigureOutput {
+    let mut out = FigureOutput::new(
+        "adaptive-drift",
+        "Static vs adaptive oversubscription under demand drift (§5.1/§6.2 online)",
+    );
+    let study = DriftStudy { weeks: depth.weeks(2.0), seed, ..Default::default() };
+    let points = run_drift_study(&study);
+
+    let mut t = Table::new(
+        "Drift study",
+        &["arm", "mean added", "final added", "violation s", "brakes", "peak", "hp p99", "slo"],
+    );
+    let mut csv = Csv::new(&[
+        "arm", "mean_added", "final_added", "violation_s", "brakes", "power_peak",
+        "hp_p99_impact", "slo_ok", "retune_evals", "retune_applies", "retune_vetoes",
+    ]);
+    for p in &points {
+        t.row(vec![
+            p.label.clone(),
+            pct(p.mean_added, 1),
+            pct(p.final_added, 1),
+            f(p.violation_s, 1),
+            p.brake_events.to_string(),
+            pct(p.power_peak, 1),
+            pct(p.hp_p99_impact, 2),
+            if p.slo_ok { "ok".into() } else { "VIOLATED".into() },
+        ]);
+        csv.row_strs(&[
+            p.label.clone(),
+            f(p.mean_added, 4),
+            f(p.final_added, 4),
+            f(p.violation_s, 2),
+            p.brake_events.to_string(),
+            f(p.power_peak, 4),
+            f(p.hp_p99_impact, 4),
+            (p.slo_ok as u8).to_string(),
+            p.retunes.0.to_string(),
+            p.retunes.1.to_string(),
+            p.retunes.2.to_string(),
+        ]);
+    }
+    out.tables.push(t);
+    out.csvs.push(("adaptive_drift.csv".into(), csv));
+
+    let v = drift_verdict(&points);
+    out.notes.push(format!(
+        "adaptive vs matched static (+{:.0}%): violation {:.1}s vs {:.1}s, mean added \
+         {:.1}% vs {:.1}% — adaptive {} the static arm (SLOs held on both: {})",
+        v.static_mean_added * 100.0,
+        v.adaptive_violation_s,
+        v.static_violation_s,
+        v.adaptive_mean_added * 100.0,
+        v.static_mean_added * 100.0,
+        if v.dominates { "dominates" } else { "DOES NOT dominate" },
+        if v.slo_ok_both { "yes" } else { "NO" }
+    ));
+    let a = points.last().unwrap();
+    out.notes.push(format!(
+        "controller activity: {} evals, {} applies, {} vetoes over {:.1} weeks",
+        a.retunes.0, a.retunes.1, a.retunes.2, study.weeks
+    ));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn study_arms_have_the_intended_shapes() {
+        let study = DriftStudy::default();
+        let s = study.static_scenario(0.10);
+        assert!(s.adapt.is_none() && s.drift.is_some());
+        assert_eq!(s.added_frac, 0.10);
+        let a = study.adaptive_scenario();
+        assert!(a.validate().is_ok());
+        let cfg = a.adapt.unwrap();
+        // Starting level pinned as the floor: the adaptive arm never
+        // provisions below the matched static arm.
+        assert_eq!((cfg.min_added, cfg.initial_added), (0.10, 0.10));
+        assert_eq!(cfg.max_added, study.racked);
+    }
+
+    #[test]
+    fn quick_study_produces_a_dominance_verdict() {
+        // A tiny horizon with a fast window: enough for the controller
+        // to evaluate several windows while staying CI-cheap.
+        let study = DriftStudy {
+            weeks: 0.05,
+            seed: 5,
+            servers: 12,
+            static_levels: vec![0.10],
+            window_s: 1800.0,
+            power_scale: Some(1.35),
+            ..Default::default()
+        };
+        let points = run_drift_study(&study);
+        assert_eq!(points.len(), 2);
+        let a = points.last().unwrap();
+        assert!(a.retunes.0 > 0, "controller never evaluated: {a:?}");
+        // The floor construction makes mean-added dominance structural.
+        let v = drift_verdict(&points);
+        assert!(
+            v.adaptive_mean_added >= v.static_mean_added - 1e-9,
+            "{points:#?}"
+        );
+    }
+}

@@ -3,6 +3,7 @@
 //! prints the paper-style rows and emits CSV/JSON under an output
 //! directory for plotting.
 
+pub mod adapt;
 pub mod characterization;
 pub mod evaluation;
 pub mod faults;
@@ -82,6 +83,7 @@ pub fn all_ids() -> Vec<&'static str> {
         "table1", "fig2", "fig4", "fig5", "fig6", "fig7", "fig8", "fig9", "fig11", "table2",
         "table3", "table4", "table5", "fig13", "fig14", "fig15a", "fig15b", "fig16", "fig17",
         "fig18", "fig19", "site-headroom", "region-headroom", "mixed-row", "fault-matrix",
+        "adaptive-drift",
     ]
 }
 
@@ -115,6 +117,7 @@ pub fn run_experiment(id: &str, depth: Depth, seed: u64) -> anyhow::Result<Figur
         "region-headroom" => fleet::region_headroom(depth, seed),
         "mixed-row" => mixed::mixed_row(depth, seed),
         "fault-matrix" => faults::fault_matrix(depth, seed),
+        "adaptive-drift" => adapt::adaptive_drift(depth, seed),
         other => anyhow::bail!("unknown experiment '{other}' (see `polca figure list`)"),
     })
 }
@@ -126,7 +129,7 @@ mod tests {
     #[test]
     fn registry_is_complete_and_unique() {
         let ids = all_ids();
-        assert_eq!(ids.len(), 25);
+        assert_eq!(ids.len(), 26);
         let mut dedup = ids.clone();
         dedup.sort();
         dedup.dedup();

@@ -72,6 +72,13 @@ fn main() {
                  + {candidate_evals} closed-form candidate evaluations"
             )
         }
+        polca::obs::DiagEvent::RetuneApplied { t_s, added, t1, t2 } => eprintln!(
+            "retune at {:.1}h: +{:.0}% servers, T1 {:.0}% / T2 {:.0}%",
+            t_s / 3600.0,
+            added * 100.0,
+            t1 * 100.0,
+            t2 * 100.0
+        ),
     }));
     let args = Args::from_env();
     let result = match args.subcommand.as_deref() {

@@ -306,6 +306,10 @@ pub struct RunReport {
     pub events: u64,
     /// Downsampled row power for Fig 16-style plots.
     pub power_series: Vec<(f64, f64)>,
+    /// Adaptive-controller outcome ([`crate::policy::adapt`]); `None`
+    /// whenever the controller was disabled, so reports from
+    /// controller-free runs stay bit-identical to pre-adapt builds.
+    pub adapt: Option<crate::policy::adapt::AdaptReport>,
 }
 
 impl RunReport {
@@ -389,6 +393,20 @@ impl RunReport {
                 r.reissued_commands,
             ));
         }
+        if let Some(a) = &self.adapt {
+            s.push_str(&format!(
+                " | adapt evals={} applies={} vetoes={} mean-added={:.1}% \
+                 final +{:.0}% T1/T2 {:.0}%/{:.0}% shed={}",
+                a.evals,
+                a.applies,
+                a.vetoes,
+                a.mean_added * 100.0,
+                a.final_added * 100.0,
+                a.final_t1 * 100.0,
+                a.final_t2 * 100.0,
+                a.requests_shed,
+            ));
+        }
         s
     }
 
@@ -439,7 +457,7 @@ impl RunReport {
             ("reissued_commands", Json::Num(r.reissued_commands as f64)),
             ("incidents", Json::arr(incidents)),
         ]);
-        Json::obj(vec![
+        let mut pairs = vec![
             ("power_peak", Json::Num(self.power_peak)),
             ("power_p99", Json::Num(self.power_p99)),
             ("power_mean", Json::Num(self.power_mean)),
@@ -457,7 +475,33 @@ impl RunReport {
             ("lp", lp),
             ("train", train),
             ("resilience", resilience),
-        ])
+        ];
+        if let Some(a) = &self.adapt {
+            let decisions = a.decisions.iter().map(|d| {
+                Json::obj(vec![
+                    ("t_s", Json::Num(d.t_s)),
+                    ("verdict", Json::Str(format!("{:?}", d.verdict).to_lowercase())),
+                    ("added", Json::Num(d.added)),
+                    ("t1", Json::Num(d.t1)),
+                    ("t2", Json::Num(d.t2)),
+                ])
+            });
+            pairs.push((
+                "adapt",
+                Json::obj(vec![
+                    ("evals", Json::Num(a.evals as f64)),
+                    ("applies", Json::Num(a.applies as f64)),
+                    ("vetoes", Json::Num(a.vetoes as f64)),
+                    ("mean_added", Json::Num(a.mean_added)),
+                    ("final_added", Json::Num(a.final_added)),
+                    ("final_t1", Json::Num(a.final_t1)),
+                    ("final_t2", Json::Num(a.final_t2)),
+                    ("requests_shed", Json::Num(a.requests_shed as f64)),
+                    ("decisions", Json::arr(decisions)),
+                ]),
+            ));
+        }
+        Json::obj(pairs)
     }
 }
 
@@ -625,6 +669,38 @@ mod tests {
         let s = r.summary();
         assert!(s.contains("viol=12.5s"), "{s}");
         assert!(s.contains("true-peak=1.080"), "{s}");
+    }
+
+    #[test]
+    fn adapt_clause_and_json_only_when_the_controller_ran() {
+        use crate::policy::adapt::{AdaptReport, RetuneDecision, Verdict};
+        let mut r = report_with(&[1.0], &[1.0], 0);
+        assert!(!r.summary().contains("adapt"), "{}", r.summary());
+        assert!(r.to_json().get("adapt").is_none());
+        r.adapt = Some(AdaptReport {
+            evals: 8,
+            applies: 3,
+            vetoes: 1,
+            mean_added: 0.12,
+            final_added: 0.20,
+            final_t1: 0.80,
+            final_t2: 0.89,
+            requests_shed: 5,
+            decisions: vec![RetuneDecision {
+                t_s: 21_600.0,
+                verdict: Verdict::Apply,
+                added: 0.05,
+                t1: 0.80,
+                t2: 0.89,
+            }],
+        });
+        let s = r.summary();
+        assert!(s.contains("adapt evals=8 applies=3 vetoes=1"), "{s}");
+        let j = r.to_json();
+        let a = j.get("adapt").expect("adapt block");
+        assert_eq!(a.get("applies").unwrap().as_f64(), Some(3.0));
+        let d = &a.get("decisions").unwrap().as_arr().unwrap()[0];
+        assert_eq!(d.get("verdict").unwrap().as_str(), Some("apply"));
     }
 
     #[test]

@@ -112,6 +112,25 @@ pub enum EventKind {
         /// Wall-clock (sim) seconds the iteration took.
         wall_s: f64,
     },
+    /// The adaptive controller evaluated a control window and held.
+    RetuneEval {
+        /// The window's peak normalized row-power reading.
+        peak: f64,
+    },
+    /// The adaptive controller moved a knob.
+    RetuneApply {
+        /// Active-server level after the step.
+        added: f64,
+        /// T1 after the step.
+        t1: f64,
+        /// T2 after the step.
+        t2: f64,
+    },
+    /// An eligible raise was blocked by the post-violation safety clamp.
+    RetuneVeto {
+        /// The level the clamp held the row at.
+        added: f64,
+    },
 }
 
 impl EventKind {
@@ -134,6 +153,9 @@ impl EventKind {
             EventKind::Telemetry { .. } => "telemetry",
             EventKind::TrainPhase { .. } => "train-phase",
             EventKind::TrainIter { .. } => "train-iter",
+            EventKind::RetuneEval { .. } => "retune-eval",
+            EventKind::RetuneApply { .. } => "retune-apply",
+            EventKind::RetuneVeto { .. } => "retune-veto",
         }
     }
 }
@@ -198,6 +220,17 @@ impl Event {
                 pairs.push(("job", Json::num(job as f64)));
                 pairs.push(("wall_s", Json::num(wall_s)));
             }
+            EventKind::RetuneEval { peak } => {
+                pairs.push(("peak", Json::num(peak)));
+            }
+            EventKind::RetuneApply { added, t1, t2 } => {
+                pairs.push(("added", Json::num(added)));
+                pairs.push(("t1", Json::num(t1)));
+                pairs.push(("t2", Json::num(t2)));
+            }
+            EventKind::RetuneVeto { added } => {
+                pairs.push(("added", Json::num(added)));
+            }
         }
         Json::obj(pairs)
     }
@@ -229,6 +262,16 @@ impl Event {
             }
             EventKind::TrainIter { job, wall_s } => {
                 format!("train-iter job {job} done in {wall_s:.1}s")
+            }
+            EventKind::RetuneEval { peak } => format!("retune-eval peak {peak:.3}"),
+            EventKind::RetuneApply { added, t1, t2 } => format!(
+                "retune-apply +{:.0}% T1 {:.0}% T2 {:.0}%",
+                added * 100.0,
+                t1 * 100.0,
+                t2 * 100.0
+            ),
+            EventKind::RetuneVeto { added } => {
+                format!("retune-veto held at +{:.0}%", added * 100.0)
             }
             _ => self.label().to_string(),
         }
@@ -272,6 +315,9 @@ mod tests {
             EventKind::Telemetry { reported: 0.5 },
             EventKind::TrainPhase { job: 0, phase: 0, level: 1.0 },
             EventKind::TrainIter { job: 0, wall_s: 1.0 },
+            EventKind::RetuneEval { peak: 0.5 },
+            EventKind::RetuneApply { added: 0.1, t1: 0.8, t2: 0.89 },
+            EventKind::RetuneVeto { added: 0.1 },
         ];
         let labels: std::collections::BTreeSet<&str> = kinds.iter().map(|k| k.label()).collect();
         assert_eq!(labels.len(), kinds.len());

@@ -262,6 +262,19 @@ pub enum DiagEvent {
         /// Closed-form candidate evaluations performed.
         candidate_evals: usize,
     },
+    /// The adaptive controller moved a knob (the announcement a human
+    /// watching a long run wants; the per-window detail stays in the
+    /// trace as `retune-*` events).
+    RetuneApplied {
+        /// Simulation time of the retune.
+        t_s: f64,
+        /// Active-server level after the step.
+        added: f64,
+        /// T1 after the step.
+        t1: f64,
+        /// T2 after the step.
+        t2: f64,
+    },
 }
 
 static DIAG: OnceLock<Box<dyn Fn(&DiagEvent) + Send + Sync>> = OnceLock::new();

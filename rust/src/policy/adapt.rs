@@ -1,0 +1,448 @@
+//! `policy::adapt` — the adaptive oversubscription controller that
+//! closes the provisioning→runtime loop (§5.1 "robustness and
+//! configurability", §6.2 week-one tuning made continuous).
+//!
+//! [`policy::tuner`](crate::policy::tuner) answers "which (T1, T2,
+//! added-servers) point is safe?" once, offline, on a training week.
+//! This module generalizes that search into an online process: every
+//! control window the simulator hands the controller the windowed
+//! feedback the faults subsystem already computes — budget-violation
+//! seconds, brake engagements, the window's peak normalized row power,
+//! and the high-priority SLO slack — and the controller takes at most
+//! one bounded hill-climbing step on the same grid the tuner sweeps:
+//! the active-server level moves by [`AdaptConfig::level_step`], the
+//! (T1, T2) pair moves one rung on [`LADDER`].
+//!
+//! Safety is structural, not statistical:
+//! - **Hysteresis** — a raise needs [`AdaptConfig::hold_windows`]
+//!   consecutive calm windows *and* the window peak at least
+//!   [`AdaptConfig::raise_margin`] under T2; back-offs are immediate.
+//! - **Hard safety clamp** — oversubscription is never raised within
+//!   [`AdaptConfig::cooldown_windows`] windows of a budget violation
+//!   or brake; an otherwise-eligible raise is *vetoed* (and the veto is
+//!   visible in the decision log and the `retune-veto` obs event).
+//! - **Bounded actuation** — the level is clamped to
+//!   `[min_added, max_added]` and thresholds to the tuner ladder, so a
+//!   pathological feedback stream cannot walk the row outside the grid
+//!   the offline tuner certifies.
+//!
+//! The controller is a pure state machine (no RNG, no clock, no I/O):
+//! `decide` consumes one [`WindowObs`] and returns one
+//! [`RetuneDecision`]. The simulation glue
+//! ([`crate::simulation::adapt`]) owns the windows, the actuation, and
+//! the event emission, which keeps this logic unit-testable and reusable
+//! by a live coordinator.
+
+use crate::config::SloConfig;
+
+/// The (T1, T2) rungs the controller may occupy — the same threshold
+/// pairs `polca tune` sweeps (§6.2), ordered from most conservative
+/// (caps engage earliest) to most aggressive.
+pub const LADDER: [(f64, f64); 3] = [(0.75, 0.85), (0.80, 0.89), (0.85, 0.95)];
+
+/// The rung holding the paper's operating point (T1 = 0.80, T2 = 0.89).
+pub const LADDER_DEFAULT: usize = 1;
+
+/// Controller knobs: window cadence, hysteresis depths, and actuation
+/// bounds. The scenario layer carries this verbatim in `[adapt]`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct AdaptConfig {
+    /// Control-window length in seconds (default 6 h: long enough for
+    /// violation/brake counts to be meaningful, short enough to track
+    /// diurnal drift).
+    pub window_s: f64,
+    /// Calm windows required before a raise is even eligible.
+    pub hold_windows: u32,
+    /// The hard safety clamp: no raise within this many windows of a
+    /// budget violation or brake engagement.
+    pub cooldown_windows: u32,
+    /// A raise also needs the window's peak normalized power at least
+    /// this far under the active T2 (headroom must exist, not merely
+    /// "no violation yet").
+    pub raise_margin: f64,
+    /// Active-server level step per decision (fraction of baseline).
+    pub level_step: f64,
+    /// Lower bound on the active-server level.
+    pub min_added: f64,
+    /// Upper bound on the active-server level (further clamped by the
+    /// racked hardware at actuation time).
+    pub max_added: f64,
+    /// Level the controller starts at.
+    pub initial_added: f64,
+}
+
+impl Default for AdaptConfig {
+    fn default() -> Self {
+        AdaptConfig {
+            window_s: 21_600.0,
+            hold_windows: 2,
+            cooldown_windows: 3,
+            raise_margin: 0.05,
+            level_step: 0.05,
+            min_added: 0.0,
+            max_added: 0.40,
+            initial_added: 0.0,
+        }
+    }
+}
+
+/// One control window's feedback signal, as accumulated by the
+/// simulation layer between `RetuneCheck` events.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct WindowObs {
+    /// Seconds the row spent over the power budget this window.
+    pub violation_s: f64,
+    /// Powerbrake engagements this window.
+    pub brakes: u64,
+    /// Max normalized (delayed) row-power reading this window.
+    pub peak_norm: f64,
+    /// High-priority latency slowdown this window (actual/nominal − 1),
+    /// compared against [`SloConfig::hp_p99_impact`] for SLO slack.
+    pub hp_slowdown: f64,
+}
+
+/// What the controller did with one window.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Verdict {
+    /// No knob moved (steady state, or nothing eligible).
+    Hold,
+    /// One knob moved (level or threshold rung, up or down).
+    Apply,
+    /// A raise was eligible on the hysteresis terms but blocked by the
+    /// post-violation cooldown — the hard safety clamp firing.
+    Veto,
+}
+
+/// One entry of the retune decision log: the verdict plus the knob
+/// state *after* the decision.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RetuneDecision {
+    /// Simulation time of the window boundary.
+    pub t_s: f64,
+    /// What happened.
+    pub verdict: Verdict,
+    /// Active-server level after the decision.
+    pub added: f64,
+    /// T1 after the decision.
+    pub t1: f64,
+    /// T2 after the decision.
+    pub t2: f64,
+}
+
+/// Controller outcome summary attached to
+/// [`crate::metrics::RunReport::adapt`] when the controller ran.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct AdaptReport {
+    /// Control windows evaluated.
+    pub evals: u64,
+    /// Decisions that moved a knob.
+    pub applies: u64,
+    /// Raises blocked by the safety clamp.
+    pub vetoes: u64,
+    /// Time-weighted mean active-server level over the horizon.
+    pub mean_added: f64,
+    /// Level at the end of the run.
+    pub final_added: f64,
+    /// T1 at the end of the run.
+    pub final_t1: f64,
+    /// T2 at the end of the run.
+    pub final_t2: f64,
+    /// Arrivals shed because they landed on a deactivated server.
+    pub requests_shed: u64,
+    /// The full decision sequence, in window order.
+    pub decisions: Vec<RetuneDecision>,
+}
+
+/// The pure controller state machine. See the module docs for the
+/// decision procedure; [`AdaptController::decide`] is the whole API.
+#[derive(Debug, Clone, PartialEq)]
+pub struct AdaptController {
+    /// The knob set this controller was built with.
+    pub cfg: AdaptConfig,
+    level: f64,
+    ladder_idx: usize,
+    calm: u32,
+    windows_since_violation: u32,
+}
+
+impl AdaptController {
+    /// A controller at the config's initial level on the paper rung.
+    pub fn new(cfg: AdaptConfig) -> Self {
+        let level = cfg.initial_added.clamp(cfg.min_added, cfg.max_added);
+        AdaptController {
+            cfg,
+            level,
+            ladder_idx: LADDER_DEFAULT,
+            calm: 0,
+            // "No violation ever seen": saturated so the first raise is
+            // gated only by hold_windows, not a phantom cooldown.
+            windows_since_violation: u32::MAX,
+        }
+    }
+
+    /// Current active-server level (fraction of baseline).
+    pub fn level(&self) -> f64 {
+        self.level
+    }
+
+    /// Current (T1, T2) rung.
+    pub fn thresholds(&self) -> (f64, f64) {
+        LADDER[self.ladder_idx]
+    }
+
+    /// Consume one window of feedback and take at most one knob step.
+    /// Pure and deterministic: the same observation sequence always
+    /// yields the same decision sequence.
+    pub fn decide(&mut self, t_s: f64, obs: &WindowObs, slo: &SloConfig) -> RetuneDecision {
+        let verdict = self.step(obs, slo);
+        let (t1, t2) = self.thresholds();
+        RetuneDecision { t_s, verdict, added: self.level, t1, t2 }
+    }
+
+    fn step(&mut self, obs: &WindowObs, slo: &SloConfig) -> Verdict {
+        // 1. Unsafe window: violation or brake. Back off immediately
+        //    (level first — it sheds load; thresholds second) and arm
+        //    the cooldown clamp.
+        if obs.violation_s > 0.0 || obs.brakes > 0 {
+            self.windows_since_violation = 0;
+            self.calm = 0;
+            return if self.step_down() { Verdict::Apply } else { Verdict::Hold };
+        }
+        self.windows_since_violation = self.windows_since_violation.saturating_add(1);
+
+        // 2. Power-safe but the HP SLO is breached: the row is
+        //    over-packed for its latency budget — back the level off,
+        //    but no cooldown (this is an SLO signal, not a power one).
+        if obs.hp_slowdown > slo.hp_p99_impact {
+            self.calm = 0;
+            return if self.step_down_level() { Verdict::Apply } else { Verdict::Hold };
+        }
+
+        // 3. Calm window. A raise needs consecutive calm (hysteresis),
+        //    real headroom under the active T2, and an available knob;
+        //    the cooldown clamp can still veto it.
+        self.calm = self.calm.saturating_add(1);
+        let (_, t2) = self.thresholds();
+        let headroom = obs.peak_norm < t2 - self.cfg.raise_margin;
+        if self.calm >= self.cfg.hold_windows && headroom && self.can_raise() {
+            if self.windows_since_violation < self.cfg.cooldown_windows {
+                return Verdict::Veto;
+            }
+            self.raise();
+            // A raise spends the calm streak: the next one needs a
+            // fresh hold_windows of evidence at the new operating point.
+            self.calm = 0;
+            return Verdict::Apply;
+        }
+        Verdict::Hold
+    }
+
+    // -- knob mechanics ---------------------------------------------------
+
+    fn can_raise(&self) -> bool {
+        self.ladder_idx < LADDER_DEFAULT
+            || self.level < self.cfg.max_added - 1e-12
+            || self.ladder_idx + 1 < LADDER.len()
+    }
+
+    /// One raise step, in priority order: restore a backed-off threshold
+    /// rung toward the paper default, then grow the level, then (level
+    /// maxed) take the aggressive rung.
+    fn raise(&mut self) {
+        if self.ladder_idx < LADDER_DEFAULT {
+            self.ladder_idx += 1;
+        } else if self.level < self.cfg.max_added - 1e-12 {
+            self.level = (self.level + self.cfg.level_step).min(self.cfg.max_added);
+        } else if self.ladder_idx + 1 < LADDER.len() {
+            self.ladder_idx += 1;
+        }
+    }
+
+    /// One back-off step: level first, threshold rung once the level is
+    /// floored. Returns whether anything moved.
+    fn step_down(&mut self) -> bool {
+        if self.step_down_level() {
+            true
+        } else if self.ladder_idx > 0 {
+            self.ladder_idx -= 1;
+            true
+        } else {
+            false
+        }
+    }
+
+    fn step_down_level(&mut self) -> bool {
+        if self.level > self.cfg.min_added + 1e-12 {
+            self.level = (self.level - self.cfg.level_step).max(self.cfg.min_added);
+            true
+        } else {
+            false
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn calm(peak: f64) -> WindowObs {
+        WindowObs { violation_s: 0.0, brakes: 0, peak_norm: peak, hp_slowdown: 0.0 }
+    }
+
+    fn violated() -> WindowObs {
+        WindowObs { violation_s: 30.0, brakes: 1, peak_norm: 1.01, hp_slowdown: 0.0 }
+    }
+
+    fn ctl() -> AdaptController {
+        AdaptController::new(AdaptConfig::default())
+    }
+
+    #[test]
+    fn starts_on_the_paper_rung_at_the_initial_level() {
+        let c = ctl();
+        assert_eq!(c.thresholds(), (0.80, 0.89));
+        assert_eq!(c.level(), 0.0);
+        let mut c2 = AdaptController::new(AdaptConfig {
+            initial_added: 0.9, // clamped into [min, max]
+            ..AdaptConfig::default()
+        });
+        assert_eq!(c2.level(), 0.40);
+        // Level maxed: the first raise takes the aggressive rung.
+        let slo = SloConfig::default();
+        c2.decide(0.0, &calm(0.5), &slo);
+        let d = c2.decide(1.0, &calm(0.5), &slo);
+        assert_eq!(d.verdict, Verdict::Apply);
+        assert_eq!((d.t1, d.t2), (0.85, 0.95));
+    }
+
+    #[test]
+    fn raise_needs_hold_windows_of_calm() {
+        let mut c = ctl();
+        let slo = SloConfig::default();
+        // First calm window: calm streak 1 < hold_windows 2 — hold.
+        assert_eq!(c.decide(0.0, &calm(0.5), &slo).verdict, Verdict::Hold);
+        // Second: eligible, no violation ever — apply (level +5%).
+        let d = c.decide(1.0, &calm(0.5), &slo);
+        assert_eq!(d.verdict, Verdict::Apply);
+        assert!((d.added - 0.05).abs() < 1e-12);
+        // The raise spent the streak: the next window holds again.
+        assert_eq!(c.decide(2.0, &calm(0.5), &slo).verdict, Verdict::Hold);
+    }
+
+    #[test]
+    fn no_raise_without_headroom_under_t2() {
+        let mut c = ctl();
+        let slo = SloConfig::default();
+        // Peak within raise_margin of T2=0.89: calm, but never a raise.
+        for i in 0..10 {
+            assert_eq!(c.decide(i as f64, &calm(0.87), &slo).verdict, Verdict::Hold);
+        }
+        assert_eq!(c.level(), 0.0);
+    }
+
+    #[test]
+    fn violation_backs_off_and_clamps_raises_for_cooldown_windows() {
+        let cfg = AdaptConfig { initial_added: 0.10, ..AdaptConfig::default() };
+        let mut c = AdaptController::new(cfg);
+        let slo = SloConfig::default();
+        // Violation window: immediate back-off 0.10 -> 0.05.
+        let d = c.decide(0.0, &violated(), &slo);
+        assert_eq!(d.verdict, Verdict::Apply);
+        assert!((d.added - 0.05).abs() < 1e-12);
+        // Calm again; raise becomes hysteresis-eligible on window 2 but
+        // the safety clamp vetoes until cooldown_windows (3) have passed.
+        assert_eq!(c.decide(1.0, &calm(0.5), &slo).verdict, Verdict::Hold);
+        assert_eq!(c.decide(2.0, &calm(0.5), &slo).verdict, Verdict::Veto);
+        // Third calm window: windows_since_violation reaches 3 — allowed.
+        let d = c.decide(3.0, &calm(0.5), &slo);
+        assert_eq!(d.verdict, Verdict::Apply);
+        assert!((d.added - 0.10).abs() < 1e-12);
+    }
+
+    #[test]
+    fn repeated_violations_walk_down_the_ladder_after_the_level_floors() {
+        let cfg = AdaptConfig { initial_added: 0.05, ..AdaptConfig::default() };
+        let mut c = AdaptController::new(cfg);
+        let slo = SloConfig::default();
+        c.decide(0.0, &violated(), &slo); // level 0.05 -> 0.00
+        assert_eq!(c.thresholds(), (0.80, 0.89));
+        let d = c.decide(1.0, &violated(), &slo); // level floored: rung down
+        assert_eq!(d.verdict, Verdict::Apply);
+        assert_eq!((d.t1, d.t2), (0.75, 0.85));
+        // Fully backed off: further violations can only hold.
+        assert_eq!(c.decide(2.0, &violated(), &slo).verdict, Verdict::Hold);
+        // Recovery restores the rung toward the default before growing
+        // the level again: calm, then a clamped (vetoed) raise, then
+        // the rung restore once the cooldown has passed.
+        assert_eq!(c.decide(3.0, &calm(0.5), &slo).verdict, Verdict::Hold);
+        assert_eq!(c.decide(4.0, &calm(0.5), &slo).verdict, Verdict::Veto);
+        let d = c.decide(5.0, &calm(0.5), &slo);
+        assert_eq!(d.verdict, Verdict::Apply);
+        assert_eq!((d.t1, d.t2), (0.80, 0.89));
+        assert_eq!(d.added, 0.0, "rung restore must not touch the level");
+    }
+
+    #[test]
+    fn hp_slo_breach_sheds_level_without_arming_the_cooldown() {
+        let cfg = AdaptConfig { initial_added: 0.10, ..AdaptConfig::default() };
+        let mut c = AdaptController::new(cfg);
+        let slo = SloConfig::default();
+        let slow = WindowObs { hp_slowdown: 0.10, peak_norm: 0.5, ..WindowObs::default() };
+        let d = c.decide(0.0, &slow, &slo);
+        assert_eq!(d.verdict, Verdict::Apply);
+        assert!((d.added - 0.05).abs() < 1e-12);
+        // No power violation occurred, so the next eligible raise is
+        // not vetoed (only held for the hysteresis streak).
+        assert_eq!(c.decide(1.0, &calm(0.5), &slo).verdict, Verdict::Hold);
+        assert_eq!(c.decide(2.0, &calm(0.5), &slo).verdict, Verdict::Apply);
+    }
+
+    #[test]
+    fn level_and_thresholds_stay_inside_the_grid_on_any_feedback() {
+        // Property: an adversarial observation stream can never walk the
+        // controller outside [min_added, max_added] x LADDER.
+        let slo = SloConfig::default();
+        crate::testing::check_default(
+            "adapt-bounded",
+            |r| {
+                (0..40)
+                    .map(|_| WindowObs {
+                        violation_s: if r.bool(0.3) { r.range_f64(0.0, 60.0) } else { 0.0 },
+                        brakes: if r.bool(0.2) { 1 } else { 0 },
+                        peak_norm: r.range_f64(0.3, 1.05),
+                        hp_slowdown: r.range_f64(0.0, 0.2),
+                    })
+                    .collect::<Vec<_>>()
+            },
+            |seq| {
+                let mut c = ctl();
+                for (i, obs) in seq.iter().enumerate() {
+                    let d = c.decide(i as f64, obs, &slo);
+                    if !(0.0..=0.40).contains(&d.added) {
+                        return Err(format!("level {} escaped the grid", d.added));
+                    }
+                    if !LADDER.contains(&(d.t1, d.t2)) {
+                        return Err(format!("thresholds ({}, {}) off the ladder", d.t1, d.t2));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn decision_sequence_is_a_pure_function_of_the_observation_sequence() {
+        let slo = SloConfig::default();
+        let seq: Vec<WindowObs> = (0..30)
+            .map(|i| if i % 7 == 3 { violated() } else { calm(0.4 + 0.01 * i as f64) })
+            .collect();
+        let run = || {
+            let mut c = ctl();
+            seq.iter()
+                .enumerate()
+                .map(|(i, o)| c.decide(i as f64, o, &slo))
+                .collect::<Vec<_>>()
+        };
+        assert_eq!(run(), run());
+    }
+}

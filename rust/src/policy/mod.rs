@@ -1,9 +1,12 @@
 //! Power-management policies: POLCA's dual-threshold Algorithm 1, the
-//! three baselines of §6.3 (1-Thresh-Low-Pri, 1-Thresh-All, No-cap), and
-//! the week-one threshold tuner of §6.2.
+//! three baselines of §6.3 (1-Thresh-Low-Pri, 1-Thresh-All, No-cap), the
+//! week-one threshold tuner of §6.2, and the adaptive outer-loop
+//! controller that keeps retuning those knobs online (§5.1).
 
+pub mod adapt;
 pub mod engine;
 pub mod tuner;
 
+pub use adapt::{AdaptConfig, AdaptController, AdaptReport, RetuneDecision, Verdict, WindowObs};
 pub use engine::{Action, PolicyEngine, PolicyKind};
 pub use tuner::{tune_thresholds, TunerOutcome};

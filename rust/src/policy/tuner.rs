@@ -113,19 +113,11 @@ pub fn tune_thresholds_exec(
 #[cfg(test)]
 mod tests {
     use super::*;
-
-    fn quick_base() -> SimConfig {
-        let mut cfg = SimConfig::default();
-        cfg.weeks = 0.05;
-        cfg.exp.row.num_servers = 12;
-        cfg.deployed_servers = 12;
-        cfg.exp.seed = 9;
-        cfg
-    }
+    use crate::testing::{assert_bit_identical, base_sim_config};
 
     #[test]
     fn zero_added_meets_slo() {
-        let base = quick_base();
+        let base = base_sim_config(12, 0.05, 9);
         let p = evaluate_point(&base, 0.80, 0.89, 0.0, &SloConfig::default());
         assert!(p.meets_slo, "{p:?}");
         assert_eq!(p.brakes, 0);
@@ -133,7 +125,7 @@ mod tests {
 
     #[test]
     fn sweep_returns_grid_and_best() {
-        let base = quick_base();
+        let base = base_sim_config(12, 0.05, 9);
         let out = tune_thresholds(
             &base,
             &[(0.80, 0.89)],
@@ -148,13 +140,57 @@ mod tests {
 
     #[test]
     fn parallel_sweep_is_bit_identical_to_serial() {
-        let base = quick_base();
+        let base = base_sim_config(12, 0.05, 9);
         let combos = [(0.80, 0.89)];
         let added = [0.0, 0.25];
         let slo = SloConfig::default();
         let par = tune_thresholds_exec(&base, &combos, &added, &slo, &ExecConfig::default());
         let ser = tune_thresholds_exec(&base, &combos, &added, &slo, &ExecConfig::serial());
-        assert_eq!(format!("{:?}", par.points), format!("{:?}", ser.points));
+        assert_bit_identical(&par.points, &ser.points, "tuner grid");
         assert_eq!(par.best, ser.best);
+    }
+
+    #[test]
+    fn best_point_prefers_highest_added_and_breaks_ties_in_sweep_order() {
+        let base = base_sim_config(12, 0.05, 9);
+        let combos = [(0.75, 0.85), (0.80, 0.89)];
+        let slo = SloConfig::default();
+        for exec in [ExecConfig::default(), ExecConfig::serial()] {
+            // Two rungs over a single level: every point ties on
+            // added_frac, so the winner must be the first SLO-meeting
+            // point in sweep order, regardless of executor scheduling
+            // (the strict `>` in the selection scan never lets a later
+            // tie displace an earlier winner).
+            let out = tune_thresholds_exec(&base, &combos, &[0.0], &slo, &exec);
+            let first =
+                out.points.iter().find(|p| p.meets_slo).expect("zero added must meet SLO");
+            assert_eq!(out.best, Some((first.t1, first.t2, first.added_frac)));
+            assert_eq!(out.best.unwrap(), (0.75, 0.85, 0.0), "tie must go to sweep order");
+        }
+        // And across levels the highest SLO-meeting added_frac wins:
+        // recompute the expected winner with an independent fold over
+        // the returned grid.
+        let out = tune_thresholds_exec(
+            &base,
+            &combos,
+            &[0.0, 0.10],
+            &slo,
+            &ExecConfig::default(),
+        );
+        let expected = out.points.iter().filter(|p| p.meets_slo).fold(
+            None::<(f64, f64, f64)>,
+            |acc, p| match acc {
+                Some((_, _, a)) if p.added_frac <= a => acc,
+                _ => Some((p.t1, p.t2, p.added_frac)),
+            },
+        );
+        assert_eq!(out.best, expected);
+        let max_ok = out
+            .points
+            .iter()
+            .filter(|p| p.meets_slo)
+            .map(|p| p.added_frac)
+            .fold(f64::NEG_INFINITY, f64::max);
+        assert_eq!(out.best.unwrap().2, max_ok, "best must claim the highest safe level");
     }
 }

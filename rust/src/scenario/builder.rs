@@ -165,6 +165,51 @@ impl ScenarioBuilder {
         self
     }
 
+    /// Enable the adaptive oversubscription controller
+    /// ([`crate::policy::adapt`]) with this retune window. Composes
+    /// with [`Self::adapt_levels`] / [`Self::adapt_pacing`] in any
+    /// order.
+    pub fn adaptive(mut self, window_s: f64) -> Self {
+        let mut a = self.sc.adapt.take().unwrap_or_default();
+        a.window_s = window_s;
+        self.sc.adapt = Some(a);
+        self
+    }
+
+    /// Set the controller's added-level range (floor / starting point /
+    /// ceiling, as fractions of the baseline row).
+    pub fn adapt_levels(mut self, min: f64, initial: f64, max: f64) -> Self {
+        let mut a = self.sc.adapt.take().unwrap_or_default();
+        a.min_added = min;
+        a.initial_added = initial;
+        a.max_added = max;
+        self.sc.adapt = Some(a);
+        self
+    }
+
+    /// Set the controller's hysteresis (calm windows required before a
+    /// raise) and safety clamp (windows after a violation during which
+    /// raises are vetoed).
+    pub fn adapt_pacing(mut self, hold_windows: u32, cooldown_windows: u32) -> Self {
+        let mut a = self.sc.adapt.take().unwrap_or_default();
+        a.hold_windows = hold_windows;
+        a.cooldown_windows = cooldown_windows;
+        self.sc.adapt = Some(a);
+        self
+    }
+
+    /// Apply long-horizon demand drift to every arrival stream: a
+    /// linear growth ramp per week plus a sinusoidal seasonal
+    /// modulation with the given period.
+    pub fn drift(mut self, growth_per_week: f64, season_amp: f64, period_weeks: f64) -> Self {
+        self.sc.drift = Some(crate::workload::arrivals::DriftConfig {
+            growth_per_week,
+            season_amp,
+            season_period_weeks: period_weeks,
+        });
+        self
+    }
+
     /// Make this a site scenario over the demo topology of `clusters`
     /// clusters (dispatches to the fleet planner).
     pub fn site(mut self, clusters: usize) -> Self {
@@ -277,6 +322,27 @@ mod tests {
         assert_eq!(sc.training.servers_per_job, 3);
         assert_eq!(sc.faults, FaultSpec::Plan(plan));
         assert_eq!(sc.brake_escalation_s, Some(60.0));
+        assert!(sc.validate().is_ok());
+    }
+
+    #[test]
+    fn adapt_setters_compose_without_clobbering() {
+        let sc = Scenario::builder("a")
+            .added(0.40)
+            .adapt_levels(0.0, 0.10, 0.40)
+            .adaptive(1800.0)
+            .adapt_pacing(3, 4)
+            .drift(0.05, 0.2, 4.0)
+            .build();
+        let a = sc.adapt.expect("adaptive() must create the section");
+        assert_eq!(a.window_s, 1800.0);
+        assert_eq!((a.min_added, a.initial_added, a.max_added), (0.0, 0.10, 0.40));
+        assert_eq!((a.hold_windows, a.cooldown_windows), (3, 4));
+        let dr = sc.drift.unwrap();
+        assert_eq!(
+            (dr.growth_per_week, dr.season_amp, dr.season_period_weeks),
+            (0.05, 0.2, 4.0)
+        );
         assert!(sc.validate().is_ok());
     }
 

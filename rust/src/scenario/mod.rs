@@ -55,10 +55,12 @@ use crate::fleet::site::SiteSpec;
 use crate::metrics::{ImpactSummary, ResilienceMetrics, RunReport};
 use crate::obs::export::{render_timeline, IncidentTimeline};
 use crate::obs::Observer;
+use crate::policy::adapt::AdaptConfig;
 use crate::policy::engine::PolicyKind;
 use crate::simulation::{
     power_scale_for_row, run_with_impact, run_with_impact_observed, MixedRowConfig, SimConfig,
 };
+use crate::workload::arrivals::DriftConfig;
 
 /// The training-colocation part of a scenario (flows into
 /// [`MixedRowConfig`]; the iteration waveform is the canonical
@@ -202,6 +204,12 @@ pub struct Scenario {
     pub faults: FaultSpec,
     /// Policy-engine containment escalation (`None` = paper behavior).
     pub brake_escalation_s: Option<f64>,
+    /// Adaptive oversubscription controller ([`crate::policy::adapt`]);
+    /// `None` = the static provisioning every other scenario uses.
+    pub adapt: Option<AdaptConfig>,
+    /// Long-horizon demand drift (growth ramp + seasonal modulation)
+    /// on every arrival stream; `None` = the paper's stationary diurnal.
+    pub drift: Option<DriftConfig>,
     /// Site topology; `None` = a single row.
     pub site: Option<SiteSection>,
     /// Region topology; `None` = a single row or site. Mutually
@@ -227,6 +235,8 @@ impl Default for Scenario {
             training: TrainingMix::default(),
             faults: FaultSpec::None,
             brake_escalation_s: None,
+            adapt: None,
+            drift: None,
             site: None,
             region: None,
         }
@@ -292,6 +302,8 @@ impl Scenario {
         cfg.workload_power_mult = self.workload_power_mult;
         cfg.peak_utilization = self.peak_utilization;
         cfg.brake_escalation_s = self.brake_escalation_s;
+        cfg.adapt = self.adapt.clone();
+        cfg.drift = self.drift.clone();
         if self.training.fraction > 0.0 {
             cfg.mixed = Some(MixedRowConfig {
                 training_fraction: self.training.fraction,
@@ -432,6 +444,72 @@ impl Scenario {
         if let Err(e) = self.fault_plan(self.horizon_s()) {
             problems.push(format!("fault spec: {e:#}"));
         }
+        if let Some(a) = &self.adapt {
+            if !(a.window_s > 0.0) {
+                problems.push(format!("adapt.window_s must be > 0 (got {})", a.window_s));
+            }
+            if !(a.level_step > 0.0) {
+                problems.push(format!("adapt.level_step must be > 0 (got {})", a.level_step));
+            }
+            if a.min_added < 0.0
+                || a.min_added > a.initial_added
+                || a.initial_added > a.max_added
+            {
+                problems.push(format!(
+                    "adapt levels need 0 <= min <= initial <= max (got {} / {} / {})",
+                    a.min_added, a.initial_added, a.max_added
+                ));
+            }
+            if a.max_added > self.added_frac + 1e-9 {
+                problems.push(format!(
+                    "adapt.max_added ({}) exceeds the racked oversubscription \
+                     (row.added = {}) — the controller cannot activate servers \
+                     that are not deployed",
+                    a.max_added, self.added_frac
+                ));
+            }
+            if self.training.fraction > 0.0 {
+                problems.push(
+                    "adapt cannot be combined with training colocation (the active-server \
+                     actuation only sheds inference arrivals)"
+                        .into(),
+                );
+            }
+            if self.site.is_some() || self.region.is_some() {
+                problems.push(
+                    "adapt is a row-level controller; site/region planning already \
+                     searches the added level offline"
+                        .into(),
+                );
+            }
+        }
+        if let Some(dr) = &self.drift {
+            if !(dr.season_period_weeks > 0.0) {
+                problems.push(format!(
+                    "drift.season_period_weeks must be > 0 (got {})",
+                    dr.season_period_weeks
+                ));
+            }
+            if !(dr.growth_per_week > -1.0) {
+                problems.push(format!(
+                    "drift.growth_per_week must be > -1 (got {})",
+                    dr.growth_per_week
+                ));
+            }
+            if !(dr.season_amp.abs() < 1.0) {
+                problems.push(format!(
+                    "drift.season_amp must be in (-1, 1) (got {})",
+                    dr.season_amp
+                ));
+            }
+            if self.site.is_some() || self.region.is_some() {
+                problems.push(
+                    "drift is a row-level workload knob; the site/region planners \
+                     do not thread it through"
+                        .into(),
+                );
+            }
+        }
         if let Some(site) = &self.site {
             if site.clusters == 0 {
                 problems.push("site.clusters must be > 0".into());
@@ -500,6 +578,23 @@ impl Scenario {
         } else {
             String::new()
         };
+        let adapt = match &self.adapt {
+            Some(a) => format!(
+                ", adaptive (window {:.1}h, +{:.0}%..+{:.0}%)",
+                a.window_s / 3600.0,
+                a.min_added * 100.0,
+                a.max_added * 100.0
+            ),
+            None => String::new(),
+        };
+        let drift = match &self.drift {
+            Some(dr) => format!(
+                ", drift {:+.0}%/wk ±{:.0}%",
+                dr.growth_per_week * 100.0,
+                dr.season_amp * 100.0
+            ),
+            None => String::new(),
+        };
         if let Some(r) = &self.region {
             return format!(
                 "scenario '{}': plan a {}-site region ({} clusters/site, grid budget \
@@ -527,7 +622,7 @@ impl Scenario {
             ),
             None => format!(
                 "scenario '{}': {} deployed on a {}-server budget (+{:.0}%) under {} \
-                 for {:.2} weeks{}{} (seed {})",
+                 for {:.2} weeks{}{}{}{} (seed {})",
                 self.name,
                 self.deployed_servers(),
                 self.servers(),
@@ -536,6 +631,8 @@ impl Scenario {
                 self.weeks,
                 training,
                 faults,
+                adapt,
+                drift,
                 self.exp.seed
             ),
         }

@@ -54,6 +54,12 @@ fn registry() -> Vec<Preset> {
             build: h100_row,
         },
         Preset {
+            name: "adaptive-row",
+            description: "The provisioning→runtime loop closed: a +40%-racked row under the \
+                          adaptive controller, demand growing 2.5%/week with a seasonal swing",
+            build: adaptive_row,
+        },
+        Preset {
             name: "cascade-faults",
             description: "Telemetry freeze → OOB storm → feed loss cascading over one \
                           +30% row, containment escalation armed (docs/RELIABILITY.md)",
@@ -135,6 +141,21 @@ fn h100_row() -> Scenario {
         .weeks(0.25)
         .seed(1)
         .sku("hgx-h100")
+        .build()
+}
+
+fn adaptive_row() -> Scenario {
+    Scenario::builder("adaptive-row")
+        .description("Adaptive oversubscription under demand growth (§5.1/§6.2 online)")
+        .policy(PolicyKind::Polca)
+        .servers(16)
+        .added(0.40)
+        .weeks(2.0)
+        .seed(1)
+        .adaptive(21_600.0)
+        .adapt_levels(0.0, 0.10, 0.40)
+        .adapt_pacing(2, 3)
+        .drift(0.025, 0.15, 4.0)
         .build()
 }
 
@@ -274,5 +295,9 @@ mod tests {
         assert!(matches!(preset("cascade-faults").unwrap().faults, FaultSpec::Named(_)));
         assert_eq!(preset("training-row").unwrap().training.fraction, 1.0);
         assert_eq!(preset("h100-row").unwrap().sku.as_deref(), Some("hgx-h100"));
+        let adaptive = preset("adaptive-row").unwrap();
+        assert!(adaptive.adapt.is_some() && adaptive.drift.is_some());
+        // The controller's ceiling must fit inside what is racked.
+        assert!(adaptive.adapt.unwrap().max_added <= adaptive.added_frac);
     }
 }

@@ -22,6 +22,8 @@
 //! [slo]        # Table-5 bounds
 //! [training]   # fraction, servers_per_job, stagger_s
 //! [faults]     # scenario = "name"  OR  events = [["feed-loss", start, dur, frac], ...]
+//! [adapt]      # window_s, hold/cooldown windows, raise_margin, level_step, min/initial/max added
+//! [drift]      # growth_per_week, season_amp, season_period_weeks
 //! [site]       # clusters, max_added_pct, step_pct, parallel, sample_s, containment bounds
 //! [region]     # sites, clusters_per_site, grid_budget_frac, search knobs, validate_sites
 //! ```
@@ -106,6 +108,23 @@ impl Scenario {
             }
         }
 
+        if let Some(a) = &self.adapt {
+            doc.set("adapt", "window_s", TomlValue::Float(a.window_s));
+            doc.set("adapt", "hold_windows", TomlValue::Int(a.hold_windows as i64));
+            doc.set("adapt", "cooldown_windows", TomlValue::Int(a.cooldown_windows as i64));
+            doc.set("adapt", "raise_margin", TomlValue::Float(a.raise_margin));
+            doc.set("adapt", "level_step", TomlValue::Float(a.level_step));
+            doc.set("adapt", "min_added", TomlValue::Float(a.min_added));
+            doc.set("adapt", "max_added", TomlValue::Float(a.max_added));
+            doc.set("adapt", "initial_added", TomlValue::Float(a.initial_added));
+        }
+
+        if let Some(dr) = &self.drift {
+            doc.set("drift", "growth_per_week", TomlValue::Float(dr.growth_per_week));
+            doc.set("drift", "season_amp", TomlValue::Float(dr.season_amp));
+            doc.set("drift", "season_period_weeks", TomlValue::Float(dr.season_period_weeks));
+        }
+
         if let Some(site) = &self.site {
             doc.set("site", "clusters", TomlValue::Int(site.clusters as i64));
             doc.set("site", "max_added_pct", TomlValue::Int(site.max_added_pct as i64));
@@ -161,6 +180,38 @@ impl Scenario {
             FaultSpec::Plan(FaultPlan { events })
         } else {
             FaultSpec::None
+        };
+        let adapt = if doc.sections.contains_key("adapt") {
+            let da = crate::policy::adapt::AdaptConfig::default();
+            Some(crate::policy::adapt::AdaptConfig {
+                window_s: doc.f64_or("adapt", "window_s", da.window_s),
+                hold_windows: doc.usize_or("adapt", "hold_windows", da.hold_windows as usize)
+                    as u32,
+                cooldown_windows: doc
+                    .usize_or("adapt", "cooldown_windows", da.cooldown_windows as usize)
+                    as u32,
+                raise_margin: doc.f64_or("adapt", "raise_margin", da.raise_margin),
+                level_step: doc.f64_or("adapt", "level_step", da.level_step),
+                min_added: doc.f64_or("adapt", "min_added", da.min_added),
+                max_added: doc.f64_or("adapt", "max_added", da.max_added),
+                initial_added: doc.f64_or("adapt", "initial_added", da.initial_added),
+            })
+        } else {
+            None
+        };
+        let drift = if doc.sections.contains_key("drift") {
+            let dd = crate::workload::arrivals::DriftConfig::default();
+            Some(crate::workload::arrivals::DriftConfig {
+                growth_per_week: doc.f64_or("drift", "growth_per_week", dd.growth_per_week),
+                season_amp: doc.f64_or("drift", "season_amp", dd.season_amp),
+                season_period_weeks: doc.f64_or(
+                    "drift",
+                    "season_period_weeks",
+                    dd.season_period_weeks,
+                ),
+            })
+        } else {
+            None
         };
         let site = if doc.sections.contains_key("site") {
             let ds = SiteSection::default();
@@ -233,6 +284,8 @@ impl Scenario {
             },
             faults,
             brake_escalation_s: doc.get("policy", "escalate_s").and_then(|v| v.as_f64()),
+            adapt,
+            drift,
             site,
             region,
         })
@@ -363,6 +416,28 @@ mod tests {
         assert_eq!(reparsed, doc, "document level:\n{text}");
         let back = Scenario::from_toml(&reparsed).unwrap();
         assert_eq!(back, sc, "value level:\n{text}");
+    }
+
+    #[test]
+    fn adapt_and_drift_round_trip() {
+        let sc = Scenario::builder("adaptive")
+            .added(0.40)
+            .weeks(4.0)
+            .adaptive(1800.5)
+            .adapt_levels(0.05, 0.10, 0.35)
+            .adapt_pacing(3, 5)
+            .drift(0.025, 0.15, 4.5)
+            .build();
+        let back = Scenario::parse(&sc.to_toml_string()).unwrap();
+        assert_eq!(back, sc);
+        // Sparse [adapt] sections fill controller defaults.
+        let sparse = Scenario::parse("[adapt]\nwindow_s = 900.0").unwrap();
+        let a = sparse.adapt.unwrap();
+        assert_eq!(a.window_s, 900.0);
+        assert_eq!(a.hold_windows, crate::policy::adapt::AdaptConfig::default().hold_windows);
+        // ... and no [adapt]/[drift] section means no controller at all.
+        assert!(Scenario::parse("name = \"x\"").unwrap().adapt.is_none());
+        assert!(Scenario::parse("name = \"x\"").unwrap().drift.is_none());
     }
 
     #[test]

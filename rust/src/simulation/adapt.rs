@@ -1,0 +1,171 @@
+//! Adaptive-control layer: the outer loop that retunes the row online.
+//!
+//! Owns the [`AdaptController`] state machine plus the per-window
+//! feedback accumulators it consumes — the peak normalized meter
+//! reading (fed from [`super::control`]'s telemetry hook), the HP
+//! latency slowdown (fed from the request-completion path in
+//! [`super::servers`]), and deltas of the ground-truth violation
+//! integral and brake count snapshotted at each window boundary.
+//!
+//! The layer is RNG-free and entirely event-driven: a single
+//! `Ev::RetuneCheck` rescheduled every `window_s` closes the window,
+//! asks the controller for a decision, and actuates it by writing the
+//! (T1, T2) rung into the live policy engine and resizing the *active*
+//! prefix of the deployed row. Inactive servers stay racked (arrivals
+//! are still scheduled and sampled, preserving every random stream
+//! bit-for-bit) but their requests are shed to the rest of the fleet.
+//!
+//! With [`SimConfig::adapt`](super::SimConfig) unset, no `RetuneCheck`
+//! is ever scheduled and none of the hooks fire — the run is
+//! bit-identical to a pre-adapt build (the same contract as
+//! `mixed`/`faults`, pinned by `tests/integration_adapt.rs`).
+
+use crate::obs::{emit_diag, DiagEvent, EventKind, Observer};
+use crate::policy::adapt::{AdaptConfig, AdaptController, AdaptReport, Verdict, WindowObs};
+use crate::sim::{secs, to_secs};
+
+use super::core::{Ev, Sim};
+use super::SimConfig;
+
+/// Controller state, window accumulators, and actuation bookkeeping.
+#[derive(Debug, Clone)]
+pub(crate) struct AdaptLayer {
+    pub(crate) ctl: AdaptController,
+    /// Provisioned baseline (what the breaker was sized for).
+    pub(crate) num_servers: usize,
+    /// Servers physically racked; the hard ceiling on actuation.
+    pub(crate) deployed: usize,
+    /// Servers currently taking traffic (the actuated level).
+    pub(crate) active_servers: usize,
+    /// Peak normalized meter reading seen this window.
+    pub(crate) win_peak_norm: f64,
+    /// HP latency sums this window (actual vs nominal), for slowdown.
+    pub(crate) win_hp_actual: f64,
+    pub(crate) win_hp_nominal: f64,
+    /// Run-total snapshots taken at the last window boundary, so each
+    /// window sees only its own delta.
+    pub(crate) last_violation_s: f64,
+    pub(crate) last_brakes: u64,
+    /// Time-weighted level integral (for the mean-added-level metric).
+    pub(crate) level_time_acc: f64,
+    pub(crate) last_level: f64,
+    pub(crate) last_level_change_s: f64,
+    pub(crate) report: AdaptReport,
+}
+
+impl AdaptLayer {
+    /// Build the layer from the scenario's controller config, clamping
+    /// the actuation range to what is physically racked: the controller
+    /// can never activate servers the row does not have.
+    pub(crate) fn new(a: &AdaptConfig, cfg: &SimConfig) -> AdaptLayer {
+        let num = cfg.exp.row.num_servers.max(1);
+        let deployed = cfg.deployed_servers.max(num);
+        let racked_headroom = deployed as f64 / num as f64 - 1.0;
+        let mut ctl_cfg = a.clone();
+        ctl_cfg.max_added = ctl_cfg.max_added.min(racked_headroom);
+        ctl_cfg.min_added = ctl_cfg.min_added.min(ctl_cfg.max_added);
+        let ctl = AdaptController::new(ctl_cfg);
+        let level = ctl.level();
+        AdaptLayer {
+            active_servers: active_for(num, deployed, level),
+            ctl,
+            num_servers: num,
+            deployed,
+            win_peak_norm: 0.0,
+            win_hp_actual: 0.0,
+            win_hp_nominal: 0.0,
+            last_violation_s: 0.0,
+            last_brakes: 0,
+            level_time_acc: 0.0,
+            last_level: level,
+            last_level_change_s: 0.0,
+            report: AdaptReport::default(),
+        }
+    }
+}
+
+/// How many of the deployed servers take traffic at a given added
+/// level. Always at least the provisioned baseline, never more than
+/// what is racked.
+fn active_for(num: usize, deployed: usize, level: f64) -> usize {
+    let want = (num as f64 * (1.0 + level)).round() as usize;
+    want.clamp(num, deployed)
+}
+
+impl<'a, O: Observer> Sim<'a, O> {
+    /// A retune window closes: assemble the window's feedback, ask the
+    /// controller, actuate an `Apply`, and open the next window.
+    pub(crate) fn on_retune_check(&mut self, now_s: f64) {
+        // Bring the ground-truth violation integral current first, so
+        // the window delta includes everything up to this boundary.
+        self.settle_energy();
+        let violation_total = self.acct.report.resilience.violation_s;
+        let brakes_total = self.control.policy.brake_events;
+        let cfg = self.cfg; // shared borrow, independent of `self`
+        let ad = self.adapt.as_mut().expect("RetuneCheck without an adapt layer");
+        let obs = WindowObs {
+            violation_s: (violation_total - ad.last_violation_s).max(0.0),
+            brakes: brakes_total.saturating_sub(ad.last_brakes),
+            peak_norm: ad.win_peak_norm,
+            hp_slowdown: if ad.win_hp_nominal > 0.0 {
+                (ad.win_hp_actual / ad.win_hp_nominal - 1.0).max(0.0)
+            } else {
+                0.0
+            },
+        };
+        let decision = ad.ctl.decide(now_s, &obs, &cfg.exp.slo);
+        ad.report.evals += 1;
+        ad.report.decisions.push(decision);
+        // Open the next window.
+        ad.win_peak_norm = 0.0;
+        ad.win_hp_actual = 0.0;
+        ad.win_hp_nominal = 0.0;
+        ad.last_violation_s = violation_total;
+        ad.last_brakes = brakes_total;
+        match decision.verdict {
+            Verdict::Hold => {
+                if O::ENABLED {
+                    self.obs.event(now_s, EventKind::RetuneEval { peak: obs.peak_norm });
+                }
+            }
+            Verdict::Veto => {
+                ad.report.vetoes += 1;
+                if O::ENABLED {
+                    self.obs.event(now_s, EventKind::RetuneVeto { added: decision.added });
+                }
+            }
+            Verdict::Apply => {
+                ad.report.applies += 1;
+                ad.level_time_acc += (now_s - ad.last_level_change_s) * ad.last_level;
+                ad.last_level = decision.added;
+                ad.last_level_change_s = now_s;
+                ad.active_servers = active_for(ad.num_servers, ad.deployed, decision.added);
+                // Actuate the rung: the policy engine reads its config
+                // on every tick, so writing T1/T2 takes effect at the
+                // next telemetry sample.
+                self.control.policy.cfg.t1 = decision.t1;
+                self.control.policy.cfg.t2 = decision.t2;
+                if O::ENABLED {
+                    self.obs.event(
+                        now_s,
+                        EventKind::RetuneApply {
+                            added: decision.added,
+                            t1: decision.t1,
+                            t2: decision.t2,
+                        },
+                    );
+                }
+                emit_diag(&DiagEvent::RetuneApplied {
+                    t_s: now_s,
+                    added: decision.added,
+                    t1: decision.t1,
+                    t2: decision.t2,
+                });
+            }
+        }
+        let window_s = self.adapt.as_ref().unwrap().ctl.cfg.window_s;
+        if now_s + window_s < to_secs(self.core.horizon) {
+            self.core.queue.schedule_at(secs(now_s + window_s), Ev::RetuneCheck);
+        }
+    }
+}

@@ -108,6 +108,9 @@ impl<'a, O: Observer> Sim<'a, O> {
             return; // no averaging window yet — first real sample comes next tick
         }
         self.control.telemetry.record(now_s, p);
+        if let Some(ad) = self.adapt.as_mut() {
+            ad.win_peak_norm = ad.win_peak_norm.max(p);
+        }
         if O::ENABLED {
             self.obs.event(now_s, EventKind::Telemetry { reported: p });
             let true_p = self.normalized_row_power();

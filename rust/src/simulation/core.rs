@@ -22,6 +22,7 @@ use crate::obs::{NoopObserver, Observer};
 use crate::sim::{secs, to_secs, EventQueue, SimTime};
 
 use super::accounting::Accounting;
+use super::adapt::AdaptLayer;
 use super::control::ControlLayer;
 use super::faults::FaultLayer;
 use super::servers::ServerLayer;
@@ -52,6 +53,10 @@ pub(crate) enum Ev {
     FaultStart { fault: u32 },
     /// A scheduled fault episode ends (degraded state is restored).
     FaultEnd { fault: u32 },
+    /// Adaptive-controller window boundary: evaluate the window's
+    /// feedback and maybe retune (scheduled only when
+    /// [`SimConfig::adapt`](super::SimConfig) is set).
+    RetuneCheck,
     End,
 }
 
@@ -91,6 +96,9 @@ pub(crate) struct Sim<'a, O: Observer> {
     pub(crate) training: TrainingLayer,
     pub(crate) faults: FaultLayer,
     pub(crate) acct: Accounting,
+    /// The adaptive outer loop; `None` (the default) keeps every one of
+    /// its hooks off the hot path and the run bit-identical.
+    pub(crate) adapt: Option<AdaptLayer>,
     pub(crate) obs: &'a mut O,
 }
 
@@ -114,14 +122,22 @@ impl<'a, O: Observer> Sim<'a, O> {
     pub(crate) fn new(cfg: &'a SimConfig, obs: &'a mut O) -> Self {
         let servers = ServerLayer::new(cfg);
         let training = TrainingLayer::new(cfg, &servers.row);
-        let control = ControlLayer::new(cfg);
+        let mut control = ControlLayer::new(cfg);
         let faults = FaultLayer::new(cfg, servers.states.len());
         let mut acct = Accounting::new();
         if !training.jobs.is_empty() {
             acct.report.train.nominal_iter_s =
                 cfg.mixed.as_ref().map(|m| m.profile.iter_time_s).unwrap_or(0.0);
         }
-        Sim { cfg, core: Core::new(cfg), servers, control, training, faults, acct, obs }
+        // The adaptive layer is RNG-free; when present it owns the
+        // (T1, T2) knob from t = 0, so actuate its initial rung here.
+        let adapt = cfg.adapt.as_ref().map(|a| AdaptLayer::new(a, cfg));
+        if let Some(ad) = &adapt {
+            let (t1, t2) = ad.ctl.thresholds();
+            control.policy.cfg.t1 = t1;
+            control.policy.cfg.t2 = t2;
+        }
+        Sim { cfg, core: Core::new(cfg), servers, control, training, faults, acct, adapt, obs }
     }
 
     // ---- main loop -------------------------------------------------------
@@ -155,6 +171,11 @@ impl<'a, O: Observer> Sim<'a, O> {
             self.core.queue.schedule_at(secs(f.start_s), Ev::FaultStart { fault: i as u32 });
             self.core.queue.schedule_at(secs(f.end_s()), Ev::FaultEnd { fault: i as u32 });
         }
+        // Adaptive outer loop: an absent config schedules nothing,
+        // keeping the run bit-identical to one with no controller.
+        if let Some(ad) = &self.adapt {
+            self.core.queue.schedule_at(secs(ad.ctl.cfg.window_s), Ev::RetuneCheck);
+        }
         let horizon = self.core.horizon;
         self.core.queue.schedule_at(horizon, Ev::End);
 
@@ -175,6 +196,7 @@ impl<'a, O: Observer> Sim<'a, O> {
                 }
                 Ev::FaultStart { fault } => self.on_fault_start(fault as usize, now_s),
                 Ev::FaultEnd { fault } => self.on_fault_end(fault as usize, now_s),
+                Ev::RetuneCheck => self.on_retune_check(now_s),
                 Ev::End => break,
             }
             if t >= horizon {
@@ -205,6 +227,19 @@ impl<'a, O: Observer> Sim<'a, O> {
         self.acct.report.spike_2s = spikes[0].max_rise;
         self.acct.report.spike_5s = spikes[1].max_rise;
         self.acct.report.spike_40s = spikes[2].max_rise;
+        // Adaptive controller summary: close the time-weighted level
+        // integral at the horizon so `mean_added` covers the whole run.
+        if let Some(mut ad) = self.adapt.take() {
+            let horizon_s = to_secs(horizon);
+            ad.level_time_acc += (horizon_s - ad.last_level_change_s).max(0.0) * ad.last_level;
+            ad.report.mean_added =
+                if horizon_s > 0.0 { ad.level_time_acc / horizon_s } else { 0.0 };
+            ad.report.final_added = ad.ctl.level();
+            let (t1, t2) = ad.ctl.thresholds();
+            ad.report.final_t1 = t1;
+            ad.report.final_t2 = t2;
+            self.acct.report.adapt = Some(ad.report);
+        }
         self.acct.report
     }
 }

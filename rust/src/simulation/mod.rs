@@ -56,6 +56,7 @@
 //! meter reports. docs/RELIABILITY.md is the runbook.
 
 pub mod accounting;
+pub mod adapt;
 pub mod calib;
 pub mod control;
 pub mod core;
@@ -74,7 +75,9 @@ pub use training::MixedRowConfig;
 use crate::config::ExperimentConfig;
 use crate::faults::FaultPlan;
 use crate::metrics::RunReport;
+use crate::policy::adapt::AdaptConfig;
 use crate::policy::engine::PolicyKind;
+use crate::workload::arrivals::DriftConfig;
 
 /// Simulation parameters for one run.
 #[derive(Debug, Clone)]
@@ -133,6 +136,15 @@ pub struct SimConfig {
     /// this many seconds (`None` = paper behavior; see
     /// [`crate::policy::engine::PolicyEngine::escalate_to_brake_after_s`]).
     pub brake_escalation_s: Option<f64>,
+    /// Adaptive outer-loop controller ([`crate::policy::adapt`]):
+    /// `None` (the default) schedules no `RetuneCheck` events and is
+    /// bit-identical to a pre-adapt build — the same contract as
+    /// `mixed`/`faults` above.
+    pub adapt: Option<AdaptConfig>,
+    /// Long-horizon demand drift on every arrival stream
+    /// ([`crate::workload::arrivals::DriftConfig`]); `None` keeps the
+    /// samplers on the pre-drift code path, bit-identically.
+    pub drift: Option<DriftConfig>,
 }
 
 impl Default for SimConfig {
@@ -157,6 +169,8 @@ impl Default for SimConfig {
             mixed: None,
             faults: None,
             brake_escalation_s: None,
+            adapt: None,
+            drift: None,
         }
     }
 }
@@ -164,11 +178,15 @@ impl Default for SimConfig {
 impl SimConfig {
     /// The unthrottled counterfactual of this configuration: identical
     /// workload realization (same seed), power manager disconnected.
+    /// The adaptive controller is disconnected too (it is part of the
+    /// power manager), but demand drift stays — the baseline must see
+    /// the same arrival realization.
     pub fn baseline(&self) -> SimConfig {
         let mut b = self.clone();
         b.protection = false;
         b.policy_kind = PolicyKind::NoCap;
         b.series_sample_s = 0.0;
+        b.adapt = None;
         b
     }
 }

@@ -155,7 +155,8 @@ impl ServerLayer {
                     current: None,
                     queued: None,
                     arrivals: ArrivalProcess::new(rate, root_rng.fork(1000 + s.id as u64))
-                        .with_phase(cfg.diurnal_phase_s),
+                        .with_phase(cfg.diurnal_phase_s)
+                        .with_drift(cfg.drift.clone(), cfg.weeks),
                     rng: root_rng.fork(2000 + s.id as u64),
                     gen: 0,
                     last_advance_s: 0.0,
@@ -297,6 +298,17 @@ impl<'a, O: Observer> Sim<'a, O> {
 
         let spec = &self.servers.specs[self.servers.states[idx].workload_idx];
         let (input, output) = sample_request(spec, &mut self.servers.states[idx].rng);
+        // Adaptive actuation: servers beyond the controller's active
+        // prefix are racked but not taking traffic. The next arrival is
+        // still scheduled and the request still sampled (above), so
+        // every random stream advances identically at every level —
+        // only then is the request shed to the rest of the fleet.
+        if let Some(ad) = self.adapt.as_mut() {
+            if idx >= ad.active_servers {
+                ad.report.requests_shed += 1;
+                return;
+            }
+        }
         if self.servers.states[idx].current.is_none() {
             self.start_request(idx, input, output, now_s, now_s);
         } else if self.servers.states[idx].queued.is_none() {
@@ -330,6 +342,12 @@ impl<'a, O: Observer> Sim<'a, O> {
                     inf.exec.nominal_latency,
                     inf.exec.output,
                 );
+                if let Some(ad) = self.adapt.as_mut() {
+                    if inf.priority == Priority::High {
+                        ad.win_hp_actual += actual;
+                        ad.win_hp_nominal += inf.exec.nominal_latency;
+                    }
+                }
                 self.servers.states[idx].gen = self.servers.states[idx].gen.wrapping_add(1);
                 // Pull the buffered request, if any.
                 if let Some(q) = self.servers.states[idx].queued.take() {

@@ -89,11 +89,12 @@ pub fn random_sim_config(rng: &mut Rng) -> SimConfig {
 /// Used by the TOML round-trip property.
 pub fn random_scenario(rng: &mut Rng, i: usize) -> Scenario {
     let policies = PolicyKind::all();
+    let added = rng.range_f64(0.0, 0.6);
     let mut b = Scenario::builder(&format!("rand-{i}"))
         .description("randomized round-trip scenario")
         .policy(policies[rng.range_usize(0, policies.len() - 1)])
         .servers(rng.range_usize(4, 64))
-        .added(rng.range_f64(0.0, 0.6))
+        .added(added)
         .weeks(rng.range_f64(0.01, 3.0))
         .seed(rng.fork(i as u64).next_u64() >> 1)
         .peak_utilization(rng.range_f64(0.5, 1.0))
@@ -105,7 +106,8 @@ pub fn random_scenario(rng: &mut Rng, i: usize) -> Scenario {
     if rng.bool(0.3) {
         b = b.power_scale(rng.range_f64(1.0, 2.0));
     }
-    if rng.bool(0.5) {
+    let with_training = rng.bool(0.5);
+    if with_training {
         b = b
             .training(rng.range_f64(0.0, 1.0))
             .training_jobs(rng.range_usize(0, 8), rng.range_f64(0.0, 10.0));
@@ -116,6 +118,7 @@ pub fn random_scenario(rng: &mut Rng, i: usize) -> Scenario {
     // Dispatch shape first: fault plans are only drawn for non-region
     // scenarios (validate() rejects region + faults).
     let region_shape = rng.bool(0.2);
+    let site_shape = !region_shape && rng.bool(0.3);
     if !region_shape {
         match rng.below(3) {
             0 => {}
@@ -141,7 +144,7 @@ pub fn random_scenario(rng: &mut Rng, i: usize) -> Scenario {
         if rng.bool(0.5) {
             b = b.serial();
         }
-    } else if rng.bool(0.3) {
+    } else if site_shape {
         b = b.site(rng.range_usize(1, 6)).site_search(
             rng.range_usize(10, 50) as u32,
             rng.range_usize(1, 10) as u32,
@@ -149,10 +152,31 @@ pub fn random_scenario(rng: &mut Rng, i: usize) -> Scenario {
         if rng.bool(0.5) {
             b = b.serial();
         }
-    } else if rng.bool(0.3) {
-        // SKUs only on row scenarios (a site cycles the registry itself).
-        let skus = crate::fleet::sku::registry();
-        b = b.sku(skus[rng.range_usize(0, skus.len() - 1)].name);
+    } else {
+        if rng.bool(0.3) {
+            // SKUs only on row scenarios (a site cycles the registry).
+            let skus = crate::fleet::sku::registry();
+            b = b.sku(skus[rng.range_usize(0, skus.len() - 1)].name);
+        }
+        // Drift and the adaptive controller are row-only knobs; the
+        // controller additionally excludes training colocation and must
+        // fit its level range inside the racked oversubscription.
+        if rng.bool(0.4) {
+            b = b.drift(
+                rng.range_f64(-0.05, 0.10),
+                rng.range_f64(0.0, 0.4),
+                rng.range_f64(1.0, 8.0),
+            );
+        }
+        if !with_training && rng.bool(0.4) {
+            let max = rng.range_f64(0.0, added);
+            let initial = rng.range_f64(0.0, max);
+            let min = rng.range_f64(0.0, initial);
+            b = b
+                .adaptive(rng.range_f64(600.0, 43_200.0))
+                .adapt_levels(min, initial, max)
+                .adapt_pacing(rng.range_usize(1, 4) as u32, rng.range_usize(1, 5) as u32);
+        }
     }
     b.build()
 }
@@ -210,8 +234,8 @@ mod tests {
     #[test]
     fn random_scenarios_are_well_formed_and_cover_every_shape() {
         let mut rng = Rng::new(0xBEEF);
-        let (mut rows, mut sites, mut regions) = (0, 0, 0);
-        for i in 0..60 {
+        let (mut rows, mut sites, mut regions, mut adaptive) = (0, 0, 0, 0);
+        for i in 0..80 {
             let sc = random_scenario(&mut rng, i);
             match (&sc.site, &sc.region) {
                 (Some(_), None) => sites += 1,
@@ -219,9 +243,15 @@ mod tests {
                 (None, None) => rows += 1,
                 (Some(_), Some(_)) => panic!("scenario #{i} has both site and region"),
             }
+            if sc.adapt.is_some() {
+                adaptive += 1;
+            }
             sc.validate().unwrap_or_else(|e| panic!("scenario #{i}: {e:#}"));
         }
-        assert!(rows > 0 && sites > 0 && regions > 0, "{rows}/{sites}/{regions}");
+        assert!(
+            rows > 0 && sites > 0 && regions > 0 && adaptive > 0,
+            "{rows}/{sites}/{regions}/{adaptive}"
+        );
     }
 
     #[test]

@@ -4,6 +4,51 @@
 
 use crate::util::rng::Rng;
 
+/// Seconds in one week (the drift ramp's unit of time).
+const WEEK_S: f64 = 7.0 * 86_400.0;
+
+/// Long-horizon demand drift layered on top of the diurnal envelope:
+/// a linear demand-growth ramp (fraction per week) plus a slow seasonal
+/// sinusoid. Both default to zero, and an [`ArrivalProcess`] without a
+/// drift config consumes randomness bit-identically to one built before
+/// drift existed — the multi-week adaptive scenarios opt in, everything
+/// else is untouched.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DriftConfig {
+    /// Linear demand growth per week (0.10 = +10%/week). Must be > -1.
+    pub growth_per_week: f64,
+    /// Seasonal modulation amplitude (0.2 = ±20% around the ramp).
+    pub season_amp: f64,
+    /// Seasonal period in weeks.
+    pub season_period_weeks: f64,
+}
+
+impl Default for DriftConfig {
+    fn default() -> Self {
+        DriftConfig { growth_per_week: 0.0, season_amp: 0.0, season_period_weeks: 4.0 }
+    }
+}
+
+impl DriftConfig {
+    /// The drift multiplier at time `t_s` (1.0 at t = 0 when amp = 0).
+    /// Floored at 0.01 so a steep negative ramp can't extinguish the
+    /// stream (or produce a negative rate).
+    pub fn multiplier(&self, t_s: f64) -> f64 {
+        let ramp = 1.0 + self.growth_per_week * t_s / WEEK_S;
+        let season = 1.0
+            + self.season_amp
+                * (std::f64::consts::TAU * t_s / (self.season_period_weeks * WEEK_S)).sin();
+        (ramp * season).max(0.01)
+    }
+
+    /// An upper bound on [`DriftConfig::multiplier`] over `[0, horizon]`
+    /// weeks — the thinning envelope the sampler rejects against.
+    pub fn max_multiplier(&self, horizon_weeks: f64) -> f64 {
+        let ramp_max = (1.0 + self.growth_per_week.max(0.0) * horizon_weeks).max(1.0);
+        (ramp_max * (1.0 + self.season_amp.abs())).max(0.01)
+    }
+}
+
 /// Diurnal rate multiplier at time `t_s` (seconds since trace start).
 ///
 /// Shape: interactive traffic — overnight trough (~0.45×), morning ramp,
@@ -32,13 +77,25 @@ pub struct ArrivalProcess {
     /// it serves a region whose afternoon arrives sooner. Used by the
     /// fleet layer to stagger cluster peaks within a site.
     pub phase_s: f64,
+    /// Optional long-horizon drift (ramp + season) with its
+    /// precomputed thinning bound. `None` keeps the sampler on the
+    /// pre-drift code path, consuming randomness bit-identically.
+    drift: Option<DriftState>,
     rng: Rng,
+}
+
+/// A [`DriftConfig`] plus the thinning envelope precomputed for the
+/// scenario horizon (so the hot sampling loop never recomputes it).
+#[derive(Debug, Clone)]
+struct DriftState {
+    cfg: DriftConfig,
+    max_mult: f64,
 }
 
 impl ArrivalProcess {
     /// Stream at the given peak rate with its own random source.
     pub fn new(peak_rate: f64, rng: Rng) -> Self {
-        ArrivalProcess { peak_rate, phase_s: 0.0, rng }
+        ArrivalProcess { peak_rate, phase_s: 0.0, drift: None, rng }
     }
 
     /// Set the diurnal phase offset (builder style).
@@ -47,15 +104,47 @@ impl ArrivalProcess {
         self
     }
 
+    /// Layer long-horizon drift over the diurnal envelope (builder
+    /// style). `horizon_weeks` sizes the thinning bound; `None` leaves
+    /// the stream exactly as constructed.
+    pub fn with_drift(mut self, drift: Option<DriftConfig>, horizon_weeks: f64) -> Self {
+        self.drift = drift.map(|cfg| {
+            let max_mult = cfg.max_multiplier(horizon_weeks);
+            DriftState { cfg, max_mult }
+        });
+        self
+    }
+
     /// Next arrival time strictly after `t_s` (thinning algorithm).
     pub fn next_after(&mut self, t_s: f64) -> f64 {
-        let lambda_max = self.peak_rate.max(1e-12);
-        let mut t = t_s;
-        loop {
-            t += self.rng.exp(lambda_max);
-            let accept = diurnal_multiplier(t + self.phase_s);
-            if self.rng.f64() < accept {
-                return t;
+        match &self.drift {
+            None => {
+                let lambda_max = self.peak_rate.max(1e-12);
+                let mut t = t_s;
+                loop {
+                    t += self.rng.exp(lambda_max);
+                    let accept = diurnal_multiplier(t + self.phase_s);
+                    if self.rng.f64() < accept {
+                        return t;
+                    }
+                }
+            }
+            Some(d) => {
+                // Same thinning loop with the envelope widened to the
+                // drift bound; past the horizon the drift ratio can
+                // exceed 1, which just means "always accept" — the
+                // loop still terminates.
+                let lambda_max = (self.peak_rate * d.max_mult).max(1e-12);
+                let mut t = t_s;
+                loop {
+                    t += self.rng.exp(lambda_max);
+                    let accept = diurnal_multiplier(t + self.phase_s)
+                        * d.cfg.multiplier(t)
+                        / d.max_mult;
+                    if self.rng.f64() < accept {
+                        return t;
+                    }
+                }
             }
         }
     }
@@ -139,6 +228,79 @@ mod tests {
         let mut ap = ArrivalProcess::new(0.5, Rng::new(6));
         let mut t = 0.0;
         for _ in 0..1000 {
+            let nt = ap.next_after(t);
+            assert!(nt > t);
+            t = nt;
+        }
+    }
+
+    #[test]
+    fn no_drift_config_is_bit_identical_to_plain_stream() {
+        // `with_drift(None, ..)` must not perturb the sampler: same
+        // seed, same arrival times, to the bit.
+        let mut plain = ArrivalProcess::new(0.2, Rng::new(11)).with_phase(3_600.0);
+        let mut gated =
+            ArrivalProcess::new(0.2, Rng::new(11)).with_phase(3_600.0).with_drift(None, 4.0);
+        let mut t = 0.0;
+        for _ in 0..500 {
+            let a = plain.next_after(t);
+            let b = gated.next_after(t);
+            assert_eq!(a.to_bits(), b.to_bits());
+            t = a;
+        }
+    }
+
+    #[test]
+    fn zero_drift_multiplier_is_one_and_bounded() {
+        let d = DriftConfig::default();
+        assert_eq!(d.multiplier(0.0), 1.0);
+        assert_eq!(d.multiplier(10.0 * 7.0 * 86_400.0), 1.0);
+        assert_eq!(d.max_multiplier(8.0), 1.0);
+    }
+
+    #[test]
+    fn growth_ramp_raises_the_rate_week_over_week() {
+        let drift =
+            DriftConfig { growth_per_week: 0.25, season_amp: 0.0, season_period_weeks: 4.0 };
+        let count_week = |week: f64| {
+            let mut ap = ArrivalProcess::new(0.1, Rng::new(21)).with_drift(Some(drift.clone()), 4.0);
+            // Same clock window each week (same diurnal shape), so the
+            // only difference between weeks is the ramp.
+            let start = week * 7.0 * 86_400.0 + 12.0 * 3_600.0;
+            let mut t = start;
+            let mut count = 0u32;
+            while t < start + 40_000.0 {
+                t = ap.next_after(t);
+                count += 1;
+            }
+            count
+        };
+        let early = count_week(0.0);
+        let late = count_week(3.0);
+        // +25%/week compounds to 1.75x by week 3 — demand 1.4x is a
+        // conservative bar well above Poisson noise at these counts.
+        assert!(late as f64 > early as f64 * 1.4, "early={early} late={late}");
+    }
+
+    #[test]
+    fn seasonal_modulation_peaks_at_quarter_period() {
+        let d = DriftConfig { growth_per_week: 0.0, season_amp: 0.3, season_period_weeks: 4.0 };
+        let quarter = 1.0 * 7.0 * 86_400.0; // sin peaks at period/4 = week 1
+        let trough = 3.0 * 7.0 * 86_400.0;
+        assert!((d.multiplier(quarter) - 1.3).abs() < 1e-9);
+        assert!((d.multiplier(trough) - 0.7).abs() < 1e-9);
+        assert!(d.max_multiplier(8.0) >= d.multiplier(quarter));
+    }
+
+    #[test]
+    fn drifted_arrivals_strictly_increase_even_past_the_horizon() {
+        // Past the thinning horizon accept ratios can exceed 1; the
+        // sampler must still terminate and keep time monotone.
+        let drift =
+            DriftConfig { growth_per_week: 0.5, season_amp: 0.2, season_period_weeks: 2.0 };
+        let mut ap = ArrivalProcess::new(0.5, Rng::new(31)).with_drift(Some(drift), 0.5);
+        let mut t = 0.4 * 7.0 * 86_400.0;
+        for _ in 0..500 {
             let nt = ap.next_after(t);
             assert!(nt > t);
             t = nt;

@@ -6,6 +6,6 @@ pub mod arrivals;
 pub mod spec;
 pub mod tracegen;
 
-pub use arrivals::{diurnal_multiplier, ArrivalProcess};
+pub use arrivals::{diurnal_multiplier, ArrivalProcess, DriftConfig};
 pub use spec::{assign_servers, sample_request, table4, WorkloadSpec};
 pub use tracegen::{target_power_profile, TraceTarget};

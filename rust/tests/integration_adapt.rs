@@ -1,0 +1,225 @@
+//! Integration tests for the adaptive oversubscription controller
+//! (ISSUE 8): the provisioning→runtime loop closed online.
+//!
+//! * **Disabled bit-identity property** — `adapt: None` must be
+//!   bit-identical to a pre-adapt build: across randomized configs
+//!   (policies, oversubscription, training mixes, fault plans) the
+//!   full `Debug` render of the [`RunReport`] matches a run of the
+//!   identical config, and the report carries no `adapt` block. The
+//!   controller schedules no `RetuneCheck` events when off, so this is
+//!   the test that proves every one of its hooks is behind the
+//!   `Option`.
+//! * **Determinism property** — same seed + config ⇒ the identical
+//!   retune decision sequence, whether the batch runs on the serial
+//!   reference path or fans out across threads.
+//! * **Long-horizon drift regression** — on the growth-ramp scenario
+//!   the adaptive row must *dominate* its matched static baseline:
+//!   violation seconds no worse AND mean added-server level no lower
+//!   at equal SLO. One configuration on the quick CI tier; the full
+//!   drift grid behind `POLCA_TEST_FULL=1`.
+
+use polca::exec::{run_batch, ExecConfig};
+use polca::experiments::adapt::{drift_verdict, run_drift_study, DriftStudy};
+use polca::policy::adapt::AdaptConfig;
+use polca::simulation::{run, SimConfig};
+use polca::testing::{assert_bit_identical, full_suite, random_sim_config};
+use polca::util::rng::Rng;
+
+// ---- disabled-controller bit-identity ---------------------------------
+
+#[test]
+fn disabled_controller_is_bit_identical_across_random_configs() {
+    let mut rng = Rng::new(0xADA7_CAFE);
+    for case in 0..6 {
+        let cfg = random_sim_config(&mut rng);
+        assert!(cfg.adapt.is_none(), "generator must not arm the controller");
+        let a = run(&cfg);
+        let b = run(&cfg);
+        assert_bit_identical(&a, &b, &format!("case {case}: same config diverged"));
+        assert!(
+            a.adapt.is_none(),
+            "case {case}: report carries an adapt block with the controller off"
+        );
+        // The Debug render must not even mention the adapt field's
+        // contents beyond `None` — i.e. a disabled run's report is
+        // indistinguishable from one produced before the controller
+        // existed except for the literal `adapt: None`.
+        assert!(format!("{a:?}").contains("adapt: None"), "case {case}");
+    }
+}
+
+#[test]
+fn inert_controller_costs_exactly_one_event_per_window() {
+    // Pin the controller so it can only ever Hold: no spare racked
+    // servers (deployed == baseline), a level range collapsed to zero,
+    // and a raise margin no window can clear. The armed run must then
+    // replay the disabled run exactly, plus one dispatched event per
+    // RetuneCheck window — the observability analogue of the
+    // zero-cost-when-off contract, one layer up.
+    let mut base = SimConfig::default();
+    base.exp.row.num_servers = 10;
+    base.deployed_servers = 10;
+    base.weeks = 0.02;
+    base.exp.seed = 11;
+    base.power_scale = 1.35;
+    let off = run(&base);
+
+    let mut armed = base.clone();
+    armed.adapt = Some(AdaptConfig {
+        window_s: 1800.0,
+        min_added: 0.0,
+        initial_added: 0.0,
+        max_added: 0.0,
+        raise_margin: 1.0,
+        ..Default::default()
+    });
+    let on = run(&armed);
+    let a = on.adapt.as_ref().expect("armed controller must report");
+    assert!(a.evals > 0, "no windows evaluated over the horizon");
+    assert_eq!(a.applies, 0, "a pinned controller moved a knob: {a:?}");
+    assert_eq!(a.requests_shed, 0, "nothing is inactive, nothing may shed");
+    assert_eq!(
+        on.events,
+        off.events + a.evals,
+        "each retune window must cost exactly one extra dispatched event"
+    );
+    assert_eq!(on.power_peak, off.power_peak, "an all-Hold controller perturbed the row");
+}
+
+// ---- determinism: serial vs parallel decision sequences ---------------
+
+#[test]
+fn retune_decision_sequence_is_identical_serial_and_parallel() {
+    // A small grid of adaptive configs; the decision sequence (and the
+    // whole report) must not depend on executor scheduling.
+    let grid: Vec<SimConfig> = (0..4)
+        .map(|i| {
+            let mut cfg = SimConfig::default();
+            cfg.exp.row.num_servers = 10;
+            cfg.deployed_servers = 14;
+            cfg.weeks = 0.02;
+            cfg.exp.seed = 100 + i;
+            cfg.power_scale = 1.35;
+            cfg.adapt = Some(AdaptConfig {
+                window_s: 1800.0,
+                hold_windows: 1 + (i as u32 % 2),
+                ..Default::default()
+            });
+            cfg
+        })
+        .collect();
+    let serial: Vec<String> =
+        run_batch(&grid, &ExecConfig::serial(), |_, cfg| format!("{:?}", run(cfg).adapt));
+    let parallel: Vec<String> =
+        run_batch(&grid, &ExecConfig::default(), |_, cfg| format!("{:?}", run(cfg).adapt));
+    assert_eq!(serial, parallel, "decision sequences depend on executor scheduling");
+    for (i, rendered) in serial.iter().enumerate() {
+        assert!(rendered.starts_with("Some"), "grid item {i} reported no adapt block");
+        assert!(rendered.contains("decisions"), "grid item {i}: {rendered}");
+    }
+}
+
+// ---- long-horizon drift regression ------------------------------------
+
+fn assert_dominates(study: &DriftStudy, ctx: &str) {
+    let points = run_drift_study(study);
+    let v = drift_verdict(&points);
+    assert!(
+        v.adaptive_violation_s <= v.static_violation_s + 1e-9,
+        "{ctx}: adaptive violation {:.1}s worse than static {:.1}s\n{points:#?}",
+        v.adaptive_violation_s,
+        v.static_violation_s
+    );
+    assert!(
+        v.adaptive_mean_added >= v.static_mean_added - 1e-9,
+        "{ctx}: adaptive mean added {:.3} below static {:.3}\n{points:#?}",
+        v.adaptive_mean_added,
+        v.static_mean_added
+    );
+    assert!(v.slo_ok_both, "{ctx}: an arm broke the Table-5 SLOs\n{points:#?}");
+    let adaptive = points.last().unwrap();
+    assert!(adaptive.retunes.0 > 0, "{ctx}: the controller never evaluated a window");
+}
+
+#[test]
+fn adaptive_row_dominates_static_on_the_quick_drift_scenario() {
+    let study = DriftStudy {
+        weeks: 0.1,
+        seed: 7,
+        servers: 12,
+        static_levels: vec![0.10],
+        window_s: 1800.0,
+        power_scale: Some(1.35),
+        ..Default::default()
+    };
+    assert_dominates(&study, "quick drift tier");
+}
+
+#[test]
+fn adaptive_row_dominates_static_across_the_full_drift_grid() {
+    if !full_suite() {
+        eprintln!("skipping full drift grid (set POLCA_TEST_FULL=1)");
+        return;
+    }
+    for &growth in &[0.0, 0.025, 0.05] {
+        for &amp in &[0.0, 0.15, 0.30] {
+            for &seed in &[1, 7] {
+                let study = DriftStudy {
+                    weeks: 0.25,
+                    seed,
+                    servers: 12,
+                    static_levels: vec![0.10],
+                    window_s: 3600.0,
+                    growth_per_week: growth,
+                    season_amp: amp,
+                    power_scale: Some(1.35),
+                    ..Default::default()
+                };
+                assert_dominates(
+                    &study,
+                    &format!("grid growth={growth} amp={amp} seed={seed}"),
+                );
+            }
+        }
+    }
+}
+
+// ---- safety clamp visible end to end ----------------------------------
+
+#[test]
+fn every_decision_is_recorded_and_bounded() {
+    // The per-window decision log must cover every eval, stay inside
+    // the configured level range, and only ever use tuner-grid rungs.
+    let mut cfg = SimConfig::default();
+    cfg.exp.row.num_servers = 10;
+    cfg.deployed_servers = 14;
+    cfg.weeks = 0.03;
+    cfg.exp.seed = 3;
+    cfg.power_scale = 1.35;
+    cfg.adapt = Some(AdaptConfig {
+        window_s: 1800.0,
+        min_added: 0.0,
+        initial_added: 0.10,
+        max_added: 0.40,
+        ..Default::default()
+    });
+    let report = run(&cfg);
+    let a = report.adapt.expect("armed controller must report");
+    assert_eq!(a.evals as usize, a.decisions.len(), "one logged decision per eval");
+    // The layer clamps the ceiling to what is racked: 14/10 - 1 = 40%.
+    for d in &a.decisions {
+        assert!(
+            (0.0..=0.40 + 1e-9).contains(&d.added),
+            "level {d:?} outside the configured range"
+        );
+        assert!(
+            polca::policy::adapt::LADDER.contains(&(d.t1, d.t2)),
+            "thresholds {d:?} off the tuner grid"
+        );
+    }
+    assert!(
+        (a.mean_added - 0.10).abs() < 0.40,
+        "mean level {} not anchored near the start",
+        a.mean_added
+    );
+}

@@ -130,6 +130,30 @@ diff "$par_out" "$ser_out" || {
 }
 rm -f "$par_out" "$ser_out"
 
+# Adaptive-controller gate (ISSUE 8): the retune decision sequence
+# must be deterministic through the CLI — run the adaptive preset twice
+# (second pass with --serial; a row run is a single simulation, so the
+# flag is a no-op and both invocations must land on the same answer)
+# and diff the JSON reports, which carry the full adapt summary
+# (evals/applies/vetoes, final knobs, the decision log). Wall-clock
+# never enters the JSON surface, so any diff is a real break. The
+# serial-vs-parallel retune property over genuine run_batch fan-out is
+# pinned in rust/tests/integration_adapt.rs.
+echo "== adaptive retune determinism smoke (polca run adaptive-row --quick, twice)"
+ad_a=$(mktemp)
+ad_b=$(mktemp)
+./target/release/polca run adaptive-row --quick --weeks 0.05 --json >"$ad_a" 2>/dev/null
+./target/release/polca run adaptive-row --quick --weeks 0.05 --serial --json >"$ad_b" 2>/dev/null
+diff "$ad_a" "$ad_b" || {
+  echo "adaptive-row runs diverged (retune-sequence nondeterminism)" >&2
+  exit 1
+}
+grep -q '"adapt"' "$ad_a" || {
+  echo "adaptive-row JSON carries no adapt block" >&2
+  exit 1
+}
+rm -f "$ad_a" "$ad_b"
+
 # JSON surface (ISSUE 5): machine-readable output must stay parseable.
 echo "== json smoke (polca faults matrix --quick --json | python parse)"
 if command -v python3 >/dev/null 2>&1; then
