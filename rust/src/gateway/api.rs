@@ -1,0 +1,322 @@
+//! The gateway's HTTP API: routing, the submission codec, report
+//! retrieval, Server-Sent-Events streaming, health, and Prometheus
+//! metrics.
+//!
+//! Endpoints (full reference with examples in `docs/GATEWAY.md`):
+//!
+//! | Method | Path               | Purpose                                   |
+//! |--------|--------------------|-------------------------------------------|
+//! | POST   | `/scenarios`       | Submit a scenario (TOML body or JSON envelope) → `202` + run id |
+//! | GET    | `/runs`            | List every run with its lifecycle state    |
+//! | GET    | `/runs/:id`        | Status document, or the final report verbatim once done |
+//! | GET    | `/runs/:id/events` | SSE stream of the run's observation records |
+//! | GET    | `/healthz`         | Liveness + run counts                      |
+//! | GET    | `/metrics`         | Prometheus text exposition                 |
+//! | POST   | `/shutdown`        | Graceful daemon stop                       |
+//!
+//! A finished run's `GET /runs/:id` body is the stored
+//! [`ScenarioReport::to_json`](crate::scenario::ScenarioReport::to_json)
+//! pretty document (trailing newline included) — byte-identical to
+//! `polca run <same scenario> --json` because both surfaces share that
+//! single serialization (and share
+//! [`error_report_json`](crate::scenario::error_report_json) on the
+//! error path).
+
+use std::io::{self, Write};
+use std::net::TcpStream;
+use std::sync::atomic::AtomicBool;
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::scenario::Scenario;
+use crate::util::json::{parse as parse_json, Json};
+
+use super::http::{write_response, Request};
+use super::state::{Metrics, Registry, RunView, SubNext};
+use super::ShutdownSignal;
+
+/// How long an SSE loop waits on the hub before re-checking shutdown.
+const SSE_POLL: Duration = Duration::from_millis(250);
+
+/// Shared context the router hands every request handler.
+pub struct Ctx {
+    /// The run registry.
+    pub registry: Arc<Registry>,
+    /// Daemon-wide counters.
+    pub metrics: Arc<Metrics>,
+    /// Graceful-stop signal; `POST /shutdown` trips it.
+    pub shutdown: Arc<ShutdownSignal>,
+    /// Fast per-request shutdown check shared with the HTTP layer.
+    pub shutdown_flag: Arc<AtomicBool>,
+}
+
+/// Route one request. Returns whether the connection may be kept
+/// alive (SSE streams always close).
+pub fn handle(req: &Request, stream: &mut TcpStream, ctx: &Ctx) -> io::Result<bool> {
+    Metrics::add(&ctx.metrics.http_requests, 1);
+    let path = req.path.as_str();
+    match (req.method.as_str(), path) {
+        ("GET", "/healthz") => {
+            let c = ctx.registry.counts();
+            let body = Json::obj(vec![
+                ("status", Json::Str("ok".to_string())),
+                ("queued", Json::num(c[0] as f64)),
+                ("running", Json::num(c[1] as f64)),
+                ("done", Json::num(c[2] as f64)),
+                ("failed", Json::num(c[3] as f64)),
+            ]);
+            respond_json(stream, 200, &body)
+        }
+        ("GET", "/metrics") => {
+            let text = ctx.metrics.render(&ctx.registry);
+            write_response(
+                stream,
+                200,
+                "text/plain; version=0.0.4",
+                text.as_bytes(),
+                true,
+                &[],
+            )?;
+            Ok(true)
+        }
+        ("POST", "/scenarios") => submit(req, stream, ctx),
+        ("POST", "/shutdown") => {
+            let body = Json::obj(vec![("status", Json::Str("shutting-down".to_string()))]);
+            // Respond first so the client sees the acknowledgement
+            // before the listener goes away.
+            let r = respond_json_close(stream, 200, &body);
+            ctx.shutdown.trigger();
+            r
+        }
+        ("GET", "/runs") => {
+            let runs = ctx.registry.list();
+            let body = Json::arr(runs.iter().map(run_status_doc));
+            respond_json(stream, 200, &body)
+        }
+        ("GET", p) if p.starts_with("/runs/") && p.ends_with("/events") => {
+            let id = &p["/runs/".len()..p.len() - "/events".len()];
+            match ctx.registry.get(id) {
+                Some(view) => sse_stream(stream, &view, ctx),
+                None => not_found(stream),
+            }
+        }
+        ("GET", p) if p.starts_with("/runs/") => {
+            let id = &p["/runs/".len()..];
+            match ctx.registry.get(id) {
+                Some(view) => run_doc(stream, &view),
+                None => not_found(stream),
+            }
+        }
+        (_, "/scenarios" | "/shutdown" | "/healthz" | "/metrics" | "/runs") => {
+            respond_error(stream, 405, "method not allowed")
+        }
+        _ => not_found(stream),
+    }
+}
+
+/// `POST /scenarios`: decode, validate, enqueue.
+fn submit(req: &Request, stream: &mut TcpStream, ctx: &Ctx) -> io::Result<bool> {
+    let sc = match decode_submission(req) {
+        Ok(sc) => sc,
+        Err(e) => return respond_error(stream, 400, &format!("{e:#}")),
+    };
+    match ctx.registry.submit(sc) {
+        Ok(view) => {
+            let body = Json::obj(vec![
+                ("id", Json::Str(view.id.clone())),
+                ("name", Json::Str(view.name.clone())),
+                ("status", Json::Str(view.status.label().to_string())),
+                ("report", Json::Str(format!("/runs/{}", view.id))),
+                ("events", Json::Str(format!("/runs/{}/events", view.id))),
+            ]);
+            respond_json(stream, 202, &body)
+        }
+        Err(_full) => {
+            Metrics::add(&ctx.metrics.runs_rejected, 1);
+            respond_error(stream, 429, "run queue full")
+        }
+    }
+}
+
+/// Decode a submission body into a validated [`Scenario`].
+///
+/// Two codecs, chosen by shape: a body whose first non-space byte is
+/// `{` (or whose `Content-Type` mentions `json`) is a JSON envelope —
+/// `{"preset": NAME}` or `{"toml": TEXT}`, with optional `"name"`,
+/// `"weeks"`, and `"seed"` overrides applied after loading. Anything
+/// else is the scenario TOML codec itself (the same bit-lossless
+/// format `polca scenario save` writes).
+pub fn decode_submission(req: &Request) -> anyhow::Result<Scenario> {
+    let body = req.body_str();
+    let text = body.trim();
+    if text.is_empty() {
+        anyhow::bail!("empty submission body (send scenario TOML or a JSON envelope)");
+    }
+    let looks_json = text.starts_with('{')
+        || req.header("content-type").map(|ct| ct.contains("json")).unwrap_or(false);
+    let sc = if looks_json {
+        let doc = parse_json(text).map_err(|e| anyhow::anyhow!("invalid JSON envelope: {e}"))?;
+        let mut sc = if let Some(name) = doc.get("preset").and_then(Json::as_str) {
+            crate::scenario::preset(name)?
+        } else if let Some(toml) = doc.get("toml").and_then(Json::as_str) {
+            Scenario::parse(toml)?
+        } else {
+            anyhow::bail!("JSON envelope needs a \"preset\" or \"toml\" field");
+        };
+        if let Some(name) = doc.get("name").and_then(Json::as_str) {
+            sc.name = name.to_string();
+        }
+        if let Some(weeks) = doc.get("weeks").and_then(Json::as_f64) {
+            sc.weeks = weeks;
+        }
+        if let Some(seed) = doc.get("seed").and_then(Json::as_f64) {
+            sc.exp.seed = seed as u64;
+        }
+        sc
+    } else {
+        Scenario::parse(text)?
+    };
+    sc.validate()?;
+    Ok(sc)
+}
+
+/// `GET /runs/:id`: the status document while queued/running, the
+/// stored terminal document verbatim once done/failed.
+fn run_doc(stream: &mut TcpStream, view: &RunView) -> io::Result<bool> {
+    match (&view.body, view.status) {
+        (Some(body), super::state::RunStatus::Done) => {
+            write_response(stream, 200, "application/json", body.as_bytes(), true, &[])?;
+            Ok(true)
+        }
+        (Some(body), _) => {
+            write_response(stream, 500, "application/json", body.as_bytes(), true, &[])?;
+            Ok(true)
+        }
+        (None, _) => respond_json(stream, 200, &run_status_doc(view)),
+    }
+}
+
+/// The non-terminal run document: `{"id", "name", "status"}`.
+fn run_status_doc(view: &RunView) -> Json {
+    Json::obj(vec![
+        ("id", Json::Str(view.id.clone())),
+        ("name", Json::Str(view.name.clone())),
+        ("status", Json::Str(view.status.label().to_string())),
+    ])
+}
+
+/// `GET /runs/:id/events`: stream the run's records as Server-Sent
+/// Events (`data: <record>\n\n` per record). Replays the backlog, then
+/// follows live until the run finishes, the daemon stops, or the
+/// subscriber falls behind its bounded queue and is dropped.
+fn sse_stream(stream: &mut TcpStream, view: &RunView, ctx: &Ctx) -> io::Result<bool> {
+    Metrics::add(&ctx.metrics.sse_subscribers, 1);
+    stream.write_all(
+        b"HTTP/1.1 200 OK\r\nContent-Type: text/event-stream\r\nCache-Control: no-cache\r\nConnection: close\r\n\r\n",
+    )?;
+    let (sub, snapshot) = view.hub.subscribe();
+    let result = (|| -> io::Result<()> {
+        for rec in &snapshot {
+            write_sse_record(stream, rec)?;
+        }
+        stream.flush()?;
+        loop {
+            if ctx.shutdown_flag.load(std::sync::atomic::Ordering::Relaxed) {
+                return Ok(());
+            }
+            match view.hub.next(sub, SSE_POLL) {
+                SubNext::Records(rs) if rs.is_empty() => continue,
+                SubNext::Records(rs) => {
+                    for rec in &rs {
+                        write_sse_record(stream, rec)?;
+                    }
+                    stream.flush()?;
+                }
+                SubNext::Closed | SubNext::Lagged => return Ok(()),
+            }
+        }
+    })();
+    view.hub.unsubscribe(sub);
+    result?;
+    Ok(false)
+}
+
+fn write_sse_record(w: &mut impl Write, record: &str) -> io::Result<()> {
+    w.write_all(b"data: ")?;
+    w.write_all(record.as_bytes())?;
+    w.write_all(b"\n\n")
+}
+
+fn respond_json(stream: &mut TcpStream, status: u16, body: &Json) -> io::Result<bool> {
+    let text = format!("{}\n", body.to_pretty());
+    write_response(stream, status, "application/json", text.as_bytes(), true, &[])?;
+    Ok(true)
+}
+
+fn respond_json_close(stream: &mut TcpStream, status: u16, body: &Json) -> io::Result<bool> {
+    let text = format!("{}\n", body.to_pretty());
+    write_response(stream, status, "application/json", text.as_bytes(), false, &[])?;
+    Ok(false)
+}
+
+fn respond_error(stream: &mut TcpStream, status: u16, msg: &str) -> io::Result<bool> {
+    let body = Json::obj(vec![("error", Json::Str(msg.to_string()))]);
+    respond_json(stream, status, &body)
+}
+
+fn not_found(stream: &mut TcpStream) -> io::Result<bool> {
+    respond_error(stream, 404, "not found")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scenario::preset;
+
+    fn req(content_type: Option<&str>, body: &str) -> Request {
+        let mut headers = Vec::new();
+        if let Some(ct) = content_type {
+            headers.push(("content-type".to_string(), ct.to_string()));
+        }
+        Request {
+            method: "POST".to_string(),
+            path: "/scenarios".to_string(),
+            query: String::new(),
+            headers,
+            body: body.as_bytes().to_vec(),
+        }
+    }
+
+    #[test]
+    fn decodes_raw_toml_and_json_envelopes() {
+        let toml = preset("oversubscribed-row").unwrap().to_toml_string();
+        let sc = decode_submission(&req(None, &toml)).unwrap();
+        assert_eq!(sc, preset("oversubscribed-row").unwrap());
+
+        let sc = decode_submission(&req(
+            Some("application/json"),
+            "{\"preset\": \"inference-row\", \"weeks\": 0.25, \"seed\": 9, \"name\": \"mine\"}",
+        ))
+        .unwrap();
+        assert_eq!(sc.name, "mine");
+        assert_eq!(sc.weeks, 0.25);
+        assert_eq!(sc.exp.seed, 9);
+
+        let envelope = format!("{{\"toml\": {}}}", Json::Str(toml).to_string());
+        let sc = decode_submission(&req(Some("application/json"), &envelope)).unwrap();
+        assert_eq!(sc, preset("oversubscribed-row").unwrap());
+    }
+
+    #[test]
+    fn rejects_malformed_submissions() {
+        assert!(decode_submission(&req(None, "")).is_err());
+        assert!(decode_submission(&req(None, "{\"nope\": 1}")).is_err());
+        assert!(decode_submission(&req(None, "{\"preset\": \"no-such-preset\"}")).is_err());
+        // Valid envelope, invalid scenario: weeks must be > 0.
+        assert!(decode_submission(&req(
+            None,
+            "{\"preset\": \"inference-row\", \"weeks\": -1}"
+        ))
+        .is_err());
+    }
+}

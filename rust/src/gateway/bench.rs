@@ -1,0 +1,233 @@
+//! `polca gateway bench` — the built-in loopback load generator.
+//!
+//! Boots an in-process gateway on an ephemeral port, hammers it with
+//! concurrent scenario submissions over keep-alive connections plus
+//! SSE event-stream subscribers, waits for every run to complete, and
+//! records sustained request throughput and p50/p99 request latency
+//! into `BENCH_gateway.json`. The harness is the acceptance check for
+//! the daemon's concurrency story: every submission must finish with a
+//! report (zero dropped runs) while the event stream stays
+//! well-formed.
+
+use std::sync::atomic::Ordering;
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+use crate::util::json::{parse as parse_json, Json};
+use crate::util::stats::Percentiles;
+
+use super::http::{request_once, sse_collect, Client};
+use super::{Gateway, GatewayConfig};
+
+/// Load-generator knobs (`polca gateway bench` flags).
+#[derive(Debug, Clone)]
+pub struct BenchOpts {
+    /// CI smoke shape: fewer/shorter runs.
+    pub quick: bool,
+    /// Concurrent submitting clients.
+    pub clients: usize,
+    /// Submissions per client.
+    pub per_client: usize,
+    /// Concurrent SSE subscriber threads.
+    pub sse_subs: usize,
+    /// HTTP worker threads for the embedded daemon.
+    pub http_workers: usize,
+    /// Run-queue worker threads for the embedded daemon.
+    pub run_workers: usize,
+    /// Output path for the JSON record.
+    pub out: String,
+}
+
+impl Default for BenchOpts {
+    fn default() -> BenchOpts {
+        BenchOpts {
+            quick: false,
+            clients: 8,
+            per_client: 8,
+            sse_subs: 2,
+            http_workers: 12,
+            run_workers: 4,
+            out: "BENCH_gateway.json".to_string(),
+        }
+    }
+}
+
+impl BenchOpts {
+    /// The simulated horizon per benched run, in weeks (shorter for
+    /// `--quick`).
+    fn weeks(&self) -> f64 {
+        if self.quick {
+            0.002
+        } else {
+            0.01
+        }
+    }
+
+    /// Submissions per client after applying `--quick`.
+    fn submissions(&self) -> usize {
+        if self.quick {
+            self.per_client.min(3)
+        } else {
+            self.per_client
+        }
+    }
+}
+
+/// Drive the load, wait for completion, write `opts.out`, and return
+/// the recorded document.
+pub fn run(opts: &BenchOpts) -> anyhow::Result<Json> {
+    let total = opts.clients * opts.submissions();
+    let cfg = GatewayConfig {
+        addr: "127.0.0.1:0".to_string(),
+        http_workers: opts.http_workers,
+        run_workers: opts.run_workers,
+        time_warp: 0.0,
+        queue_depth: total + 8,
+        accept_queue: 128,
+    };
+    let gw = Gateway::start(&cfg)?;
+    let addr = gw.local_addr();
+    let submit_ms = Mutex::new(Vec::<f64>::new());
+    let status_ms = Mutex::new(Vec::<f64>::new());
+    let incomplete = Mutex::new(0usize);
+    let failed = Mutex::new(0usize);
+    let sse_records = Mutex::new(0usize);
+    let weeks = opts.weeks();
+    let t0 = Instant::now();
+
+    std::thread::scope(|scope| {
+        for c in 0..opts.clients {
+            let submit_ms = &submit_ms;
+            let status_ms = &status_ms;
+            let incomplete = &incomplete;
+            let failed = &failed;
+            scope.spawn(move || {
+                let Ok(mut client) = Client::connect(addr) else {
+                    *incomplete.lock().unwrap() += opts.submissions();
+                    return;
+                };
+                let mut ids = Vec::new();
+                for i in 0..opts.submissions() {
+                    let body = format!(
+                        "{{\"preset\": \"oversubscribed-row\", \"weeks\": {weeks}, \
+                         \"seed\": {}, \"name\": \"bench-c{c}-{i}\"}}",
+                        c * opts.per_client + i + 1
+                    );
+                    let t = Instant::now();
+                    let resp = client.request(
+                        "POST",
+                        "/scenarios",
+                        Some("application/json"),
+                        body.as_bytes(),
+                    );
+                    submit_ms.lock().unwrap().push(t.elapsed().as_secs_f64() * 1e3);
+                    match resp {
+                        Ok((202, text)) => {
+                            if let Some(id) = parse_json(&text)
+                                .ok()
+                                .and_then(|j| j.get("id").and_then(Json::as_str).map(String::from))
+                            {
+                                ids.push(id);
+                            } else {
+                                *incomplete.lock().unwrap() += 1;
+                            }
+                        }
+                        _ => *incomplete.lock().unwrap() += 1,
+                    }
+                }
+                // Poll each submitted run to completion.
+                let deadline = Instant::now() + Duration::from_secs(120);
+                for id in &ids {
+                    loop {
+                        let t = Instant::now();
+                        let resp = client.request("GET", &format!("/runs/{id}"), None, b"");
+                        status_ms.lock().unwrap().push(t.elapsed().as_secs_f64() * 1e3);
+                        match resp {
+                            Ok((200, text)) if text.contains("\"outcome\"") => break,
+                            Ok((500, _)) => {
+                                *failed.lock().unwrap() += 1;
+                                break;
+                            }
+                            Ok(_) if Instant::now() < deadline => {
+                                std::thread::sleep(Duration::from_millis(5));
+                            }
+                            _ => {
+                                *incomplete.lock().unwrap() += 1;
+                                break;
+                            }
+                        }
+                    }
+                }
+            });
+        }
+        for _ in 0..opts.sse_subs {
+            let sse_records = &sse_records;
+            scope.spawn(move || {
+                // The first submission lands as run-000001; retry until
+                // it exists, then collect its stream to the end.
+                for _ in 0..200 {
+                    match sse_collect(
+                        addr,
+                        "/runs/run-000001/events",
+                        200_000,
+                        Duration::from_secs(30),
+                    ) {
+                        Ok(recs) if !recs.is_empty() => {
+                            *sse_records.lock().unwrap() += recs.len();
+                            return;
+                        }
+                        _ => std::thread::sleep(Duration::from_millis(10)),
+                    }
+                }
+            });
+        }
+    });
+
+    let wall_s = t0.elapsed().as_secs_f64();
+    let incomplete = *incomplete.lock().unwrap();
+    let failed = *failed.lock().unwrap();
+    let sse_records = *sse_records.lock().unwrap();
+    let metrics = gw.metrics().clone();
+    let requests = metrics.http_requests.load(Ordering::Relaxed);
+    let rejected = metrics.runs_rejected.load(Ordering::Relaxed);
+
+    // Graceful stop through the public endpoint, then join all threads.
+    let _ = request_once(addr, "POST", "/shutdown", None, b"");
+    gw.trigger_shutdown();
+    gw.join();
+
+    let mut submit = Percentiles::new();
+    for v in submit_ms.lock().unwrap().iter() {
+        submit.push(*v);
+    }
+    let mut status = Percentiles::new();
+    for v in status_ms.lock().unwrap().iter() {
+        status.push(*v);
+    }
+    let doc = Json::obj(vec![
+        ("quick", Json::Bool(opts.quick)),
+        ("clients", Json::num(opts.clients as f64)),
+        ("submissions", Json::num(total as f64)),
+        ("weeks_per_run", Json::num(weeks)),
+        ("http_workers", Json::num(opts.http_workers as f64)),
+        ("run_workers", Json::num(opts.run_workers as f64)),
+        ("wall_s", Json::num(wall_s)),
+        ("requests", Json::num(requests as f64)),
+        ("req_per_s", Json::num(requests as f64 / wall_s.max(1e-9))),
+        ("submit_p50_ms", Json::num(submit.p50())),
+        ("submit_p99_ms", Json::num(submit.p99())),
+        ("status_p50_ms", Json::num(status.p50())),
+        ("status_p99_ms", Json::num(status.p99())),
+        ("sse_subscribers", Json::num(opts.sse_subs as f64)),
+        ("sse_records", Json::num(sse_records as f64)),
+        ("runs_failed", Json::num(failed as f64)),
+        ("runs_rejected_429", Json::num(rejected as f64)),
+        ("dropped_runs", Json::num(incomplete as f64)),
+    ]);
+    std::fs::write(&opts.out, format!("{}\n", doc.to_pretty()))
+        .map_err(|e| anyhow::anyhow!("cannot write {}: {e}", opts.out))?;
+    if incomplete > 0 {
+        anyhow::bail!("{incomplete} of {total} benched runs did not complete");
+    }
+    Ok(doc)
+}

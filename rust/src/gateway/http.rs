@@ -1,0 +1,628 @@
+//! Hand-rolled HTTP/1.1 layer for the gateway daemon: listener,
+//! request parser, bounded accept queue, fixed worker-thread pool,
+//! keep-alive, and graceful shutdown — `std::net` only, no external
+//! dependencies. A minimal loopback client for the bench harness and
+//! the integration tests lives here too.
+//!
+//! Backpressure contract: the acceptor thread never blocks on slow
+//! handlers — accepted connections land in a bounded queue that the
+//! fixed worker pool drains. When the queue is full the acceptor sheds
+//! the connection immediately with `503 Service Unavailable` (and a
+//! `Retry-After` hint) instead of letting the accept backlog grow
+//! unboundedly. Run-queue saturation is a separate, higher layer and
+//! answers `429` (see `gateway::api`).
+//!
+//! Shutdown contract: `Server::shutdown` flips the shared flag, wakes
+//! the acceptor with a loopback connect, and closes the connection
+//! queue; `Server::join` then joins the acceptor and every worker.
+//! Handlers observe the flag between requests (and streaming handlers
+//! poll it), so all threads exit within one poll interval.
+
+use std::collections::VecDeque;
+use std::io::{self, BufRead, BufReader, ErrorKind, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+/// Header-section bound (request line + headers) before `431`-style
+/// rejection; generous for hand-written clients.
+const MAX_HEADER_BYTES: usize = 16 * 1024;
+
+/// Request-body bound before rejection with `413` (scenario TOML files
+/// are a few KiB; 1 MiB is far beyond any legitimate submission).
+const MAX_BODY_BYTES: usize = 1024 * 1024;
+
+/// Idle keep-alive read timeout: a worker parked on a quiet connection
+/// returns it after this long (also bounds shutdown latency).
+pub const READ_TIMEOUT: Duration = Duration::from_secs(5);
+
+/// A parsed HTTP request.
+#[derive(Debug, Clone)]
+pub struct Request {
+    /// Uppercase method (`GET`, `POST`, ...).
+    pub method: String,
+    /// Path with any query string split off.
+    pub path: String,
+    /// Raw query string (may be empty).
+    pub query: String,
+    /// Headers with lowercased names, in arrival order.
+    pub headers: Vec<(String, String)>,
+    /// Request body (`Content-Length` bytes; empty when absent).
+    pub body: Vec<u8>,
+}
+
+impl Request {
+    /// First header value for lowercased `name`.
+    pub fn header(&self, name: &str) -> Option<&str> {
+        self.headers.iter().find(|(k, _)| k == name).map(|(_, v)| v.as_str())
+    }
+
+    /// Body decoded as UTF-8 (lossy; scenario codecs re-validate).
+    pub fn body_str(&self) -> std::borrow::Cow<'_, str> {
+        String::from_utf8_lossy(&self.body)
+    }
+
+    /// Whether the client asked to drop the connection after this
+    /// response (`Connection: close`).
+    pub fn wants_close(&self) -> bool {
+        self.header("connection").map(|v| v.eq_ignore_ascii_case("close")).unwrap_or(false)
+    }
+}
+
+/// Outcome of reading one request off a keep-alive connection.
+#[derive(Debug)]
+pub enum ReadOutcome {
+    /// Clean EOF between requests (client hung up).
+    Eof,
+    /// A complete, well-formed request.
+    Request(Request),
+    /// Malformed or over-limit input: respond with this status and
+    /// message, then close.
+    Bad(u16, &'static str),
+}
+
+/// Read one request from a buffered connection. I/O errors (including
+/// read timeouts on idle keep-alive connections) surface as `Err` and
+/// close the connection.
+pub fn read_request<R: BufRead>(r: &mut R) -> io::Result<ReadOutcome> {
+    let mut line = String::new();
+    if r.read_line(&mut line)? == 0 {
+        return Ok(ReadOutcome::Eof);
+    }
+    let mut parts = line.split_whitespace();
+    let (Some(method), Some(target), Some(version)) = (parts.next(), parts.next(), parts.next())
+    else {
+        return Ok(ReadOutcome::Bad(400, "malformed request line"));
+    };
+    if !version.starts_with("HTTP/1.") {
+        return Ok(ReadOutcome::Bad(505, "HTTP/1.x only"));
+    }
+    let (path, query) = match target.split_once('?') {
+        Some((p, q)) => (p.to_string(), q.to_string()),
+        None => (target.to_string(), String::new()),
+    };
+    let method = method.to_ascii_uppercase();
+
+    let mut headers = Vec::new();
+    let mut header_bytes = line.len();
+    loop {
+        let mut h = String::new();
+        if r.read_line(&mut h)? == 0 {
+            return Ok(ReadOutcome::Bad(400, "connection closed mid-headers"));
+        }
+        header_bytes += h.len();
+        if header_bytes > MAX_HEADER_BYTES {
+            return Ok(ReadOutcome::Bad(431, "header section too large"));
+        }
+        let h = h.trim_end();
+        if h.is_empty() {
+            break;
+        }
+        let Some((k, v)) = h.split_once(':') else {
+            return Ok(ReadOutcome::Bad(400, "malformed header"));
+        };
+        headers.push((k.trim().to_ascii_lowercase(), v.trim().to_string()));
+    }
+
+    let content_length = headers
+        .iter()
+        .find(|(k, _)| k == "content-length")
+        .map(|(_, v)| v.parse::<usize>())
+        .transpose()
+        .map_err(|_| io::Error::new(ErrorKind::InvalidData, "bad content-length"));
+    let content_length = match content_length {
+        Ok(v) => v.unwrap_or(0),
+        Err(_) => return Ok(ReadOutcome::Bad(400, "unparseable content-length")),
+    };
+    if content_length > MAX_BODY_BYTES {
+        return Ok(ReadOutcome::Bad(413, "request body too large"));
+    }
+    let mut body = vec![0u8; content_length];
+    r.read_exact(&mut body)?;
+    Ok(ReadOutcome::Request(Request { method, path, query, headers, body }))
+}
+
+/// Canonical reason phrase for the status codes the gateway emits.
+pub fn status_reason(code: u16) -> &'static str {
+    match code {
+        200 => "OK",
+        202 => "Accepted",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        413 => "Payload Too Large",
+        422 => "Unprocessable Entity",
+        429 => "Too Many Requests",
+        431 => "Request Header Fields Too Large",
+        500 => "Internal Server Error",
+        503 => "Service Unavailable",
+        505 => "HTTP Version Not Supported",
+        _ => "Response",
+    }
+}
+
+/// Write a complete response (status line, `Content-Length`, body) and
+/// flush. `extra` headers are appended verbatim.
+pub fn write_response(
+    w: &mut impl Write,
+    status: u16,
+    content_type: &str,
+    body: &[u8],
+    keep_alive: bool,
+    extra: &[(&str, &str)],
+) -> io::Result<()> {
+    let mut head = format!(
+        "HTTP/1.1 {} {}\r\nContent-Type: {}\r\nContent-Length: {}\r\nConnection: {}\r\n",
+        status,
+        status_reason(status),
+        content_type,
+        body.len(),
+        if keep_alive { "keep-alive" } else { "close" },
+    );
+    for (k, v) in extra {
+        head.push_str(k);
+        head.push_str(": ");
+        head.push_str(v);
+        head.push_str("\r\n");
+    }
+    head.push_str("\r\n");
+    w.write_all(head.as_bytes())?;
+    w.write_all(body)?;
+    w.flush()
+}
+
+/// Bounded handoff from the acceptor to the worker pool.
+struct ConnQueue {
+    cap: usize,
+    inner: Mutex<(VecDeque<TcpStream>, bool)>,
+    cv: Condvar,
+}
+
+impl ConnQueue {
+    fn new(cap: usize) -> ConnQueue {
+        ConnQueue { cap: cap.max(1), inner: Mutex::new((VecDeque::new(), false)), cv: Condvar::new() }
+    }
+
+    /// Hand a connection to the pool; gives it back when full or closed
+    /// (the acceptor sheds it with `503`).
+    fn push(&self, stream: TcpStream) -> Result<(), TcpStream> {
+        let mut g = self.inner.lock().unwrap();
+        if g.1 || g.0.len() >= self.cap {
+            return Err(stream);
+        }
+        g.0.push_back(stream);
+        drop(g);
+        self.cv.notify_one();
+        Ok(())
+    }
+
+    /// Blocking pop; `None` once closed and drained.
+    fn pop(&self) -> Option<TcpStream> {
+        let mut g = self.inner.lock().unwrap();
+        loop {
+            if let Some(s) = g.0.pop_front() {
+                return Some(s);
+            }
+            if g.1 {
+                return None;
+            }
+            g = self.cv.wait(g).unwrap();
+        }
+    }
+
+    fn close(&self) {
+        self.inner.lock().unwrap().1 = true;
+        self.cv.notify_all();
+    }
+}
+
+/// Tuning for [`serve`].
+#[derive(Debug, Clone)]
+pub struct HttpConfig {
+    /// Bind address (`127.0.0.1:0` picks an ephemeral port).
+    pub addr: String,
+    /// Worker threads handling connections (SSE subscribers each hold
+    /// one for the life of their stream).
+    pub workers: usize,
+    /// Accepted-connection queue bound; beyond it the acceptor sheds
+    /// with `503`.
+    pub accept_queue: usize,
+}
+
+impl Default for HttpConfig {
+    fn default() -> HttpConfig {
+        HttpConfig { addr: "127.0.0.1:0".to_string(), workers: 8, accept_queue: 64 }
+    }
+}
+
+/// The connection handler worker threads run per request: write the
+/// response (or stream) to `stream`, return whether the connection may
+/// be kept alive for another request.
+pub type Handler = dyn Fn(&Request, &mut TcpStream) -> io::Result<bool> + Send + Sync;
+
+/// A running HTTP server: the bound address plus the thread handles
+/// needed for a graceful stop.
+pub struct Server {
+    /// The actual bound address (resolves `:0` bindings).
+    pub local_addr: SocketAddr,
+    shutdown: Arc<AtomicBool>,
+    queue: Arc<ConnQueue>,
+    acceptor: Option<JoinHandle<()>>,
+    workers: Vec<JoinHandle<()>>,
+    /// Connections shed with 503 since start (acceptor-side counter,
+    /// folded into `/metrics` by the gateway).
+    pub shed: Arc<std::sync::atomic::AtomicU64>,
+    /// Connections accepted into the pool since start.
+    pub accepted: Arc<std::sync::atomic::AtomicU64>,
+}
+
+impl Server {
+    /// Bind and start the acceptor + worker pool. `handler` runs once
+    /// per parsed request on a worker thread.
+    pub fn start(cfg: &HttpConfig, handler: Arc<Handler>) -> io::Result<Server> {
+        let listener = TcpListener::bind(&cfg.addr)?;
+        let local_addr = listener.local_addr()?;
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let queue = Arc::new(ConnQueue::new(cfg.accept_queue));
+        let shed = Arc::new(std::sync::atomic::AtomicU64::new(0));
+        let accepted = Arc::new(std::sync::atomic::AtomicU64::new(0));
+
+        let mut workers = Vec::with_capacity(cfg.workers.max(1));
+        for i in 0..cfg.workers.max(1) {
+            let queue = queue.clone();
+            let shutdown = shutdown.clone();
+            let handler = handler.clone();
+            workers.push(
+                std::thread::Builder::new()
+                    .name(format!("gw-http-{i}"))
+                    .spawn(move || {
+                        while let Some(stream) = queue.pop() {
+                            let _ = handle_connection(stream, &shutdown, handler.as_ref());
+                        }
+                    })
+                    .expect("spawn http worker"),
+            );
+        }
+
+        let acceptor = {
+            let queue = queue.clone();
+            let shutdown = shutdown.clone();
+            let shed = shed.clone();
+            let accepted = accepted.clone();
+            std::thread::Builder::new()
+                .name("gw-accept".to_string())
+                .spawn(move || {
+                    for conn in listener.incoming() {
+                        if shutdown.load(Ordering::SeqCst) {
+                            break;
+                        }
+                        let Ok(stream) = conn else { continue };
+                        match queue.push(stream) {
+                            Ok(()) => {
+                                accepted.fetch_add(1, Ordering::Relaxed);
+                            }
+                            Err(mut stream) => {
+                                shed.fetch_add(1, Ordering::Relaxed);
+                                let _ = stream.set_write_timeout(Some(Duration::from_millis(200)));
+                                let _ = write_response(
+                                    &mut stream,
+                                    503,
+                                    "application/json",
+                                    b"{\"error\": \"accept queue full\"}\n",
+                                    false,
+                                    &[("Retry-After", "1")],
+                                );
+                            }
+                        }
+                    }
+                })
+                .expect("spawn acceptor")
+        };
+
+        Ok(Server {
+            local_addr,
+            shutdown,
+            queue,
+            acceptor: Some(acceptor),
+            workers,
+            shed,
+            accepted,
+        })
+    }
+
+    /// Begin a graceful stop: flag shutdown, wake the acceptor with a
+    /// loopback connect, close the worker queue. Idempotent.
+    pub fn shutdown(&self) {
+        if self.shutdown.swap(true, Ordering::SeqCst) {
+            return;
+        }
+        // The acceptor is parked in accept(); a throwaway connection
+        // wakes it so it can observe the flag and exit.
+        let _ = TcpStream::connect_timeout(&self.local_addr, Duration::from_millis(500));
+        self.queue.close();
+    }
+
+    /// Join the acceptor and every worker (call after [`shutdown`]).
+    pub fn join(mut self) {
+        if let Some(a) = self.acceptor.take() {
+            let _ = a.join();
+        }
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+/// Serve one connection: parse requests in a keep-alive loop, handing
+/// each to the handler until EOF, error, `Connection: close`, or
+/// shutdown.
+fn handle_connection(
+    stream: TcpStream,
+    shutdown: &AtomicBool,
+    handler: &(dyn Fn(&Request, &mut TcpStream) -> io::Result<bool> + Send + Sync),
+) -> io::Result<()> {
+    stream.set_read_timeout(Some(READ_TIMEOUT))?;
+    stream.set_nodelay(true).ok();
+    let mut write_half = stream.try_clone()?;
+    let mut reader = BufReader::new(stream);
+    loop {
+        if shutdown.load(Ordering::SeqCst) {
+            return Ok(());
+        }
+        match read_request(&mut reader) {
+            Ok(ReadOutcome::Eof) => return Ok(()),
+            Ok(ReadOutcome::Bad(status, msg)) => {
+                let body = format!("{{\"error\": \"{msg}\"}}\n");
+                write_response(&mut write_half, status, "application/json", body.as_bytes(), false, &[])?;
+                return Ok(());
+            }
+            Ok(ReadOutcome::Request(req)) => {
+                let keep = handler(&req, &mut write_half)?;
+                if !keep || req.wants_close() || shutdown.load(Ordering::SeqCst) {
+                    return Ok(());
+                }
+            }
+            // Idle keep-alive timeout (or client reset): return the
+            // worker to the pool.
+            Err(e) if matches!(e.kind(), ErrorKind::WouldBlock | ErrorKind::TimedOut) => {
+                return Ok(())
+            }
+            Err(e) => return Err(e),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Loopback client (bench harness, integration tests, CI smoke).
+
+/// A keep-alive HTTP/1.1 client connection for loopback testing.
+pub struct Client {
+    write_half: TcpStream,
+    reader: BufReader<TcpStream>,
+}
+
+impl Client {
+    /// Connect to `addr`.
+    pub fn connect(addr: SocketAddr) -> io::Result<Client> {
+        let stream = TcpStream::connect(addr)?;
+        stream.set_nodelay(true).ok();
+        stream.set_read_timeout(Some(Duration::from_secs(30)))?;
+        let write_half = stream.try_clone()?;
+        Ok(Client { write_half, reader: BufReader::new(stream) })
+    }
+
+    /// Issue one request on the kept-alive connection and read the full
+    /// response. Returns `(status, body)`.
+    pub fn request(
+        &mut self,
+        method: &str,
+        path: &str,
+        content_type: Option<&str>,
+        body: &[u8],
+    ) -> io::Result<(u16, String)> {
+        let mut head = format!("{method} {path} HTTP/1.1\r\nHost: polca-gateway\r\n");
+        if let Some(ct) = content_type {
+            head.push_str(&format!("Content-Type: {ct}\r\n"));
+        }
+        head.push_str(&format!("Content-Length: {}\r\n\r\n", body.len()));
+        self.write_half.write_all(head.as_bytes())?;
+        self.write_half.write_all(body)?;
+        self.write_half.flush()?;
+        read_client_response(&mut self.reader)
+    }
+}
+
+/// Read a response (status line, headers, `Content-Length` body — or
+/// read-to-EOF when the server closes the connection).
+fn read_client_response<R: BufRead>(r: &mut R) -> io::Result<(u16, String)> {
+    let mut line = String::new();
+    if r.read_line(&mut line)? == 0 {
+        return Err(io::Error::new(ErrorKind::UnexpectedEof, "no status line"));
+    }
+    let status: u16 = line
+        .split_whitespace()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .ok_or_else(|| io::Error::new(ErrorKind::InvalidData, format!("bad status line {line:?}")))?;
+    let mut content_length: Option<usize> = None;
+    loop {
+        let mut h = String::new();
+        if r.read_line(&mut h)? == 0 {
+            return Err(io::Error::new(ErrorKind::UnexpectedEof, "eof in headers"));
+        }
+        let h = h.trim_end();
+        if h.is_empty() {
+            break;
+        }
+        if let Some((k, v)) = h.split_once(':') {
+            if k.trim().eq_ignore_ascii_case("content-length") {
+                content_length = v.trim().parse().ok();
+            }
+        }
+    }
+    let body = match content_length {
+        Some(n) => {
+            let mut buf = vec![0u8; n];
+            r.read_exact(&mut buf)?;
+            buf
+        }
+        None => {
+            let mut buf = Vec::new();
+            r.read_to_end(&mut buf)?;
+            buf
+        }
+    };
+    Ok((status, String::from_utf8_lossy(&body).into_owned()))
+}
+
+/// One-shot request on a fresh connection (`Connection: close`).
+pub fn request_once(
+    addr: SocketAddr,
+    method: &str,
+    path: &str,
+    content_type: Option<&str>,
+    body: &[u8],
+) -> io::Result<(u16, String)> {
+    let stream = TcpStream::connect(addr)?;
+    stream.set_nodelay(true).ok();
+    stream.set_read_timeout(Some(Duration::from_secs(30)))?;
+    let mut w = stream.try_clone()?;
+    let mut head = format!("{method} {path} HTTP/1.1\r\nHost: polca-gateway\r\nConnection: close\r\n");
+    if let Some(ct) = content_type {
+        head.push_str(&format!("Content-Type: {ct}\r\n"));
+    }
+    head.push_str(&format!("Content-Length: {}\r\n\r\n", body.len()));
+    w.write_all(head.as_bytes())?;
+    w.write_all(body)?;
+    w.flush()?;
+    read_client_response(&mut BufReader::new(stream))
+}
+
+/// Subscribe to a Server-Sent-Events endpoint and collect the payloads
+/// of up to `max_records` `data:` lines, stopping early when the
+/// server closes the stream. Returns the raw JSON payload strings.
+pub fn sse_collect(
+    addr: SocketAddr,
+    path: &str,
+    max_records: usize,
+    timeout: Duration,
+) -> io::Result<Vec<String>> {
+    let stream = TcpStream::connect(addr)?;
+    stream.set_nodelay(true).ok();
+    stream.set_read_timeout(Some(timeout))?;
+    let mut w = stream.try_clone()?;
+    w.write_all(
+        format!("GET {path} HTTP/1.1\r\nHost: polca-gateway\r\nAccept: text/event-stream\r\nConnection: close\r\n\r\n")
+            .as_bytes(),
+    )?;
+    w.flush()?;
+    let mut r = BufReader::new(stream);
+    // Status line + headers.
+    let mut line = String::new();
+    if r.read_line(&mut line)? == 0 {
+        return Err(io::Error::new(ErrorKind::UnexpectedEof, "no status line"));
+    }
+    if !line.contains("200") {
+        return Err(io::Error::new(ErrorKind::InvalidData, format!("sse status {line:?}")));
+    }
+    loop {
+        let mut h = String::new();
+        if r.read_line(&mut h)? == 0 {
+            return Err(io::Error::new(ErrorKind::UnexpectedEof, "eof in sse headers"));
+        }
+        if h.trim_end().is_empty() {
+            break;
+        }
+    }
+    let mut out = Vec::new();
+    while out.len() < max_records {
+        let mut l = String::new();
+        match r.read_line(&mut l) {
+            Ok(0) => break,
+            Ok(_) => {
+                if let Some(payload) = l.trim_end().strip_prefix("data: ") {
+                    out.push(payload.to_string());
+                }
+            }
+            Err(e) if matches!(e.kind(), ErrorKind::WouldBlock | ErrorKind::TimedOut) => break,
+            Err(e) => return Err(e),
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    #[test]
+    fn parses_a_request_with_body_and_query() {
+        let raw = "POST /scenarios?warp=2 HTTP/1.1\r\nHost: x\r\nContent-Type: application/json\r\nContent-Length: 4\r\n\r\nabcd";
+        let mut r = Cursor::new(raw.as_bytes());
+        match read_request(&mut r).unwrap() {
+            ReadOutcome::Request(req) => {
+                assert_eq!(req.method, "POST");
+                assert_eq!(req.path, "/scenarios");
+                assert_eq!(req.query, "warp=2");
+                assert_eq!(req.header("content-type"), Some("application/json"));
+                assert_eq!(req.body, b"abcd");
+                assert!(!req.wants_close());
+            }
+            other => panic!("expected request, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn eof_malformed_and_oversize_are_distinguished() {
+        assert!(matches!(read_request(&mut Cursor::new(b"")).unwrap(), ReadOutcome::Eof));
+        assert!(matches!(
+            read_request(&mut Cursor::new(b"garbage\r\n\r\n" as &[u8])).unwrap(),
+            ReadOutcome::Bad(400, _)
+        ));
+        let big = format!("GET / HTTP/1.1\r\nContent-Length: {}\r\n\r\n", MAX_BODY_BYTES + 1);
+        assert!(matches!(
+            read_request(&mut Cursor::new(big.as_bytes())).unwrap(),
+            ReadOutcome::Bad(413, _)
+        ));
+        assert!(matches!(
+            read_request(&mut Cursor::new(b"GET / SPDY/3\r\n\r\n" as &[u8])).unwrap(),
+            ReadOutcome::Bad(505, _)
+        ));
+    }
+
+    #[test]
+    fn response_writer_sets_length_and_connection() {
+        let mut buf = Vec::new();
+        write_response(&mut buf, 202, "application/json", b"{}", true, &[("X-Run", "run-000001")])
+            .unwrap();
+        let text = String::from_utf8(buf).unwrap();
+        assert!(text.starts_with("HTTP/1.1 202 Accepted\r\n"), "{text}");
+        assert!(text.contains("Content-Length: 2\r\n"));
+        assert!(text.contains("Connection: keep-alive\r\n"));
+        assert!(text.contains("X-Run: run-000001\r\n"));
+        assert!(text.ends_with("\r\n\r\n{}"));
+    }
+}

@@ -1,0 +1,283 @@
+//! The live run driver: executes queued scenarios on run-queue worker
+//! threads, pacing the discrete-event simulator against wall-clock at
+//! a configurable time-warp and broadcasting the control loop's
+//! observation stream to SSE subscribers.
+//!
+//! Pacing and broadcasting are both implemented as passive
+//! [`Observer`]s composed with [`obs::Tee`](crate::obs::Tee):
+//!
+//! * [`Pacer`] sleeps just enough that simulated time never runs ahead
+//!   of `wall_elapsed × warp` — `--time-warp 60` replays one simulated
+//!   minute per wall second; warp `0` (the default) runs unpaced.
+//! * [`Broadcaster`] converts each event/sample/counter into the same
+//!   JSON record schema as [`Trace::records`](crate::obs::Trace::records)
+//!   and publishes it to the run's [`EventHub`].
+//!
+//! Observation is passive by the PR 6 contract, so a gateway run's
+//! [`ScenarioReport`](crate::scenario::ScenarioReport) is bit-identical
+//! to a direct in-process `Scenario::run()` — which is what makes the
+//! byte-identical report guarantee of `GET /runs/:id` testable.
+//!
+//! Site and region scenarios have no single simulation to observe
+//! (`Scenario::run_observed` refuses them), so they execute unobserved
+//! and their event stream carries only the meta and terminal status
+//! records.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::obs::{EventKind, Observer, SeriesId, Tee};
+use crate::scenario::{error_report_json, Scenario};
+use crate::util::json::Json;
+
+use super::state::{EventHub, Metrics, Registry};
+
+/// Longest single sleep slice while pacing, so a paced run still
+/// notices shutdown promptly.
+const PACE_SLICE: Duration = Duration::from_millis(100);
+
+/// An [`Observer`] that holds simulated time at or below
+/// `wall_elapsed × warp`. Emits nothing; composes with a
+/// [`Broadcaster`] through [`Tee`](crate::obs::Tee).
+pub struct Pacer {
+    warp: f64,
+    started: Instant,
+    shutdown: Arc<AtomicBool>,
+}
+
+impl Pacer {
+    /// New pacer; `warp <= 0` disables pacing entirely. `shutdown`
+    /// cancels remaining sleeps so the daemon can stop mid-run.
+    pub fn new(warp: f64, shutdown: Arc<AtomicBool>) -> Pacer {
+        Pacer { warp, started: Instant::now(), shutdown }
+    }
+
+    fn pace(&self, t_s: f64) {
+        if self.warp <= 0.0 || !t_s.is_finite() {
+            return;
+        }
+        let target = Duration::from_secs_f64((t_s / self.warp).max(0.0));
+        loop {
+            let elapsed = self.started.elapsed();
+            if elapsed >= target || self.shutdown.load(Ordering::Relaxed) {
+                return;
+            }
+            std::thread::sleep((target - elapsed).min(PACE_SLICE));
+        }
+    }
+}
+
+impl Observer for Pacer {
+    fn event(&mut self, t_s: f64, _kind: EventKind) {
+        self.pace(t_s);
+    }
+
+    fn sample(&mut self, _id: SeriesId, t_s: f64, _value: f64) {
+        self.pace(t_s);
+    }
+}
+
+/// An [`Observer`] that serializes every observation into the trace
+/// record schema and publishes it to the run's [`EventHub`].
+pub struct Broadcaster<'a> {
+    hub: &'a EventHub,
+    /// `settle()` is the hot path; counted locally and folded into the
+    /// daemon metrics once at end of run.
+    settles: u64,
+    events_dispatched: u64,
+}
+
+impl<'a> Broadcaster<'a> {
+    /// New broadcaster publishing into `hub`.
+    pub fn new(hub: &'a EventHub) -> Broadcaster<'a> {
+        Broadcaster { hub, settles: 0, events_dispatched: 0 }
+    }
+
+    /// Fold the locally-accumulated hot-path counts into `metrics`.
+    pub fn fold_into(&self, metrics: &Metrics) {
+        Metrics::add(&metrics.sim_settles, self.settles);
+        Metrics::add(&metrics.sim_events, self.events_dispatched);
+    }
+}
+
+impl Observer for Broadcaster<'_> {
+    fn event(&mut self, t_s: f64, kind: EventKind) {
+        self.hub.publish(crate::obs::Event { t_s, kind }.to_record().to_string());
+    }
+
+    fn sample(&mut self, id: SeriesId, t_s: f64, value: f64) {
+        self.hub.publish(
+            Json::obj(vec![
+                ("type", Json::Str("sample".to_string())),
+                ("t_s", Json::num(t_s)),
+                ("series", Json::Str(id.name().to_string())),
+                ("v", Json::num(value)),
+            ])
+            .to_string(),
+        );
+    }
+
+    fn settle(&mut self) {
+        self.settles += 1;
+    }
+
+    fn counter(&mut self, name: &'static str, value: u64) {
+        if name == "events-dispatched" {
+            self.events_dispatched += value;
+        }
+        self.hub.publish(
+            Json::obj(vec![
+                ("type", Json::Str("counter".to_string())),
+                ("name", Json::Str(name.to_string())),
+                ("v", Json::num(value as f64)),
+            ])
+            .to_string(),
+        );
+    }
+}
+
+/// Dequeue-and-run loop for one run-queue worker thread; returns when
+/// the registry closes.
+pub fn run_worker(
+    registry: Arc<Registry>,
+    metrics: Arc<Metrics>,
+    warp: f64,
+    shutdown: Arc<AtomicBool>,
+) {
+    while let Some((id, sc, hub)) = registry.claim() {
+        run_one(&id, &sc, &hub, &registry, &metrics, warp, &shutdown);
+    }
+}
+
+/// Execute one claimed run end to end: meta record, observed (or
+/// plain) execution, terminal status record, registry finish.
+pub fn run_one(
+    id: &str,
+    sc: &Scenario,
+    hub: &EventHub,
+    registry: &Registry,
+    metrics: &Metrics,
+    warp: f64,
+    shutdown: &Arc<AtomicBool>,
+) {
+    hub.publish(
+        Json::obj(vec![
+            ("type", Json::Str("meta".to_string())),
+            ("name", Json::Str(sc.name.clone())),
+            ("run", Json::Str(id.to_string())),
+            ("warp", Json::num(warp.max(0.0))),
+        ])
+        .to_string(),
+    );
+    let observable = sc.site.is_none() && sc.region.is_none();
+    let result = if observable {
+        let mut pacer = Pacer::new(warp, shutdown.clone());
+        let mut caster = Broadcaster::new(hub);
+        let outcome = sc.run_observed(&mut Tee(&mut pacer, &mut caster));
+        caster.fold_into(metrics);
+        outcome
+    } else {
+        sc.run()
+    };
+    match result {
+        Ok(mut report) => {
+            let body = format!("{}\n", report.to_json().to_pretty());
+            hub.publish(status_record(id, "done", None));
+            registry.finish(id, Ok(body));
+        }
+        Err(e) => {
+            let body = format!("{}\n", error_report_json(&sc.name, &e).to_pretty());
+            hub.publish(status_record(id, "failed", Some(&format!("{e:#}"))));
+            registry.finish(id, Err(body));
+        }
+    }
+}
+
+/// The stream-terminating record: `{"type":"status", "run":..,
+/// "status":"done"|"failed"[, "error":..]}`.
+fn status_record(id: &str, status: &str, error: Option<&str>) -> String {
+    let mut pairs = vec![
+        ("type", Json::Str("status".to_string())),
+        ("run", Json::Str(id.to_string())),
+        ("status", Json::Str(status.to_string())),
+    ];
+    if let Some(e) = error {
+        pairs.push(("error", Json::Str(e.to_string())));
+    }
+    Json::obj(pairs).to_string()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scenario::preset;
+
+    fn metrics() -> Arc<Metrics> {
+        Arc::new(Metrics::default())
+    }
+
+    #[test]
+    fn broadcaster_emits_trace_schema_records() {
+        let hub = EventHub::new(1, metrics());
+        let (sub, _) = hub.subscribe();
+        {
+            let mut b = Broadcaster::new(&hub);
+            b.event(2.0, EventKind::BrakeEngaged);
+            b.sample(SeriesId::RowPower, 2.5, 0.8);
+            b.counter("events-dispatched", 9);
+            b.settle();
+            assert_eq!(b.events_dispatched, 9);
+            assert_eq!(b.settles, 1);
+        }
+        let recs = match hub.next(sub, Duration::from_millis(100)) {
+            super::super::state::SubNext::Records(rs) => rs,
+            other => panic!("expected records, got {other:?}"),
+        };
+        assert_eq!(recs.len(), 3);
+        let types: Vec<String> = recs
+            .iter()
+            .map(|r| {
+                crate::util::json::parse(r)
+                    .unwrap()
+                    .get("type")
+                    .and_then(Json::as_str)
+                    .unwrap()
+                    .to_string()
+            })
+            .collect();
+        assert_eq!(types, ["event", "sample", "counter"]);
+    }
+
+    #[test]
+    fn run_one_produces_the_in_process_report_byte_for_byte() {
+        let mut sc = preset("oversubscribed-row").unwrap();
+        sc.weeks = 0.01;
+        let metrics = metrics();
+        let registry = Arc::new(Registry::new(4, metrics.clone()));
+        let view = registry.submit(sc.clone()).unwrap();
+        let (id, claimed, hub) = registry.claim().unwrap();
+        assert_eq!(id, view.id);
+        let shutdown = Arc::new(AtomicBool::new(false));
+        run_one(&id, &claimed, &hub, &registry, &metrics, 0.0, &shutdown);
+        let done = registry.get(&id).unwrap();
+        assert_eq!(done.status, super::super::state::RunStatus::Done);
+        let mut expected = sc.run().unwrap();
+        let expected = format!("{}\n", expected.to_json().to_pretty());
+        assert_eq!(done.body.as_deref().map(|s| s.as_str()), Some(expected.as_str()));
+    }
+
+    #[test]
+    fn pacer_holds_sim_time_to_the_warp() {
+        // 1 simulated second at warp 100 must take ~10ms of wall time.
+        let mut p = Pacer::new(100.0, Arc::new(AtomicBool::new(false)));
+        let t0 = Instant::now();
+        p.event(1.0, EventKind::BrakeEngaged);
+        assert!(t0.elapsed() >= Duration::from_millis(8), "pacer did not sleep");
+        // Unpaced: no sleep at all.
+        let mut p = Pacer::new(0.0, Arc::new(AtomicBool::new(false)));
+        let t0 = Instant::now();
+        p.event(1e9, EventKind::BrakeEngaged);
+        assert!(t0.elapsed() < Duration::from_millis(50));
+    }
+}

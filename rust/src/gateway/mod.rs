@@ -1,0 +1,273 @@
+//! `polca gateway` — the live control-plane daemon: the
+//! telemetry→policy→OOB loop served over HTTP.
+//!
+//! Everything before this module runs the POLCA control loop as a
+//! one-shot batch simulation. The gateway turns it into a long-running
+//! service: scenarios are submitted over HTTP (the same bit-lossless
+//! TOML codec, or a small JSON envelope), executed by a pool of
+//! run-queue workers — optionally paced against wall-clock at a
+//! configurable time-warp — and their control decisions stream to
+//! subscribers as Server-Sent Events while Prometheus metrics track
+//! the daemon. Std-only: the HTTP/1.1 server is hand-rolled over
+//! `std::net::TcpListener` (see [`http`]).
+//!
+//! Layer map:
+//!
+//! * [`http`] — listener, parser, router plumbing, fixed worker pool,
+//!   keep-alive, bounded accept queue (backpressure → `503`),
+//!   graceful shutdown; plus the loopback client for tests/bench.
+//! * [`api`] — endpoint handlers: submission codec, reports, SSE,
+//!   `/healthz`, `/metrics`, `/shutdown`.
+//! * [`live`] — run-queue workers; wall-clock pacing and record
+//!   broadcast as passive observers composed via
+//!   [`obs::Tee`](crate::obs::Tee).
+//! * [`state`] — run registry (deterministic ids, lifecycle
+//!   `Queued → Running → Done/Failed`), per-run event hubs, metrics.
+//! * [`bench`] — the built-in loopback load generator
+//!   (`polca gateway bench`), writing `BENCH_gateway.json`.
+//!
+//! Contrast with `polca serve` (the one-shot PJRT-artifact serving
+//! driver): `serve` loads a real compiled model, plays a fixed request
+//! batch through the coordinator once, and exits; `gateway` is the
+//! long-running daemon around the *simulation* control loop. The two
+//! are cross-referenced in the CLI help.
+//!
+//! Endpoint reference and wire examples: `docs/GATEWAY.md`.
+
+pub mod api;
+pub mod bench;
+pub mod http;
+pub mod live;
+pub mod state;
+
+use std::net::SocketAddr;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+use crate::obs::{emit_diag, DiagEvent};
+
+pub use state::{Metrics, Registry, RunStatus, RunView};
+
+/// Daemon configuration (`polca gateway` flags).
+#[derive(Debug, Clone)]
+pub struct GatewayConfig {
+    /// Bind address; `127.0.0.1:0` picks an ephemeral port (tests).
+    pub addr: String,
+    /// HTTP worker threads (each SSE subscriber occupies one for the
+    /// life of its stream).
+    pub http_workers: usize,
+    /// Run-queue worker threads executing scenarios.
+    pub run_workers: usize,
+    /// Simulated seconds advanced per wall-clock second for observed
+    /// runs; `0` (default) runs unpaced.
+    pub time_warp: f64,
+    /// Run-queue bound; submissions beyond it answer `429`.
+    pub queue_depth: usize,
+    /// Accepted-connection queue bound; connections beyond it are shed
+    /// with `503`.
+    pub accept_queue: usize,
+}
+
+impl Default for GatewayConfig {
+    fn default() -> GatewayConfig {
+        GatewayConfig {
+            addr: "127.0.0.1:7311".to_string(),
+            http_workers: 8,
+            run_workers: 2,
+            time_warp: 0.0,
+            queue_depth: 64,
+            accept_queue: 64,
+        }
+    }
+}
+
+/// Level-triggered graceful-stop signal: an atomic flag for cheap
+/// polling plus a condvar for the orchestrator's blocking wait.
+pub struct ShutdownSignal {
+    flag: AtomicBool,
+    lock: Mutex<bool>,
+    cv: Condvar,
+}
+
+impl ShutdownSignal {
+    /// New, untriggered signal.
+    pub fn new() -> ShutdownSignal {
+        ShutdownSignal { flag: AtomicBool::new(false), lock: Mutex::new(false), cv: Condvar::new() }
+    }
+
+    /// Trip the signal (idempotent).
+    pub fn trigger(&self) {
+        self.flag.store(true, Ordering::SeqCst);
+        *self.lock.lock().unwrap() = true;
+        self.cv.notify_all();
+    }
+
+    /// Whether the signal has been tripped.
+    pub fn is_set(&self) -> bool {
+        self.flag.load(Ordering::SeqCst)
+    }
+
+    /// Block until tripped.
+    pub fn wait(&self) {
+        let mut g = self.lock.lock().unwrap();
+        while !*g {
+            g = self.cv.wait(g).unwrap();
+        }
+    }
+}
+
+impl Default for ShutdownSignal {
+    fn default() -> ShutdownSignal {
+        ShutdownSignal::new()
+    }
+}
+
+/// A running gateway daemon. Obtain with [`Gateway::start`]; stop with
+/// `POST /shutdown`, or programmatically via
+/// [`Gateway::trigger_shutdown`]; either way [`Gateway::join`] blocks
+/// until the stop and then joins every thread (acceptor, HTTP
+/// workers, run-queue workers).
+pub struct Gateway {
+    addr: SocketAddr,
+    server: http::Server,
+    run_workers: Vec<JoinHandle<()>>,
+    registry: Arc<Registry>,
+    metrics: Arc<Metrics>,
+    shutdown: Arc<ShutdownSignal>,
+    shutdown_flag: Arc<AtomicBool>,
+}
+
+impl Gateway {
+    /// Bind, spawn the worker pools, and start serving. Emits
+    /// [`DiagEvent::GatewayStarted`] once the listener is live.
+    pub fn start(cfg: &GatewayConfig) -> anyhow::Result<Gateway> {
+        let metrics = Arc::new(Metrics::default());
+        let registry = Arc::new(Registry::new(cfg.queue_depth, metrics.clone()));
+        let shutdown = Arc::new(ShutdownSignal::new());
+        let shutdown_flag = Arc::new(AtomicBool::new(false));
+
+        let mut run_workers = Vec::with_capacity(cfg.run_workers.max(1));
+        for i in 0..cfg.run_workers.max(1) {
+            let registry = registry.clone();
+            let metrics = metrics.clone();
+            let flag = shutdown_flag.clone();
+            let warp = cfg.time_warp;
+            run_workers.push(
+                std::thread::Builder::new()
+                    .name(format!("gw-run-{i}"))
+                    .spawn(move || live::run_worker(registry, metrics, warp, flag))
+                    .map_err(|e| anyhow::anyhow!("cannot spawn run worker: {e}"))?,
+            );
+        }
+
+        let ctx = Arc::new(api::Ctx {
+            registry: registry.clone(),
+            metrics: metrics.clone(),
+            shutdown: shutdown.clone(),
+            shutdown_flag: shutdown_flag.clone(),
+        });
+        let handler: Arc<http::Handler> =
+            Arc::new(move |req, stream| api::handle(req, stream, &ctx));
+        let http_cfg = http::HttpConfig {
+            addr: cfg.addr.clone(),
+            workers: cfg.http_workers,
+            accept_queue: cfg.accept_queue,
+        };
+        let server = http::Server::start(&http_cfg, handler)
+            .map_err(|e| anyhow::anyhow!("cannot bind gateway on {}: {e}", cfg.addr))?;
+        let addr = server.local_addr;
+        emit_diag(&DiagEvent::GatewayStarted {
+            port: addr.port(),
+            http_workers: cfg.http_workers.max(1),
+            run_workers: cfg.run_workers.max(1),
+        });
+        Ok(Gateway { addr, server, run_workers, registry, metrics, shutdown, shutdown_flag })
+    }
+
+    /// The bound address (resolves `:0` bindings).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// The daemon's run registry (shared; useful for in-process
+    /// inspection in tests and the bench harness).
+    pub fn registry(&self) -> &Arc<Registry> {
+        &self.registry
+    }
+
+    /// The daemon's metric counters.
+    pub fn metrics(&self) -> &Arc<Metrics> {
+        &self.metrics
+    }
+
+    /// Trip the graceful-stop signal (same effect as `POST /shutdown`).
+    pub fn trigger_shutdown(&self) {
+        self.shutdown.trigger();
+    }
+
+    /// Fold acceptor-side counters into the metrics struct so
+    /// `/metrics` reflects connection-level shedding.
+    fn sync_http_counters(&self) {
+        let shed = self.server.shed.load(Ordering::Relaxed);
+        let accepted = self.server.accepted.load(Ordering::Relaxed);
+        let cur_shed = self.metrics.http_shed.load(Ordering::Relaxed);
+        let cur_acc = self.metrics.http_connections.load(Ordering::Relaxed);
+        Metrics::add(&self.metrics.http_shed, shed.saturating_sub(cur_shed));
+        Metrics::add(&self.metrics.http_connections, accepted.saturating_sub(cur_acc));
+    }
+
+    /// Block until the shutdown signal trips, then stop everything and
+    /// join every thread: the registry closes (run workers exit), the
+    /// HTTP layer stops accepting and its workers drain, and all join
+    /// handles are collected.
+    pub fn join(self) {
+        self.shutdown.wait();
+        self.shutdown_flag.store(true, Ordering::SeqCst);
+        self.registry.close();
+        self.server.shutdown();
+        self.sync_http_counters();
+        self.server.join();
+        for w in self.run_workers {
+            let _ = w.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shutdown_signal_levels_and_wakes() {
+        let s = Arc::new(ShutdownSignal::new());
+        assert!(!s.is_set());
+        let waiter = {
+            let s = s.clone();
+            std::thread::spawn(move || s.wait())
+        };
+        s.trigger();
+        waiter.join().unwrap();
+        assert!(s.is_set());
+        // Idempotent.
+        s.trigger();
+        assert!(s.is_set());
+    }
+
+    #[test]
+    fn metrics_render_is_prometheus_text() {
+        let metrics = Arc::new(Metrics::default());
+        let registry = Registry::new(4, metrics.clone());
+        Metrics::add(&metrics.runs_submitted, 3);
+        let text = metrics.render(&registry);
+        assert!(text.contains("# TYPE polca_runs_submitted_total counter"));
+        assert!(text.contains("polca_runs_submitted_total 3\n"));
+        assert!(text.contains("# TYPE polca_runs_queued gauge"));
+        for line in text.lines() {
+            assert!(
+                line.starts_with('#') || line.split_whitespace().count() == 2,
+                "malformed exposition line: {line:?}"
+            );
+        }
+    }
+}

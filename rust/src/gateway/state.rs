@@ -1,0 +1,564 @@
+//! Gateway state: the run registry, the per-run event broadcast hub,
+//! and the daemon-wide metric counters.
+//!
+//! The registry is the single source of truth for every submitted run:
+//! a `Mutex`-guarded map keyed by deterministic run ids
+//! (`run-000001`, `run-000002`, ... in submission order) plus a
+//! bounded FIFO of not-yet-started work that run-queue worker threads
+//! drain through [`Registry::claim`]. Run lifecycle is strictly
+//! `Queued → Running → Done | Failed`; the terminal body (the report
+//! document on success, the shared error document on failure) is
+//! immutable once set, so `GET /runs/:id` can serve it without
+//! re-serialization.
+//!
+//! Each run owns an [`EventHub`] that fans its observation records out
+//! to SSE subscribers: a bounded backlog replays the stream to late
+//! subscribers, and each live subscriber drains a bounded queue — a
+//! subscriber that falls [`SUB_QUEUE_CAP`] records behind is dropped
+//! (with a [`DiagEvent::SubscriberDropped`] notice) instead of ever
+//! backpressuring the simulation.
+
+use std::collections::{BTreeMap, VecDeque};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
+
+use crate::obs::{emit_diag, DiagEvent};
+use crate::scenario::Scenario;
+
+/// Records the backlog retains for replay to late subscribers; older
+/// records fall off the front (the count is exposed in `/metrics`).
+pub const BACKLOG_CAP: usize = 16_384;
+
+/// Pending-record bound per live subscriber; a subscriber this far
+/// behind is dropped rather than slowing the run.
+pub const SUB_QUEUE_CAP: usize = 4_096;
+
+/// Format the deterministic run id for submission sequence `seq`
+/// (1-based): `run-000001`, `run-000002`, ...
+pub fn run_id(seq: u64) -> String {
+    format!("run-{seq:06}")
+}
+
+/// Lifecycle of a submitted run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RunStatus {
+    /// Accepted, waiting for a run-queue worker.
+    Queued,
+    /// A worker is executing the scenario.
+    Running,
+    /// Finished; the report document is available.
+    Done,
+    /// The scenario errored; the error document is available.
+    Failed,
+}
+
+impl RunStatus {
+    /// Lowercase wire label (`"queued"` / `"running"` / ...).
+    pub fn label(self) -> &'static str {
+        match self {
+            RunStatus::Queued => "queued",
+            RunStatus::Running => "running",
+            RunStatus::Done => "done",
+            RunStatus::Failed => "failed",
+        }
+    }
+}
+
+/// Daemon-wide monotonic counters, rendered by `GET /metrics` in
+/// Prometheus text format. All fields are totals since daemon start;
+/// instantaneous state (queue depth, live runs) is read from the
+/// [`Registry`] at render time instead of being mirrored here.
+#[derive(Debug, Default)]
+pub struct Metrics {
+    /// HTTP requests parsed and routed.
+    pub http_requests: AtomicU64,
+    /// TCP connections accepted into the worker pool.
+    pub http_connections: AtomicU64,
+    /// Connections shed with `503` because the accept queue was full.
+    pub http_shed: AtomicU64,
+    /// Scenario submissions accepted (`202`).
+    pub runs_submitted: AtomicU64,
+    /// Submissions rejected with `429` because the run queue was full.
+    pub runs_rejected: AtomicU64,
+    /// Runs finished successfully.
+    pub runs_done: AtomicU64,
+    /// Runs that errored.
+    pub runs_failed: AtomicU64,
+    /// Event-stream subscriptions served.
+    pub sse_subscribers: AtomicU64,
+    /// Subscribers dropped for falling behind their bounded queue.
+    pub sse_dropped: AtomicU64,
+    /// Observation records broadcast to the hubs.
+    pub sse_records: AtomicU64,
+    /// Simulator events dispatched across all finished runs (the obs
+    /// `events-dispatched` end-of-run counter, aggregated).
+    pub sim_events: AtomicU64,
+    /// Energy-segment settlements across all finished runs (the obs
+    /// settle hot-path counter, aggregated).
+    pub sim_settles: AtomicU64,
+}
+
+impl Metrics {
+    /// Bump a counter by `n` (relaxed; totals only, no ordering needs).
+    pub fn add(counter: &AtomicU64, n: u64) {
+        counter.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Render the Prometheus text exposition for `GET /metrics`.
+    /// Counter totals come from `self`; queue/live-run gauges from
+    /// `registry`.
+    pub fn render(&self, registry: &Registry) -> String {
+        let mut out = String::with_capacity(2048);
+        let mut counter = |name: &str, help: &str, v: u64| {
+            out.push_str(&format!(
+                "# HELP {name} {help}\n# TYPE {name} counter\n{name} {v}\n"
+            ));
+        };
+        let g = |c: &AtomicU64| c.load(Ordering::Relaxed);
+        counter("polca_http_requests_total", "HTTP requests routed.", g(&self.http_requests));
+        counter(
+            "polca_http_connections_total",
+            "TCP connections accepted.",
+            g(&self.http_connections),
+        );
+        counter(
+            "polca_http_shed_total",
+            "Connections shed with 503 (accept queue full).",
+            g(&self.http_shed),
+        );
+        counter("polca_runs_submitted_total", "Scenario submissions accepted.", g(&self.runs_submitted));
+        counter(
+            "polca_runs_rejected_total",
+            "Submissions rejected with 429 (run queue full).",
+            g(&self.runs_rejected),
+        );
+        counter("polca_runs_done_total", "Runs finished successfully.", g(&self.runs_done));
+        counter("polca_runs_failed_total", "Runs that errored.", g(&self.runs_failed));
+        counter("polca_sse_subscribers_total", "Event-stream subscriptions served.", g(&self.sse_subscribers));
+        counter(
+            "polca_sse_dropped_total",
+            "Subscribers dropped for falling behind.",
+            g(&self.sse_dropped),
+        );
+        counter("polca_sse_records_total", "Observation records broadcast.", g(&self.sse_records));
+        counter(
+            "polca_sim_events_total",
+            "Simulator events dispatched across finished runs.",
+            g(&self.sim_events),
+        );
+        counter(
+            "polca_sim_settles_total",
+            "Energy segments settled across finished runs.",
+            g(&self.sim_settles),
+        );
+        let counts = registry.counts();
+        for (i, name) in
+            ["polca_runs_queued", "polca_runs_running"].iter().enumerate()
+        {
+            out.push_str(&format!(
+                "# HELP {name} Runs currently in this state.\n# TYPE {name} gauge\n{name} {}\n",
+                counts[i]
+            ));
+        }
+        out
+    }
+}
+
+/// What [`EventHub::next`] yields to a draining subscriber.
+#[derive(Debug)]
+pub enum SubNext {
+    /// New records to forward (may be empty on a wait timeout; the
+    /// caller re-checks shutdown and calls again).
+    Records(Vec<Arc<String>>),
+    /// The run finished and everything pending has been drained.
+    Closed,
+    /// The subscriber fell [`SUB_QUEUE_CAP`] behind and was dropped.
+    Lagged,
+}
+
+struct SubSlot {
+    id: u64,
+    queue: VecDeque<Arc<String>>,
+    dead: bool,
+}
+
+struct HubInner {
+    backlog: VecDeque<Arc<String>>,
+    dropped_backlog: u64,
+    subs: Vec<SubSlot>,
+    next_sub: u64,
+    closed: bool,
+}
+
+/// Per-run fan-out of observation records (JSON-encoded, one record
+/// per string) to SSE subscribers. See the module docs for the
+/// backlog/queue bounding contract.
+pub struct EventHub {
+    run_seq: u64,
+    metrics: Arc<Metrics>,
+    inner: Mutex<HubInner>,
+    cv: Condvar,
+}
+
+impl EventHub {
+    /// New hub for the run with submission sequence `run_seq`.
+    pub fn new(run_seq: u64, metrics: Arc<Metrics>) -> EventHub {
+        EventHub {
+            run_seq,
+            metrics,
+            inner: Mutex::new(HubInner {
+                backlog: VecDeque::new(),
+                dropped_backlog: 0,
+                subs: Vec::new(),
+                next_sub: 0,
+                closed: false,
+            }),
+            cv: Condvar::new(),
+        }
+    }
+
+    /// Broadcast one record: append to the backlog and every live
+    /// subscriber queue; slow subscribers are marked dropped.
+    pub fn publish(&self, record: String) {
+        let rec = Arc::new(record);
+        let mut dropped = 0u64;
+        {
+            let mut g = self.inner.lock().unwrap();
+            if g.backlog.len() >= BACKLOG_CAP {
+                g.backlog.pop_front();
+                g.dropped_backlog += 1;
+            }
+            g.backlog.push_back(rec.clone());
+            for s in g.subs.iter_mut() {
+                if s.dead {
+                    continue;
+                }
+                if s.queue.len() >= SUB_QUEUE_CAP {
+                    s.dead = true;
+                    s.queue.clear();
+                    dropped += 1;
+                } else {
+                    s.queue.push_back(rec.clone());
+                }
+            }
+        }
+        self.cv.notify_all();
+        Metrics::add(&self.metrics.sse_records, 1);
+        if dropped > 0 {
+            Metrics::add(&self.metrics.sse_dropped, dropped);
+            emit_diag(&DiagEvent::SubscriberDropped {
+                run_seq: self.run_seq,
+                pending: SUB_QUEUE_CAP,
+            });
+        }
+    }
+
+    /// The run finished: wake every subscriber so it can drain and
+    /// observe [`SubNext::Closed`]. Idempotent.
+    pub fn close(&self) {
+        self.inner.lock().unwrap().closed = true;
+        self.cv.notify_all();
+    }
+
+    /// Register a subscriber. Returns its id plus a snapshot of the
+    /// backlog taken atomically with registration, so the caller can
+    /// replay history without missing or duplicating records published
+    /// concurrently (those land in the new queue).
+    pub fn subscribe(&self) -> (u64, Vec<Arc<String>>) {
+        let mut g = self.inner.lock().unwrap();
+        let id = g.next_sub;
+        g.next_sub += 1;
+        let snapshot: Vec<Arc<String>> = g.backlog.iter().cloned().collect();
+        g.subs.push(SubSlot { id, queue: VecDeque::new(), dead: false });
+        (id, snapshot)
+    }
+
+    /// Wait up to `wait` for records, then drain the subscriber's
+    /// queue. Unknown ids (already dropped and reaped) read as
+    /// [`SubNext::Lagged`].
+    pub fn next(&self, sub: u64, wait: Duration) -> SubNext {
+        let mut g = self.inner.lock().unwrap();
+        loop {
+            let Some(pos) = g.subs.iter().position(|s| s.id == sub) else {
+                return SubNext::Lagged;
+            };
+            if g.subs[pos].dead {
+                g.subs.remove(pos);
+                return SubNext::Lagged;
+            }
+            if !g.subs[pos].queue.is_empty() {
+                let drained: Vec<Arc<String>> = g.subs[pos].queue.drain(..).collect();
+                return SubNext::Records(drained);
+            }
+            if g.closed {
+                g.subs.remove(pos);
+                return SubNext::Closed;
+            }
+            let (guard, timeout) = self.cv.wait_timeout(g, wait).unwrap();
+            g = guard;
+            if timeout.timed_out() {
+                return SubNext::Records(Vec::new());
+            }
+        }
+    }
+
+    /// Deregister (client went away or the stream ended).
+    pub fn unsubscribe(&self, sub: u64) {
+        let mut g = self.inner.lock().unwrap();
+        g.subs.retain(|s| s.id != sub);
+    }
+
+    /// Records lost off the front of the replay backlog.
+    pub fn dropped_backlog(&self) -> u64 {
+        self.inner.lock().unwrap().dropped_backlog
+    }
+}
+
+/// Immutable snapshot of one run for the API layer.
+#[derive(Clone)]
+pub struct RunView {
+    /// Deterministic run id (`run-000001`, ...).
+    pub id: String,
+    /// The scenario's name.
+    pub name: String,
+    /// Lifecycle state at snapshot time.
+    pub status: RunStatus,
+    /// Terminal document (report on `Done`, error document on
+    /// `Failed`), pretty-printed JSON with a trailing newline — served
+    /// verbatim so it is byte-identical to `polca run --json` output.
+    pub body: Option<Arc<String>>,
+    /// The run's event fan-out hub.
+    pub hub: Arc<EventHub>,
+}
+
+struct Slot {
+    name: String,
+    status: RunStatus,
+    body: Option<Arc<String>>,
+    hub: Arc<EventHub>,
+}
+
+struct RegInner {
+    next_seq: u64,
+    queue: VecDeque<(String, Scenario)>,
+    runs: BTreeMap<String, Slot>,
+    closed: bool,
+}
+
+/// Submission rejected: the run queue is at capacity (HTTP 429).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RegistryFull;
+
+/// The run registry: deterministic ids, the bounded run queue, and
+/// per-run terminal state. One instance per daemon, shared by the API
+/// handlers and the run-queue workers.
+pub struct Registry {
+    metrics: Arc<Metrics>,
+    queue_cap: usize,
+    inner: Mutex<RegInner>,
+    cv: Condvar,
+}
+
+impl Registry {
+    /// New registry whose run queue holds at most `queue_cap` pending
+    /// scenarios.
+    pub fn new(queue_cap: usize, metrics: Arc<Metrics>) -> Registry {
+        Registry {
+            metrics,
+            queue_cap: queue_cap.max(1),
+            inner: Mutex::new(RegInner {
+                next_seq: 1,
+                queue: VecDeque::new(),
+                runs: BTreeMap::new(),
+                closed: false,
+            }),
+            cv: Condvar::new(),
+        }
+    }
+
+    /// Enqueue a validated scenario. Returns the new run's snapshot,
+    /// or [`RegistryFull`] when the queue is at capacity.
+    pub fn submit(&self, sc: Scenario) -> Result<RunView, RegistryFull> {
+        let (view, seq, queued) = {
+            let mut g = self.inner.lock().unwrap();
+            if g.queue.len() >= self.queue_cap || g.closed {
+                return Err(RegistryFull);
+            }
+            let seq = g.next_seq;
+            g.next_seq += 1;
+            let id = run_id(seq);
+            let hub = Arc::new(EventHub::new(seq, self.metrics.clone()));
+            let name = sc.name.clone();
+            g.runs.insert(
+                id.clone(),
+                Slot { name: name.clone(), status: RunStatus::Queued, body: None, hub: hub.clone() },
+            );
+            g.queue.push_back((id.clone(), sc));
+            let queued = g.queue.len();
+            (RunView { id, name, status: RunStatus::Queued, body: None, hub }, seq, queued)
+        };
+        self.cv.notify_one();
+        Metrics::add(&self.metrics.runs_submitted, 1);
+        emit_diag(&DiagEvent::RunAccepted { run_seq: seq, queued });
+        Ok(view)
+    }
+
+    /// Blocking claim for run-queue workers: waits for a queued run,
+    /// marks it `Running`, and hands back everything needed to execute
+    /// it. Returns `None` once the registry is closed (shutdown).
+    pub fn claim(&self) -> Option<(String, Scenario, Arc<EventHub>)> {
+        let mut g = self.inner.lock().unwrap();
+        loop {
+            if g.closed {
+                return None;
+            }
+            if let Some((id, sc)) = g.queue.pop_front() {
+                let hub = {
+                    let slot = g.runs.get_mut(&id).expect("queued run must be registered");
+                    slot.status = RunStatus::Running;
+                    slot.hub.clone()
+                };
+                return Some((id, sc, hub));
+            }
+            g = self.cv.wait(g).unwrap();
+        }
+    }
+
+    /// Record a run's terminal state and close its hub. `Ok` carries
+    /// the report document, `Err` the error document (both served
+    /// verbatim by `GET /runs/:id`).
+    pub fn finish(&self, id: &str, result: Result<String, String>) {
+        let ok = result.is_ok();
+        let hub = {
+            let mut g = self.inner.lock().unwrap();
+            let Some(slot) = g.runs.get_mut(id) else { return };
+            let (status, body) = match result {
+                Ok(body) => (RunStatus::Done, body),
+                Err(body) => (RunStatus::Failed, body),
+            };
+            slot.status = status;
+            slot.body = Some(Arc::new(body));
+            slot.hub.clone()
+        };
+        hub.close();
+        let counter = if ok { &self.metrics.runs_done } else { &self.metrics.runs_failed };
+        Metrics::add(counter, 1);
+    }
+
+    /// Snapshot one run.
+    pub fn get(&self, id: &str) -> Option<RunView> {
+        let g = self.inner.lock().unwrap();
+        g.runs.get(id).map(|s| RunView {
+            id: id.to_string(),
+            name: s.name.clone(),
+            status: s.status,
+            body: s.body.clone(),
+            hub: s.hub.clone(),
+        })
+    }
+
+    /// Snapshot every run in id (= submission) order.
+    pub fn list(&self) -> Vec<RunView> {
+        let g = self.inner.lock().unwrap();
+        g.runs
+            .iter()
+            .map(|(id, s)| RunView {
+                id: id.clone(),
+                name: s.name.clone(),
+                status: s.status,
+                body: s.body.clone(),
+                hub: s.hub.clone(),
+            })
+            .collect()
+    }
+
+    /// `[queued, running, done, failed]` run counts.
+    pub fn counts(&self) -> [u64; 4] {
+        let g = self.inner.lock().unwrap();
+        let mut out = [0u64; 4];
+        for s in g.runs.values() {
+            let i = match s.status {
+                RunStatus::Queued => 0,
+                RunStatus::Running => 1,
+                RunStatus::Done => 2,
+                RunStatus::Failed => 3,
+            };
+            out[i] += 1;
+        }
+        out
+    }
+
+    /// Stop accepting and dispensing work: `submit` returns
+    /// [`RegistryFull`] and `claim` returns `None`. Queued-but-unrun
+    /// scenarios are abandoned (the daemon is exiting).
+    pub fn close(&self) {
+        self.inner.lock().unwrap().closed = true;
+        self.cv.notify_all();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scenario::preset;
+
+    fn metrics() -> Arc<Metrics> {
+        Arc::new(Metrics::default())
+    }
+
+    #[test]
+    fn run_ids_are_deterministic_and_ordered() {
+        assert_eq!(run_id(1), "run-000001");
+        assert_eq!(run_id(42), "run-000042");
+        let reg = Registry::new(8, metrics());
+        let a = reg.submit(preset("oversubscribed-row").unwrap()).unwrap();
+        let b = reg.submit(preset("inference-row").unwrap()).unwrap();
+        assert_eq!(a.id, "run-000001");
+        assert_eq!(b.id, "run-000002");
+        assert_eq!(a.status, RunStatus::Queued);
+    }
+
+    #[test]
+    fn queue_capacity_rejects_and_lifecycle_advances() {
+        let reg = Registry::new(1, metrics());
+        reg.submit(preset("inference-row").unwrap()).unwrap();
+        assert!(matches!(reg.submit(preset("inference-row").unwrap()), Err(RegistryFull)));
+        let (id, _sc, _hub) = reg.claim().unwrap();
+        assert_eq!(reg.get(&id).unwrap().status, RunStatus::Running);
+        // Queue drained: capacity is available again.
+        reg.submit(preset("inference-row").unwrap()).unwrap();
+        reg.finish(&id, Ok("{}\n".to_string()));
+        let v = reg.get(&id).unwrap();
+        assert_eq!(v.status, RunStatus::Done);
+        assert_eq!(v.body.as_deref().map(|s| s.as_str()), Some("{}\n"));
+        assert_eq!(reg.counts(), [1, 0, 1, 0]);
+        reg.close();
+        assert!(reg.claim().is_none());
+        assert!(matches!(reg.submit(preset("inference-row").unwrap()), Err(RegistryFull)));
+    }
+
+    #[test]
+    fn hub_replays_backlog_and_drops_slow_subscribers() {
+        let hub = EventHub::new(1, metrics());
+        hub.publish("{\"a\":1}".to_string());
+        // Late subscriber sees the backlog as its snapshot.
+        let (sub, snapshot) = hub.subscribe();
+        assert_eq!(snapshot.len(), 1);
+        hub.publish("{\"a\":2}".to_string());
+        match hub.next(sub, Duration::from_millis(50)) {
+            SubNext::Records(rs) => assert_eq!(rs.len(), 1),
+            other => panic!("expected records, got {other:?}"),
+        }
+        hub.close();
+        assert!(matches!(hub.next(sub, Duration::from_millis(50)), SubNext::Closed));
+
+        // A subscriber that never drains is dropped at the bound.
+        let hub = EventHub::new(2, metrics());
+        let (lazy, _) = hub.subscribe();
+        for i in 0..(SUB_QUEUE_CAP + 2) {
+            hub.publish(format!("{{\"i\":{i}}}"));
+        }
+        assert!(matches!(hub.next(lazy, Duration::from_millis(10)), SubNext::Lagged));
+    }
+}

@@ -41,6 +41,14 @@
 //! * **Serving path** — [`runtime`] (PJRT executables AOT-compiled from
 //!   JAX/Pallas), [`coordinator`] (router, batcher, KV-cache slots) — the
 //!   real-model end-to-end driver with POLCA in the loop.
+//! * **Control-plane daemon** — [`gateway`]: the live HTTP service
+//!   around the telemetry→policy→OOB loop — std-only hand-rolled
+//!   HTTP/1.1, scenario submission over the TOML codec or a JSON
+//!   envelope, wall-clock-paced runs at a configurable time-warp,
+//!   Server-Sent-Events streaming of control decisions, Prometheus
+//!   metrics, and a built-in loopback load generator
+//!   (`polca gateway`, `polca gateway bench`; wire reference in
+//!   `docs/GATEWAY.md`).
 //! * **Scenario layer** — [`scenario`]: one declarative [`scenario::Scenario`]
 //!   spec composing workload, cluster shape, SKU, policy knobs, training
 //!   mix, fault plan, and site topology; fluent builder, lossless TOML
@@ -64,6 +72,7 @@ pub mod exec;
 pub mod experiments;
 pub mod faults;
 pub mod fleet;
+pub mod gateway;
 pub mod metrics;
 pub mod obs;
 pub mod perfmodel;

@@ -29,6 +29,22 @@
 //!   calibrate [--weeks W] [--seed N]  Fit power_scale to the Table-2 peak.
 //!   serve [--artifacts DIR] [--requests N] [--oversub F]
 //!       Mini end-to-end serving run (real PJRT model, POLCA in loop).
+//!       One-shot: plays a fixed request batch and exits — for the
+//!       long-running control-plane daemon use `polca gateway`.
+//!   gateway [--addr HOST:PORT] [--workers N] [--run-workers N]
+//!       [--time-warp F] [--queue N]
+//!       Live control-plane daemon over HTTP: submit scenarios
+//!       (POST /scenarios, TOML or JSON envelope), fetch reports
+//!       (GET /runs/:id — byte-identical to `polca run --json`),
+//!       stream control decisions as Server-Sent Events
+//!       (GET /runs/:id/events), /healthz, Prometheus /metrics,
+//!       graceful POST /shutdown. `--time-warp F` paces runs at F
+//!       simulated seconds per wall second (0 = unpaced). Contrast
+//!       with `polca serve`, the one-shot PJRT artifact driver.
+//!   gateway bench [--quick] [--clients N] [--per-client N]
+//!       Built-in loopback load generator; writes req/s and p50/p99
+//!       latency to BENCH_gateway.json. Endpoint reference:
+//!       docs/GATEWAY.md.
 //!   fleet region [plan|trace|validate] [--sites N] [--clusters N]
 //!       [--grid-frac F] [--policy P] [--max-added PCT] [--step PCT]
 //!       [--validate-sites N] [--quick] [--serial] [--out-dir DIR]
@@ -79,6 +95,19 @@ fn main() {
             t1 * 100.0,
             t2 * 100.0
         ),
+        polca::obs::DiagEvent::GatewayStarted { port, http_workers, run_workers } => eprintln!(
+            "gateway listening on port {port} \
+             ({http_workers} http workers, {run_workers} run workers) — \
+             POST /scenarios, GET /runs/:id, GET /runs/:id/events, \
+             /healthz, /metrics, POST /shutdown"
+        ),
+        polca::obs::DiagEvent::RunAccepted { run_seq, queued } => {
+            eprintln!("accepted run-{run_seq:06} ({queued} queued)")
+        }
+        polca::obs::DiagEvent::SubscriberDropped { run_seq, pending } => eprintln!(
+            "dropped a slow event-stream subscriber of run-{run_seq:06} \
+             ({pending} records behind)"
+        ),
     }));
     let args = Args::from_env();
     let result = match args.subcommand.as_deref() {
@@ -90,6 +119,7 @@ fn main() {
         Some("tune") => cmd_tune(&args),
         Some("calibrate") => cmd_calibrate(&args),
         Some("serve") => cmd_serve(&args),
+        Some("gateway") => cmd_gateway(&args),
         Some("fleet") => cmd_fleet(&args),
         Some("mixed") => cmd_mixed(&args),
         Some("faults") => cmd_faults(&args),
@@ -112,7 +142,9 @@ fn main() {
 fn print_help() {
     println!(
         "polca — Power Oversubscription in LLM Cloud Providers (reproduction)\n\n\
-         usage: polca <run|trace|scenario|figure|tune|calibrate|serve> [options]\n\
+         usage: polca <run|trace|scenario|figure|tune|calibrate|serve|gateway> [options]\n\
+         serve   = one-shot PJRT-artifact serving run; gateway = the\n\
+         long-running control-plane daemon over HTTP (docs/GATEWAY.md)\n\
          try:   polca scenario list\n       \
                 polca run oversubscribed-row --quick\n       \
                 polca run cascade-faults --trace cascade.jsonl\n       \
@@ -122,6 +154,8 @@ fn print_help() {
                 polca scenario save mixed-row --out my-row.toml\n       \
                 polca figure fig13 --out-dir out\n       \
                 polca serve --requests 16\n       \
+                polca gateway --addr 127.0.0.1:7311 --time-warp 600\n       \
+                polca gateway bench --quick\n       \
                 polca fleet region plan --sites 50\n       \
                 polca fleet region validate --quick\n\n\
          deprecated aliases (each builds a scenario internally):\n       \
@@ -203,16 +237,18 @@ fn run_and_print(sc: &Scenario, args: &Args) -> anyhow::Result<()> {
     sc.validate()?;
     eprintln!("{}", sc.describe());
     let t = std::time::Instant::now();
-    let mut report = match args.get("trace") {
-        Some(path) => {
-            let mut rec = polca::obs::Recorder::new(polca::obs::RecorderConfig::default());
-            let mut report = sc.run_observed(&mut rec)?;
-            let records = rec.into_trace(&sc.name).records();
-            report.timeline = Some(polca::obs::export::incident_timeline(&records));
-            write_trace(&records, Path::new(path), args.get_or("trace-format", "jsonl"))?;
-            report
+    // On failure with --json, stdout still carries exactly one
+    // machine-readable document — the shared error serialization
+    // (`scenario::error_report_json`) also used by the gateway's
+    // failed-run reports — before the nonzero exit.
+    let mut report = match run_with_optional_trace(sc, args) {
+        Ok(report) => report,
+        Err(e) => {
+            if args.flag("json") {
+                println!("{}", polca::scenario::error_report_json(&sc.name, &e).to_pretty());
+            }
+            return Err(e);
         }
-        None => sc.run()?,
     };
     let wall = t.elapsed().as_secs_f64();
     if args.flag("json") {
@@ -229,6 +265,25 @@ fn run_and_print(sc: &Scenario, args: &Args) -> anyhow::Result<()> {
         );
     }
     Ok(())
+}
+
+/// The run itself (with the optional `--trace` recording), split out
+/// of [`run_and_print`] so its error can be serialized for `--json`.
+fn run_with_optional_trace(
+    sc: &Scenario,
+    args: &Args,
+) -> anyhow::Result<polca::scenario::ScenarioReport> {
+    match args.get("trace") {
+        Some(path) => {
+            let mut rec = polca::obs::Recorder::new(polca::obs::RecorderConfig::default());
+            let mut report = sc.run_observed(&mut rec)?;
+            let records = rec.into_trace(&sc.name).records();
+            report.timeline = Some(polca::obs::export::incident_timeline(&records));
+            write_trace(&records, Path::new(path), args.get_or("trace-format", "jsonl"))?;
+            Ok(report)
+        }
+        None => sc.run(),
+    }
 }
 
 /// Write trace records to `path` in one of the export formats.
@@ -1009,6 +1064,75 @@ fn cmd_fleet_region(args: &Args) -> anyhow::Result<()> {
         other => anyhow::bail!("unknown fleet region mode '{other}' (plan|trace|validate)"),
     }
     Ok(())
+}
+
+/// `polca gateway [bench]` — the live control-plane daemon (and its
+/// built-in loopback load generator). Contrast with `polca serve`
+/// (one-shot PJRT artifact driver): the gateway is long-running,
+/// speaks HTTP, and executes *scenarios*, not compiled models.
+fn cmd_gateway(args: &Args) -> anyhow::Result<()> {
+    use polca::gateway::{bench, Gateway, GatewayConfig};
+    match args.positionals.first().map(|s| s.as_str()) {
+        Some("bench") => {
+            let defaults = bench::BenchOpts::default();
+            let opts = bench::BenchOpts {
+                quick: args.flag("quick"),
+                clients: args.get_usize("clients", defaults.clients),
+                per_client: args.get_usize("per-client", defaults.per_client),
+                sse_subs: args.get_usize("sse-subs", defaults.sse_subs),
+                http_workers: args.get_usize("workers", defaults.http_workers),
+                run_workers: args.get_usize("run-workers", defaults.run_workers),
+                out: args.get_or("out", &defaults.out).to_string(),
+            };
+            let doc = bench::run(&opts)?;
+            let f = |k: &str| doc.get(k).and_then(polca::util::json::Json::as_f64).unwrap_or(0.0);
+            println!(
+                "gateway bench: {} submissions from {} clients in {:.2}s \
+                 ({:.0} req/s over {} requests)",
+                f("submissions"),
+                f("clients"),
+                f("wall_s"),
+                f("req_per_s"),
+                f("requests"),
+            );
+            println!(
+                "submit latency p50 {:.2}ms p99 {:.2}ms; status p50 {:.2}ms p99 {:.2}ms; \
+                 {} SSE records; {} dropped runs",
+                f("submit_p50_ms"),
+                f("submit_p99_ms"),
+                f("status_p50_ms"),
+                f("status_p99_ms"),
+                f("sse_records"),
+                f("dropped_runs"),
+            );
+            println!("wrote {}", opts.out);
+            Ok(())
+        }
+        None | Some("serve") => {
+            let defaults = GatewayConfig::default();
+            let cfg = GatewayConfig {
+                addr: args.get_or("addr", &defaults.addr).to_string(),
+                http_workers: args.get_usize("workers", defaults.http_workers),
+                run_workers: args.get_usize("run-workers", defaults.run_workers),
+                time_warp: args.get_f64("time-warp", defaults.time_warp),
+                queue_depth: args.get_usize("queue", defaults.queue_depth),
+                accept_queue: args.get_usize("accept-queue", defaults.accept_queue),
+            };
+            let gw = Gateway::start(&cfg)?;
+            eprintln!(
+                "gateway up on http://{} — stop with: \
+                 curl -X POST http://{}/shutdown",
+                gw.local_addr(),
+                gw.local_addr()
+            );
+            gw.join();
+            eprintln!("gateway stopped (all workers joined)");
+            Ok(())
+        }
+        Some(other) => anyhow::bail!(
+            "unknown gateway mode '{other}' (expected no mode, 'serve', or 'bench')"
+        ),
+    }
 }
 
 fn cmd_serve(args: &Args) -> anyhow::Result<()> {

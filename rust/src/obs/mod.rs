@@ -73,6 +73,58 @@ impl Observer for NoopObserver {
     const ENABLED: bool = false;
 }
 
+/// Fan one observation stream out to two observers — e.g. a
+/// [`Recorder`] capturing a trace while a live broadcaster forwards
+/// the same records to streaming subscribers (`polca gateway`).
+///
+/// `ENABLED` is the OR of the two sides, and every hook re-checks each
+/// side's own `ENABLED`, so teeing onto a [`NoopObserver`] costs that
+/// side nothing. Both sides receive identical copies; the tee adds no
+/// channel back into the simulation, so the passivity property holds
+/// exactly as it does for a single observer.
+#[derive(Debug)]
+pub struct Tee<'a, A, B>(pub &'a mut A, pub &'a mut B);
+
+impl<A: Observer, B: Observer> Observer for Tee<'_, A, B> {
+    const ENABLED: bool = A::ENABLED || B::ENABLED;
+
+    fn event(&mut self, t_s: f64, kind: EventKind) {
+        if A::ENABLED {
+            self.0.event(t_s, kind);
+        }
+        if B::ENABLED {
+            self.1.event(t_s, kind);
+        }
+    }
+
+    fn sample(&mut self, id: SeriesId, t_s: f64, value: f64) {
+        if A::ENABLED {
+            self.0.sample(id, t_s, value);
+        }
+        if B::ENABLED {
+            self.1.sample(id, t_s, value);
+        }
+    }
+
+    fn settle(&mut self) {
+        if A::ENABLED {
+            self.0.settle();
+        }
+        if B::ENABLED {
+            self.1.settle();
+        }
+    }
+
+    fn counter(&mut self, name: &'static str, value: u64) {
+        if A::ENABLED {
+            self.0.counter(name, value);
+        }
+        if B::ENABLED {
+            self.1.counter(name, value);
+        }
+    }
+}
+
 /// Capacity bounds for a [`Recorder`].
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct RecorderConfig {
@@ -275,6 +327,31 @@ pub enum DiagEvent {
         /// T2 after the step.
         t2: f64,
     },
+    /// The gateway daemon bound its listener and is accepting
+    /// submissions (`polca gateway`).
+    GatewayStarted {
+        /// TCP port the daemon is listening on.
+        port: u16,
+        /// HTTP worker threads serving connections.
+        http_workers: usize,
+        /// Run-queue worker threads executing scenarios.
+        run_workers: usize,
+    },
+    /// The gateway accepted a scenario submission into its run queue.
+    RunAccepted {
+        /// Submission sequence number (run id `run-{seq:06}`).
+        run_seq: u64,
+        /// Runs waiting in the queue after this one was enqueued.
+        queued: usize,
+    },
+    /// A gateway event-stream subscriber fell behind its bounded queue
+    /// and was dropped (slow consumers never backpressure the run).
+    SubscriberDropped {
+        /// Submission sequence number of the run being streamed.
+        run_seq: u64,
+        /// Records pending for the subscriber when it was dropped.
+        pending: usize,
+    },
 }
 
 static DIAG: OnceLock<Box<dyn Fn(&DiagEvent) + Send + Sync>> = OnceLock::new();
@@ -341,6 +418,28 @@ mod tests {
         // Round-trip through JSONL is lossless at the record level.
         let back = export::parse_jsonl(&trace.to_jsonl()).unwrap();
         assert_eq!(back, records);
+    }
+
+    #[test]
+    fn tee_fans_out_to_both_observers() {
+        let mut a = Recorder::new(RecorderConfig::default());
+        let mut b = Recorder::new(RecorderConfig::default());
+        {
+            let mut tee = Tee(&mut a, &mut b);
+            tee.event(1.0, EventKind::BrakeEngaged);
+            tee.sample(SeriesId::RowPower, 1.0, 0.5);
+            tee.counter("events-dispatched", 3);
+            tee.settle();
+        }
+        for rec in [&a, &b] {
+            assert_eq!(rec.events().count(), 1);
+        }
+        let ta = a.into_trace("a");
+        let tb = b.into_trace("b");
+        assert_eq!(ta.events, tb.events);
+        assert_eq!(ta.counters, tb.counters);
+        assert!(<Tee<'static, Recorder, NoopObserver> as Observer>::ENABLED);
+        assert!(!<Tee<'static, NoopObserver, NoopObserver> as Observer>::ENABLED);
     }
 
     #[test]

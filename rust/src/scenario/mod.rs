@@ -714,6 +714,19 @@ impl Scenario {
     }
 }
 
+/// The error-path counterpart of [`ScenarioReport::to_json`]: the one
+/// machine-readable error document shared by `polca run --json` and
+/// the gateway's failed-run reports, so the two surfaces cannot drift.
+/// The shape mirrors the success document's envelope (`"name"` at the
+/// top level) with `"error"` in place of `"outcome"`.
+pub fn error_report_json(name: &str, err: &anyhow::Error) -> crate::util::json::Json {
+    use crate::util::json::Json;
+    Json::obj(vec![
+        ("name", Json::Str(name.to_string())),
+        ("error", Json::Str(format!("{err:#}"))),
+    ])
+}
+
 /// A row scenario's result: the simulation report, its impact vs the
 /// unthrottled baseline, and the Table-5 verdict.
 #[derive(Debug, Clone)]

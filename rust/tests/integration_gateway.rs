@@ -1,0 +1,219 @@
+//! Gateway integration: real-TCP round trips against an in-process
+//! daemon on an ephemeral port.
+//!
+//! The load-bearing properties pinned here:
+//!
+//! * a report fetched over HTTP is **byte-identical** to a direct
+//!   in-process `Scenario::run()` of the same scenario (the passivity
+//!   contract of the broadcast observer plus the shared
+//!   `ScenarioReport::to_json` serialization);
+//! * ≥ 8 concurrent clients can submit simultaneously with zero
+//!   dropped runs, each getting its own correct deterministic report;
+//! * the SSE stream parses back record-by-record exactly like a
+//!   recorded JSONL trace (`obs::export::parse_jsonl`), framed by a
+//!   `meta` record and a terminal `status` record;
+//! * the daemon boots on an ephemeral port, answers `/healthz` and
+//!   `/metrics` on a kept-alive connection, and shuts down gracefully
+//!   through the shutdown endpoint with every thread joined.
+
+use std::net::SocketAddr;
+use std::time::{Duration, Instant};
+
+use polca::gateway::http::{request_once, sse_collect, Client};
+use polca::gateway::{Gateway, GatewayConfig};
+use polca::obs::export::parse_jsonl;
+use polca::scenario::preset;
+use polca::util::json::{parse as parse_json, Json};
+
+fn boot(run_workers: usize) -> Gateway {
+    let cfg = GatewayConfig {
+        addr: "127.0.0.1:0".to_string(),
+        http_workers: 12,
+        run_workers,
+        time_warp: 0.0,
+        queue_depth: 64,
+        accept_queue: 64,
+    };
+    Gateway::start(&cfg).expect("gateway must boot on an ephemeral port")
+}
+
+/// Poll `GET /runs/:id` until the terminal report document appears.
+fn await_report(addr: SocketAddr, id: &str) -> String {
+    let deadline = Instant::now() + Duration::from_secs(120);
+    loop {
+        let (code, body) =
+            request_once(addr, "GET", &format!("/runs/{id}"), None, b"").expect("GET /runs/:id");
+        match code {
+            200 if body.contains("\"outcome\"") => return body,
+            200 => {} // still queued/running
+            500 => panic!("run {id} failed: {body}"),
+            other => panic!("unexpected status {other} for {id}: {body}"),
+        }
+        assert!(Instant::now() < deadline, "run {id} did not finish in time");
+        std::thread::sleep(Duration::from_millis(10));
+    }
+}
+
+fn submit(addr: SocketAddr, envelope: &str) -> String {
+    let (code, body) =
+        request_once(addr, "POST", "/scenarios", Some("application/json"), envelope.as_bytes())
+            .expect("POST /scenarios");
+    assert_eq!(code, 202, "submission rejected: {body}");
+    parse_json(&body)
+        .expect("submission response must be JSON")
+        .get("id")
+        .and_then(Json::as_str)
+        .expect("submission response carries an id")
+        .to_string()
+}
+
+#[test]
+fn report_over_tcp_is_byte_identical_to_in_process_run() {
+    let gw = boot(2);
+    let addr = gw.local_addr();
+
+    let id = submit(addr, "{\"preset\": \"oversubscribed-row\", \"weeks\": 0.02}");
+    assert_eq!(id, "run-000001", "run ids are deterministic");
+    let via_http = await_report(addr, &id);
+
+    let mut sc = preset("oversubscribed-row").unwrap();
+    sc.weeks = 0.02;
+    let mut report = sc.run().unwrap();
+    let in_process = format!("{}\n", report.to_json().to_pretty());
+
+    assert_eq!(via_http, in_process, "gateway report must be byte-identical");
+
+    gw.trigger_shutdown();
+    gw.join();
+}
+
+#[test]
+fn eight_concurrent_clients_all_complete_with_correct_reports() {
+    let gw = boot(4);
+    let addr = gw.local_addr();
+    const CLIENTS: usize = 8;
+
+    // Expected reports, computed in-process per seed before any load.
+    let mut expected = Vec::new();
+    for seed in 1..=CLIENTS as u64 {
+        let mut sc = preset("inference-row").unwrap();
+        sc.weeks = 0.01;
+        sc.exp.seed = seed;
+        let mut report = sc.run().unwrap();
+        expected.push(format!("{}\n", report.to_json().to_pretty()));
+    }
+
+    let got: Vec<String> = std::thread::scope(|scope| {
+        let handles: Vec<_> = (1..=CLIENTS as u64)
+            .map(|seed| {
+                scope.spawn(move || {
+                    let envelope = format!(
+                        "{{\"preset\": \"inference-row\", \"weeks\": 0.01, \"seed\": {seed}}}"
+                    );
+                    let id = submit(addr, &envelope);
+                    await_report(addr, &id)
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("client thread")).collect()
+    });
+
+    // Zero dropped runs, and every client saw its own seed's report.
+    assert_eq!(got.len(), CLIENTS);
+    for (i, (g, e)) in got.iter().zip(&expected).enumerate() {
+        assert_eq!(g, e, "client {} got a wrong or shared report", i + 1);
+    }
+
+    let (_, metrics_text) = request_once(addr, "GET", "/metrics", None, b"").unwrap();
+    assert!(metrics_text.contains("polca_runs_done_total 8"), "{metrics_text}");
+    assert!(metrics_text.contains("polca_runs_rejected_total 0"), "{metrics_text}");
+
+    gw.trigger_shutdown();
+    gw.join();
+}
+
+#[test]
+fn sse_stream_parses_like_a_jsonl_trace() {
+    let gw = boot(2);
+    let addr = gw.local_addr();
+
+    // 0.005 weeks ≈ 3000 sim-seconds: long enough for telemetry events,
+    // series samples, and fault activity, short enough that the whole
+    // stream fits the replay backlog (BACKLOG_CAP) — so the assertions
+    // below hold even when the unpaced run finishes before we connect.
+    let id = submit(addr, "{\"preset\": \"cascade-faults\", \"weeks\": 0.005}");
+    let payloads = sse_collect(
+        addr,
+        &format!("/runs/{id}/events"),
+        1_000_000,
+        Duration::from_secs(120),
+    )
+    .expect("SSE stream");
+    assert!(!payloads.is_empty(), "SSE stream carried no records");
+
+    // Every payload line must parse exactly like a JSONL trace.
+    let jsonl = payloads.join("\n");
+    let records = parse_jsonl(&jsonl).expect("SSE payloads must be valid JSONL records");
+    assert_eq!(records.len(), payloads.len());
+
+    let kind = |r: &Json| r.get("type").and_then(Json::as_str).unwrap_or("?").to_string();
+    assert_eq!(kind(&records[0]), "meta", "stream must open with the meta record");
+    assert_eq!(
+        kind(records.last().unwrap()),
+        "status",
+        "stream must end with the terminal status record"
+    );
+    assert_eq!(
+        records.last().unwrap().get("status").and_then(Json::as_str),
+        Some("done")
+    );
+    let kinds: Vec<String> = records.iter().map(kind).collect();
+    assert!(kinds.contains(&"event".to_string()), "no control-loop events in the stream");
+    assert!(kinds.contains(&"sample".to_string()), "no series samples in the stream");
+    // Events carry numeric timestamps, like trace records.
+    for r in &records {
+        if kind(r) == "event" || kind(r) == "sample" {
+            assert!(r.get("t_s").and_then(Json::as_f64).is_some(), "record without t_s: {r:?}");
+        }
+    }
+
+    // A late subscriber replays the finished run's backlog.
+    await_report(addr, &id);
+    let replay =
+        sse_collect(addr, &format!("/runs/{id}/events"), 1_000_000, Duration::from_secs(30))
+            .expect("replay stream");
+    assert!(!replay.is_empty(), "finished runs must replay their stream");
+    assert_eq!(replay.first(), payloads.first());
+
+    gw.trigger_shutdown();
+    gw.join();
+}
+
+#[test]
+fn health_metrics_keepalive_and_graceful_shutdown_endpoint() {
+    let gw = boot(1);
+    let addr = gw.local_addr();
+
+    // Several requests over one kept-alive connection.
+    let mut client = Client::connect(addr).unwrap();
+    let (code, body) = client.request("GET", "/healthz", None, b"").unwrap();
+    assert_eq!(code, 200);
+    let health = parse_json(&body).unwrap();
+    assert_eq!(health.get("status").and_then(Json::as_str), Some("ok"));
+    let (code, body) = client.request("GET", "/metrics", None, b"").unwrap();
+    assert_eq!(code, 200);
+    assert!(body.contains("polca_http_requests_total"), "{body}");
+    let (code, _) = client.request("GET", "/no-such-endpoint", None, b"").unwrap();
+    assert_eq!(code, 404);
+    let (code, _) = client.request("GET", "/runs/run-999999", None, b"").unwrap();
+    assert_eq!(code, 404);
+    let (code, body) = client.request("POST", "/scenarios", None, b"not = valid").unwrap();
+    assert_eq!(code, 400, "{body}");
+
+    // Graceful stop via the endpoint: acknowledged, then every thread
+    // joins (join() would hang forever if a worker leaked).
+    let (code, body) = request_once(addr, "POST", "/shutdown", None, b"").unwrap();
+    assert_eq!(code, 200);
+    assert!(body.contains("shutting-down"), "{body}");
+    gw.join();
+}

@@ -214,6 +214,96 @@ rm -rf "$trace_dir"
 echo "== region cross-validation (polca fleet region validate --quick)"
 ./target/release/polca fleet region validate --quick | tail -n 6
 
+# Gateway gate (ISSUE 9): black-box smoke of the control-plane daemon —
+# boot the real binary in the background, poll /healthz until live,
+# submit the quick example scenario files over real HTTP, await their
+# reports, check /metrics, stop it through POST /shutdown, and require
+# a clean exit. Then the report contract, literally: the body served by
+# GET /runs/:id must be byte-identical to `polca run <same file> --json`
+# stdout (both are the one ScenarioReport::to_json serialization).
+echo "== gateway smoke (boot, submit over HTTP, report diff vs --json, shutdown)"
+if command -v python3 >/dev/null 2>&1; then
+  gw_dir=$(mktemp -d)
+  gw_port=$((20000 + RANDOM % 20000))
+  ./target/release/polca gateway --addr "127.0.0.1:$gw_port" >"$gw_dir/gw.log" 2>&1 &
+  gw_pid=$!
+  python3 - "$gw_port" "$gw_dir" <<'PY' || {
+import json, sys, time, urllib.request
+
+port, out = sys.argv[1], sys.argv[2]
+base = f"http://127.0.0.1:{port}"
+
+def get(path):
+    with urllib.request.urlopen(base + path, timeout=10) as r:
+        return r.read().decode()
+
+def post(path, body=b""):
+    req = urllib.request.Request(base + path, data=body, method="POST")
+    with urllib.request.urlopen(req, timeout=10) as r:
+        return r.status, r.read().decode()
+
+for _ in range(200):  # poll /healthz until the daemon is live
+    try:
+        assert json.loads(get("/healthz"))["status"] == "ok"
+        break
+    except OSError:
+        time.sleep(0.05)
+else:
+    sys.exit("gateway never became healthy")
+
+files = [
+    "examples/scenarios/oversubscribed-quick.toml",
+    "examples/scenarios/custom-fault-timeline.toml",
+]
+ids = []
+for f in files:
+    status, text = post("/scenarios", open(f, "rb").read())
+    assert status == 202, (status, text)
+    ids.append(json.loads(text)["id"])
+
+deadline = time.time() + 300
+for i, rid in enumerate(ids):
+    while True:
+        text = get(f"/runs/{rid}")
+        if '"outcome"' in text:
+            break
+        assert json.loads(text)["status"] in ("queued", "running"), text
+        assert time.time() < deadline, f"{rid} never finished"
+        time.sleep(0.1)
+    if i == 0:
+        open(f"{out}/report.json", "w").write(text)
+
+m = get("/metrics")
+assert f"polca_runs_done_total {len(ids)}" in m, m
+assert "polca_runs_failed_total 0" in m, m
+status, text = post("/shutdown")
+assert json.loads(text)["status"] == "shutting-down", text
+print(f"   gateway smoke OK: {len(ids)} runs done, metrics live")
+PY
+    cat "$gw_dir/gw.log" >&2
+    kill "$gw_pid" 2>/dev/null || true
+    exit 1
+  }
+  wait "$gw_pid" || { echo "gateway did not exit cleanly after /shutdown" >&2; exit 1; }
+  ./target/release/polca run examples/scenarios/oversubscribed-quick.toml --json \
+    >"$gw_dir/direct.json" 2>/dev/null
+  diff "$gw_dir/report.json" "$gw_dir/direct.json" || {
+    echo "gateway report differs from polca run --json output" >&2
+    exit 1
+  }
+  rm -rf "$gw_dir"
+else
+  echo "   (python3 not found — gateway smoke skipped)"
+fi
+
+# Gateway bench smoke (ISSUE 9): the built-in load generator must drive
+# an embedded daemon to completion (zero dropped runs — it exits nonzero
+# otherwise) and record throughput/latency to BENCH_gateway.json.
+echo "== gateway bench smoke (polca gateway bench --quick writes BENCH_gateway.json)"
+rm -f BENCH_gateway.json
+./target/release/polca gateway bench --quick | tail -n 6
+test -f BENCH_gateway.json || { echo "BENCH_gateway.json was not written" >&2; exit 1; }
+
 # Bench smoke (ISSUE 5): record the sweep serial-vs-parallel trajectory
 # to BENCH_sim.json on every CI run. Remove any stale file first so the
 # existence check below proves THIS run wrote it.
