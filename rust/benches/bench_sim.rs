@@ -1,16 +1,20 @@
 //! L3 bench: discrete-event simulator throughput (events/s) — the §Perf
 //! headline for the evaluation vehicle — plus the DES queue in
-//! isolation, the scenario-executor speedup (a quick sweep batch,
+//! isolation, a per-layer hot-path breakdown (queue ops old vs new,
+//! power-model eval direct vs memo-hit, RNG/sampling, settlement
+//! proxy), the scenario-executor speedup (a quick sweep batch,
 //! serial vs parallel), the traced-vs-untraced recording overhead
 //! (`trace_overhead_frac`), the adaptive-controller overhead
 //! (`adapt_overhead_frac`, `retune_evals_per_s`), and a
 //! profiled-batch utilization snapshot,
 //! recorded to `BENCH_sim.json` so the perf trajectory of the
 //! matrix/sweep/trace paths is tracked across PRs.
+//! `docs/PERFORMANCE.md` explains how to read each key.
 //!
 //! `--smoke` (the CI mode) shrinks every measurement budget so the run
 //! finishes in seconds while still writing a complete BENCH_sim.json.
 
+use std::collections::HashMap;
 use std::time::Duration;
 
 use polca::benchkit::{bench, black_box, BenchConfig};
@@ -18,9 +22,16 @@ use polca::exec::{run_batch, run_batch_profiled, ExecConfig};
 use polca::obs::{batch_stats, Recorder, RecorderConfig};
 use polca::policy::adapt::AdaptConfig;
 use polca::policy::engine::PolicyKind;
+use polca::power::gpu::{CapMode, Phase};
+use polca::power::server::ServerPowerModel;
+use polca::sim::reference::ReferenceQueue;
 use polca::sim::EventQueue;
 use polca::simulation::{run, run_observed, SimConfig};
+use polca::util::hash::FxBuildHasher;
 use polca::util::json::Json;
+use polca::util::rng::Rng;
+use polca::workload::arrivals::ArrivalProcess;
+use polca::workload::spec::{sample_request, table4};
 
 /// One item of the sweep batch the executor benchmark fans out: the
 /// quick-matrix shape (small row, short horizon, varying policy/seed).
@@ -63,7 +74,10 @@ fn main() {
         BenchConfig::slow()
     };
 
-    // Raw event-queue churn: schedule + pop cycles.
+    // Raw event-queue churn: schedule + pop cycles, new 4-ary heap vs
+    // the retained pre-rewrite binary heap (ISSUE 10 breakdown: the
+    // same workload through both, so the queue win is isolated from
+    // every other change).
     let queue_r = bench("event_queue_schedule_pop_1k", &cfg, 1000.0, || {
         let mut q = EventQueue::new();
         for i in 0..1000u64 {
@@ -74,6 +88,122 @@ fn main() {
         }
     });
     println!("{}", queue_r.report());
+    let queue_ref_r = bench("event_queue_reference_schedule_pop_1k", &cfg, 1000.0, || {
+        let mut q = ReferenceQueue::new();
+        for i in 0..1000u64 {
+            q.schedule_at(i * 7 % 997, i);
+        }
+        while let Some(x) = q.pop() {
+            black_box(x);
+        }
+    });
+    println!("{}  [old binary heap]", queue_ref_r.report());
+
+    // Hot-path breakdown: the ingredient costs behind one simulated
+    // event, each measured in isolation at the public API (ISSUE 10).
+    //
+    // Power-model eval, direct: what every refresh_power paid before
+    // the exact-input memo.
+    let power_model = ServerPowerModel::default();
+    let eval_inputs: Vec<(Phase, CapMode)> = {
+        let phases = [
+            Phase::Idle,
+            Phase::Token { batch: 1.0 },
+            Phase::Prompt { total_input: 512.0 },
+            Phase::Prompt { total_input: 4096.0 },
+        ];
+        let caps = [CapMode::None, CapMode::FreqCap { mhz: 1110.0 }];
+        phases.iter().flat_map(|&p| caps.iter().map(move |&c| (p, c))).collect()
+    };
+    let n_evals = eval_inputs.len() as f64 * 125.0;
+    let eval_r = bench("power_eval_direct_1k", &cfg, n_evals, || {
+        for _ in 0..125 {
+            for &(p, c) in &eval_inputs {
+                black_box(power_model.server_power_w(p, c, false));
+            }
+        }
+    });
+    println!("{}  [= evals/s]", eval_r.report());
+    // Power-model eval, memo hit: the FxHash table lookup that replaces
+    // the direct eval on the (dominant) warm path — same key shape as
+    // simulation::powermemo.
+    let mut memo: HashMap<(u8, u64, u64), f64, FxBuildHasher> = HashMap::default();
+    let keys: Vec<(u8, u64, u64)> = eval_inputs
+        .iter()
+        .map(|&(p, c)| {
+            let (tag, pb) = match p {
+                Phase::Idle => (0u8, 0u64),
+                Phase::Token { batch } => (1, batch.to_bits()),
+                Phase::Prompt { total_input } => (2, total_input.to_bits()),
+            };
+            let cb = match c {
+                CapMode::None => u64::MAX,
+                CapMode::FreqCap { mhz } => mhz.to_bits(),
+                CapMode::PowerCap { frac_of_tdp } => frac_of_tdp.to_bits(),
+            };
+            (tag, pb, cb)
+        })
+        .collect();
+    for (&(p, c), &k) in eval_inputs.iter().zip(&keys) {
+        memo.insert(k, power_model.server_power_w(p, c, false));
+    }
+    let memo_r = bench("power_eval_memo_hit_1k", &cfg, n_evals, || {
+        for _ in 0..125 {
+            for k in &keys {
+                black_box(memo.get(k));
+            }
+        }
+    });
+    println!("{}  [= hits/s]", memo_r.report());
+    // RNG/sampling: the per-arrival work (one request sample + the next
+    // arrival time of a diurnal thinned-Poisson stream).
+    let specs = table4();
+    let mut sample_rng = Rng::new(42);
+    let sample_r = bench("rng_sample_request_1k", &cfg, 1000.0, || {
+        for i in 0..1000usize {
+            black_box(sample_request(&specs[i % specs.len()], &mut sample_rng));
+        }
+    });
+    println!("{}  [= samples/s]", sample_r.report());
+    let mut arrivals = ArrivalProcess::new(0.5, Rng::new(7));
+    let mut arr_t = 0.0;
+    let arrival_r = bench("rng_arrival_next_1k", &cfg, 1000.0, || {
+        for _ in 0..1000 {
+            arr_t = black_box(arrivals.next_after(arr_t));
+        }
+    });
+    println!("{}  [= draws/s]", arrival_r.report());
+    // Settlement proxy: the energy accumulator settles on every power
+    // change and telemetry tick, inseparable from refresh_power at the
+    // public surface — so its trajectory is tracked as the events/s
+    // delta when the run additionally settles + records a dense power
+    // series (one sample a minute) vs none.
+    let mut settle_base = SimConfig::default();
+    settle_base.exp.row.num_servers = 12;
+    settle_base.deployed_servers = 16;
+    settle_base.weeks = 0.02;
+    settle_base.exp.seed = 9;
+    settle_base.power_scale = 1.35;
+    let mut settle_dense = settle_base.clone();
+    settle_dense.series_sample_s = 60.0;
+    let base_events = run(&settle_base).events as f64;
+    let dense_events = run(&settle_dense).events as f64;
+    let settle_base_r = bench("sim_quickrow_no_series", &cfg, base_events, || {
+        black_box(run(&settle_base));
+    });
+    println!("{}  [= events/s]", settle_base_r.report());
+    let settle_dense_r = bench("sim_quickrow_series_60s", &cfg, dense_events, || {
+        black_box(run(&settle_dense));
+    });
+    println!("{}  [= events/s]", settle_dense_r.report());
+    let settlement_series_delta_frac =
+        1.0 - settle_dense_r.throughput() / settle_base_r.throughput();
+    println!(
+        "settlement/series overhead: {:.1}% ({:.0} -> {:.0} events/s with 60 s sampling)",
+        settlement_series_delta_frac * 100.0,
+        settle_base_r.throughput(),
+        settle_dense_r.throughput()
+    );
 
     // One simulated day of the full cluster model, per policy.
     let mut sim_events_per_s = Vec::new();
@@ -193,6 +323,12 @@ fn main() {
         ("smoke", Json::Bool(smoke)),
         ("hardware_threads", Json::Num(threads as f64)),
         ("event_queue_ops_per_s", Json::Num(queue_r.throughput())),
+        ("event_queue_ref_ops_per_s", Json::Num(queue_ref_r.throughput())),
+        ("power_eval_direct_per_s", Json::Num(eval_r.throughput())),
+        ("power_eval_memo_hit_per_s", Json::Num(memo_r.throughput())),
+        ("rng_sample_request_per_s", Json::Num(sample_r.throughput())),
+        ("rng_arrival_next_per_s", Json::Num(arrival_r.throughput())),
+        ("settlement_series_delta_frac", Json::num(settlement_series_delta_frac)),
         (
             "sim_events_per_s",
             Json::obj(

@@ -34,7 +34,10 @@ use std::collections::HashMap;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Mutex, OnceLock};
 
+use crate::characterize::catalog::ModelSpec;
 use crate::policy::engine::PolicyKind;
+use crate::util::rng::Rng;
+use crate::workload::spec::{sample_request, WorkloadSpec};
 
 use super::{run, SimConfig};
 
@@ -132,6 +135,96 @@ pub fn power_scale_for_row(baseline_servers: usize) -> f64 {
     scale
 }
 
+// ---- mean-service estimation cache (ISSUE 10) --------------------------
+//
+// `ServerLayer::new` derives per-workload arrival rates from a
+// 400-sample Monte Carlo estimate of each workload's nominal service
+// time. That estimate re-ran on every one of the thousands of Sim
+// constructions in a sweep — despite being fully determined by the
+// estimation stream's seed and the latency-relevant model knobs. It is
+// memoized here, beside the power-scale cache, with the same contract:
+// one deterministic estimation per distinct key, counted for the unit
+// test.
+//
+// Key design note: ISSUE 10 asks for the (model_name, perf_mult,
+// workload_power_mult) triple; the key here is that triple *plus the
+// estimation stream's seed*. The seed is required for bit-identity —
+// the stream is forked from the config-seeded root RNG *after* the
+// workload assignment shuffle, so it varies with `exp.seed` and with
+// the deployed-server count, and collapsing distinct seeds onto one
+// triple would change every existing trace. The triple alone would
+// also be unsound for correctness, not just identity: the estimate's
+// value genuinely depends on the sample stream.
+
+/// Mean-service memo key: (estimation-stream seed, model name,
+/// `perf_mult` bits, `workload_power_mult` bits).
+type MeanServiceKey = (u64, String, u64, u64);
+
+/// How many mean-service Monte Carlo estimations this process has run
+/// (cache misses). Repeated constructions at the same key never
+/// increment it.
+static MEAN_SERVICE_ESTIMATIONS: AtomicUsize = AtomicUsize::new(0);
+
+/// Mean-service estimations run so far in this process (a diagnostics /
+/// test hook for the crate-internal `mean_service_for` memo cache,
+/// mirroring [`calibration_runs`]).
+pub fn mean_service_estimations() -> usize {
+    MEAN_SERVICE_ESTIMATIONS.load(Ordering::SeqCst)
+}
+
+/// Test hook: the cached estimate for a key, if any (same contract as
+/// [`cached_fit`]: a present key can never be re-estimated).
+#[cfg(test)]
+fn cached_mean_service(key: &MeanServiceKey) -> Option<Vec<f64>> {
+    mean_service_cache().lock().expect("mean-service cache poisoned").get(key).cloned()
+}
+
+fn mean_service_cache() -> &'static Mutex<HashMap<MeanServiceKey, Vec<f64>>> {
+    static CACHE: OnceLock<Mutex<HashMap<MeanServiceKey, Vec<f64>>>> = OnceLock::new();
+    CACHE.get_or_init(|| Mutex::new(HashMap::new()))
+}
+
+/// Per-workload mean nominal service times, memoized. On a miss this
+/// runs the exact pre-memo estimation loop — one `Rng::new(est_seed)`
+/// stream threaded across every workload spec in order, 400 samples
+/// each — so hit and miss return bit-identical vectors.
+///
+/// `model` must already carry the `perf_mult` / `workload_power_mult`
+/// knob adjustments the key names (it does: `ServerLayer::new` applies
+/// them before calling here), and `specs` is the fixed Table-4 set.
+pub(crate) fn mean_service_for(
+    est_seed: u64,
+    model_name: &str,
+    perf_mult: f64,
+    workload_power_mult: f64,
+    model: &ModelSpec,
+    specs: &[WorkloadSpec],
+) -> Vec<f64> {
+    let key: MeanServiceKey =
+        (est_seed, model_name.to_string(), perf_mult.to_bits(), workload_power_mult.to_bits());
+    let mut cache = mean_service_cache().lock().expect("mean-service cache poisoned");
+    if let Some(v) = cache.get(&key) {
+        return v.clone();
+    }
+    // Estimated under the lock, like the power-scale fit: concurrent
+    // first constructions at one key must produce exactly one
+    // estimation.
+    MEAN_SERVICE_ESTIMATIONS.fetch_add(1, Ordering::SeqCst);
+    let mut est_rng = Rng::new(est_seed);
+    let mut mean_service: Vec<f64> = Vec::with_capacity(specs.len());
+    for spec in specs {
+        let mut acc = 0.0;
+        let n = 400;
+        for _ in 0..n {
+            let (i, o) = sample_request(spec, &mut est_rng);
+            acc += model.request_latency_s(i, o, 1.0, 1.0);
+        }
+        mean_service.push(acc / n as f64);
+    }
+    cache.insert(key, mean_service.clone());
+    mean_service
+}
+
 /// Fit `power_scale` so the base row (baseline servers, no capping)
 /// peaks at `target_peak` (Table 2 inference: 0.79). Returns the scale.
 pub fn calibrate(target_peak: f64, weeks: f64, seed: u64) -> f64 {
@@ -197,5 +290,32 @@ mod tests {
             (0.8..=DEFAULT_POWER_SCALE).contains(&first),
             "11-server fit {first} outside the plausible band"
         );
+    }
+
+    #[test]
+    fn mean_service_estimates_exactly_once_per_distinct_key() {
+        let model = crate::characterize::catalog::find("BLOOM-176B").expect("catalog model");
+        let specs = crate::workload::spec::table4();
+        // A seed no simulation construction can collide with: real keys
+        // come from `fork_seed` on a config-seeded stream, while this
+        // test owns its literal.
+        let est_seed = 0xDEAD_10CC_u64;
+        let key: MeanServiceKey =
+            (est_seed, "BLOOM-176B".to_string(), 1.0f64.to_bits(), 1.0f64.to_bits());
+        assert!(cached_mean_service(&key).is_none(), "key must be novel to this test binary");
+        let before = mean_service_estimations();
+        let first = mean_service_for(est_seed, "BLOOM-176B", 1.0, 1.0, &model, &specs);
+        assert!(mean_service_estimations() > before, "a novel key must run an estimation");
+        assert_eq!(cached_mean_service(&key), Some(first.clone()), "estimate memoized under key");
+        // Estimations happen only on a miss, under the cache lock, so a
+        // present key can never be re-estimated: this lookup is a hit.
+        let second = mean_service_for(est_seed, "BLOOM-176B", 1.0, 1.0, &model, &specs);
+        assert_eq!(first, second, "memoized estimate must be bit-stable");
+        assert_eq!(first.len(), specs.len(), "one mean per workload spec");
+        assert!(first.iter().all(|&m| m > 0.0), "service times are positive: {first:?}");
+        // A different seed is a different key: a second estimation runs
+        // and its result differs (different sample realization).
+        let other = mean_service_for(est_seed ^ 1, "BLOOM-176B", 1.0, 1.0, &model, &specs);
+        assert_ne!(first, other, "distinct sample streams give distinct estimates");
     }
 }

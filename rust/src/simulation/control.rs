@@ -85,7 +85,7 @@ impl<'a, O: Observer> Sim<'a, O> {
             self.obs.event(now_s, kind);
         }
         // Advance all running work at the old ratios first.
-        for idx in 0..self.servers.states.len() {
+        for idx in 0..self.servers.n_servers() {
             self.advance_work(idx, now_s);
         }
         self.control.braked = on;
@@ -94,8 +94,12 @@ impl<'a, O: Observer> Sim<'a, O> {
         } else {
             self.acct.report.brake_time_s += now_s - self.control.brake_engaged_at;
         }
-        for idx in 0..self.servers.states.len() {
-            self.servers.states[idx].gen = self.servers.states[idx].gen.wrapping_add(1);
+        // Row-wide actuation sweep: the gen bump walks one contiguous
+        // hot vector (the SoA payoff), then each server re-settles.
+        for g in &mut self.servers.gen {
+            *g = g.wrapping_add(1);
+        }
+        for idx in 0..self.servers.n_servers() {
             self.refresh_power(idx);
             self.schedule_phase_end(idx, now_s);
         }
@@ -115,11 +119,11 @@ impl<'a, O: Observer> Sim<'a, O> {
             self.obs.event(now_s, EventKind::Telemetry { reported: p });
             let true_p = self.normalized_row_power();
             let budget_mult = self.faults.budget_mult;
-            let queued = self.servers.states.iter().filter(|s| s.queued.is_some()).count();
+            let queued = self.servers.cold.iter().filter(|c| c.queued.is_some()).count();
             let caps = if self.control.braked {
-                self.servers.states.len()
+                self.servers.n_servers()
             } else {
-                self.servers.states.iter().filter(|s| s.freq_cap_mhz.is_some()).count()
+                self.servers.freq_cap_mhz.iter().filter(|c| c.is_some()).count()
             };
             self.obs.sample(SeriesId::RowPower, now_s, true_p);
             self.obs.sample(SeriesId::ReportedPower, now_s, p);
@@ -228,12 +232,10 @@ impl<'a, O: Observer> Sim<'a, O> {
                     if O::ENABLED {
                         self.obs.event(now_s, EventKind::CapAcked { class: target, mhz });
                     }
-                    for idx in 0..self.servers.states.len() {
+                    for idx in 0..self.servers.n_servers() {
                         // Cap-ignoring servers acknowledge (the ack is
                         // recorded above) but do not change frequency.
-                        if self.servers.states[idx].priority == target
-                            && !self.faults.cap_ignore[idx]
-                        {
+                        if self.servers.priority[idx] == target && !self.faults.cap_ignore[idx] {
                             self.set_server_cap(idx, Some(mhz), now_s);
                         }
                     }
@@ -244,10 +246,8 @@ impl<'a, O: Observer> Sim<'a, O> {
                     if O::ENABLED {
                         self.obs.event(now_s, EventKind::UncapAcked { class: target });
                     }
-                    for idx in 0..self.servers.states.len() {
-                        if self.servers.states[idx].priority == target
-                            && !self.faults.cap_ignore[idx]
-                        {
+                    for idx in 0..self.servers.n_servers() {
+                        if self.servers.priority[idx] == target && !self.faults.cap_ignore[idx] {
                             self.set_server_cap(idx, None, now_s);
                         }
                     }

@@ -71,8 +71,16 @@ pub(crate) struct Core {
 
 impl Core {
     pub(crate) fn new(cfg: &SimConfig) -> Core {
+        // Size the queue from the config instead of a hard constant
+        // (ISSUE 10): the steady-state population is ~2 pending events
+        // per deployed server (next Arrival + in-flight PhaseEnd), plus
+        // both edges of every fault episode (seeded up front), plus
+        // fixed slack for the recurring singletons (Telemetry, series
+        // sampling, OOB applies, training phases, retune checks, End).
+        // Large rows thus never regrow the heap mid-run.
+        let fault_events = cfg.faults.as_ref().map(|p| p.len()).unwrap_or(0);
         Core {
-            queue: EventQueue::with_capacity(1024),
+            queue: EventQueue::with_capacity(2 * cfg.deployed_servers + 2 * fault_events + 64),
             horizon: secs(cfg.weeks * 7.0 * 86_400.0),
             now_s: 0.0,
         }
@@ -123,7 +131,7 @@ impl<'a, O: Observer> Sim<'a, O> {
         let servers = ServerLayer::new(cfg);
         let training = TrainingLayer::new(cfg, &servers.row);
         let mut control = ControlLayer::new(cfg);
-        let faults = FaultLayer::new(cfg, servers.states.len());
+        let faults = FaultLayer::new(cfg, servers.n_servers());
         let mut acct = Accounting::new();
         if !training.jobs.is_empty() {
             acct.report.train.nominal_iter_s =
@@ -144,16 +152,16 @@ impl<'a, O: Observer> Sim<'a, O> {
 
     pub(crate) fn run(mut self) -> RunReport {
         // Initial power state.
-        for idx in 0..self.servers.states.len() {
+        for idx in 0..self.servers.n_servers() {
             self.refresh_power(idx);
         }
         // Seed events. Training servers take no request arrivals: their
         // load is the iteration waveform, driven by TrainStart below.
-        for idx in 0..self.servers.states.len() {
-            if self.servers.states[idx].kind == JobKind::Training {
+        for idx in 0..self.servers.n_servers() {
+            if self.servers.kind[idx] == JobKind::Training {
                 continue;
             }
-            let t = self.servers.states[idx].arrivals.next_after(0.0);
+            let t = self.servers.cold[idx].arrivals.next_after(0.0);
             self.core.queue.schedule_at(secs(t), Ev::Arrival { server: idx as u32 });
         }
         for j in 0..self.training.jobs.len() {
@@ -163,6 +171,11 @@ impl<'a, O: Observer> Sim<'a, O> {
         self.core.queue.schedule_at(0, Ev::Telemetry);
         if self.cfg.series_sample_s > 0.0 {
             self.core.queue.schedule_at(0, Ev::SampleSeries);
+            // The series length is known from the horizon: one sample
+            // per period plus the t=0 sample. Reserving up front keeps
+            // the hot loop free of reallocation stalls (ISSUE 10).
+            let samples = (to_secs(self.core.horizon) / self.cfg.series_sample_s) as usize + 2;
+            self.acct.report.power_series.reserve(samples);
         }
         // Fault timeline: an empty plan schedules nothing, keeping the
         // run bit-identical to one with no plan at all.
@@ -197,8 +210,18 @@ impl<'a, O: Observer> Sim<'a, O> {
                 Ev::FaultStart { fault } => self.on_fault_start(fault as usize, now_s),
                 Ev::FaultEnd { fault } => self.on_fault_end(fault as usize, now_s),
                 Ev::RetuneCheck => self.on_retune_check(now_s),
-                Ev::End => break,
+                // The End sentinel dispatches nothing: the single
+                // horizon check below is the loop's only exit.
+                Ev::End => {}
             }
+            // Single horizon exit (ISSUE 10 collapsed the redundant
+            // `Ev::End => break` arm into this check). At-horizon
+            // semantics, pinned by the golden tests: events scheduled
+            // exactly AT the horizon during setup (before End, so ahead
+            // of it in tie order) still dispatch once, then the run
+            // ends on this check; events scheduled at the horizon
+            // *during* the run land after End in tie order and never
+            // dispatch. `report.events` counts the End pop either way.
             if t >= horizon {
                 break;
             }

@@ -72,8 +72,8 @@ impl<'a, O: Observer> Sim<'a, O> {
                 self.control.oob.set_latency_mult(latency_mult);
             }
             FaultKind::CapIgnore { server_frac } => {
-                let n = ((server_frac * self.servers.states.len() as f64).ceil() as usize)
-                    .min(self.servers.states.len());
+                let n = ((server_frac * self.servers.n_servers() as f64).ceil() as usize)
+                    .min(self.servers.n_servers());
                 for idx in 0..n {
                     self.faults.cap_ignore[idx] = true;
                 }
@@ -107,12 +107,12 @@ impl<'a, O: Observer> Sim<'a, O> {
                 // The wedged firmware recovers and drains its queue:
                 // converge every affected server to the last
                 // acknowledged cap state of its class.
-                for idx in 0..self.servers.states.len() {
+                for idx in 0..self.servers.n_servers() {
                     if !self.faults.cap_ignore[idx] {
                         continue;
                     }
                     self.faults.cap_ignore[idx] = false;
-                    let cap = match self.servers.states[idx].priority {
+                    let cap = match self.servers.priority[idx] {
                         crate::cluster::hierarchy::Priority::Low => self.control.acked_lp,
                         crate::cluster::hierarchy::Priority::High => self.control.acked_hp,
                     };

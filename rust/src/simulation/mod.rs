@@ -28,8 +28,12 @@
 //! | [`faults`]     | episode overlay: meter bias, budget cuts, cap-ignore        |
 //! | [`accounting`] | energy accumulator, [`crate::metrics::RunReport`] bookkeeping |
 //!
-//! [`calib`] carries the row-power calibration (`power_scale`) and its
-//! memoized per-row-size cache. This module re-exports the public API;
+//! [`calib`] carries the row-power calibration (`power_scale`) with its
+//! memoized per-row-size cache, plus the memoized per-workload
+//! mean-service estimation behind `ServerLayer::new`; the private
+//! `powermemo` module is the exact-input power-evaluation memo on the
+//! `refresh_power` hot path (see `docs/PERFORMANCE.md` for the whole
+//! hot-path anatomy). This module re-exports the public API;
 //! golden tests (`tests/golden_simulation.rs`) pin the layered
 //! composition bit-identical to the pre-split monolith at the same
 //! seed, and batch surfaces fan runs out through [`crate::exec`].
@@ -61,6 +65,7 @@ pub mod calib;
 pub mod control;
 pub mod core;
 pub mod faults;
+mod powermemo;
 pub mod servers;
 pub mod training;
 
@@ -68,7 +73,8 @@ pub mod training;
 mod tests;
 
 pub use calib::{
-    calibrate, calibration_runs, power_scale_for_row, power_series_of, DEFAULT_POWER_SCALE,
+    calibrate, calibration_runs, mean_service_estimations, power_scale_for_row, power_series_of,
+    DEFAULT_POWER_SCALE,
 };
 pub use training::MixedRowConfig;
 

@@ -1,0 +1,203 @@
+//! Exact-input memoization of per-server power evaluation.
+//!
+//! `Sim::refresh_power` runs on every request phase transition, cap
+//! change, and training waveform step — the single hottest call site in
+//! a run — and each evaluation walks the server model's component table
+//! and (under a frequency cap) a `powf` frequency/power curve. The
+//! insight making a cache *exact* rather than approximate: the input
+//! alphabet is tiny. Prompt `total_input` values are integers (the
+//! workload sampler rounds its log-uniform draws), token batch is
+//! always 1.0 in the one-request-per-server serving model, training
+//! waveform levels come from a four-phase profile, and the cap state is
+//! one of a handful of policy-rung frequencies. A whole one-day run
+//! evaluates only a few hundred *distinct* (phase, cap) pairs across
+//! millions of refreshes.
+//!
+//! Bit-identity is preserved by construction: keys are the exact input
+//! bits ([`f64::to_bits`]), values are produced by the exact same code
+//! path ([`ServerPowerModel::server_power_w`] /
+//! [`ServerPowerModel::training_power_w`]) on first sight, and f64
+//! arithmetic is deterministic — a cache hit returns the identical bits
+//! a recomputation would. No reassociation, no approximation, nothing
+//! for `tests/golden_simulation.rs` to notice.
+//!
+//! The table is keyed with the in-tree [`FxBuildHasher`] (a SipHash
+//! lookup would cost a good fraction of the evaluation it replaces) and
+//! is per-run state inside the server layer — no locks, no global.
+
+use std::collections::HashMap;
+
+use crate::power::gpu::{CapMode, Phase};
+use crate::power::server::ServerPowerModel;
+use crate::util::hash::FxBuildHasher;
+
+/// Phase-class discriminants of the memo key (the `u8` tag).
+const TAG_IDLE: u8 = 0;
+const TAG_TOKEN: u8 = 1;
+const TAG_PROMPT: u8 = 2;
+const TAG_TRAIN: u8 = 3;
+
+/// Cap-state encoding: `CapMode::None` maps to a sentinel that is a NaN
+/// bit pattern, unreachable by any real `mhz` value's `to_bits()`.
+const CAP_NONE_BITS: u64 = u64::MAX;
+
+/// Exact-input memo over `(phase-class, phase-param bits, cap bits)`.
+pub(crate) struct PowerMemo {
+    table: HashMap<(u8, u64, u64), f64, FxBuildHasher>,
+}
+
+impl PowerMemo {
+    pub(crate) fn new() -> PowerMemo {
+        PowerMemo { table: HashMap::default() }
+    }
+
+    /// Distinct (phase, cap) pairs evaluated so far (diagnostics/tests).
+    #[cfg(test)]
+    pub(crate) fn distinct_inputs(&self) -> usize {
+        self.table.len()
+    }
+
+    /// Memoized [`ServerPowerModel::server_power_w`] for the simulator's
+    /// inference path (which always passes `spike_escaping = false`).
+    /// `CapMode::PowerCap` — never produced by `Sim::cap_mode` — bypasses
+    /// the table defensively rather than widening the key.
+    #[inline]
+    pub(crate) fn inference_w(
+        &mut self,
+        model: &ServerPowerModel,
+        phase: Phase,
+        cap: CapMode,
+    ) -> f64 {
+        let (tag, phase_bits) = match phase {
+            Phase::Idle => (TAG_IDLE, 0u64),
+            Phase::Token { batch } => (TAG_TOKEN, batch.to_bits()),
+            Phase::Prompt { total_input } => (TAG_PROMPT, total_input.to_bits()),
+        };
+        let cap_bits = match cap {
+            CapMode::None => CAP_NONE_BITS,
+            CapMode::FreqCap { mhz } => mhz.to_bits(),
+            CapMode::PowerCap { .. } => return model.server_power_w(phase, cap, false),
+        };
+        *self
+            .table
+            .entry((tag, phase_bits, cap_bits))
+            .or_insert_with(|| model.server_power_w(phase, cap, false))
+    }
+
+    /// Memoized training-server wall power: the job's nominal waveform
+    /// level under a cap, through the same
+    /// `capped_level` → [`ServerPowerModel::training_power_w`] pipeline
+    /// the un-memoized path ran (bit-identical on hit and miss alike).
+    #[inline]
+    pub(crate) fn training_w(
+        &mut self,
+        model: &ServerPowerModel,
+        nominal_level: f64,
+        cap: CapMode,
+    ) -> f64 {
+        let cap_bits = match cap {
+            CapMode::None => CAP_NONE_BITS,
+            CapMode::FreqCap { mhz } => mhz.to_bits(),
+            CapMode::PowerCap { .. } => {
+                let frac = model.calib.capped_level(nominal_level, cap);
+                return model.training_power_w(frac);
+            }
+        };
+        *self.table.entry((TAG_TRAIN, nominal_level.to_bits(), cap_bits)).or_insert_with(|| {
+            let frac = model.calib.capped_level(nominal_level, cap);
+            model.training_power_w(frac)
+        })
+    }
+}
+
+impl std::fmt::Debug for PowerMemo {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("PowerMemo").field("distinct_inputs", &self.table.len()).finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn inputs() -> Vec<(Phase, CapMode)> {
+        let phases = vec![
+            Phase::Idle,
+            Phase::Token { batch: 1.0 },
+            Phase::Prompt { total_input: 256.0 },
+            Phase::Prompt { total_input: 1024.0 },
+            Phase::Prompt { total_input: 8192.0 },
+        ];
+        let caps = vec![
+            CapMode::None,
+            CapMode::FreqCap { mhz: 1110.0 },
+            CapMode::FreqCap { mhz: 1290.0 },
+        ];
+        phases
+            .iter()
+            .flat_map(|&p| caps.iter().map(move |&c| (p, c)))
+            .collect()
+    }
+
+    #[test]
+    fn memo_is_bit_identical_to_direct_eval() {
+        let model = ServerPowerModel::default();
+        let mut memo = PowerMemo::new();
+        for (phase, cap) in inputs() {
+            let direct = model.server_power_w(phase, cap, false);
+            // Miss, then hit: both must be the exact bits of `direct`.
+            let miss = memo.inference_w(&model, phase, cap);
+            let hit = memo.inference_w(&model, phase, cap);
+            assert_eq!(miss.to_bits(), direct.to_bits());
+            assert_eq!(hit.to_bits(), direct.to_bits());
+        }
+    }
+
+    #[test]
+    fn one_entry_per_distinct_input() {
+        let model = ServerPowerModel::default();
+        let mut memo = PowerMemo::new();
+        let ins = inputs();
+        for _ in 0..10 {
+            for &(phase, cap) in &ins {
+                memo.inference_w(&model, phase, cap);
+            }
+        }
+        assert_eq!(memo.distinct_inputs(), ins.len());
+    }
+
+    #[test]
+    fn training_path_matches_direct_pipeline() {
+        let model = ServerPowerModel::default();
+        let mut memo = PowerMemo::new();
+        for &level in &[model.calib.idle_frac, 0.5, 0.88, 1.05] {
+            for &cap in &[CapMode::None, CapMode::FreqCap { mhz: 1110.0 }] {
+                let frac = model.calib.capped_level(level, cap);
+                let direct = model.training_power_w(frac);
+                assert_eq!(memo.training_w(&model, level, cap).to_bits(), direct.to_bits());
+                assert_eq!(memo.training_w(&model, level, cap).to_bits(), direct.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn power_cap_bypasses_the_table() {
+        let model = ServerPowerModel::default();
+        let mut memo = PowerMemo::new();
+        let phase = Phase::Prompt { total_input: 4096.0 };
+        let cap = CapMode::PowerCap { frac_of_tdp: 0.8 };
+        let direct = model.server_power_w(phase, cap, false);
+        assert_eq!(memo.inference_w(&model, phase, cap).to_bits(), direct.to_bits());
+        assert_eq!(memo.distinct_inputs(), 0, "PowerCap must not populate the memo");
+    }
+
+    #[test]
+    fn cap_none_sentinel_cannot_collide_with_a_real_frequency() {
+        // The sentinel is a NaN bit pattern; `to_bits` of any real mhz
+        // (finite, positive) can never equal it.
+        assert!(f64::from_bits(CAP_NONE_BITS).is_nan());
+        for mhz in [210.0_f64, 990.0, 1110.0, 1410.0] {
+            assert_ne!(mhz.to_bits(), CAP_NONE_BITS);
+        }
+    }
+}

@@ -9,11 +9,28 @@
 //! because their effects are entirely server-local; row-wide actuation
 //! (the powerbrake) lives in [`super::control`].
 //!
+//! # State layout (ISSUE 10)
+//!
+//! Per-server state is struct-of-arrays: the fields the row-wide sweeps
+//! touch (`power_w`, `freq_cap_mhz`, `gen`, `last_advance_s`,
+//! `train_level` — hit by brake actuation in [`super::control`], cap
+//! fan-out, initial provisioning, and every `refresh_power`) are
+//! parallel `Vec`s indexed by server, so a sweep over the row walks
+//! each hot field cache-linearly instead of striding over ~200-byte
+//! `ServerState` records to pick one field out of each. The immutable
+//! attributes (`priority`, `kind`) are parallel vectors too (the cap
+//! fan-out filters on priority row-wide), and everything touched only
+//! by one server's own lifecycle events — in-flight request, buffer,
+//! arrival process, RNG — stays together in the cold `ServerCold`
+//! array. `docs/PERFORMANCE.md` has the layout rationale and numbers.
+//!
 //! Power settlement contract: any change to a server's draw goes
 //! through `Sim::refresh_power`, which first settles the energy
 //! accumulator ([`super::accounting`]) so the ground-truth violation
 //! integral sees a piecewise-constant power signal with exact segment
-//! boundaries.
+//! boundaries. `refresh_power` evaluates the server model through the
+//! exact-input memo (the private `super::powermemo` module) —
+//! bit-identical to direct evaluation, a fraction of the cost.
 
 use crate::characterize::catalog::{self, ModelSpec};
 use crate::cluster::hierarchy::{JobKind, Priority, Row};
@@ -26,6 +43,7 @@ use crate::workload::arrivals::ArrivalProcess;
 use crate::workload::spec::{assign_servers, sample_request, WorkloadSpec};
 
 use super::core::{Ev, Sim};
+use super::powermemo::PowerMemo;
 use super::SimConfig;
 
 #[derive(Debug, Clone)]
@@ -42,37 +60,51 @@ pub(crate) struct QueuedReq {
     pub(crate) arrived_s: f64,
 }
 
-pub(crate) struct ServerState {
-    pub(crate) priority: Priority,
-    pub(crate) kind: JobKind,
+/// Cold per-server state: touched only by the owning server's own
+/// lifecycle events (arrival, phase end), never by row-wide sweeps.
+pub(crate) struct ServerCold {
     pub(crate) workload_idx: usize,
-    pub(crate) freq_cap_mhz: Option<f64>,
     pub(crate) current: Option<InFlight>,
     pub(crate) queued: Option<QueuedReq>,
     pub(crate) arrivals: ArrivalProcess,
     pub(crate) rng: Rng,
-    /// Generation counter invalidating stale PhaseEnd events.
-    pub(crate) gen: u32,
-    /// Time work was last advanced (for mid-flight cap changes).
-    pub(crate) last_advance_s: f64,
-    /// Current power draw in watts (cached for incremental row sum).
-    pub(crate) power_w: f64,
-    /// Training servers only: the nominal GPU power fraction of the
-    /// job's current waveform phase (idle before the job starts).
-    pub(crate) train_level: f64,
 }
 
-/// The provisioned row plus live per-server state and the incremental
-/// row power aggregate.
+/// The provisioned row plus live per-server state (struct-of-arrays —
+/// see the module docs) and the incremental row power aggregate.
 pub(crate) struct ServerLayer {
     pub(crate) model: ModelSpec,
     pub(crate) specs: Vec<WorkloadSpec>,
     pub(crate) row: Row,
-    pub(crate) states: Vec<ServerState>,
+    // -- hot per-server fields, parallel vectors indexed by server ----
+    /// Current power draw in watts (cached for incremental row sum).
+    pub(crate) power_w: Vec<f64>,
+    pub(crate) freq_cap_mhz: Vec<Option<f64>>,
+    /// Generation counter invalidating stale PhaseEnd events.
+    pub(crate) gen: Vec<u32>,
+    /// Time work was last advanced (for mid-flight cap changes).
+    pub(crate) last_advance_s: Vec<f64>,
+    /// Training servers only: the nominal GPU power fraction of the
+    /// job's current waveform phase (idle before the job starts).
+    pub(crate) train_level: Vec<f64>,
+    // -- immutable per-server attributes ------------------------------
+    pub(crate) priority: Vec<Priority>,
+    pub(crate) kind: Vec<JobKind>,
+    // -- cold per-server state ----------------------------------------
+    pub(crate) cold: Vec<ServerCold>,
     pub(crate) row_power_w: f64,
+    /// Exact-input power-evaluation memo (per run; see
+    /// [`super::powermemo`]).
+    pub(crate) memo: PowerMemo,
 }
 
 impl ServerLayer {
+    /// Deployed server count (every parallel vector has this length).
+    #[inline]
+    pub(crate) fn n_servers(&self) -> usize {
+        self.cold.len()
+    }
+
     /// Provision the row: apply the robustness/SKU knobs to the catalog
     /// model, assign Table-4 workloads, carve the training tail, and
     /// derive per-server arrival rates from the target utilization.
@@ -129,44 +161,54 @@ impl ServerLayer {
 
         // Per-workload peak arrival rate from the target utilization:
         // rate = utilization / E[nominal service time of that workload].
-        let mut mean_service: Vec<f64> = Vec::new();
-        let mut est_rng = root_rng.fork(77);
-        for spec in &specs {
-            let mut acc = 0.0;
-            let n = 400;
-            for _ in 0..n {
-                let (i, o) = sample_request(spec, &mut est_rng);
-                acc += model.request_latency_s(i, o, 1.0, 1.0);
-            }
-            mean_service.push(acc / n as f64);
+        // The Monte Carlo estimate is memoized in `super::calib` (ISSUE
+        // 10); `fork_seed` consumes the root stream exactly as `fork`
+        // did, so the memo changes no trace bits.
+        let est_seed = root_rng.fork_seed(77);
+        let mean_service = super::calib::mean_service_for(
+            est_seed,
+            &cfg.model_name,
+            cfg.perf_mult,
+            cfg.workload_power_mult,
+            &model,
+            &specs,
+        );
+
+        let n = row.servers.len();
+        let idle_frac = row.power_model.calib.idle_frac;
+        let mut priority = Vec::with_capacity(n);
+        let mut kind = Vec::with_capacity(n);
+        let mut cold = Vec::with_capacity(n);
+        for s in &row.servers {
+            let rate = cfg.peak_utilization / mean_service[s.workload_idx];
+            priority.push(s.priority);
+            kind.push(s.job);
+            cold.push(ServerCold {
+                workload_idx: s.workload_idx,
+                current: None,
+                queued: None,
+                arrivals: ArrivalProcess::new(rate, root_rng.fork(1000 + s.id as u64))
+                    .with_phase(cfg.diurnal_phase_s)
+                    .with_drift(cfg.drift.clone(), cfg.weeks),
+                rng: root_rng.fork(2000 + s.id as u64),
+            });
         }
 
-        let idle_frac = row.power_model.calib.idle_frac;
-        let states = row
-            .servers
-            .iter()
-            .map(|s| {
-                let rate = cfg.peak_utilization / mean_service[s.workload_idx];
-                ServerState {
-                    priority: s.priority,
-                    kind: s.job,
-                    workload_idx: s.workload_idx,
-                    freq_cap_mhz: None,
-                    current: None,
-                    queued: None,
-                    arrivals: ArrivalProcess::new(rate, root_rng.fork(1000 + s.id as u64))
-                        .with_phase(cfg.diurnal_phase_s)
-                        .with_drift(cfg.drift.clone(), cfg.weeks),
-                    rng: root_rng.fork(2000 + s.id as u64),
-                    gen: 0,
-                    last_advance_s: 0.0,
-                    power_w: 0.0,
-                    train_level: idle_frac,
-                }
-            })
-            .collect();
-
-        ServerLayer { model, specs, row, states, row_power_w: 0.0 }
+        ServerLayer {
+            model,
+            specs,
+            row,
+            power_w: vec![0.0; n],
+            freq_cap_mhz: vec![None; n],
+            gen: vec![0; n],
+            last_advance_s: vec![0.0; n],
+            train_level: vec![idle_frac; n],
+            priority,
+            kind,
+            cold,
+            row_power_w: 0.0,
+            memo: PowerMemo::new(),
+        }
     }
 }
 
@@ -177,7 +219,7 @@ impl<'a, O: Observer> Sim<'a, O> {
         if self.control.braked {
             return self.cfg.exp.policy.brake_freq_mhz / self.cfg.exp.policy.max_freq_mhz;
         }
-        match self.servers.states[idx].freq_cap_mhz {
+        match self.servers.freq_cap_mhz[idx] {
             Some(mhz) => mhz / self.cfg.exp.policy.max_freq_mhz,
             None => 1.0,
         }
@@ -187,7 +229,7 @@ impl<'a, O: Observer> Sim<'a, O> {
         if self.control.braked {
             CapMode::FreqCap { mhz: self.cfg.exp.policy.brake_freq_mhz }
         } else {
-            match self.servers.states[idx].freq_cap_mhz {
+            match self.servers.freq_cap_mhz[idx] {
                 Some(mhz) => CapMode::FreqCap { mhz },
                 None => CapMode::None,
             }
@@ -195,7 +237,7 @@ impl<'a, O: Observer> Sim<'a, O> {
     }
 
     pub(crate) fn server_phase(&self, idx: usize) -> Phase {
-        match &self.servers.states[idx].current {
+        match &self.servers.cold[idx].current {
             None => Phase::Idle,
             Some(inf) => match inf.exec.phase() {
                 ExecPhase::Prompt => Phase::Prompt { total_input: inf.exec.input * inf.exec.batch },
@@ -204,24 +246,30 @@ impl<'a, O: Observer> Sim<'a, O> {
         }
     }
 
-    /// Recompute one server's power and update the row aggregate.
+    /// Recompute one server's power and update the row aggregate. The
+    /// model evaluation goes through the exact-input memo — identical
+    /// bits to a direct `server_power_w` call at a fraction of the cost.
     pub(crate) fn refresh_power(&mut self, idx: usize) {
         self.settle_energy();
-        let w = match self.servers.states[idx].kind {
+        let w = match self.servers.kind[idx] {
             JobKind::Inference => {
                 let phase = self.server_phase(idx);
                 let cap = self.cap_mode(idx);
-                self.servers.row.power_model.server_power_w(phase, cap, false)
+                self.servers.memo.inference_w(&self.servers.row.power_model, phase, cap)
             }
             // Training power is absolute (the §2.4 waveform drives the
             // GPUs directly); `power_scale` is an inference-serving
             // calibration, so divide it out here — the row aggregate
             // multiplies it back in `normalized_row_power`.
-            JobKind::Training => self.training_server_w(idx) / self.cfg.power_scale,
+            JobKind::Training => {
+                let cap = self.cap_mode(idx);
+                let nominal = self.servers.train_level[idx];
+                self.servers.memo.training_w(&self.servers.row.power_model, nominal, cap)
+                    / self.cfg.power_scale
+            }
         };
-        let s = &mut self.servers.states[idx];
-        self.servers.row_power_w += w - s.power_w;
-        s.power_w = w;
+        self.servers.row_power_w += w - self.servers.power_w[idx];
+        self.servers.power_w[idx] = w;
     }
 
     // ---- request lifecycle --------------------------------------------
@@ -235,26 +283,26 @@ impl<'a, O: Observer> Sim<'a, O> {
         now_s: f64,
     ) {
         let exec = RequestExec::new(&self.servers.model, input, output, 1.0);
-        self.servers.states[idx].current = Some(InFlight {
+        self.servers.cold[idx].current = Some(InFlight {
             exec,
             arrived_s,
-            priority: self.servers.states[idx].priority,
+            priority: self.servers.priority[idx],
         });
-        self.servers.states[idx].last_advance_s = now_s;
-        self.servers.states[idx].gen = self.servers.states[idx].gen.wrapping_add(1);
+        self.servers.last_advance_s[idx] = now_s;
+        self.servers.gen[idx] = self.servers.gen[idx].wrapping_add(1);
         self.refresh_power(idx);
         self.schedule_phase_end(idx, now_s);
     }
 
     pub(crate) fn schedule_phase_end(&mut self, idx: usize, now_s: f64) {
         let ratio = self.freq_ratio(idx);
-        let wall = match &self.servers.states[idx].current {
+        let wall = match &self.servers.cold[idx].current {
             Some(inf) if inf.exec.phase() != ExecPhase::Done => {
                 inf.exec.wall_to_phase_end(&self.servers.model, ratio)
             }
             _ => return,
         };
-        let gen = self.servers.states[idx].gen;
+        let gen = self.servers.gen[idx];
         // +1 µs guard: `secs` rounds to integer microseconds, which can
         // land *before* the true phase end and loop the event at the same
         // timestamp. Overshooting by a microsecond guarantees progress.
@@ -267,24 +315,24 @@ impl<'a, O: Observer> Sim<'a, O> {
     /// ratio (call BEFORE changing the ratio).
     pub(crate) fn advance_work(&mut self, idx: usize, now_s: f64) {
         let ratio = self.freq_ratio(idx);
-        let last = self.servers.states[idx].last_advance_s;
-        if let Some(inf) = &mut self.servers.states[idx].current {
+        let last = self.servers.last_advance_s[idx];
+        if let Some(inf) = &mut self.servers.cold[idx].current {
             let dt = (now_s - last).max(0.0);
             if dt > 0.0 {
                 inf.exec.advance(&self.servers.model, ratio, dt);
             }
         }
-        self.servers.states[idx].last_advance_s = now_s;
+        self.servers.last_advance_s[idx] = now_s;
     }
 
     /// Apply a frequency change to one server (work-conserving).
     pub(crate) fn set_server_cap(&mut self, idx: usize, cap: Option<f64>, now_s: f64) {
-        if self.servers.states[idx].freq_cap_mhz == cap {
+        if self.servers.freq_cap_mhz[idx] == cap {
             return;
         }
         self.advance_work(idx, now_s);
-        self.servers.states[idx].freq_cap_mhz = cap;
-        self.servers.states[idx].gen = self.servers.states[idx].gen.wrapping_add(1);
+        self.servers.freq_cap_mhz[idx] = cap;
+        self.servers.gen[idx] = self.servers.gen[idx].wrapping_add(1);
         self.refresh_power(idx);
         self.schedule_phase_end(idx, now_s);
     }
@@ -293,11 +341,11 @@ impl<'a, O: Observer> Sim<'a, O> {
 
     pub(crate) fn on_arrival(&mut self, idx: usize, now_s: f64) {
         // Schedule the next arrival for this server.
-        let next = self.servers.states[idx].arrivals.next_after(now_s);
+        let next = self.servers.cold[idx].arrivals.next_after(now_s);
         self.core.queue.schedule_at(secs(next), Ev::Arrival { server: idx as u32 });
 
-        let spec = &self.servers.specs[self.servers.states[idx].workload_idx];
-        let (input, output) = sample_request(spec, &mut self.servers.states[idx].rng);
+        let spec = &self.servers.specs[self.servers.cold[idx].workload_idx];
+        let (input, output) = sample_request(spec, &mut self.servers.cold[idx].rng);
         // Adaptive actuation: servers beyond the controller's active
         // prefix are racked but not taking traffic. The next arrival is
         // still scheduled and the request still sampled (above), so
@@ -309,33 +357,33 @@ impl<'a, O: Observer> Sim<'a, O> {
                 return;
             }
         }
-        if self.servers.states[idx].current.is_none() {
+        if self.servers.cold[idx].current.is_none() {
             self.start_request(idx, input, output, now_s, now_s);
-        } else if self.servers.states[idx].queued.is_none() {
-            self.servers.states[idx].queued = Some(QueuedReq { input, output, arrived_s: now_s });
+        } else if self.servers.cold[idx].queued.is_none() {
+            self.servers.cold[idx].queued = Some(QueuedReq { input, output, arrived_s: now_s });
         } else {
             // Buffer full: request is rejected (load-balancer would retry
             // elsewhere; within this row it counts against throughput).
-            let pri = self.servers.states[idx].priority;
+            let pri = self.servers.priority[idx];
             self.acct.report.by_priority(pri).dropped += 1;
         }
     }
 
     pub(crate) fn on_phase_end(&mut self, idx: usize, gen: u32, now_s: f64) {
-        if self.servers.states[idx].gen != gen {
+        if self.servers.gen[idx] != gen {
             return; // stale (frequency changed; a new event is scheduled)
         }
         self.advance_work(idx, now_s);
-        let phase = self.servers.states[idx].current.as_ref().map(|i| i.exec.phase());
+        let phase = self.servers.cold[idx].current.as_ref().map(|i| i.exec.phase());
         match phase {
             Some(ExecPhase::Token) => {
                 // Prompt just finished; token phase begins.
-                self.servers.states[idx].gen = self.servers.states[idx].gen.wrapping_add(1);
+                self.servers.gen[idx] = self.servers.gen[idx].wrapping_add(1);
                 self.refresh_power(idx);
                 self.schedule_phase_end(idx, now_s);
             }
             Some(ExecPhase::Done) => {
-                let inf = self.servers.states[idx].current.take().unwrap();
+                let inf = self.servers.cold[idx].current.take().unwrap();
                 let actual = now_s - inf.arrived_s;
                 self.acct.report.by_priority(inf.priority).record(
                     actual,
@@ -348,9 +396,9 @@ impl<'a, O: Observer> Sim<'a, O> {
                         ad.win_hp_nominal += inf.exec.nominal_latency;
                     }
                 }
-                self.servers.states[idx].gen = self.servers.states[idx].gen.wrapping_add(1);
+                self.servers.gen[idx] = self.servers.gen[idx].wrapping_add(1);
                 // Pull the buffered request, if any.
-                if let Some(q) = self.servers.states[idx].queued.take() {
+                if let Some(q) = self.servers.cold[idx].queued.take() {
                     self.start_request(idx, q.input, q.output, q.arrived_s, now_s);
                 } else {
                     self.refresh_power(idx);

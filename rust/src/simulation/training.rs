@@ -111,15 +111,6 @@ impl TrainingLayer {
 }
 
 impl<'a, O: Observer> Sim<'a, O> {
-    /// Training server wall power in watts: the job's current waveform
-    /// level under this server's cap, through the shared server model.
-    pub(crate) fn training_server_w(&self, idx: usize) -> f64 {
-        let cap = self.cap_mode(idx);
-        let nominal = self.servers.states[idx].train_level;
-        let frac = self.servers.row.power_model.calib.capped_level(nominal, cap);
-        self.servers.row.power_model.training_power_w(frac)
-    }
-
     /// Cap governing a job right now. Every member shares the LP class
     /// (training is priority-pinned) and the brake is row-wide, so one
     /// member is representative.
@@ -140,7 +131,7 @@ impl<'a, O: Observer> Sim<'a, O> {
         }
         let members = std::mem::take(&mut self.training.jobs[j].servers);
         for &idx in &members {
-            self.servers.states[idx].train_level = level;
+            self.servers.train_level[idx] = level;
             self.refresh_power(idx);
         }
         self.training.jobs[j].servers = members;

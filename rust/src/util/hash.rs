@@ -1,0 +1,129 @@
+//! A fast, deterministic, non-cryptographic hasher for hot-path memo
+//! tables (FxHash-style multiply-xor, as popularized by the rustc
+//! `FxHashMap`).
+//!
+//! The simulator's exact-input power memo
+//! (`simulation::powermemo`) hits its table once per
+//! `refresh_power` call — millions of times per run — so the default
+//! SipHash-backed `HashMap` hasher (designed for HashDoS resistance,
+//! irrelevant for an in-process memo keyed by simulation state) costs
+//! more than the lookup it guards. This hasher is a few shifts and one
+//! multiply per word, fully deterministic across processes (no random
+//! keys), and in-tree because the container forbids external crates.
+
+use std::hash::{BuildHasherDefault, Hasher};
+
+/// `BuildHasher` plugging [`FxHasher`] into `HashMap`.
+pub type FxBuildHasher = BuildHasherDefault<FxHasher>;
+
+const SEED: u64 = 0x51_7c_c1_b7_27_22_0a_95;
+
+/// Multiply-xor hasher (FxHash). Not HashDoS-resistant — use only for
+/// in-process tables keyed by trusted data.
+#[derive(Debug, Default, Clone)]
+pub struct FxHasher {
+    hash: u64,
+}
+
+impl FxHasher {
+    #[inline]
+    fn add_to_hash(&mut self, word: u64) {
+        self.hash = (self.hash.rotate_left(5) ^ word).wrapping_mul(SEED);
+    }
+}
+
+impl Hasher for FxHasher {
+    #[inline]
+    fn write(&mut self, bytes: &[u8]) {
+        // Word-at-a-time over the byte slice; the tail is padded into
+        // one final word. Memo keys in this crate are fixed-width
+        // integer tuples, so this path sees whole words anyway.
+        let mut chunks = bytes.chunks_exact(8);
+        for c in &mut chunks {
+            self.add_to_hash(u64::from_le_bytes(c.try_into().expect("8-byte chunk")));
+        }
+        let rem = chunks.remainder();
+        if !rem.is_empty() {
+            let mut tail = [0u8; 8];
+            tail[..rem.len()].copy_from_slice(rem);
+            self.add_to_hash(u64::from_le_bytes(tail));
+        }
+    }
+
+    #[inline]
+    fn write_u8(&mut self, v: u8) {
+        self.add_to_hash(v as u64);
+    }
+
+    #[inline]
+    fn write_u32(&mut self, v: u32) {
+        self.add_to_hash(v as u64);
+    }
+
+    #[inline]
+    fn write_u64(&mut self, v: u64) {
+        self.add_to_hash(v);
+    }
+
+    #[inline]
+    fn write_usize(&mut self, v: usize) {
+        self.add_to_hash(v as u64);
+    }
+
+    #[inline]
+    fn finish(&self) -> u64 {
+        self.hash
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::HashMap;
+    use std::hash::Hash;
+
+    fn hash_of<T: Hash>(v: &T) -> u64 {
+        let mut h = FxHasher::default();
+        v.hash(&mut h);
+        h.finish()
+    }
+
+    #[test]
+    fn deterministic_across_instances() {
+        let k = (3u8, 1234u64, 5678u64);
+        assert_eq!(hash_of(&k), hash_of(&k));
+    }
+
+    #[test]
+    fn distinct_keys_distinct_hashes() {
+        // Not a collision-resistance claim — just a sanity net over the
+        // small key alphabets the memo tables actually use.
+        let keys: Vec<(u8, u64, u64)> = (0..4u8)
+            .flat_map(|t| (0..64u64).map(move |a| (t, a, a.wrapping_mul(977))))
+            .collect();
+        let hashes: std::collections::HashSet<u64> = keys.iter().map(hash_of).collect();
+        assert_eq!(hashes.len(), keys.len());
+    }
+
+    #[test]
+    fn works_as_hashmap_hasher() {
+        let mut m: HashMap<(u8, u64), f64, FxBuildHasher> = HashMap::default();
+        m.insert((1, 42), 3.5);
+        m.insert((2, 42), 7.0);
+        assert_eq!(m.get(&(1, 42)), Some(&3.5));
+        assert_eq!(m.get(&(2, 42)), Some(&7.0));
+        assert_eq!(m.get(&(3, 42)), None);
+    }
+
+    #[test]
+    fn byte_slices_hash_stably() {
+        let mut h1 = FxHasher::default();
+        h1.write(b"hello world, this is a tail");
+        let mut h2 = FxHasher::default();
+        h2.write(b"hello world, this is a tail");
+        assert_eq!(h1.finish(), h2.finish());
+        let mut h3 = FxHasher::default();
+        h3.write(b"hello world, this is a tai1");
+        assert_ne!(h1.finish(), h3.finish());
+    }
+}

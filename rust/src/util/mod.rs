@@ -8,6 +8,7 @@
 
 pub mod cli;
 pub mod csv;
+pub mod hash;
 pub mod json;
 pub mod rng;
 pub mod stats;

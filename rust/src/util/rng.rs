@@ -39,7 +39,15 @@ impl Rng {
 
     /// Derive an independent child stream (for per-actor RNGs).
     pub fn fork(&mut self, stream: u64) -> Rng {
-        Rng::new(self.next_u64() ^ stream.wrapping_mul(0x9E37_79B9_7F4A_7C15))
+        Rng::new(self.fork_seed(stream))
+    }
+
+    /// The seed [`fork`](Self::fork) would hand the child for `stream`,
+    /// consuming the parent identically. Lets callers memoize work
+    /// derived from a fork (key on the seed, construct `Rng::new(seed)`
+    /// only on a miss) without perturbing the parent's stream position.
+    pub fn fork_seed(&mut self, stream: u64) -> u64 {
+        self.next_u64() ^ stream.wrapping_mul(0x9E37_79B9_7F4A_7C15)
     }
 
     /// Next raw 64-bit output.

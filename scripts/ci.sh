@@ -307,10 +307,39 @@ test -f BENCH_gateway.json || { echo "BENCH_gateway.json was not written" >&2; e
 # Bench smoke (ISSUE 5): record the sweep serial-vs-parallel trajectory
 # to BENCH_sim.json on every CI run. Remove any stale file first so the
 # existence check below proves THIS run wrote it.
-echo "== bench smoke (bench_sim --smoke writes BENCH_sim.json)"
+#
+# Perf-regression gate (ISSUE 10): the committed BENCH_sim.json is the
+# recorded baseline; compare the fresh run's headline sim_events_per_s
+# (polca policy) against it and fail only on a >30% regression. Smoke
+# numbers are noisy — the 0.70 floor is deliberately loose so only a
+# real hot-path regression (not scheduler jitter) trips it. When there
+# is no committed baseline or no python3, skip VISIBLY: the first run
+# on a toolchain machine records the baseline to commit.
+echo "== bench smoke (bench_sim --smoke writes BENCH_sim.json) + perf gate"
+baseline_events=""
+if command -v python3 >/dev/null 2>&1 && [[ -f BENCH_sim.json ]]; then
+  baseline_events=$(python3 -c \
+    'import json; print(json.load(open("BENCH_sim.json"))["sim_events_per_s"]["polca"])' \
+    2>/dev/null || true)
+fi
 rm -f BENCH_sim.json
 cargo bench --bench bench_sim -- --smoke | tail -n 4
 test -f BENCH_sim.json || { echo "BENCH_sim.json was not written" >&2; exit 1; }
+if [[ -n "$baseline_events" ]] && command -v python3 >/dev/null 2>&1; then
+  python3 - "$baseline_events" <<'PY'
+import json, sys
+baseline = float(sys.argv[1])
+now = float(json.load(open("BENCH_sim.json"))["sim_events_per_s"]["polca"])
+ratio = now / baseline
+print(f"   perf gate: sim_events_per_s {now:.0f} vs baseline {baseline:.0f} ({ratio:.2f}x)")
+if ratio < 0.70:
+    sys.exit(f"perf regression: sim_events_per_s fell to {ratio:.2f}x of the "
+             "committed baseline (floor 0.70x)")
+PY
+else
+  echo "   perf gate skipped: no committed BENCH_sim.json baseline (or no python3)" \
+       "— this run's BENCH_sim.json is the baseline to commit"
+fi
 
 # Docs gate (ISSUE 2): the crate carries #![warn(missing_docs)] and the
 # ARCHITECTURE/README docs reference rustdoc items — keep both honest by
